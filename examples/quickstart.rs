@@ -1,0 +1,76 @@
+//! Quickstart: the paper's Code-1 interaction pattern, in Rust.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Creates a batched `Navix-Empty-8x8-v0`, steps it with random actions,
+//! prints the timestep fields (the paper's
+//! `(t, o_t, a_t, r_{t+1}, γ_{t+1}, s_t, info)` tuple) and an ASCII render.
+
+use navix::batch::BatchedEnv;
+use navix::rng::{Key, Rng};
+use navix::Action;
+
+fn main() -> anyhow::Result<()> {
+    // nx.make("Navix-Empty-8x8-v0") — the paper's Code 1.
+    let cfg = navix::make("Navix-Empty-8x8-v0")?;
+    println!(
+        "made {} ({}x{}, obs={}, T={})",
+        cfg.id,
+        cfg.h,
+        cfg.w,
+        cfg.obs.kind.name(),
+        cfg.max_steps
+    );
+
+    // env.reset(key): 4 parallel environments.
+    let mut env = BatchedEnv::new(cfg.clone(), 4, Key::new(0));
+    println!("\nreset -> step_type={:?} action={} reward={}",
+        env.timestep.step_type[0], env.timestep.action[0], env.timestep.reward[0]);
+
+    // interact: timestep = env.step(timestep, action, key)
+    let mut rng = Rng::new(7);
+    for t in 0..10 {
+        let actions: Vec<u8> = (0..4).map(|_| rng.below(7) as u8).collect();
+        env.step(&actions);
+        let ts = env.timestep.get(0);
+        println!(
+            "t={:<3} action={:<8} reward={:+.1} discount={:.1} {:?}",
+            ts.t,
+            Action::from_u8(actions[0]).name(),
+            ts.reward,
+            ts.discount,
+            ts.step_type,
+        );
+        if t == 9 {
+            // full-grid symbolic view of env 0, rendered as ASCII
+            let mut sym = vec![0i32; cfg.h * cfg.w * 3];
+            navix::systems::observations::symbolic(&env.state.slot(0), &mut sym);
+            println!("\nenv 0 state:");
+            for r in 0..cfg.h {
+                let row: String = (0..cfg.w)
+                    .map(|c| match sym[(r * cfg.w + c) * 3] {
+                        2 => '#',
+                        8 => 'G',
+                        10 => ['>', 'v', '<', '^']
+                            [sym[(r * cfg.w + c) * 3 + 2].rem_euclid(4) as usize],
+                        _ => '.',
+                    })
+                    .collect();
+                println!("  {row}");
+            }
+        }
+    }
+
+    // first-person observation of env 0 (what an agent sees)
+    let obs = env.obs.env_i32(4, 0);
+    println!("\nfirst-person symbolic obs (7x7 tag channel):");
+    for vr in 0..7 {
+        let row: String =
+            (0..7).map(|vc| char::from_digit(obs[(vr * 7 + vc) * 3] as u32 % 16, 16).unwrap()).collect();
+        println!("  {row}");
+    }
+    println!("\nquickstart OK");
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! Render one rgb frame of every environment family to `gallery/*.ppm` —
+//! visual validation of layouts, sprites and the rgb observation functions
+//! (convert with `magick gallery/*.ppm` or open directly).
+//!
+//! ```text
+//! cargo run --release --example render_gallery [-- --seed 3]
+//! ```
+
+use navix::batch::BatchedEnv;
+use navix::cli::Args;
+use navix::rng::Key;
+use navix::systems::observations::ObsKind;
+use navix::systems::render::write_ppm;
+use navix::systems::sprites::TILE;
+
+const GALLERY: [&str; 10] = [
+    "Navix-Empty-8x8-v0",
+    "Navix-DoorKey-8x8-v0",
+    "Navix-FourRooms-v0",
+    "Navix-KeyCorridorS3R3-v0",
+    "Navix-LavaGapS7-v0",
+    "Navix-SimpleCrossingS9N3-v0",
+    "Navix-LavaCrossingS9N1-v0",
+    "Navix-Dynamic-Obstacles-8x8",
+    "Navix-DistShift2-v0",
+    "Navix-GoToDoor-8x8-v0",
+];
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let seed = args.opt_u64("seed", 0)?;
+    for id in GALLERY {
+        let cfg = navix::make(id)?.with_observation(ObsKind::Rgb);
+        let env = BatchedEnv::new(cfg.clone(), 1, Key::new(seed));
+        let rgb = env.obs.env_u8(1, 0);
+        let path = format!("gallery/{}.ppm", id.replace("Navix-", ""));
+        write_ppm(&path, cfg.w * TILE, cfg.h * TILE, rgb)?;
+        println!("wrote {path} ({}x{})", cfg.w * TILE, cfg.h * TILE);
+    }
+    // one first-person frame too
+    let cfg = navix::make("Navix-DoorKey-8x8-v0")?.with_observation(ObsKind::RgbFirstPerson);
+    let env = BatchedEnv::new(cfg, 1, Key::new(seed));
+    write_ppm("gallery/DoorKey-8x8-first-person.ppm", 7 * TILE, 7 * TILE, env.obs.env_u8(1, 0))?;
+    println!("wrote gallery/DoorKey-8x8-first-person.ppm");
+    Ok(())
+}

@@ -1,0 +1,41 @@
+//! Quick interactive version of the paper's Fig. 5: wall time of 1K unrolls
+//! as the number of parallel environments grows, for the batched engine and
+//! both baseline vector wrappers.
+//!
+//! ```text
+//! cargo run --release --example throughput_sweep -- --max-batch 4096 --steps 1000
+//! ```
+
+use navix::bench_harness::{stats::fmt_duration, Report};
+use navix::cli::Args;
+use navix::coordinator::{unroll_walltime, Engine};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let env_id = args.opt_or("env", "Navix-Empty-8x8-v0");
+    let max_batch = args.opt_usize("max-batch", 4096)?;
+    let steps = args.opt_usize("steps", 1000)?;
+    // thread-per-env baseline is capped: that's the paper's point
+    let max_async = args.opt_usize("max-async", 128)?;
+
+    let mut report =
+        Report::new("throughput_sweep", &["envs", "engine", "wall", "steps/s"]);
+    let mut b = 1;
+    while b <= max_batch {
+        for engine in [Engine::Batched, Engine::BaselineSync, Engine::BaselineAsync] {
+            if engine != Engine::Batched && b > max_async {
+                continue;
+            }
+            let secs = unroll_walltime(engine, &env_id, b, steps, 0)?;
+            report.row(&[
+                b.to_string(),
+                engine.name().to_string(),
+                fmt_duration(secs),
+                format!("{:.0}", (b * steps) as f64 / secs),
+            ]);
+        }
+        b *= 4;
+    }
+    report.save();
+    Ok(())
+}

@@ -1,0 +1,101 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) -> HLO text artifacts for the Rust
+runtime.
+
+HLO *text* (not ``HloModuleProto.serialize()``) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which the pinned
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/load_hlo/.
+
+Artifacts (all under ``artifacts/``):
+
+    model.hlo.txt                 Makefile stamp (= ppo_fwd at B=1)
+    ppo_fwd_b{1,16}.hlo.txt       actor-critic forward
+    ppo_update_b256.hlo.txt       fused PPO minibatch update
+    env_step_empty8_b{1,16,1024}.hlo.txt   batched Empty-8x8 step
+    obs_fp_b16.hlo.txt            standalone L1 observation kernel
+
+Usage: cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import obs
+
+
+def to_hlo_text(fn, args):
+    lowered = jax.jit(fn).lower(*args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants is load-bearing: the default printer elides big
+    # literals as `constant({...})`, which the xla_extension 0.5.1 text
+    # parser silently accepts and fills with a placeholder pattern —
+    # corrupting any module that embeds, e.g., the static grid. (This, not
+    # gather parsing, was the root cause of the index-looking observations
+    # during bring-up; see EXPERIMENTS.md §Debug-log.)
+    text = comp.as_hlo_text(print_large_constants=True)
+    assert "{...}" not in text, "HLO printer elided a constant"
+    return text
+
+
+def write(path, text):
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {path} ({len(text)} chars)")
+
+
+def obs_kernel_entry(grid, pos, direction):
+    return (obs.obs_first_person_batched(grid, pos, direction, h=8, w=8),)
+
+
+def main():
+    parser = argparse.ArgumentParser()
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument(
+        "--fwd-sizes", default="1,16", help="comma-separated ppo_fwd batch sizes"
+    )
+    parser.add_argument(
+        "--update-sizes", default="256", help="comma-separated ppo_update minibatch sizes"
+    )
+    parser.add_argument(
+        "--env-sizes", default="1,16,1024", help="comma-separated env_step batch sizes"
+    )
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    for b in [int(x) for x in args.fwd_sizes.split(",") if x]:
+        text = to_hlo_text(model.ppo_fwd, model.ppo_fwd_args(b))
+        write(os.path.join(args.out_dir, f"ppo_fwd_b{b}.hlo.txt"), text)
+        if b == 1:
+            write(os.path.join(args.out_dir, "model.hlo.txt"), text)
+
+    for mb in [int(x) for x in args.update_sizes.split(",") if x]:
+        text = to_hlo_text(model.ppo_update, model.ppo_update_args(mb))
+        write(os.path.join(args.out_dir, f"ppo_update_b{mb}.hlo.txt"), text)
+
+    for b in [int(x) for x in args.env_sizes.split(",") if x]:
+        text = to_hlo_text(model.env_step, model.env_step_args(b))
+        write(os.path.join(args.out_dir, f"env_step_empty8_b{b}.hlo.txt"), text)
+
+    # standalone L1 kernel artifact
+    b = 16
+    kernel_args = (
+        jax.ShapeDtypeStruct((b, 8, 8, 3), jnp.int32),
+        jax.ShapeDtypeStruct((b, 2), jnp.int32),
+        jax.ShapeDtypeStruct((b,), jnp.int32),
+    )
+    write(
+        os.path.join(args.out_dir, f"obs_fp_b{b}.hlo.txt"),
+        to_hlo_text(obs_kernel_entry, kernel_args),
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Layer-1 Pallas kernels (build-time only).
+
+Two kernels cover the paper's compute hot-spots:
+
+* :mod:`.obs` — batched first-person observation extraction (the per-step
+  gather that dominates a grid-world env step).
+* :mod:`.mlp` — fused dense layer (matmul + bias + activation) used by the
+  PPO actor-critic.
+
+Both are lowered with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so the interpret path is the correctness (and
+portability) target; TPU-tiling choices are documented in DESIGN.md §Perf.
+:mod:`.ref` holds the pure-jnp oracles every kernel is pytest-checked
+against.
+"""
+
+from . import mlp, obs, ref  # noqa: F401

@@ -1,0 +1,81 @@
+"""Pallas kernel: batched first-person observation extraction.
+
+The per-step hot-spot of a vectorised grid-world is the egocentric gather —
+for every environment, crop a 7x7 window around the agent, rotate it into
+the facing frame and mask out-of-bounds cells. On GPU the original NAVIX
+does this with a vmapped gather; here it is a Pallas kernel with one grid
+program per environment so the window extraction stays in VMEM.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the grid slab for one env
+(8x8x3 i32 = 768 B) and the 7x7x3 output sit comfortably in VMEM; the
+BlockSpec maps one environment per program instance, so HBM traffic is one
+slab in, one window out — the same schedule a CUDA implementation would
+express with one threadblock per env.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import VIEW
+
+
+def _obs_kernel(grid_ref, pos_ref, dir_ref, o_ref, *, h, w):
+    b = grid_ref.shape[0]
+    grid = grid_ref[...]  # [B, H, W, 3]
+    pos = pos_ref[...]  # [B, 2]
+    d = dir_ref[...]  # [B]
+
+    vr = jax.lax.broadcasted_iota(jnp.int32, (VIEW, VIEW), 0)[None]
+    vc = jax.lax.broadcasted_iota(jnp.int32, (VIEW, VIEW), 1)[None]
+    fo = (VIEW - 1) - vr  # [1,7,7]
+    ro = vc - VIEW // 2
+
+    # Direction vectors without gathers: dir 0=E,1=S,2=W,3=N.
+    fr = jnp.where(d == 1, 1, jnp.where(d == 3, -1, 0))[:, None, None]
+    fc = jnp.where(d == 0, 1, jnp.where(d == 2, -1, 0))[:, None, None]
+    # rightward = clockwise next direction
+    rr = fc
+    rc = -fr
+
+    wr = pos[:, 0, None, None] + fr * fo + rr * ro  # [B,7,7]
+    wc = pos[:, 1, None, None] + fc * fo + rc * ro
+    inb = (wr >= 0) & (wr < h) & (wc >= 0) & (wc < w)
+    wr_c = jnp.clip(wr, 0, h - 1)
+    wc_c = jnp.clip(wc, 0, w - 1)
+    flat = grid.reshape(b, h * w, 3)
+    # One-hot contraction instead of a gather: gathers are slow on the TPU
+    # vector unit, while a (49 x HW) @ (HW x 3) one-hot batch-matmul maps
+    # onto the MXU — and it sidesteps HLO-text round-trip bugs in the pinned
+    # xla_extension 0.5.1 (see DESIGN.md §AOT-notes).
+    idx = (wr_c * w + wc_c).reshape(b, VIEW * VIEW)  # [B,49]
+    hw_iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, h * w), 2)
+    onehot = (idx[:, :, None] == hw_iota).astype(jnp.int32)  # [B,49,HW]
+    vals = jnp.matmul(onehot, flat).reshape(b, VIEW, VIEW, 3)
+    o_ref[...] = jnp.where(inb[:, :, :, None], vals, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("h", "w"))
+def obs_first_person_batched(grid, pos, direction, *, h=8, w=8):
+    """Batched first-person observation via the Pallas kernel.
+
+    grid: i32[B, H, W, 3] symbolic grids (player excluded);
+    pos: i32[B, 2]; direction: i32[B].
+    Returns i32[B, 7, 7, 3].
+
+    The whole batch is one kernel invocation (no pallas grid axis): the
+    pinned xla_extension 0.5.1 mis-executes the while-loop lowering that
+    interpret-mode `grid=(B,)` produces after an HLO-text round-trip, and a
+    single invocation is also what the CPU backend wants. On real TPU the
+    BlockSpec would tile the batch axis to bound VMEM (one 8x8x3 i32 slab is
+    768 B, so ~1024 envs/block fit comfortably) — see DESIGN.md §Perf.
+    """
+    b = grid.shape[0]
+    kernel = functools.partial(_obs_kernel, h=h, w=w)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((b, VIEW, VIEW, 3), jnp.int32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(grid, pos, direction)

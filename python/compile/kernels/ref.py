@@ -1,0 +1,63 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These mirror the Rust engine's semantics exactly (see
+``rust/src/systems/observations.rs``) and are the ground truth for the
+pytest suite; the Pallas kernels must match them bit-for-bit.
+"""
+
+import jax.numpy as jnp
+
+VIEW = 7
+# MiniGrid direction vectors (dr, dc), dir 0 = east.
+DIR_VEC = jnp.array([[0, 1], [1, 0], [0, -1], [-1, 0]], dtype=jnp.int32)
+
+
+def first_person_coords(pos, direction):
+    """World coordinates for each of the 7x7 egocentric view cells.
+
+    pos: i32[2] (row, col); direction: i32[] in {0,1,2,3}.
+    Returns (wr, wc): i32[7,7] world rows/cols (may be out of bounds).
+    """
+    vr = jnp.arange(VIEW, dtype=jnp.int32)[:, None]  # view row, 0 = far
+    vc = jnp.arange(VIEW, dtype=jnp.int32)[None, :]
+    fo = (VIEW - 1) - vr  # forward offset
+    ro = vc - VIEW // 2  # rightward offset
+    f = DIR_VEC[direction]  # (dr, dc) facing
+    r = DIR_VEC[(direction + 1) % 4]  # rightward = clockwise next
+    wr = pos[0] + f[0] * fo + r[0] * ro
+    wc = pos[1] + f[1] * fo + r[1] * ro
+    return wr, wc
+
+
+def obs_first_person(grid, pos, direction):
+    """First-person symbolic observation for open-room grids.
+
+    grid: i32[H, W, 3] symbolic encoding *without* the player.
+    Out-of-bounds view cells are unseen (0,0,0). Matches the Rust engine on
+    environments without interior occluders (Empty family): with no interior
+    walls, MiniGrid's visibility propagation lights every in-bounds cell.
+    """
+    h, w = grid.shape[0], grid.shape[1]
+    wr, wc = first_person_coords(pos, direction)
+    inb = (wr >= 0) & (wr < h) & (wc >= 0) & (wc < w)
+    wr_c = jnp.clip(wr, 0, h - 1)
+    wc_c = jnp.clip(wc, 0, w - 1)
+    flat = grid.reshape(h * w, 3)
+    vals = jnp.take(flat, wr_c * w + wc_c, axis=0)
+    return jnp.where(inb[:, :, None], vals, 0).astype(jnp.int32)
+
+
+def dense(x, w, b, activation="tanh"):
+    """Reference dense layer: ``act(x @ w.T + b)``.
+
+    x: f32[B, IN]; w: f32[OUT, IN] (row-major out×in, the Rust packing
+    convention); b: f32[OUT].
+    """
+    y = x @ w.T + b[None, :]
+    if activation == "tanh":
+        return jnp.tanh(y)
+    if activation == "relu":
+        return jnp.maximum(y, 0.0)
+    if activation == "linear":
+        return y
+    raise ValueError(f"unknown activation {activation}")

@@ -1,0 +1,281 @@
+"""Layer-2 JAX model: the fully-jitted NAVIX path.
+
+Three computations, each lowered to a single HLO module by ``aot.py``:
+
+* :func:`env_step` — the batched Empty-8x8 environment step (paper §3.2.2's
+  "jit the whole loop" mode): intervention, reward, termination, timeout
+  truncation and autoreset, with observations produced by the Layer-1
+  Pallas kernel (:mod:`compile.kernels.obs`).
+* :func:`ppo_fwd` — the PPO actor-critic forward over a flat parameter
+  vector (Layer-1 fused dense kernels).
+* :func:`ppo_update` — one *fused* PPO minibatch update: clipped-surrogate
+  loss, ``jax.grad``, global-norm clipping and Adam, in one module, so the
+  Rust coordinator trains with two executable calls per step and Python is
+  never on the request path.
+
+Parameter packing (shared bit-for-bit with
+``rust/src/runtime/artifacts.rs::packing``): actor layers then critic
+layers, each ``W (out x in, row-major) ++ b(out)``; dims actor
+[147, 64, 64, 7], critic [147, 64, 64, 1].
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import mlp, obs
+
+# --- fixed sizes (Empty-8x8, symbolic first-person 7x7x3) ---------------
+H = W = 8
+VIEW = 7
+OBS_DIM = VIEW * VIEW * 3  # 147
+HIDDEN = 64
+N_ACTIONS = 7
+MAX_STEPS = 4 * H * W  # 256, the MiniGrid timeout for Empty-8x8
+GOAL = (H - 2, W - 2)
+START = (1, 1)
+
+ACTOR_DIMS = (OBS_DIM, HIDDEN, HIDDEN, N_ACTIONS)
+CRITIC_DIMS = (OBS_DIM, HIDDEN, HIDDEN, 1)
+
+# --- PPO constants baked into the update artifact ------------------------
+LR = 2.5e-4
+CLIP_EPS = 0.2
+VF_COEF = 0.5
+ENT_COEF = 0.01
+MAX_GRAD_NORM = 0.5
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+def param_count(dims):
+    return sum(i * o + o for i, o in zip(dims[:-1], dims[1:]))
+
+
+N_PARAMS = param_count(ACTOR_DIMS) + param_count(CRITIC_DIMS)
+
+
+def unpack(params):
+    """Split the flat vector into per-layer (W, b) lists for both heads."""
+    layers = []
+    off = 0
+    for dims in (ACTOR_DIMS, CRITIC_DIMS):
+        net = []
+        for nin, nout in zip(dims[:-1], dims[1:]):
+            w = params[off : off + nin * nout].reshape(nout, nin)
+            off += nin * nout
+            b = params[off : off + nout]
+            off += nout
+            net.append((w, b))
+        layers.append(net)
+    return layers[0], layers[1]
+
+
+# =========================================================================
+# env_step: batched Empty-8x8 (intervention + reward/termination + autoreset)
+# =========================================================================
+
+def _static_grid():
+    """Symbolic grid of Empty-8x8 without the player: walls, floor, goal."""
+    import numpy as np
+
+    g = np.zeros((H, W, 3), dtype=np.int32)
+    g[:, :, 0] = 1  # empty
+    g[0, :, 0] = 2
+    g[-1, :, 0] = 2
+    g[:, 0, 0] = 2
+    g[:, -1, 0] = 2
+    g[0, :, 1] = 5
+    g[-1, :, 1] = 5
+    g[:, 0, 1] = 5
+    g[:, -1, 1] = 5  # grey walls
+    g[GOAL[0], GOAL[1], 0] = 8  # goal tag
+    g[GOAL[0], GOAL[1], 1] = 1  # green
+    return jnp.asarray(g)
+
+
+def _dir_vec(d):
+    """Direction vectors without table gathers (see kernels/obs.py on why
+    the AOT path avoids gather): dir 0=E,1=S,2=W,3=N -> (dr, dc)."""
+    dr = jnp.where(d == 1, 1, jnp.where(d == 3, -1, 0))
+    dc = jnp.where(d == 0, 1, jnp.where(d == 2, -1, 0))
+    return dr, dc
+
+
+def env_step(pos, direction, t, done_prev, action):
+    """One batched Empty-8x8 step with autoreset.
+
+    pos: i32[B,2]; direction: i32[B]; t: i32[B];
+    done_prev: i32[B] (1 if the previous timestep ended the episode);
+    action: i32[B] in [0,7).
+
+    Returns (pos', dir', t', done', obs i32[B,147], reward f32[B],
+    discount f32[B], is_first i32[B]).
+    """
+    b = pos.shape[0]
+
+    # --- intervention (left/right/forward; other actions are no-ops in
+    # Empty: nothing to pick up, drop, toggle).
+    turn_left = action == 0
+    turn_right = action == 1
+    fwd = action == 2
+    new_dir = jnp.where(
+        turn_left, (direction + 3) % 4, jnp.where(turn_right, (direction + 1) % 4, direction)
+    )
+    dr, dc = _dir_vec(new_dir)
+    fr = pos[:, 0] + dr * fwd.astype(jnp.int32)
+    fc = pos[:, 1] + dc * fwd.astype(jnp.int32)
+    # walkable: any interior cell (Empty has no interior obstacles)
+    walkable = (fr >= 1) & (fr < H - 1) & (fc >= 1) & (fc < W - 1)
+    nr = jnp.where(walkable, fr, pos[:, 0])
+    nc = jnp.where(walkable, fc, pos[:, 1])
+
+    new_t = t + 1
+    goal = (nr == GOAL[0]) & (nc == GOAL[1])
+    terminated = goal
+    truncated = (~terminated) & (new_t >= MAX_STEPS)
+    is_last = terminated | truncated
+
+    reward = jnp.where(terminated, 1.0, 0.0).astype(jnp.float32)
+    discount = jnp.where(terminated, 0.0, 1.0).astype(jnp.float32)
+
+    # --- autoreset: if the *previous* step was terminal, this call resets
+    # instead (paper's branch-free timestep protocol).
+    resetting = done_prev.astype(bool)
+    out_r = jnp.where(resetting, START[0], nr)
+    out_c = jnp.where(resetting, START[1], nc)
+    out_dir = jnp.where(resetting, 0, new_dir)
+    out_t = jnp.where(resetting, 0, new_t)
+    out_reward = jnp.where(resetting, 0.0, reward)
+    out_discount = jnp.where(resetting, 1.0, discount)
+    out_done = jnp.where(resetting, 0, is_last.astype(jnp.int32))
+    is_first = resetting.astype(jnp.int32)
+
+    # --- observation via the Layer-1 Pallas kernel.
+    grid = jnp.broadcast_to(_static_grid()[None], (b, H, W, 3))
+    o = obs.obs_first_person_batched(
+        grid, jnp.stack([out_r, out_c], axis=1), out_dir, h=H, w=W
+    ).reshape(b, OBS_DIM)
+
+    return (
+        jnp.stack([out_r, out_c], axis=1),
+        out_dir,
+        out_t,
+        out_done,
+        o,
+        out_reward,
+        out_discount,
+        is_first,
+    )
+
+
+def env_reset(b):
+    """Initial batched state (fixed start, like MiniGrid Empty)."""
+    pos = jnp.tile(jnp.array([START], dtype=jnp.int32), (b, 1))
+    direction = jnp.zeros(b, dtype=jnp.int32)
+    t = jnp.zeros(b, dtype=jnp.int32)
+    done = jnp.zeros(b, dtype=jnp.int32)
+    grid = jnp.broadcast_to(_static_grid()[None], (b, H, W, 3))
+    o = obs.obs_first_person_batched(grid, pos, direction, h=H, w=W).reshape(b, OBS_DIM)
+    return pos, direction, t, done, o
+
+
+# =========================================================================
+# PPO actor-critic
+# =========================================================================
+
+def _net(layers, x, activation="tanh"):
+    for i, (w, b) in enumerate(layers):
+        act = activation if i + 1 < len(layers) else "linear"
+        x = mlp.dense(x, w, b, activation=act)
+    return x
+
+
+def ppo_fwd(params, obs_i32):
+    """Policy forward. params: f32[N_PARAMS]; obs: i32[B, 147].
+
+    Returns (logits f32[B, 7], values f32[B]).
+    """
+    x = obs_i32.astype(jnp.float32) / 10.0
+    actor, critic = unpack(params)
+    logits = _net(actor, x)
+    values = _net(critic, x)[:, 0]
+    return logits, values
+
+
+def _ppo_loss(params, obs_i32, actions, old_logp, adv, targets):
+    logits, values = ppo_fwd(params, obs_i32)
+    logp_all = jax.nn.log_softmax(logits)
+    probs = jax.nn.softmax(logits)
+    # one-hot select, not take_along_axis: the pinned xla_extension 0.5.1
+    # mis-parses call-wrapped gathers from HLO text (see kernels/obs.py)
+    onehot = jax.nn.one_hot(actions, N_ACTIONS, dtype=logp_all.dtype)
+    logp = (logp_all * onehot).sum(axis=1)
+    ratio = jnp.exp(logp - old_logp)
+    clipped = jnp.clip(ratio, 1.0 - CLIP_EPS, 1.0 + CLIP_EPS)
+    pg_loss = -jnp.minimum(ratio * adv, clipped * adv).mean()
+    v_loss = 0.5 * ((values - targets) ** 2).mean()
+    entropy = -(probs * logp_all).sum(axis=1).mean()
+    loss = pg_loss + VF_COEF * v_loss - ENT_COEF * entropy
+    return loss, (pg_loss, v_loss, entropy)
+
+
+def ppo_update(params, m, v, t, obs_i32, actions, old_logp, adv, targets):
+    """One fused PPO minibatch update (grad + clip + Adam).
+
+    params/m/v: f32[N_PARAMS]; t: i32[] (Adam step, 1-based);
+    obs: i32[MB, 147]; actions: i32[MB]; old_logp/adv/targets: f32[MB].
+
+    Returns (params', m', v', pg_loss, v_loss, entropy).
+    """
+    grad_fn = jax.grad(_ppo_loss, has_aux=True)
+    grads, (pg_loss, v_loss, entropy) = grad_fn(
+        params, obs_i32, actions, old_logp, adv, targets
+    )
+    # global-norm clip
+    norm = jnp.sqrt(jnp.sum(grads * grads))
+    scale = jnp.minimum(1.0, MAX_GRAD_NORM / jnp.maximum(norm, 1e-12))
+    grads = grads * scale
+    # Adam
+    tf = t.astype(jnp.float32)
+    new_m = ADAM_B1 * m + (1.0 - ADAM_B1) * grads
+    new_v = ADAM_B2 * v + (1.0 - ADAM_B2) * grads * grads
+    mhat = new_m / (1.0 - ADAM_B1**tf)
+    vhat = new_v / (1.0 - ADAM_B2**tf)
+    new_params = params - LR * mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+    return new_params, new_m, new_v, pg_loss, v_loss, entropy
+
+
+# --- shape builders used by aot.py ---------------------------------------
+
+def env_step_args(b):
+    i32 = jnp.int32
+    return (
+        jax.ShapeDtypeStruct((b, 2), i32),
+        jax.ShapeDtypeStruct((b,), i32),
+        jax.ShapeDtypeStruct((b,), i32),
+        jax.ShapeDtypeStruct((b,), i32),
+        jax.ShapeDtypeStruct((b,), i32),
+    )
+
+
+def ppo_fwd_args(b):
+    return (
+        jax.ShapeDtypeStruct((N_PARAMS,), jnp.float32),
+        jax.ShapeDtypeStruct((b, OBS_DIM), jnp.int32),
+    )
+
+
+def ppo_update_args(mb):
+    f32, i32 = jnp.float32, jnp.int32
+    return (
+        jax.ShapeDtypeStruct((N_PARAMS,), f32),
+        jax.ShapeDtypeStruct((N_PARAMS,), f32),
+        jax.ShapeDtypeStruct((N_PARAMS,), f32),
+        jax.ShapeDtypeStruct((), i32),
+        jax.ShapeDtypeStruct((mb, OBS_DIM), i32),
+        jax.ShapeDtypeStruct((mb,), i32),
+        jax.ShapeDtypeStruct((mb,), f32),
+        jax.ShapeDtypeStruct((mb,), f32),
+        jax.ShapeDtypeStruct((mb,), f32),
+    )

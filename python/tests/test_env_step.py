@@ -1,0 +1,103 @@
+"""L2 env_step semantics: the fully-jitted Empty-8x8 environment."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import model
+
+L, R, F = 0, 1, 2  # left, right, forward
+
+
+def reset(b=1):
+    return model.env_reset(b)
+
+
+def step(state, actions):
+    pos, d, t, done, _obs = state[:5] if len(state) == 5 else state
+    out = model.env_step(pos, d, t, done, jnp.asarray(actions, dtype=jnp.int32))
+    return out  # (pos, dir, t, done, obs, reward, discount, is_first)
+
+
+class TestEnvStep:
+    def test_reset_state(self):
+        pos, d, t, done, obs = reset(3)
+        np.testing.assert_array_equal(np.asarray(pos), [[1, 1]] * 3)
+        assert np.all(np.asarray(d) == 0)
+        assert np.all(np.asarray(t) == 0)
+        assert obs.shape == (3, 147)
+
+    def test_forward_moves_east(self):
+        state = reset(1)
+        out = step(state, [F])
+        np.testing.assert_array_equal(np.asarray(out[0]), [[1, 2]])
+        assert float(out[5][0]) == 0.0  # reward
+        assert float(out[6][0]) == 1.0  # discount
+
+    def test_turns_change_direction_not_position(self):
+        state = reset(1)
+        out = step(state, [R])
+        assert int(out[1][0]) == 1  # south
+        np.testing.assert_array_equal(np.asarray(out[0]), [[1, 1]])
+        out = model.env_step(out[0], out[1], out[2], out[3], jnp.array([L], dtype=jnp.int32))
+        assert int(out[1][0]) == 0
+
+    def test_wall_blocks(self):
+        pos, d, t, done, _ = reset(1)
+        # face north (3) at (1,1): forward into the wall
+        d = jnp.array([3], dtype=jnp.int32)
+        out = model.env_step(pos, d, t, done, jnp.array([F], dtype=jnp.int32))
+        np.testing.assert_array_equal(np.asarray(out[0]), [[1, 1]])
+
+    def test_goal_terminates_with_reward_then_autoresets(self):
+        # script: 5x forward (to col 6), right, 5x forward (to row 6)
+        state = reset(1)
+        pos, d, t, done, _ = state
+        script = [F] * 5 + [R] + [F] * 5
+        reward = discount = None
+        for a in script:
+            out = model.env_step(pos, d, t, done, jnp.array([a], dtype=jnp.int32))
+            pos, d, t, done = out[0], out[1], out[2], out[3]
+            reward, discount = float(out[5][0]), float(out[6][0])
+        np.testing.assert_array_equal(np.asarray(pos), [[6, 6]])
+        assert reward == 1.0
+        assert discount == 0.0
+        assert int(done[0]) == 1
+        # autoreset on the next call, whatever the action
+        out = model.env_step(pos, d, t, done, jnp.array([F], dtype=jnp.int32))
+        np.testing.assert_array_equal(np.asarray(out[0]), [[1, 1]])
+        assert int(out[7][0]) == 1  # is_first
+        assert float(out[5][0]) == 0.0
+        assert int(out[3][0]) == 0
+
+    def test_timeout_truncates_with_discount_one(self):
+        pos, d, t, done, _ = reset(1)
+        t = jnp.array([model.MAX_STEPS - 1], dtype=jnp.int32)
+        out = model.env_step(pos, d, t, done, jnp.array([L], dtype=jnp.int32))
+        assert int(out[3][0]) == 1  # done (truncated)
+        assert float(out[6][0]) == 1.0  # discount preserved
+
+    def test_obs_matches_kernel_of_state(self):
+        from compile.kernels import obs as obs_kernel
+
+        pos, d, t, done, o = reset(2)
+        out = model.env_step(pos, d, t, done, jnp.array([F, R], dtype=jnp.int32))
+        grid = jnp.broadcast_to(model._static_grid()[None], (2, 8, 8, 3))
+        expect = obs_kernel.obs_first_person_batched(grid, out[0], out[1]).reshape(2, 147)
+        np.testing.assert_array_equal(np.asarray(out[4]), np.asarray(expect))
+
+    @settings(max_examples=30, deadline=None)
+    @given(actions=st.lists(st.integers(0, 6), min_size=1, max_size=40), b=st.integers(1, 3))
+    def test_invariants_under_random_actions(self, actions, b):
+        pos, d, t, done, _ = reset(b)
+        for a in actions:
+            out = model.env_step(
+                pos, d, t, done, jnp.full((b,), a, dtype=jnp.int32)
+            )
+            pos, d, t, done = out[0], out[1], out[2], out[3]
+            p = np.asarray(pos)
+            assert (p >= 1).all() and (p <= 6).all(), "agent left the room"
+            assert ((np.asarray(d) >= 0) & (np.asarray(d) < 4)).all()
+            r = np.asarray(out[5])
+            assert np.isin(r, [0.0, 1.0]).all()

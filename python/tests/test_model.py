@@ -1,0 +1,116 @@
+"""L2 model correctness: parameter packing, PPO forward/update semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+
+
+def init_params(seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(scale=0.05, size=(model.N_PARAMS,)).astype(np.float32))
+
+
+class TestPacking:
+    def test_param_count_matches_rust_convention(self):
+        actor = 147 * 64 + 64 + 64 * 64 + 64 + 64 * 7 + 7
+        critic = 147 * 64 + 64 + 64 * 64 + 64 + 64 + 1
+        assert model.N_PARAMS == actor + critic
+
+    def test_unpack_shapes(self):
+        actor, critic = model.unpack(init_params())
+        assert [w.shape for w, _ in actor] == [(64, 147), (64, 64), (7, 64)]
+        assert [w.shape for w, _ in critic] == [(64, 147), (64, 64), (1, 64)]
+        assert all(b.shape == (w.shape[0],) for w, b in actor + critic)
+
+    def test_unpack_roundtrip_offsets(self):
+        # first weight of layer 2 of the actor sits right after W1,b1
+        p = jnp.arange(model.N_PARAMS, dtype=jnp.float32)
+        actor, _ = model.unpack(p)
+        w2 = actor[1][0]
+        assert float(w2[0, 0]) == 147 * 64 + 64
+
+
+class TestPpoFwd:
+    def test_shapes_and_determinism(self):
+        p = init_params()
+        obs = jnp.zeros((4, model.OBS_DIM), dtype=jnp.int32)
+        logits, values = model.ppo_fwd(p, obs)
+        assert logits.shape == (4, 7)
+        assert values.shape == (4,)
+        l2, v2 = model.ppo_fwd(p, obs)
+        np.testing.assert_array_equal(np.asarray(logits), np.asarray(l2))
+        np.testing.assert_array_equal(np.asarray(values), np.asarray(v2))
+
+    def test_obs_affects_output(self):
+        p = init_params()
+        a = jnp.zeros((1, model.OBS_DIM), dtype=jnp.int32)
+        b = jnp.full((1, model.OBS_DIM), 5, dtype=jnp.int32)
+        la, _ = model.ppo_fwd(p, a)
+        lb, _ = model.ppo_fwd(p, b)
+        assert not np.allclose(np.asarray(la), np.asarray(lb))
+
+
+class TestPpoUpdate:
+    def _batch(self, mb=32, seed=0):
+        rng = np.random.default_rng(seed)
+        obs = jnp.asarray(rng.integers(0, 10, size=(mb, model.OBS_DIM), dtype=np.int32))
+        actions = jnp.asarray(rng.integers(0, 7, size=(mb,), dtype=np.int32))
+        adv = jnp.asarray(rng.normal(size=(mb,)).astype(np.float32))
+        targets = jnp.asarray(rng.normal(size=(mb,)).astype(np.float32))
+        return obs, actions, adv, targets
+
+    def test_update_changes_params_and_reports_entropy(self):
+        p = init_params()
+        m = jnp.zeros_like(p)
+        v = jnp.zeros_like(p)
+        obs, actions, adv, targets = self._batch()
+        logits, _ = model.ppo_fwd(p, obs)
+        logp_all = jax.nn.log_softmax(logits)
+        old_logp = jnp.take_along_axis(logp_all, actions[:, None], axis=1)[:, 0]
+        p2, m2, v2, pg, vl, ent = model.ppo_update(
+            p, m, v, jnp.int32(1), obs, actions, old_logp, adv, targets
+        )
+        assert not np.allclose(np.asarray(p), np.asarray(p2))
+        assert np.asarray(m2).any() and np.asarray(v2).any()
+        # near-uniform init over 7 actions
+        assert 1.0 < float(ent) < 2.0
+        assert float(vl) > 0.0
+        assert np.isfinite(float(pg))
+
+    def test_repeated_updates_reduce_value_loss(self):
+        p = init_params(1)
+        m = jnp.zeros_like(p)
+        v = jnp.zeros_like(p)
+        obs, actions, adv, targets = self._batch(mb=64, seed=1)
+        adv = jnp.zeros_like(adv)  # isolate the value head
+        logits, _ = model.ppo_fwd(p, obs)
+        old_logp = jnp.take_along_axis(
+            jax.nn.log_softmax(logits), actions[:, None], axis=1
+        )[:, 0]
+        first_vl, last_vl = None, None
+        for t in range(1, 121):
+            p, m, v, _, vl, _ = model.ppo_update(
+                p, m, v, jnp.int32(t), obs, actions, old_logp, adv, targets
+            )
+            if t == 1:
+                first_vl = float(vl)
+            last_vl = float(vl)
+        assert last_vl < first_vl * 0.9, f"value loss {first_vl} -> {last_vl}"
+
+    def test_adam_step_size_bounded_by_lr_and_clip(self):
+        p = init_params(2)
+        m = jnp.zeros_like(p)
+        v = jnp.zeros_like(p)
+        obs, actions, adv, targets = self._batch(mb=16, seed=2)
+        logits, _ = model.ppo_fwd(p, obs)
+        old_logp = jnp.take_along_axis(
+            jax.nn.log_softmax(logits), actions[:, None], axis=1
+        )[:, 0]
+        p2, *_ = model.ppo_update(
+            p, m, v, jnp.int32(1), obs, actions, old_logp, adv, targets
+        )
+        # Adam's first bias-corrected step is at most ~lr per coordinate.
+        max_delta = float(jnp.abs(p2 - p).max())
+        assert max_delta <= model.LR * 1.5

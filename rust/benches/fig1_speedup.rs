@@ -1,0 +1,40 @@
+//! Paper Fig. 1: speedups for five headline environments vs. the MiniGrid
+//! baseline. Protocol (§4.1): 1K steps × 8 parallel envs, 5 runs, 5–95 pct
+//! CI. `NAVIX_BENCH_FAST=1` trims steps/runs for CI smoke.
+
+use navix::bench_harness::{bench, Report};
+use navix::coordinator::{unroll_walltime, Engine};
+
+const FIG1_ENVS: [&str; 5] = [
+    "Navix-Empty-8x8-v0",
+    "Navix-DoorKey-8x8-v0",
+    "Navix-Dynamic-Obstacles-8x8",
+    "Navix-KeyCorridorS3R3-v0",
+    "Navix-LavaGapS7-v0",
+];
+
+fn main() {
+    let fast = std::env::var("NAVIX_BENCH_FAST").is_ok();
+    let (steps, runs, n_envs) = if fast { (100, 2, 8) } else { (1000, 5, 8) };
+
+    let mut report = Report::new(
+        "fig1_speedup",
+        &["env", "navix_median", "minigrid_median", "speedup"],
+    );
+    for env_id in FIG1_ENVS {
+        let navix = bench(1, runs, || {
+            unroll_walltime(Engine::Batched, env_id, n_envs, steps, 0).unwrap();
+        });
+        let baseline = bench(1, runs, || {
+            unroll_walltime(Engine::BaselineAsync, env_id, n_envs, steps, 0).unwrap();
+        });
+        report.row(&[
+            env_id.to_string(),
+            navix.fmt_secs(),
+            baseline.fmt_secs(),
+            format!("{:.1}x", baseline.median / navix.median),
+        ]);
+    }
+    report.save();
+    println!("\n(paper Fig. 1 shape: NAVIX below baseline on every env; see EXPERIMENTS.md)");
+}

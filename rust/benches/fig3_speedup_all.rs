@@ -1,0 +1,33 @@
+//! Paper Fig. 3: speedup of NAVIX vs. MiniGrid for all 30 Table-7
+//! environments (x-ticks 0–29), 1K steps × 8 envs, 5 runs with 5–95 pct CI.
+//! `NAVIX_BENCH_FAST=1` trims the protocol.
+
+use navix::bench_harness::{bench, Report};
+use navix::coordinator::{unroll_walltime, Engine};
+use navix::envs::registry::fig3_envs;
+
+fn main() {
+    let fast = std::env::var("NAVIX_BENCH_FAST").is_ok();
+    let (steps, runs, n_envs) = if fast { (50, 1, 4) } else { (1000, 5, 8) };
+
+    let mut report = Report::new(
+        "fig3_speedup_all",
+        &["xtick", "env", "navix_median", "minigrid_median", "speedup"],
+    );
+    for (xtick, env_id) in fig3_envs().into_iter().enumerate() {
+        let navix = bench(if fast { 0 } else { 1 }, runs, || {
+            unroll_walltime(Engine::Batched, env_id, n_envs, steps, 0).unwrap();
+        });
+        let baseline = bench(if fast { 0 } else { 1 }, runs, || {
+            unroll_walltime(Engine::BaselineAsync, env_id, n_envs, steps, 0).unwrap();
+        });
+        report.row(&[
+            xtick.to_string(),
+            env_id.to_string(),
+            navix.fmt_secs(),
+            baseline.fmt_secs(),
+            format!("{:.1}x", baseline.median / navix.median),
+        ]);
+    }
+    report.save();
+}

@@ -1,0 +1,45 @@
+//! Paper Fig. 4: how the speedup varies with the number of steps
+//! (1K → 1M) on MiniGrid-Empty-8x8-v0, 8 envs, 5 seeds.
+//!
+//! Default caps the largest point at 100K steps (the trend is established
+//! well before 1M on this host); set `NAVIX_FIG4_MAX=1000000` for the full
+//! paper protocol, `NAVIX_BENCH_FAST=1` for a smoke run.
+
+use navix::bench_harness::{bench, Report};
+use navix::coordinator::{unroll_walltime, Engine};
+
+fn main() {
+    let fast = std::env::var("NAVIX_BENCH_FAST").is_ok();
+    let max_steps: usize = std::env::var("NAVIX_FIG4_MAX")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if fast { 1_000 } else { 100_000 });
+    let runs = if fast { 1 } else { 5 };
+    let env_id = "Navix-Empty-8x8-v0";
+    let n_envs = 8;
+
+    let mut report = Report::new(
+        "fig4_steps",
+        &["steps", "navix_median", "minigrid_median", "speedup"],
+    );
+    let mut steps = 1_000usize;
+    while steps <= max_steps {
+        // fewer repeats for the long runs, like the paper's error bars
+        let r = if steps >= 100_000 { runs.min(2) } else { runs };
+        let navix = bench(0, r, || {
+            unroll_walltime(Engine::Batched, env_id, n_envs, steps, 0).unwrap();
+        });
+        let baseline = bench(0, r, || {
+            unroll_walltime(Engine::BaselineAsync, env_id, n_envs, steps, 0).unwrap();
+        });
+        report.row(&[
+            steps.to_string(),
+            navix.fmt_secs(),
+            baseline.fmt_secs(),
+            format!("{:.1}x", baseline.median / navix.median),
+        ]);
+        steps *= 10;
+    }
+    report.save();
+    println!("\n(paper Fig. 4 shape: both curves linear in steps, constant gap)");
+}

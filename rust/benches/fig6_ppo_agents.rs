@@ -1,0 +1,114 @@
+//! Paper Fig. 6: computation cost of training N PPO agents in parallel
+//! (each with 16 envs). The paper trains up to 2048 agents × 1M steps on an
+//! A100 in <50s (≈670M steps/s); this single-core testbed sweeps N ∈
+//! {1,2,4,8} at `NAVIX_FIG6_STEPS` steps each (default 8192) and reports
+//! the same accounting, plus the MiniGrid-baseline comparison (a single
+//! PPO agent on the thread-per-env vector baseline).
+
+use navix::agents::ppo::{Ppo, PpoConfig};
+use navix::agents::preprocess_obs;
+use navix::baseline::AsyncVectorEnv;
+use navix::bench_harness::Report;
+use navix::coordinator::multi_agent::train_parallel_ppo;
+use navix::nn::sample_categorical;
+use navix::rng::Key;
+
+fn main() {
+    let fast = std::env::var("NAVIX_BENCH_FAST").is_ok();
+    let steps: u64 = std::env::var("NAVIX_FIG6_STEPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if fast { 2048 } else { 8192 });
+    let max_agents = if fast { 2 } else { 8 };
+    let env_id = "Navix-Empty-8x8-v0";
+
+    let mut report = Report::new(
+        "fig6_ppo_agents",
+        &["agents", "total_envs", "wall_s", "steps_per_s", "mean_return"],
+    );
+
+    // NAVIX engine: N agents in one process.
+    let mut n = 1usize;
+    while n <= max_agents {
+        let r = train_parallel_ppo(env_id, n, 16, steps, 0).unwrap();
+        report.row(&[
+            format!("{n}"),
+            format!("{}", n * 16),
+            format!("{:.2}", r.wall_secs),
+            format!("{:.0}", r.steps_per_second),
+            format!("{:.3}", r.mean_final_return),
+        ]);
+        n *= 2;
+    }
+
+    // MiniGrid baseline: ONE agent doing FULL PPO training on the
+    // thread-per-env vector baseline (the paper's "original implementation
+    // trains a single PPO agent") — rollouts through the OO engine +
+    // channel barrier, identical learner.
+    let cfg = navix::make(env_id).unwrap();
+    let d = navix::agents::OBS_DIM;
+    let mut venv = AsyncVectorEnv::new(cfg, 16, Key::new(0));
+    let mut obs = venv.reset();
+    let mut ppo = Ppo::new(PpoConfig::default(), d, 7, 0);
+    let mut rng = navix::rng::Rng::new(1);
+    let t_len = ppo.cfg.rollout_len;
+    let mut ro = navix::agents::ppo::Rollout::new(t_len, 16, d);
+    let mut x = vec![0.0f32; d];
+    let start = std::time::Instant::now();
+    let mut done_steps = 0u64;
+    let mut lp = vec![0.0f32; 7];
+    while done_steps < steps {
+        for t in 0..t_len {
+            let mut actions = vec![0u8; 16];
+            for (i, o) in obs.iter().enumerate() {
+                preprocess_obs(o, &mut x);
+                let logits = ppo.actor.infer(&x);
+                let a = sample_categorical(&logits, &mut rng);
+                navix::nn::log_softmax(&logits, &mut lp);
+                let idx = t * 16 + i;
+                ro.obs[idx * d..(idx + 1) * d].copy_from_slice(&x);
+                ro.actions[idx] = a as u8;
+                ro.logp[idx] = lp[a];
+                ro.values[idx] = ppo.critic.infer(&x)[0];
+                actions[i] = a as u8;
+            }
+            let r = venv.step(&actions);
+            for i in 0..16 {
+                let idx = t * 16 + i;
+                ro.rewards[idx] = r.reward[i];
+                ro.discounts[idx] = if r.terminated[i] { 0.0 } else { 1.0 };
+                ro.boundaries[idx] = r.terminated[i] || r.truncated[i];
+            }
+            obs = r.obs;
+            done_steps += 16;
+        }
+        for (i, o) in obs.iter().enumerate() {
+            preprocess_obs(o, &mut x);
+            ro.last_values[i] = ppo.critic.infer(&x)[0];
+        }
+        navix::agents::gae::gae(
+            &ro.rewards,
+            &ro.values,
+            &ro.last_values,
+            &ro.discounts,
+            &ro.boundaries,
+            ppo.cfg.gamma,
+            ppo.cfg.gae_lambda,
+            &mut ro.advantages,
+            &mut ro.targets,
+        );
+        navix::agents::gae::normalize(&mut ro.advantages);
+        ppo.update(&ro);
+    }
+    let wall = start.elapsed().as_secs_f64();
+    report.row(&[
+        "baseline-1".into(),
+        "16".into(),
+        format!("{wall:.2}"),
+        format!("{:.0}", done_steps as f64 / wall),
+        "-".into(),
+    ]);
+    report.save();
+    println!("\n(paper §4.2: NAVIX 2048 agents ≈ 670M steps/s vs MiniGrid 3.1K steps/s;");
+    println!(" compare the aggregate steps/s column here for the same crossover shape)");
+}

@@ -1,0 +1,39 @@
+//! Paper Fig. 8 (Appendix E): **ablation — speedup without batching.**
+//! Runs every Table-7 environment at batch size 1 for both engines. The
+//! paper's conclusion: most of NAVIX's win comes from batching; unbatched,
+//! the speedup shrinks dramatically. Here the analogous ablation compares
+//! the SoA engine at B=1 with the scalar OO baseline — isolating the
+//! data-layout/dispatch component from the batching component (read
+//! together with fig3's batched numbers).
+
+use navix::bench_harness::{bench, Report};
+use navix::coordinator::{unroll_walltime, Engine};
+use navix::envs::registry::fig3_envs;
+
+fn main() {
+    let fast = std::env::var("NAVIX_BENCH_FAST").is_ok();
+    let (steps, runs) = if fast { (50, 1) } else { (1000, 5) };
+
+    let mut report = Report::new(
+        "fig8_ablation_nobatch",
+        &["xtick", "env", "navix_b1_median", "minigrid_b1_median", "speedup"],
+    );
+    for (xtick, env_id) in fig3_envs().into_iter().enumerate() {
+        let navix = bench(0, runs, || {
+            unroll_walltime(Engine::Batched, env_id, 1, steps, 0).unwrap();
+        });
+        let baseline = bench(0, runs, || {
+            unroll_walltime(Engine::BaselineSync, env_id, 1, steps, 0).unwrap();
+        });
+        report.row(&[
+            xtick.to_string(),
+            env_id.to_string(),
+            navix.fmt_secs(),
+            baseline.fmt_secs(),
+            format!("{:.2}x", baseline.median / navix.median),
+        ]);
+    }
+    report.save();
+    println!("\n(paper Fig. 8: without batching the speedup collapses — compare these");
+    println!(" ratios against fig3's batched ones to see batching dominate)");
+}

@@ -1,0 +1,131 @@
+//! Generalised Advantage Estimation (Schulman et al., 2016), with the
+//! dm_env-style termination/truncation distinction the batched engine
+//! produces: advantages stop accumulating at every episode boundary, and
+//! bootstrapping uses `discount = 0` on termination only.
+
+/// Compute GAE advantages and value targets in place.
+///
+/// Inputs are time-major flattened `[T × B]` slices:
+/// * `rewards[t*b + i]` — r_{t+1}
+/// * `values[t*b + i]` — V(s_t); `last_values[i]` — V(s_T) bootstrap
+/// * `discounts` — 0.0 where the step *terminated*, 1.0 otherwise
+/// * `boundaries` — true where the step ended an episode (terminated OR
+///   truncated); the advantage chain is cut there
+pub fn gae(
+    rewards: &[f32],
+    values: &[f32],
+    last_values: &[f32],
+    discounts: &[f32],
+    boundaries: &[bool],
+    gamma: f32,
+    lambda: f32,
+    advantages: &mut [f32],
+    targets: &mut [f32],
+) {
+    let b = last_values.len();
+    let t_len = rewards.len() / b;
+    debug_assert_eq!(rewards.len(), t_len * b);
+    for i in 0..b {
+        let mut adv = 0.0f32;
+        let mut next_value = last_values[i];
+        for t in (0..t_len).rev() {
+            let idx = t * b + i;
+            let nonterminal = discounts[idx]; // 0 when terminated
+            let delta = rewards[idx] + gamma * nonterminal * next_value - values[idx];
+            let carry = if boundaries[idx] { 0.0 } else { 1.0 };
+            adv = delta + gamma * lambda * carry * adv;
+            advantages[idx] = adv;
+            targets[idx] = adv + values[idx];
+            next_value = values[idx];
+        }
+    }
+}
+
+/// Normalise advantages to zero mean / unit variance (the standard PPO
+/// trick; matches Rejax).
+pub fn normalize(advantages: &mut [f32]) {
+    let n = advantages.len() as f32;
+    let mean = advantages.iter().sum::<f32>() / n;
+    let var = advantages.iter().map(|a| (a - mean) * (a - mean)).sum::<f32>() / n;
+    let std = var.sqrt().max(1e-8);
+    for a in advantages.iter_mut() {
+        *a = (*a - mean) / std;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_step_advantage_is_td_error() {
+        let rewards = [1.0];
+        let values = [0.5];
+        let last = [0.25];
+        let disc = [1.0];
+        let bound = [false];
+        let mut adv = [0.0];
+        let mut tgt = [0.0];
+        gae(&rewards, &values, &last, &disc, &bound, 0.9, 0.95, &mut adv, &mut tgt);
+        let expect = 1.0 + 0.9 * 0.25 - 0.5;
+        assert!((adv[0] - expect).abs() < 1e-6);
+        assert!((tgt[0] - (expect + 0.5)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn termination_stops_bootstrap_and_carry() {
+        // two steps, terminal at t=0: the t=0 delta must ignore V(s_1).
+        let rewards = [1.0, 0.0];
+        let values = [0.5, 0.7];
+        let last = [0.9];
+        let disc = [0.0, 1.0]; // t=0 terminated
+        let bound = [true, false];
+        let mut adv = [0.0; 2];
+        let mut tgt = [0.0; 2];
+        gae(&rewards, &values, &last, &disc, &bound, 0.99, 0.95, &mut adv, &mut tgt);
+        // t=0: delta = 1.0 - 0.5, no carry from t=1
+        assert!((adv[0] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn truncation_cuts_carry_but_keeps_bootstrap() {
+        let rewards = [0.0, 0.0];
+        let values = [0.0, 0.0];
+        let last = [1.0];
+        let disc = [1.0, 1.0]; // truncated ≠ terminated: discount stays 1
+        let bound = [true, false]; // but the chain is cut at t=0
+        let mut adv = [0.0; 2];
+        let mut tgt = [0.0; 2];
+        gae(&rewards, &values, &last, &disc, &bound, 1.0, 1.0, &mut adv, &mut tgt);
+        // t=1: delta = 0 + 1*1.0 - 0 = 1.0
+        assert!((adv[1] - 1.0).abs() < 1e-6);
+        // t=0 bootstraps V(s_1)=0 and does NOT add t=1's advantage
+        assert!((adv[0] - 0.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn batch_independence() {
+        // two envs interleaved; env 1 all zeros must stay zeros.
+        let rewards = [1.0, 0.0, 1.0, 0.0];
+        let values = [0.0, 0.0, 0.0, 0.0];
+        let last = [0.0, 0.0];
+        let disc = [1.0, 1.0, 1.0, 1.0];
+        let bound = [false, false, false, false];
+        let mut adv = [0.0; 4];
+        let mut tgt = [0.0; 4];
+        gae(&rewards, &values, &last, &disc, &bound, 0.9, 0.9, &mut adv, &mut tgt);
+        assert_eq!(adv[1], 0.0);
+        assert_eq!(adv[3], 0.0);
+        assert!(adv[0] > adv[2], "earlier reward accumulates future advantage");
+    }
+
+    #[test]
+    fn normalize_zero_mean_unit_std() {
+        let mut xs = [1.0, 2.0, 3.0, 4.0];
+        normalize(&mut xs);
+        let mean: f32 = xs.iter().sum::<f32>() / 4.0;
+        let var: f32 = xs.iter().map(|x| x * x).sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-6);
+        assert!((var - 1.0).abs() < 1e-5);
+    }
+}

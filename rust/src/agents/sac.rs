@@ -1,0 +1,307 @@
+//! Discrete Soft Actor-Critic (Haarnoja et al., 2018; discrete variant à la
+//! Christodoulou, 2019) — paper §4.3 baseline.
+//!
+//! Twin Q-networks with Polyak-averaged targets, a categorical actor, and
+//! automatic temperature tuning towards a target entropy expressed as a
+//! ratio of the uniform-policy entropy (the Table-9 "target entropy ratio").
+//! Uses the same 128-steps/128-updates cadence as DQN.
+
+use crate::agents::{preprocess_obs, CurvePoint, ReturnTracker, TrainLog};
+use crate::agents::replay::Replay;
+use crate::batch::BatchedEnv;
+use crate::nn::adam::{clip_global_norm, Adam};
+use crate::nn::{log_softmax, sample_categorical, softmax, Activation, Mlp};
+use crate::rng::Rng;
+
+/// SAC hyperparameters (Table 9 "fitted" knobs).
+#[derive(Clone, Debug)]
+pub struct SacConfig {
+    pub batch_size: usize,
+    pub buffer_capacity: usize,
+    pub learning_starts: usize,
+    pub gamma: f32,
+    pub lr: f32,
+    /// Polyak coefficient for target critics.
+    pub tau: f32,
+    /// Target entropy = ratio × ln(num_actions).
+    pub target_entropy_ratio: f32,
+    pub parallel_steps: usize,
+    pub activation: Activation,
+}
+
+impl Default for SacConfig {
+    fn default() -> Self {
+        SacConfig {
+            batch_size: 128,
+            buffer_capacity: 50_000,
+            learning_starts: 1_000,
+            gamma: 0.99,
+            lr: 3e-4,
+            tau: 0.005,
+            // Keep the temperature low: with sparse terminal rewards the
+            // discounted entropy-bonus stream α·H/(1−γ) competes with the
+            // +1 goal reward, and a high target entropy teaches the agent
+            // to *avoid* terminating. 0.2·ln(7) ≈ 0.39 nats keeps
+            // α·H/(1−γ) ≪ 1 at equilibrium.
+            target_entropy_ratio: 0.2,
+            parallel_steps: 128,
+            activation: Activation::Relu,
+        }
+    }
+}
+
+/// Discrete SAC agent.
+pub struct Sac {
+    pub cfg: SacConfig,
+    pub actor: Mlp,
+    pub q1: Mlp,
+    pub q2: Mlp,
+    q1_target: Mlp,
+    q2_target: Mlp,
+    actor_opt: Adam,
+    q1_opt: Adam,
+    q2_opt: Adam,
+    pub log_alpha: f32,
+    alpha_lr: f32,
+    target_entropy: f32,
+    replay: Replay,
+    obs_dim: usize,
+    n_actions: usize,
+    rng: Rng,
+    env_steps: u64,
+}
+
+impl Sac {
+    pub fn new(cfg: SacConfig, obs_dim: usize, n_actions: usize, seed: u64) -> Sac {
+        let mut rng = Rng::new(seed);
+        let actor = Mlp::new(&[obs_dim, 64, 64, n_actions], cfg.activation, &mut rng);
+        let q1 = Mlp::new(&[obs_dim, 64, 64, n_actions], cfg.activation, &mut rng);
+        let q2 = Mlp::new(&[obs_dim, 64, 64, n_actions], cfg.activation, &mut rng);
+        let (q1_target, q2_target) = (q1.clone(), q2.clone());
+        let actor_opt = Adam::new(actor.params.len(), cfg.lr);
+        let q1_opt = Adam::new(q1.params.len(), cfg.lr);
+        let q2_opt = Adam::new(q2.params.len(), cfg.lr);
+        let replay = Replay::new(cfg.buffer_capacity, obs_dim);
+        let target_entropy = cfg.target_entropy_ratio * (n_actions as f32).ln();
+        Sac {
+            cfg,
+            actor,
+            q1,
+            q2,
+            q1_target,
+            q2_target,
+            actor_opt,
+            q1_opt,
+            q2_opt,
+            // Start with a small temperature: MiniGrid rewards are sparse
+            // ±1, so an α near 1 drowns the Q-signal in entropy bonus and
+            // the policy never leaves uniform (the classic discrete-SAC
+            // failure mode on gridworlds).
+            log_alpha: 0.1_f32.ln(),
+            alpha_lr: 1e-3,
+            target_entropy,
+            replay,
+            obs_dim,
+            n_actions,
+            rng,
+            env_steps: 0,
+        }
+    }
+
+    pub fn alpha(&self) -> f32 {
+        self.log_alpha.exp()
+    }
+
+    fn act_sample(&mut self, obs: &[i32]) -> u8 {
+        let mut x = vec![0.0f32; self.obs_dim];
+        preprocess_obs(obs, &mut x);
+        let logits = self.actor.infer(&x);
+        sample_categorical(&logits, &mut self.rng) as u8
+    }
+
+    /// One SAC update (both critics, actor, temperature). Returns critic
+    /// loss.
+    pub fn update(&mut self) -> f32 {
+        if self.replay.len() < self.cfg.batch_size.max(self.cfg.learning_starts) {
+            return 0.0;
+        }
+        let batch = self.replay.sample(self.cfg.batch_size, &mut self.rng);
+        let d = self.obs_dim;
+        let na = self.n_actions;
+        let alpha = self.alpha();
+        let scale = 1.0 / self.cfg.batch_size as f32;
+
+        let mut q1_grads = vec![0.0f32; self.q1.params.len()];
+        let mut q2_grads = vec![0.0f32; self.q2.params.len()];
+        let mut a_grads = vec![0.0f32; self.actor.params.len()];
+        let mut cache = crate::nn::mlp::Cache::default();
+        let mut critic_loss = 0.0f32;
+        let mut entropy_sum = 0.0f32;
+
+        for k in 0..self.cfg.batch_size {
+            let x = &batch.obs[k * d..(k + 1) * d];
+            let nx = &batch.next_obs[k * d..(k + 1) * d];
+            let a = batch.actions[k] as usize;
+
+            // --- critic target: expected (twin-min) value of s' under π.
+            //
+            // Deliberate deviation from the textbook soft backup: the
+            // −α·logπ entropy term is kept in the ACTOR objective only.
+            // With sparse terminal rewards, a soft value backup pays an
+            // entropy annuity α·H/(1−γ) for *not terminating*, so any
+            // non-vanishing temperature teaches the agent to avoid the
+            // goal (we observed exactly this collapse). Dropping the term
+            // from the backup bounds Q by the true return while the actor
+            // stays entropy-regularised — the variant common in discrete-
+            // SAC implementations on episodic tasks.
+            let next_logits = self.actor.infer(nx);
+            let mut np = vec![0.0; na];
+            softmax(&next_logits, &mut np);
+            let nq1 = self.q1_target.infer(nx);
+            let nq2 = self.q2_target.infer(nx);
+            let v_next: f32 = (0..na).map(|j| np[j] * nq1[j].min(nq2[j])).sum();
+            let y = batch.rewards[k] + self.cfg.gamma * batch.nonterminal[k] * v_next;
+
+            // --- critic updates (MSE on the taken action).
+            let q1s = self.q1.forward(x, &mut cache);
+            let e1 = q1s[a] - y;
+            let mut dq = vec![0.0f32; na];
+            dq[a] = scale * e1;
+            self.q1.backward(&cache, &dq, &mut q1_grads);
+
+            let q2s = self.q2.forward(x, &mut cache);
+            let e2 = q2s[a] - y;
+            dq.fill(0.0);
+            dq[a] = scale * e2;
+            self.q2.backward(&cache, &dq, &mut q2_grads);
+            critic_loss += 0.5 * (e1 * e1 + e2 * e2);
+
+            // --- actor: minimise E_a[α log π − min Q] (Q detached).
+            let logits = self.actor.forward(x, &mut cache);
+            let mut p = vec![0.0; na];
+            let mut lp = vec![0.0; na];
+            softmax(&logits, &mut p);
+            log_softmax(&logits, &mut lp);
+            let minq: Vec<f32> = (0..na).map(|j| q1s[j].min(q2s[j])).collect();
+            let inner: Vec<f32> = (0..na).map(|j| alpha * lp[j] - minq[j]).collect();
+            let expected: f32 = (0..na).map(|j| p[j] * inner[j]).sum();
+            // dL/dlogit_j = p_j [ (inner_j + α) − Σ p (inner + α) ]
+            //             = p_j [ inner_j − expected ]  (+α cancels)
+            let mut dlogits = vec![0.0f32; na];
+            for j in 0..na {
+                dlogits[j] = scale * p[j] * (inner[j] - expected);
+            }
+            self.actor.backward(&cache, &dlogits, &mut a_grads);
+            entropy_sum += -(0..na).map(|j| p[j] * lp[j]).sum::<f32>();
+        }
+
+        clip_global_norm(&mut q1_grads, 10.0);
+        clip_global_norm(&mut q2_grads, 10.0);
+        clip_global_norm(&mut a_grads, 10.0);
+        self.q1_opt.step(&mut self.q1.params, &q1_grads);
+        self.q2_opt.step(&mut self.q2.params, &q2_grads);
+        self.actor_opt.step(&mut self.actor.params, &a_grads);
+
+        // --- temperature: push entropy toward the target.
+        let mean_entropy = entropy_sum * scale;
+        self.log_alpha -= self.alpha_lr * (mean_entropy - self.target_entropy);
+        // α ∈ [1e-4, 1]: an unbounded temperature lets the entropy stream
+        // dominate sparse terminal rewards (see SacConfig docs).
+        self.log_alpha = self.log_alpha.clamp(-9.2, 0.0);
+
+        // --- Polyak target update.
+        self.q1_target.soft_update_from(&self.q1, self.cfg.tau);
+        self.q2_target.soft_update_from(&self.q2, self.cfg.tau);
+
+        critic_loss * scale
+    }
+
+    /// Train for `total_steps` env steps.
+    pub fn train(&mut self, env: &mut BatchedEnv, total_steps: u64) -> TrainLog {
+        let mut log = TrainLog::default();
+        let mut tracker = ReturnTracker::new(64);
+        let b = env.b;
+        let mut actions = vec![0u8; b];
+        let mut prev_obs: Vec<Vec<i32>> =
+            (0..b).map(|i| env.obs.env_i32(b, i).to_vec()).collect();
+        while self.env_steps < total_steps {
+            let mut chunk_loss = 0.0;
+            for _ in 0..self.cfg.parallel_steps {
+                for i in 0..b {
+                    actions[i] = self.act_sample(&prev_obs[i]);
+                }
+                env.step(&actions);
+                for i in 0..b {
+                    let next = env.obs.env_i32(b, i);
+                    if env.timestep.step_type[i] == crate::core::timestep::StepType::First {
+                        prev_obs[i].copy_from_slice(next);
+                        continue;
+                    }
+                    let terminated = env.timestep.discount[i] == 0.0;
+                    self.replay.push(
+                        &prev_obs[i],
+                        actions[i],
+                        env.timestep.reward[i],
+                        next,
+                        terminated,
+                    );
+                    if env.timestep.step_type[i].is_last() {
+                        tracker.push(env.timestep.episodic_return[i]);
+                    }
+                    prev_obs[i].copy_from_slice(next);
+                }
+                self.env_steps += b as u64;
+            }
+            for _ in 0..self.cfg.parallel_steps {
+                chunk_loss += self.update();
+            }
+            log.curve.push(CurvePoint {
+                env_steps: self.env_steps,
+                mean_return: tracker.mean(),
+                loss: chunk_loss / self.cfg.parallel_steps as f32,
+            });
+        }
+        log.episodes = tracker.episodes;
+        log
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::registry::make;
+    use crate::rng::Key;
+
+    #[test]
+    fn target_entropy_scales_with_actions() {
+        let s = Sac::new(SacConfig { target_entropy_ratio: 0.5, ..Default::default() }, 4, 7, 0);
+        assert!((s.target_entropy - 0.5 * (7.0f32).ln()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn update_noop_before_learning_starts() {
+        let mut s = Sac::new(SacConfig::default(), 4, 3, 0);
+        assert_eq!(s.update(), 0.0);
+    }
+
+    #[test]
+    fn sac_learns_empty_5x5_smoke() {
+        let mut env = BatchedEnv::new(make("Navix-Empty-5x5-v0").unwrap(), 8, Key::new(3));
+        let cfg = SacConfig {
+            learning_starts: 500,
+            buffer_capacity: 20_000,
+            lr: 1e-3,
+            parallel_steps: 64,
+            target_entropy_ratio: 0.1,
+            ..Default::default()
+        };
+        let mut sac = Sac::new(cfg, 147, 7, 3);
+        let log = sac.train(&mut env, 60_000);
+        let final_ret = log.final_return();
+        assert!(
+            final_ret > 0.3,
+            "SAC failed to learn Empty-5x5: final return {final_ret} ({} eps)",
+            log.episodes
+        );
+    }
+}

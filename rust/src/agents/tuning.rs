@@ -1,0 +1,166 @@
+//! Random-search hyperparameter tuning (paper §4.3: "32 iterations of
+//! random search… each configuration evaluated with 16 initial seeds; the
+//! configuration with the highest average final return is selected").
+//!
+//! The search spaces cover the Table-9 "fitted" knobs for each algorithm.
+
+use crate::rng::Rng;
+
+/// A sampled hyperparameter assignment (name → value as f64; integer knobs
+/// round).
+#[derive(Clone, Debug, Default)]
+pub struct Sample {
+    pub values: Vec<(String, f64)>,
+}
+
+impl Sample {
+    pub fn get(&self, name: &str) -> f64 {
+        self.values
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| *v)
+            .unwrap_or_else(|| panic!("hyperparameter {name} not sampled"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get(name).round() as usize
+    }
+
+    pub fn get_f32(&self, name: &str) -> f32 {
+        self.get(name) as f32
+    }
+}
+
+/// One tunable dimension.
+#[derive(Clone, Debug)]
+pub enum Dim {
+    /// Log-uniform continuous (e.g. learning rates).
+    LogUniform { name: &'static str, lo: f64, hi: f64 },
+    /// Uniform continuous.
+    Uniform { name: &'static str, lo: f64, hi: f64 },
+    /// Uniform over an explicit finite set.
+    Choice { name: &'static str, options: &'static [f64] },
+}
+
+impl Dim {
+    fn name(&self) -> &'static str {
+        match self {
+            Dim::LogUniform { name, .. } | Dim::Uniform { name, .. } | Dim::Choice { name, .. } => {
+                name
+            }
+        }
+    }
+
+    fn sample(&self, rng: &mut Rng) -> f64 {
+        match self {
+            Dim::LogUniform { lo, hi, .. } => {
+                (lo.ln() + rng.uniform() * (hi.ln() - lo.ln())).exp()
+            }
+            Dim::Uniform { lo, hi, .. } => lo + rng.uniform() * (hi - lo),
+            Dim::Choice { options, .. } => options[rng.below(options.len() as u32) as usize],
+        }
+    }
+}
+
+/// Table-9 search space for PPO.
+pub fn ppo_space() -> Vec<Dim> {
+    vec![
+        Dim::LogUniform { name: "lr", lo: 1e-4, hi: 1e-2 },
+        Dim::Choice { name: "num_envs", options: &[8.0, 16.0, 32.0] },
+        Dim::Choice { name: "rollout_len", options: &[64.0, 128.0, 256.0] },
+        Dim::Choice { name: "epochs", options: &[2.0, 4.0, 8.0] },
+        Dim::Choice { name: "minibatches", options: &[4.0, 8.0, 16.0] },
+        Dim::Uniform { name: "gamma", lo: 0.95, hi: 0.999 },
+        Dim::Uniform { name: "gae_lambda", lo: 0.9, hi: 1.0 },
+        Dim::Choice { name: "max_grad_norm", options: &[0.5, 1.0, 10.0] },
+        Dim::Choice { name: "activation", options: &[0.0, 1.0] }, // 0=relu 1=tanh
+    ]
+}
+
+/// Table-9 search space for DQN.
+pub fn dqn_space() -> Vec<Dim> {
+    vec![
+        Dim::LogUniform { name: "lr", lo: 1e-4, hi: 1e-2 },
+        Dim::Choice { name: "batch_size", options: &[64.0, 128.0, 256.0] },
+        Dim::Choice { name: "target_update_freq", options: &[250.0, 500.0, 1000.0] },
+        Dim::Uniform { name: "gamma", lo: 0.95, hi: 0.999 },
+        Dim::Uniform { name: "exploration_fraction", lo: 0.2, hi: 0.8 },
+        Dim::Uniform { name: "final_eps", lo: 0.01, hi: 0.1 },
+        Dim::Choice { name: "max_grad_norm", options: &[1.0, 10.0] },
+        Dim::Choice { name: "activation", options: &[0.0, 1.0] },
+    ]
+}
+
+/// Table-9 search space for SAC.
+pub fn sac_space() -> Vec<Dim> {
+    vec![
+        Dim::LogUniform { name: "lr", lo: 1e-4, hi: 1e-2 },
+        Dim::Choice { name: "batch_size", options: &[64.0, 128.0, 256.0] },
+        Dim::Uniform { name: "gamma", lo: 0.95, hi: 0.999 },
+        Dim::LogUniform { name: "tau", lo: 1e-3, hi: 5e-2 },
+        Dim::Uniform { name: "target_entropy_ratio", lo: 0.05, hi: 0.5 },
+        Dim::Choice { name: "activation", options: &[0.0, 1.0] },
+    ]
+}
+
+/// Random search: `iterations` samples, each scored by `eval` (higher is
+/// better — typically mean final return over seeds). Returns the best
+/// (sample, score).
+pub fn random_search<F: FnMut(&Sample) -> f64>(
+    space: &[Dim],
+    iterations: usize,
+    seed: u64,
+    mut eval: F,
+) -> (Sample, f64) {
+    let mut rng = Rng::new(seed);
+    let mut best: Option<(Sample, f64)> = None;
+    for _ in 0..iterations {
+        let sample = Sample {
+            values: space.iter().map(|d| (d.name().to_string(), d.sample(&mut rng))).collect(),
+        };
+        let score = eval(&sample);
+        if best.as_ref().map(|(_, s)| score > *s).unwrap_or(true) {
+            best = Some((sample, score));
+        }
+    }
+    best.expect("iterations > 0")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn samples_stay_in_bounds() {
+        let space = ppo_space();
+        let mut rng = Rng::new(0);
+        for _ in 0..100 {
+            for d in &space {
+                let v = d.sample(&mut rng);
+                match d {
+                    Dim::LogUniform { lo, hi, .. } | Dim::Uniform { lo, hi, .. } => {
+                        assert!(v >= *lo && v <= *hi);
+                    }
+                    Dim::Choice { options, .. } => assert!(options.contains(&v)),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn search_finds_the_obvious_optimum() {
+        // score = -(lr - 1e-3)^2 → best sample should be near 1e-3.
+        let space = vec![Dim::LogUniform { name: "lr", lo: 1e-5, hi: 1e-1 }];
+        let (best, score) =
+            random_search(&space, 64, 7, |s| -((s.get("lr") - 1e-3).powi(2)));
+        assert!(score <= 0.0);
+        assert!(best.get("lr") > 1e-4 && best.get("lr") < 1e-2, "lr {}", best.get("lr"));
+    }
+
+    #[test]
+    fn sample_accessors() {
+        let s = Sample { values: vec![("epochs".into(), 4.0)] };
+        assert_eq!(s.get_usize("epochs"), 4);
+        assert_eq!(s.get_f32("epochs"), 4.0);
+    }
+}

@@ -1,0 +1,25 @@
+//! The comparison baseline: a faithful re-creation of the *architecture* the
+//! paper benchmarks against (MiniGrid + gymnasium vector envs).
+//!
+//! * [`minigrid`] — an object-oriented scalar engine: one heap-allocated
+//!   trait object per grid cell, dynamic dispatch on every interaction,
+//!   per-step observation allocation. This mirrors MiniGrid's
+//!   `WorldObj`/`Grid` design (the paper's CPU-bound baseline), minus the
+//!   Python interpreter.
+//! * [`vec_env`] — gymnasium-style vector wrappers: `SyncVectorEnv`
+//!   (sequential loop) and `AsyncVectorEnv` (one worker thread per
+//!   environment with channel IPC, the analog of gymnasium's
+//!   `multiprocessing` — the configuration the paper's Fig. 5 shows dying
+//!   at 16 environments).
+//!
+//! Both engines consume the same [`crate::envs::EnvConfig`]s and layout
+//! generators, so speed comparisons measure *architecture* (batched SoA vs.
+//! object-per-cell + per-env worker), not differing game rules. This is the
+//! substitution documented in DESIGN.md: our baseline has no Python
+//! interpreter, so measured gaps are a *lower bound* on the paper's.
+
+pub mod minigrid;
+pub mod vec_env;
+
+pub use minigrid::MiniGridEnv;
+pub use vec_env::{AsyncVectorEnv, SyncVectorEnv};

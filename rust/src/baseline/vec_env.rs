@@ -1,0 +1,247 @@
+//! Gymnasium-style vector-environment wrappers over the scalar baseline.
+//!
+//! * [`SyncVectorEnv`] — step each env in a Python-style sequential loop.
+//! * [`AsyncVectorEnv`] — one worker *thread* per environment with channel
+//!   IPC, the architectural analog of gymnasium's `multiprocessing`
+//!   vectorisation that MiniGrid relies on (paper §4.2). Per-step
+//!   synchronisation and message passing are intentionally part of the
+//!   measured cost — that is the overhead the paper's Fig. 5 exposes
+//!   (the original dies at 16 envs; ours degrades more gracefully but the
+//!   per-env thread cost still grows linearly).
+//!
+//! Both wrappers autoreset like `gymnasium.vector` (terminal step returns
+//! the final obs of the old episode is *not* modelled; we return the fresh
+//! reset obs, matching NAVIX's autoreset convention so cross-engine
+//! trajectory comparisons stay aligned).
+
+use super::minigrid::{MiniGridEnv, StepResult};
+use crate::core::actions::Action;
+use crate::envs::EnvConfig;
+use crate::rng::Key;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+/// Batched step outcome (one entry per env).
+pub struct VecStep {
+    pub obs: Vec<Vec<i32>>,
+    pub reward: Vec<f32>,
+    pub terminated: Vec<bool>,
+    pub truncated: Vec<bool>,
+}
+
+/// Sequential vector env (gymnasium `SyncVectorEnv`).
+pub struct SyncVectorEnv {
+    envs: Vec<MiniGridEnv>,
+    needs_reset: Vec<bool>,
+}
+
+impl SyncVectorEnv {
+    pub fn new(cfg: EnvConfig, n: usize, key: Key) -> Self {
+        let envs =
+            (0..n).map(|i| MiniGridEnv::new(cfg.clone(), key.fold_in(i as u64))).collect();
+        SyncVectorEnv { envs, needs_reset: vec![false; n] }
+    }
+
+    pub fn num_envs(&self) -> usize {
+        self.envs.len()
+    }
+
+    pub fn reset(&mut self) -> Vec<Vec<i32>> {
+        self.needs_reset.fill(false);
+        self.envs.iter_mut().map(|e| e.reset()).collect()
+    }
+
+    pub fn step(&mut self, actions: &[u8]) -> VecStep {
+        let n = self.envs.len();
+        let mut out = VecStep {
+            obs: Vec::with_capacity(n),
+            reward: vec![0.0; n],
+            terminated: vec![false; n],
+            truncated: vec![false; n],
+        };
+        for (i, env) in self.envs.iter_mut().enumerate() {
+            if self.needs_reset[i] {
+                out.obs.push(env.reset());
+                self.needs_reset[i] = false;
+                continue;
+            }
+            let StepResult { obs, reward, terminated, truncated } =
+                env.step(Action::from_u8(actions[i]));
+            if terminated || truncated {
+                self.needs_reset[i] = true;
+            }
+            out.obs.push(obs);
+            out.reward[i] = reward;
+            out.terminated[i] = terminated;
+            out.truncated[i] = truncated;
+        }
+        out
+    }
+}
+
+enum Cmd {
+    Step(u8),
+    Reset,
+    Close,
+}
+
+struct Worker {
+    cmd: Sender<Cmd>,
+    res: Receiver<StepResult>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// Thread-per-env vector env (gymnasium `AsyncVectorEnv` analog).
+pub struct AsyncVectorEnv {
+    workers: Vec<Worker>,
+    needs_reset: Vec<bool>,
+}
+
+impl AsyncVectorEnv {
+    pub fn new(cfg: EnvConfig, n: usize, key: Key) -> Self {
+        let workers = (0..n)
+            .map(|i| {
+                let (cmd_tx, cmd_rx) = channel::<Cmd>();
+                let (res_tx, res_rx) = channel::<StepResult>();
+                let cfg = cfg.clone();
+                let wkey = key.fold_in(i as u64);
+                let handle = std::thread::spawn(move || {
+                    let mut env = MiniGridEnv::new(cfg, wkey);
+                    while let Ok(cmd) = cmd_rx.recv() {
+                        match cmd {
+                            Cmd::Step(a) => {
+                                let r = env.step(Action::from_u8(a));
+                                if res_tx.send(r).is_err() {
+                                    break;
+                                }
+                            }
+                            Cmd::Reset => {
+                                let obs = env.reset();
+                                let r = StepResult {
+                                    obs,
+                                    reward: 0.0,
+                                    terminated: false,
+                                    truncated: false,
+                                };
+                                if res_tx.send(r).is_err() {
+                                    break;
+                                }
+                            }
+                            Cmd::Close => break,
+                        }
+                    }
+                });
+                Worker { cmd: cmd_tx, res: res_rx, handle: Some(handle) }
+            })
+            .collect();
+        AsyncVectorEnv { workers, needs_reset: vec![false; n] }
+    }
+
+    pub fn num_envs(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn reset(&mut self) -> Vec<Vec<i32>> {
+        for w in &self.workers {
+            w.cmd.send(Cmd::Reset).expect("worker alive");
+        }
+        self.needs_reset.fill(false);
+        self.workers.iter().map(|w| w.res.recv().expect("worker alive").obs).collect()
+    }
+
+    /// Scatter actions, gather results (the per-step synchronisation barrier
+    /// the paper's baseline pays on every step).
+    pub fn step(&mut self, actions: &[u8]) -> VecStep {
+        let n = self.workers.len();
+        for (i, w) in self.workers.iter().enumerate() {
+            let cmd =
+                if self.needs_reset[i] { Cmd::Reset } else { Cmd::Step(actions[i]) };
+            w.cmd.send(cmd).expect("worker alive");
+        }
+        let mut out = VecStep {
+            obs: Vec::with_capacity(n),
+            reward: vec![0.0; n],
+            terminated: vec![false; n],
+            truncated: vec![false; n],
+        };
+        for (i, w) in self.workers.iter().enumerate() {
+            let r = w.res.recv().expect("worker alive");
+            if self.needs_reset[i] {
+                self.needs_reset[i] = false;
+            } else if r.terminated || r.truncated {
+                self.needs_reset[i] = true;
+            }
+            out.obs.push(r.obs);
+            out.reward[i] = r.reward;
+            out.terminated[i] = r.terminated;
+            out.truncated[i] = r.truncated;
+        }
+        out
+    }
+}
+
+impl Drop for AsyncVectorEnv {
+    fn drop(&mut self) {
+        for w in &self.workers {
+            let _ = w.cmd.send(Cmd::Close);
+        }
+        for w in &mut self.workers {
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::registry::make;
+    use crate::rng::Rng;
+
+    #[test]
+    fn sync_vector_steps_and_autoresets() {
+        let cfg = make("Navix-Empty-5x5-v0").unwrap();
+        let mut venv = SyncVectorEnv::new(cfg, 4, Key::new(0));
+        let obs = venv.reset();
+        assert_eq!(obs.len(), 4);
+        assert_eq!(obs[0].len(), 7 * 7 * 3);
+        // drive env 0 to the goal
+        for a in [2u8, 2, 1, 2, 2] {
+            let r = venv.step(&[a, 0, 0, 0]);
+            if r.terminated[0] {
+                assert_eq!(r.reward[0], 1.0);
+            }
+        }
+        // next step autoresets env 0 without touching the others
+        let r = venv.step(&[0, 0, 0, 0]);
+        assert!(!r.terminated[0]);
+    }
+
+    #[test]
+    fn async_vector_matches_sync_rewards() {
+        let cfg = make("Navix-Empty-5x5-v0").unwrap();
+        let mut sync = SyncVectorEnv::new(cfg.clone(), 3, Key::new(9));
+        let mut asyn = AsyncVectorEnv::new(cfg, 3, Key::new(9));
+        sync.reset();
+        asyn.reset();
+        let mut rng = Rng::new(1);
+        for _ in 0..60 {
+            let actions: Vec<u8> = (0..3).map(|_| rng.below(7) as u8).collect();
+            let rs = sync.step(&actions);
+            let ra = asyn.step(&actions);
+            assert_eq!(rs.reward, ra.reward);
+            assert_eq!(rs.terminated, ra.terminated);
+            assert_eq!(rs.obs, ra.obs);
+        }
+    }
+
+    #[test]
+    fn async_shuts_down_cleanly() {
+        let cfg = make("Navix-Empty-5x5-v0").unwrap();
+        let mut venv = AsyncVectorEnv::new(cfg, 8, Key::new(0));
+        venv.reset();
+        venv.step(&[0; 8]);
+        drop(venv); // must join all workers without hanging
+    }
+}

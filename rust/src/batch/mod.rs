@@ -1,0 +1,325 @@
+//! The batched environment engine — the Rust analog of NAVIX's
+//! `jax.vmap(env.step)` (paper §3.2.2 and §4.2).
+//!
+//! `BatchedEnv` owns a struct-of-arrays [`BatchedState`] for `B` parallel
+//! environments plus reusable observation/reward/discount buffers, and steps
+//! all of them with zero per-step allocation. Autoreset follows the paper's
+//! timestep design: if an environment's previous timestep was terminal, the
+//! step resets it instead (returning a `First` timestep), so agent code
+//! stays branch-free.
+//!
+//! The batching win this engine reproduces is architectural, not SIMD magic:
+//! one dispatch amortised over `B` contiguous state slots vs. one Python
+//! object graph per environment in the baseline ([`crate::baseline`]).
+
+use crate::core::actions::Action;
+use crate::core::state::BatchedState;
+use crate::core::timestep::{BatchedTimestep, StepType};
+use crate::envs::EnvConfig;
+use crate::rng::Key;
+use crate::systems::intervention::intervene;
+use crate::systems::sprites::SpriteSheet;
+use crate::systems::transition::transition;
+
+/// Observation storage for a batch (dtype depends on the obs function).
+#[derive(Clone, Debug)]
+pub enum ObsBatch {
+    I32(Vec<i32>),
+    U8(Vec<u8>),
+}
+
+impl ObsBatch {
+    /// Per-env flat length.
+    pub fn stride(&self, b: usize) -> usize {
+        match self {
+            ObsBatch::I32(v) => v.len() / b,
+            ObsBatch::U8(v) => v.len() / b,
+        }
+    }
+
+    /// i32 view of env `i` (panics on rgb batches).
+    pub fn env_i32(&self, b: usize, i: usize) -> &[i32] {
+        match self {
+            ObsBatch::I32(v) => {
+                let s = v.len() / b;
+                &v[i * s..(i + 1) * s]
+            }
+            ObsBatch::U8(_) => panic!("rgb observation accessed as i32"),
+        }
+    }
+
+    /// u8 view of env `i` (panics on symbolic batches).
+    pub fn env_u8(&self, b: usize, i: usize) -> &[u8] {
+        match self {
+            ObsBatch::U8(v) => {
+                let s = v.len() / b;
+                &v[i * s..(i + 1) * s]
+            }
+            ObsBatch::I32(_) => panic!("symbolic observation accessed as u8"),
+        }
+    }
+}
+
+/// `B` parallel environments of one configuration, stepped in lockstep.
+pub struct BatchedEnv {
+    pub cfg: EnvConfig,
+    pub b: usize,
+    pub state: BatchedState,
+    pub timestep: BatchedTimestep,
+    pub obs: ObsBatch,
+    sprites: Option<SpriteSheet>,
+    key: Key,
+    reset_count: u64,
+}
+
+impl BatchedEnv {
+    /// Allocate and reset `b` environments.
+    pub fn new(cfg: EnvConfig, b: usize, key: Key) -> Self {
+        let state = BatchedState::new(b, cfg.h, cfg.w, cfg.caps);
+        let obs_len = cfg.obs.len(cfg.h, cfg.w);
+        let obs = if cfg.obs.kind.is_rgb() {
+            ObsBatch::U8(vec![0; b * obs_len])
+        } else {
+            ObsBatch::I32(vec![0; b * obs_len])
+        };
+        let sprites = if cfg.obs.kind.is_rgb() { Some(SpriteSheet::new()) } else { None };
+        let mut env = BatchedEnv {
+            cfg,
+            b,
+            state,
+            timestep: BatchedTimestep::first(b),
+            obs,
+            sprites,
+            key,
+            reset_count: 0,
+        };
+        env.reset_all();
+        env
+    }
+
+    /// Number of discrete actions.
+    pub fn num_actions(&self) -> usize {
+        Action::N
+    }
+
+    /// Reset every environment (fresh episode keys) and write observations.
+    pub fn reset_all(&mut self) {
+        self.reset_count += 1;
+        let base = self.key.fold_in(self.reset_count);
+        for i in 0..self.b {
+            let key = base.fold_in(i as u64);
+            let mut slot = self.state.slot_mut(i);
+            self.cfg.reset_slot(&mut slot, key);
+        }
+        self.timestep = BatchedTimestep::first(self.b);
+        for i in 0..self.b {
+            self.write_obs(i);
+        }
+    }
+
+    /// Reset just env `i` (autoreset path).
+    fn reset_one(&mut self, i: usize) {
+        self.reset_count += 1;
+        let key = self.key.fold_in(self.reset_count).fold_in(i as u64);
+        let mut slot = self.state.slot_mut(i);
+        self.cfg.reset_slot(&mut slot, key);
+        self.timestep.t[i] = 0;
+        self.timestep.action[i] = -1;
+        self.timestep.reward[i] = 0.0;
+        self.timestep.discount[i] = 1.0;
+        self.timestep.step_type[i] = StepType::First;
+        self.timestep.episodic_return[i] = 0.0;
+    }
+
+    /// Step all environments with `actions` (one per env, values 0..7).
+    /// Environments whose previous timestep was terminal autoreset instead.
+    pub fn step(&mut self, actions: &[u8]) {
+        debug_assert_eq!(actions.len(), self.b);
+        for i in 0..self.b {
+            if self.timestep.step_type[i].is_last() {
+                self.reset_one(i);
+                self.write_obs(i);
+                continue;
+            }
+            self.step_one(i, Action::from_u8(actions[i]));
+            self.write_obs(i);
+        }
+    }
+
+    /// Core per-env step: intervention → transition → reward/termination →
+    /// timeout truncation.
+    fn step_one(&mut self, i: usize, action: Action) {
+        let stochastic = self.cfg.stochastic_balls;
+        let max_steps = self.cfg.max_steps;
+        {
+            let mut slot = self.state.slot_mut(i);
+            intervene(&mut slot, action);
+            transition(&mut slot, stochastic);
+        }
+        let slot = self.state.slot(i);
+        let reward = self.cfg.reward.eval(&slot, action, max_steps);
+        let terminated = self.cfg.termination.eval(&slot);
+        let truncated = !terminated && slot.t >= max_steps;
+
+        let ts = &mut self.timestep;
+        ts.t[i] = slot.t;
+        ts.action[i] = action as i32;
+        ts.reward[i] = reward;
+        ts.episodic_return[i] += reward;
+        ts.discount[i] = if terminated { 0.0 } else { 1.0 };
+        ts.step_type[i] = if terminated {
+            StepType::Terminated
+        } else if truncated {
+            StepType::Truncated
+        } else {
+            StepType::Mid
+        };
+    }
+
+    fn write_obs(&mut self, i: usize) {
+        let slot = self.state.slot(i);
+        let stride = self.cfg.obs.len(self.cfg.h, self.cfg.w);
+        match &mut self.obs {
+            ObsBatch::I32(v) => {
+                self.cfg.obs.write_i32(&slot, &mut v[i * stride..(i + 1) * stride]);
+            }
+            ObsBatch::U8(v) => {
+                let sheet = self.sprites.as_ref().expect("sprite sheet for rgb obs");
+                self.cfg.obs.write_u8(&slot, sheet, &mut v[i * stride..(i + 1) * stride]);
+            }
+        }
+    }
+
+    /// Convenience: run `steps` lockstep iterations with uniformly random
+    /// actions. Returns total env-steps executed (`b × steps`). Used by the
+    /// throughput benches (paper Figs. 4/5/8).
+    pub fn rollout_random(&mut self, steps: usize, seed: u64) -> usize {
+        let mut rng = crate::rng::Rng::new(seed);
+        let mut actions = vec![0u8; self.b];
+        for _ in 0..steps {
+            for a in actions.iter_mut() {
+                *a = rng.below(Action::N as u32) as u8;
+            }
+            self.step(&actions);
+        }
+        steps * self.b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::registry::make;
+    use crate::systems::observations::ObsKind;
+
+    fn env(id: &str, b: usize) -> BatchedEnv {
+        BatchedEnv::new(make(id).unwrap(), b, Key::new(0))
+    }
+
+    #[test]
+    fn reset_produces_first_timesteps_and_obs() {
+        let e = env("Navix-Empty-8x8-v0", 4);
+        assert!(e.timestep.step_type.iter().all(|&s| s == StepType::First));
+        assert_eq!(e.obs.stride(4), 7 * 7 * 3);
+        // fixed start → all four observations identical
+        let o0: Vec<i32> = e.obs.env_i32(4, 0).to_vec();
+        for i in 1..4 {
+            assert_eq!(e.obs.env_i32(4, i), &o0[..]);
+        }
+    }
+
+    #[test]
+    fn step_advances_time_and_tracks_actions() {
+        let mut e = env("Navix-Empty-5x5-v0", 2);
+        e.step(&[Action::Forward as u8, Action::Left as u8]);
+        assert_eq!(e.timestep.t, vec![1, 1]);
+        assert!(e.timestep.step_type.iter().all(|&s| s == StepType::Mid));
+        assert_eq!(e.timestep.action, vec![2, 0]);
+    }
+
+    #[test]
+    fn scripted_goal_reach_terminates_then_autoresets() {
+        // Empty-5x5: agent (1,1) E, goal (3,3): F, F, Right, F, F.
+        let mut e = env("Navix-Empty-5x5-v0", 1);
+        let script =
+            [Action::Forward, Action::Forward, Action::Right, Action::Forward, Action::Forward];
+        for &a in &script {
+            e.step(&[a as u8]);
+        }
+        assert_eq!(e.timestep.step_type[0], StepType::Terminated);
+        assert_eq!(e.timestep.reward[0], 1.0);
+        assert_eq!(e.timestep.discount[0], 0.0);
+        assert_eq!(e.timestep.episodic_return[0], 1.0);
+        // next step autoresets regardless of the action
+        e.step(&[Action::Forward as u8]);
+        assert_eq!(e.timestep.step_type[0], StepType::First);
+        assert_eq!(e.timestep.t[0], 0);
+        assert_eq!(e.timestep.action[0], -1);
+        assert_eq!(e.timestep.episodic_return[0], 0.0);
+        let s = e.state.slot(0);
+        assert_eq!(s.player(), crate::core::grid::Pos::new(1, 1), "fresh episode");
+    }
+
+    #[test]
+    fn truncation_at_max_steps_keeps_discount() {
+        let mut cfg = make("Navix-Empty-5x5-v0").unwrap();
+        cfg.max_steps = 3;
+        let mut e = BatchedEnv::new(cfg, 1, Key::new(1));
+        for _ in 0..3 {
+            e.step(&[Action::Left as u8]); // spin in place, never terminal
+        }
+        assert_eq!(e.timestep.step_type[0], StepType::Truncated);
+        assert_eq!(e.timestep.discount[0], 1.0, "truncation preserves γ");
+    }
+
+    #[test]
+    fn batch_envs_evolve_independently() {
+        let mut e = env("Navix-Empty-Random-6x6", 8);
+        let mut acts = vec![Action::Forward as u8; 8];
+        acts[3] = Action::Left as u8;
+        e.step(&acts);
+        let mut distinct = std::collections::HashSet::new();
+        for i in 0..8 {
+            let s = e.state.slot(i);
+            distinct.insert((s.player_pos, s.player_dir));
+        }
+        assert!(distinct.len() > 2, "batch collapsed to identical states");
+    }
+
+    #[test]
+    fn rollout_random_executes_requested_steps() {
+        let mut e = env("Navix-Empty-8x8-v0", 16);
+        let n = e.rollout_random(100, 42);
+        assert_eq!(n, 1600);
+    }
+
+    #[test]
+    fn rgb_batch_allocates_u8() {
+        let cfg = make("Navix-Empty-5x5-v0").unwrap().with_observation(ObsKind::Rgb);
+        let e = BatchedEnv::new(cfg, 2, Key::new(0));
+        match &e.obs {
+            ObsBatch::U8(v) => assert_eq!(v.len(), 2 * 160 * 160 * 3),
+            _ => panic!("rgb must be u8"),
+        }
+    }
+
+    #[test]
+    fn every_registered_env_steps_under_random_actions() {
+        for id in crate::envs::registry::fig3_envs() {
+            let mut e = env(id, 4);
+            e.rollout_random(50, 7);
+        }
+    }
+
+    #[test]
+    fn episodic_return_accumulates_costs() {
+        let mut cfg = make("Navix-Empty-5x5-v0").unwrap();
+        cfg.reward = crate::systems::rewards::RewardSpec::new(vec![
+            crate::systems::rewards::RewardFn::TimeCost(0.1),
+        ]);
+        let mut e = BatchedEnv::new(cfg, 1, Key::new(0));
+        e.step(&[Action::Left as u8]);
+        e.step(&[Action::Left as u8]);
+        assert!((e.timestep.episodic_return[0] + 0.2).abs() < 1e-6);
+    }
+}

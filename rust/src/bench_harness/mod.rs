@@ -1,0 +1,91 @@
+//! Benchmark harness substrate (criterion is not vendored in this offline
+//! image, so we provide the subset the paper's figures need: repeated timed
+//! runs, medians and the 5–95 percentile confidence intervals every NAVIX
+//! plot reports).
+
+pub mod stats;
+
+pub use stats::Summary;
+
+use std::time::Instant;
+
+/// Time `f` once, returning seconds.
+pub fn time_once<F: FnOnce() -> R, R>(f: F) -> (f64, R) {
+    let start = Instant::now();
+    let r = f();
+    (start.elapsed().as_secs_f64(), r)
+}
+
+/// Run `f` for `warmup` unrecorded and `runs` recorded repetitions and
+/// summarise the wall times (the paper's protocol: 5 runs, 5–95 pct CI).
+pub fn bench<F: FnMut()>(warmup: usize, runs: usize, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(runs);
+    for _ in 0..runs {
+        let start = Instant::now();
+        f();
+        times.push(start.elapsed().as_secs_f64());
+    }
+    Summary::from_samples(&times)
+}
+
+/// A formatted results table writer: prints aligned rows to stdout and
+/// mirrors them into a results file so EXPERIMENTS.md can cite raw data.
+pub struct Report {
+    name: String,
+    rows: Vec<Vec<String>>,
+    header: Vec<String>,
+}
+
+impl Report {
+    pub fn new(name: &str, header: &[&str]) -> Self {
+        println!("\n=== {name} ===");
+        println!("{}", header.join("\t"));
+        Report {
+            name: name.to_string(),
+            rows: Vec::new(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        println!("{}", cells.join("\t"));
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Write the table as TSV under `results/` (best-effort).
+    pub fn save(&self) {
+        let _ = std::fs::create_dir_all("results");
+        let path = format!("results/{}.tsv", self.name.replace([' ', '/'], "_"));
+        let mut body = self.header.join("\t");
+        body.push('\n');
+        for r in &self.rows {
+            body.push_str(&r.join("\t"));
+            body.push('\n');
+        }
+        let _ = std::fs::write(path, body);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_requested_runs() {
+        let mut n = 0;
+        let s = bench(2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert!(s.median >= 0.0);
+        assert!(s.p95 >= s.p5);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (dt, v) = time_once(|| 21 * 2);
+        assert_eq!(v, 42);
+        assert!(dt >= 0.0);
+    }
+}

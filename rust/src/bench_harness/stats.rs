@@ -1,0 +1,104 @@
+//! Summary statistics matching the paper's plots: medians with 5–95
+//! percentile confidence intervals across repeated runs/seeds.
+
+/// Summary of a sample of wall times (seconds) or any scalar metric.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub median: f64,
+    pub min: f64,
+    pub max: f64,
+    /// 5th percentile (lower CI bound in the paper's figures).
+    pub p5: f64,
+    /// 95th percentile (upper CI bound).
+    pub p95: f64,
+    pub std: f64,
+}
+
+impl Summary {
+    pub fn from_samples(xs: &[f64]) -> Summary {
+        assert!(!xs.is_empty(), "empty sample");
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = sorted.len();
+        let mean = sorted.iter().sum::<f64>() / n as f64;
+        let var = sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Summary {
+            n,
+            mean,
+            median: percentile(&sorted, 50.0),
+            min: sorted[0],
+            max: sorted[n - 1],
+            p5: percentile(&sorted, 5.0),
+            p95: percentile(&sorted, 95.0),
+            std: var.sqrt(),
+        }
+    }
+
+    /// "median [p5, p95]" with engineering units.
+    pub fn fmt_secs(&self) -> String {
+        format!(
+            "{} [{}, {}]",
+            fmt_duration(self.median),
+            fmt_duration(self.p5),
+            fmt_duration(self.p95)
+        )
+    }
+}
+
+/// Linear-interpolated percentile of a *sorted* sample.
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    let n = sorted.len();
+    if n == 1 {
+        return sorted[0];
+    }
+    let rank = (p / 100.0) * (n - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Human-friendly seconds formatting (µs/ms/s).
+pub fn fmt_duration(secs: f64) -> String {
+    if secs < 1e-3 {
+        format!("{:.1}µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2}ms", secs * 1e3)
+    } else {
+        format!("{:.2}s", secs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_of_known_sample() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = Summary::from_samples(&xs);
+        assert!((s.median - 50.5).abs() < 1e-9);
+        assert!((s.p5 - 5.95).abs() < 1e-9);
+        assert!((s.p95 - 95.05).abs() < 1e-9);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+        assert!((s.mean - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_sample() {
+        let s = Summary::from_samples(&[2.0]);
+        assert_eq!(s.median, 2.0);
+        assert_eq!(s.p5, 2.0);
+        assert_eq!(s.p95, 2.0);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration(0.5e-4), "50.0µs");
+        assert_eq!(fmt_duration(0.5), "500.00ms");
+        assert_eq!(fmt_duration(2.5), "2.50s");
+    }
+}

@@ -1,0 +1,125 @@
+//! Hand-rolled command-line argument parsing (clap is not vendored in this
+//! offline image). Supports the `navix <subcommand> [--flag value] [--switch]
+//! [positional…]` grammar used by the launcher.
+
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand, `--key value` options, bare `--switch`
+/// flags and positional arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    opts: BTreeMap<String, String>,
+    switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+/// Option names that take no value (everything else with `--` expects one).
+const SWITCHES: &[&str] = &["help", "verbose", "tune", "baseline", "xla", "quiet"];
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut it = argv.into_iter().peekable();
+        let mut args = Args::default();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                args.subcommand = it.next().unwrap();
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if SWITCHES.contains(&name) {
+                    args.switches.push(name.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| anyhow!("option --{name} expects a value"))?;
+                    args.opts.insert(name.to_string(), v);
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or(&self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name} {v}: not an integer")),
+        }
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name} {v}: not an integer")),
+        }
+    }
+
+    pub fn opt_f32(&self, name: &str, default: f32) -> Result<f32> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name} {v}: not a float")),
+        }
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_opts_and_positionals() {
+        let a = parse("train --env Navix-Empty-8x8-v0 --steps 1000 --verbose extra");
+        assert_eq!(a.subcommand, "train");
+        assert_eq!(a.opt("env"), Some("Navix-Empty-8x8-v0"));
+        assert_eq!(a.opt_usize("steps", 0).unwrap(), 1000);
+        assert!(a.switch("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("run --batch=64 --seed=3");
+        assert_eq!(a.opt_usize("batch", 0).unwrap(), 64);
+        assert_eq!(a.opt_u64("seed", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let r = Args::parse(vec!["run".into(), "--env".into()]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("info");
+        assert_eq!(a.opt_or("env", "Navix-Empty-8x8-v0"), "Navix-Empty-8x8-v0");
+        assert_eq!(a.opt_f32("lr", 3e-4).unwrap(), 3e-4);
+        assert!(!a.switch("verbose"));
+    }
+}

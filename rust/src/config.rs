@@ -1,0 +1,147 @@
+//! Minimal configuration-file parser (serde is not vendored offline).
+//!
+//! Supports the INI-like subset the launcher needs: `key = value` pairs,
+//! `[section]` headers, `#`/`;` comments, strings, ints, floats and bools.
+//! Used by `navix train --config <file>` to describe experiments the same
+//! way Rejax's YAML configs do for the paper's baselines (Table 9).
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+
+/// A parsed config: `section.key → value` (top-level keys use section "").
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split(['#', ';']).next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    return Err(anyhow!("line {}: unterminated section header", lineno + 1));
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected `key = value`", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let val = v.trim().trim_matches('"').to_string();
+            values.insert(key, val);
+        }
+        Ok(Config { values })
+    }
+
+    pub fn load(path: &str) -> Result<Config> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading config {path}"))?;
+        Config::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("config key {key}={v} not a usize")),
+        }
+    }
+
+    pub fn get_f32(&self, key: &str, default: f32) -> Result<f32> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("config key {key}={v} not a float")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("config key {key}={v} not a u64")),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => Err(anyhow!("config key {key}={v} not a bool")),
+        }
+    }
+
+    /// All keys under a section prefix.
+    pub fn section(&self, name: &str) -> impl Iterator<Item = (&str, &str)> {
+        let prefix = format!("{name}.");
+        self.values.iter().filter_map(move |(k, v)| {
+            k.strip_prefix(&prefix).map(|suffix| (suffix, v.as_str()))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+env = Navix-Empty-8x8-v0
+seeds = 5
+
+[ppo]
+lr = 2.5e-4
+num_envs = 16
+anneal = true   ; trailing comment
+name = "tuned"
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.get("env"), Some("Navix-Empty-8x8-v0"));
+        assert_eq!(c.get_usize("seeds", 0).unwrap(), 5);
+        assert!((c.get_f32("ppo.lr", 0.0).unwrap() - 2.5e-4).abs() < 1e-9);
+        assert_eq!(c.get_usize("ppo.num_envs", 0).unwrap(), 16);
+        assert!(c.get_bool("ppo.anneal", false).unwrap());
+        assert_eq!(c.get("ppo.name"), Some("tuned"));
+    }
+
+    #[test]
+    fn defaults_apply_for_missing_keys() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.get_usize("nope", 7).unwrap(), 7);
+        assert!(!c.get_bool("nope", false).unwrap());
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(Config::parse("just a line").is_err());
+        assert!(Config::parse("[unterminated").is_err());
+        assert!(Config::parse("k = x").unwrap().get_usize("k", 0).is_err());
+    }
+
+    #[test]
+    fn section_iteration() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let keys: Vec<&str> = c.section("ppo").map(|(k, _)| k).collect();
+        assert_eq!(keys, vec!["anneal", "lr", "name", "num_envs"]);
+    }
+}

@@ -1,0 +1,19 @@
+//! Training/benchmark orchestration — the Layer-3 coordination logic.
+//!
+//! * [`trainer`] — the flagship three-layer path: rollouts on the Rust SoA
+//!   engine, policy forward + fused PPO update executed as AOT-compiled
+//!   JAX/Pallas artifacts via PJRT ([`crate::runtime`]).
+//! * [`multi_agent`] — the paper's Fig. 6 workload: N independent PPO
+//!   agents, each with its own 16-env batch, trained in one process.
+//! * [`throughput`] — the Fig. 4/5/8 workloads: timed unrolls across
+//!   engines and batch sizes.
+//! * [`scoreboard`] — the paper's §4.3 scoreboard: persisted
+//!   per-env/per-algorithm results.
+
+pub mod multi_agent;
+pub mod scoreboard;
+pub mod throughput;
+pub mod trainer;
+
+pub use throughput::{unroll_walltime, Engine};
+pub use trainer::XlaPpo;

@@ -1,0 +1,144 @@
+//! The paper's §4.3 scoreboard: a persisted table of per-environment,
+//! per-algorithm results "that new algorithms can refer to, to avoid
+//! re-running baselines".
+//!
+//! Stored as TSV under `results/scoreboard.tsv` (no serde offline; the
+//! format is trivially greppable and diffable).
+
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One scoreboard entry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Entry {
+    pub env_id: String,
+    pub algo: String,
+    pub seeds: u32,
+    pub env_steps: u64,
+    pub final_return: f32,
+}
+
+/// The scoreboard: best final return per (env, algo).
+#[derive(Clone, Debug, Default)]
+pub struct Scoreboard {
+    entries: BTreeMap<(String, String), Entry>,
+    path: Option<PathBuf>,
+}
+
+impl Scoreboard {
+    pub fn new() -> Scoreboard {
+        Scoreboard::default()
+    }
+
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Scoreboard> {
+        let path = path.as_ref();
+        let mut sb = Scoreboard { entries: BTreeMap::new(), path: Some(path.to_path_buf()) };
+        if !path.exists() {
+            return Ok(sb);
+        }
+        let text = std::fs::read_to_string(path).context("reading scoreboard")?;
+        for (i, line) in text.lines().enumerate() {
+            if i == 0 || line.trim().is_empty() {
+                continue; // header
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            anyhow::ensure!(cols.len() == 5, "scoreboard line {}: bad column count", i + 1);
+            let e = Entry {
+                env_id: cols[0].to_string(),
+                algo: cols[1].to_string(),
+                seeds: cols[2].parse()?,
+                env_steps: cols[3].parse()?,
+                final_return: cols[4].parse()?,
+            };
+            sb.entries.insert((e.env_id.clone(), e.algo.clone()), e);
+        }
+        Ok(sb)
+    }
+
+    /// Record a result, keeping the better of old/new final returns.
+    pub fn record(&mut self, e: Entry) {
+        let key = (e.env_id.clone(), e.algo.clone());
+        match self.entries.get(&key) {
+            Some(old) if old.final_return >= e.final_return => {}
+            _ => {
+                self.entries.insert(key, e);
+            }
+        }
+    }
+
+    pub fn get(&self, env_id: &str, algo: &str) -> Option<&Entry> {
+        self.entries.get(&(env_id.to_string(), algo.to_string()))
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Entry> {
+        self.entries.values()
+    }
+
+    /// Persist as TSV.
+    pub fn save(&self) -> Result<()> {
+        let path = self
+            .path
+            .clone()
+            .unwrap_or_else(|| PathBuf::from("results/scoreboard.tsv"));
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut body = String::from("env_id\talgo\tseeds\tenv_steps\tfinal_return\n");
+        for e in self.entries.values() {
+            body.push_str(&format!(
+                "{}\t{}\t{}\t{}\t{:.4}\n",
+                e.env_id, e.algo, e.seeds, e.env_steps, e.final_return
+            ));
+        }
+        std::fs::write(&path, body).context("writing scoreboard")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(env: &str, algo: &str, ret: f32) -> Entry {
+        Entry {
+            env_id: env.into(),
+            algo: algo.into(),
+            seeds: 4,
+            env_steps: 100_000,
+            final_return: ret,
+        }
+    }
+
+    #[test]
+    fn record_keeps_best() {
+        let mut sb = Scoreboard::new();
+        sb.record(entry("Navix-Empty-8x8-v0", "ppo", 0.5));
+        sb.record(entry("Navix-Empty-8x8-v0", "ppo", 0.9));
+        sb.record(entry("Navix-Empty-8x8-v0", "ppo", 0.7));
+        assert_eq!(sb.get("Navix-Empty-8x8-v0", "ppo").unwrap().final_return, 0.9);
+        assert_eq!(sb.len(), 1);
+    }
+
+    #[test]
+    fn roundtrip_through_disk() {
+        let dir = std::env::temp_dir().join(format!("navix_sb_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("scoreboard.tsv");
+        let mut sb = Scoreboard::load(&path).unwrap();
+        sb.record(entry("Navix-Empty-8x8-v0", "ppo", 0.95));
+        sb.record(entry("Navix-DoorKey-5x5-v0", "dqn", 0.8));
+        sb.save().unwrap();
+        let sb2 = Scoreboard::load(&path).unwrap();
+        assert_eq!(sb2.len(), 2);
+        assert_eq!(sb2.get("Navix-DoorKey-5x5-v0", "dqn").unwrap().final_return, 0.8);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,246 @@
+//! XLA-fused PPO: the end-to-end three-layer path.
+//!
+//! Rollouts run on the Rust batched engine (L3). The actor-critic forward
+//! (`ppo_fwd_b{B}`) and the entire minibatch update — forward, backward and
+//! Adam, fused into one HLO module by `jax.grad` + XLA (`ppo_update_b{MB}`)
+//! — execute through PJRT. The policy network's dense layers are Pallas
+//! kernels (L1) lowered inside the same modules (see
+//! `python/compile/kernels/mlp.py`).
+//!
+//! Parameters live in a flat `f32` vector with the packing convention of
+//! [`crate::runtime::artifacts::packing`], shared bit-for-bit with the
+//! Python side; Adam state (m, v) round-trips through the artifact as two
+//! more flat vectors, so the Rust side owns *all* state and Python is never
+//! on the path.
+
+use crate::agents::gae;
+use crate::agents::ppo::{PpoConfig, Rollout};
+use crate::agents::{preprocess_obs, CurvePoint, ReturnTracker, TrainLog};
+use crate::batch::BatchedEnv;
+use crate::nn::{log_softmax, sample_categorical};
+use crate::rng::Rng;
+use crate::runtime::artifacts::{packing, ArtifactSet};
+use crate::runtime::client::{f32_literal, i32_literal, to_f32_scalar, to_f32_vec};
+use crate::runtime::{Executable, Runtime};
+use anyhow::{Context, Result};
+
+/// Update-step diagnostics mirrored from the artifact outputs.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct XlaPpoMetrics {
+    pub pg_loss: f32,
+    pub v_loss: f32,
+    pub entropy: f32,
+}
+
+/// PPO whose compute graph is the AOT JAX/Pallas artifact.
+pub struct XlaPpo {
+    pub cfg: PpoConfig,
+    pub params: Vec<f32>,
+    opt_m: Vec<f32>,
+    opt_v: Vec<f32>,
+    opt_t: i32,
+    fwd: Executable,
+    update: Executable,
+    mb_size: usize,
+    obs_dim: usize,
+    n_actions: usize,
+    rng: Rng,
+}
+
+impl XlaPpo {
+    /// Load artifacts for `num_envs` rollout batch and the minibatch size
+    /// implied by the config, and He-init the flat parameters.
+    pub fn new(cfg: PpoConfig, seed: u64) -> Result<XlaPpo> {
+        let set = ArtifactSet::discover()?;
+        let runtime = Runtime::cpu()?;
+        let fwd = runtime
+            .load_hlo(set.ppo_fwd(cfg.num_envs)?)
+            .context("loading ppo_fwd artifact")?;
+        let mb_size = cfg.num_envs * cfg.rollout_len / cfg.minibatches;
+        let update = runtime
+            .load_hlo(set.ppo_update(mb_size)?)
+            .context("loading ppo_update artifact")?;
+        let n = packing::total_params();
+        Ok(XlaPpo {
+            cfg,
+            params: packing::init_params(seed),
+            opt_m: vec![0.0; n],
+            opt_v: vec![0.0; n],
+            opt_t: 0,
+            fwd,
+            update,
+            mb_size,
+            obs_dim: packing::OBS_DIM,
+            n_actions: packing::N_ACTIONS,
+            rng: Rng::new(seed ^ 0x9E37),
+        })
+    }
+
+    /// Batched policy forward through the artifact: returns (logits, values).
+    pub fn forward(&self, obs: &[i32], b: usize) -> Result<(Vec<f32>, Vec<f32>)> {
+        let p = f32_literal(&self.params, &[self.params.len() as i64])?;
+        let o = i32_literal(obs, &[b as i64, self.obs_dim as i64])?;
+        let out = self.fwd.run(&[p, o])?;
+        anyhow::ensure!(out.len() == 2, "ppo_fwd must return (logits, values)");
+        Ok((to_f32_vec(&out[0])?, to_f32_vec(&out[1])?))
+    }
+
+    /// One fused minibatch update through the artifact.
+    pub fn update_minibatch(
+        &mut self,
+        obs: &[i32],
+        actions: &[i32],
+        old_logp: &[f32],
+        adv: &[f32],
+        targets: &[f32],
+    ) -> Result<XlaPpoMetrics> {
+        let mb = self.mb_size as i64;
+        self.opt_t += 1;
+        let inputs = [
+            f32_literal(&self.params, &[self.params.len() as i64])?,
+            f32_literal(&self.opt_m, &[self.opt_m.len() as i64])?,
+            f32_literal(&self.opt_v, &[self.opt_v.len() as i64])?,
+            xla::Literal::scalar(self.opt_t),
+            i32_literal(obs, &[mb, self.obs_dim as i64])?,
+            i32_literal(actions, &[mb])?,
+            f32_literal(old_logp, &[mb])?,
+            f32_literal(adv, &[mb])?,
+            f32_literal(targets, &[mb])?,
+        ];
+        let out = self.update.run(&inputs)?;
+        anyhow::ensure!(out.len() == 6, "ppo_update must return 6 outputs, got {}", out.len());
+        self.params = to_f32_vec(&out[0])?;
+        self.opt_m = to_f32_vec(&out[1])?;
+        self.opt_v = to_f32_vec(&out[2])?;
+        Ok(XlaPpoMetrics {
+            pg_loss: to_f32_scalar(&out[3])?,
+            v_loss: to_f32_scalar(&out[4])?,
+            entropy: to_f32_scalar(&out[5])?,
+        })
+    }
+
+    /// Collect a rollout on the Rust engine, acting through the artifact.
+    fn collect_rollout(
+        &mut self,
+        env: &mut BatchedEnv,
+        ro: &mut Rollout,
+        raw_obs: &mut [i32],
+        tracker: &mut ReturnTracker,
+    ) -> Result<()> {
+        let (t_len, b) = (self.cfg.rollout_len, env.b);
+        let d = self.obs_dim;
+        let mut obs_buf = vec![0i32; b * d];
+        let mut actions = vec![0u8; b];
+        let mut x = vec![0.0f32; d];
+        for t in 0..t_len {
+            for i in 0..b {
+                obs_buf[i * d..(i + 1) * d].copy_from_slice(env.obs.env_i32(b, i));
+            }
+            let (logits, values) = self.forward(&obs_buf, b)?;
+            for i in 0..b {
+                let lslice = &logits[i * self.n_actions..(i + 1) * self.n_actions];
+                let a = sample_categorical(lslice, &mut self.rng);
+                let mut lp = vec![0.0; self.n_actions];
+                log_softmax(lslice, &mut lp);
+                let idx = t * b + i;
+                raw_obs[idx * d..(idx + 1) * d].copy_from_slice(&obs_buf[i * d..(i + 1) * d]);
+                preprocess_obs(&obs_buf[i * d..(i + 1) * d], &mut x);
+                ro.obs[idx * d..(idx + 1) * d].copy_from_slice(&x);
+                ro.actions[idx] = a as u8;
+                ro.logp[idx] = lp[a];
+                ro.values[idx] = values[i];
+                actions[i] = a as u8;
+            }
+            env.step(&actions);
+            for i in 0..b {
+                let idx = t * b + i;
+                ro.rewards[idx] = env.timestep.reward[i];
+                ro.discounts[idx] = env.timestep.discount[i];
+                let last = env.timestep.step_type[i].is_last();
+                ro.boundaries[idx] = last;
+                if last {
+                    tracker.push(env.timestep.episodic_return[i]);
+                }
+            }
+        }
+        for i in 0..b {
+            obs_buf[i * d..(i + 1) * d].copy_from_slice(env.obs.env_i32(b, i));
+        }
+        let (_, values) = self.forward(&obs_buf, b)?;
+        ro.last_values.copy_from_slice(&values);
+        gae::gae(
+            &ro.rewards,
+            &ro.values,
+            &ro.last_values,
+            &ro.discounts,
+            &ro.boundaries,
+            self.cfg.gamma,
+            self.cfg.gae_lambda,
+            &mut ro.advantages,
+            &mut ro.targets,
+        );
+        if self.cfg.normalize_advantage {
+            gae::normalize(&mut ro.advantages);
+        }
+        Ok(())
+    }
+
+    /// Full training run. Mirrors [`crate::agents::ppo::Ppo::train`] with
+    /// the compute swapped for the artifacts.
+    pub fn train(&mut self, env: &mut BatchedEnv, total_steps: u64) -> Result<TrainLog> {
+        anyhow::ensure!(
+            env.b == self.cfg.num_envs,
+            "env batch {} != artifact batch {}",
+            env.b,
+            self.cfg.num_envs
+        );
+        let mut log = TrainLog::default();
+        let mut tracker = ReturnTracker::new(64);
+        let (t_len, b, d) = (self.cfg.rollout_len, env.b, self.obs_dim);
+        let steps_per_iter = (t_len * b) as u64;
+        let iters = total_steps.div_ceil(steps_per_iter);
+        let mut ro = Rollout::new(t_len, b, d);
+        let mut raw_obs = vec![0i32; t_len * b * d];
+
+        let n = t_len * b;
+        let mut order: Vec<usize> = (0..n).collect();
+        let mut mb_obs = vec![0i32; self.mb_size * d];
+        let mut mb_actions = vec![0i32; self.mb_size];
+        let mut mb_logp = vec![0.0f32; self.mb_size];
+        let mut mb_adv = vec![0.0f32; self.mb_size];
+        let mut mb_tgt = vec![0.0f32; self.mb_size];
+
+        for it in 0..iters {
+            self.collect_rollout(env, &mut ro, &mut raw_obs, &mut tracker)?;
+            let mut metrics = XlaPpoMetrics::default();
+            let mut updates = 0.0f32;
+            for _ in 0..self.cfg.epochs {
+                self.rng.shuffle(&mut order);
+                for mb in order.chunks_exact(self.mb_size) {
+                    for (k, &idx) in mb.iter().enumerate() {
+                        mb_obs[k * d..(k + 1) * d]
+                            .copy_from_slice(&raw_obs[idx * d..(idx + 1) * d]);
+                        mb_actions[k] = ro.actions[idx] as i32;
+                        mb_logp[k] = ro.logp[idx];
+                        mb_adv[k] = ro.advantages[idx];
+                        mb_tgt[k] = ro.targets[idx];
+                    }
+                    let m = self.update_minibatch(
+                        &mb_obs, &mb_actions, &mb_logp, &mb_adv, &mb_tgt,
+                    )?;
+                    metrics.pg_loss += m.pg_loss;
+                    metrics.v_loss += m.v_loss;
+                    metrics.entropy += m.entropy;
+                    updates += 1.0;
+                }
+            }
+            log.curve.push(CurvePoint {
+                env_steps: (it + 1) * steps_per_iter,
+                mean_return: tracker.mean(),
+                loss: (metrics.pg_loss + metrics.v_loss) / updates.max(1.0),
+            });
+        }
+        log.episodes = tracker.episodes;
+        Ok(log)
+    }
+}

@@ -1,0 +1,76 @@
+//! The MiniGrid action space (7 discrete actions), shared by every NAVIX
+//! environment.
+
+/// MiniGrid's canonical action set, in index order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Action {
+    /// Rotate counter-clockwise.
+    Left = 0,
+    /// Rotate clockwise.
+    Right = 1,
+    /// Move one cell forward if the target cell is walkable.
+    Forward = 2,
+    /// Pick up the pickable entity in the cell the agent is facing.
+    Pickup = 3,
+    /// Drop the held entity into the cell the agent is facing.
+    Drop = 4,
+    /// Toggle the entity ahead: open/close doors, unlock with a matching key.
+    Toggle = 5,
+    /// Declare task completion (used by GoToDoor-style missions).
+    Done = 6,
+}
+
+impl Action {
+    pub const N: usize = 7;
+
+    pub const ALL: [Action; 7] = [
+        Action::Left,
+        Action::Right,
+        Action::Forward,
+        Action::Pickup,
+        Action::Drop,
+        Action::Toggle,
+        Action::Done,
+    ];
+
+    #[inline]
+    pub fn from_u8(a: u8) -> Action {
+        Action::ALL[(a as usize) % Action::N]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Action::Left => "left",
+            Action::Right => "right",
+            Action::Forward => "forward",
+            Action::Pickup => "pickup",
+            Action::Drop => "drop",
+            Action::Toggle => "toggle",
+            Action::Done => "done",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indices_match_minigrid() {
+        assert_eq!(Action::Left as u8, 0);
+        assert_eq!(Action::Right as u8, 1);
+        assert_eq!(Action::Forward as u8, 2);
+        assert_eq!(Action::Pickup as u8, 3);
+        assert_eq!(Action::Drop as u8, 4);
+        assert_eq!(Action::Toggle as u8, 5);
+        assert_eq!(Action::Done as u8, 6);
+    }
+
+    #[test]
+    fn from_u8_roundtrip() {
+        for a in Action::ALL {
+            assert_eq!(Action::from_u8(a as u8), a);
+        }
+    }
+}

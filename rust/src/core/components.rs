@@ -1,0 +1,206 @@
+//! ECSM components (paper Table 1).
+//!
+//! Components are *properties* injected into entities: `Positionable`
+//! (Position), `Directional` (Direction), `HasColour` (Colour), `Stochastic`
+//! (Probability), `Openable` (State), `Pickable` (Id), `HasTag` (Tag),
+//! `HasSprite` (Sprite) and `Holder` (Pocket). In this batched engine each
+//! component value is stored as one element of a flat struct-of-arrays in
+//! [`crate::core::state::BatchedState`]; the enums here define the value
+//! vocabulary and its integer encoding, chosen to match MiniGrid's
+//! `OBJECT_TO_IDX` / `COLOR_TO_IDX` / `STATE_TO_IDX` so that symbolic
+//! observations are byte-compatible with the original suite.
+
+/// Agent/entity facing. MiniGrid convention: 0=east(right), 1=south(down),
+/// 2=west(left), 3=north(up).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(i32)]
+pub enum Direction {
+    East = 0,
+    South = 1,
+    West = 2,
+    North = 3,
+}
+
+impl Direction {
+    #[inline]
+    pub fn from_i32(d: i32) -> Direction {
+        match d.rem_euclid(4) {
+            0 => Direction::East,
+            1 => Direction::South,
+            2 => Direction::West,
+            _ => Direction::North,
+        }
+    }
+
+    /// (dr, dc) unit vector.
+    #[inline]
+    pub fn vec(self) -> (i32, i32) {
+        match self {
+            Direction::East => (0, 1),
+            Direction::South => (1, 0),
+            Direction::West => (0, -1),
+            Direction::North => (-1, 0),
+        }
+    }
+
+    /// Rotate left (counter-clockwise), the MiniGrid `left` action.
+    #[inline]
+    pub fn left(self) -> Direction {
+        Direction::from_i32(self as i32 + 3)
+    }
+
+    /// Rotate right (clockwise), the MiniGrid `right` action.
+    #[inline]
+    pub fn right(self) -> Direction {
+        Direction::from_i32(self as i32 + 1)
+    }
+
+    /// The direction 90° clockwise from `self` (used for first-person frames).
+    #[inline]
+    pub fn rightward(self) -> Direction {
+        self.right()
+    }
+
+    pub const ALL: [Direction; 4] =
+        [Direction::East, Direction::South, Direction::West, Direction::North];
+}
+
+/// Entity colour (MiniGrid `COLOR_TO_IDX`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Color {
+    Red = 0,
+    Green = 1,
+    Blue = 2,
+    Purple = 3,
+    Yellow = 4,
+    Grey = 5,
+}
+
+impl Color {
+    pub const ALL: [Color; 6] =
+        [Color::Red, Color::Green, Color::Blue, Color::Purple, Color::Yellow, Color::Grey];
+
+    #[inline]
+    pub fn from_u8(c: u8) -> Color {
+        Color::ALL[(c as usize) % 6]
+    }
+
+    /// RGB value used by the sprite renderer (MiniGrid palette).
+    pub fn rgb(self) -> [u8; 3] {
+        match self {
+            Color::Red => [255, 0, 0],
+            Color::Green => [0, 255, 0],
+            Color::Blue => [0, 0, 255],
+            Color::Purple => [112, 39, 195],
+            Color::Yellow => [255, 255, 0],
+            Color::Grey => [100, 100, 100],
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Color::Red => "red",
+            Color::Green => "green",
+            Color::Blue => "blue",
+            Color::Purple => "purple",
+            Color::Yellow => "yellow",
+            Color::Grey => "grey",
+        }
+    }
+}
+
+/// Openable-component state for doors (MiniGrid `STATE_TO_IDX`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum DoorState {
+    Open = 0,
+    Closed = 1,
+    Locked = 2,
+}
+
+impl DoorState {
+    #[inline]
+    pub fn from_u8(s: u8) -> DoorState {
+        match s {
+            0 => DoorState::Open,
+            1 => DoorState::Closed,
+            _ => DoorState::Locked,
+        }
+    }
+}
+
+/// What the `Holder` component's Pocket can contain. Encoded in the batched
+/// state as an `i32`: −1 = empty, otherwise `kind_tag << 8 | colour`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Pocket(pub i32);
+
+impl Pocket {
+    pub const EMPTY: Pocket = Pocket(-1);
+
+    #[inline]
+    pub fn holding(kind_tag: i32, color: Color) -> Pocket {
+        Pocket((kind_tag << 8) | color as i32)
+    }
+
+    #[inline]
+    pub fn is_empty(self) -> bool {
+        self.0 < 0
+    }
+
+    #[inline]
+    pub fn kind_tag(self) -> i32 {
+        self.0 >> 8
+    }
+
+    #[inline]
+    pub fn color(self) -> Color {
+        Color::from_u8((self.0 & 0xFF) as u8)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn direction_rotations_compose() {
+        for d in Direction::ALL {
+            assert_eq!(d.left().right(), d);
+            assert_eq!(d.right().right().right().right(), d);
+        }
+        assert_eq!(Direction::East.right(), Direction::South);
+        assert_eq!(Direction::East.left(), Direction::North);
+    }
+
+    #[test]
+    fn direction_vectors_are_units() {
+        for d in Direction::ALL {
+            let (dr, dc) = d.vec();
+            assert_eq!(dr.abs() + dc.abs(), 1);
+        }
+    }
+
+    #[test]
+    fn color_roundtrip() {
+        for c in Color::ALL {
+            assert_eq!(Color::from_u8(c as u8), c);
+        }
+    }
+
+    #[test]
+    fn door_state_roundtrip() {
+        for s in [DoorState::Open, DoorState::Closed, DoorState::Locked] {
+            assert_eq!(DoorState::from_u8(s as u8), s);
+        }
+    }
+
+    #[test]
+    fn pocket_encoding() {
+        let p = Pocket::holding(5, Color::Yellow);
+        assert!(!p.is_empty());
+        assert_eq!(p.kind_tag(), 5);
+        assert_eq!(p.color(), Color::Yellow);
+        assert!(Pocket::EMPTY.is_empty());
+    }
+}

@@ -1,0 +1,187 @@
+//! ECSM entities (paper Table 2) and the cell-type vocabulary.
+//!
+//! Integer tags follow MiniGrid's `OBJECT_TO_IDX` exactly so that symbolic
+//! observations are drop-in compatible:
+//! `unseen=0, empty=1, wall=2, floor=3, door=4, key=5, ball=6, box=7, goal=8,
+//! lava=9, agent=10`.
+
+/// Static cell content of the *base grid* (things that never move during an
+/// episode). Dynamic entities (player, doors, keys, balls, boxes) live in the
+/// entity tables of [`crate::core::state::BatchedState`] and are overlaid at
+/// observation/collision time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum CellType {
+    Floor = 0,
+    Wall = 1,
+    Goal = 2,
+    Lava = 3,
+}
+
+impl CellType {
+    #[inline]
+    pub fn from_u8(x: u8) -> CellType {
+        match x {
+            0 => CellType::Floor,
+            1 => CellType::Wall,
+            2 => CellType::Goal,
+            _ => CellType::Lava,
+        }
+    }
+
+    /// Can the agent stand on this base cell (ignoring dynamic entities)?
+    #[inline]
+    pub fn walkable(self) -> bool {
+        !matches!(self, CellType::Wall)
+    }
+
+    /// Does this base cell block line of sight?
+    #[inline]
+    pub fn transparent(self) -> bool {
+        !matches!(self, CellType::Wall)
+    }
+
+    /// MiniGrid symbolic object index of the base cell.
+    #[inline]
+    pub fn tag(self) -> i32 {
+        match self {
+            CellType::Floor => Tag::EMPTY,
+            CellType::Wall => Tag::WALL,
+            CellType::Goal => Tag::GOAL,
+            CellType::Lava => Tag::LAVA,
+        }
+    }
+}
+
+/// MiniGrid symbolic object indices.
+pub struct Tag;
+
+impl Tag {
+    pub const UNSEEN: i32 = 0;
+    pub const EMPTY: i32 = 1;
+    pub const WALL: i32 = 2;
+    pub const FLOOR: i32 = 3;
+    pub const DOOR: i32 = 4;
+    pub const KEY: i32 = 5;
+    pub const BALL: i32 = 6;
+    pub const BOX: i32 = 7;
+    pub const GOAL: i32 = 8;
+    pub const LAVA: i32 = 9;
+    pub const AGENT: i32 = 10;
+}
+
+/// The entity kinds of paper Table 2. Used for inventory printing
+/// (`navix info`), pocket encoding and pickup rules.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EntityKind {
+    Wall,
+    Player,
+    Goal,
+    Key,
+    Door,
+    Lava,
+    Ball,
+    Box,
+}
+
+impl EntityKind {
+    pub fn tag(self) -> i32 {
+        match self {
+            EntityKind::Wall => Tag::WALL,
+            EntityKind::Player => Tag::AGENT,
+            EntityKind::Goal => Tag::GOAL,
+            EntityKind::Key => Tag::KEY,
+            EntityKind::Door => Tag::DOOR,
+            EntityKind::Lava => Tag::LAVA,
+            EntityKind::Ball => Tag::BALL,
+            EntityKind::Box => Tag::BOX,
+        }
+    }
+
+    /// Can the agent pick this entity up (the `Pickable` component)?
+    pub fn pickable(self) -> bool {
+        matches!(self, EntityKind::Key | EntityKind::Ball | EntityKind::Box)
+    }
+
+    /// Components composing this entity, for the live Table-2 inventory.
+    pub fn components(self) -> &'static [&'static str] {
+        match self {
+            EntityKind::Wall => &["Positionable", "HasTag", "HasSprite", "HasColour"],
+            EntityKind::Player => {
+                &["Positionable", "HasTag", "HasSprite", "Directional", "Holder"]
+            }
+            EntityKind::Goal => {
+                &["Positionable", "HasTag", "HasSprite", "HasColour", "Stochastic"]
+            }
+            EntityKind::Key => &["Positionable", "HasTag", "HasSprite", "Pickable", "HasColour"],
+            EntityKind::Door => &["Positionable", "HasTag", "HasSprite", "Openable", "HasColour"],
+            EntityKind::Lava => &["Positionable", "HasTag", "HasSprite"],
+            EntityKind::Ball => {
+                &["Positionable", "HasTag", "HasSprite", "HasColour", "Stochastic"]
+            }
+            EntityKind::Box => &["Positionable", "HasTag", "HasSprite", "HasColour", "Holder"],
+        }
+    }
+
+    pub const ALL: [EntityKind; 8] = [
+        EntityKind::Wall,
+        EntityKind::Player,
+        EntityKind::Goal,
+        EntityKind::Key,
+        EntityKind::Door,
+        EntityKind::Lava,
+        EntityKind::Ball,
+        EntityKind::Box,
+    ];
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tags_match_minigrid_object_to_idx() {
+        assert_eq!(Tag::UNSEEN, 0);
+        assert_eq!(Tag::WALL, 2);
+        assert_eq!(Tag::DOOR, 4);
+        assert_eq!(Tag::KEY, 5);
+        assert_eq!(Tag::BALL, 6);
+        assert_eq!(Tag::GOAL, 8);
+        assert_eq!(Tag::LAVA, 9);
+        assert_eq!(Tag::AGENT, 10);
+    }
+
+    #[test]
+    fn walls_block_walk_and_sight() {
+        assert!(!CellType::Wall.walkable());
+        assert!(!CellType::Wall.transparent());
+        assert!(CellType::Goal.walkable());
+        assert!(CellType::Lava.walkable()); // walking into lava is how you die
+    }
+
+    #[test]
+    fn pickable_entities() {
+        assert!(EntityKind::Key.pickable());
+        assert!(EntityKind::Ball.pickable());
+        assert!(EntityKind::Box.pickable());
+        assert!(!EntityKind::Door.pickable());
+        assert!(!EntityKind::Goal.pickable());
+    }
+
+    #[test]
+    fn all_entities_have_position_tag_sprite() {
+        for e in EntityKind::ALL {
+            let cs = e.components();
+            assert!(cs.contains(&"Positionable"));
+            assert!(cs.contains(&"HasTag"));
+            assert!(cs.contains(&"HasSprite"));
+        }
+    }
+
+    #[test]
+    fn celltype_roundtrip() {
+        for t in [CellType::Floor, CellType::Wall, CellType::Goal, CellType::Lava] {
+            assert_eq!(CellType::from_u8(t as u8), t);
+        }
+    }
+}

@@ -1,0 +1,66 @@
+//! Events (paper Appendix A): entities signalling that a particular state of
+//! the environment has been reached. Rewards and terminations are defined
+//! over events, which keeps both systems Markovian and composable.
+//!
+//! In the batched state each event is a per-env latch set by the
+//! intervention/transition systems during the step and consumed by the
+//! reward/termination systems at the end of it.
+
+/// Per-env event latches for one step.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Events {
+    /// Player and a Goal entity share a position.
+    pub goal_reached: bool,
+    /// Player and a Lava entity share a position.
+    pub lava_fall: bool,
+    /// Player collided with a Ball (walked into it, or it moved onto the
+    /// player) — the Dynamic-Obstacles failure event.
+    pub ball_hit: bool,
+    /// Player picked up the mission-target Ball (KeyCorridor success).
+    pub ball_picked: bool,
+    /// Player performed `done` facing a door of the mission colour
+    /// (GoToDoor success).
+    pub door_done: bool,
+}
+
+impl Events {
+    pub const NONE: Events = Events {
+        goal_reached: false,
+        lava_fall: false,
+        ball_hit: false,
+        ball_picked: false,
+        door_done: false,
+    };
+
+    /// Any terminal-success/failure event fired this step?
+    #[inline]
+    pub fn any(self) -> bool {
+        self.goal_reached || self.lava_fall || self.ball_hit || self.ball_picked || self.door_done
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_none() {
+        assert_eq!(Events::default(), Events::NONE);
+        assert!(!Events::NONE.any());
+    }
+
+    #[test]
+    fn any_detects_each_latch() {
+        for i in 0..5 {
+            let mut e = Events::NONE;
+            match i {
+                0 => e.goal_reached = true,
+                1 => e.lava_fall = true,
+                2 => e.ball_hit = true,
+                3 => e.ball_picked = true,
+                _ => e.door_done = true,
+            }
+            assert!(e.any());
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! Grid geometry: coordinates, direction algebra, cell indexing.
+//!
+//! Positions are encoded as a single `i32` cell index `r * W + c` (−1 means
+//! "absent"/"picked up"), which keeps the batched component arrays flat and
+//! branch-light — the same trick the JAX implementation uses to keep shapes
+//! static.
+
+use super::components::Direction;
+
+/// A (row, col) coordinate pair. Row 0 is the top of the grid.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Pos {
+    pub r: i32,
+    pub c: i32,
+}
+
+impl Pos {
+    #[inline]
+    pub const fn new(r: i32, c: i32) -> Self {
+        Pos { r, c }
+    }
+
+    /// Encode to a flat cell index for a grid of width `w`; −1 if absent.
+    #[inline]
+    pub fn encode(self, w: usize) -> i32 {
+        if self.r < 0 || self.c < 0 {
+            -1
+        } else {
+            self.r * w as i32 + self.c
+        }
+    }
+
+    /// Decode from a flat cell index.
+    #[inline]
+    pub fn decode(idx: i32, w: usize) -> Self {
+        if idx < 0 {
+            Pos { r: -1, c: -1 }
+        } else {
+            Pos { r: idx / w as i32, c: idx % w as i32 }
+        }
+    }
+
+    /// Translate one step along `dir`.
+    #[inline]
+    pub fn step(self, dir: Direction) -> Pos {
+        let (dr, dc) = dir.vec();
+        Pos { r: self.r + dr, c: self.c + dc }
+    }
+
+    /// Translate `n` steps along `dir`.
+    #[inline]
+    pub fn step_n(self, dir: Direction, n: i32) -> Pos {
+        let (dr, dc) = dir.vec();
+        Pos { r: self.r + dr * n, c: self.c + dc * n }
+    }
+
+    #[inline]
+    pub fn in_bounds(self, h: usize, w: usize) -> bool {
+        self.r >= 0 && self.c >= 0 && (self.r as usize) < h && (self.c as usize) < w
+    }
+
+    /// Manhattan distance.
+    #[inline]
+    pub fn l1(self, other: Pos) -> i32 {
+        (self.r - other.r).abs() + (self.c - other.c).abs()
+    }
+}
+
+/// Immutable grid dimensions helper shared by systems.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GridDims {
+    pub h: usize,
+    pub w: usize,
+}
+
+impl GridDims {
+    #[inline]
+    pub fn new(h: usize, w: usize) -> Self {
+        GridDims { h, w }
+    }
+
+    #[inline]
+    pub fn cells(self) -> usize {
+        self.h * self.w
+    }
+
+    #[inline]
+    pub fn idx(self, r: usize, c: usize) -> usize {
+        debug_assert!(r < self.h && c < self.w);
+        r * self.w + c
+    }
+
+    #[inline]
+    pub fn contains(self, p: Pos) -> bool {
+        p.in_bounds(self.h, self.w)
+    }
+
+    /// Iterator over interior cells (excluding the outer wall ring).
+    pub fn interior(self) -> impl Iterator<Item = Pos> {
+        let (h, w) = (self.h as i32, self.w as i32);
+        (1..h - 1).flat_map(move |r| (1..w - 1).map(move |c| Pos::new(r, c)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let w = 8;
+        for r in 0..8 {
+            for c in 0..8 {
+                let p = Pos::new(r, c);
+                assert_eq!(Pos::decode(p.encode(w), w), p);
+            }
+        }
+        assert_eq!(Pos::new(-1, -1).encode(w), -1);
+        assert_eq!(Pos::decode(-1, w), Pos::new(-1, -1));
+    }
+
+    #[test]
+    fn step_follows_direction_vectors() {
+        let p = Pos::new(3, 3);
+        assert_eq!(p.step(Direction::East), Pos::new(3, 4));
+        assert_eq!(p.step(Direction::South), Pos::new(4, 3));
+        assert_eq!(p.step(Direction::West), Pos::new(3, 2));
+        assert_eq!(p.step(Direction::North), Pos::new(2, 3));
+        assert_eq!(p.step_n(Direction::East, 3), Pos::new(3, 6));
+    }
+
+    #[test]
+    fn bounds() {
+        assert!(Pos::new(0, 0).in_bounds(5, 5));
+        assert!(Pos::new(4, 4).in_bounds(5, 5));
+        assert!(!Pos::new(5, 0).in_bounds(5, 5));
+        assert!(!Pos::new(0, -1).in_bounds(5, 5));
+    }
+
+    #[test]
+    fn interior_excludes_border() {
+        let d = GridDims::new(5, 5);
+        let cells: Vec<Pos> = d.interior().collect();
+        assert_eq!(cells.len(), 9);
+        assert!(cells.iter().all(|p| p.r >= 1 && p.r <= 3 && p.c >= 1 && p.c <= 3));
+    }
+
+    #[test]
+    fn l1_distance() {
+        assert_eq!(Pos::new(0, 0).l1(Pos::new(3, 4)), 7);
+    }
+}

@@ -1,0 +1,26 @@
+//! Core data model of the NAVIX Entity-Component-System engine.
+//!
+//! The paper (§3.1, Tables 1–3) structures the environment as *entities*
+//! (Player, Wall, Goal, Key, Door, Lava, Ball, Box) composed of *components*
+//! (Position, Direction, Colour, …), processed by *systems* (intervention,
+//! transition, observation, reward, termination — see [`crate::systems`]).
+//!
+//! This module defines the grid substrate, the component/entity vocabulary,
+//! the struct-of-arrays batched state (the `vmap` analog: every component is
+//! a flat array over the batch, entity capacities are static per environment
+//! configuration — exactly the static-shape constraint that makes the
+//! original NAVIX jittable), and the paper's `Timestep` interface.
+
+pub mod actions;
+pub mod components;
+pub mod entities;
+pub mod events;
+pub mod grid;
+pub mod state;
+pub mod timestep;
+
+pub use actions::Action;
+pub use components::{Color, DoorState, Direction};
+pub use entities::{CellType, EntityKind};
+pub use state::{BatchedState, EnvSlot, SlotMut};
+pub use timestep::{StepType, Timestep};

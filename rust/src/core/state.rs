@@ -1,0 +1,649 @@
+//! The batched environment state: a struct-of-arrays over the batch axis.
+//!
+//! This is the Rust analog of NAVIX's vmapped PyTree state. Every ECSM
+//! component (paper Table 1) is a flat array with one element (or one
+//! fixed-capacity block) per environment, so the batched stepper touches
+//! contiguous memory and entity capacities are *static per configuration* —
+//! the same static-shape constraint `jax.vmap`/`jit` imposes on the original
+//! implementation.
+//!
+//! Dynamic entities (doors, keys, balls, boxes) use fixed capacities with
+//! position −1 meaning "absent" (mirroring NAVIX's padded entity arrays).
+
+use super::components::{Color, Direction, DoorState, Pocket};
+use super::entities::CellType;
+use super::events::Events;
+use super::grid::{GridDims, Pos};
+use crate::rng::Rng;
+
+/// Static entity capacities for one environment configuration.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Caps {
+    pub doors: usize,
+    pub keys: usize,
+    pub balls: usize,
+    pub boxes: usize,
+}
+
+/// Struct-of-arrays state for `b` parallel environments of size `h × w`.
+#[derive(Clone, Debug)]
+pub struct BatchedState {
+    pub b: usize,
+    pub h: usize,
+    pub w: usize,
+    pub caps: Caps,
+
+    // Base grid (static per episode): cell types + colours, b*h*w each.
+    pub base: Vec<u8>,
+    pub base_color: Vec<u8>,
+
+    // Player (Positionable + Directional + Holder), one per env.
+    pub player_pos: Vec<i32>,
+    pub player_dir: Vec<i32>,
+    pub pocket: Vec<i32>,
+
+    // Doors (Positionable + Openable + HasColour), b*caps.doors each.
+    pub door_pos: Vec<i32>,
+    pub door_color: Vec<u8>,
+    pub door_state: Vec<u8>,
+
+    // Keys (Positionable + Pickable + HasColour), b*caps.keys each.
+    pub key_pos: Vec<i32>,
+    pub key_color: Vec<u8>,
+
+    // Balls (Positionable + HasColour + Stochastic), b*caps.balls each.
+    pub ball_pos: Vec<i32>,
+    pub ball_color: Vec<u8>,
+
+    // Boxes (Positionable + HasColour), b*caps.boxes each.
+    pub box_pos: Vec<i32>,
+    pub box_color: Vec<u8>,
+
+    // Episode bookkeeping, one per env.
+    pub t: Vec<u32>,
+    pub mission: Vec<i32>,
+    pub rng: Vec<u64>,
+    pub events: Vec<Events>,
+    pub last_action: Vec<i32>,
+}
+
+impl BatchedState {
+    /// Allocate a zeroed batched state.
+    pub fn new(b: usize, h: usize, w: usize, caps: Caps) -> Self {
+        let hw = h * w;
+        BatchedState {
+            b,
+            h,
+            w,
+            caps,
+            base: vec![CellType::Wall as u8; b * hw],
+            base_color: vec![Color::Grey as u8; b * hw],
+            player_pos: vec![-1; b],
+            player_dir: vec![0; b],
+            pocket: vec![-1; b],
+            door_pos: vec![-1; b * caps.doors],
+            door_color: vec![0; b * caps.doors],
+            door_state: vec![DoorState::Closed as u8; b * caps.doors],
+            key_pos: vec![-1; b * caps.keys],
+            key_color: vec![0; b * caps.keys],
+            ball_pos: vec![-1; b * caps.balls],
+            ball_color: vec![0; b * caps.balls],
+            box_pos: vec![-1; b * caps.boxes],
+            box_color: vec![0; b * caps.boxes],
+            t: vec![0; b],
+            mission: vec![-1; b],
+            rng: vec![0; b],
+            events: vec![Events::NONE; b],
+            last_action: vec![-1; b],
+        }
+    }
+
+    #[inline]
+    pub fn dims(&self) -> GridDims {
+        GridDims::new(self.h, self.w)
+    }
+
+    /// Mutable per-env view (disjoint field borrows; one env at a time).
+    #[inline]
+    pub fn slot_mut(&mut self, i: usize) -> SlotMut<'_> {
+        let hw = self.h * self.w;
+        let c = self.caps;
+        SlotMut {
+            h: self.h,
+            w: self.w,
+            caps: c,
+            base: &mut self.base[i * hw..(i + 1) * hw],
+            base_color: &mut self.base_color[i * hw..(i + 1) * hw],
+            player_pos: &mut self.player_pos[i],
+            player_dir: &mut self.player_dir[i],
+            pocket: &mut self.pocket[i],
+            door_pos: &mut self.door_pos[i * c.doors..(i + 1) * c.doors],
+            door_color: &mut self.door_color[i * c.doors..(i + 1) * c.doors],
+            door_state: &mut self.door_state[i * c.doors..(i + 1) * c.doors],
+            key_pos: &mut self.key_pos[i * c.keys..(i + 1) * c.keys],
+            key_color: &mut self.key_color[i * c.keys..(i + 1) * c.keys],
+            ball_pos: &mut self.ball_pos[i * c.balls..(i + 1) * c.balls],
+            ball_color: &mut self.ball_color[i * c.balls..(i + 1) * c.balls],
+            box_pos: &mut self.box_pos[i * c.boxes..(i + 1) * c.boxes],
+            box_color: &mut self.box_color[i * c.boxes..(i + 1) * c.boxes],
+            t: &mut self.t[i],
+            mission: &mut self.mission[i],
+            rng: &mut self.rng[i],
+            events: &mut self.events[i],
+            last_action: &mut self.last_action[i],
+        }
+    }
+
+    /// Immutable per-env view.
+    #[inline]
+    pub fn slot(&self, i: usize) -> EnvSlot<'_> {
+        let hw = self.h * self.w;
+        let c = self.caps;
+        EnvSlot {
+            h: self.h,
+            w: self.w,
+            caps: c,
+            base: &self.base[i * hw..(i + 1) * hw],
+            base_color: &self.base_color[i * hw..(i + 1) * hw],
+            player_pos: self.player_pos[i],
+            player_dir: self.player_dir[i],
+            pocket: self.pocket[i],
+            door_pos: &self.door_pos[i * c.doors..(i + 1) * c.doors],
+            door_color: &self.door_color[i * c.doors..(i + 1) * c.doors],
+            door_state: &self.door_state[i * c.doors..(i + 1) * c.doors],
+            key_pos: &self.key_pos[i * c.keys..(i + 1) * c.keys],
+            key_color: &self.key_color[i * c.keys..(i + 1) * c.keys],
+            ball_pos: &self.ball_pos[i * c.balls..(i + 1) * c.balls],
+            ball_color: &self.ball_color[i * c.balls..(i + 1) * c.balls],
+            box_pos: &self.box_pos[i * c.boxes..(i + 1) * c.boxes],
+            box_color: &self.box_color[i * c.boxes..(i + 1) * c.boxes],
+            t: self.t[i],
+            mission: self.mission[i],
+            events: self.events[i],
+            last_action: self.last_action[i],
+        }
+    }
+}
+
+/// Immutable view over one environment's state.
+#[derive(Clone, Copy)]
+pub struct EnvSlot<'a> {
+    pub h: usize,
+    pub w: usize,
+    pub caps: Caps,
+    pub base: &'a [u8],
+    pub base_color: &'a [u8],
+    pub player_pos: i32,
+    pub player_dir: i32,
+    pub pocket: i32,
+    pub door_pos: &'a [i32],
+    pub door_color: &'a [u8],
+    pub door_state: &'a [u8],
+    pub key_pos: &'a [i32],
+    pub key_color: &'a [u8],
+    pub ball_pos: &'a [i32],
+    pub ball_color: &'a [u8],
+    pub box_pos: &'a [i32],
+    pub box_color: &'a [u8],
+    pub t: u32,
+    pub mission: i32,
+    pub events: Events,
+    pub last_action: i32,
+}
+
+/// Mutable view over one environment's state.
+pub struct SlotMut<'a> {
+    pub h: usize,
+    pub w: usize,
+    pub caps: Caps,
+    pub base: &'a mut [u8],
+    pub base_color: &'a mut [u8],
+    pub player_pos: &'a mut i32,
+    pub player_dir: &'a mut i32,
+    pub pocket: &'a mut i32,
+    pub door_pos: &'a mut [i32],
+    pub door_color: &'a mut [u8],
+    pub door_state: &'a mut [u8],
+    pub key_pos: &'a mut [i32],
+    pub key_color: &'a mut [u8],
+    pub ball_pos: &'a mut [i32],
+    pub ball_color: &'a mut [u8],
+    pub box_pos: &'a mut [i32],
+    pub box_color: &'a mut [u8],
+    pub t: &'a mut u32,
+    pub mission: &'a mut i32,
+    pub rng: &'a mut u64,
+    pub events: &'a mut Events,
+    pub last_action: &'a mut i32,
+}
+
+macro_rules! shared_slot_api {
+    ($T:ident) => {
+        impl<'a> $T<'a> {
+            #[inline]
+            pub fn dims(&self) -> GridDims {
+                GridDims::new(self.h, self.w)
+            }
+
+            /// Base cell type at `p` (out-of-bounds reads as Wall).
+            #[inline]
+            pub fn cell(&self, p: Pos) -> CellType {
+                if !p.in_bounds(self.h, self.w) {
+                    return CellType::Wall;
+                }
+                CellType::from_u8(self.base[(p.r as usize) * self.w + p.c as usize])
+            }
+
+            /// Colour of the base cell at `p`.
+            #[inline]
+            pub fn cell_color(&self, p: Pos) -> Color {
+                if !p.in_bounds(self.h, self.w) {
+                    return Color::Grey;
+                }
+                Color::from_u8(self.base_color[(p.r as usize) * self.w + p.c as usize])
+            }
+
+            /// Index of the door at `p`, if any.
+            #[inline]
+            pub fn door_at(&self, p: Pos) -> Option<usize> {
+                let enc = p.encode(self.w);
+                if enc < 0 {
+                    return None;
+                }
+                self.door_pos.iter().position(|&d| d == enc)
+            }
+
+            /// Index of the (still on-ground) key at `p`, if any.
+            #[inline]
+            pub fn key_at(&self, p: Pos) -> Option<usize> {
+                let enc = p.encode(self.w);
+                if enc < 0 {
+                    return None;
+                }
+                self.key_pos.iter().position(|&k| k == enc && k >= 0)
+            }
+
+            /// Index of the ball at `p`, if any.
+            #[inline]
+            pub fn ball_at(&self, p: Pos) -> Option<usize> {
+                let enc = p.encode(self.w);
+                if enc < 0 {
+                    return None;
+                }
+                self.ball_pos.iter().position(|&x| x == enc && x >= 0)
+            }
+
+            /// Index of the box at `p`, if any.
+            #[inline]
+            pub fn box_at(&self, p: Pos) -> Option<usize> {
+                let enc = p.encode(self.w);
+                if enc < 0 {
+                    return None;
+                }
+                self.box_pos.iter().position(|&x| x == enc && x >= 0)
+            }
+
+            /// Is any dynamic entity occupying `p` (doors count regardless of
+            /// open/closed; keys/balls/boxes only while on the ground)?
+            #[inline]
+            pub fn occupied_by_entity(&self, p: Pos) -> bool {
+                self.door_at(p).is_some()
+                    || self.key_at(p).is_some()
+                    || self.ball_at(p).is_some()
+                    || self.box_at(p).is_some()
+            }
+
+            /// Can the agent walk onto `p`? (MiniGrid `can_overlap` rules:
+            /// floor/goal/lava yes, wall no; open door yes, closed/locked no;
+            /// key/ball/box on the ground block movement. A door *replaces*
+            /// its cell, so its state decides regardless of the base cell —
+            /// doors set into walls, e.g. GoToDoor's border doors, behave
+            /// like MiniGrid's.)
+            #[inline]
+            pub fn walkable(&self, p: Pos) -> bool {
+                if !p.in_bounds(self.h, self.w) {
+                    return false;
+                }
+                if let Some(d) = self.door_at(p) {
+                    return DoorState::from_u8(self.door_state[d]) == DoorState::Open;
+                }
+                if !self.cell(p).walkable() {
+                    return false;
+                }
+                !(self.key_at(p).is_some()
+                    || self.ball_at(p).is_some()
+                    || self.box_at(p).is_some())
+            }
+
+            /// Does `p` block line of sight? (walls, closed/locked doors;
+            /// a door's state overrides the base cell it replaced)
+            #[inline]
+            pub fn opaque(&self, p: Pos) -> bool {
+                if let Some(d) = self.door_at(p) {
+                    return DoorState::from_u8(self.door_state[d]) != DoorState::Open;
+                }
+                !self.cell(p).transparent()
+            }
+
+            /// Is `p` free for entity placement (floor, nothing on it)?
+            #[inline]
+            pub fn free_for_placement(&self, p: Pos, player: Pos) -> bool {
+                self.cell(p) == CellType::Floor && !self.occupied_by_entity(p) && p != player
+            }
+
+            /// Player position decoded.
+            #[inline]
+            pub fn player(&self) -> Pos {
+                Pos::decode(self.player_pos_value(), self.w)
+            }
+
+            /// Player facing decoded.
+            #[inline]
+            pub fn dir(&self) -> Direction {
+                Direction::from_i32(self.player_dir_value())
+            }
+
+            /// The cell directly in front of the player.
+            #[inline]
+            pub fn front(&self) -> Pos {
+                self.player().step(self.dir())
+            }
+
+            /// Pocket decoded.
+            #[inline]
+            pub fn pocket_value(&self) -> Pocket {
+                Pocket(self.pocket_raw())
+            }
+        }
+    };
+}
+
+shared_slot_api!(EnvSlot);
+shared_slot_api!(SlotMut);
+
+impl<'a> EnvSlot<'a> {
+    #[inline]
+    fn player_pos_value(&self) -> i32 {
+        self.player_pos
+    }
+    #[inline]
+    fn player_dir_value(&self) -> i32 {
+        self.player_dir
+    }
+    #[inline]
+    fn pocket_raw(&self) -> i32 {
+        self.pocket
+    }
+}
+
+impl<'a> SlotMut<'a> {
+    #[inline]
+    fn player_pos_value(&self) -> i32 {
+        *self.player_pos
+    }
+    #[inline]
+    fn player_dir_value(&self) -> i32 {
+        *self.player_dir
+    }
+    #[inline]
+    fn pocket_raw(&self) -> i32 {
+        *self.pocket
+    }
+
+    /// Sequential RNG stream over this env's per-env key state.
+    #[inline]
+    pub fn rng(&mut self) -> SlotRng<'_, 'a> {
+        SlotRng { slot: self }
+    }
+
+    /// Set the base cell type (+ colour) at `p`.
+    #[inline]
+    pub fn set_cell(&mut self, p: Pos, t: CellType, color: Color) {
+        debug_assert!(p.in_bounds(self.h, self.w));
+        let idx = (p.r as usize) * self.w + p.c as usize;
+        self.base[idx] = t as u8;
+        self.base_color[idx] = color as u8;
+    }
+
+    /// Fill the whole base grid with floor surrounded by a wall ring.
+    pub fn fill_room(&mut self) {
+        let (h, w) = (self.h, self.w);
+        for r in 0..h {
+            for c in 0..w {
+                let border = r == 0 || c == 0 || r == h - 1 || c == w - 1;
+                let idx = r * w + c;
+                self.base[idx] = if border { CellType::Wall } else { CellType::Floor } as u8;
+                self.base_color[idx] = Color::Grey as u8;
+            }
+        }
+    }
+
+    /// Clear all dynamic entities and bookkeeping (used before layout).
+    pub fn clear_entities(&mut self) {
+        self.door_pos.fill(-1);
+        self.key_pos.fill(-1);
+        self.ball_pos.fill(-1);
+        self.box_pos.fill(-1);
+        *self.pocket = -1;
+        *self.mission = -1;
+        *self.events = Events::NONE;
+        *self.last_action = -1;
+        *self.t = 0;
+    }
+
+    /// Place the player.
+    #[inline]
+    pub fn place_player(&mut self, p: Pos, dir: Direction) {
+        *self.player_pos = p.encode(self.w);
+        *self.player_dir = dir as i32;
+    }
+
+    /// Add a door at `p`. Panics if capacity is exhausted (a config bug).
+    pub fn add_door(&mut self, p: Pos, color: Color, state: DoorState) -> usize {
+        let slot = self
+            .door_pos
+            .iter()
+            .position(|&d| d < 0)
+            .expect("door capacity exhausted: bump Caps.doors in the env config");
+        self.door_pos[slot] = p.encode(self.w);
+        self.door_color[slot] = color as u8;
+        self.door_state[slot] = state as u8;
+        slot
+    }
+
+    /// Add a key at `p`.
+    pub fn add_key(&mut self, p: Pos, color: Color) -> usize {
+        let slot = self
+            .key_pos
+            .iter()
+            .position(|&k| k < 0)
+            .expect("key capacity exhausted: bump Caps.keys in the env config");
+        self.key_pos[slot] = p.encode(self.w);
+        self.key_color[slot] = color as u8;
+        slot
+    }
+
+    /// Add a ball at `p`.
+    pub fn add_ball(&mut self, p: Pos, color: Color) -> usize {
+        let slot = self
+            .ball_pos
+            .iter()
+            .position(|&x| x < 0)
+            .expect("ball capacity exhausted: bump Caps.balls in the env config");
+        self.ball_pos[slot] = p.encode(self.w);
+        self.ball_color[slot] = color as u8;
+        slot
+    }
+
+    /// Add a box at `p`.
+    pub fn add_box(&mut self, p: Pos, color: Color) -> usize {
+        let slot = self
+            .box_pos
+            .iter()
+            .position(|&x| x < 0)
+            .expect("box capacity exhausted: bump Caps.boxes in the env config");
+        self.box_pos[slot] = p.encode(self.w);
+        self.box_color[slot] = color as u8;
+        slot
+    }
+
+    /// Sample a uniformly random free interior floor cell (rejection
+    /// sampling, like MiniGrid's `place_obj`).
+    pub fn sample_free_cell(&mut self, avoid_player: bool) -> Pos {
+        let player = self.player();
+        let (h, w) = (self.h as i32, self.w as i32);
+        // Rejection sampling with a deterministic fallback sweep so layout
+        // generation can never hang on crowded grids.
+        for _ in 0..256 {
+            let (r, c) = {
+                let mut rng = self.rng();
+                (rng.randint(1, h - 1), rng.randint(1, w - 1))
+            };
+            let p = Pos::new(r, c);
+            if self.cell(p) == CellType::Floor
+                && !self.occupied_by_entity(p)
+                && (!avoid_player || p != player)
+            {
+                return p;
+            }
+        }
+        for p in self.dims().interior() {
+            if self.cell(p) == CellType::Floor
+                && !self.occupied_by_entity(p)
+                && (!avoid_player || p != player)
+            {
+                return p;
+            }
+        }
+        panic!("no free cell available in grid");
+    }
+}
+
+/// A short-lived RNG stream advancing the slot's per-env key state.
+pub struct SlotRng<'s, 'a> {
+    slot: &'s mut SlotMut<'a>,
+}
+
+impl SlotRng<'_, '_> {
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut r = Rng { state: *self.slot.rng };
+        let x = r.next_u64();
+        *self.slot.rng = r.state;
+        x
+    }
+
+    #[inline]
+    pub fn below(&mut self, n: u32) -> u32 {
+        (((self.next_u64() >> 32) * n as u64) >> 32) as u32
+    }
+
+    #[inline]
+    pub fn randint(&mut self, lo: i32, hi: i32) -> i32 {
+        lo + self.below((hi - lo) as u32) as i32
+    }
+
+    #[inline]
+    pub fn uniform_f32(&mut self) -> f32 {
+        ((self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_state() -> BatchedState {
+        BatchedState::new(2, 5, 6, Caps { doors: 2, keys: 2, balls: 2, boxes: 1 })
+    }
+
+    #[test]
+    fn allocation_shapes() {
+        let st = small_state();
+        assert_eq!(st.base.len(), 2 * 5 * 6);
+        assert_eq!(st.door_pos.len(), 4);
+        assert_eq!(st.key_pos.len(), 4);
+        assert_eq!(st.player_pos.len(), 2);
+    }
+
+    #[test]
+    fn fill_room_builds_wall_ring() {
+        let mut st = small_state();
+        let mut s = st.slot_mut(0);
+        s.fill_room();
+        assert_eq!(s.cell(Pos::new(0, 0)), CellType::Wall);
+        assert_eq!(s.cell(Pos::new(4, 5)), CellType::Wall);
+        assert_eq!(s.cell(Pos::new(2, 2)), CellType::Floor);
+        // env 1 untouched (still all wall from init)
+        let s1 = st.slot(1);
+        assert_eq!(s1.cell(Pos::new(2, 2)), CellType::Wall);
+    }
+
+    #[test]
+    fn entity_placement_and_lookup() {
+        let mut st = small_state();
+        let mut s = st.slot_mut(0);
+        s.fill_room();
+        s.place_player(Pos::new(1, 1), Direction::East);
+        let d = s.add_door(Pos::new(2, 3), Color::Yellow, DoorState::Locked);
+        s.add_key(Pos::new(1, 2), Color::Yellow);
+        assert_eq!(s.door_at(Pos::new(2, 3)), Some(d));
+        assert_eq!(s.key_at(Pos::new(1, 2)), Some(0));
+        assert!(s.occupied_by_entity(Pos::new(2, 3)));
+        assert!(!s.walkable(Pos::new(2, 3))); // locked door
+        assert!(!s.walkable(Pos::new(1, 2))); // key blocks
+        assert!(s.walkable(Pos::new(3, 3)));
+        assert!(s.opaque(Pos::new(2, 3))); // locked door blocks sight
+        s.door_state[d] = DoorState::Open as u8;
+        assert!(s.walkable(Pos::new(2, 3)));
+        assert!(!s.opaque(Pos::new(2, 3)));
+    }
+
+    #[test]
+    fn out_of_bounds_reads_as_wall() {
+        let st = small_state();
+        let s = st.slot(0);
+        assert_eq!(s.cell(Pos::new(-1, 0)), CellType::Wall);
+        assert_eq!(s.cell(Pos::new(0, 99)), CellType::Wall);
+        assert!(!s.walkable(Pos::new(-1, -1)));
+    }
+
+    #[test]
+    fn front_cell_tracks_direction() {
+        let mut st = small_state();
+        let mut s = st.slot_mut(0);
+        s.fill_room();
+        s.place_player(Pos::new(2, 2), Direction::North);
+        assert_eq!(s.front(), Pos::new(1, 2));
+        *s.player_dir = Direction::South as i32;
+        assert_eq!(s.front(), Pos::new(3, 2));
+    }
+
+    #[test]
+    fn sample_free_cell_avoids_entities_and_player() {
+        let mut st = small_state();
+        let mut s = st.slot_mut(0);
+        s.fill_room();
+        *s.rng = 123;
+        s.place_player(Pos::new(1, 1), Direction::East);
+        s.add_key(Pos::new(1, 2), Color::Red);
+        for _ in 0..50 {
+            let p = s.sample_free_cell(true);
+            assert_ne!(p, Pos::new(1, 1));
+            assert_ne!(p, Pos::new(1, 2));
+            assert_eq!(s.cell(p), CellType::Floor);
+        }
+    }
+
+    #[test]
+    fn clear_entities_resets() {
+        let mut st = small_state();
+        let mut s = st.slot_mut(0);
+        s.fill_room();
+        s.add_door(Pos::new(2, 3), Color::Red, DoorState::Closed);
+        *s.t = 42;
+        s.clear_entities();
+        assert!(s.door_pos.iter().all(|&d| d < 0));
+        assert_eq!(*s.t, 0);
+    }
+}

@@ -1,0 +1,141 @@
+//! The paper's stateful environment interface (§3.2.2): the `Timestep`.
+//!
+//! A timestep is the tuple `(t, o_t, a_t, r_{t+1}, γ_{t+1}, s_t, i_{t+1})`.
+//! Both `reset` and `step` return this same schema, which lets environments
+//! autoreset and keeps agent code branch-free — the property that makes the
+//! whole interaction loop jittable in the original and allocation-free here.
+//!
+//! In the batched engine the "state" member lives inside
+//! [`crate::batch::BatchedEnv`]'s [`crate::core::state::BatchedState`];
+//! this module defines the per-env scalar metadata and the batched
+//! observation/reward/discount buffers.
+
+/// Where a timestep sits within an episode (dm_env-style).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum StepType {
+    /// First timestep after a reset (no preceding action/reward).
+    First = 0,
+    /// Ordinary transition.
+    Mid = 1,
+    /// Episode ended by a terminal event (γ_{t+1} = 0).
+    Terminated = 2,
+    /// Episode ended by timeout (truncation: γ_{t+1} stays γ).
+    Truncated = 3,
+}
+
+impl StepType {
+    #[inline]
+    pub fn is_last(self) -> bool {
+        matches!(self, StepType::Terminated | StepType::Truncated)
+    }
+}
+
+/// Scalar (single-env) timestep, used by the baseline engine, agents and the
+/// scalar convenience API. Observations are passed separately (the batched
+/// engine writes them into reusable buffers).
+#[derive(Clone, Debug)]
+pub struct Timestep {
+    /// Steps elapsed since the last reset.
+    pub t: u32,
+    /// The action that produced this timestep (−1 on reset, per the paper's
+    /// padding convention).
+    pub action: i32,
+    /// Reward r_{t+1} (0.0 on reset).
+    pub reward: f32,
+    /// Discount γ_{t+1}: 0 on termination, γ otherwise.
+    pub discount: f32,
+    /// Step classification.
+    pub step_type: StepType,
+    /// Accumulated episodic return (the paper's `info` dictionary keeps
+    /// accumulations; we surface the one every experiment needs).
+    pub episodic_return: f32,
+}
+
+impl Timestep {
+    /// The timestep produced by `reset`.
+    pub fn first() -> Timestep {
+        Timestep {
+            t: 0,
+            action: -1,
+            reward: 0.0,
+            discount: 1.0,
+            step_type: StepType::First,
+            episodic_return: 0.0,
+        }
+    }
+
+    #[inline]
+    pub fn is_last(&self) -> bool {
+        self.step_type.is_last()
+    }
+}
+
+/// Batched per-env timestep metadata written by the batched stepper.
+#[derive(Clone, Debug)]
+pub struct BatchedTimestep {
+    pub b: usize,
+    pub t: Vec<u32>,
+    pub action: Vec<i32>,
+    pub reward: Vec<f32>,
+    pub discount: Vec<f32>,
+    pub step_type: Vec<StepType>,
+    pub episodic_return: Vec<f32>,
+}
+
+impl BatchedTimestep {
+    pub fn first(b: usize) -> BatchedTimestep {
+        BatchedTimestep {
+            b,
+            t: vec![0; b],
+            action: vec![-1; b],
+            reward: vec![0.0; b],
+            discount: vec![1.0; b],
+            step_type: vec![StepType::First; b],
+            episodic_return: vec![0.0; b],
+        }
+    }
+
+    /// Scalar view of env `i`.
+    pub fn get(&self, i: usize) -> Timestep {
+        Timestep {
+            t: self.t[i],
+            action: self.action[i],
+            reward: self.reward[i],
+            discount: self.discount[i],
+            step_type: self.step_type[i],
+            episodic_return: self.episodic_return[i],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_timestep_padding_convention() {
+        let ts = Timestep::first();
+        assert_eq!(ts.action, -1, "paper pads the first action with -1");
+        assert_eq!(ts.reward, 0.0, "paper pads the first reward with 0");
+        assert_eq!(ts.step_type, StepType::First);
+        assert!(!ts.is_last());
+    }
+
+    #[test]
+    fn last_classification() {
+        assert!(StepType::Terminated.is_last());
+        assert!(StepType::Truncated.is_last());
+        assert!(!StepType::First.is_last());
+        assert!(!StepType::Mid.is_last());
+    }
+
+    #[test]
+    fn batched_first() {
+        let ts = BatchedTimestep::first(4);
+        assert_eq!(ts.b, 4);
+        assert!(ts.step_type.iter().all(|&s| s == StepType::First));
+        let s0 = ts.get(0);
+        assert_eq!(s0.action, -1);
+    }
+}

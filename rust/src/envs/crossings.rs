@@ -1,0 +1,166 @@
+//! SimpleCrossingS{S}N{K} / Crossings (paper Table 8): `K` full-width
+//! "rivers" (walls, or lava for the Lava variant) each crossed by a single
+//! opening. Rivers sit on even rows/columns and openings on odd ones, so
+//! openings never collide with a perpendicular river and the maze is always
+//! solvable — the same construction MiniGrid uses.
+
+use crate::core::components::{Color, Direction};
+use crate::core::entities::CellType;
+use crate::core::grid::Pos;
+use crate::core::state::SlotMut;
+
+pub fn generate(s: &mut SlotMut<'_>, n: usize, lava: bool) {
+    s.fill_room();
+    let (h, w) = (s.h as i32, s.w as i32);
+    let river_cell = if lava { CellType::Lava } else { CellType::Wall };
+
+    // Candidate river coordinates: even rows / even cols strictly inside.
+    let mut v_cands: Vec<i32> = (2..w - 2).step_by(2).collect();
+    let mut h_cands: Vec<i32> = (2..h - 2).step_by(2).collect();
+    {
+        let mut rng = s.rng();
+        // shuffle both candidate lists with the slot stream
+        for i in (1..v_cands.len()).rev() {
+            let j = rng.below(i as u32 + 1) as usize;
+            v_cands.swap(i, j);
+        }
+        for i in (1..h_cands.len()).rev() {
+            let j = rng.below(i as u32 + 1) as usize;
+            h_cands.swap(i, j);
+        }
+    }
+
+    // Alternate vertical/horizontal rivers like MiniGrid, bounded by what
+    // fits in the grid.
+    let mut rivers: Vec<(bool, i32)> = Vec::new(); // (vertical?, coord)
+    let (mut vi, mut hi) = (0usize, 0usize);
+    for k in 0..n {
+        if k % 2 == 0 && vi < v_cands.len() {
+            rivers.push((true, v_cands[vi]));
+            vi += 1;
+        } else if hi < h_cands.len() {
+            rivers.push((false, h_cands[hi]));
+            hi += 1;
+        } else if vi < v_cands.len() {
+            rivers.push((true, v_cands[vi]));
+            vi += 1;
+        }
+    }
+
+    for &(vertical, coord) in &rivers {
+        if vertical {
+            for r in 1..h - 1 {
+                s.set_cell(Pos::new(r, coord), river_cell, Color::Grey);
+            }
+        } else {
+            for c in 1..w - 1 {
+                s.set_cell(Pos::new(coord, c), river_cell, Color::Grey);
+            }
+        }
+    }
+
+    // One opening per river, placed so the openings form a monotone
+    // staircase from the start corner to the goal corner — MiniGrid's
+    // construction, which guarantees solvability even when rivers cross:
+    // crossing river k requires the opening to lie past every previously
+    // crossed perpendicular river.
+    rivers.sort_by_key(|&(_, coord)| coord);
+    let (mut row_lo, mut col_lo) = (1i32, 1i32); // staircase progress
+    for (idx, &(vertical, coord)) in rivers.iter().enumerate() {
+        // The gap must sit inside the current band: past every crossed
+        // perpendicular river (≥ lo) but before the next uncrossed one.
+        let next_perp = rivers[idx + 1..]
+            .iter()
+            .find(|&&(v, _)| v != vertical)
+            .map(|&(_, c)| c);
+        if vertical {
+            let hi = next_perp.unwrap_or(h - 1) - 1;
+            let lo = if row_lo % 2 == 0 { row_lo + 1 } else { row_lo };
+            debug_assert!(lo <= hi, "no room for a gap in vertical river at {coord}");
+            let n_odd = (hi - lo) / 2 + 1; // odd rows in [lo, hi]
+            let gap = {
+                let mut rng = s.rng();
+                lo + 2 * rng.randint(0, n_odd)
+            };
+            s.set_cell(Pos::new(gap, coord), CellType::Floor, Color::Grey);
+            col_lo = coord + 1;
+        } else {
+            let hi = next_perp.unwrap_or(w - 1) - 1;
+            let lo = if col_lo % 2 == 0 { col_lo + 1 } else { col_lo };
+            debug_assert!(lo <= hi, "no room for a gap in horizontal river at {coord}");
+            let n_odd = (hi - lo) / 2 + 1;
+            let gap = {
+                let mut rng = s.rng();
+                lo + 2 * rng.randint(0, n_odd)
+            };
+            s.set_cell(Pos::new(coord, gap), CellType::Floor, Color::Grey);
+            row_lo = coord + 1;
+        }
+    }
+
+    s.set_cell(Pos::new(h - 2, w - 2), CellType::Goal, Color::Green);
+    s.place_player(Pos::new(1, 1), Direction::East);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::registry::make;
+    use crate::envs::testutil::{goal_pos, reachable, reset_once};
+
+    #[test]
+    fn all_registered_crossings_are_solvable() {
+        for id in [
+            "Navix-SimpleCrossingS9N1-v0",
+            "Navix-SimpleCrossingS9N2-v0",
+            "Navix-SimpleCrossingS9N3-v0",
+            "Navix-SimpleCrossingS11N5-v0",
+        ] {
+            let cfg = make(id).unwrap();
+            for seed in 0..20 {
+                let st = reset_once(&cfg, seed);
+                assert!(reachable(&st, goal_pos(&st), false), "{id} seed {seed} unsolvable");
+            }
+        }
+    }
+
+    #[test]
+    fn river_count_matches_n() {
+        let cfg = make("Navix-SimpleCrossingS9N2-v0").unwrap();
+        let st = reset_once(&cfg, 4);
+        let s = st.slot(0);
+        // count full river lines: interior rows/cols that are ≥ (span-3) wall
+        let (h, w) = (s.h as i32, s.w as i32);
+        let mut lines = 0;
+        for c in 1..w - 1 {
+            let walls = (1..h - 1).filter(|&r| s.cell(Pos::new(r, c)) == CellType::Wall).count();
+            if walls >= (h - 3) as usize {
+                lines += 1;
+            }
+        }
+        for r in 1..h - 1 {
+            let walls = (1..w - 1).filter(|&c| s.cell(Pos::new(r, c)) == CellType::Wall).count();
+            if walls >= (w - 3) as usize {
+                lines += 1;
+            }
+        }
+        assert_eq!(lines, 2);
+    }
+
+    #[test]
+    fn lava_variant_uses_lava() {
+        let cfg = make("Navix-LavaCrossingS9N1-v0").unwrap();
+        let st = reset_once(&cfg, 0);
+        let s = st.slot(0);
+        let mut lava = 0;
+        for r in 1..s.h as i32 - 1 {
+            for c in 1..s.w as i32 - 1 {
+                if s.cell(Pos::new(r, c)) == CellType::Lava {
+                    lava += 1;
+                }
+            }
+        }
+        assert!(lava > 0, "lava crossing must contain lava");
+        assert!(reachable(&st, goal_pos(&st), false));
+    }
+}

@@ -1,0 +1,62 @@
+//! DistShift{1,2}: agent top-left, goal top-right, a lava strip between
+//! them whose row differs between the two versions — the "distribution
+//! shift" used for transfer studies (paper Table 8: 6×6 / 8×8, R2).
+
+use crate::core::components::{Color, Direction};
+use crate::core::entities::CellType;
+use crate::core::grid::Pos;
+use crate::core::state::SlotMut;
+
+/// `strip_row`: the row of the lava strip (2 for DistShift1, 3 for
+/// DistShift2 in this scaled layout).
+pub fn generate(s: &mut SlotMut<'_>, strip_row: usize) {
+    s.fill_room();
+    let (h, w) = (s.h as i32, s.w as i32);
+    let row = (strip_row as i32).min(h - 3);
+    // Strip spans the middle columns, leaving the first and last interior
+    // columns free so the task stays solvable by detouring below.
+    for c in 2..w - 2 {
+        s.set_cell(Pos::new(row, c), CellType::Lava, Color::Red);
+    }
+    s.set_cell(Pos::new(1, w - 2), CellType::Goal, Color::Green);
+    s.place_player(Pos::new(1, 1), Direction::East);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::registry::make;
+    use crate::envs::testutil::{goal_pos, reachable, reset_once};
+
+    #[test]
+    fn versions_shift_the_strip() {
+        let c1 = make("Navix-DistShift1-v0").unwrap();
+        let c2 = make("Navix-DistShift2-v0").unwrap();
+        let s1 = reset_once(&c1, 0);
+        let s2 = reset_once(&c2, 0);
+        let row_of = |st: &crate::core::state::BatchedState| -> i32 {
+            let s = st.slot(0);
+            for r in 1..s.h as i32 - 1 {
+                for c in 1..s.w as i32 - 1 {
+                    if s.cell(Pos::new(r, c)) == CellType::Lava {
+                        return r;
+                    }
+                }
+            }
+            -1
+        };
+        let (r1, r2) = (row_of(&s1), row_of(&s2));
+        assert!(r1 > 0 && r2 > 0);
+        assert_ne!(r1, r2, "the lava strip must shift between versions");
+    }
+
+    #[test]
+    fn both_versions_solvable_avoiding_lava() {
+        for id in ["Navix-DistShift1-v0", "Navix-DistShift2-v0"] {
+            let cfg = make(id).unwrap();
+            let st = reset_once(&cfg, 0);
+            assert!(reachable(&st, goal_pos(&st), false), "{id}");
+            assert_eq!(goal_pos(&st), Pos::new(1, cfg.w as i32 - 2));
+        }
+    }
+}

@@ -1,0 +1,133 @@
+//! DoorKey-NxN (+Random variants): the room is split by a wall with a locked
+//! door; the agent must fetch the key, unlock the door and reach the goal.
+//! The canonical sparse-reward exploration benchmark.
+
+use crate::core::components::{Color, Direction, DoorState};
+use crate::core::entities::CellType;
+use crate::core::grid::Pos;
+use crate::core::state::SlotMut;
+
+/// Build the layout. The non-`random` ids use the size-determined canonical
+/// layout (wall at w/2, door and key centred) so the MDP is fixed across
+/// resets; `-Random-` ids sample wall/door/key/agent per episode, which is
+/// MiniGrid's behaviour.
+pub fn generate(s: &mut SlotMut<'_>, random: bool) {
+    s.fill_room();
+    let (h, w) = (s.h as i32, s.w as i32);
+    s.set_cell(Pos::new(h - 2, w - 2), CellType::Goal, Color::Green);
+
+    // Splitting wall at column `split` (agent side: columns < split).
+    let split = if random {
+        let mut rng = s.rng();
+        rng.randint(2, w - 2)
+    } else {
+        w / 2
+    };
+    for r in 1..h - 1 {
+        s.set_cell(Pos::new(r, split), CellType::Wall, Color::Grey);
+    }
+    // Door somewhere in the wall.
+    let door_r = if random {
+        let mut rng = s.rng();
+        rng.randint(1, h - 1)
+    } else {
+        h / 2
+    };
+    // The door replaces the wall cell (MiniGrid semantics): the base cell
+    // under a door is floor; the door entity itself controls passability.
+    s.set_cell(Pos::new(door_r, split), CellType::Floor, Color::Grey);
+    s.add_door(Pos::new(door_r, split), Color::Yellow, DoorState::Locked);
+
+    // Agent and key on the left side.
+    if random {
+        s.place_player(Pos::new(1, 1), Direction::East);
+        let key_p = loop {
+            let p = s.sample_free_cell(false);
+            if p.c < split {
+                break p;
+            }
+        };
+        s.add_key(key_p, Color::Yellow);
+        let agent_p = loop {
+            let p = s.sample_free_cell(false);
+            if p.c < split {
+                break p;
+            }
+        };
+        let dir = Direction::from_i32({
+            let mut rng = s.rng();
+            rng.randint(0, 4)
+        });
+        s.place_player(agent_p, dir);
+    } else {
+        s.place_player(Pos::new(1, 1), Direction::East);
+        // key below the agent, canonical slot
+        let key_r = (h - 2).min(h / 2 + 1);
+        let key_c = (split - 1).max(1);
+        s.add_key(Pos::new(key_r, key_c), Color::Yellow);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::actions::Action;
+    use crate::envs::registry::make;
+    use crate::envs::testutil::{goal_pos, reachable, reset_once};
+    use crate::systems::intervention::intervene;
+
+    #[test]
+    fn canonical_layout_has_locked_door_and_key_left() {
+        let cfg = make("Navix-DoorKey-8x8-v0").unwrap();
+        let st = reset_once(&cfg, 0);
+        let s = st.slot(0);
+        assert_eq!(s.door_pos.iter().filter(|&&d| d >= 0).count(), 1);
+        assert_eq!(DoorState::from_u8(s.door_state[0]), DoorState::Locked);
+        let door = Pos::decode(s.door_pos[0], s.w);
+        let key = Pos::decode(s.key_pos[0], s.w);
+        assert!(key.c < door.c, "key must be on the agent side");
+        assert!(s.player().c < door.c);
+        // goal unreachable without passing the door…
+        assert!(!reachable(&st, goal_pos(&st), false));
+        // …but reachable through it.
+        assert!(reachable(&st, goal_pos(&st), true));
+    }
+
+    #[test]
+    fn random_layout_always_solvable() {
+        let cfg = make("Navix-DoorKey-Random-8x8").unwrap();
+        for seed in 0..30 {
+            let st = reset_once(&cfg, seed);
+            let s = st.slot(0);
+            let key = Pos::decode(s.key_pos[0], s.w);
+            let door = Pos::decode(s.door_pos[0], s.w);
+            assert!(key.c < door.c, "seed {seed}: key right of wall");
+            assert!(s.player().c < door.c, "seed {seed}: agent right of wall");
+            assert!(reachable(&st, key, false), "seed {seed}: key unreachable");
+            assert!(reachable(&st, goal_pos(&st), true), "seed {seed}: goal blocked");
+        }
+    }
+
+    #[test]
+    fn full_task_is_completable_by_script() {
+        // Drive the canonical 5x5 instance through the whole task to pin the
+        // door/key interaction end-to-end.
+        let cfg = make("Navix-DoorKey-5x5-v0").unwrap();
+        let mut st = reset_once(&cfg, 0);
+        let mut s = st.slot_mut(0);
+        // layout (5x5): wall at col 2, door at (2,2), key at (3,1),
+        // agent (1,1) facing east.
+        intervene(&mut s, Action::Right); // face south
+        intervene(&mut s, Action::Forward); // (2,1)
+        intervene(&mut s, Action::Pickup); // key at (3,1)
+        assert!(!s.pocket_value().is_empty(), "picked the key");
+        intervene(&mut s, Action::Left); // face east
+        intervene(&mut s, Action::Toggle); // unlock door at (2,2)
+        assert_eq!(DoorState::from_u8(s.door_state[0]), DoorState::Open);
+        intervene(&mut s, Action::Forward); // through the door (2,2)
+        intervene(&mut s, Action::Forward); // (2,3)
+        intervene(&mut s, Action::Right); // face south
+        intervene(&mut s, Action::Forward); // (3,3) = goal
+        assert!(s.events.goal_reached, "goal event after unlocking the door");
+    }
+}

@@ -1,0 +1,74 @@
+//! Dynamic-Obstacles-NxN: an empty room with drifting balls; colliding with
+//! one terminates with −1 (paper Table 8: R3). The obstacle count follows
+//! MiniGrid's default `size / 2`.
+
+use crate::core::components::{Color, Direction};
+use crate::core::entities::CellType;
+use crate::core::grid::Pos;
+use crate::core::state::SlotMut;
+
+/// Obstacle count for an `n × n` grid (MiniGrid's DynamicObstaclesEnv
+/// default `n_obstacles = size // 2`, capped to leave the room navigable).
+pub fn n_obstacles(size: usize) -> usize {
+    (size / 2).clamp(1, (size - 2) * (size - 2) / 4)
+}
+
+pub fn generate(s: &mut SlotMut<'_>, n: usize) {
+    s.fill_room();
+    let (h, w) = (s.h as i32, s.w as i32);
+    s.set_cell(Pos::new(h - 2, w - 2), CellType::Goal, Color::Green);
+    s.place_player(Pos::new(1, 1), Direction::East);
+    let goal = Pos::new(h - 2, w - 2);
+    for _ in 0..n {
+        let p = loop {
+            let p = s.sample_free_cell(true);
+            if p != goal {
+                break p;
+            }
+        };
+        s.add_ball(p, Color::Blue);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::registry::make;
+    use crate::envs::testutil::{goal_pos, reset_once};
+
+    #[test]
+    fn obstacle_counts_match_minigrid_rule() {
+        assert_eq!(n_obstacles(5), 2);
+        assert_eq!(n_obstacles(6), 3);
+        assert_eq!(n_obstacles(8), 4);
+        assert_eq!(n_obstacles(16), 8);
+    }
+
+    #[test]
+    fn balls_are_placed_on_free_cells() {
+        for (id, expect) in [
+            ("Navix-Dynamic-Obstacles-5x5", 2),
+            ("Navix-Dynamic-Obstacles-6x6", 3),
+            ("Navix-Dynamic-Obstacles-8x8", 4),
+            ("Navix-Dynamic-Obstacles-16x16", 8),
+        ] {
+            let cfg = make(id).unwrap();
+            let st = reset_once(&cfg, 7);
+            let s = st.slot(0);
+            let placed = s.ball_pos.iter().filter(|&&b| b >= 0).count();
+            assert_eq!(placed, expect, "{id}");
+            for &b in s.ball_pos.iter().filter(|&&b| b >= 0) {
+                let p = Pos::decode(b, s.w);
+                assert_eq!(s.cell(p), CellType::Floor);
+                assert_ne!(p, s.player());
+                assert_ne!(p, goal_pos(&st));
+            }
+        }
+    }
+
+    #[test]
+    fn config_marks_balls_stochastic() {
+        let cfg = make("Navix-Dynamic-Obstacles-8x8").unwrap();
+        assert!(cfg.stochastic_balls);
+    }
+}

@@ -1,0 +1,102 @@
+//! FourRooms: the classic Sutton et al. options domain — four rooms joined
+//! by gaps, random agent and goal (paper Table 8: 17×17, R1).
+
+use crate::core::components::{Color, Direction};
+use crate::core::entities::CellType;
+use crate::core::grid::Pos;
+use crate::core::state::SlotMut;
+
+pub fn generate(s: &mut SlotMut<'_>) {
+    s.fill_room();
+    let (h, w) = (s.h as i32, s.w as i32);
+    let mid_r = h / 2;
+    let mid_c = w / 2;
+
+    // Dividing walls.
+    for r in 1..h - 1 {
+        s.set_cell(Pos::new(r, mid_c), CellType::Wall, Color::Grey);
+    }
+    for c in 1..w - 1 {
+        s.set_cell(Pos::new(mid_r, c), CellType::Wall, Color::Grey);
+    }
+
+    // One gap per wall segment (four total), at random positions.
+    let (g1, g2, g3, g4) = {
+        let mut rng = s.rng();
+        (
+            rng.randint(1, mid_r),         // left vertical segment: gap row in top part? no: horizontal wall, left segment: gap col
+            rng.randint(mid_c + 1, w - 1), // horizontal wall, right segment: gap col
+            rng.randint(1, mid_r),         // vertical wall, top segment: gap row
+            rng.randint(mid_r + 1, h - 1), // vertical wall, bottom segment: gap row
+        )
+    };
+    s.set_cell(Pos::new(mid_r, g1.min(mid_c - 1).max(1)), CellType::Floor, Color::Grey);
+    s.set_cell(Pos::new(mid_r, g2.min(w - 2)), CellType::Floor, Color::Grey);
+    s.set_cell(Pos::new(g3.min(mid_r - 1).max(1), mid_c), CellType::Floor, Color::Grey);
+    s.set_cell(Pos::new(g4.min(h - 2), mid_c), CellType::Floor, Color::Grey);
+
+    // Random goal, then random agent avoiding the goal.
+    s.place_player(Pos::new(1, 1), Direction::East);
+    let goal = s.sample_free_cell(false);
+    s.set_cell(goal, CellType::Goal, Color::Green);
+    let agent = loop {
+        let p = s.sample_free_cell(false);
+        if p != goal {
+            break p;
+        }
+    };
+    let dir = Direction::from_i32({
+        let mut rng = s.rng();
+        rng.randint(0, 4)
+    });
+    s.place_player(agent, dir);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::registry::make;
+    use crate::envs::testutil::{goal_pos, reachable, reset_once};
+
+    #[test]
+    fn rooms_are_connected_and_solvable() {
+        let cfg = make("Navix-FourRooms-v0").unwrap();
+        for seed in 0..25 {
+            let st = reset_once(&cfg, seed);
+            assert!(reachable(&st, goal_pos(&st), false), "seed {seed}: goal unreachable");
+        }
+    }
+
+    #[test]
+    fn dividing_walls_exist() {
+        let cfg = make("Navix-FourRooms-v0").unwrap();
+        let st = reset_once(&cfg, 1);
+        let s = st.slot(0);
+        let (h, w) = (s.h as i32, s.w as i32);
+        let mut wall_cells = 0;
+        for r in 1..h - 1 {
+            if s.cell(Pos::new(r, w / 2)) == CellType::Wall {
+                wall_cells += 1;
+            }
+        }
+        for c in 1..w - 1 {
+            if s.cell(Pos::new(h / 2, c)) == CellType::Wall {
+                wall_cells += 1;
+            }
+        }
+        // 17x17: two 15-cell walls minus ≤5 gaps (4 gaps + crossing overlap)
+        assert!(wall_cells >= 24, "only {wall_cells} wall cells on the dividers");
+    }
+
+    #[test]
+    fn goal_and_agent_positions_vary() {
+        let cfg = make("Navix-FourRooms-v0").unwrap();
+        let mut goals = std::collections::HashSet::new();
+        for seed in 0..20 {
+            let st = reset_once(&cfg, seed);
+            let g = goal_pos(&st);
+            goals.insert((g.r, g.c));
+        }
+        assert!(goals.len() > 5, "goals should vary: {}", goals.len());
+    }
+}

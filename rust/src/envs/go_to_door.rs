@@ -1,0 +1,139 @@
+//! GoToDoor-NxN: four doors of distinct random colours, one per wall; the
+//! mission is to reach the door of the mission colour and perform `done`
+//! in front of it (paper Tables 5/6: `on_door_done`).
+
+use crate::core::components::{Color, Direction, DoorState};
+use crate::core::entities::Tag;
+use crate::core::grid::Pos;
+use crate::core::state::SlotMut;
+
+pub fn generate(s: &mut SlotMut<'_>) {
+    s.fill_room();
+    let (h, w) = (s.h as i32, s.w as i32);
+
+    // Four distinct colours.
+    let mut colors = Color::ALL;
+    {
+        let mut rng = s.rng();
+        for i in (1..colors.len()).rev() {
+            let j = rng.below(i as u32 + 1) as usize;
+            colors.swap(i, j);
+        }
+    }
+
+    // One door per wall at a random offset (doors sit in the outer wall).
+    let (o_top, o_bottom, o_left, o_right) = {
+        let mut rng = s.rng();
+        (rng.randint(1, w - 1), rng.randint(1, w - 1), rng.randint(1, h - 1), rng.randint(1, h - 1))
+    };
+    s.add_door(Pos::new(0, o_top), colors[0], DoorState::Closed);
+    s.add_door(Pos::new(h - 1, o_bottom), colors[1], DoorState::Closed);
+    s.add_door(Pos::new(o_left, 0), colors[2], DoorState::Closed);
+    s.add_door(Pos::new(o_right, w - 1), colors[3], DoorState::Closed);
+
+    // Random agent pose; mission = one of the four door colours.
+    s.place_player(Pos::new(1, 1), Direction::East);
+    let p = s.sample_free_cell(false);
+    let (dir, target) = {
+        let mut rng = s.rng();
+        (rng.randint(0, 4), rng.below(4) as usize)
+    };
+    s.place_player(p, Direction::from_i32(dir));
+    *s.mission = (Tag::DOOR << 8) | colors[target] as i32;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::actions::Action;
+    use crate::envs::registry::make;
+    use crate::envs::testutil::reset_once;
+    use crate::systems::intervention::intervene;
+
+    #[test]
+    fn four_distinct_door_colors_on_four_walls() {
+        let cfg = make("Navix-GoToDoor-8x8-v0").unwrap();
+        for seed in 0..10 {
+            let st = reset_once(&cfg, seed);
+            let s = st.slot(0);
+            let placed: Vec<usize> =
+                (0..4).filter(|&d| s.door_pos[d] >= 0).collect();
+            assert_eq!(placed.len(), 4, "seed {seed}");
+            let mut cols: Vec<u8> = (0..4).map(|d| s.door_color[d]).collect();
+            cols.sort_unstable();
+            cols.dedup();
+            assert_eq!(cols.len(), 4, "seed {seed}: colours must be distinct");
+            // each door on the border
+            for d in 0..4 {
+                let p = Pos::decode(s.door_pos[d], s.w);
+                let border = p.r == 0
+                    || p.c == 0
+                    || p.r == s.h as i32 - 1
+                    || p.c == s.w as i32 - 1;
+                assert!(border, "seed {seed}: door {d} not on a wall");
+            }
+        }
+    }
+
+    #[test]
+    fn mission_matches_an_existing_door() {
+        let cfg = make("Navix-GoToDoor-5x5-v0").unwrap();
+        for seed in 0..10 {
+            let st = reset_once(&cfg, seed);
+            let s = st.slot(0);
+            let mission_color = (s.mission & 0xFF) as u8;
+            assert_eq!(s.mission >> 8, Tag::DOOR);
+            assert!(
+                (0..4).any(|d| s.door_color[d] == mission_color),
+                "seed {seed}: mission colour has no door"
+            );
+        }
+    }
+
+    #[test]
+    fn done_before_mission_door_succeeds() {
+        let cfg = make("Navix-GoToDoor-6x6-v0").unwrap();
+        let mut st = reset_once(&cfg, 3);
+        // Teleport the agent in front of the mission door for the check.
+        let (door_p, _mission) = {
+            let s = st.slot(0);
+            let mc = (s.mission & 0xFF) as u8;
+            let d = (0..4).find(|&d| s.door_color[d] == mc).unwrap();
+            (Pos::decode(s.door_pos[d], s.w), s.mission)
+        };
+        let mut s = st.slot_mut(0);
+        // stand on the interior cell adjacent to the door, facing it
+        let (h, w) = (s.h as i32, s.w as i32);
+        let (stand, dir) = if door_p.r == 0 {
+            (Pos::new(1, door_p.c), Direction::North)
+        } else if door_p.r == h - 1 {
+            (Pos::new(h - 2, door_p.c), Direction::South)
+        } else if door_p.c == 0 {
+            (Pos::new(door_p.r, 1), Direction::West)
+        } else {
+            (Pos::new(door_p.r, w - 2), Direction::East)
+        };
+        s.place_player(stand, dir);
+        intervene(&mut s, Action::Done);
+        assert!(s.events.door_done);
+        // wrong door: no event
+        let other = (0..4)
+            .find(|&d| {
+                s.door_color[d] != (*s.mission & 0xFF) as u8 && s.door_pos[d] >= 0
+            })
+            .unwrap();
+        let p = Pos::decode(s.door_pos[other], s.w);
+        let (stand, dir) = if p.r == 0 {
+            (Pos::new(1, p.c), Direction::North)
+        } else if p.r == h - 1 {
+            (Pos::new(h - 2, p.c), Direction::South)
+        } else if p.c == 0 {
+            (Pos::new(p.r, 1), Direction::West)
+        } else {
+            (Pos::new(p.r, w - 2), Direction::East)
+        };
+        s.place_player(stand, dir);
+        intervene(&mut s, Action::Done);
+        assert!(!s.events.door_done);
+    }
+}

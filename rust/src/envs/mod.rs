@@ -1,0 +1,181 @@
+//! The NAVIX environment suite (paper Tables 7–8): every MiniGrid family the
+//! paper reproduces, expressed as an [`EnvConfig`] — grid dimensions, static
+//! entity capacities, timeout, observation/reward/termination systems and a
+//! [`Layout`] generator.
+//!
+//! `EnvConfig` is pure data: the batched engine ([`crate::batch`]) consumes
+//! it to reset/step `B` environments in SoA form, and the baseline engine
+//! ([`crate::baseline`]) consumes the same configs so speed comparisons are
+//! apples-to-apples.
+
+pub mod crossings;
+pub mod dist_shift;
+pub mod doorkey;
+pub mod dynamic_obstacles;
+pub mod empty;
+pub mod four_rooms;
+pub mod go_to_door;
+pub mod key_corridor;
+pub mod lava_gap;
+pub mod registry;
+
+use crate::core::state::{Caps, SlotMut};
+use crate::rng::Key;
+use crate::systems::observations::{ObsKind, ObsSpec};
+use crate::systems::rewards::RewardSpec;
+use crate::systems::terminations::TermSpec;
+
+/// Which layout generator builds the starting state (paper Table 8 "Class").
+#[derive(Clone, Debug, PartialEq)]
+pub enum Layout {
+    /// Empty room, goal bottom-right. `random_start`: agent pose sampled.
+    Empty { random_start: bool },
+    /// Room split by a locked door; key on the agent's side.
+    /// `random`: wall/door/key/agent positions sampled per episode.
+    DoorKey { random: bool },
+    /// Four connected rooms, random agent and goal.
+    FourRooms,
+    /// 3×`rows` grid of `size`-sized rooms around a central corridor; pick
+    /// up the ball behind the locked door.
+    KeyCorridor { size: usize, rows: usize },
+    /// Vertical lava curtain with a single gap.
+    LavaGap,
+    /// `n` wall "rivers" (SimpleCrossing) or lava rivers with one opening
+    /// each.
+    Crossings { n: usize, lava: bool },
+    /// Empty room with `n` randomly drifting balls.
+    DynamicObstacles { n: usize },
+    /// Lava strip near the top; v1/v2 differ by the strip row (the
+    /// "distribution shift").
+    DistShift { strip_row: usize },
+    /// Four coloured doors, one per wall; `done` before the mission door.
+    GoToDoor,
+}
+
+/// A fully-specified NAVIX environment (one Table-8 row).
+#[derive(Clone, Debug)]
+pub struct EnvConfig {
+    pub id: String,
+    pub h: usize,
+    pub w: usize,
+    pub caps: Caps,
+    /// Timeout T (steps before truncation).
+    pub max_steps: u32,
+    pub obs: ObsSpec,
+    pub reward: RewardSpec,
+    pub termination: TermSpec,
+    /// Balls are stochastic dynamic obstacles (Dynamic-Obstacles family).
+    pub stochastic_balls: bool,
+    pub layout: Layout,
+}
+
+impl EnvConfig {
+    /// Reset one environment slot: reseed its stream, clear entities and run
+    /// the layout generator.
+    pub fn reset_slot(&self, s: &mut SlotMut<'_>, key: Key) {
+        *s.rng = key.0;
+        s.clear_entities();
+        self.generate(s);
+        debug_assert!(s.player().in_bounds(self.h, self.w), "layout must place the player");
+    }
+
+    /// Dispatch to the family generator.
+    fn generate(&self, s: &mut SlotMut<'_>) {
+        match self.layout {
+            Layout::Empty { random_start } => empty::generate(s, random_start),
+            Layout::DoorKey { random } => doorkey::generate(s, random),
+            Layout::FourRooms => four_rooms::generate(s),
+            Layout::KeyCorridor { size, rows } => key_corridor::generate(s, size, rows),
+            Layout::LavaGap => lava_gap::generate(s),
+            Layout::Crossings { n, lava } => crossings::generate(s, n, lava),
+            Layout::DynamicObstacles { n } => dynamic_obstacles::generate(s, n),
+            Layout::DistShift { strip_row } => dist_shift::generate(s, strip_row),
+            Layout::GoToDoor => go_to_door::generate(s),
+        }
+    }
+
+    /// Builder-style override of the observation function (paper Appendix C).
+    pub fn with_observation(mut self, kind: ObsKind) -> Self {
+        self.obs = ObsSpec::new(kind);
+        self
+    }
+
+    /// Builder-style override of the reward function (paper Appendix C).
+    pub fn with_reward(mut self, reward: RewardSpec) -> Self {
+        self.reward = reward;
+        self
+    }
+
+    /// Builder-style override of the termination function (paper Appendix C).
+    pub fn with_termination(mut self, termination: TermSpec) -> Self {
+        self.termination = termination;
+        self
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::core::grid::Pos;
+    use crate::core::state::BatchedState;
+
+    /// Reset `cfg` into a fresh single-env state for layout tests.
+    pub fn reset_once(cfg: &EnvConfig, seed: u64) -> BatchedState {
+        let mut st = BatchedState::new(1, cfg.h, cfg.w, cfg.caps);
+        let mut s = st.slot_mut(0);
+        cfg.reset_slot(&mut s, Key::new(seed));
+        drop(s);
+        st
+    }
+
+    /// Breadth-first reachability over walkable cells from the player to
+    /// `target`. With `through_doors`, closed/locked doors and pickable
+    /// entities count as passable (asserts topological solvability).
+    pub fn reachable(st: &BatchedState, target: Pos, through_doors: bool) -> bool {
+        let s = st.slot(0);
+        let start = s.player();
+        let mut seen = vec![false; s.h * s.w];
+        let mut queue = std::collections::VecDeque::new();
+        seen[(start.r as usize) * s.w + start.c as usize] = true;
+        queue.push_back(start);
+        while let Some(p) = queue.pop_front() {
+            if p == target {
+                return true;
+            }
+            for d in crate::core::components::Direction::ALL {
+                let q = p.step(d);
+                if !q.in_bounds(s.h, s.w) {
+                    continue;
+                }
+                let qi = (q.r as usize) * s.w + q.c as usize;
+                if seen[qi] {
+                    continue;
+                }
+                let passable = if through_doors {
+                    s.cell(q).walkable()
+                } else {
+                    s.walkable(q) || q == target
+                };
+                if passable {
+                    seen[qi] = true;
+                    queue.push_back(q);
+                }
+            }
+        }
+        false
+    }
+
+    /// Locate the (first) goal cell.
+    pub fn goal_pos(st: &BatchedState) -> Pos {
+        use crate::core::entities::CellType;
+        let s = st.slot(0);
+        for r in 0..s.h as i32 {
+            for c in 0..s.w as i32 {
+                if s.cell(Pos::new(r, c)) == CellType::Goal {
+                    return Pos::new(r, c);
+                }
+            }
+        }
+        panic!("no goal in layout");
+    }
+}

@@ -1,0 +1,346 @@
+//! The environment registry: `make("Navix-...-v0")` string ids for every
+//! Table-8 row, mirroring the Python API (`nx.make(...)`) including the
+//! Appendix-C overrides (`make_with`).
+
+use super::{EnvConfig, Layout};
+use crate::core::state::Caps;
+use crate::systems::observations::{ObsKind, ObsSpec};
+use crate::systems::rewards::RewardSpec;
+use crate::systems::terminations::TermSpec;
+use anyhow::{anyhow, Result};
+
+fn base(
+    id: &str,
+    h: usize,
+    w: usize,
+    caps: Caps,
+    max_steps: u32,
+    reward: RewardSpec,
+    termination: TermSpec,
+    layout: Layout,
+) -> EnvConfig {
+    EnvConfig {
+        id: id.to_string(),
+        h,
+        w,
+        caps,
+        max_steps,
+        obs: ObsSpec::new(ObsKind::SymbolicFirstPerson),
+        reward,
+        termination,
+        stochastic_balls: matches!(layout, Layout::DynamicObstacles { .. }),
+        layout,
+    }
+}
+
+fn empty(id: &str, n: usize, random: bool) -> EnvConfig {
+    base(
+        id,
+        n,
+        n,
+        Caps::default(),
+        (4 * n * n) as u32,
+        RewardSpec::r1(),
+        TermSpec::goal(),
+        Layout::Empty { random_start: random },
+    )
+}
+
+fn doorkey(id: &str, n: usize, random: bool) -> EnvConfig {
+    base(
+        id,
+        n,
+        n,
+        Caps { doors: 1, keys: 1, ..Caps::default() },
+        (10 * n * n) as u32,
+        RewardSpec::r1(),
+        TermSpec::goal(),
+        Layout::DoorKey { random },
+    )
+}
+
+fn key_corridor(id: &str, size: usize, rows: usize) -> EnvConfig {
+    let (h, w) = super::key_corridor::dims(size, rows);
+    base(
+        id,
+        h,
+        w,
+        Caps { doors: 2 * rows, keys: 1, balls: 1, ..Caps::default() },
+        (10 * h * w) as u32,
+        RewardSpec::ball_pickup(),
+        TermSpec::ball_picked(),
+        Layout::KeyCorridor { size, rows },
+    )
+}
+
+fn lava_gap(id: &str, n: usize) -> EnvConfig {
+    base(
+        id,
+        n,
+        n,
+        Caps::default(),
+        (4 * n * n) as u32,
+        RewardSpec::r2(),
+        TermSpec::goal_or_lava(),
+        Layout::LavaGap,
+    )
+}
+
+fn crossings(id: &str, s: usize, n: usize, lava: bool) -> EnvConfig {
+    base(
+        id,
+        s,
+        s,
+        Caps::default(),
+        (4 * s * s) as u32,
+        RewardSpec::r2(),
+        TermSpec::goal_or_lava(),
+        Layout::Crossings { n, lava },
+    )
+}
+
+fn dynamic_obstacles(id: &str, n: usize) -> EnvConfig {
+    let k = super::dynamic_obstacles::n_obstacles(n);
+    base(
+        id,
+        n,
+        n,
+        Caps { balls: k, ..Caps::default() },
+        (4 * n * n) as u32,
+        RewardSpec::r3(),
+        TermSpec::goal_or_ball_hit(),
+        Layout::DynamicObstacles { n: k },
+    )
+}
+
+fn dist_shift(id: &str, n: usize, strip_row: usize) -> EnvConfig {
+    base(
+        id,
+        n,
+        n,
+        Caps::default(),
+        (4 * n * n) as u32,
+        RewardSpec::r2(),
+        TermSpec::goal_or_lava(),
+        Layout::DistShift { strip_row },
+    )
+}
+
+fn go_to_door(id: &str, n: usize) -> EnvConfig {
+    base(
+        id,
+        n,
+        n,
+        Caps { doors: 4, ..Caps::default() },
+        (4 * n * n) as u32,
+        RewardSpec::door_done(),
+        TermSpec::door_done(),
+        Layout::GoToDoor,
+    )
+}
+
+fn four_rooms(id: &str) -> EnvConfig {
+    base(
+        id,
+        17,
+        17,
+        Caps::default(),
+        100,
+        RewardSpec::r1(),
+        TermSpec::goal(),
+        Layout::FourRooms,
+    )
+}
+
+/// All canonical environment ids (Table 8), in Table-7 benchmark order
+/// first (x-ticks 0–29 of paper Fig. 3), then the Table-8 extras.
+pub fn list_envs() -> Vec<&'static str> {
+    vec![
+        // Table 7 / Fig. 3 order (x-ticks 0..=29)
+        "Navix-Empty-5x5-v0",
+        "Navix-Empty-6x6-v0",
+        "Navix-Empty-8x8-v0",
+        "Navix-Empty-16x16-v0",
+        "Navix-Empty-Random-5x5",
+        "Navix-Empty-Random-6x6",
+        "Navix-DoorKey-5x5-v0",
+        "Navix-DoorKey-6x6-v0",
+        "Navix-DoorKey-8x8-v0",
+        "Navix-DoorKey-16x16-v0",
+        "Navix-FourRooms-v0",
+        "Navix-KeyCorridorS3R1-v0",
+        "Navix-KeyCorridorS3R2-v0",
+        "Navix-KeyCorridorS3R3-v0",
+        "Navix-KeyCorridorS4R3-v0",
+        "Navix-KeyCorridorS5R3-v0",
+        "Navix-KeyCorridorS6R3-v0",
+        "Navix-LavaGapS5-v0",
+        "Navix-LavaGapS6-v0",
+        "Navix-LavaGapS7-v0",
+        "Navix-SimpleCrossingS9N1-v0",
+        "Navix-SimpleCrossingS9N2-v0",
+        "Navix-SimpleCrossingS9N3-v0",
+        "Navix-SimpleCrossingS11N5-v0",
+        "Navix-Dynamic-Obstacles-5x5",
+        "Navix-Dynamic-Obstacles-6x6",
+        "Navix-Dynamic-Obstacles-8x8",
+        "Navix-Dynamic-Obstacles-16x16",
+        "Navix-DistShift1-v0",
+        "Navix-DistShift2-v0",
+        // Table-8 extras
+        "Navix-Empty-Random-8x8",
+        "Navix-Empty-Random-16x16",
+        "Navix-DoorKey-Random-5x5",
+        "Navix-DoorKey-Random-6x6",
+        "Navix-DoorKey-Random-8x8",
+        "Navix-DoorKey-Random-16x16",
+        "Navix-LavaCrossingS9N1-v0",
+        "Navix-GoToDoor-5x5-v0",
+        "Navix-GoToDoor-6x6-v0",
+        "Navix-GoToDoor-8x8-v0",
+    ]
+}
+
+/// The 30 Table-7 ids, in x-tick order (paper Figs. 3 and 8).
+pub fn fig3_envs() -> Vec<&'static str> {
+    list_envs()[..30].to_vec()
+}
+
+/// Instantiate an environment config by id. Accepts the canonical ids from
+/// [`list_envs`] plus the Table-8 `Navix-Crossings-*` / `Navix-LavaGap-S*`
+/// spelling aliases and the equivalent `MiniGrid-*` ids.
+pub fn make(id: &str) -> Result<EnvConfig> {
+    // Normalise aliases.
+    let canonical = id
+        .replace("MiniGrid-", "Navix-")
+        .replace("Navix-Crossings-S", "Navix-SimpleCrossingS")
+        .replace("Navix-LavaGap-S", "Navix-LavaGapS");
+    let c = canonical.as_str();
+    let cfg = match c {
+        "Navix-Empty-5x5-v0" => empty(c, 5, false),
+        "Navix-Empty-6x6-v0" => empty(c, 6, false),
+        "Navix-Empty-8x8-v0" => empty(c, 8, false),
+        "Navix-Empty-16x16-v0" => empty(c, 16, false),
+        "Navix-Empty-Random-5x5" | "Navix-Empty-Random-5x5-v0" => empty(c, 5, true),
+        "Navix-Empty-Random-6x6" | "Navix-Empty-Random-6x6-v0" => empty(c, 6, true),
+        "Navix-Empty-Random-8x8" | "Navix-Empty-Random-8x8-v0" => empty(c, 8, true),
+        "Navix-Empty-Random-16x16" | "Navix-Empty-Random-16x16-v0" => empty(c, 16, true),
+        "Navix-DoorKey-5x5-v0" => doorkey(c, 5, false),
+        "Navix-DoorKey-6x6-v0" => doorkey(c, 6, false),
+        "Navix-DoorKey-8x8-v0" => doorkey(c, 8, false),
+        "Navix-DoorKey-16x16-v0" => doorkey(c, 16, false),
+        "Navix-DoorKey-Random-5x5" => doorkey(c, 5, true),
+        "Navix-DoorKey-Random-6x6" => doorkey(c, 6, true),
+        "Navix-DoorKey-Random-8x8" => doorkey(c, 8, true),
+        "Navix-DoorKey-Random-16x16" => doorkey(c, 16, true),
+        "Navix-FourRooms-v0" => four_rooms(c),
+        "Navix-KeyCorridorS3R1-v0" => key_corridor(c, 3, 1),
+        "Navix-KeyCorridorS3R2-v0" => key_corridor(c, 3, 2),
+        "Navix-KeyCorridorS3R3-v0" => key_corridor(c, 3, 3),
+        "Navix-KeyCorridorS4R3-v0" => key_corridor(c, 4, 3),
+        "Navix-KeyCorridorS5R3-v0" => key_corridor(c, 5, 3),
+        "Navix-KeyCorridorS6R3-v0" => key_corridor(c, 6, 3),
+        "Navix-LavaGapS5-v0" => lava_gap(c, 5),
+        "Navix-LavaGapS6-v0" => lava_gap(c, 6),
+        "Navix-LavaGapS7-v0" => lava_gap(c, 7),
+        "Navix-SimpleCrossingS9N1-v0" => crossings(c, 9, 1, false),
+        "Navix-SimpleCrossingS9N2-v0" => crossings(c, 9, 2, false),
+        "Navix-SimpleCrossingS9N3-v0" => crossings(c, 9, 3, false),
+        "Navix-SimpleCrossingS11N5-v0" => crossings(c, 11, 5, false),
+        "Navix-LavaCrossingS9N1-v0" => crossings(c, 9, 1, true),
+        "Navix-Dynamic-Obstacles-5x5" | "Navix-Dynamic-Obstacles-5x5-v0" => {
+            dynamic_obstacles(c, 5)
+        }
+        "Navix-Dynamic-Obstacles-6x6" | "Navix-Dynamic-Obstacles-6x6-v0" => {
+            dynamic_obstacles(c, 6)
+        }
+        "Navix-Dynamic-Obstacles-8x8" | "Navix-Dynamic-Obstacles-8x8-v0" => {
+            dynamic_obstacles(c, 8)
+        }
+        "Navix-Dynamic-Obstacles-16x16" | "Navix-Dynamic-Obstacles-16x16-v0" => {
+            dynamic_obstacles(c, 16)
+        }
+        "Navix-DistShift1-v0" => dist_shift(c, 6, 2),
+        "Navix-DistShift2-v0" => dist_shift(c, 8, 3),
+        "Navix-GoToDoor-5x5-v0" => go_to_door(c, 5),
+        "Navix-GoToDoor-6x6-v0" => go_to_door(c, 6),
+        "Navix-GoToDoor-8x8-v0" => go_to_door(c, 8),
+        _ => return Err(anyhow!("unknown environment id: {id}")),
+    };
+    Ok(cfg)
+}
+
+/// `make` with observation override (paper Appendix C `nx.make(id,
+/// observation_fn=...)`).
+pub fn make_with(id: &str, obs: ObsKind) -> Result<EnvConfig> {
+    Ok(make(id)?.with_observation(obs))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::testutil::reset_once;
+
+    #[test]
+    fn every_listed_env_instantiates_and_resets() {
+        for id in list_envs() {
+            let cfg = make(id).unwrap_or_else(|e| panic!("{id}: {e}"));
+            assert_eq!(cfg.id, id.replace("MiniGrid-", "Navix-"));
+            let st = reset_once(&cfg, 0);
+            let s = st.slot(0);
+            assert!(s.player().in_bounds(cfg.h, cfg.w), "{id}: player not placed");
+        }
+    }
+
+    #[test]
+    fn table8_dims() {
+        let checks = [
+            ("Navix-Empty-8x8-v0", 8, 8),
+            ("Navix-DoorKey-16x16-v0", 16, 16),
+            ("Navix-FourRooms-v0", 17, 17),
+            ("Navix-KeyCorridorS3R1-v0", 3, 7),
+            ("Navix-KeyCorridorS3R3-v0", 7, 7),
+            ("Navix-KeyCorridorS6R3-v0", 16, 16),
+            ("Navix-LavaGapS7-v0", 7, 7),
+            ("Navix-SimpleCrossingS11N5-v0", 11, 11),
+            ("Navix-DistShift1-v0", 6, 6),
+            ("Navix-DistShift2-v0", 8, 8),
+            ("Navix-GoToDoor-8x8-v0", 8, 8),
+        ];
+        for (id, h, w) in checks {
+            let cfg = make(id).unwrap();
+            assert_eq!((cfg.h, cfg.w), (h, w), "{id}");
+        }
+    }
+
+    #[test]
+    fn aliases_resolve() {
+        assert!(make("MiniGrid-Empty-8x8-v0").is_ok());
+        assert!(make("Navix-Crossings-S9N1-v0").is_ok());
+        assert!(make("Navix-LavaGap-S5-v0").is_ok());
+        assert!(make("No-Such-Env").is_err());
+    }
+
+    #[test]
+    fn fig3_list_has_30_ids() {
+        assert_eq!(fig3_envs().len(), 30);
+        assert_eq!(fig3_envs()[0], "Navix-Empty-5x5-v0");
+        assert_eq!(fig3_envs()[29], "Navix-DistShift2-v0");
+    }
+
+    #[test]
+    fn make_with_overrides_observation() {
+        let cfg = make_with("Navix-Empty-8x8-v0", ObsKind::Rgb).unwrap();
+        assert_eq!(cfg.obs.kind, ObsKind::Rgb);
+    }
+
+    #[test]
+    fn reward_classes_match_table8() {
+        assert_eq!(make("Navix-Empty-8x8-v0").unwrap().reward, RewardSpec::r1());
+        assert_eq!(make("Navix-LavaGapS5-v0").unwrap().reward, RewardSpec::r2());
+        assert_eq!(
+            make("Navix-Dynamic-Obstacles-8x8").unwrap().reward,
+            RewardSpec::r3()
+        );
+    }
+}

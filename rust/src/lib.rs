@@ -1,0 +1,46 @@
+//! # navix-rs — NAVIX (MiniGrid-in-JAX) reproduced as a Rust + JAX + Pallas stack
+//!
+//! This crate is the Layer-3 coordinator and simulator substrate of a
+//! three-layer reproduction of *"NAVIX: Scaling MiniGrid Environments with
+//! JAX"* (NeurIPS 2025):
+//!
+//! * [`core`], [`systems`], [`envs`] — the full MiniGrid/NAVIX environment
+//!   suite as an Entity-Component-System engine with struct-of-arrays batched
+//!   state (the paper's contribution, rebuilt natively).
+//! * [`batch`] — the batched stepper (the `jax.vmap` analog) with autoreset.
+//! * [`baseline`] — a faithful scalar, object-oriented MiniGrid engine plus
+//!   gymnasium-style vector wrappers (the system the paper benchmarks
+//!   against).
+//! * [`nn`], [`agents`] — PPO / Double-DQN / SAC baselines (paper §4.3) on a
+//!   manual-backprop NN substrate.
+//! * [`runtime`] — PJRT client that loads the AOT artifacts produced by the
+//!   build-time Python layers (JAX model + Pallas kernels) and executes them
+//!   from the Rust hot path.
+//! * [`coordinator`] — training orchestration: XLA-fused PPO, multi-agent
+//!   parallel training (paper Fig. 6), throughput harnesses (Figs. 4/5).
+//! * [`bench_harness`] — timing/statistics used by every `benches/fig*.rs`.
+//!
+//! Python never runs on the request path: `make artifacts` lowers the JAX
+//! model (with its Pallas kernels) to HLO text once; the Rust binary is
+//! self-contained afterwards.
+
+pub mod bench_harness;
+pub mod cli;
+pub mod config;
+pub mod rng;
+
+pub mod core;
+pub mod systems;
+pub mod envs;
+pub mod batch;
+pub mod baseline;
+
+pub mod nn;
+pub mod agents;
+
+pub mod runtime;
+pub mod coordinator;
+
+pub use crate::core::actions::Action;
+pub use crate::core::timestep::{StepType, Timestep};
+pub use crate::envs::registry::{list_envs, make, make_with};

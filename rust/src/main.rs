@@ -1,0 +1,272 @@
+//! `navix` — the Layer-3 launcher.
+//!
+//! Subcommands:
+//! * `ls` — list every registered environment id (Tables 7–8).
+//! * `info [--env ID]` — live ECSM inventory (paper Tables 1–6) and, with
+//!   `--env`, the config of one environment.
+//! * `run --env ID [--batch B] [--steps N] [--engine batched|sync|async]`
+//!   — timed random-policy unroll (the §4.1 speed protocol), printing wall
+//!   time and steps/s.
+//! * `train --algo ppo|dqn|sac|ppo-xla --env ID [--steps N] [--seed S]
+//!   [--config FILE]` — train a baseline, append to the scoreboard.
+//! * `render --env ID [--seed S]` — ASCII-render a reset state (debugging).
+
+use anyhow::{anyhow, Result};
+use navix::agents::{Dqn, DqnConfig, Ppo, PpoConfig, Sac, SacConfig};
+use navix::batch::BatchedEnv;
+use navix::cli::Args;
+use navix::config::Config;
+use navix::coordinator::scoreboard::{Entry, Scoreboard};
+use navix::coordinator::{unroll_walltime, Engine, XlaPpo};
+use navix::core::entities::EntityKind;
+use navix::rng::Key;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.subcommand.as_str() {
+        "ls" => cmd_ls(),
+        "info" => cmd_info(args),
+        "run" => cmd_run(args),
+        "train" => cmd_train(args),
+        "render" => cmd_render(args),
+        "" | "help" => {
+            print_help();
+            Ok(())
+        }
+        other => Err(anyhow!("unknown subcommand `{other}` (try `navix help`)")),
+    }
+}
+
+fn print_help() {
+    println!(
+        "navix — Rust+JAX+Pallas reproduction of NAVIX (NeurIPS 2025)\n\n\
+         USAGE: navix <ls|info|run|train|render> [options]\n\n\
+         run   --env ID [--batch B=8] [--steps N=1000] [--engine batched|sync|async] [--seed S]\n\
+         train --algo ppo|dqn|sac|ppo-xla --env ID [--steps N=100000] [--seed S] [--config FILE]\n\
+         info  [--env ID]\n\
+         render --env ID [--seed S]"
+    );
+}
+
+fn cmd_ls() -> Result<()> {
+    for id in navix::envs::registry::list_envs() {
+        println!("{id}");
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    if let Some(id) = args.opt("env") {
+        let cfg = navix::envs::registry::make(id)?;
+        println!("id          : {}", cfg.id);
+        println!("grid        : {}x{}", cfg.h, cfg.w);
+        println!("max_steps   : {}", cfg.max_steps);
+        println!("observation : {}", cfg.obs.kind.name());
+        println!(
+            "reward      : {}",
+            cfg.reward.terms.iter().map(|t| t.name()).collect::<Vec<_>>().join(" + ")
+        );
+        println!(
+            "termination : {}",
+            cfg.termination.terms.iter().map(|t| t.name()).collect::<Vec<_>>().join(" | ")
+        );
+        println!(
+            "capacities  : doors={} keys={} balls={} boxes={}",
+            cfg.caps.doors, cfg.caps.keys, cfg.caps.balls, cfg.caps.boxes
+        );
+        return Ok(());
+    }
+    println!("== Entities (paper Table 2) ==");
+    for e in EntityKind::ALL {
+        println!("{:<8} [{}]", format!("{e:?}"), e.components().join(", "));
+    }
+    println!("\n== Systems (paper Table 3) ==");
+    println!("Intervention  I : S x A -> S   (rust/src/systems/intervention.rs)");
+    println!("Transition    P : S x A -> S   (rust/src/systems/transition.rs)");
+    println!("Observation   O : S -> O       (rust/src/systems/observations.rs, 6 fns)");
+    println!("Reward        R : S x A -> R   (rust/src/systems/rewards.rs)");
+    println!("Termination   g : S -> B       (rust/src/systems/terminations.rs)");
+    println!("\n== Environments ==");
+    println!("{} registered ids (`navix ls`)", navix::envs::registry::list_envs().len());
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let env_id = args.opt("env").map(str::to_string).unwrap_or("Navix-Empty-8x8-v0".into());
+    let batch = args.opt_usize("batch", 8)?;
+    let steps = args.opt_usize("steps", 1000)?;
+    let seed = args.opt_u64("seed", 0)?;
+    let engine = match args.opt_or("engine", "batched").as_str() {
+        "batched" => Engine::Batched,
+        "sync" => Engine::BaselineSync,
+        "async" => Engine::BaselineAsync,
+        other => return Err(anyhow!("unknown engine {other}")),
+    };
+    // Optional observation-function override (also the perf-probe knob:
+    // comparing kinds isolates the observation system's share of the step).
+    if let Some(kind) = args.opt("obs") {
+        use navix::systems::observations::ObsKind;
+        let kind = match kind {
+            "symbolic" => ObsKind::Symbolic,
+            "symbolic_first_person" => ObsKind::SymbolicFirstPerson,
+            "rgb" => ObsKind::Rgb,
+            "rgb_first_person" => ObsKind::RgbFirstPerson,
+            "categorical" => ObsKind::Categorical,
+            "categorical_first_person" => ObsKind::CategoricalFirstPerson,
+            other => return Err(anyhow!("unknown observation kind {other}")),
+        };
+        anyhow::ensure!(
+            engine == Engine::Batched,
+            "--obs override is only wired for the batched engine"
+        );
+        let cfg = navix::envs::registry::make_with(&env_id, kind)?;
+        let mut env =
+            navix::batch::BatchedEnv::new(cfg, batch, navix::rng::Key::new(seed));
+        let start = std::time::Instant::now();
+        env.rollout_random(steps, seed ^ 0xAC7);
+        let secs = start.elapsed().as_secs_f64();
+        println!(
+            "navix-batched env={env_id} obs={} batch={batch} steps={steps}: {:.4}s ({:.0} steps/s)",
+            kind.name(),
+            secs,
+            (batch * steps) as f64 / secs
+        );
+        return Ok(());
+    }
+    let secs = unroll_walltime(engine, &env_id, batch, steps, seed)?;
+    let sps = (batch * steps) as f64 / secs;
+    println!(
+        "{} env={env_id} batch={batch} steps={steps}: {:.4}s ({:.0} steps/s)",
+        engine.name(),
+        secs,
+        sps
+    );
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let algo = args.opt_or("algo", "ppo");
+    let env_id = args.opt("env").map(str::to_string).unwrap_or("Navix-Empty-8x8-v0".into());
+    let steps = args.opt_u64("steps", 100_000)?;
+    let seed = args.opt_u64("seed", 0)?;
+    let cfgfile = args.opt("config").map(Config::load).transpose()?.unwrap_or_default();
+    let env_cfg = navix::envs::registry::make(&env_id)?;
+
+    println!("training {algo} on {env_id} for {steps} steps (seed {seed})");
+    let t0 = std::time::Instant::now();
+    let (final_return, episodes) = match algo.as_str() {
+        "ppo" => {
+            let num_envs = cfgfile.get_usize("ppo.num_envs", 16)?;
+            let mut env = BatchedEnv::new(env_cfg, num_envs, Key::new(seed));
+            let mut ppo = Ppo::new(
+                PpoConfig {
+                    num_envs,
+                    lr: cfgfile.get_f32("ppo.lr", 2.5e-4)?,
+                    ..PpoConfig::default()
+                },
+                navix::agents::OBS_DIM,
+                7,
+                seed,
+            );
+            let log = ppo.train(&mut env, steps);
+            print_curve(&log);
+            (log.final_return(), log.episodes)
+        }
+        "ppo-xla" => {
+            let num_envs = cfgfile.get_usize("ppo.num_envs", 16)?;
+            let mut env = BatchedEnv::new(env_cfg, num_envs, Key::new(seed));
+            let mut ppo =
+                XlaPpo::new(PpoConfig { num_envs, ..PpoConfig::default() }, seed)?;
+            let log = ppo.train(&mut env, steps)?;
+            print_curve(&log);
+            (log.final_return(), log.episodes)
+        }
+        "dqn" => {
+            let num_envs = cfgfile.get_usize("dqn.num_envs", 16)?;
+            let mut env = BatchedEnv::new(env_cfg, num_envs, Key::new(seed));
+            let mut dqn = Dqn::new(DqnConfig::default(), navix::agents::OBS_DIM, 7, seed);
+            let log = dqn.train(&mut env, steps);
+            print_curve(&log);
+            (log.final_return(), log.episodes)
+        }
+        "sac" => {
+            let num_envs = cfgfile.get_usize("sac.num_envs", 16)?;
+            let mut env = BatchedEnv::new(env_cfg, num_envs, Key::new(seed));
+            let mut sac = Sac::new(SacConfig::default(), navix::agents::OBS_DIM, 7, seed);
+            let log = sac.train(&mut env, steps);
+            print_curve(&log);
+            (log.final_return(), log.episodes)
+        }
+        other => return Err(anyhow!("unknown algorithm {other}")),
+    };
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "done in {dt:.1}s ({:.0} steps/s): final mean return {final_return:.3} over {episodes} episodes",
+        steps as f64 / dt
+    );
+
+    let mut sb = Scoreboard::load("results/scoreboard.tsv")?;
+    sb.record(Entry { env_id, algo, seeds: 1, env_steps: steps, final_return });
+    sb.save()?;
+    Ok(())
+}
+
+fn print_curve(log: &navix::agents::TrainLog) {
+    let n = log.curve.len();
+    let stride = (n / 10).max(1);
+    for (i, p) in log.curve.iter().enumerate() {
+        if i % stride == 0 || i == n - 1 {
+            println!(
+                "  step {:>9}  return {:>7.3}  loss {:>9.4}",
+                p.env_steps, p.mean_return, p.loss
+            );
+        }
+    }
+}
+
+fn cmd_render(args: &Args) -> Result<()> {
+    let env_id = args.opt("env").map(str::to_string).unwrap_or("Navix-Empty-8x8-v0".into());
+    let seed = args.opt_u64("seed", 0)?;
+    let cfg = navix::envs::registry::make(&env_id)?;
+    let env = BatchedEnv::new(cfg.clone(), 1, Key::new(seed));
+    let mut sym = vec![0i32; cfg.h * cfg.w * 3];
+    navix::systems::observations::symbolic(&env.state.slot(0), &mut sym);
+    println!("{env_id} (seed {seed}):");
+    for r in 0..cfg.h {
+        let mut line = String::new();
+        for c in 0..cfg.w {
+            let tag = sym[(r * cfg.w + c) * 3];
+            let dir = sym[(r * cfg.w + c) * 3 + 2];
+            line.push(match tag {
+                2 => '#',
+                4 => 'D',
+                5 => 'k',
+                6 => 'o',
+                7 => 'B',
+                8 => 'G',
+                9 => '~',
+                10 => ['>', 'v', '<', '^'][(dir.rem_euclid(4)) as usize],
+                _ => '.',
+            });
+        }
+        println!("  {line}");
+    }
+    Ok(())
+}

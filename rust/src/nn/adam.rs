@@ -1,0 +1,89 @@
+//! Adam optimizer (Kingma & Ba, 2015) over flat parameter vectors, with the
+//! global-norm gradient clipping the paper's Rejax baselines tune (Table 9).
+
+/// Adam state for one parameter vector.
+#[derive(Clone, Debug)]
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub t: u64,
+    m: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl Adam {
+    pub fn new(n: usize, lr: f32) -> Adam {
+        Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, t: 0, m: vec![0.0; n], v: vec![0.0; n] }
+    }
+
+    /// Apply one update step in place. `grads` is consumed as-is (call
+    /// [`clip_global_norm`] first if clipping is configured).
+    pub fn step(&mut self, params: &mut [f32], grads: &[f32]) {
+        debug_assert_eq!(params.len(), grads.len());
+        debug_assert_eq!(params.len(), self.m.len());
+        self.t += 1;
+        let b1t = 1.0 - self.beta1.powi(self.t as i32);
+        let b2t = 1.0 - self.beta2.powi(self.t as i32);
+        for i in 0..params.len() {
+            let g = grads[i];
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * g;
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * g * g;
+            let mhat = self.m[i] / b1t;
+            let vhat = self.v[i] / b2t;
+            params[i] -= self.lr * mhat / (vhat.sqrt() + self.eps);
+        }
+    }
+}
+
+/// Scale `grads` so their global L2 norm is at most `max_norm`. Returns the
+/// pre-clip norm.
+pub fn clip_global_norm(grads: &mut [f32], max_norm: f32) -> f32 {
+    let norm = grads.iter().map(|g| (*g as f64) * (*g as f64)).sum::<f64>().sqrt() as f32;
+    if norm > max_norm && norm > 0.0 {
+        let scale = max_norm / norm;
+        for g in grads.iter_mut() {
+            *g *= scale;
+        }
+    }
+    norm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adam_minimises_a_quadratic() {
+        // minimise f(p) = (p-3)^2
+        let mut p = vec![0.0f32];
+        let mut opt = Adam::new(1, 0.1);
+        for _ in 0..500 {
+            let g = vec![2.0 * (p[0] - 3.0)];
+            opt.step(&mut p, &g);
+        }
+        assert!((p[0] - 3.0).abs() < 1e-2, "converged to {}", p[0]);
+    }
+
+    #[test]
+    fn bias_correction_makes_first_step_lr_sized() {
+        let mut p = vec![0.0f32];
+        let mut opt = Adam::new(1, 0.01);
+        opt.step(&mut p, &[1.0]);
+        assert!((p[0] + 0.01).abs() < 1e-4, "first step should be ≈ -lr, got {}", p[0]);
+    }
+
+    #[test]
+    fn clipping_preserves_direction() {
+        let mut g = vec![3.0, 4.0]; // norm 5
+        let norm = clip_global_norm(&mut g, 1.0);
+        assert!((norm - 5.0).abs() < 1e-6);
+        assert!((g[0] - 0.6).abs() < 1e-6);
+        assert!((g[1] - 0.8).abs() < 1e-6);
+        // under the cap: untouched
+        let mut g2 = vec![0.3, 0.4];
+        clip_global_norm(&mut g2, 1.0);
+        assert_eq!(g2, vec![0.3, 0.4]);
+    }
+}

@@ -1,0 +1,276 @@
+//! Multi-layer perceptron with hand-derived backprop over flat parameter
+//! storage. Layout per layer: `W (out×in, row-major) ++ b (out)`.
+
+use crate::rng::Rng;
+
+/// Hidden-layer activation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Activation {
+    Relu,
+    Tanh,
+}
+
+impl Activation {
+    #[inline]
+    fn f(self, x: f32) -> f32 {
+        match self {
+            Activation::Relu => x.max(0.0),
+            Activation::Tanh => x.tanh(),
+        }
+    }
+
+    /// Derivative expressed in terms of the *activated* output `y`.
+    #[inline]
+    fn df_from_y(self, y: f32) -> f32 {
+        match self {
+            Activation::Relu => {
+                if y > 0.0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            Activation::Tanh => 1.0 - y * y,
+        }
+    }
+}
+
+/// An MLP: `dims = [in, h1, …, out]`, linear final layer.
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    pub dims: Vec<usize>,
+    pub act: Activation,
+    pub params: Vec<f32>,
+}
+
+/// Per-forward activation cache for backprop (one per concurrent sample).
+#[derive(Clone, Debug, Default)]
+pub struct Cache {
+    /// Activations per layer, `acts[0]` = input, `acts[L]` = output.
+    pub acts: Vec<Vec<f32>>,
+}
+
+impl Mlp {
+    /// Total parameter count for `dims`.
+    pub fn param_count(dims: &[usize]) -> usize {
+        dims.windows(2).map(|w| w[0] * w[1] + w[1]).sum()
+    }
+
+    /// Orthogonal-ish init: scaled He-normal weights, zero biases (matches
+    /// the scale the paper's Rejax baselines use closely enough for 2×64
+    /// nets).
+    pub fn new(dims: &[usize], act: Activation, rng: &mut Rng) -> Mlp {
+        let mut params = vec![0.0; Mlp::param_count(dims)];
+        let mut off = 0;
+        for w in dims.windows(2) {
+            let (fan_in, fan_out) = (w[0], w[1]);
+            let scale = (2.0 / fan_in as f64).sqrt();
+            for p in params[off..off + fan_in * fan_out].iter_mut() {
+                *p = (rng.normal() * scale) as f32;
+            }
+            off += fan_in * fan_out + fan_out; // biases stay zero
+        }
+        Mlp { dims: dims.to_vec(), act, params }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.dims.len() - 1
+    }
+
+    /// Forward pass; fills `cache` and returns the output activations.
+    pub fn forward(&self, x: &[f32], cache: &mut Cache) -> Vec<f32> {
+        debug_assert_eq!(x.len(), self.dims[0]);
+        cache.acts.clear();
+        cache.acts.push(x.to_vec());
+        let mut off = 0;
+        let mut cur = x.to_vec();
+        for (li, wpair) in self.dims.windows(2).enumerate() {
+            let (nin, nout) = (wpair[0], wpair[1]);
+            let w = &self.params[off..off + nin * nout];
+            let b = &self.params[off + nin * nout..off + nin * nout + nout];
+            let mut next = vec![0.0f32; nout];
+            for o in 0..nout {
+                let row = &w[o * nin..(o + 1) * nin];
+                let mut acc = b[o];
+                for i in 0..nin {
+                    acc += row[i] * cur[i];
+                }
+                next[o] =
+                    if li + 1 < self.n_layers() { self.act.f(acc) } else { acc };
+            }
+            off += nin * nout + nout;
+            cache.acts.push(next.clone());
+            cur = next;
+        }
+        cur
+    }
+
+    /// Inference without caching.
+    pub fn infer(&self, x: &[f32]) -> Vec<f32> {
+        let mut cache = Cache::default();
+        self.forward(x, &mut cache)
+    }
+
+    /// Backward pass: `grad_out` is ∂L/∂output; accumulates parameter
+    /// gradients into `grads` (same layout as `params`) and returns
+    /// ∂L/∂input.
+    pub fn backward(&self, cache: &Cache, grad_out: &[f32], grads: &mut [f32]) -> Vec<f32> {
+        debug_assert_eq!(grads.len(), self.params.len());
+        let n_layers = self.n_layers();
+        // Parameter offsets per layer.
+        let mut offsets = Vec::with_capacity(n_layers);
+        let mut off = 0;
+        for w in self.dims.windows(2) {
+            offsets.push(off);
+            off += w[0] * w[1] + w[1];
+        }
+
+        let mut delta = grad_out.to_vec();
+        for li in (0..n_layers).rev() {
+            let (nin, nout) = (self.dims[li], self.dims[li + 1]);
+            let input = &cache.acts[li];
+            let output = &cache.acts[li + 1];
+            // activation derivative (hidden layers only)
+            if li + 1 < n_layers {
+                for o in 0..nout {
+                    delta[o] *= self.act.df_from_y(output[o]);
+                }
+            }
+            let off = offsets[li];
+            let (gw, gb) = {
+                let (a, b) = grads[off..off + nin * nout + nout].split_at_mut(nin * nout);
+                (a, b)
+            };
+            for o in 0..nout {
+                let d = delta[o];
+                gb[o] += d;
+                let row = &mut gw[o * nin..(o + 1) * nin];
+                for i in 0..nin {
+                    row[i] += d * input[i];
+                }
+            }
+            // propagate
+            if li > 0 {
+                let w = &self.params[off..off + nin * nout];
+                let mut prev = vec![0.0f32; nin];
+                for o in 0..nout {
+                    let d = delta[o];
+                    let row = &w[o * nin..(o + 1) * nin];
+                    for i in 0..nin {
+                        prev[i] += d * row[i];
+                    }
+                }
+                delta = prev;
+            } else {
+                let w = &self.params[off..off + nin * nout];
+                let mut prev = vec![0.0f32; nin];
+                for o in 0..nout {
+                    let d = delta[o];
+                    let row = &w[o * nin..(o + 1) * nin];
+                    for i in 0..nin {
+                        prev[i] += d * row[i];
+                    }
+                }
+                return prev;
+            }
+        }
+        unreachable!()
+    }
+
+    /// Polyak/copy update from another network (target networks).
+    pub fn soft_update_from(&mut self, src: &Mlp, tau: f32) {
+        debug_assert_eq!(self.params.len(), src.params.len());
+        for (t, s) in self.params.iter_mut().zip(&src.params) {
+            *t = (1.0 - tau) * *t + tau * s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finite_diff_check(act: Activation) {
+        let mut rng = Rng::new(42);
+        let dims = [5, 8, 8, 3];
+        let mlp = Mlp::new(&dims, act, &mut rng);
+        let x: Vec<f32> = (0..5).map(|_| rng.normal() as f32).collect();
+        // Loss: L = sum(out^2)/2 so dL/dout = out.
+        let mut cache = Cache::default();
+        let out = mlp.forward(&x, &mut cache);
+        let mut grads = vec![0.0; mlp.params.len()];
+        let gin = mlp.backward(&cache, &out, &mut grads);
+
+        let loss = |m: &Mlp, x: &[f32]| -> f64 {
+            let o = m.infer(x);
+            o.iter().map(|&v| (v as f64) * (v as f64) / 2.0).sum()
+        };
+        // parameter gradients (spot-check a spread of indices)
+        let eps = 1e-3f32;
+        for idx in (0..mlp.params.len()).step_by(17) {
+            let mut mp = mlp.clone();
+            mp.params[idx] += eps;
+            let mut mm = mlp.clone();
+            mm.params[idx] -= eps;
+            let num = (loss(&mp, &x) - loss(&mm, &x)) / (2.0 * eps as f64);
+            let ana = grads[idx] as f64;
+            assert!(
+                (num - ana).abs() < 2e-2 * (1.0 + num.abs().max(ana.abs())),
+                "param {idx}: numeric {num} vs analytic {ana} ({act:?})"
+            );
+        }
+        // input gradient
+        for i in 0..x.len() {
+            let mut xp = x.clone();
+            xp[i] += eps;
+            let mut xm = x.clone();
+            xm[i] -= eps;
+            let num = (loss(&mlp, &xp) - loss(&mlp, &xm)) / (2.0 * eps as f64);
+            let ana = gin[i] as f64;
+            assert!(
+                (num - ana).abs() < 2e-2 * (1.0 + num.abs().max(ana.abs())),
+                "input {i}: numeric {num} vs analytic {ana} ({act:?})"
+            );
+        }
+    }
+
+    #[test]
+    fn gradients_match_finite_differences_relu() {
+        finite_diff_check(Activation::Relu);
+    }
+
+    #[test]
+    fn gradients_match_finite_differences_tanh() {
+        finite_diff_check(Activation::Tanh);
+    }
+
+    #[test]
+    fn param_count() {
+        assert_eq!(Mlp::param_count(&[147, 64, 64, 7]), 147 * 64 + 64 + 64 * 64 + 64 + 64 * 7 + 7);
+    }
+
+    #[test]
+    fn forward_shapes_and_determinism() {
+        let mut rng = Rng::new(0);
+        let mlp = Mlp::new(&[4, 16, 2], Activation::Relu, &mut rng);
+        let a = mlp.infer(&[1.0, -1.0, 0.5, 2.0]);
+        let b = mlp.infer(&[1.0, -1.0, 0.5, 2.0]);
+        assert_eq!(a.len(), 2);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn soft_update_interpolates() {
+        let mut rng = Rng::new(1);
+        let src = Mlp::new(&[2, 3, 1], Activation::Relu, &mut rng);
+        let mut dst = Mlp::new(&[2, 3, 1], Activation::Relu, &mut rng);
+        let before = dst.params.clone();
+        dst.soft_update_from(&src, 0.5);
+        for i in 0..before.len() {
+            let expect = 0.5 * before[i] + 0.5 * src.params[i];
+            assert!((dst.params[i] - expect).abs() < 1e-6);
+        }
+        dst.soft_update_from(&src, 1.0);
+        assert_eq!(dst.params, src.params);
+    }
+}

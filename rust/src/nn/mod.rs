@@ -1,0 +1,112 @@
+//! Neural-network substrate for the native RL baselines (paper §4.3).
+//!
+//! A deliberately small, dependency-free stack: flat-`Vec<f32>` parameter
+//! storage, dense layers with hand-derived backprop (gradient-checked
+//! against finite differences in the tests), ReLU/tanh activations and Adam.
+//! All paper baselines use two hidden layers of 64 units, which this module
+//! mirrors by default.
+//!
+//! The *flagship* PPO path does not use this module for its update — that
+//! runs through the AOT-compiled JAX/Pallas artifact via
+//! [`crate::runtime`] — but the native implementation powers DQN/SAC, the
+//! Fig.-7 baselines, and serves as the cross-check for the XLA path.
+
+pub mod adam;
+pub mod mlp;
+
+pub use adam::Adam;
+pub use mlp::{Activation, Mlp};
+
+/// Numerically-stable softmax into `out`.
+pub fn softmax(logits: &[f32], out: &mut [f32]) {
+    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut z = 0.0;
+    for (o, &l) in out.iter_mut().zip(logits) {
+        *o = (l - m).exp();
+        z += *o;
+    }
+    for o in out.iter_mut() {
+        *o /= z;
+    }
+}
+
+/// log-softmax into `out`.
+pub fn log_softmax(logits: &[f32], out: &mut [f32]) {
+    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let z: f32 = logits.iter().map(|&l| (l - m).exp()).sum();
+    let lz = z.ln() + m;
+    for (o, &l) in out.iter_mut().zip(logits) {
+        *o = l - lz;
+    }
+}
+
+/// Sample from a categorical distribution given logits.
+pub fn sample_categorical(logits: &[f32], rng: &mut crate::rng::Rng) -> usize {
+    let mut probs = vec![0.0; logits.len()];
+    softmax(logits, &mut probs);
+    rng.categorical(&probs)
+}
+
+/// Argmax index.
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_sums_to_one_and_orders() {
+        let logits = [1.0, 2.0, 3.0];
+        let mut p = [0.0; 3];
+        softmax(&logits, &mut p);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn softmax_is_shift_invariant_and_stable() {
+        let mut a = [0.0; 3];
+        let mut b = [0.0; 3];
+        softmax(&[1.0, 2.0, 3.0], &mut a);
+        softmax(&[1001.0, 1002.0, 1003.0], &mut b);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn log_softmax_matches_softmax() {
+        let logits = [0.3, -1.2, 2.0, 0.0];
+        let mut p = [0.0; 4];
+        let mut lp = [0.0; 4];
+        softmax(&logits, &mut p);
+        log_softmax(&logits, &mut lp);
+        for (x, y) in p.iter().zip(&lp) {
+            assert!((x.ln() - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.5]), 1);
+    }
+
+    #[test]
+    fn categorical_sampling_respects_probs() {
+        let mut rng = crate::rng::Rng::new(0);
+        let logits = [0.0, 5.0, 0.0]; // heavily favours index 1
+        let mut counts = [0usize; 3];
+        for _ in 0..1000 {
+            counts[sample_categorical(&logits, &mut rng)] += 1;
+        }
+        assert!(counts[1] > 900, "{counts:?}");
+    }
+}

@@ -1,0 +1,244 @@
+//! Splittable, counter-based pseudo-random number generation.
+//!
+//! The `rand` crate is not vendored in this offline environment, and — more
+//! importantly — NAVIX's reproducibility story rests on JAX-style *splittable*
+//! keys (`jax.random.split` / `fold_in`). This module provides a small,
+//! deterministic, splittable PRNG built on the SplitMix64 finalizer, which is
+//! reimplemented bit-for-bit on the Python side (`python/compile/parity.py`)
+//! so trajectory-level parity tests can pin down both engines.
+//!
+//! Statistical quality: SplitMix64 passes BigCrush; for grid-world layout
+//! sampling and ε-greedy exploration this is far beyond sufficient.
+
+/// SplitMix64 finalizer: the core bijective mixing function.
+#[inline(always)]
+pub fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// A splittable random key, analogous to `jax.random.PRNGKey`.
+///
+/// Keys are cheap (a single `u64`) and every derivation is a pure function of
+/// the key, so the same seed reproduces the same environment layouts and
+/// agent exploration on both the Rust and JAX sides.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Key(pub u64);
+
+impl Key {
+    /// Create a key from a seed (mirrors `jax.random.PRNGKey(seed)`).
+    pub fn new(seed: u64) -> Self {
+        Key(splitmix64(seed ^ 0xA076_1D64_78BD_642F))
+    }
+
+    /// Derive a child key by folding in data (mirrors `jax.random.fold_in`).
+    #[inline]
+    pub fn fold_in(self, data: u64) -> Key {
+        Key(splitmix64(self.0 ^ splitmix64(data ^ 0x9E6C_63D0_876A_3F6B)))
+    }
+
+    /// Split into `n` independent keys (mirrors `jax.random.split`).
+    pub fn split(self, n: usize) -> Vec<Key> {
+        (0..n as u64).map(|i| self.fold_in(i)).collect()
+    }
+
+    /// Split into two keys (the common case).
+    #[inline]
+    pub fn split2(self) -> (Key, Key) {
+        (self.fold_in(0), self.fold_in(1))
+    }
+}
+
+/// A mutable PRNG stream seeded from a [`Key`]. Used where sequential draws
+/// are more convenient than key plumbing (layout generation, baselines).
+#[derive(Clone, Debug)]
+pub struct Rng {
+    pub state: u64,
+}
+
+impl Rng {
+    pub fn from_key(key: Key) -> Self {
+        Rng { state: key.0 }
+    }
+
+    pub fn new(seed: u64) -> Self {
+        Rng::from_key(Key::new(seed))
+    }
+
+    /// Next raw 64 random bits (SplitMix64 sequence).
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform integer in `[0, n)`. Uses Lemire's multiply-shift reduction
+    /// (no modulo bias for the n ≪ 2^64 values used here).
+    #[inline]
+    pub fn below(&mut self, n: u32) -> u32 {
+        debug_assert!(n > 0);
+        (((self.next_u64() >> 32) * n as u64) >> 32) as u32
+    }
+
+    /// Uniform integer in `[lo, hi)` (mirrors `jax.random.randint`).
+    #[inline]
+    pub fn randint(&mut self, lo: i32, hi: i32) -> i32 {
+        debug_assert!(hi > lo);
+        lo + self.below((hi - lo) as u32) as i32
+    }
+
+    /// Uniform float in `[0, 1)` with 53-bit resolution.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in `[0, 1)`.
+    #[inline]
+    pub fn uniform_f32(&mut self) -> f32 {
+        self.uniform() as f32
+    }
+
+    /// Standard normal via Box–Muller (used for NN init).
+    pub fn normal(&mut self) -> f64 {
+        // Guard against log(0).
+        let u1 = loop {
+            let u = self.uniform();
+            if u > 1e-300 {
+                break u;
+            }
+        };
+        let u2 = self.uniform();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Bernoulli trial with probability `p`.
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.uniform() < p
+    }
+
+    /// Sample an index from unnormalised non-negative weights.
+    pub fn categorical(&mut self, weights: &[f32]) -> usize {
+        let total: f32 = weights.iter().sum();
+        if total <= 0.0 {
+            return self.below(weights.len() as u32) as usize;
+        }
+        let mut x = self.uniform_f32() * total;
+        for (i, &w) in weights.iter().enumerate() {
+            x -= w;
+            if x <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u32 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Pick a uniformly random element.
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len() as u32) as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keys_are_deterministic() {
+        assert_eq!(Key::new(0), Key::new(0));
+        assert_ne!(Key::new(0), Key::new(1));
+        let (a, b) = Key::new(7).split2();
+        assert_ne!(a, b);
+        assert_eq!(Key::new(7).split(4).len(), 4);
+    }
+
+    #[test]
+    fn split_children_are_distinct() {
+        let ks = Key::new(42).split(64);
+        for i in 0..ks.len() {
+            for j in (i + 1)..ks.len() {
+                assert_ne!(ks[i], ks[j], "children {i} and {j} collide");
+            }
+        }
+    }
+
+    #[test]
+    fn fold_in_differs_from_parent() {
+        let k = Key::new(3);
+        assert_ne!(k.fold_in(0), k);
+        assert_ne!(k.fold_in(0), k.fold_in(1));
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut r = Rng::new(0);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            let x = r.below(7);
+            assert!(x < 7);
+            seen[x as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all residues should appear");
+    }
+
+    #[test]
+    fn uniform_mean_is_centred() {
+        let mut r = Rng::new(9);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| r.uniform()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(11);
+        let n = 20_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn randint_bounds() {
+        let mut r = Rng::new(5);
+        for _ in 0..1000 {
+            let x = r.randint(-3, 4);
+            assert!((-3..4).contains(&x));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(1);
+        let mut xs: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn categorical_respects_zero_weights() {
+        let mut r = Rng::new(2);
+        for _ in 0..200 {
+            let i = r.categorical(&[0.0, 1.0, 0.0]);
+            assert_eq!(i, 1);
+        }
+    }
+}

@@ -1,0 +1,164 @@
+//! Artifact discovery: locates the `artifacts/` directory produced by
+//! `make artifacts` and names the executables the coordinator expects.
+
+use anyhow::{anyhow, Result};
+use std::path::PathBuf;
+
+/// Resolve the artifacts directory: `$NAVIX_ARTIFACTS` if set, else
+/// `artifacts/` relative to the current dir, else relative to the crate
+/// root (so `cargo test` from anywhere finds it).
+pub fn artifacts_dir() -> Result<PathBuf> {
+    if let Ok(dir) = std::env::var("NAVIX_ARTIFACTS") {
+        let p = PathBuf::from(dir);
+        if p.is_dir() {
+            return Ok(p);
+        }
+        return Err(anyhow!("NAVIX_ARTIFACTS={} is not a directory", p.display()));
+    }
+    for cand in ["artifacts", concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")] {
+        let p = PathBuf::from(cand);
+        if p.is_dir() {
+            return Ok(p);
+        }
+    }
+    Err(anyhow!(
+        "artifacts/ not found — run `make artifacts` (or set NAVIX_ARTIFACTS)"
+    ))
+}
+
+/// The artifact files the coordinator knows how to drive.
+#[derive(Clone, Debug)]
+pub struct ArtifactSet {
+    pub dir: PathBuf,
+}
+
+impl ArtifactSet {
+    pub fn discover() -> Result<ArtifactSet> {
+        Ok(ArtifactSet { dir: artifacts_dir()? })
+    }
+
+    fn existing(&self, name: &str) -> Result<PathBuf> {
+        let p = self.dir.join(name);
+        if p.is_file() {
+            Ok(p)
+        } else {
+            Err(anyhow!("missing artifact {} — run `make artifacts`", p.display()))
+        }
+    }
+
+    /// Batched Empty-8x8 env step (L2+L1) for batch size `b`.
+    pub fn env_step(&self, b: usize) -> Result<PathBuf> {
+        self.existing(&format!("env_step_empty8_b{b}.hlo.txt"))
+    }
+
+    /// Actor-critic forward pass for batch size `b`.
+    pub fn ppo_fwd(&self, b: usize) -> Result<PathBuf> {
+        self.existing(&format!("ppo_fwd_b{b}.hlo.txt"))
+    }
+
+    /// Fused PPO minibatch update for minibatch size `mb`.
+    pub fn ppo_update(&self, mb: usize) -> Result<PathBuf> {
+        self.existing(&format!("ppo_update_b{mb}.hlo.txt"))
+    }
+
+    /// Standalone first-person observation kernel (L1) for batch `b`.
+    pub fn obs_kernel(&self, b: usize) -> Result<PathBuf> {
+        self.existing(&format!("obs_fp_b{b}.hlo.txt"))
+    }
+
+    /// Sanity module written by the Makefile stamp.
+    pub fn sanity(&self) -> Result<PathBuf> {
+        self.existing("model.hlo.txt")
+    }
+
+    /// Available batch sizes for an artifact family, by filename scan.
+    pub fn available_sizes(&self, prefix: &str) -> Vec<usize> {
+        let mut sizes = Vec::new();
+        if let Ok(entries) = std::fs::read_dir(&self.dir) {
+            for e in entries.flatten() {
+                let name = e.file_name();
+                let name = name.to_string_lossy();
+                if let Some(rest) = name.strip_prefix(prefix) {
+                    if let Some(num) = rest.strip_suffix(".hlo.txt") {
+                        if let Ok(n) = num.parse() {
+                            sizes.push(n);
+                        }
+                    }
+                }
+            }
+        }
+        sizes.sort_unstable();
+        sizes
+    }
+}
+
+/// PPO parameter-packing convention shared with `python/compile/model.py`:
+/// actor layers then critic layers, each `W (out×in, row-major) ++ b(out)`,
+/// dims actor `[147,64,64,7]`, critic `[147,64,64,1]`.
+pub mod packing {
+    /// Network dims (symbolic first-person 7×7×3 flattened input).
+    pub const OBS_DIM: usize = 147;
+    pub const HIDDEN: usize = 64;
+    pub const N_ACTIONS: usize = 7;
+
+    pub const ACTOR_DIMS: [usize; 4] = [OBS_DIM, HIDDEN, HIDDEN, N_ACTIONS];
+    pub const CRITIC_DIMS: [usize; 4] = [OBS_DIM, HIDDEN, HIDDEN, 1];
+
+    fn count(dims: &[usize]) -> usize {
+        dims.windows(2).map(|w| w[0] * w[1] + w[1]).sum()
+    }
+
+    /// Total flat parameter count (actor ++ critic).
+    pub fn total_params() -> usize {
+        count(&ACTOR_DIMS) + count(&CRITIC_DIMS)
+    }
+
+    /// He-init a flat parameter vector with the shared layout.
+    pub fn init_params(seed: u64) -> Vec<f32> {
+        let mut rng = crate::rng::Rng::new(seed);
+        let mut params = Vec::with_capacity(total_params());
+        for dims in [&ACTOR_DIMS[..], &CRITIC_DIMS[..]] {
+            for w in dims.windows(2) {
+                let (nin, nout) = (w[0], w[1]);
+                let scale = (2.0 / nin as f64).sqrt() * 0.5;
+                for _ in 0..nin * nout {
+                    params.push((rng.normal() * scale) as f32);
+                }
+                for _ in 0..nout {
+                    params.push(0.0);
+                }
+            }
+        }
+        params
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn packing_counts() {
+        // actor 147·64+64 + 64·64+64 + 64·7+7 = 13_959 ; critic …+64·1+1
+        let actor = 147 * 64 + 64 + 64 * 64 + 64 + 64 * 7 + 7;
+        let critic = 147 * 64 + 64 + 64 * 64 + 64 + 64 + 1;
+        assert_eq!(packing::total_params(), actor + critic);
+        assert_eq!(packing::init_params(0).len(), packing::total_params());
+    }
+
+    #[test]
+    fn init_is_deterministic_and_nonzero() {
+        let a = packing::init_params(1);
+        let b = packing::init_params(1);
+        assert_eq!(a, b);
+        assert!(a.iter().any(|&x| x != 0.0));
+        assert_ne!(packing::init_params(2), a);
+    }
+
+    #[test]
+    fn artifact_set_names() {
+        let set = ArtifactSet { dir: PathBuf::from("/nonexistent") };
+        assert!(set.env_step(16).is_err());
+        assert!(set.ppo_update(256).is_err());
+    }
+}

@@ -1,0 +1,15 @@
+//! PJRT runtime: loads the AOT artifacts produced by the build-time Python
+//! layers (`make artifacts`) and executes them from the Rust hot path.
+//!
+//! Interchange is HLO **text**: jax ≥ 0.5 serialises `HloModuleProto` with
+//! 64-bit instruction ids, which the pinned xla_extension 0.5.1 rejects; the
+//! text parser reassigns ids and round-trips cleanly (see
+//! `python/compile/aot.py`). Executables are compiled once at load and
+//! cached; per-call cost is literal transfer + execution only, so Python is
+//! never on the request path.
+
+pub mod artifacts;
+pub mod client;
+
+pub use artifacts::{artifacts_dir, ArtifactSet};
+pub use client::{Executable, Runtime};

@@ -1,0 +1,313 @@
+//! The intervention system `I : S × A → S` (paper Appendix A): applies the
+//! agent's action to the entity state with full MiniGrid semantics, and
+//! latches the events that the reward/termination systems consume.
+
+use crate::core::actions::Action;
+use crate::core::components::{DoorState, Pocket};
+use crate::core::entities::{CellType, Tag};
+use crate::core::events::Events;
+use crate::core::state::SlotMut;
+
+/// Apply `action` to one environment slot. Returns nothing; all effects are
+/// written into the slot (new player pose, entity states, event latches).
+pub fn intervene(s: &mut SlotMut<'_>, action: Action) {
+    *s.events = Events::NONE;
+    *s.last_action = action as i32;
+
+    match action {
+        Action::Left => {
+            *s.player_dir = s.dir().left() as i32;
+        }
+        Action::Right => {
+            *s.player_dir = s.dir().right() as i32;
+        }
+        Action::Forward => forward(s),
+        Action::Pickup => pickup(s),
+        Action::Drop => drop_item(s),
+        Action::Toggle => toggle(s),
+        Action::Done => done(s),
+    }
+
+    // Position-coincidence events (checked after any movement).
+    let p = s.player();
+    match s.cell(p) {
+        CellType::Goal => s.events.goal_reached = true,
+        CellType::Lava => s.events.lava_fall = true,
+        _ => {}
+    }
+}
+
+/// `forward`: move one cell ahead if walkable. Walking into a ball latches
+/// the ball-collision event (Dynamic-Obstacles failure) without moving.
+fn forward(s: &mut SlotMut<'_>) {
+    let front = s.front();
+    if s.ball_at(front).is_some() {
+        s.events.ball_hit = true;
+        return;
+    }
+    if s.walkable(front) {
+        *s.player_pos = front.encode(s.w);
+    }
+}
+
+/// `pickup`: pick the pickable entity ahead into the pocket (if empty).
+fn pickup(s: &mut SlotMut<'_>) {
+    if !s.pocket_value().is_empty() {
+        return;
+    }
+    let front = s.front();
+    if let Some(k) = s.key_at(front) {
+        let color = crate::core::components::Color::from_u8(s.key_color[k]);
+        s.key_pos[k] = -1; // off the grid, into the pocket
+        *s.pocket = Pocket::holding(Tag::KEY, color).0;
+        return;
+    }
+    if let Some(bl) = s.ball_at(front) {
+        let color = crate::core::components::Color::from_u8(s.ball_color[bl]);
+        // KeyCorridor mission: picking the target ball is the success event.
+        // mission encodes the target ball colour as (Tag::BALL << 8 | color).
+        if *s.mission == Pocket::holding(Tag::BALL, color).0 {
+            s.events.ball_picked = true;
+        }
+        s.ball_pos[bl] = -1;
+        *s.pocket = Pocket::holding(Tag::BALL, color).0;
+        return;
+    }
+    if let Some(bx) = s.box_at(front) {
+        let color = crate::core::components::Color::from_u8(s.box_color[bx]);
+        s.box_pos[bx] = -1;
+        *s.pocket = Pocket::holding(Tag::BOX, color).0;
+    }
+}
+
+/// `drop`: place the held entity into the empty floor cell ahead.
+fn drop_item(s: &mut SlotMut<'_>) {
+    let pocket = s.pocket_value();
+    if pocket.is_empty() {
+        return;
+    }
+    let front = s.front();
+    if s.cell(front) != CellType::Floor || s.occupied_by_entity(front) {
+        return;
+    }
+    let color = pocket.color();
+    let enc = front.encode(s.w);
+    match pocket.kind_tag() {
+        Tag::KEY => {
+            if let Some(k) = s.key_pos.iter().position(|&x| x < 0) {
+                s.key_pos[k] = enc;
+                s.key_color[k] = color as u8;
+                *s.pocket = Pocket::EMPTY.0;
+            }
+        }
+        Tag::BALL => {
+            if let Some(b) = s.ball_pos.iter().position(|&x| x < 0) {
+                s.ball_pos[b] = enc;
+                s.ball_color[b] = color as u8;
+                *s.pocket = Pocket::EMPTY.0;
+            }
+        }
+        Tag::BOX => {
+            if let Some(b) = s.box_pos.iter().position(|&x| x < 0) {
+                s.box_pos[b] = enc;
+                s.box_color[b] = color as u8;
+                *s.pocket = Pocket::EMPTY.0;
+            }
+        }
+        _ => {}
+    }
+}
+
+/// `toggle`: doors open/close; locked doors unlock only with a matching key.
+fn toggle(s: &mut SlotMut<'_>) {
+    let front = s.front();
+    if let Some(d) = s.door_at(front) {
+        let state = DoorState::from_u8(s.door_state[d]);
+        let pocket = s.pocket_value();
+        match state {
+            DoorState::Locked => {
+                let has_matching_key = !pocket.is_empty()
+                    && pocket.kind_tag() == Tag::KEY
+                    && pocket.color() as u8 == s.door_color[d];
+                if has_matching_key {
+                    s.door_state[d] = DoorState::Open as u8;
+                }
+            }
+            DoorState::Closed => s.door_state[d] = DoorState::Open as u8,
+            DoorState::Open => s.door_state[d] = DoorState::Closed as u8,
+        }
+    }
+}
+
+/// `done`: latches the GoToDoor success event when facing a door of the
+/// mission colour. mission encodes the target as (Tag::DOOR << 8 | color).
+fn done(s: &mut SlotMut<'_>) {
+    let front = s.front();
+    if let Some(d) = s.door_at(front) {
+        let target = (Tag::DOOR << 8) | s.door_color[d] as i32;
+        if *s.mission == target {
+            s.events.door_done = true;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::components::{Color, Direction};
+    use crate::core::grid::Pos;
+    use crate::core::state::{BatchedState, Caps};
+
+    fn room() -> BatchedState {
+        let mut st = BatchedState::new(1, 7, 7, Caps { doors: 2, keys: 2, balls: 2, boxes: 1 });
+        let mut s = st.slot_mut(0);
+        s.fill_room();
+        s.place_player(Pos::new(3, 3), Direction::East);
+        drop(s);
+        st
+    }
+
+    #[test]
+    fn turns_compose() {
+        let mut st = room();
+        let mut s = st.slot_mut(0);
+        intervene(&mut s, Action::Left);
+        assert_eq!(s.dir(), Direction::North);
+        intervene(&mut s, Action::Right);
+        intervene(&mut s, Action::Right);
+        assert_eq!(s.dir(), Direction::South);
+        assert_eq!(s.player(), Pos::new(3, 3), "turning never moves");
+    }
+
+    #[test]
+    fn forward_moves_and_walls_block() {
+        let mut st = room();
+        let mut s = st.slot_mut(0);
+        intervene(&mut s, Action::Forward);
+        assert_eq!(s.player(), Pos::new(3, 4));
+        intervene(&mut s, Action::Forward);
+        assert_eq!(s.player(), Pos::new(3, 5));
+        intervene(&mut s, Action::Forward); // wall at col 6
+        assert_eq!(s.player(), Pos::new(3, 5));
+    }
+
+    #[test]
+    fn goal_event_latches_on_entry() {
+        let mut st = room();
+        let mut s = st.slot_mut(0);
+        s.set_cell(Pos::new(3, 4), CellType::Goal, Color::Green);
+        intervene(&mut s, Action::Forward);
+        assert!(s.events.goal_reached);
+        assert!(!s.events.lava_fall);
+    }
+
+    #[test]
+    fn lava_event_latches_on_entry() {
+        let mut st = room();
+        let mut s = st.slot_mut(0);
+        s.set_cell(Pos::new(3, 4), CellType::Lava, Color::Red);
+        intervene(&mut s, Action::Forward);
+        assert!(s.events.lava_fall);
+    }
+
+    #[test]
+    fn pickup_key_then_drop() {
+        let mut st = room();
+        let mut s = st.slot_mut(0);
+        s.add_key(Pos::new(3, 4), Color::Yellow);
+        intervene(&mut s, Action::Pickup);
+        assert!(s.key_pos.iter().all(|&k| k < 0));
+        assert_eq!(s.pocket_value().kind_tag(), Tag::KEY);
+        assert_eq!(s.pocket_value().color(), Color::Yellow);
+        // pickup with full pocket is a no-op
+        s.add_key(Pos::new(3, 4), Color::Red);
+        intervene(&mut s, Action::Pickup);
+        assert_eq!(s.pocket_value().color(), Color::Yellow);
+        // drop is blocked by the occupied front cell, then succeeds on free
+        intervene(&mut s, Action::Drop);
+        assert!(!s.pocket_value().is_empty());
+        intervene(&mut s, Action::Left); // face north, (2,3) free
+        intervene(&mut s, Action::Drop);
+        assert!(s.pocket_value().is_empty());
+        assert!(s.key_at(Pos::new(2, 3)).is_some());
+    }
+
+    #[test]
+    fn locked_door_needs_matching_key() {
+        let mut st = room();
+        let mut s = st.slot_mut(0);
+        let d = s.add_door(Pos::new(3, 4), Color::Blue, DoorState::Locked);
+        intervene(&mut s, Action::Toggle);
+        assert_eq!(DoorState::from_u8(s.door_state[d]), DoorState::Locked);
+        *s.pocket = Pocket::holding(Tag::KEY, Color::Red).0;
+        intervene(&mut s, Action::Toggle);
+        assert_eq!(DoorState::from_u8(s.door_state[d]), DoorState::Locked, "wrong colour");
+        *s.pocket = Pocket::holding(Tag::KEY, Color::Blue).0;
+        intervene(&mut s, Action::Toggle);
+        assert_eq!(DoorState::from_u8(s.door_state[d]), DoorState::Open);
+        // forward through the now-open door
+        intervene(&mut s, Action::Forward);
+        assert_eq!(s.player(), Pos::new(3, 4));
+    }
+
+    #[test]
+    fn closed_door_toggles_open_and_shut() {
+        let mut st = room();
+        let mut s = st.slot_mut(0);
+        let d = s.add_door(Pos::new(3, 4), Color::Grey, DoorState::Closed);
+        assert!(!s.walkable(Pos::new(3, 4)));
+        intervene(&mut s, Action::Toggle);
+        assert_eq!(DoorState::from_u8(s.door_state[d]), DoorState::Open);
+        intervene(&mut s, Action::Toggle);
+        assert_eq!(DoorState::from_u8(s.door_state[d]), DoorState::Closed);
+    }
+
+    #[test]
+    fn walking_into_ball_latches_collision_without_moving() {
+        let mut st = room();
+        let mut s = st.slot_mut(0);
+        s.add_ball(Pos::new(3, 4), Color::Blue);
+        intervene(&mut s, Action::Forward);
+        assert!(s.events.ball_hit);
+        assert_eq!(s.player(), Pos::new(3, 3));
+    }
+
+    #[test]
+    fn ball_pickup_latches_mission_event() {
+        let mut st = room();
+        let mut s = st.slot_mut(0);
+        s.add_ball(Pos::new(3, 4), Color::Purple);
+        *s.mission = Pocket::holding(Tag::BALL, Color::Purple).0;
+        intervene(&mut s, Action::Pickup);
+        assert!(s.events.ball_picked);
+        assert_eq!(s.pocket_value().kind_tag(), Tag::BALL);
+    }
+
+    #[test]
+    fn done_in_front_of_mission_door() {
+        let mut st = room();
+        let mut s = st.slot_mut(0);
+        s.add_door(Pos::new(3, 4), Color::Green, DoorState::Closed);
+        *s.mission = (Tag::DOOR << 8) | Color::Green as i32;
+        intervene(&mut s, Action::Done);
+        assert!(s.events.door_done);
+        // facing elsewhere: no event
+        intervene(&mut s, Action::Left);
+        intervene(&mut s, Action::Done);
+        assert!(!s.events.door_done);
+    }
+
+    #[test]
+    fn events_cleared_each_step() {
+        let mut st = room();
+        let mut s = st.slot_mut(0);
+        s.set_cell(Pos::new(3, 4), CellType::Goal, Color::Green);
+        intervene(&mut s, Action::Forward);
+        assert!(s.events.goal_reached);
+        intervene(&mut s, Action::Left);
+        // still standing on the goal: coincidence events re-latch; but motion
+        // events like ball_hit must clear.
+        assert!(s.events.goal_reached);
+        assert!(!s.events.ball_hit);
+    }
+}

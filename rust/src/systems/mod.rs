@@ -1,0 +1,27 @@
+//! Systems (paper §3.1, Appendix A): pure functions over the collective
+//! entity/component state, in bijection with the RL formalism —
+//!
+//! * [`intervention`] — `I : S × A → S`, the agent's decision applied.
+//! * [`transition`]   — `P : S × A → S`, the MDP dynamics (stochastic
+//!   entities such as dynamic obstacles).
+//! * [`observations`] — `O : S → O`, all six paper Table-4 observation
+//!   functions (symbolic/rgb/categorical × full/first-person).
+//! * [`rewards`]      — `R : S × A × S → ℝ`, Markovian, event-driven
+//!   (paper Table 5).
+//! * [`terminations`] — `γ : S × A × S → 𝔹`, event-driven (paper Table 6).
+//! * [`sprites`]      — the HasSprite component: procedural 32×32×3 RGB
+//!   tiles used by the rgb observation functions.
+
+pub mod intervention;
+pub mod render;
+pub mod observations;
+pub mod rewards;
+pub mod sprites;
+pub mod terminations;
+pub mod transition;
+
+pub use intervention::intervene;
+pub use observations::{ObsKind, ObsSpec};
+pub use rewards::{RewardFn, RewardSpec};
+pub use terminations::{TermFn, TermSpec};
+pub use transition::transition;

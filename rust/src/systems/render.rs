@@ -1,0 +1,49 @@
+//! Image export: write rgb observations as PPM (P6) files — the
+//! dependency-free format every image viewer and converter understands.
+//! Used by `examples/render_gallery.rs` for visual validation of layouts
+//! and sprites.
+
+use anyhow::{Context, Result};
+use std::io::Write;
+use std::path::Path;
+
+/// Write a row-major RGB buffer as a binary PPM.
+pub fn write_ppm<P: AsRef<Path>>(path: P, width: usize, height: usize, rgb: &[u8]) -> Result<()> {
+    anyhow::ensure!(
+        rgb.len() == width * height * 3,
+        "buffer {} != {width}x{height}x3",
+        rgb.len()
+    );
+    let path = path.as_ref();
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    write!(f, "P6\n{width} {height}\n255\n")?;
+    f.write_all(rgb)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_payload() {
+        let dir = std::env::temp_dir().join(format!("navix_ppm_{}", std::process::id()));
+        let path = dir.join("t.ppm");
+        let rgb = vec![7u8; 2 * 3 * 3];
+        write_ppm(&path, 2, 3, &rgb).unwrap();
+        let data = std::fs::read(&path).unwrap();
+        assert!(data.starts_with(b"P6\n2 3\n255\n"));
+        assert_eq!(data.len(), b"P6\n2 3\n255\n".len() + 18);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_wrong_buffer_size() {
+        let r = write_ppm("/tmp/never.ppm", 4, 4, &[0u8; 3]);
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,232 @@
+//! The reward system `R : S × A × S → ℝ` (paper Table 5).
+//!
+//! NAVIX deliberately departs from MiniGrid's non-Markovian time-discounted
+//! reward (paper Eq. 1) and uses Markovian, event-driven rewards instead:
+//! 0 everywhere and ±1 on task events. Reward functions are composable — a
+//! [`RewardSpec`] is a weighted sum of primitives, which is how the paper's
+//! R1/R2/R3 composites (Table 8) are expressed.
+//!
+//! For completeness (and for users who want to reproduce historical MiniGrid
+//! curves) the original non-Markovian reward is also provided as
+//! [`RewardFn::MiniGridLegacy`]; it is *not* used by any registered NAVIX
+//! environment, matching the paper.
+
+use crate::core::actions::Action;
+use crate::core::state::EnvSlot;
+
+/// Primitive reward functions (paper Table 5, plus the KeyCorridor pickup
+/// event and the legacy MiniGrid shaping for reference).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RewardFn {
+    /// +1 when Player and a Goal entity share a position.
+    OnGoalReached,
+    /// −1 when Player and a Lava entity share a position.
+    OnLavaFall,
+    /// +1 when `done` is performed in front of the mission-colour door.
+    OnDoorDone,
+    /// +1 when the mission-target ball is picked up (KeyCorridor).
+    OnBallPicked,
+    /// −1 when the player collides with a flying obstacle (Dynamic-Obstacles).
+    OnBallHit,
+    /// 0 everywhere.
+    Free,
+    /// −cost on every action except `done`.
+    ActionCost(f32),
+    /// −cost on every step.
+    TimeCost(f32),
+    /// MiniGrid's original non-Markovian `1 − 0.9·(t+1)/T` on success
+    /// (reference only; breaks the Markov property, see paper §3.2.1).
+    MiniGridLegacy,
+}
+
+impl RewardFn {
+    /// Evaluate on the post-intervention slot. `max_steps` is the timeout T
+    /// (used only by the legacy shaping).
+    pub fn eval(self, s: &EnvSlot<'_>, action: Action, max_steps: u32) -> f32 {
+        let ev = s.events;
+        match self {
+            RewardFn::OnGoalReached => {
+                if ev.goal_reached {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            RewardFn::OnLavaFall => {
+                if ev.lava_fall {
+                    -1.0
+                } else {
+                    0.0
+                }
+            }
+            RewardFn::OnDoorDone => {
+                if ev.door_done {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            RewardFn::OnBallPicked => {
+                if ev.ball_picked {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            RewardFn::OnBallHit => {
+                if ev.ball_hit {
+                    -1.0
+                } else {
+                    0.0
+                }
+            }
+            RewardFn::Free => 0.0,
+            RewardFn::ActionCost(c) => {
+                if action == Action::Done {
+                    0.0
+                } else {
+                    -c
+                }
+            }
+            RewardFn::TimeCost(c) => -c,
+            RewardFn::MiniGridLegacy => {
+                if ev.goal_reached {
+                    1.0 - 0.9 * (s.t as f32 + 1.0) / max_steps.max(1) as f32
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RewardFn::OnGoalReached => "on_goal_reached",
+            RewardFn::OnLavaFall => "on_lava_fall",
+            RewardFn::OnDoorDone => "on_door_done",
+            RewardFn::OnBallPicked => "on_ball_picked",
+            RewardFn::OnBallHit => "on_ball_hit",
+            RewardFn::Free => "free",
+            RewardFn::ActionCost(_) => "action_cost",
+            RewardFn::TimeCost(_) => "time_cost",
+            RewardFn::MiniGridLegacy => "minigrid_legacy",
+        }
+    }
+}
+
+/// A composable reward: the sum of its primitives (paper Appendix C shows
+/// the same composition from the Python API).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RewardSpec {
+    pub terms: Vec<RewardFn>,
+}
+
+impl RewardSpec {
+    pub fn new(terms: Vec<RewardFn>) -> Self {
+        RewardSpec { terms }
+    }
+
+    /// R1 (Table 8): goal achievement.
+    pub fn r1() -> Self {
+        RewardSpec::new(vec![RewardFn::OnGoalReached])
+    }
+
+    /// R2 (Table 8): goal achievement + lava avoidance.
+    pub fn r2() -> Self {
+        RewardSpec::new(vec![RewardFn::OnGoalReached, RewardFn::OnLavaFall])
+    }
+
+    /// R3 (Table 8): goal achievement + dynamic-obstacle avoidance.
+    pub fn r3() -> Self {
+        RewardSpec::new(vec![RewardFn::OnGoalReached, RewardFn::OnBallHit])
+    }
+
+    /// KeyCorridor: pick up the target ball.
+    pub fn ball_pickup() -> Self {
+        RewardSpec::new(vec![RewardFn::OnBallPicked])
+    }
+
+    /// GoToDoor: `done` in front of the mission door.
+    pub fn door_done() -> Self {
+        RewardSpec::new(vec![RewardFn::OnDoorDone])
+    }
+
+    pub fn eval(&self, s: &EnvSlot<'_>, action: Action, max_steps: u32) -> f32 {
+        self.terms.iter().map(|t| t.eval(s, action, max_steps)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::components::Direction;
+    use crate::core::events::Events;
+    use crate::core::grid::Pos;
+    use crate::core::state::{BatchedState, Caps};
+
+    fn slot_with_events(ev: Events) -> BatchedState {
+        let mut st = BatchedState::new(1, 5, 5, Caps::default());
+        let mut s = st.slot_mut(0);
+        s.fill_room();
+        s.place_player(Pos::new(1, 1), Direction::East);
+        *s.events = ev;
+        drop(s);
+        st
+    }
+
+    #[test]
+    fn r1_fires_only_on_goal() {
+        let st = slot_with_events(Events { goal_reached: true, ..Events::NONE });
+        assert_eq!(RewardSpec::r1().eval(&st.slot(0), Action::Forward, 100), 1.0);
+        let st = slot_with_events(Events { lava_fall: true, ..Events::NONE });
+        assert_eq!(RewardSpec::r1().eval(&st.slot(0), Action::Forward, 100), 0.0);
+    }
+
+    #[test]
+    fn r2_penalises_lava() {
+        let st = slot_with_events(Events { lava_fall: true, ..Events::NONE });
+        assert_eq!(RewardSpec::r2().eval(&st.slot(0), Action::Forward, 100), -1.0);
+    }
+
+    #[test]
+    fn r3_penalises_collision() {
+        let st = slot_with_events(Events { ball_hit: true, ..Events::NONE });
+        assert_eq!(RewardSpec::r3().eval(&st.slot(0), Action::Forward, 100), -1.0);
+    }
+
+    #[test]
+    fn costs_accumulate() {
+        let st = slot_with_events(Events::NONE);
+        let spec = RewardSpec::new(vec![RewardFn::ActionCost(0.1), RewardFn::TimeCost(0.05)]);
+        let r = spec.eval(&st.slot(0), Action::Forward, 100);
+        assert!((r + 0.15).abs() < 1e-6);
+        // done action is exempt from action cost
+        let r = spec.eval(&st.slot(0), Action::Done, 100);
+        assert!((r + 0.05).abs() < 1e-6);
+    }
+
+    #[test]
+    fn legacy_reward_is_time_dependent_markov_reward_is_not() {
+        let mut st = slot_with_events(Events { goal_reached: true, ..Events::NONE });
+        {
+            let mut s = st.slot_mut(0);
+            *s.t = 0;
+        }
+        let early = RewardFn::MiniGridLegacy.eval(&st.slot(0), Action::Forward, 100);
+        let markov_early = RewardSpec::r1().eval(&st.slot(0), Action::Forward, 100);
+        {
+            let mut s = st.slot_mut(0);
+            *s.t = 50;
+        }
+        let late = RewardFn::MiniGridLegacy.eval(&st.slot(0), Action::Forward, 100);
+        let markov_late = RewardSpec::r1().eval(&st.slot(0), Action::Forward, 100);
+        assert!(early > late, "legacy reward decays with t (non-Markovian)");
+        assert_eq!(markov_early, markov_late, "NAVIX reward is Markovian");
+    }
+
+    #[test]
+    fn free_is_zero() {
+        let st = slot_with_events(Events { goal_reached: true, ..Events::NONE });
+        assert_eq!(RewardFn::Free.eval(&st.slot(0), Action::Forward, 100), 0.0);
+    }
+}

@@ -1,0 +1,295 @@
+//! The `HasSprite` component: procedural 32×32×3 RGB tiles (paper Table 1
+//! gives sprites shape `u8[32x32x3]`).
+//!
+//! MiniGrid ships hand-drawn tile renderers; we reproduce them procedurally
+//! (same silhouettes: grey wall block, dark floor with grid lines, green
+//! goal, orange lava with waves, coloured key/ball/box/door glyphs, red
+//! agent triangle oriented by direction). Tiles are pre-rendered once into a
+//! [`SpriteSheet`] so the rgb observation functions are pure memcpy loops.
+
+use crate::core::components::{Color, Direction, DoorState};
+use crate::core::entities::Tag;
+
+/// Tile edge length in pixels.
+pub const TILE: usize = 32;
+const PX: usize = TILE * TILE;
+
+/// One rendered tile: row-major RGB.
+pub type Sprite = [u8; PX * 3];
+
+fn blank(rgb: [u8; 3]) -> Sprite {
+    let mut s = [0u8; PX * 3];
+    for p in 0..PX {
+        s[p * 3] = rgb[0];
+        s[p * 3 + 1] = rgb[1];
+        s[p * 3 + 2] = rgb[2];
+    }
+    s
+}
+
+#[inline]
+fn put(s: &mut Sprite, x: usize, y: usize, rgb: [u8; 3]) {
+    let i = (y * TILE + x) * 3;
+    s[i] = rgb[0];
+    s[i + 1] = rgb[1];
+    s[i + 2] = rgb[2];
+}
+
+fn fill_rect(s: &mut Sprite, x0: usize, y0: usize, x1: usize, y1: usize, rgb: [u8; 3]) {
+    for y in y0..y1 {
+        for x in x0..x1 {
+            put(s, x, y, rgb);
+        }
+    }
+}
+
+fn floor_tile() -> Sprite {
+    let mut s = blank([0, 0, 0]);
+    // MiniGrid draws thin grid lines at the tile border.
+    for i in 0..TILE {
+        put(&mut s, i, 0, [100, 100, 100]);
+        put(&mut s, 0, i, [100, 100, 100]);
+    }
+    s
+}
+
+fn wall_tile() -> Sprite {
+    blank([100, 100, 100])
+}
+
+fn goal_tile() -> Sprite {
+    blank([0, 255, 0])
+}
+
+fn lava_tile() -> Sprite {
+    let mut s = blank([255, 128, 0]);
+    // three dark horizontal waves
+    for wave in 0..3 {
+        let y0 = 6 + wave * 10;
+        for x in 0..TILE {
+            let dy = ((x as f32 / TILE as f32) * std::f32::consts::TAU).sin() * 2.0;
+            let y = (y0 as f32 + dy) as usize;
+            if y < TILE {
+                put(&mut s, x, y, [0, 0, 0]);
+            }
+        }
+    }
+    s
+}
+
+fn key_tile(color: Color) -> Sprite {
+    let mut s = floor_tile();
+    let c = color.rgb();
+    // ring
+    let (cx, cy, r_out, r_in) = (14.0f32, 9.0f32, 5.0f32, 2.5f32);
+    for y in 0..TILE {
+        for x in 0..TILE {
+            let d = ((x as f32 - cx).powi(2) + (y as f32 - cy).powi(2)).sqrt();
+            if d <= r_out && d >= r_in {
+                put(&mut s, x, y, c);
+            }
+        }
+    }
+    // shaft + teeth
+    fill_rect(&mut s, 13, 14, 16, 26, c);
+    fill_rect(&mut s, 16, 21, 20, 23, c);
+    fill_rect(&mut s, 16, 24, 19, 26, c);
+    s
+}
+
+fn ball_tile(color: Color) -> Sprite {
+    let mut s = floor_tile();
+    let c = color.rgb();
+    let (cx, cy, r) = (16.0f32, 16.0f32, 10.0f32);
+    for y in 0..TILE {
+        for x in 0..TILE {
+            if (x as f32 - cx).powi(2) + (y as f32 - cy).powi(2) <= r * r {
+                put(&mut s, x, y, c);
+            }
+        }
+    }
+    s
+}
+
+fn box_tile(color: Color) -> Sprite {
+    let mut s = floor_tile();
+    let c = color.rgb();
+    fill_rect(&mut s, 4, 4, 28, 28, c);
+    fill_rect(&mut s, 7, 7, 25, 25, [0, 0, 0]);
+    fill_rect(&mut s, 4, 14, 28, 18, c); // latch band
+    s
+}
+
+fn door_tile(color: Color, state: DoorState) -> Sprite {
+    let c = color.rgb();
+    match state {
+        DoorState::Open => {
+            // open door: frame only, floor visible
+            let mut s = floor_tile();
+            for t in 0..3 {
+                for i in 0..TILE {
+                    put(&mut s, i, t, c);
+                    put(&mut s, i, TILE - 1 - t, c);
+                    put(&mut s, t, i, c);
+                    put(&mut s, TILE - 1 - t, i, c);
+                }
+            }
+            s
+        }
+        DoorState::Closed | DoorState::Locked => {
+            let mut s = blank([0, 0, 0]);
+            fill_rect(&mut s, 1, 1, 31, 31, c);
+            fill_rect(&mut s, 4, 4, 28, 28, [0, 0, 0]);
+            fill_rect(&mut s, 6, 6, 26, 26, c);
+            if state == DoorState::Locked {
+                // keyhole
+                fill_rect(&mut s, 14, 12, 18, 16, [0, 0, 0]);
+                fill_rect(&mut s, 15, 16, 17, 21, [0, 0, 0]);
+            } else {
+                // handle
+                fill_rect(&mut s, 22, 14, 26, 18, [0, 0, 0]);
+            }
+            s
+        }
+    }
+}
+
+fn agent_tile(dir: Direction) -> Sprite {
+    let mut s = floor_tile();
+    let c = [255, 0, 0];
+    // triangle pointing along dir; define in "east" frame then rotate.
+    for y in 0..TILE {
+        for x in 0..TILE {
+            // east-frame coordinates
+            let (ex, ey) = match dir {
+                Direction::East => (x as i32, y as i32),
+                Direction::South => (y as i32, (TILE - 1 - x) as i32),
+                Direction::West => ((TILE - 1 - x) as i32, (TILE - 1 - y) as i32),
+                Direction::North => ((TILE - 1 - y) as i32, x as i32),
+            };
+            // triangle with apex at (26,16), base at x=6 from y=6..26
+            let (ax, ay) = (26.0f32, 16.0f32);
+            let (b1x, b1y) = (6.0f32, 6.0f32);
+            let (b2x, b2y) = (6.0f32, 26.0f32);
+            let (px, py) = (ex as f32, ey as f32);
+            let sign = |x1: f32, y1: f32, x2: f32, y2: f32| -> f32 {
+                (px - x2) * (y1 - y2) - (x1 - x2) * (py - y2)
+            };
+            let d1 = sign(ax, ay, b1x, b1y);
+            let d2 = sign(b1x, b1y, b2x, b2y);
+            let d3 = sign(b2x, b2y, ax, ay);
+            let neg = d1 < 0.0 || d2 < 0.0 || d3 < 0.0;
+            let pos = d1 > 0.0 || d2 > 0.0 || d3 > 0.0;
+            if !(neg && pos) {
+                put(&mut s, x, y, c);
+            }
+        }
+    }
+    s
+}
+
+fn unseen_tile() -> Sprite {
+    blank([40, 40, 40])
+}
+
+/// Pre-rendered sprite registry indexed by (tag, colour, state/direction).
+pub struct SpriteSheet {
+    floor: Sprite,
+    wall: Sprite,
+    goal: Sprite,
+    lava: Sprite,
+    unseen: Sprite,
+    keys: Vec<Sprite>,           // by colour
+    balls: Vec<Sprite>,          // by colour
+    boxes: Vec<Sprite>,          // by colour
+    doors: Vec<Sprite>,          // by colour*3 + state
+    agents: [Sprite; 4],         // by direction
+}
+
+impl SpriteSheet {
+    pub fn new() -> Self {
+        let keys = Color::ALL.iter().map(|&c| key_tile(c)).collect();
+        let balls = Color::ALL.iter().map(|&c| ball_tile(c)).collect();
+        let boxes = Color::ALL.iter().map(|&c| box_tile(c)).collect();
+        let mut doors = Vec::with_capacity(18);
+        for &c in &Color::ALL {
+            for st in [DoorState::Open, DoorState::Closed, DoorState::Locked] {
+                doors.push(door_tile(c, st));
+            }
+        }
+        SpriteSheet {
+            floor: floor_tile(),
+            wall: wall_tile(),
+            goal: goal_tile(),
+            lava: lava_tile(),
+            unseen: unseen_tile(),
+            keys,
+            balls,
+            boxes,
+            doors,
+            agents: [
+                agent_tile(Direction::East),
+                agent_tile(Direction::South),
+                agent_tile(Direction::West),
+                agent_tile(Direction::North),
+            ],
+        }
+    }
+
+    /// Sprite for a symbolic (tag, colour, state) triple.
+    pub fn get(&self, tag: i32, color: u8, state: i32) -> &Sprite {
+        let c = color as usize % 6;
+        match tag {
+            Tag::UNSEEN => &self.unseen,
+            Tag::EMPTY | Tag::FLOOR => &self.floor,
+            Tag::WALL => &self.wall,
+            Tag::GOAL => &self.goal,
+            Tag::LAVA => &self.lava,
+            Tag::KEY => &self.keys[c],
+            Tag::BALL => &self.balls[c],
+            Tag::BOX => &self.boxes[c],
+            Tag::DOOR => &self.doors[c * 3 + (state.clamp(0, 2) as usize)],
+            Tag::AGENT => &self.agents[(state.rem_euclid(4)) as usize],
+            _ => &self.unseen,
+        }
+    }
+}
+
+impl Default for SpriteSheet {
+    fn default() -> Self {
+        SpriteSheet::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sheet_builds_and_tiles_differ() {
+        let sheet = SpriteSheet::new();
+        assert_ne!(sheet.get(Tag::WALL, 0, 0)[..], sheet.get(Tag::EMPTY, 0, 0)[..]);
+        assert_ne!(sheet.get(Tag::KEY, 0, 0)[..], sheet.get(Tag::KEY, 1, 0)[..]);
+        assert_ne!(
+            sheet.get(Tag::DOOR, 0, DoorState::Open as i32)[..],
+            sheet.get(Tag::DOOR, 0, DoorState::Locked as i32)[..]
+        );
+    }
+
+    #[test]
+    fn agent_sprites_rotate() {
+        let sheet = SpriteSheet::new();
+        let east = sheet.get(Tag::AGENT, 0, 0);
+        let north = sheet.get(Tag::AGENT, 0, 3);
+        assert_ne!(east[..], north[..]);
+    }
+
+    #[test]
+    fn goal_is_green_wall_is_grey() {
+        let sheet = SpriteSheet::new();
+        let g = sheet.get(Tag::GOAL, 0, 0);
+        assert_eq!(&g[0..3], &[0, 255, 0]);
+        let w = sheet.get(Tag::WALL, 0, 0);
+        assert_eq!(&w[0..3], &[100, 100, 100]);
+    }
+}

@@ -1,0 +1,146 @@
+//! The termination system `γ : S × A × S → 𝔹` (paper Table 6).
+//!
+//! Like rewards, terminations are event-driven and composable: a
+//! [`TermSpec`] is the OR of its primitives. Timeout *truncation* is handled
+//! separately by the batched stepper (it is a property of the episode bound
+//! T, not of the MDP), with the dm_env-style distinction: termination sets
+//! γ_{t+1} = 0, truncation keeps γ_{t+1} = γ.
+
+use crate::core::state::EnvSlot;
+
+/// Primitive termination predicates (paper Table 6 + mission events).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TermFn {
+    /// Terminate when Player reaches a Goal entity.
+    OnGoalReached,
+    /// Terminate when Player steps into Lava.
+    OnLavaFall,
+    /// Terminate when `done` is performed before the mission door.
+    OnDoorDone,
+    /// Terminate when the mission ball is picked up (KeyCorridor).
+    OnBallPicked,
+    /// Terminate when hit by a flying obstacle (Dynamic-Obstacles).
+    OnBallHit,
+    /// Never terminate.
+    Free,
+}
+
+impl TermFn {
+    pub fn eval(self, s: &EnvSlot<'_>) -> bool {
+        let ev = s.events;
+        match self {
+            TermFn::OnGoalReached => ev.goal_reached,
+            TermFn::OnLavaFall => ev.lava_fall,
+            TermFn::OnDoorDone => ev.door_done,
+            TermFn::OnBallPicked => ev.ball_picked,
+            TermFn::OnBallHit => ev.ball_hit,
+            TermFn::Free => false,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TermFn::OnGoalReached => "on_goal_reached",
+            TermFn::OnLavaFall => "on_lava_fall",
+            TermFn::OnDoorDone => "on_door_done",
+            TermFn::OnBallPicked => "on_ball_picked",
+            TermFn::OnBallHit => "on_ball_hit",
+            TermFn::Free => "free",
+        }
+    }
+}
+
+/// Composable termination: OR of primitives.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TermSpec {
+    pub terms: Vec<TermFn>,
+}
+
+impl TermSpec {
+    pub fn new(terms: Vec<TermFn>) -> Self {
+        TermSpec { terms }
+    }
+
+    /// Goal only (Empty, DoorKey, FourRooms…).
+    pub fn goal() -> Self {
+        TermSpec::new(vec![TermFn::OnGoalReached])
+    }
+
+    /// Goal or lava (LavaGap, Crossings, DistShift — "terminate whenever the
+    /// reward is non-zero", Table 8).
+    pub fn goal_or_lava() -> Self {
+        TermSpec::new(vec![TermFn::OnGoalReached, TermFn::OnLavaFall])
+    }
+
+    /// Goal or obstacle collision (Dynamic-Obstacles).
+    pub fn goal_or_ball_hit() -> Self {
+        TermSpec::new(vec![TermFn::OnGoalReached, TermFn::OnBallHit])
+    }
+
+    /// Ball pickup (KeyCorridor).
+    pub fn ball_picked() -> Self {
+        TermSpec::new(vec![TermFn::OnBallPicked])
+    }
+
+    /// Door done (GoToDoor).
+    pub fn door_done() -> Self {
+        TermSpec::new(vec![TermFn::OnDoorDone])
+    }
+
+    pub fn eval(&self, s: &EnvSlot<'_>) -> bool {
+        self.terms.iter().any(|t| t.eval(s))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::components::Direction;
+    use crate::core::events::Events;
+    use crate::core::grid::Pos;
+    use crate::core::state::{BatchedState, Caps};
+
+    fn with_events(ev: Events) -> BatchedState {
+        let mut st = BatchedState::new(1, 5, 5, Caps::default());
+        let mut s = st.slot_mut(0);
+        s.fill_room();
+        s.place_player(Pos::new(1, 1), Direction::East);
+        *s.events = ev;
+        drop(s);
+        st
+    }
+
+    #[test]
+    fn goal_terminates() {
+        let st = with_events(Events { goal_reached: true, ..Events::NONE });
+        assert!(TermSpec::goal().eval(&st.slot(0)));
+        assert!(TermSpec::goal_or_lava().eval(&st.slot(0)));
+    }
+
+    #[test]
+    fn lava_terminates_only_composite() {
+        let st = with_events(Events { lava_fall: true, ..Events::NONE });
+        assert!(!TermSpec::goal().eval(&st.slot(0)));
+        assert!(TermSpec::goal_or_lava().eval(&st.slot(0)));
+    }
+
+    #[test]
+    fn ball_events() {
+        let st = with_events(Events { ball_hit: true, ..Events::NONE });
+        assert!(TermSpec::goal_or_ball_hit().eval(&st.slot(0)));
+        let st = with_events(Events { ball_picked: true, ..Events::NONE });
+        assert!(TermSpec::ball_picked().eval(&st.slot(0)));
+    }
+
+    #[test]
+    fn free_never_terminates() {
+        let st = with_events(Events {
+            goal_reached: true,
+            lava_fall: true,
+            ball_hit: true,
+            ball_picked: true,
+            door_done: true,
+        });
+        assert!(!TermSpec::new(vec![TermFn::Free]).eval(&st.slot(0)));
+    }
+}

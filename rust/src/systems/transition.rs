@@ -1,0 +1,164 @@
+//! The transition system `P : S × A → S` (paper Appendix A): the MDP
+//! dynamics that run *after* the agent's intervention. In the MiniGrid suite
+//! the only stochastic dynamic is the Dynamic-Obstacles family, where each
+//! ball (a `Stochastic` entity) moves to a random adjacent free cell each
+//! step; a ball moving onto the agent latches the collision event.
+//!
+//! The system also advances the step counter, which the batched stepper uses
+//! for timeout truncation.
+
+use crate::core::grid::Pos;
+use crate::core::state::SlotMut;
+
+/// Advance the MDP dynamics for one environment slot.
+///
+/// `stochastic_balls`: whether balls are dynamic obstacles (true for the
+/// Dynamic-Obstacles family; false where balls are static pickup targets,
+/// e.g. KeyCorridor).
+pub fn transition(s: &mut SlotMut<'_>, stochastic_balls: bool) {
+    *s.t += 1;
+    if !stochastic_balls {
+        return;
+    }
+    move_obstacles(s);
+}
+
+/// MiniGrid's DynamicObstaclesEnv moves each obstacle to a random position
+/// within a ±1 neighbourhood (8-neighbourhood + stay), retrying a bounded
+/// number of times; the move is skipped if no sampled cell is free.
+fn move_obstacles(s: &mut SlotMut<'_>) {
+    let player = s.player();
+    for bi in 0..s.ball_pos.len() {
+        let enc = s.ball_pos[bi];
+        if enc < 0 {
+            continue;
+        }
+        let p = Pos::decode(enc, s.w);
+        // Bounded rejection sampling, like MiniGrid's place_obj(..., max_tries).
+        for _ in 0..8 {
+            let (dr, dc) = {
+                let mut rng = s.rng();
+                (rng.randint(-1, 2), rng.randint(-1, 2))
+            };
+            let q = Pos::new(p.r + dr, p.c + dc);
+            if q == p {
+                break; // sampled "stay put"
+            }
+            if q == player {
+                // Ball ran into the agent: collision event, ball stays.
+                s.events.ball_hit = true;
+                break;
+            }
+            if s.walkable(q) {
+                s.ball_pos[bi] = q.encode(s.w);
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::components::{Color, Direction};
+    use crate::core::state::{BatchedState, Caps};
+
+    fn room(balls: usize) -> BatchedState {
+        let mut st = BatchedState::new(1, 8, 8, Caps { balls, ..Caps::default() });
+        let mut s = st.slot_mut(0);
+        s.fill_room();
+        s.place_player(Pos::new(1, 1), Direction::East);
+        *s.rng = 7;
+        drop(s);
+        st
+    }
+
+    #[test]
+    fn advances_time() {
+        let mut st = room(0);
+        let mut s = st.slot_mut(0);
+        transition(&mut s, false);
+        transition(&mut s, true);
+        assert_eq!(*s.t, 2);
+    }
+
+    #[test]
+    fn static_balls_do_not_move() {
+        let mut st = room(1);
+        let mut s = st.slot_mut(0);
+        let enc = {
+            s.add_ball(Pos::new(4, 4), Color::Blue);
+            s.ball_pos[0]
+        };
+        for _ in 0..10 {
+            transition(&mut s, false);
+        }
+        assert_eq!(s.ball_pos[0], enc);
+    }
+
+    #[test]
+    fn dynamic_balls_stay_on_walkable_cells() {
+        let mut st = room(3);
+        let mut s = st.slot_mut(0);
+        s.add_ball(Pos::new(4, 4), Color::Blue);
+        s.add_ball(Pos::new(2, 5), Color::Blue);
+        s.add_ball(Pos::new(6, 2), Color::Blue);
+        for _ in 0..200 {
+            transition(&mut s, true);
+            for &enc in s.ball_pos.iter() {
+                assert!(enc >= 0);
+                let p = Pos::decode(enc, s.w);
+                assert!(p.in_bounds(s.h, s.w));
+                assert!(
+                    s.cell(p) == crate::core::entities::CellType::Floor,
+                    "ball on non-floor at {p:?}"
+                );
+                assert_ne!(p, s.player(), "ball may never occupy the agent cell");
+            }
+            // no two balls share a cell
+            let mut ps: Vec<i32> = s.ball_pos.to_vec();
+            ps.sort_unstable();
+            ps.dedup();
+            assert_eq!(ps.len(), 3);
+        }
+    }
+
+    #[test]
+    fn balls_do_move_eventually() {
+        let mut st = room(1);
+        let mut s = st.slot_mut(0);
+        s.add_ball(Pos::new(4, 4), Color::Blue);
+        let start = s.ball_pos[0];
+        let mut moved = false;
+        for _ in 0..20 {
+            transition(&mut s, true);
+            if s.ball_pos[0] != start {
+                moved = true;
+                break;
+            }
+        }
+        assert!(moved, "dynamic obstacle never moved in 20 steps");
+    }
+
+    #[test]
+    fn ball_collision_with_adjacent_player_possible() {
+        // Place a ball right next to the player and step many times: the
+        // collision event must fire at least once (ball tries to move onto
+        // the agent with positive probability).
+        let mut st = room(1);
+        let mut s = st.slot_mut(0);
+        s.add_ball(Pos::new(1, 2), Color::Blue);
+        let mut hit = false;
+        for _ in 0..100 {
+            *s.events = crate::core::events::Events::NONE;
+            transition(&mut s, true);
+            if s.events.ball_hit {
+                hit = true;
+                break;
+            }
+            // keep the ball near the player for the test's purpose
+            s.ball_pos[0] = Pos::new(1, 2).encode(s.w);
+        }
+        assert!(hit, "adjacent obstacle never collided in 100 steps");
+    }
+}

@@ -1,0 +1,191 @@
+//! Property-style integration tests: long random-action walks over every
+//! registered environment, asserting structural invariants that must hold
+//! in ANY reachable state. (proptest is not vendored offline; these tests
+//! drive the same shrink-free random exploration with the crate's own
+//! splittable PRNG — see DESIGN.md §Substitutions.)
+
+use navix::batch::BatchedEnv;
+use navix::core::entities::CellType;
+use navix::core::grid::Pos;
+use navix::core::timestep::StepType;
+use navix::rng::{Key, Rng};
+
+const WALK_STEPS: usize = 300;
+
+fn check_invariants(env: &BatchedEnv, step: usize) {
+    let b = env.b;
+    for i in 0..b {
+        let s = env.state.slot(i);
+        let id = &env.cfg.id;
+        // player in bounds, never inside a wall
+        let p = s.player();
+        assert!(p.in_bounds(s.h, s.w), "{id}@{step}: player out of bounds {p:?}");
+        // A door replaces the cell it sits in (MiniGrid semantics), so the
+        // player may legitimately stand on a wall-base cell through an open
+        // door (e.g. GoToDoor's border doors).
+        if s.door_at(p).is_none() {
+            assert_ne!(s.cell(p), CellType::Wall, "{id}@{step}: player inside a wall");
+        }
+        // player never co-located with a blocking entity
+        assert!(s.key_at(p).is_none(), "{id}@{step}: player on a key");
+        assert!(s.box_at(p).is_none(), "{id}@{step}: player on a box");
+        if let Some(d) = s.door_at(p) {
+            assert_eq!(
+                s.door_state[d], 0,
+                "{id}@{step}: player standing in a non-open door"
+            );
+        }
+        // entity positions in bounds; no two entities share a cell
+        let mut occupied = std::collections::HashSet::new();
+        for (name, arr) in
+            [("door", s.door_pos), ("key", s.key_pos), ("ball", s.ball_pos), ("box", s.box_pos)]
+        {
+            for &enc in arr.iter().filter(|&&x| x >= 0) {
+                let q = Pos::decode(enc, s.w);
+                assert!(q.in_bounds(s.h, s.w), "{id}@{step}: {name} out of bounds");
+                assert!(
+                    occupied.insert(enc),
+                    "{id}@{step}: two entities share cell {q:?}"
+                );
+            }
+        }
+        // time consistent with timeout: t can exceed max_steps by at most 0
+        assert!(
+            env.timestep.t[i] <= env.cfg.max_steps,
+            "{id}@{step}: t={} beyond timeout {}",
+            env.timestep.t[i],
+            env.cfg.max_steps
+        );
+        // discount/step_type coherence
+        match env.timestep.step_type[i] {
+            StepType::Terminated => assert_eq!(env.timestep.discount[i], 0.0),
+            StepType::Truncated => assert_eq!(env.timestep.discount[i], 1.0),
+            StepType::First => {
+                assert_eq!(env.timestep.reward[i], 0.0);
+                assert_eq!(env.timestep.action[i], -1);
+            }
+            StepType::Mid => {}
+        }
+        // rewards bounded by the spec (all primitive rewards are in [-1, 1]
+        // and every registered env uses at most 2 primitives)
+        assert!(
+            env.timestep.reward[i].abs() <= 2.0,
+            "{id}@{step}: reward {} out of range",
+            env.timestep.reward[i]
+        );
+    }
+}
+
+#[test]
+fn random_walk_invariants_all_envs() {
+    for id in navix::envs::registry::list_envs() {
+        let cfg = navix::make(id).unwrap();
+        let mut env = BatchedEnv::new(cfg, 4, Key::new(7));
+        let mut rng = Rng::new(13);
+        let mut actions = vec![0u8; 4];
+        check_invariants(&env, 0);
+        for step in 1..=WALK_STEPS {
+            for a in actions.iter_mut() {
+                *a = rng.below(7) as u8;
+            }
+            env.step(&actions);
+            check_invariants(&env, step);
+        }
+    }
+}
+
+#[test]
+fn autoreset_always_follows_terminal() {
+    // For every env: whenever step t is terminal, step t+1 must be First.
+    for id in ["Navix-Empty-5x5-v0", "Navix-LavaGapS5-v0", "Navix-Dynamic-Obstacles-5x5"] {
+        let cfg = navix::make(id).unwrap();
+        let mut env = BatchedEnv::new(cfg, 2, Key::new(1));
+        let mut rng = Rng::new(2);
+        let mut prev_last = vec![false; 2];
+        let mut actions = vec![0u8; 2];
+        let mut saw_terminal = false;
+        for _ in 0..2000 {
+            for a in actions.iter_mut() {
+                *a = rng.below(7) as u8;
+            }
+            env.step(&actions);
+            for i in 0..2 {
+                if prev_last[i] {
+                    assert_eq!(
+                        env.timestep.step_type[i],
+                        StepType::First,
+                        "{id}: terminal not followed by autoreset"
+                    );
+                }
+                prev_last[i] = env.timestep.step_type[i].is_last();
+                saw_terminal |= prev_last[i];
+            }
+        }
+        assert!(saw_terminal, "{id}: random walk never ended an episode");
+    }
+}
+
+#[test]
+fn wall_count_is_invariant_within_episode() {
+    // Base grid must never change between resets (only entities move).
+    let cfg = navix::make("Navix-DoorKey-8x8-v0").unwrap();
+    let mut env = BatchedEnv::new(cfg, 1, Key::new(3));
+    let initial_base = env.state.base.clone();
+    let mut rng = Rng::new(4);
+    for _ in 0..200 {
+        let a = rng.below(7) as u8;
+        env.step(&[a]);
+        if env.timestep.step_type[0] == StepType::First {
+            break; // episode ended, base may legitimately change
+        }
+        assert_eq!(env.state.base, initial_base, "base grid mutated mid-episode");
+    }
+}
+
+#[test]
+fn same_seed_same_trajectory() {
+    // Full determinism: same seed + same actions → identical rewards/obs.
+    for id in ["Navix-Empty-Random-6x6", "Navix-Dynamic-Obstacles-6x6"] {
+        let cfg = navix::make(id).unwrap();
+        let mut e1 = BatchedEnv::new(cfg.clone(), 3, Key::new(42));
+        let mut e2 = BatchedEnv::new(cfg, 3, Key::new(42));
+        let mut rng = Rng::new(5);
+        for _ in 0..300 {
+            let actions: Vec<u8> = (0..3).map(|_| rng.below(7) as u8).collect();
+            e1.step(&actions);
+            e2.step(&actions);
+            assert_eq!(e1.timestep.reward, e2.timestep.reward, "{id}");
+            assert_eq!(e1.state.player_pos, e2.state.player_pos, "{id}");
+        }
+    }
+}
+
+#[test]
+fn different_seeds_diverge() {
+    let cfg = navix::make("Navix-Empty-Random-8x8").unwrap();
+    let e1 = BatchedEnv::new(cfg.clone(), 4, Key::new(1));
+    let e2 = BatchedEnv::new(cfg, 4, Key::new(2));
+    assert_ne!(e1.state.player_pos, e2.state.player_pos);
+}
+
+#[test]
+fn episodic_return_is_sum_of_rewards() {
+    let cfg = navix::make("Navix-Dynamic-Obstacles-5x5").unwrap();
+    let mut env = BatchedEnv::new(cfg, 1, Key::new(9));
+    let mut rng = Rng::new(10);
+    let mut acc = 0.0f32;
+    for _ in 0..1000 {
+        let a = rng.below(7) as u8;
+        env.step(&[a]);
+        match env.timestep.step_type[0] {
+            StepType::First => acc = 0.0,
+            _ => {
+                acc += env.timestep.reward[0];
+                assert!(
+                    (env.timestep.episodic_return[0] - acc).abs() < 1e-5,
+                    "return tracking drifted"
+                );
+            }
+        }
+    }
+}

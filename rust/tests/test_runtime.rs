@@ -1,0 +1,283 @@
+//! Runtime integration tests: load every AOT artifact, execute it via PJRT
+//! and cross-check against the native Rust implementations. These tests are
+//! the proof that the three layers compose: L1 Pallas kernels and the L2
+//! JAX model produce the same numbers as the L3 engine.
+//!
+//! Skipped gracefully when `make artifacts` has not run yet (the Makefile's
+//! `test` target always builds artifacts first).
+
+use navix::batch::BatchedEnv;
+use navix::nn::{Activation, Mlp};
+use navix::rng::{Key, Rng};
+use navix::runtime::artifacts::{packing, ArtifactSet};
+use navix::runtime::client::{f32_literal, i32_literal, to_f32_vec, to_i32_vec};
+use navix::runtime::Runtime;
+
+fn artifacts() -> Option<ArtifactSet> {
+    match ArtifactSet::discover() {
+        Ok(s) if s.sanity().is_ok() => Some(s),
+        _ => {
+            eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+#[test]
+fn sanity_module_loads_and_runs() {
+    let Some(set) = artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    assert!(rt.device_count() >= 1);
+    let exe = rt.load_hlo(set.sanity().unwrap()).unwrap();
+    // model.hlo.txt = ppo_fwd at B=1
+    let params = packing::init_params(0);
+    let obs = vec![0i32; packing::OBS_DIM];
+    let out = exe
+        .run(&[
+            f32_literal(&params, &[params.len() as i64]).unwrap(),
+            i32_literal(&obs, &[1, packing::OBS_DIM as i64]).unwrap(),
+        ])
+        .unwrap();
+    assert_eq!(out.len(), 2);
+    assert_eq!(to_f32_vec(&out[0]).unwrap().len(), 7);
+}
+
+/// The decisive packing test: the XLA actor-critic forward must match the
+/// native Rust MLP bit-for-bit (same flat params, same layout, same math).
+#[test]
+fn xla_forward_matches_native_mlp() {
+    let Some(set) = artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load_hlo(set.ppo_fwd(16).unwrap()).unwrap();
+
+    let params = packing::init_params(3);
+    // random plausible observations
+    let mut rng = Rng::new(5);
+    let obs: Vec<i32> = (0..16 * packing::OBS_DIM).map(|_| rng.below(11) as i32).collect();
+    let out = exe
+        .run(&[
+            f32_literal(&params, &[params.len() as i64]).unwrap(),
+            i32_literal(&obs, &[16, packing::OBS_DIM as i64]).unwrap(),
+        ])
+        .unwrap();
+    let logits = to_f32_vec(&out[0]).unwrap();
+    let values = to_f32_vec(&out[1]).unwrap();
+
+    // native: unpack the same flat params into actor/critic MLPs
+    let actor_n: usize = packing::ACTOR_DIMS.windows(2).map(|w| w[0] * w[1] + w[1]).sum();
+    let mut actor = Mlp::new(&packing::ACTOR_DIMS, Activation::Tanh, &mut Rng::new(0));
+    actor.params.copy_from_slice(&params[..actor_n]);
+    let mut critic = Mlp::new(&packing::CRITIC_DIMS, Activation::Tanh, &mut Rng::new(0));
+    critic.params.copy_from_slice(&params[actor_n..]);
+
+    for i in 0..16 {
+        let x: Vec<f32> =
+            obs[i * 147..(i + 1) * 147].iter().map(|&v| v as f32 / 10.0).collect();
+        let native_logits = actor.infer(&x);
+        let native_value = critic.infer(&x)[0];
+        for a in 0..7 {
+            let diff = (logits[i * 7 + a] - native_logits[a]).abs();
+            assert!(diff < 1e-4, "env {i} logit {a}: xla {} vs native {}", logits[i * 7 + a], native_logits[a]);
+        }
+        assert!(
+            (values[i] - native_value).abs() < 1e-4,
+            "env {i} value: xla {} vs native {}",
+            values[i],
+            native_value
+        );
+    }
+}
+
+/// The L1 kernel must agree with the L3 observation system on Empty-8x8.
+#[test]
+fn obs_kernel_matches_rust_observations() {
+    let Some(set) = artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load_hlo(set.obs_kernel(16).unwrap()).unwrap();
+
+    // Drive the Rust engine to 16 diverse states.
+    let cfg = navix::make("Navix-Empty-8x8-v0").unwrap();
+    let mut env = BatchedEnv::new(cfg.clone(), 16, Key::new(1));
+    let mut rng = Rng::new(2);
+    for _ in 0..20 {
+        let actions: Vec<u8> = (0..16).map(|_| rng.below(3) as u8).collect();
+        env.step(&actions);
+    }
+
+    // Build the kernel inputs from the Rust state: symbolic grid w/o player.
+    let mut grid = vec![0i32; 16 * 8 * 8 * 3];
+    let mut pos = vec![0i32; 16 * 2];
+    let mut dir = vec![0i32; 16];
+    for i in 0..16 {
+        let s = env.state.slot(i);
+        for r in 0..8 {
+            for c in 0..8 {
+                let (t, col, st) = navix::systems::observations::encode_cell(
+                    &s,
+                    navix::core::grid::Pos::new(r, c),
+                    false,
+                );
+                let at = ((i * 8 + r as usize) * 8 + c as usize) * 3;
+                grid[at] = t;
+                grid[at + 1] = col;
+                grid[at + 2] = st;
+            }
+        }
+        let p = s.player();
+        pos[i * 2] = p.r;
+        pos[i * 2 + 1] = p.c;
+        dir[i] = s.player_dir;
+    }
+    let out = exe
+        .run(&[
+            i32_literal(&grid, &[16, 8, 8, 3]).unwrap(),
+            i32_literal(&pos, &[16, 2]).unwrap(),
+            i32_literal(&dir, &[16]).unwrap(),
+        ])
+        .unwrap();
+    let kernel_obs = to_i32_vec(&out[0]).unwrap();
+
+    // Rust engine's own first-person obs (with full occlusion machinery).
+    for i in 0..16 {
+        let rust_obs = env.obs.env_i32(16, i);
+        let k = &kernel_obs[i * 147..(i + 1) * 147];
+        assert_eq!(rust_obs, k, "env {i}: L1 kernel disagrees with L3 observation system");
+    }
+}
+
+/// Trajectory-level parity: the fully-jitted L2 env step must reproduce the
+/// L3 engine step-for-step on Empty-8x8 (positions, rewards, discounts,
+/// observations, autoreset) across hundreds of random actions.
+#[test]
+fn xla_env_step_matches_rust_engine_trajectory() {
+    let Some(set) = artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load_hlo(set.env_step(16).unwrap()).unwrap();
+
+    let cfg = navix::make("Navix-Empty-8x8-v0").unwrap();
+    let mut env = BatchedEnv::new(cfg, 16, Key::new(0));
+
+    // XLA state: pos, dir, t, done (matches env_reset in model.py)
+    let mut pos: Vec<i32> = (0..16).flat_map(|_| [1, 1]).collect();
+    let mut dirv = vec![0i32; 16];
+    let mut tv = vec![0i32; 16];
+    let mut done = vec![0i32; 16];
+
+    let mut rng = Rng::new(11);
+    for step in 0..400 {
+        let actions: Vec<u8> = (0..16).map(|_| rng.below(7) as u8).collect();
+        let actions_i32: Vec<i32> = actions.iter().map(|&a| a as i32).collect();
+
+        let out = exe
+            .run(&[
+                i32_literal(&pos, &[16, 2]).unwrap(),
+                i32_literal(&dirv, &[16]).unwrap(),
+                i32_literal(&tv, &[16]).unwrap(),
+                i32_literal(&done, &[16]).unwrap(),
+                i32_literal(&actions_i32, &[16]).unwrap(),
+            ])
+            .unwrap();
+        pos = to_i32_vec(&out[0]).unwrap();
+        dirv = to_i32_vec(&out[1]).unwrap();
+        tv = to_i32_vec(&out[2]).unwrap();
+        done = to_i32_vec(&out[3]).unwrap();
+        let obs = to_i32_vec(&out[4]).unwrap();
+        let reward = to_f32_vec(&out[5]).unwrap();
+        let discount = to_f32_vec(&out[6]).unwrap();
+
+        env.step(&actions);
+
+        for i in 0..16 {
+            let s = env.state.slot(i);
+            let p = s.player();
+            assert_eq!(
+                (pos[i * 2], pos[i * 2 + 1]),
+                (p.r, p.c),
+                "step {step} env {i}: position diverged"
+            );
+            assert_eq!(dirv[i], s.player_dir, "step {step} env {i}: direction diverged");
+            assert_eq!(reward[i], env.timestep.reward[i], "step {step} env {i}: reward");
+            assert_eq!(
+                discount[i], env.timestep.discount[i],
+                "step {step} env {i}: discount"
+            );
+            assert_eq!(tv[i] as u32, env.timestep.t[i], "step {step} env {i}: t");
+            assert_eq!(
+                &obs[i * 147..(i + 1) * 147],
+                env.obs.env_i32(16, i),
+                "step {step} env {i}: observation diverged"
+            );
+        }
+    }
+}
+
+/// Fused PPO update executes and improves its own value loss.
+#[test]
+fn xla_ppo_update_reduces_value_loss() {
+    let Some(set) = artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let fwd = rt.load_hlo(set.ppo_fwd(16).unwrap()).unwrap();
+    let upd = rt.load_hlo(set.ppo_update(256).unwrap()).unwrap();
+
+    let mut params = packing::init_params(7);
+    let n = params.len();
+    let mut m = vec![0.0f32; n];
+    let mut v = vec![0.0f32; n];
+    let mut rng = Rng::new(8);
+    let obs: Vec<i32> = (0..256 * 147).map(|_| rng.below(11) as i32).collect();
+    let actions: Vec<i32> = (0..256).map(|_| rng.below(7) as i32).collect();
+    let adv = vec![0.0f32; 256]; // isolate the value head
+    let targets: Vec<f32> = (0..256).map(|_| rng.uniform_f32()).collect();
+
+    // old_logp from the fwd artifact (first 16 rows repeated is fine for a
+    // math test — use fwd on chunks of 16)
+    let mut old_logp = vec![0.0f32; 256];
+    for chunk in 0..16 {
+        let o = &obs[chunk * 16 * 147..(chunk + 1) * 16 * 147];
+        let out = fwd
+            .run(&[
+                f32_literal(&params, &[n as i64]).unwrap(),
+                i32_literal(o, &[16, 147]).unwrap(),
+            ])
+            .unwrap();
+        let logits = to_f32_vec(&out[0]).unwrap();
+        for i in 0..16 {
+            let l = &logits[i * 7..(i + 1) * 7];
+            let mx = l.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let z: f32 = l.iter().map(|x| (x - mx).exp()).sum();
+            let a = actions[chunk * 16 + i] as usize;
+            old_logp[chunk * 16 + i] = l[a] - mx - z.ln();
+        }
+    }
+
+    let mut first = None;
+    let mut last = 0.0;
+    for t in 1..=60i32 {
+        let out = upd
+            .run(&[
+                f32_literal(&params, &[n as i64]).unwrap(),
+                f32_literal(&m, &[n as i64]).unwrap(),
+                f32_literal(&v, &[n as i64]).unwrap(),
+                xla::Literal::scalar(t),
+                i32_literal(&obs, &[256, 147]).unwrap(),
+                i32_literal(&actions, &[256]).unwrap(),
+                f32_literal(&old_logp, &[256]).unwrap(),
+                f32_literal(&adv, &[256]).unwrap(),
+                f32_literal(&targets, &[256]).unwrap(),
+            ])
+            .unwrap();
+        params = to_f32_vec(&out[0]).unwrap();
+        m = to_f32_vec(&out[1]).unwrap();
+        v = to_f32_vec(&out[2]).unwrap();
+        let v_loss = to_f32_vec(&out[4]).unwrap()[0];
+        if first.is_none() {
+            first = Some(v_loss);
+        }
+        last = v_loss;
+    }
+    let first = first.unwrap();
+    assert!(
+        last < first * 0.9,
+        "fused update failed to reduce value loss: {first} -> {last}"
+    );
+}
