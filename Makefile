@@ -1,0 +1,35 @@
+# navix-rs — build/verify entry points.
+#
+# `artifacts` runs the Python AOT layer (JAX model + Pallas kernels → HLO
+# text) that the Rust PJRT runtime consumes; Python is never on the request
+# path afterwards. The Rust targets work without artifacts — PJRT-backed
+# paths degrade or skip gracefully (see rust/src/runtime/mod.rs).
+
+.PHONY: build test verify artifacts bench-smoke fmt clippy
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+# Tier-1 verify: exactly what CI's test job runs.
+verify:
+	cargo build --release && cargo test -q
+
+# AOT-lower the JAX/Pallas layers to rust/artifacts/*.hlo.txt (needs jax).
+# The out-dir is the crate root so artifact discovery works from both the
+# repo root and the cwd cargo gives test binaries (rust/); override with
+# NAVIX_ARTIFACTS to load from elsewhere.
+artifacts:
+	cd python && python -m compile.aot --out-dir ../rust/artifacts
+
+bench-smoke:
+	cargo bench --bench fig5_batch -- --smoke
+	cargo bench --bench fig5_sharded -- --smoke
+
+fmt:
+	cargo fmt --all
+
+clippy:
+	cargo clippy --all-targets -- -D warnings

@@ -4,11 +4,16 @@
 //!
 //! ```text
 //! cargo run --release --example parallel_agents -- --agents 4 --steps 20000
+//! cargo run --release --example parallel_agents -- --sharded --shards 2
 //! ```
+//!
+//! `--sharded` steps every agent's env batch on the multi-core sharded
+//! engine (`--shards`/`--threads` as in `throughput_sweep`); trajectories
+//! are bit-identical to the default single-threaded engine.
 
 use navix::bench_harness::Report;
 use navix::cli::Args;
-use navix::coordinator::multi_agent::train_parallel_ppo;
+use navix::coordinator::multi_agent::train_parallel_ppo_exec;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
@@ -16,6 +21,11 @@ fn main() -> anyhow::Result<()> {
     let max_agents = args.opt_usize("agents", 4)?;
     let steps = args.opt_u64("steps", 20_000)?;
     let envs_per_agent = args.opt_usize("envs-per-agent", 16)?;
+    // --sharded alone means auto shard/thread counts (one per core); any
+    // explicit --shards/--threads also opts in.
+    let sharded =
+        args.switch("sharded") || args.opt("shards").is_some() || args.opt("threads").is_some();
+    let exec = if sharded { Some(args.exec_config()?) } else { None };
 
     let mut report = Report::new(
         "parallel_agents",
@@ -23,7 +33,7 @@ fn main() -> anyhow::Result<()> {
     );
     let mut n = 1;
     while n <= max_agents {
-        let r = train_parallel_ppo(&env_id, n, envs_per_agent, steps, 0)?;
+        let r = train_parallel_ppo_exec(&env_id, n, envs_per_agent, steps, 0, exec)?;
         report.row(&[
             n.to_string(),
             (n * envs_per_agent).to_string(),

@@ -1,14 +1,22 @@
 //! Quick interactive version of the paper's Fig. 5: wall time of 1K unrolls
-//! as the number of parallel environments grows, for the batched engine and
-//! both baseline vector wrappers.
+//! as the number of parallel environments grows, for the single-threaded
+//! batched engine (`vmap` analog), the sharded multi-core engine (`pmap`
+//! analog) and both baseline vector wrappers.
 //!
 //! ```text
 //! cargo run --release --example throughput_sweep -- --max-batch 4096 --steps 1000
+//! cargo run --release --example throughput_sweep -- --shards 4 --threads 4
 //! ```
+//!
+//! `--shards S` / `--threads T` configure the sharded engine (absent or 0 =
+//! one shard and one worker per available core). The sharded rows execute
+//! the exact same action stream as the batched rows — the per-env RNG
+//! streams are a function of the global env index, not the worker — so the
+//! ratio between them is pure execution-layer speedup.
 
 use navix::bench_harness::{stats::fmt_duration, Report};
 use navix::cli::Args;
-use navix::coordinator::{unroll_walltime, Engine};
+use navix::coordinator::{unroll_walltime_exec, Engine};
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
@@ -17,16 +25,20 @@ fn main() -> anyhow::Result<()> {
     let steps = args.opt_usize("steps", 1000)?;
     // thread-per-env baseline is capped: that's the paper's point
     let max_async = args.opt_usize("max-async", 128)?;
+    let exec = args.exec_config()?;
 
     let mut report =
         Report::new("throughput_sweep", &["envs", "engine", "wall", "steps/s"]);
     let mut b = 1;
     while b <= max_batch {
-        for engine in [Engine::Batched, Engine::BaselineSync, Engine::BaselineAsync] {
-            if engine != Engine::Batched && b > max_async {
+        for engine in
+            [Engine::Batched, Engine::Sharded, Engine::BaselineSync, Engine::BaselineAsync]
+        {
+            let is_baseline = matches!(engine, Engine::BaselineSync | Engine::BaselineAsync);
+            if is_baseline && b > max_async {
                 continue;
             }
-            let secs = unroll_walltime(engine, &env_id, b, steps, 0)?;
+            let secs = unroll_walltime_exec(engine, &env_id, b, steps, 0, &exec)?;
             report.row(&[
                 b.to_string(),
                 engine.name().to_string(),

@@ -8,13 +8,22 @@ use navix::bench_harness::{time_once, Report};
 use navix::coordinator::{unroll_walltime, Engine};
 
 fn main() {
-    let fast = std::env::var("NAVIX_BENCH_FAST").is_ok();
+    // --smoke: the CI bench-smoke profile (tiny batch, 1 iteration) whose
+    // only purpose is recording `results/BENCH_fig5_batch.json` every run.
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let fast = smoke || std::env::var("NAVIX_BENCH_FAST").is_ok();
     let max_batched: usize = std::env::var("NAVIX_FIG5_MAX")
         .ok()
         .and_then(|v| v.parse().ok())
-        .unwrap_or(if fast { 256 } else { 1 << 16 });
-    let max_async = if fast { 16 } else { 256 };
-    let steps = if fast { 50 } else { 1000 };
+        .unwrap_or(if smoke {
+            64
+        } else if fast {
+            256
+        } else {
+            1 << 16
+        });
+    let max_async = if smoke { 4 } else if fast { 16 } else { 256 };
+    let steps = if smoke { 5 } else if fast { 50 } else { 1000 };
     let env_id = "Navix-Empty-8x8-v0";
 
     let mut report =

@@ -10,7 +10,7 @@
 //! objective.
 
 use crate::agents::{gae, preprocess_obs, CurvePoint, ReturnTracker, TrainLog};
-use crate::batch::BatchedEnv;
+use crate::batch::BatchStepper;
 use crate::core::actions::Action;
 use crate::nn::adam::{clip_global_norm, Adam};
 use crate::nn::{log_softmax, sample_categorical, softmax, Activation, Mlp};
@@ -116,14 +116,21 @@ impl Ppo {
         Ppo { cfg, actor, critic, actor_opt, critic_opt, obs_dim, n_actions, rng }
     }
 
-    /// Collect one on-policy rollout from `env` into `ro`.
-    pub fn collect_rollout(&mut self, env: &mut BatchedEnv, ro: &mut Rollout, tracker: &mut ReturnTracker) {
-        let (t_len, b) = (self.cfg.rollout_len, env.b);
+    /// Collect one on-policy rollout from `env` into `ro`. Generic over the
+    /// execution backend: the single-threaded [`crate::batch::BatchedEnv`]
+    /// or the sharded multi-core [`crate::batch::ShardedEnv`].
+    pub fn collect_rollout<E: BatchStepper + ?Sized>(
+        &mut self,
+        env: &mut E,
+        ro: &mut Rollout,
+        tracker: &mut ReturnTracker,
+    ) {
+        let (t_len, b) = (self.cfg.rollout_len, env.batch_size());
         let mut x = vec![0.0f32; self.obs_dim];
         let mut actions = vec![0u8; b];
         for t in 0..t_len {
             for i in 0..b {
-                preprocess_obs(env.obs.env_i32(b, i), &mut x);
+                preprocess_obs(env.obs().env_i32(b, i), &mut x);
                 let logits = self.actor.infer(&x);
                 let value = self.critic.infer(&x)[0];
                 let a = sample_categorical(&logits, &mut self.rng);
@@ -137,19 +144,20 @@ impl Ppo {
                 actions[i] = a as u8;
             }
             env.step(&actions);
+            let ts = env.timestep();
             for i in 0..b {
                 let idx = t * b + i;
-                ro.rewards[idx] = env.timestep.reward[i];
-                ro.discounts[idx] = env.timestep.discount[i];
-                let last = env.timestep.step_type[i].is_last();
+                ro.rewards[idx] = ts.reward[i];
+                ro.discounts[idx] = ts.discount[i];
+                let last = ts.step_type[i].is_last();
                 ro.boundaries[idx] = last;
                 if last {
-                    tracker.push(env.timestep.episodic_return[i]);
+                    tracker.push(ts.episodic_return[i]);
                 }
             }
         }
         for i in 0..b {
-            preprocess_obs(env.obs.env_i32(b, i), &mut x);
+            preprocess_obs(env.obs().env_i32(b, i), &mut x);
             ro.last_values[i] = self.critic.infer(&x)[0];
         }
         gae::gae(
@@ -247,12 +255,12 @@ impl Ppo {
     }
 
     /// Full training loop: `total_steps` environment steps on `env`.
-    pub fn train(&mut self, env: &mut BatchedEnv, total_steps: u64) -> TrainLog {
+    pub fn train<E: BatchStepper + ?Sized>(&mut self, env: &mut E, total_steps: u64) -> TrainLog {
         let mut log = TrainLog::default();
         let mut tracker = ReturnTracker::new(64);
-        let steps_per_iter = (self.cfg.rollout_len * env.b) as u64;
+        let steps_per_iter = (self.cfg.rollout_len * env.batch_size()) as u64;
         let iters = total_steps.div_ceil(steps_per_iter);
-        let mut ro = Rollout::new(self.cfg.rollout_len, env.b, self.obs_dim);
+        let mut ro = Rollout::new(self.cfg.rollout_len, env.batch_size(), self.obs_dim);
         for it in 0..iters {
             self.collect_rollout(env, &mut ro, &mut tracker);
             let m = self.update(&ro);
@@ -277,6 +285,7 @@ impl Ppo {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::batch::BatchedEnv;
     use crate::envs::registry::make;
     use crate::rng::Key;
 

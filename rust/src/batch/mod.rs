@@ -11,6 +11,19 @@
 //! The batching win this engine reproduces is architectural, not SIMD magic:
 //! one dispatch amortised over `B` contiguous state slots vs. one Python
 //! object graph per environment in the baseline ([`crate::baseline`]).
+//!
+//! ## RNG contract (what makes sharding deterministic)
+//!
+//! Every episode key is a pure function of `(root key, global env index,
+//! per-env episode count)` — `key.fold_in(index).fold_in(count)` — and the
+//! in-episode stream lives inside the env's own state slot. Nothing depends
+//! on the order envs are stepped or reset, so splitting the batch into
+//! contiguous shards ([`sharded::ShardedEnv`], the `pmap` analog) is
+//! bit-identical to the single-threaded engine for any shard count.
+
+pub mod sharded;
+
+pub use sharded::ShardedEnv;
 
 use crate::core::actions::Action;
 use crate::core::state::BatchedState;
@@ -69,12 +82,25 @@ pub struct BatchedEnv {
     pub obs: ObsBatch,
     sprites: Option<SpriteSheet>,
     key: Key,
-    reset_count: u64,
+    /// Global index of local env 0 (non-zero only inside a [`ShardedEnv`]).
+    index_offset: usize,
+    /// Per-env episode counter: episode key = key ⊕ global index ⊕ count.
+    reset_counts: Vec<u64>,
 }
 
 impl BatchedEnv {
     /// Allocate and reset `b` environments.
     pub fn new(cfg: EnvConfig, b: usize, key: Key) -> Self {
+        BatchedEnv::with_offset(cfg, b, key, 0)
+    }
+
+    /// Allocate `b` environments whose *global* indices start at
+    /// `index_offset`. This is the constructor [`ShardedEnv`] uses: a shard
+    /// covering envs `[lo, hi)` of a batch derives exactly the RNG streams
+    /// the equivalent single `BatchedEnv` would, because episode keys are a
+    /// pure function of `(key, index_offset + i, reset_counts[i])` — never
+    /// of the worker or shard that happens to step the env.
+    pub fn with_offset(cfg: EnvConfig, b: usize, key: Key, index_offset: usize) -> Self {
         let state = BatchedState::new(b, cfg.h, cfg.w, cfg.caps);
         let obs_len = cfg.obs.len(cfg.h, cfg.w);
         let obs = if cfg.obs.kind.is_rgb() {
@@ -91,7 +117,8 @@ impl BatchedEnv {
             obs,
             sprites,
             key,
-            reset_count: 0,
+            index_offset,
+            reset_counts: vec![0; b],
         };
         env.reset_all();
         env
@@ -102,12 +129,17 @@ impl BatchedEnv {
         Action::N
     }
 
+    /// Episode key for local env `i` (see the module-level RNG contract).
+    #[inline]
+    fn episode_key(&self, i: usize) -> Key {
+        self.key.fold_in((self.index_offset + i) as u64).fold_in(self.reset_counts[i])
+    }
+
     /// Reset every environment (fresh episode keys) and write observations.
     pub fn reset_all(&mut self) {
-        self.reset_count += 1;
-        let base = self.key.fold_in(self.reset_count);
         for i in 0..self.b {
-            let key = base.fold_in(i as u64);
+            self.reset_counts[i] += 1;
+            let key = self.episode_key(i);
             let mut slot = self.state.slot_mut(i);
             self.cfg.reset_slot(&mut slot, key);
         }
@@ -119,8 +151,8 @@ impl BatchedEnv {
 
     /// Reset just env `i` (autoreset path).
     fn reset_one(&mut self, i: usize) {
-        self.reset_count += 1;
-        let key = self.key.fold_in(self.reset_count).fold_in(i as u64);
+        self.reset_counts[i] += 1;
+        let key = self.episode_key(i);
         let mut slot = self.state.slot_mut(i);
         self.cfg.reset_slot(&mut slot, key);
         self.timestep.t[i] = 0;
@@ -203,6 +235,54 @@ impl BatchedEnv {
             self.step(&actions);
         }
         steps * self.b
+    }
+}
+
+/// Uniform interface over the batched steppers — [`BatchedEnv`] (the `vmap`
+/// analog) and [`ShardedEnv`] (the `pmap` analog) — so training and
+/// benchmark code is agnostic to the execution backend. Object safe: the
+/// multi-agent coordinator holds `Box<dyn BatchStepper>` per agent.
+pub trait BatchStepper {
+    /// Number of parallel environments.
+    fn batch_size(&self) -> usize;
+
+    /// Step every environment in lockstep; terminal slots autoreset.
+    fn step(&mut self, actions: &[u8]);
+
+    /// Timestep metadata written by the most recent step/reset.
+    fn timestep(&self) -> &BatchedTimestep;
+
+    /// Observation buffers written by the most recent step/reset.
+    fn obs(&self) -> &ObsBatch;
+
+    /// Reset every environment with fresh episode keys.
+    fn reset_all(&mut self);
+
+    /// Number of discrete actions.
+    fn num_actions(&self) -> usize {
+        Action::N
+    }
+}
+
+impl BatchStepper for BatchedEnv {
+    fn batch_size(&self) -> usize {
+        self.b
+    }
+
+    fn step(&mut self, actions: &[u8]) {
+        BatchedEnv::step(self, actions);
+    }
+
+    fn timestep(&self) -> &BatchedTimestep {
+        &self.timestep
+    }
+
+    fn obs(&self) -> &ObsBatch {
+        &self.obs
+    }
+
+    fn reset_all(&mut self) {
+        BatchedEnv::reset_all(self);
     }
 }
 
@@ -308,6 +388,28 @@ mod tests {
         for id in crate::envs::registry::fig3_envs() {
             let mut e = env(id, 4);
             e.rollout_random(50, 7);
+        }
+    }
+
+    #[test]
+    fn offset_slices_reproduce_global_streams() {
+        // The RNG contract behind ShardedEnv: a BatchedEnv covering global
+        // envs [3, 6) must reproduce envs 3..6 of a 6-env batch exactly —
+        // layouts, steps and autoresets included.
+        let cfg = make("Navix-Empty-Random-6x6").unwrap();
+        let mut full = BatchedEnv::new(cfg.clone(), 6, Key::new(9));
+        let mut part = BatchedEnv::with_offset(cfg, 3, Key::new(9), 3);
+        assert_eq!(&full.state.player_pos[3..6], &part.state.player_pos[..]);
+        let mut rng = crate::rng::Rng::new(4);
+        for _ in 0..120 {
+            let actions: Vec<u8> = (0..6).map(|_| rng.below(7) as u8).collect();
+            full.step(&actions);
+            part.step(&actions[3..6]);
+            assert_eq!(&full.state.player_pos[3..6], &part.state.player_pos[..]);
+            assert_eq!(&full.timestep.reward[3..6], &part.timestep.reward[..]);
+            for i in 0..3 {
+                assert_eq!(full.obs.env_i32(6, 3 + i), part.obs.env_i32(3, i));
+            }
         }
     }
 

@@ -1,0 +1,424 @@
+//! `ShardedEnv` — the multi-core batch stepper (the `jax.pmap` analog).
+//!
+//! [`BatchedEnv`] amortises one dispatch over `B` contiguous state slots
+//! (the paper's `vmap` analog). This module adds the *device axis* from the
+//! paper's `pmap` benchmarks (§4.2) and the large-batch simulation design of
+//! Shacklett et al.: the struct-of-arrays batch is split into `S`
+//! **contiguous shards**, each a [`BatchedEnv`] over its global index range,
+//! stepped by a **fixed pool** of worker threads.
+//!
+//! The pool is persistent: workers are spawned once at construction and
+//! synchronise with the caller on an epoch counter + two condvars. The hot
+//! path performs **no allocation and no channel traffic** — actions are
+//! scattered into preallocated per-shard buffers, each worker steps its
+//! shards in place, and the results are gathered into contiguous
+//! timestep/observation mirrors with one `memcpy` per field per shard.
+//! Per-shard busy time is accumulated for the load statistics the
+//! `fig5_sharded` bench reports.
+//!
+//! ## Determinism
+//!
+//! Stepping is **bit-identical** to the single-threaded [`BatchedEnv`] for
+//! any shard count: every per-env RNG stream is a pure function of
+//! `(root key, global env index, per-env episode count)` — never of the
+//! shard or worker that executes the env (see [`BatchedEnv::with_offset`]
+//! and the module docs of [`crate::batch`]). The integration test
+//! `rust/tests/test_sharded_determinism.rs` pins this for `S ∈ {1, 2, 7}`.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::batch::{BatchStepper, BatchedEnv, ObsBatch};
+use crate::core::actions::Action;
+use crate::core::timestep::BatchedTimestep;
+use crate::envs::EnvConfig;
+use crate::rng::Key;
+
+/// One shard: a contiguous env range plus its scatter/timing buffers.
+struct Shard {
+    env: BatchedEnv,
+    /// Per-step action slice for this shard (scattered by the caller).
+    actions: Vec<u8>,
+    /// Cumulative busy wall-time spent stepping/resetting this shard.
+    busy_secs: f64,
+}
+
+/// What an epoch asks the workers to do.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Cmd {
+    Step,
+    ResetAll,
+}
+
+struct PoolState {
+    epoch: u64,
+    cmd: Cmd,
+    done_workers: usize,
+    shutdown: bool,
+}
+
+struct Control {
+    state: Mutex<PoolState>,
+    start: Condvar,
+    done: Condvar,
+}
+
+/// `B` parallel environments split into `S` contiguous shards, stepped by a
+/// fixed multi-core worker pool. Mirrors [`BatchedEnv`]'s public surface
+/// (`timestep`, `obs`, `step`, `reset_all`, `rollout_random`) so callers
+/// can switch engines without code changes (or use [`BatchStepper`]).
+pub struct ShardedEnv {
+    pub cfg: EnvConfig,
+    pub b: usize,
+    pub num_shards: usize,
+    pub num_threads: usize,
+    /// Gathered timestep mirror (same layout as [`BatchedEnv::timestep`]).
+    pub timestep: BatchedTimestep,
+    /// Gathered observation mirror (same layout as [`BatchedEnv::obs`]).
+    pub obs: ObsBatch,
+    bounds: Vec<(usize, usize)>,
+    shards: Vec<Arc<Mutex<Shard>>>,
+    control: Arc<Control>,
+    workers: Vec<JoinHandle<()>>,
+    obs_stride: usize,
+}
+
+impl ShardedEnv {
+    /// Allocate `b` environments split into `num_shards` contiguous shards
+    /// stepped by `num_threads` persistent workers. `0` for either means
+    /// "use the host's available parallelism"; both are clamped so no shard
+    /// is empty and no worker is idle by construction.
+    pub fn new(
+        cfg: EnvConfig,
+        b: usize,
+        num_shards: usize,
+        num_threads: usize,
+        key: Key,
+    ) -> Self {
+        let auto = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let num_shards = if num_shards == 0 { auto } else { num_shards }.clamp(1, b.max(1));
+        let num_threads = if num_threads == 0 { auto } else { num_threads }.clamp(1, num_shards);
+
+        let obs_stride = cfg.obs.len(cfg.h, cfg.w);
+        let mut bounds = Vec::with_capacity(num_shards);
+        let mut shards = Vec::with_capacity(num_shards);
+        for s in 0..num_shards {
+            let lo = s * b / num_shards;
+            let hi = (s + 1) * b / num_shards;
+            bounds.push((lo, hi));
+            let env = BatchedEnv::with_offset(cfg.clone(), hi - lo, key, lo);
+            shards.push(Arc::new(Mutex::new(Shard {
+                env,
+                actions: vec![0u8; hi - lo],
+                busy_secs: 0.0,
+            })));
+        }
+
+        let obs = if cfg.obs.kind.is_rgb() {
+            ObsBatch::U8(vec![0; b * obs_stride])
+        } else {
+            ObsBatch::I32(vec![0; b * obs_stride])
+        };
+
+        let control = Arc::new(Control {
+            state: Mutex::new(PoolState {
+                epoch: 0,
+                cmd: Cmd::Step,
+                done_workers: 0,
+                shutdown: false,
+            }),
+            start: Condvar::new(),
+            done: Condvar::new(),
+        });
+
+        // Fixed shard ownership, round-robin: worker w steps shards
+        // w, w+T, w+2T, … — contiguous global ranges stay cache-friendly
+        // within a shard while load spreads across workers.
+        let workers = (0..num_threads)
+            .map(|w| {
+                let mine: Vec<Arc<Mutex<Shard>>> =
+                    shards.iter().skip(w).step_by(num_threads).cloned().collect();
+                let control = Arc::clone(&control);
+                std::thread::spawn(move || worker_loop(mine, control, num_threads))
+            })
+            .collect();
+
+        let mut env = ShardedEnv {
+            cfg,
+            b,
+            num_shards,
+            num_threads,
+            timestep: BatchedTimestep::first(b),
+            obs,
+            bounds,
+            shards,
+            control,
+            workers,
+            obs_stride,
+        };
+        env.gather(); // expose the construction-time reset observations
+        env
+    }
+
+    /// Number of discrete actions.
+    pub fn num_actions(&self) -> usize {
+        Action::N
+    }
+
+    /// Step all environments with `actions` (one per env, values 0..7).
+    /// Environments whose previous timestep was terminal autoreset instead.
+    /// Bit-identical to [`BatchedEnv::step`] on the same action sequence.
+    pub fn step(&mut self, actions: &[u8]) {
+        debug_assert_eq!(actions.len(), self.b);
+        for (shard, &(lo, hi)) in self.shards.iter().zip(&self.bounds) {
+            shard.lock().unwrap().actions.copy_from_slice(&actions[lo..hi]);
+        }
+        self.run_epoch(Cmd::Step);
+        self.gather();
+    }
+
+    /// Reset every environment (fresh episode keys), in parallel.
+    pub fn reset_all(&mut self) {
+        self.run_epoch(Cmd::ResetAll);
+        self.gather();
+    }
+
+    /// Convenience: run `steps` lockstep iterations with uniformly random
+    /// actions — the same action stream [`BatchedEnv::rollout_random`]
+    /// draws, so throughput comparisons execute identical work. Returns
+    /// total env-steps (`b × steps`).
+    pub fn rollout_random(&mut self, steps: usize, seed: u64) -> usize {
+        let mut rng = crate::rng::Rng::new(seed);
+        let mut actions = vec![0u8; self.b];
+        for _ in 0..steps {
+            for a in actions.iter_mut() {
+                *a = rng.below(Action::N as u32) as u8;
+            }
+            self.step(&actions);
+        }
+        steps * self.b
+    }
+
+    /// Cumulative per-shard busy seconds since construction (the fig5
+    /// sharded bench reports max/mean as the load-imbalance ratio).
+    pub fn shard_busy_secs(&self) -> Vec<f64> {
+        self.shards.iter().map(|s| s.lock().unwrap().busy_secs).collect()
+    }
+
+    /// Global `[lo, hi)` env ranges of each shard.
+    pub fn shard_bounds(&self) -> &[(usize, usize)] {
+        &self.bounds
+    }
+
+    /// Inspect one shard's engine under its lock (debugging/tests).
+    pub fn with_shard<R>(&self, s: usize, f: impl FnOnce(&BatchedEnv) -> R) -> R {
+        let shard = self.shards[s].lock().unwrap();
+        f(&shard.env)
+    }
+
+    /// Publish one epoch of work and block until every worker finished it.
+    /// The epoch counter (not the notification) is the wait condition, so
+    /// wakeups can never be missed.
+    fn run_epoch(&self, cmd: Cmd) {
+        {
+            let mut st = self.control.state.lock().unwrap();
+            st.cmd = cmd;
+            st.done_workers = 0;
+            st.epoch += 1;
+            self.control.start.notify_all();
+        }
+        let mut st = self.control.state.lock().unwrap();
+        while st.done_workers < self.num_threads {
+            st = self.control.done.wait(st).unwrap();
+        }
+    }
+
+    /// Copy every shard's timestep and observation slices into the
+    /// contiguous mirrors — one `memcpy` per field per shard, no
+    /// allocation.
+    fn gather(&mut self) {
+        for (shard, &(lo, hi)) in self.shards.iter().zip(&self.bounds) {
+            let sh = shard.lock().unwrap();
+            let ts = &sh.env.timestep;
+            self.timestep.t[lo..hi].copy_from_slice(&ts.t);
+            self.timestep.action[lo..hi].copy_from_slice(&ts.action);
+            self.timestep.reward[lo..hi].copy_from_slice(&ts.reward);
+            self.timestep.discount[lo..hi].copy_from_slice(&ts.discount);
+            self.timestep.step_type[lo..hi].copy_from_slice(&ts.step_type);
+            self.timestep.episodic_return[lo..hi].copy_from_slice(&ts.episodic_return);
+            let s = self.obs_stride;
+            match (&mut self.obs, &sh.env.obs) {
+                (ObsBatch::I32(dst), ObsBatch::I32(src)) => {
+                    dst[lo * s..hi * s].copy_from_slice(src);
+                }
+                (ObsBatch::U8(dst), ObsBatch::U8(src)) => {
+                    dst[lo * s..hi * s].copy_from_slice(src);
+                }
+                _ => unreachable!("shard obs dtype diverged from the mirror"),
+            }
+        }
+    }
+}
+
+impl Drop for ShardedEnv {
+    fn drop(&mut self) {
+        {
+            let mut st = self.control.state.lock().unwrap();
+            st.shutdown = true;
+            self.control.start.notify_all();
+        }
+        for handle in self.workers.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl BatchStepper for ShardedEnv {
+    fn batch_size(&self) -> usize {
+        self.b
+    }
+
+    fn step(&mut self, actions: &[u8]) {
+        ShardedEnv::step(self, actions);
+    }
+
+    fn timestep(&self) -> &BatchedTimestep {
+        &self.timestep
+    }
+
+    fn obs(&self) -> &ObsBatch {
+        &self.obs
+    }
+
+    fn reset_all(&mut self) {
+        ShardedEnv::reset_all(self);
+    }
+}
+
+/// Worker body: wait for a new epoch, execute the command over the owned
+/// shards (timing each), report completion. Exits on shutdown.
+fn worker_loop(mine: Vec<Arc<Mutex<Shard>>>, control: Arc<Control>, total_workers: usize) {
+    let mut seen_epoch = 0u64;
+    loop {
+        let cmd = {
+            let mut st = control.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen_epoch {
+                    break;
+                }
+                st = control.start.wait(st).unwrap();
+            }
+            seen_epoch = st.epoch;
+            st.cmd
+        };
+        for shard in &mine {
+            let mut sh = shard.lock().unwrap();
+            let t0 = Instant::now();
+            match cmd {
+                Cmd::Step => {
+                    let Shard { env, actions, .. } = &mut *sh;
+                    env.step(actions);
+                }
+                Cmd::ResetAll => sh.env.reset_all(),
+            }
+            sh.busy_secs += t0.elapsed().as_secs_f64();
+        }
+        let mut st = control.state.lock().unwrap();
+        st.done_workers += 1;
+        if st.done_workers == total_workers {
+            control.done.notify_one();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::timestep::StepType;
+    use crate::envs::registry::make;
+    use crate::rng::Rng;
+
+    fn env(id: &str, b: usize, shards: usize, threads: usize) -> ShardedEnv {
+        ShardedEnv::new(make(id).unwrap(), b, shards, threads, Key::new(0))
+    }
+
+    #[test]
+    fn construction_resets_and_gathers_obs() {
+        let e = env("Navix-Empty-8x8-v0", 8, 4, 2);
+        assert_eq!(e.num_shards, 4);
+        assert_eq!(e.num_threads, 2);
+        assert!(e.timestep.step_type.iter().all(|&s| s == StepType::First));
+        // fixed start: all eight observations identical and non-trivial
+        let o0: Vec<i32> = e.obs.env_i32(8, 0).to_vec();
+        assert!(o0.iter().any(|&x| x != 0));
+        for i in 1..8 {
+            assert_eq!(e.obs.env_i32(8, i), &o0[..]);
+        }
+    }
+
+    #[test]
+    fn shard_counts_clamp_to_batch() {
+        let e = env("Navix-Empty-5x5-v0", 3, 7, 7);
+        assert_eq!(e.num_shards, 3, "no empty shards");
+        assert!(e.num_threads <= 3);
+        let total: usize = e.shard_bounds().iter().map(|&(lo, hi)| hi - lo).sum();
+        assert_eq!(total, 3);
+    }
+
+    #[test]
+    fn matches_batched_env_bitwise_on_random_walk() {
+        let cfg = make("Navix-Empty-Random-6x6").unwrap();
+        let mut single = BatchedEnv::new(cfg.clone(), 10, Key::new(3));
+        let mut sharded = ShardedEnv::new(cfg, 10, 3, 2, Key::new(3));
+        let mut rng = Rng::new(11);
+        for _ in 0..150 {
+            let actions: Vec<u8> = (0..10).map(|_| rng.below(7) as u8).collect();
+            single.step(&actions);
+            sharded.step(&actions);
+            assert_eq!(single.timestep.reward, sharded.timestep.reward);
+            assert_eq!(single.timestep.step_type, sharded.timestep.step_type);
+            for i in 0..10 {
+                assert_eq!(single.obs.env_i32(10, i), sharded.obs.env_i32(10, i));
+            }
+        }
+    }
+
+    #[test]
+    fn reset_all_matches_batched_env() {
+        let cfg = make("Navix-Empty-Random-8x8").unwrap();
+        let mut single = BatchedEnv::new(cfg.clone(), 6, Key::new(5));
+        let mut sharded = ShardedEnv::new(cfg, 6, 2, 2, Key::new(5));
+        single.reset_all();
+        sharded.reset_all();
+        assert_eq!(single.state.player_pos, {
+            let mut pos = Vec::new();
+            for s in 0..sharded.num_shards {
+                sharded.with_shard(s, |e| pos.extend_from_slice(&e.state.player_pos));
+            }
+            pos
+        });
+        for i in 0..6 {
+            assert_eq!(single.obs.env_i32(6, i), sharded.obs.env_i32(6, i));
+        }
+    }
+
+    #[test]
+    fn rollout_random_executes_requested_steps_and_times_shards() {
+        let mut e = env("Navix-Empty-8x8-v0", 16, 4, 2);
+        let n = e.rollout_random(50, 42);
+        assert_eq!(n, 800);
+        let busy = e.shard_busy_secs();
+        assert_eq!(busy.len(), 4);
+        assert!(busy.iter().all(|&t| t > 0.0), "workers must have timed work: {busy:?}");
+    }
+
+    #[test]
+    fn drop_joins_the_pool() {
+        let e = env("Navix-Empty-5x5-v0", 4, 2, 2);
+        drop(e); // must not hang or leak threads
+    }
+}

@@ -55,17 +55,40 @@ impl Report {
         self.rows.push(cells.to_vec());
     }
 
-    /// Write the table as TSV under `results/` (best-effort).
+    /// Write the table under `results/` (best-effort): as TSV for
+    /// EXPERIMENTS.md citations and as `BENCH_<name>.json` — the artifact
+    /// the CI bench-smoke job uploads so the perf trajectory is recorded
+    /// run over run.
     pub fn save(&self) {
         let _ = std::fs::create_dir_all("results");
-        let path = format!("results/{}.tsv", self.name.replace([' ', '/'], "_"));
+        let safe = self.name.replace([' ', '/'], "_");
         let mut body = self.header.join("\t");
         body.push('\n');
         for r in &self.rows {
             body.push_str(&r.join("\t"));
             body.push('\n');
         }
-        let _ = std::fs::write(path, body);
+        let _ = std::fs::write(format!("results/{safe}.tsv"), body);
+        let _ = std::fs::write(format!("results/BENCH_{safe}.json"), self.to_json());
+    }
+
+    /// The table as a JSON document (hand-rolled: serde is not vendored in
+    /// this offline image).
+    pub fn to_json(&self) -> String {
+        fn esc(s: &str) -> String {
+            s.replace('\\', "\\\\").replace('"', "\\\"")
+        }
+        fn arr(cells: &[String]) -> String {
+            let quoted: Vec<String> = cells.iter().map(|c| format!("\"{}\"", esc(c))).collect();
+            format!("[{}]", quoted.join(","))
+        }
+        let rows: Vec<String> = self.rows.iter().map(|r| arr(r)).collect();
+        format!(
+            "{{\"name\":\"{}\",\"header\":{},\"rows\":[{}]}}\n",
+            esc(&self.name),
+            arr(&self.header),
+            rows.join(",")
+        )
     }
 }
 
@@ -87,5 +110,16 @@ mod tests {
         let (dt, v) = time_once(|| 21 * 2);
         assert_eq!(v, 42);
         assert!(dt >= 0.0);
+    }
+
+    #[test]
+    fn report_json_shape_and_escaping() {
+        let mut r = Report::new("json test", &["a", "b"]);
+        r.row(&["1".to_string(), "x \"quoted\"".to_string()]);
+        let j = r.to_json();
+        assert!(j.starts_with("{\"name\":\"json test\""));
+        assert!(j.contains("\"header\":[\"a\",\"b\"]"));
+        assert!(j.contains("\"rows\":[[\"1\",\"x \\\"quoted\\\"\"]]"));
+        assert!(j.ends_with("}\n"));
     }
 }

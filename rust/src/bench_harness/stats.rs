@@ -60,6 +60,23 @@ pub fn percentile(sorted: &[f64], p: f64) -> f64 {
     sorted[lo] * (1.0 - frac) + sorted[hi] * frac
 }
 
+/// Load-imbalance ratio of per-shard busy times: `max / mean` (1.0 =
+/// perfectly balanced). Reported by the sharded benches next to steps/s —
+/// the gap between the speedup and the thread count is explained by this
+/// number plus the synchronisation overhead.
+pub fn imbalance(busy_secs: &[f64]) -> f64 {
+    if busy_secs.is_empty() {
+        return 1.0;
+    }
+    let max = busy_secs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let mean = busy_secs.iter().sum::<f64>() / busy_secs.len() as f64;
+    if mean <= 0.0 {
+        1.0
+    } else {
+        max / mean
+    }
+}
+
 /// Human-friendly seconds formatting (µs/ms/s).
 pub fn fmt_duration(secs: f64) -> String {
     if secs < 1e-3 {
@@ -100,5 +117,13 @@ mod tests {
         assert_eq!(fmt_duration(0.5e-4), "50.0µs");
         assert_eq!(fmt_duration(0.5), "500.00ms");
         assert_eq!(fmt_duration(2.5), "2.50s");
+    }
+
+    #[test]
+    fn imbalance_ratio() {
+        assert!((imbalance(&[1.0, 1.0, 1.0]) - 1.0).abs() < 1e-12, "balanced");
+        assert!((imbalance(&[2.0, 1.0, 0.0]) - 2.0).abs() < 1e-12, "max 2 / mean 1");
+        assert_eq!(imbalance(&[]), 1.0);
+        assert_eq!(imbalance(&[0.0, 0.0]), 1.0, "no work yet");
     }
 }

@@ -16,7 +16,7 @@ pub struct Args {
 }
 
 /// Option names that take no value (everything else with `--` expects one).
-const SWITCHES: &[&str] = &["help", "verbose", "tune", "baseline", "xla", "quiet"];
+const SWITCHES: &[&str] = &["help", "verbose", "tune", "baseline", "xla", "quiet", "sharded", "smoke"];
 
 impl Args {
     pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
@@ -82,6 +82,16 @@ impl Args {
     pub fn switch(&self, name: &str) -> bool {
         self.switches.iter().any(|s| s == name)
     }
+
+    /// The sharded-execution flags shared by the `run` launcher and the
+    /// throughput drivers: `--shards S --threads T` (absent/0 = use the
+    /// host's available parallelism). See [`crate::batch::ShardedEnv`].
+    pub fn exec_config(&self) -> Result<crate::config::ExecConfig> {
+        Ok(crate::config::ExecConfig {
+            num_shards: self.opt_usize("shards", 0)?,
+            num_threads: self.opt_usize("threads", 0)?,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -121,5 +131,16 @@ mod tests {
         assert_eq!(a.opt_or("env", "Navix-Empty-8x8-v0"), "Navix-Empty-8x8-v0");
         assert_eq!(a.opt_f32("lr", 3e-4).unwrap(), 3e-4);
         assert!(!a.switch("verbose"));
+    }
+
+    #[test]
+    fn exec_config_flags() {
+        let a = parse("run --shards 4 --threads 2");
+        let e = a.exec_config().unwrap();
+        assert_eq!(e.num_shards, 4);
+        assert_eq!(e.num_threads, 2);
+        let auto = parse("run").exec_config().unwrap();
+        assert_eq!(auto.num_shards, 0, "absent flags mean auto");
+        assert_eq!(auto.num_threads, 0);
     }
 }

@@ -97,6 +97,32 @@ impl Config {
     }
 }
 
+/// Execution-layer configuration for the sharded multi-core stepper
+/// ([`crate::batch::ShardedEnv`], the `pmap` analog): how many contiguous
+/// shards a batch is split into and how many persistent worker threads step
+/// them. `0` means "use the host's available parallelism" — the default.
+///
+/// Sources: the `[parallel]` config-file section ([`ExecConfig::from_config`])
+/// or the `--shards` / `--threads` command-line flags
+/// ([`crate::cli::Args::exec_config`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ExecConfig {
+    /// Number of contiguous shards (0 = auto).
+    pub num_shards: usize,
+    /// Number of worker threads (0 = auto, clamped to `num_shards`).
+    pub num_threads: usize,
+}
+
+impl ExecConfig {
+    /// Read `[parallel] num_shards / num_threads` from a config file.
+    pub fn from_config(cfg: &Config) -> Result<ExecConfig> {
+        Ok(ExecConfig {
+            num_shards: cfg.get_usize("parallel.num_shards", 0)?,
+            num_threads: cfg.get_usize("parallel.num_threads", 0)?,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -143,5 +169,15 @@ name = "tuned"
         let c = Config::parse(SAMPLE).unwrap();
         let keys: Vec<&str> = c.section("ppo").map(|(k, _)| k).collect();
         assert_eq!(keys, vec!["anneal", "lr", "name", "num_envs"]);
+    }
+
+    #[test]
+    fn exec_config_parses_parallel_section_and_defaults_to_auto() {
+        let c = Config::parse("[parallel]\nnum_shards = 4\nnum_threads = 2\n").unwrap();
+        let e = ExecConfig::from_config(&c).unwrap();
+        assert_eq!(e, ExecConfig { num_shards: 4, num_threads: 2 });
+        let none = ExecConfig::from_config(&Config::parse("").unwrap()).unwrap();
+        assert_eq!(none, ExecConfig::default());
+        assert_eq!(none.num_shards, 0, "0 = auto");
     }
 }

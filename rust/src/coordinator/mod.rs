@@ -15,5 +15,5 @@ pub mod scoreboard;
 pub mod throughput;
 pub mod trainer;
 
-pub use throughput::{unroll_walltime, Engine};
+pub use throughput::{unroll_walltime, unroll_walltime_exec, Engine};
 pub use trainer::XlaPpo;

@@ -3,16 +3,18 @@
 //! trained simultaneously on one accelerator.
 //!
 //! Hardware adaptation: the paper packs all agents into one GPU via a
-//! leading vmap axis. On this single-core CPU testbed agents are trained
-//! within one process over a shared SoA engine pool (one `BatchedEnv` of
-//! `n_agents × envs_per_agent` slots, sliced per agent), which preserves
-//! the experiment's structure — shared-nothing agents, one process, one
-//! device — while the absolute scaling curve reflects the host (see
-//! EXPERIMENTS.md §Fig6).
+//! leading vmap axis. Here agents are trained within one process, each over
+//! its own SoA engine batch — single-threaded ([`BatchedEnv`]) by default,
+//! or the sharded multi-core stepper ([`ShardedEnv`], the device axis) via
+//! [`train_parallel_ppo_exec`]. Both modes produce bit-identical
+//! trajectories, which preserves the experiment's structure —
+//! shared-nothing agents, one process — while the absolute scaling curve
+//! reflects the host (see EXPERIMENTS.md §Fig6).
 
 use crate::agents::ppo::{Ppo, PpoConfig};
 use crate::agents::TrainLog;
-use crate::batch::BatchedEnv;
+use crate::batch::{BatchStepper, BatchedEnv, ShardedEnv};
+use crate::config::ExecConfig;
 use crate::envs::registry::make;
 use crate::rng::Key;
 use anyhow::Result;
@@ -30,9 +32,7 @@ pub struct MultiAgentResult {
     pub logs: Vec<TrainLog>,
 }
 
-/// Train `n_agents` PPO agents for `steps_per_agent` env steps each on
-/// `env_id` (paper: Empty-8x8, 1M steps, 16 envs/agent — scale the step
-/// budget to the host).
+/// [`train_parallel_ppo_exec`] on the single-threaded engine.
 pub fn train_parallel_ppo(
     env_id: &str,
     n_agents: usize,
@@ -40,11 +40,38 @@ pub fn train_parallel_ppo(
     steps_per_agent: u64,
     seed: u64,
 ) -> Result<MultiAgentResult> {
+    train_parallel_ppo_exec(env_id, n_agents, envs_per_agent, steps_per_agent, seed, None)
+}
+
+/// Train `n_agents` PPO agents for `steps_per_agent` env steps each on
+/// `env_id` (paper: Empty-8x8, 1M steps, 16 envs/agent — scale the step
+/// budget to the host). With `exec: Some(cfg)` every agent's batch steps on
+/// the sharded multi-core engine ([`ShardedEnv`], the Fig.-6 device axis);
+/// `None` keeps the single-threaded [`BatchedEnv`]. Trajectories are
+/// bit-identical between the two modes (see `rust/src/batch/sharded.rs`).
+pub fn train_parallel_ppo_exec(
+    env_id: &str,
+    n_agents: usize,
+    envs_per_agent: usize,
+    steps_per_agent: u64,
+    seed: u64,
+    exec: Option<ExecConfig>,
+) -> Result<MultiAgentResult> {
     let cfg = make(env_id)?;
     // Shared-nothing agent pool: one env batch + one learner per agent.
-    let mut agents: Vec<(Ppo, BatchedEnv)> = (0..n_agents)
+    let mut agents: Vec<(Ppo, Box<dyn BatchStepper>)> = (0..n_agents)
         .map(|a| {
-            let env = BatchedEnv::new(cfg.clone(), envs_per_agent, Key::new(seed).fold_in(a as u64));
+            let key = Key::new(seed).fold_in(a as u64);
+            let env: Box<dyn BatchStepper> = match exec {
+                Some(e) => Box::new(ShardedEnv::new(
+                    cfg.clone(),
+                    envs_per_agent,
+                    e.num_shards,
+                    e.num_threads,
+                    key,
+                )),
+                None => Box::new(BatchedEnv::new(cfg.clone(), envs_per_agent, key)),
+            };
             let pcfg = PpoConfig { num_envs: envs_per_agent, ..PpoConfig::default() };
             let ppo = Ppo::new(pcfg, crate::agents::OBS_DIM, 7, seed ^ a as u64);
             (ppo, env)
@@ -59,14 +86,20 @@ pub fn train_parallel_ppo(
     let iters = steps_per_agent.div_ceil(steps_per_iter);
     let mut rollouts: Vec<crate::agents::ppo::Rollout> = agents
         .iter()
-        .map(|(p, e)| crate::agents::ppo::Rollout::new(p.cfg.rollout_len, e.b, crate::agents::OBS_DIM))
+        .map(|(p, e)| {
+            crate::agents::ppo::Rollout::new(
+                p.cfg.rollout_len,
+                e.batch_size(),
+                crate::agents::OBS_DIM,
+            )
+        })
         .collect();
     let mut trackers: Vec<crate::agents::ReturnTracker> =
         (0..n_agents).map(|_| crate::agents::ReturnTracker::new(64)).collect();
     let mut curves: Vec<TrainLog> = (0..n_agents).map(|_| TrainLog::default()).collect();
     for it in 0..iters {
         for (a, (ppo, env)) in agents.iter_mut().enumerate() {
-            ppo.collect_rollout(env, &mut rollouts[a], &mut trackers[a]);
+            ppo.collect_rollout(env.as_mut(), &mut rollouts[a], &mut trackers[a]);
             let m = ppo.update(&rollouts[a]);
             curves[a].curve.push(crate::agents::CurvePoint {
                 env_steps: (it + 1) * steps_per_iter,
@@ -110,5 +143,19 @@ mod tests {
         let c0: Vec<f32> = r.logs[0].curve.iter().map(|p| p.loss).collect();
         let c1: Vec<f32> = r.logs[1].curve.iter().map(|p| p.loss).collect();
         assert_ne!(c0, c1);
+    }
+
+    #[test]
+    fn sharded_mode_reproduces_single_threaded_training_exactly() {
+        // Same seeds, same RNG contract → the sharded device axis must not
+        // change a single loss value (learning is on the same trajectories).
+        let single = train_parallel_ppo("Navix-Empty-5x5-v0", 1, 8, 1_024, 3).unwrap();
+        let exec = ExecConfig { num_shards: 2, num_threads: 2 };
+        let sharded =
+            train_parallel_ppo_exec("Navix-Empty-5x5-v0", 1, 8, 1_024, 3, Some(exec)).unwrap();
+        let l0: Vec<f32> = single.logs[0].curve.iter().map(|p| p.loss).collect();
+        let l1: Vec<f32> = sharded.logs[0].curve.iter().map(|p| p.loss).collect();
+        assert_eq!(l0, l1, "sharded training diverged from single-threaded");
+        assert_eq!(single.logs[0].episodes, sharded.logs[0].episodes);
     }
 }

@@ -2,7 +2,8 @@
 //! random-policy interaction across engines and batch sizes.
 
 use crate::baseline::{AsyncVectorEnv, SyncVectorEnv};
-use crate::batch::BatchedEnv;
+use crate::batch::{BatchedEnv, ShardedEnv};
+use crate::config::ExecConfig;
 use crate::envs::registry::make;
 use crate::rng::{Key, Rng};
 use anyhow::Result;
@@ -11,8 +12,10 @@ use std::time::Instant;
 /// Which engine executes the unroll.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Engine {
-    /// NAVIX analog: batched SoA engine.
+    /// NAVIX analog: batched SoA engine, single-threaded (`vmap`).
     Batched,
+    /// NAVIX analog: sharded multi-core SoA engine (`pmap`).
+    Sharded,
     /// MiniGrid analog: scalar OO engine in a sequential vector wrapper.
     BaselineSync,
     /// MiniGrid analog with gymnasium-`multiprocessing`-style worker threads.
@@ -23,15 +26,14 @@ impl Engine {
     pub fn name(self) -> &'static str {
         match self {
             Engine::Batched => "navix-batched",
+            Engine::Sharded => "navix-sharded",
             Engine::BaselineSync => "minigrid-sync",
             Engine::BaselineAsync => "minigrid-async",
         }
     }
 }
 
-/// Wall time (seconds) for `steps` lockstep iterations of `n_envs` parallel
-/// environments of `env_id` under a uniform-random policy — the paper's
-/// speed protocol ("1K steps with 8 parallel environments", §4.1).
+/// [`unroll_walltime_exec`] with the default (auto) sharding config.
 pub fn unroll_walltime(
     engine: Engine,
     env_id: &str,
@@ -39,10 +41,34 @@ pub fn unroll_walltime(
     steps: usize,
     seed: u64,
 ) -> Result<f64> {
+    unroll_walltime_exec(engine, env_id, n_envs, steps, seed, &ExecConfig::default())
+}
+
+/// Wall time (seconds) for `steps` lockstep iterations of `n_envs` parallel
+/// environments of `env_id` under a uniform-random policy — the paper's
+/// speed protocol ("1K steps with 8 parallel environments", §4.1). `exec`
+/// configures the shard/thread counts of the [`Engine::Sharded`] mode
+/// (ignored by the other engines). Construction (including worker-pool
+/// spawn) is excluded from the timing for every engine.
+pub fn unroll_walltime_exec(
+    engine: Engine,
+    env_id: &str,
+    n_envs: usize,
+    steps: usize,
+    seed: u64,
+    exec: &ExecConfig,
+) -> Result<f64> {
     let cfg = make(env_id)?;
     match engine {
         Engine::Batched => {
             let mut env = BatchedEnv::new(cfg, n_envs, Key::new(seed));
+            let start = Instant::now();
+            env.rollout_random(steps, seed ^ 0xAC7);
+            Ok(start.elapsed().as_secs_f64())
+        }
+        Engine::Sharded => {
+            let mut env =
+                ShardedEnv::new(cfg, n_envs, exec.num_shards, exec.num_threads, Key::new(seed));
             let start = Instant::now();
             env.rollout_random(steps, seed ^ 0xAC7);
             Ok(start.elapsed().as_secs_f64())
@@ -89,10 +115,20 @@ mod tests {
 
     #[test]
     fn all_engines_complete_a_small_unroll() {
-        for engine in [Engine::Batched, Engine::BaselineSync, Engine::BaselineAsync] {
+        for engine in
+            [Engine::Batched, Engine::Sharded, Engine::BaselineSync, Engine::BaselineAsync]
+        {
             let dt = unroll_walltime(engine, "Navix-Empty-5x5-v0", 4, 50, 0).unwrap();
             assert!(dt > 0.0, "{engine:?}");
         }
+    }
+
+    #[test]
+    fn sharded_unroll_respects_explicit_exec_config() {
+        let exec = ExecConfig { num_shards: 2, num_threads: 2 };
+        let dt =
+            unroll_walltime_exec(Engine::Sharded, "Navix-Empty-8x8-v0", 16, 50, 0, &exec).unwrap();
+        assert!(dt > 0.0);
     }
 
     #[test]

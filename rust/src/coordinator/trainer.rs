@@ -20,7 +20,7 @@ use crate::batch::BatchedEnv;
 use crate::nn::{log_softmax, sample_categorical};
 use crate::rng::Rng;
 use crate::runtime::artifacts::{packing, ArtifactSet};
-use crate::runtime::client::{f32_literal, i32_literal, to_f32_scalar, to_f32_vec};
+use crate::runtime::client::{f32_literal, i32_literal, i32_scalar, to_f32_scalar, to_f32_vec};
 use crate::runtime::{Executable, Runtime};
 use anyhow::{Context, Result};
 
@@ -100,7 +100,7 @@ impl XlaPpo {
             f32_literal(&self.params, &[self.params.len() as i64])?,
             f32_literal(&self.opt_m, &[self.opt_m.len() as i64])?,
             f32_literal(&self.opt_v, &[self.opt_v.len() as i64])?,
-            xla::Literal::scalar(self.opt_t),
+            i32_scalar(self.opt_t),
             i32_literal(obs, &[mb, self.obs_dim as i64])?,
             i32_literal(actions, &[mb])?,
             f32_literal(old_logp, &[mb])?,

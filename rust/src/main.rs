@@ -17,7 +17,7 @@ use navix::batch::BatchedEnv;
 use navix::cli::Args;
 use navix::config::Config;
 use navix::coordinator::scoreboard::{Entry, Scoreboard};
-use navix::coordinator::{unroll_walltime, Engine, XlaPpo};
+use navix::coordinator::{unroll_walltime_exec, Engine, XlaPpo};
 use navix::core::entities::EntityKind;
 use navix::rng::Key;
 
@@ -58,7 +58,8 @@ fn print_help() {
     println!(
         "navix — Rust+JAX+Pallas reproduction of NAVIX (NeurIPS 2025)\n\n\
          USAGE: navix <ls|info|run|train|render> [options]\n\n\
-         run   --env ID [--batch B=8] [--steps N=1000] [--engine batched|sync|async] [--seed S]\n\
+         run   --env ID [--batch B=8] [--steps N=1000] [--seed S]\n\
+               [--engine batched|sharded|sync|async] [--shards S=auto] [--threads T=auto]\n\
          train --algo ppo|dqn|sac|ppo-xla --env ID [--steps N=100000] [--seed S] [--config FILE]\n\
          info  [--env ID]\n\
          render --env ID [--seed S]"
@@ -115,10 +116,12 @@ fn cmd_run(args: &Args) -> Result<()> {
     let seed = args.opt_u64("seed", 0)?;
     let engine = match args.opt_or("engine", "batched").as_str() {
         "batched" => Engine::Batched,
+        "sharded" => Engine::Sharded,
         "sync" => Engine::BaselineSync,
         "async" => Engine::BaselineAsync,
         other => return Err(anyhow!("unknown engine {other}")),
     };
+    let exec = args.exec_config()?;
     // Optional observation-function override (also the perf-probe knob:
     // comparing kinds isolates the observation system's share of the step).
     if let Some(kind) = args.opt("obs") {
@@ -150,7 +153,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         );
         return Ok(());
     }
-    let secs = unroll_walltime(engine, &env_id, batch, steps, seed)?;
+    let secs = unroll_walltime_exec(engine, &env_id, batch, steps, seed, &exec)?;
     let sps = (batch * steps) as f64 / secs;
     println!(
         "{} env={env_id} batch={batch} steps={steps}: {:.4}s ({:.0} steps/s)",

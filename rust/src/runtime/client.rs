@@ -73,6 +73,12 @@ pub fn i32_literal(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
     Ok(xla::Literal::vec1(data).reshape(dims)?)
 }
 
+/// Build an i32 scalar literal (e.g. Adam's step counter input). Routed
+/// through this module so callers never name the `xla` crate directly.
+pub fn i32_scalar(value: i32) -> xla::Literal {
+    xla::Literal::scalar(value)
+}
+
 /// Extract a literal into a Vec<f32>.
 pub fn to_f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
     Ok(lit.to_vec::<f32>()?)

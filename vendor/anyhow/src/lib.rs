@@ -1,0 +1,218 @@
+//! A minimal, dependency-free, call-compatible subset of the `anyhow`
+//! error-handling crate.
+//!
+//! This workspace builds in an offline image with no crates.io registry, so
+//! the subset the codebase actually uses is vendored here: [`Error`],
+//! [`Result`], the [`Context`] extension trait, and the `anyhow!` / `bail!`
+//! / `ensure!` macros. The semantics match upstream where it matters:
+//!
+//! * `?` converts any `std::error::Error + Send + Sync + 'static` into
+//!   [`Error`], capturing its `source()` chain;
+//! * `.context(..)` / `.with_context(..)` prepend higher-level messages and
+//!   also lift `Option` into `Result`;
+//! * `Display` prints the outermost message, `{:#}` prints the whole chain
+//!   colon-separated, and `Debug` prints the chain in the upstream
+//!   "Caused by:" layout.
+//!
+//! Swap this path dependency for the real `anyhow` when building with
+//! network access; no call sites need to change.
+
+use std::fmt;
+
+/// An error: an ordered chain of messages, outermost context first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from a plain message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with a higher-level context message (the upstream
+    /// `Error::context`).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// Iterate the message chain, outermost first (mirrors upstream
+    /// `Error::chain`).
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().expect("error chain is never empty")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` — the full chain, like upstream.
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, cause) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`; that
+// is what makes the blanket `From` below coherent (same trick as upstream).
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow::Result<T>`: `std::result::Result` with [`Error`] as the default
+/// error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to `Result`
+/// and `Option`.
+pub trait Context<T, E> {
+    /// Wrap the error value with additional context.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+
+    /// Wrap the error value with lazily-evaluated context.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert_eq!(format!("{e}"), "gone");
+    }
+
+    #[test]
+    fn context_prepends_and_alternate_prints_chain() {
+        let e: Result<()> = Err(io_err()).context("reading config");
+        let e = e.unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: gone");
+        assert_eq!(e.root_cause(), "gone");
+    }
+
+    #[test]
+    fn option_context_lifts_none() {
+        let v: Option<u32> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(format!("{e}"), "missing value");
+        let some: Option<u32> = Some(7);
+        assert_eq!(some.with_context(|| "unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn macros_format_and_return() {
+        fn guard(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            if x > 100 {
+                bail!("x too big: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(guard(5).unwrap(), 5);
+        assert_eq!(format!("{}", guard(-1).unwrap_err()), "x must be positive, got -1");
+        assert_eq!(format!("{}", guard(200).unwrap_err()), "x too big: 200");
+        let e = anyhow!("plain {}", 42);
+        assert_eq!(format!("{e}"), "plain 42");
+    }
+
+    #[test]
+    fn debug_prints_caused_by() {
+        let e: Result<()> = Err(io_err()).context("outer");
+        let s = format!("{:?}", e.unwrap_err());
+        assert!(s.starts_with("outer"));
+        assert!(s.contains("Caused by:"));
+        assert!(s.contains("gone"));
+    }
+}
