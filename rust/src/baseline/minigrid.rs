@@ -16,7 +16,7 @@ use crate::core::entities::{CellType, Tag};
 use crate::core::events::Events;
 use crate::core::grid::Pos;
 use crate::core::state::BatchedState;
-use crate::envs::EnvConfig;
+use crate::envs::{EnvConfig, LayoutError};
 use crate::rng::{Key, Rng};
 
 /// MiniGrid's `WorldObj`: one boxed trait object per occupied cell.
@@ -227,19 +227,36 @@ impl MiniGridEnv {
 
     /// Reset: run the shared layout generator, then convert into the object
     /// grid (boxing every entity — the per-episode allocation storm is part
-    /// of the architecture being modelled).
+    /// of the architecture being modelled). An unplaceable layout draw is
+    /// retried with successor episode keys, mirroring the batched engine's
+    /// deterministic skip-the-same-keys behaviour.
     pub fn reset(&mut self) -> Vec<i32> {
-        self.episode += 1;
-        let ep_key = self.key.fold_in(self.episode);
-        self.reset_with_key(ep_key)
+        const MAX_TRIES: usize = 8;
+        let mut last_err = None;
+        for _ in 0..MAX_TRIES {
+            self.episode += 1;
+            let ep_key = self.key.fold_in(self.episode);
+            match self.try_reset_with_key(ep_key) {
+                Ok(obs) => return obs,
+                Err(e) => last_err = Some(e),
+            }
+        }
+        panic!("{} ({MAX_TRIES} episode keys exhausted)", last_err.unwrap());
     }
 
-    /// Reset the episode from an explicit episode key.
+    /// Reset the episode from an explicit episode key (panics on an
+    /// unplaceable layout; pinned-key parity tests want exactly this key).
     pub fn reset_with_key(&mut self, ep_key: Key) -> Vec<i32> {
+        self.try_reset_with_key(ep_key).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Reset the episode from an explicit episode key, surfacing layout
+    /// failures as data.
+    pub fn try_reset_with_key(&mut self, ep_key: Key) -> Result<Vec<i32>, LayoutError> {
         let mut st = BatchedState::new(1, self.cfg.h, self.cfg.w, self.cfg.caps);
         {
             let mut slot = st.slot_mut(0);
-            self.cfg.reset_slot(&mut slot, ep_key);
+            self.cfg.reset_slot(&mut slot, ep_key)?;
         }
         let s = st.slot(0);
         self.grid = (0..self.cfg.h * self.cfg.w).map(|_| None).collect();
@@ -291,7 +308,7 @@ impl MiniGridEnv {
         self.mission = s.mission;
         self.step_count = 0;
         self.rng = Rng::from_key(ep_key.fold_in(0xBA5E));
-        self.gen_obs()
+        Ok(self.gen_obs())
     }
 
     #[inline]
@@ -350,6 +367,18 @@ impl MiniGridEnv {
                             {
                                 events.ball_picked = true;
                             }
+                            // Pickup-mission events (Fetch/UnlockPickup),
+                            // mirroring the batched intervention system.
+                            let mission_tag = self.mission >> 8;
+                            if self.mission >= 0
+                                && matches!(mission_tag, Tag::KEY | Tag::BALL | Tag::BOX)
+                            {
+                                if self.mission == ((o.tag() << 8) | o.color() as i32) {
+                                    events.object_picked = true;
+                                } else {
+                                    events.wrong_pickup = true;
+                                }
+                            }
                         }
                         self.carrying = obj;
                     }
@@ -367,7 +396,11 @@ impl MiniGridEnv {
                     self.in_bounds(fwd).then(|| (fwd.r as usize) * self.cfg.w + fwd.c as usize)
                 {
                     if let Some(obj) = self.grid[slot].as_mut() {
-                        obj.toggle(&carrying);
+                        let was_locked =
+                            obj.tag() == Tag::DOOR && obj.state() == DoorState::Locked as i32;
+                        if obj.toggle(&carrying) && was_locked {
+                            events.door_unlocked = true;
+                        }
                     }
                 }
                 self.carrying = carrying;
@@ -528,7 +561,7 @@ impl MiniGridEnv {
     }
 }
 
-fn eval_reward(cfg: &EnvConfig, events: &Events, action: Action, _t: u32) -> f32 {
+fn eval_reward(cfg: &EnvConfig, events: &Events, action: Action, t: u32) -> f32 {
     use crate::systems::rewards::RewardFn;
     cfg.reward
         .terms
@@ -539,6 +572,8 @@ fn eval_reward(cfg: &EnvConfig, events: &Events, action: Action, _t: u32) -> f32
             RewardFn::OnDoorDone => events.door_done as i32 as f32,
             RewardFn::OnBallPicked => events.ball_picked as i32 as f32,
             RewardFn::OnBallHit => -(events.ball_hit as i32 as f32),
+            RewardFn::OnDoorUnlocked => events.door_unlocked as i32 as f32,
+            RewardFn::OnObjectPicked => events.object_picked as i32 as f32,
             RewardFn::Free => 0.0,
             RewardFn::ActionCost(c) => {
                 if action == Action::Done {
@@ -548,7 +583,15 @@ fn eval_reward(cfg: &EnvConfig, events: &Events, action: Action, _t: u32) -> f32
                 }
             }
             RewardFn::TimeCost(c) => -c,
-            RewardFn::MiniGridLegacy => events.goal_reached as i32 as f32, // not used
+            // `step_count` was incremented at the top of `step`, matching
+            // upstream MiniGrid's `1 - 0.9 * step_count / max_steps`.
+            RewardFn::MiniGridLegacy => {
+                if events.goal_reached {
+                    1.0 - 0.9 * t as f32 / cfg.max_steps.max(1) as f32
+                } else {
+                    0.0
+                }
+            }
         })
         .sum()
 }
@@ -561,6 +604,9 @@ fn eval_termination(cfg: &EnvConfig, events: &Events) -> bool {
         TermFn::OnDoorDone => events.door_done,
         TermFn::OnBallPicked => events.ball_picked,
         TermFn::OnBallHit => events.ball_hit,
+        TermFn::OnDoorUnlocked => events.door_unlocked,
+        TermFn::OnObjectPicked => events.object_picked,
+        TermFn::OnWrongPickup => events.wrong_pickup,
         TermFn::Free => false,
     })
 }
@@ -621,7 +667,7 @@ mod tests {
             {
                 let mut slot = st.slot_mut(0);
                 // replicate MiniGridEnv::reset's episode key schedule
-                cfg.reset_slot(&mut slot, Key::new(7).fold_in(1));
+                cfg.reset_slot(&mut slot, Key::new(7).fold_in(1)).unwrap();
             }
             let mut obs_soa = vec![0i32; cfg.obs.len(cfg.h, cfg.w)];
             cfg.obs.write_i32(&st.slot(0), &mut obs_soa);

@@ -135,13 +135,33 @@ impl BatchedEnv {
         self.key.fold_in((self.index_offset + i) as u64).fold_in(self.reset_counts[i])
     }
 
-    /// Reset every environment (fresh episode keys) and write observations.
-    pub fn reset_all(&mut self) {
-        for i in 0..self.b {
+    /// Reset env `i`'s state slot with a fresh episode key. A layout
+    /// generator that cannot place an entity is retried with successor
+    /// episode keys — deterministic (and therefore shard-invariant),
+    /// because failure is a pure function of the key, so every engine
+    /// covering this env skips exactly the same keys.
+    fn reset_slot_fresh(&mut self, i: usize) {
+        const MAX_TRIES: usize = 8;
+        for attempt in 1..=MAX_TRIES {
             self.reset_counts[i] += 1;
             let key = self.episode_key(i);
             let mut slot = self.state.slot_mut(i);
-            self.cfg.reset_slot(&mut slot, key);
+            match self.cfg.reset_slot(&mut slot, key) {
+                Ok(()) => return,
+                Err(e) if attempt == MAX_TRIES => {
+                    // Only an unsatisfiable configuration (capacity/geometry
+                    // bug) fails MAX_TRIES independent keys in a row.
+                    panic!("{e} ({MAX_TRIES} episode keys exhausted)")
+                }
+                Err(_) => {}
+            }
+        }
+    }
+
+    /// Reset every environment (fresh episode keys) and write observations.
+    pub fn reset_all(&mut self) {
+        for i in 0..self.b {
+            self.reset_slot_fresh(i);
         }
         self.timestep = BatchedTimestep::first(self.b);
         for i in 0..self.b {
@@ -151,10 +171,7 @@ impl BatchedEnv {
 
     /// Reset just env `i` (autoreset path).
     fn reset_one(&mut self, i: usize) {
-        self.reset_counts[i] += 1;
-        let key = self.episode_key(i);
-        let mut slot = self.state.slot_mut(i);
-        self.cfg.reset_slot(&mut slot, key);
+        self.reset_slot_fresh(i);
         self.timestep.t[i] = 0;
         self.timestep.action[i] = -1;
         self.timestep.reward[i] = 0.0;
@@ -338,6 +355,30 @@ mod tests {
         assert_eq!(e.timestep.episodic_return[0], 0.0);
         let s = e.state.slot(0);
         assert_eq!(s.player(), crate::core::grid::Pos::new(1, 1), "fresh episode");
+    }
+
+    #[test]
+    fn terminal_event_at_exact_timeout_is_termination_not_truncation() {
+        // MiniGrid semantics: `terminated` is evaluated before the timeout,
+        // so an episode whose terminal event fires exactly at t == T must
+        // report termination (γ = 0), not truncation. Empty-5x5's scripted
+        // solution takes exactly 5 steps; pin T to 5.
+        let mut cfg = make("Navix-Empty-5x5-v0").unwrap();
+        cfg.max_steps = 5;
+        let mut e = BatchedEnv::new(cfg, 1, Key::new(0));
+        let script =
+            [Action::Forward, Action::Forward, Action::Right, Action::Forward, Action::Forward];
+        for &a in &script {
+            e.step(&[a as u8]);
+        }
+        assert_eq!(e.timestep.t[0], 5, "the goal step is exactly the timeout step");
+        assert_eq!(
+            e.timestep.step_type[0],
+            StepType::Terminated,
+            "terminal at t == T must be termination"
+        );
+        assert_eq!(e.timestep.discount[0], 0.0, "termination sets γ = 0");
+        assert_eq!(e.timestep.reward[0], 1.0);
     }
 
     #[test]

@@ -21,6 +21,15 @@ pub struct Events {
     /// Player performed `done` facing a door of the mission colour
     /// (GoToDoor success).
     pub door_done: bool,
+    /// A locked door was unlocked (Locked → Open transition; the Unlock
+    /// family's success event).
+    pub door_unlocked: bool,
+    /// Player picked up the mission-target object of any pickable kind —
+    /// key, ball or box (Fetch / UnlockPickup success).
+    pub object_picked: bool,
+    /// Player picked up a pickable that is *not* the mission target while a
+    /// pickable mission is active (the Fetch failure event).
+    pub wrong_pickup: bool,
 }
 
 impl Events {
@@ -30,12 +39,22 @@ impl Events {
         ball_hit: false,
         ball_picked: false,
         door_done: false,
+        door_unlocked: false,
+        object_picked: false,
+        wrong_pickup: false,
     };
 
     /// Any terminal-success/failure event fired this step?
     #[inline]
     pub fn any(self) -> bool {
-        self.goal_reached || self.lava_fall || self.ball_hit || self.ball_picked || self.door_done
+        self.goal_reached
+            || self.lava_fall
+            || self.ball_hit
+            || self.ball_picked
+            || self.door_done
+            || self.door_unlocked
+            || self.object_picked
+            || self.wrong_pickup
     }
 }
 
@@ -51,14 +70,17 @@ mod tests {
 
     #[test]
     fn any_detects_each_latch() {
-        for i in 0..5 {
+        for i in 0..8 {
             let mut e = Events::NONE;
             match i {
                 0 => e.goal_reached = true,
                 1 => e.lava_fall = true,
                 2 => e.ball_hit = true,
                 3 => e.ball_picked = true,
-                _ => e.door_done = true,
+                4 => e.door_done = true,
+                5 => e.door_unlocked = true,
+                6 => e.object_picked = true,
+                _ => e.wrong_pickup = true,
             }
             assert!(e.any());
         }

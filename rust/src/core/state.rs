@@ -488,36 +488,91 @@ impl<'a> SlotMut<'a> {
     }
 
     /// Sample a uniformly random free interior floor cell (rejection
-    /// sampling, like MiniGrid's `place_obj`).
-    pub fn sample_free_cell(&mut self, avoid_player: bool) -> Pos {
-        let player = self.player();
+    /// sampling, like MiniGrid's `place_obj`). Errors instead of panicking
+    /// when the grid has no free cell left — crowded or degenerate layouts
+    /// are a recoverable condition for the reset path, not a crash.
+    pub fn sample_free_cell(&mut self, avoid_player: bool) -> Result<Pos, PlacementError> {
         let (h, w) = (self.h as i32, self.w as i32);
-        // Rejection sampling with a deterministic fallback sweep so layout
-        // generation can never hang on crowded grids.
+        self.sample_free_in(1, 1, h - 1, w - 1, avoid_player)
+    }
+
+    /// Sample a uniformly random free floor cell within rows `[r0, r1)` ×
+    /// cols `[c0, c1)` (the rectangle primitive the RoomGrid builders use).
+    /// Rejection sampling first; if the rectangle is crowded, a
+    /// deterministic wrap-around sweep whose start is RNG-derived takes
+    /// over, so placement is not biased toward the top-left corner.
+    pub fn sample_free_in(
+        &mut self,
+        r0: i32,
+        c0: i32,
+        r1: i32,
+        c1: i32,
+        avoid_player: bool,
+    ) -> Result<Pos, PlacementError> {
+        let player = self.player();
+        let err = PlacementError { h: self.h, w: self.w, r0, c0, r1, c1 };
+        let rows = r1 - r0;
+        let cols = c1 - c0;
+        if rows <= 0 || cols <= 0 {
+            return Err(err);
+        }
+        let free = |s: &Self, p: Pos| {
+            s.cell(p) == CellType::Floor
+                && !s.occupied_by_entity(p)
+                && (!avoid_player || p != player)
+        };
         for _ in 0..256 {
             let (r, c) = {
                 let mut rng = self.rng();
-                (rng.randint(1, h - 1), rng.randint(1, w - 1))
+                (rng.randint(r0, r1), rng.randint(c0, c1))
             };
             let p = Pos::new(r, c);
-            if self.cell(p) == CellType::Floor
-                && !self.occupied_by_entity(p)
-                && (!avoid_player || p != player)
-            {
-                return p;
+            if free(self, p) {
+                return Ok(p);
             }
         }
-        for p in self.dims().interior() {
-            if self.cell(p) == CellType::Floor
-                && !self.occupied_by_entity(p)
-                && (!avoid_player || p != player)
-            {
-                return p;
+        let n = (rows as u32) * (cols as u32);
+        let start = {
+            let mut rng = self.rng();
+            rng.below(n)
+        };
+        for k in 0..n {
+            let idx = (start + k) % n;
+            let p = Pos::new(r0 + (idx / cols as u32) as i32, c0 + (idx % cols as u32) as i32);
+            if free(self, p) {
+                return Ok(p);
             }
         }
-        panic!("no free cell available in grid");
+        Err(err)
     }
 }
+
+/// No free cell exists in the sampled region. Layout generators surface this
+/// (the env id is attached by [`crate::envs::EnvConfig::reset_slot`]) so the
+/// reset path can retry or report instead of panicking mid-batch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlacementError {
+    /// Grid dimensions.
+    pub h: usize,
+    pub w: usize,
+    /// The scanned rectangle, rows `[r0, r1)` × cols `[c0, c1)`.
+    pub r0: i32,
+    pub c0: i32,
+    pub r1: i32,
+    pub c1: i32,
+}
+
+impl std::fmt::Display for PlacementError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "no free cell in rows {}..{} × cols {}..{} of a {}×{} grid",
+            self.r0, self.r1, self.c0, self.c1, self.h, self.w
+        )
+    }
+}
+
+impl std::error::Error for PlacementError {}
 
 /// A short-lived RNG stream advancing the slot's per-env key state.
 pub struct SlotRng<'s, 'a> {
@@ -628,10 +683,59 @@ mod tests {
         s.place_player(Pos::new(1, 1), Direction::East);
         s.add_key(Pos::new(1, 2), Color::Red);
         for _ in 0..50 {
-            let p = s.sample_free_cell(true);
+            let p = s.sample_free_cell(true).expect("room has free cells");
             assert_ne!(p, Pos::new(1, 1));
             assert_ne!(p, Pos::new(1, 2));
             assert_eq!(s.cell(p), CellType::Floor);
+        }
+    }
+
+    #[test]
+    fn sample_free_in_respects_rectangle() {
+        let mut st = small_state();
+        let mut s = st.slot_mut(0);
+        s.fill_room();
+        *s.rng = 9;
+        for _ in 0..50 {
+            let p = s.sample_free_in(2, 3, 4, 5, false).unwrap();
+            assert!(p.r >= 2 && p.r < 4 && p.c >= 3 && p.c < 5, "{p:?} outside rect");
+        }
+    }
+
+    #[test]
+    fn crowded_grid_returns_error_not_panic() {
+        // Fill every interior cell with keys: no free cell remains.
+        let mut st = BatchedState::new(1, 4, 4, Caps { keys: 4, ..Caps::default() });
+        let mut s = st.slot_mut(0);
+        s.fill_room();
+        *s.rng = 5;
+        for p in [Pos::new(1, 1), Pos::new(1, 2), Pos::new(2, 1), Pos::new(2, 2)] {
+            s.add_key(p, Color::Red);
+        }
+        let err = s.sample_free_cell(false).unwrap_err();
+        assert_eq!((err.h, err.w), (4, 4));
+        let msg = format!("{err}");
+        assert!(msg.contains("4×4"), "error must carry grid dims: {msg}");
+        // Degenerate rectangle is an error too, not a debug_assert crash.
+        assert!(s.sample_free_in(2, 2, 2, 2, false).is_err());
+    }
+
+    #[test]
+    fn crowded_fallback_sweep_is_not_corner_biased() {
+        // One free cell left; the sweep must find it regardless of where it
+        // is, and different RNG states must still all find it (the offset
+        // only rotates the scan order).
+        for free in [Pos::new(1, 1), Pos::new(2, 3), Pos::new(3, 4)] {
+            let mut st = BatchedState::new(1, 5, 6, Caps { keys: 12, ..Caps::default() });
+            let mut s = st.slot_mut(0);
+            s.fill_room();
+            *s.rng = 1234;
+            for p in s.dims().interior().collect::<Vec<_>>() {
+                if p != free {
+                    s.add_key(p, Color::Blue);
+                }
+            }
+            assert_eq!(s.sample_free_cell(false).unwrap(), free);
         }
     }
 

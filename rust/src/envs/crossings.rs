@@ -7,9 +7,9 @@
 use crate::core::components::{Color, Direction};
 use crate::core::entities::CellType;
 use crate::core::grid::Pos;
-use crate::core::state::SlotMut;
+use crate::core::state::{PlacementError, SlotMut};
 
-pub fn generate(s: &mut SlotMut<'_>, n: usize, lava: bool) {
+pub fn generate(s: &mut SlotMut<'_>, n: usize, lava: bool) -> Result<(), PlacementError> {
     s.fill_room();
     let (h, w) = (s.h as i32, s.w as i32);
     let river_cell = if lava { CellType::Lava } else { CellType::Wall };
@@ -100,6 +100,7 @@ pub fn generate(s: &mut SlotMut<'_>, n: usize, lava: bool) {
 
     s.set_cell(Pos::new(h - 2, w - 2), CellType::Goal, Color::Green);
     s.place_player(Pos::new(1, 1), Direction::East);
+    Ok(())
 }
 
 #[cfg(test)]
@@ -119,7 +120,8 @@ mod tests {
             let cfg = make(id).unwrap();
             for seed in 0..20 {
                 let st = reset_once(&cfg, seed);
-                assert!(reachable(&st, goal_pos(&st), false), "{id} seed {seed} unsolvable");
+                let goal = goal_pos(&st, 0).expect("Crossings has a goal");
+                assert!(reachable(&st, 0, goal, false), "{id} seed {seed} unsolvable");
             }
         }
     }
@@ -161,6 +163,6 @@ mod tests {
             }
         }
         assert!(lava > 0, "lava crossing must contain lava");
-        assert!(reachable(&st, goal_pos(&st), false));
+        assert!(reachable(&st, 0, goal_pos(&st, 0).unwrap(), false));
     }
 }

@@ -5,11 +5,11 @@
 use crate::core::components::{Color, Direction};
 use crate::core::entities::CellType;
 use crate::core::grid::Pos;
-use crate::core::state::SlotMut;
+use crate::core::state::{PlacementError, SlotMut};
 
 /// `strip_row`: the row of the lava strip (2 for DistShift1, 3 for
 /// DistShift2 in this scaled layout).
-pub fn generate(s: &mut SlotMut<'_>, strip_row: usize) {
+pub fn generate(s: &mut SlotMut<'_>, strip_row: usize) -> Result<(), PlacementError> {
     s.fill_room();
     let (h, w) = (s.h as i32, s.w as i32);
     let row = (strip_row as i32).min(h - 3);
@@ -20,6 +20,7 @@ pub fn generate(s: &mut SlotMut<'_>, strip_row: usize) {
     }
     s.set_cell(Pos::new(1, w - 2), CellType::Goal, Color::Green);
     s.place_player(Pos::new(1, 1), Direction::East);
+    Ok(())
 }
 
 #[cfg(test)]
@@ -55,8 +56,9 @@ mod tests {
         for id in ["Navix-DistShift1-v0", "Navix-DistShift2-v0"] {
             let cfg = make(id).unwrap();
             let st = reset_once(&cfg, 0);
-            assert!(reachable(&st, goal_pos(&st), false), "{id}");
-            assert_eq!(goal_pos(&st), Pos::new(1, cfg.w as i32 - 2));
+            let goal = goal_pos(&st, 0).expect("DistShift has a goal");
+            assert!(reachable(&st, 0, goal, false), "{id}");
+            assert_eq!(goal, Pos::new(1, cfg.w as i32 - 2));
         }
     }
 }

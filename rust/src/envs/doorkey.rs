@@ -5,13 +5,13 @@
 use crate::core::components::{Color, Direction, DoorState};
 use crate::core::entities::CellType;
 use crate::core::grid::Pos;
-use crate::core::state::SlotMut;
+use crate::core::state::{PlacementError, SlotMut};
 
 /// Build the layout. The non-`random` ids use the size-determined canonical
 /// layout (wall at w/2, door and key centred) so the MDP is fixed across
 /// resets; `-Random-` ids sample wall/door/key/agent per episode, which is
 /// MiniGrid's behaviour.
-pub fn generate(s: &mut SlotMut<'_>, random: bool) {
+pub fn generate(s: &mut SlotMut<'_>, random: bool) -> Result<(), PlacementError> {
     s.fill_room();
     let (h, w) = (s.h as i32, s.w as i32);
     s.set_cell(Pos::new(h - 2, w - 2), CellType::Goal, Color::Green);
@@ -41,19 +41,11 @@ pub fn generate(s: &mut SlotMut<'_>, random: bool) {
     // Agent and key on the left side.
     if random {
         s.place_player(Pos::new(1, 1), Direction::East);
-        let key_p = loop {
-            let p = s.sample_free_cell(false);
-            if p.c < split {
-                break p;
-            }
-        };
+        // Key and agent sampled on the agent's side of the wall, like
+        // MiniGrid's `place_obj(top=(0,0), size=(splitIdx, height))`.
+        let key_p = s.sample_free_in(1, 1, h - 1, split, false)?;
         s.add_key(key_p, Color::Yellow);
-        let agent_p = loop {
-            let p = s.sample_free_cell(false);
-            if p.c < split {
-                break p;
-            }
-        };
+        let agent_p = s.sample_free_in(1, 1, h - 1, split, false)?;
         let dir = Direction::from_i32({
             let mut rng = s.rng();
             rng.randint(0, 4)
@@ -66,6 +58,7 @@ pub fn generate(s: &mut SlotMut<'_>, random: bool) {
         let key_c = (split - 1).max(1);
         s.add_key(Pos::new(key_r, key_c), Color::Yellow);
     }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -87,10 +80,11 @@ mod tests {
         let key = Pos::decode(s.key_pos[0], s.w);
         assert!(key.c < door.c, "key must be on the agent side");
         assert!(s.player().c < door.c);
+        let goal = goal_pos(&st, 0).expect("DoorKey has a goal");
         // goal unreachable without passing the door…
-        assert!(!reachable(&st, goal_pos(&st), false));
+        assert!(!reachable(&st, 0, goal, false));
         // …but reachable through it.
-        assert!(reachable(&st, goal_pos(&st), true));
+        assert!(reachable(&st, 0, goal, true));
     }
 
     #[test]
@@ -103,8 +97,9 @@ mod tests {
             let door = Pos::decode(s.door_pos[0], s.w);
             assert!(key.c < door.c, "seed {seed}: key right of wall");
             assert!(s.player().c < door.c, "seed {seed}: agent right of wall");
-            assert!(reachable(&st, key, false), "seed {seed}: key unreachable");
-            assert!(reachable(&st, goal_pos(&st), true), "seed {seed}: goal blocked");
+            assert!(reachable(&st, 0, key, false), "seed {seed}: key unreachable");
+            let goal = goal_pos(&st, 0).expect("DoorKey has a goal");
+            assert!(reachable(&st, 0, goal, true), "seed {seed}: goal blocked");
         }
     }
 

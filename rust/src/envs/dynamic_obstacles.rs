@@ -5,7 +5,7 @@
 use crate::core::components::{Color, Direction};
 use crate::core::entities::CellType;
 use crate::core::grid::Pos;
-use crate::core::state::SlotMut;
+use crate::core::state::{PlacementError, SlotMut};
 
 /// Obstacle count for an `n × n` grid (MiniGrid's DynamicObstaclesEnv
 /// default `n_obstacles = size // 2`, capped to leave the room navigable).
@@ -13,21 +13,17 @@ pub fn n_obstacles(size: usize) -> usize {
     (size / 2).clamp(1, (size - 2) * (size - 2) / 4)
 }
 
-pub fn generate(s: &mut SlotMut<'_>, n: usize) {
+pub fn generate(s: &mut SlotMut<'_>, n: usize) -> Result<(), PlacementError> {
     s.fill_room();
     let (h, w) = (s.h as i32, s.w as i32);
     s.set_cell(Pos::new(h - 2, w - 2), CellType::Goal, Color::Green);
     s.place_player(Pos::new(1, 1), Direction::East);
-    let goal = Pos::new(h - 2, w - 2);
     for _ in 0..n {
-        let p = loop {
-            let p = s.sample_free_cell(true);
-            if p != goal {
-                break p;
-            }
-        };
+        // the goal cell is not floor, so the sample can never land on it
+        let p = s.sample_free_cell(true)?;
         s.add_ball(p, Color::Blue);
     }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -61,7 +57,7 @@ mod tests {
                 let p = Pos::decode(b, s.w);
                 assert_eq!(s.cell(p), CellType::Floor);
                 assert_ne!(p, s.player());
-                assert_ne!(p, goal_pos(&st));
+                assert_ne!(Some(p), goal_pos(&st, 0));
             }
         }
     }

@@ -5,22 +5,18 @@
 use crate::core::components::{Color, Direction};
 use crate::core::entities::CellType;
 use crate::core::grid::Pos;
-use crate::core::state::SlotMut;
+use crate::core::state::{PlacementError, SlotMut};
 
 /// Build the layout. `random_start`: sample the agent pose (the `-Random-`
 /// ids); otherwise the MiniGrid default pose (top-left, facing east).
-pub fn generate(s: &mut SlotMut<'_>, random_start: bool) {
+pub fn generate(s: &mut SlotMut<'_>, random_start: bool) -> Result<(), PlacementError> {
     s.fill_room();
     let (h, w) = (s.h as i32, s.w as i32);
     s.set_cell(Pos::new(h - 2, w - 2), CellType::Goal, Color::Green);
     if random_start {
         s.place_player(Pos::new(1, 1), Direction::East); // so sample avoids nothing
-        let p = loop {
-            let p = s.sample_free_cell(false);
-            if p != Pos::new(h - 2, w - 2) {
-                break p;
-            }
-        };
+        // the goal cell is not floor, so the sample can never land on it
+        let p = s.sample_free_cell(false)?;
         let dir = Direction::from_i32({
             let mut rng = s.rng();
             rng.randint(0, 4)
@@ -29,6 +25,7 @@ pub fn generate(s: &mut SlotMut<'_>, random_start: bool) {
     } else {
         s.place_player(Pos::new(1, 1), Direction::East);
     }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -44,8 +41,8 @@ mod tests {
         let s = st.slot(0);
         assert_eq!(s.player(), Pos::new(1, 1));
         assert_eq!(s.dir(), Direction::East);
-        assert_eq!(goal_pos(&st), Pos::new(6, 6));
-        assert!(reachable(&st, Pos::new(6, 6), false));
+        assert_eq!(goal_pos(&st, 0), Some(Pos::new(6, 6)));
+        assert!(reachable(&st, 0, Pos::new(6, 6), false));
     }
 
     #[test]
@@ -56,7 +53,7 @@ mod tests {
             let st = reset_once(&cfg, seed);
             let s = st.slot(0);
             let p = s.player();
-            assert_ne!(p, goal_pos(&st));
+            assert_ne!(Some(p), goal_pos(&st, 0));
             assert_eq!(s.cell(p), CellType::Floor);
             poses.insert((p.r, p.c, s.player_dir));
         }
@@ -70,7 +67,8 @@ mod tests {
         {
             let cfg = make(id).unwrap();
             let st = reset_once(&cfg, 3);
-            assert!(reachable(&st, goal_pos(&st), false), "{id} unsolvable");
+            let goal = goal_pos(&st, 0).expect("Empty always has a goal");
+            assert!(reachable(&st, 0, goal, false), "{id} unsolvable");
         }
     }
 }

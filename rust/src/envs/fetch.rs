@@ -1,0 +1,123 @@
+//! Fetch-{N}x{N}-N{k}: an empty room scattered with `k` random objects
+//! (keys and balls of random colours); the mission is to pick up the target
+//! object's kind+colour. Picking up any object ends the episode, but only
+//! the target pays (MiniGrid's `FetchEnv`).
+
+use crate::core::components::{Color, Direction};
+use crate::core::entities::Tag;
+use crate::core::state::{PlacementError, SlotMut};
+
+pub fn generate(s: &mut SlotMut<'_>, n_objs: usize) -> Result<(), PlacementError> {
+    s.fill_room();
+
+    let mut placed: Vec<(i32, u8)> = Vec::with_capacity(n_objs);
+    for _ in 0..n_objs {
+        let (is_key, ci) = {
+            let mut rng = s.rng();
+            (rng.below(2) == 0, rng.below(6) as u8)
+        };
+        let p = s.sample_free_cell(false)?;
+        if is_key {
+            s.add_key(p, Color::from_u8(ci));
+            placed.push((Tag::KEY, ci));
+        } else {
+            s.add_ball(p, Color::from_u8(ci));
+            placed.push((Tag::BALL, ci));
+        }
+    }
+
+    // Mission: one of the placed objects, chosen uniformly (duplicates of
+    // the target kind+colour all satisfy the mission, as upstream).
+    let target = {
+        let mut rng = s.rng();
+        rng.below(n_objs as u32) as usize
+    };
+    let (tag, ci) = placed[target];
+    *s.mission = (tag << 8) | ci as i32;
+
+    let agent = s.sample_free_cell(false)?;
+    let dir = {
+        let mut rng = s.rng();
+        rng.randint(0, 4)
+    };
+    s.place_player(agent, Direction::from_i32(dir));
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::actions::Action;
+    use crate::core::grid::Pos;
+    use crate::envs::registry::make;
+    use crate::envs::testutil::{goal_pos, reset_once};
+    use crate::systems::intervention::intervene;
+
+    #[test]
+    fn mission_targets_a_placed_object_and_no_goal_exists() {
+        for id in ["Navix-Fetch-5x5-N2-v0", "Navix-Fetch-8x8-N3-v0"] {
+            let cfg = make(id).unwrap();
+            for seed in 0..15 {
+                let st = reset_once(&cfg, seed);
+                let s = st.slot(0);
+                assert!(goal_pos(&st, 0).is_none(), "{id}: Fetch is goal-less");
+                let mtag = s.mission >> 8;
+                let mcol = (s.mission & 0xFF) as u8;
+                let exists = match mtag {
+                    Tag::KEY => (0..s.key_pos.len())
+                        .any(|k| s.key_pos[k] >= 0 && s.key_color[k] == mcol),
+                    Tag::BALL => (0..s.ball_pos.len())
+                        .any(|b| s.ball_pos[b] >= 0 && s.ball_color[b] == mcol),
+                    _ => false,
+                };
+                assert!(exists, "{id} seed {seed}: mission targets a missing object");
+            }
+        }
+    }
+
+    #[test]
+    fn object_counts_match_spec() {
+        let cfg = make("Navix-Fetch-8x8-N3-v0").unwrap();
+        for seed in 0..10 {
+            let st = reset_once(&cfg, seed);
+            let s = st.slot(0);
+            let n = s.key_pos.iter().filter(|&&k| k >= 0).count()
+                + s.ball_pos.iter().filter(|&&b| b >= 0).count();
+            assert_eq!(n, 3, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn picking_the_target_succeeds_and_wrong_object_terminates_unpaid() {
+        let cfg = make("Navix-Fetch-8x8-N3-v0").unwrap();
+        // Find a seed whose batch has both a target and a non-target object.
+        for seed in 0..30 {
+            let mut st = reset_once(&cfg, seed);
+            let mut s = st.slot_mut(0);
+            let mtag = *s.mission >> 8;
+            let mcol = (*s.mission & 0xFF) as u8;
+            // locate a non-target object
+            let wrong = (0..s.key_pos.len())
+                .filter(|&k| s.key_pos[k] >= 0 && !(mtag == Tag::KEY && s.key_color[k] == mcol))
+                .map(|k| Pos::decode(s.key_pos[k], s.w))
+                .chain(
+                    (0..s.ball_pos.len())
+                        .filter(|&b| {
+                            s.ball_pos[b] >= 0 && !(mtag == Tag::BALL && s.ball_color[b] == mcol)
+                        })
+                        .map(|b| Pos::decode(s.ball_pos[b], s.w)),
+                )
+                .next();
+            let Some(wrong) = wrong else { continue };
+            s.place_player(Pos::new(wrong.r, wrong.c - 1), Direction::East);
+            intervene(&mut s, Action::Pickup);
+            assert!(s.events.wrong_pickup, "seed {seed}");
+            assert!(!s.events.object_picked, "seed {seed}");
+            drop(s);
+            assert!(cfg.termination.eval(&st.slot(0)), "wrong pickup must end the episode");
+            assert_eq!(cfg.reward.eval(&st.slot(0), Action::Pickup, cfg.max_steps), 0.0);
+            return;
+        }
+        panic!("no seed produced a non-target object");
+    }
+}

@@ -4,9 +4,9 @@
 use crate::core::components::{Color, Direction};
 use crate::core::entities::CellType;
 use crate::core::grid::Pos;
-use crate::core::state::SlotMut;
+use crate::core::state::{PlacementError, SlotMut};
 
-pub fn generate(s: &mut SlotMut<'_>) {
+pub fn generate(s: &mut SlotMut<'_>) -> Result<(), PlacementError> {
     s.fill_room();
     let (h, w) = (s.h as i32, s.w as i32);
     let mid_r = h / 2;
@@ -37,19 +37,16 @@ pub fn generate(s: &mut SlotMut<'_>) {
 
     // Random goal, then random agent avoiding the goal.
     s.place_player(Pos::new(1, 1), Direction::East);
-    let goal = s.sample_free_cell(false);
+    let goal = s.sample_free_cell(false)?;
     s.set_cell(goal, CellType::Goal, Color::Green);
-    let agent = loop {
-        let p = s.sample_free_cell(false);
-        if p != goal {
-            break p;
-        }
-    };
+    // the goal cell is no longer floor, so the agent sample can never hit it
+    let agent = s.sample_free_cell(false)?;
     let dir = Direction::from_i32({
         let mut rng = s.rng();
         rng.randint(0, 4)
     });
     s.place_player(agent, dir);
+    Ok(())
 }
 
 #[cfg(test)]
@@ -63,7 +60,8 @@ mod tests {
         let cfg = make("Navix-FourRooms-v0").unwrap();
         for seed in 0..25 {
             let st = reset_once(&cfg, seed);
-            assert!(reachable(&st, goal_pos(&st), false), "seed {seed}: goal unreachable");
+            let goal = goal_pos(&st, 0).expect("FourRooms has a goal");
+            assert!(reachable(&st, 0, goal, false), "seed {seed}: goal unreachable");
         }
     }
 
@@ -94,7 +92,7 @@ mod tests {
         let mut goals = std::collections::HashSet::new();
         for seed in 0..20 {
             let st = reset_once(&cfg, seed);
-            let g = goal_pos(&st);
+            let g = goal_pos(&st, 0).expect("FourRooms has a goal");
             goals.insert((g.r, g.c));
         }
         assert!(goals.len() > 5, "goals should vary: {}", goals.len());

@@ -5,9 +5,9 @@
 use crate::core::components::{Color, Direction, DoorState};
 use crate::core::entities::Tag;
 use crate::core::grid::Pos;
-use crate::core::state::SlotMut;
+use crate::core::state::{PlacementError, SlotMut};
 
-pub fn generate(s: &mut SlotMut<'_>) {
+pub fn generate(s: &mut SlotMut<'_>) -> Result<(), PlacementError> {
     s.fill_room();
     let (h, w) = (s.h as i32, s.w as i32);
 
@@ -33,13 +33,14 @@ pub fn generate(s: &mut SlotMut<'_>) {
 
     // Random agent pose; mission = one of the four door colours.
     s.place_player(Pos::new(1, 1), Direction::East);
-    let p = s.sample_free_cell(false);
+    let p = s.sample_free_cell(false)?;
     let (dir, target) = {
         let mut rng = s.rng();
         (rng.randint(0, 4), rng.below(4) as usize)
     };
     s.place_player(p, Direction::from_i32(dir));
     *s.mission = (Tag::DOOR << 8) | colors[target] as i32;
+    Ok(())
 }
 
 #[cfg(test)]

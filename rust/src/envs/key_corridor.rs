@@ -10,14 +10,14 @@
 use crate::core::components::{Color, Direction, DoorState};
 use crate::core::entities::{CellType, Tag};
 use crate::core::grid::Pos;
-use crate::core::state::SlotMut;
+use crate::core::state::{PlacementError, SlotMut};
 
 /// Grid height/width for a given (size, rows).
 pub fn dims(size: usize, rows: usize) -> (usize, usize) {
     (rows * (size - 1) + 1, 3 * (size - 1) + 1)
 }
 
-pub fn generate(s: &mut SlotMut<'_>, size: usize, rows: usize) {
+pub fn generate(s: &mut SlotMut<'_>, size: usize, rows: usize) -> Result<(), PlacementError> {
     let sw = (size - 1) as i32; // room stride
     let (h, w) = (s.h as i32, s.w as i32);
     debug_assert_eq!(h, rows as i32 * sw + 1);
@@ -84,11 +84,22 @@ pub fn generate(s: &mut SlotMut<'_>, size: usize, rows: usize) {
         .flat_map(|r| (sw + 1..2 * sw).map(move |c| Pos::new(r, c)))
         .filter(|&p| s.cell(p) == CellType::Floor && !s.occupied_by_entity(p))
         .collect();
+    if corridor_cells.is_empty() {
+        return Err(PlacementError {
+            h: s.h,
+            w: s.w,
+            r0: 1,
+            c0: sw + 1,
+            r1: h - 1,
+            c1: 2 * sw,
+        });
+    }
     let (pick, dir) = {
         let mut rng = s.rng();
         (rng.below(corridor_cells.len() as u32) as usize, rng.randint(0, 4))
     };
     s.place_player(corridor_cells[pick], Direction::from_i32(dir));
+    Ok(())
 }
 
 #[cfg(test)]
@@ -147,8 +158,8 @@ mod tests {
             // ball is not freely reachable (locked door in the way)…
             // (it may be reachable if the locked room's door is the only
             // door — assert the strong topological property instead)
-            assert!(reachable(&st, ball, true), "seed {seed}: ball not behind doors only");
-            assert!(reachable(&st, key, true), "seed {seed}: key unreachable");
+            assert!(reachable(&st, 0, ball, true), "seed {seed}: ball not behind doors only");
+            assert!(reachable(&st, 0, key, true), "seed {seed}: key unreachable");
             // mission targets the ball colour
             assert_eq!(s.mission >> 8, Tag::BALL);
             assert_eq!((s.mission & 0xFF) as u8, s.ball_color[0]);

@@ -1,0 +1,147 @@
+//! LockedRoom: a 19×19 grid with a central vertical corridor and three
+//! rooms on each side. One room is locked and holds the goal; the key to it
+//! lies in one of the other rooms; each of the six doors has a distinct
+//! colour (MiniGrid's `LockedRoomEnv`). Success is reaching the goal.
+
+use super::roomgrid::set_door;
+use crate::core::components::{Color, Direction, DoorState};
+use crate::core::entities::CellType;
+use crate::core::grid::Pos;
+use crate::core::state::{PlacementError, SlotMut};
+
+/// Canonical grid edge.
+pub const SIZE: usize = 19;
+
+/// Interior rectangle `(r0, c0, r1, c1)` of room `k` (0..6): rooms 0/2/4 on
+/// the left of the corridor, 1/3/5 on the right, top to bottom.
+fn room_rect(k: usize, h: i32, lw: i32, rw: i32, w: i32) -> (i32, i32, i32, i32) {
+    let band = (k / 2) as i32;
+    let j = band * (h / 3);
+    let (r0, r1) = (j + 1, j + h / 3);
+    if k % 2 == 0 {
+        (r0, 1, r1, lw)
+    } else {
+        (r0, rw + 1, r1, w - 1)
+    }
+}
+
+/// Door cell of room `k` (on its corridor-side wall).
+fn door_cell(k: usize, h: i32, lw: i32, rw: i32) -> Pos {
+    let band = (k / 2) as i32;
+    let j = band * (h / 3);
+    Pos::new(j + 3, if k % 2 == 0 { lw } else { rw })
+}
+
+pub fn generate(s: &mut SlotMut<'_>) -> Result<(), PlacementError> {
+    let (h, w) = (s.h as i32, s.w as i32);
+    let lw = w / 2 - 2;
+    let rw = w / 2 + 2;
+
+    s.fill_room();
+    // Corridor walls (full height) and the three room-splitting wall bands.
+    for r in 1..h - 1 {
+        s.set_cell(Pos::new(r, lw), CellType::Wall, Color::Grey);
+        s.set_cell(Pos::new(r, rw), CellType::Wall, Color::Grey);
+    }
+    for band in 1..3 {
+        let j = band * (h / 3);
+        for c in 1..lw {
+            s.set_cell(Pos::new(j, c), CellType::Wall, Color::Grey);
+        }
+        for c in rw + 1..w - 1 {
+            s.set_cell(Pos::new(j, c), CellType::Wall, Color::Grey);
+        }
+    }
+
+    // Locked room, shuffled door colours, key room ≠ locked room.
+    let mut colors = Color::ALL;
+    let (locked, key_room) = {
+        let mut rng = s.rng();
+        for i in (1..colors.len()).rev() {
+            let j = rng.below(i as u32 + 1) as usize;
+            colors.swap(i, j);
+        }
+        let locked = rng.below(6) as usize;
+        let key_room = (locked + 1 + rng.below(5) as usize) % 6;
+        (locked, key_room)
+    };
+
+    for k in 0..6 {
+        let state = if k == locked { DoorState::Locked } else { DoorState::Closed };
+        set_door(s, door_cell(k, h, lw, rw), colors[k], state);
+    }
+
+    // Goal inside the locked room, key (of the locked door's colour) inside
+    // the key room.
+    let (r0, c0, r1, c1) = room_rect(locked, h, lw, rw, w);
+    let goal = s.sample_free_in(r0, c0, r1, c1, false)?;
+    s.set_cell(goal, CellType::Goal, Color::Green);
+    let (r0, c0, r1, c1) = room_rect(key_room, h, lw, rw, w);
+    let key_p = s.sample_free_in(r0, c0, r1, c1, false)?;
+    s.add_key(key_p, colors[locked]);
+
+    // Agent somewhere in the corridor, random facing.
+    let agent = s.sample_free_in(1, lw + 1, h - 1, rw, false)?;
+    let dir = {
+        let mut rng = s.rng();
+        rng.randint(0, 4)
+    };
+    s.place_player(agent, Direction::from_i32(dir));
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::registry::make;
+    use crate::envs::testutil::{goal_pos, reachable, reset_once};
+
+    #[test]
+    fn six_distinct_doors_one_locked_with_matching_key() {
+        let cfg = make("Navix-LockedRoom-v0").unwrap();
+        for seed in 0..15 {
+            let st = reset_once(&cfg, seed);
+            let s = st.slot(0);
+            let placed: Vec<usize> = (0..6).filter(|&d| s.door_pos[d] >= 0).collect();
+            assert_eq!(placed.len(), 6, "seed {seed}");
+            let mut cols: Vec<u8> = (0..6).map(|d| s.door_color[d]).collect();
+            cols.sort_unstable();
+            cols.dedup();
+            assert_eq!(cols.len(), 6, "seed {seed}: door colours must be distinct");
+            let locked: Vec<usize> = (0..6)
+                .filter(|&d| DoorState::from_u8(s.door_state[d]) == DoorState::Locked)
+                .collect();
+            assert_eq!(locked.len(), 1, "seed {seed}: exactly one locked door");
+            assert_eq!(
+                s.key_color[0], s.door_color[locked[0]],
+                "seed {seed}: key opens the locked door"
+            );
+        }
+    }
+
+    #[test]
+    fn goal_is_behind_the_locked_door_key_is_not() {
+        let cfg = make("Navix-LockedRoom-v0").unwrap();
+        for seed in 0..15 {
+            let st = reset_once(&cfg, seed);
+            let s = st.slot(0);
+            let goal = goal_pos(&st, 0).expect("LockedRoom has a goal");
+            let key = Pos::decode(s.key_pos[0], s.w);
+            assert!(reachable(&st, 0, goal, true), "seed {seed}: goal unreachable topologically");
+            assert!(reachable(&st, 0, key, true), "seed {seed}: key unreachable topologically");
+            // The goal room is locked: not freely reachable from the corridor.
+            assert!(!reachable(&st, 0, goal, false), "seed {seed}: locked room is open");
+        }
+    }
+
+    #[test]
+    fn agent_starts_in_the_corridor() {
+        let cfg = make("Navix-LockedRoom-v0").unwrap();
+        let (lw, rw) = (SIZE as i32 / 2 - 2, SIZE as i32 / 2 + 2);
+        for seed in 0..15 {
+            let st = reset_once(&cfg, seed);
+            let p = st.slot(0).player();
+            assert!(p.c > lw && p.c < rw, "seed {seed}: agent at {p:?} not in the corridor");
+        }
+    }
+}

@@ -13,13 +13,19 @@ pub mod dist_shift;
 pub mod doorkey;
 pub mod dynamic_obstacles;
 pub mod empty;
+pub mod fetch;
 pub mod four_rooms;
 pub mod go_to_door;
 pub mod key_corridor;
 pub mod lava_gap;
+pub mod locked_room;
+pub mod multiroom;
 pub mod registry;
+pub mod roomgrid;
+pub mod solvability;
+pub mod unlock;
 
-use crate::core::state::{Caps, SlotMut};
+use crate::core::state::{Caps, PlacementError, SlotMut};
 use crate::rng::Key;
 use crate::systems::observations::{ObsKind, ObsSpec};
 use crate::systems::rewards::RewardSpec;
@@ -50,6 +56,20 @@ pub enum Layout {
     DistShift { strip_row: usize },
     /// Four coloured doors, one per wall; `done` before the mission door.
     GoToDoor,
+    /// Chain of `n` randomly-placed rooms connected by coloured doors
+    /// (MultiRoom); goal in the last room.
+    MultiRoom { n: usize, max_size: usize },
+    /// Two rooms, a locked door between them, key on the agent's side;
+    /// succeed by opening the door (RoomGrid Unlock).
+    Unlock,
+    /// Unlock, then pick up the box in the far room.
+    UnlockPickup,
+    /// UnlockPickup with a ball blocking the door.
+    BlockedUnlockPickup,
+    /// Six rooms off a central corridor; one is locked and holds the goal.
+    LockedRoom,
+    /// `n` random key/ball objects; pick up the mission target (Fetch).
+    Fetch { n_objs: usize },
 }
 
 /// A fully-specified NAVIX environment (one Table-8 row).
@@ -69,18 +89,53 @@ pub struct EnvConfig {
     pub layout: Layout,
 }
 
+/// Layout generation could not place an entity. Carries the env id and grid
+/// dimensions so batch-level retry/reporting is actionable — generation
+/// failure is data, not a panic.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LayoutError {
+    pub env_id: String,
+    pub h: usize,
+    pub w: usize,
+    pub source: PlacementError,
+}
+
+impl std::fmt::Display for LayoutError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "layout generation failed for {} ({}×{}): {}",
+            self.env_id, self.h, self.w, self.source
+        )
+    }
+}
+
+impl std::error::Error for LayoutError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        Some(&self.source)
+    }
+}
+
 impl EnvConfig {
     /// Reset one environment slot: reseed its stream, clear entities and run
-    /// the layout generator.
-    pub fn reset_slot(&self, s: &mut SlotMut<'_>, key: Key) {
+    /// the layout generator. Fails (instead of panicking) when the generator
+    /// cannot place an entity — the batch layer retries with a successor
+    /// episode key.
+    pub fn reset_slot(&self, s: &mut SlotMut<'_>, key: Key) -> Result<(), LayoutError> {
         *s.rng = key.0;
         s.clear_entities();
-        self.generate(s);
+        self.generate(s).map_err(|source| LayoutError {
+            env_id: self.id.clone(),
+            h: self.h,
+            w: self.w,
+            source,
+        })?;
         debug_assert!(s.player().in_bounds(self.h, self.w), "layout must place the player");
+        Ok(())
     }
 
     /// Dispatch to the family generator.
-    fn generate(&self, s: &mut SlotMut<'_>) {
+    fn generate(&self, s: &mut SlotMut<'_>) -> Result<(), PlacementError> {
         match self.layout {
             Layout::Empty { random_start } => empty::generate(s, random_start),
             Layout::DoorKey { random } => doorkey::generate(s, random),
@@ -91,6 +146,12 @@ impl EnvConfig {
             Layout::DynamicObstacles { n } => dynamic_obstacles::generate(s, n),
             Layout::DistShift { strip_row } => dist_shift::generate(s, strip_row),
             Layout::GoToDoor => go_to_door::generate(s),
+            Layout::MultiRoom { n, max_size } => multiroom::generate(s, n, max_size),
+            Layout::Unlock => unlock::generate(s, unlock::Kind::Unlock),
+            Layout::UnlockPickup => unlock::generate(s, unlock::Kind::Pickup),
+            Layout::BlockedUnlockPickup => unlock::generate(s, unlock::Kind::BlockedPickup),
+            Layout::LockedRoom => locked_room::generate(s),
+            Layout::Fetch { n_objs } => fetch::generate(s, n_objs),
         }
     }
 
@@ -116,66 +177,16 @@ impl EnvConfig {
 #[cfg(test)]
 pub(crate) mod testutil {
     use super::*;
-    use crate::core::grid::Pos;
     use crate::core::state::BatchedState;
+
+    pub use super::solvability::{goal_pos, reachable};
 
     /// Reset `cfg` into a fresh single-env state for layout tests.
     pub fn reset_once(cfg: &EnvConfig, seed: u64) -> BatchedState {
         let mut st = BatchedState::new(1, cfg.h, cfg.w, cfg.caps);
         let mut s = st.slot_mut(0);
-        cfg.reset_slot(&mut s, Key::new(seed));
+        cfg.reset_slot(&mut s, Key::new(seed)).expect("layout generation");
         drop(s);
         st
-    }
-
-    /// Breadth-first reachability over walkable cells from the player to
-    /// `target`. With `through_doors`, closed/locked doors and pickable
-    /// entities count as passable (asserts topological solvability).
-    pub fn reachable(st: &BatchedState, target: Pos, through_doors: bool) -> bool {
-        let s = st.slot(0);
-        let start = s.player();
-        let mut seen = vec![false; s.h * s.w];
-        let mut queue = std::collections::VecDeque::new();
-        seen[(start.r as usize) * s.w + start.c as usize] = true;
-        queue.push_back(start);
-        while let Some(p) = queue.pop_front() {
-            if p == target {
-                return true;
-            }
-            for d in crate::core::components::Direction::ALL {
-                let q = p.step(d);
-                if !q.in_bounds(s.h, s.w) {
-                    continue;
-                }
-                let qi = (q.r as usize) * s.w + q.c as usize;
-                if seen[qi] {
-                    continue;
-                }
-                let passable = if through_doors {
-                    s.cell(q).walkable()
-                } else {
-                    s.walkable(q) || q == target
-                };
-                if passable {
-                    seen[qi] = true;
-                    queue.push_back(q);
-                }
-            }
-        }
-        false
-    }
-
-    /// Locate the (first) goal cell.
-    pub fn goal_pos(st: &BatchedState) -> Pos {
-        use crate::core::entities::CellType;
-        let s = st.slot(0);
-        for r in 0..s.h as i32 {
-            for c in 0..s.w as i32 {
-                if s.cell(Pos::new(r, c)) == CellType::Goal {
-                    return Pos::new(r, c);
-                }
-            }
-        }
-        panic!("no goal in layout");
     }
 }

@@ -1,0 +1,259 @@
+//! MultiRoom-N{n}: a chain of `n` randomly-sized, randomly-placed rooms
+//! connected by coloured doors; the agent starts in the first room and the
+//! goal sits in the last (MiniGrid's `MultiRoomEnv`, 25×25 for every
+//! registered size). Built on the free-form carving primitives of
+//! [`super::roomgrid`].
+//!
+//! Placement is a bounded random walk over room rectangles: each candidate
+//! room hangs off a door cell on the previous room's wall, rejected if it
+//! leaves the grid or intersects any earlier room. MiniGrid retries this
+//! loop unboundedly (and its `_gen_grid` can raise); here attempts are
+//! bounded and the best (longest) chain found is used, so generation is
+//! total — a crowded draw degrades to a shorter chain instead of panicking
+//! or hanging. All randomness is drawn from the slot RNG stream, keeping
+//! layouts a pure function of the episode key (shard-invariant).
+
+use super::roomgrid::{carve_room_rect, set_door};
+use crate::core::components::{Color, Direction, DoorState};
+use crate::core::entities::CellType;
+use crate::core::grid::Pos;
+use crate::core::state::{PlacementError, SlotMut};
+
+/// Minimum room edge (MiniGrid's `minRoomSize`).
+const MIN_SIZE: i32 = 4;
+/// Full-restart attempts before settling for the longest chain found.
+const CHAIN_ATTEMPTS: usize = 12;
+/// Per-room placement attempts within one chain (MiniGrid uses 8).
+const ROOM_TRIES: usize = 8;
+
+/// One placed room: bounding box plus the door cell shared with the
+/// previous room of the chain (`entry` is (−1,−1) for the first room).
+#[derive(Clone, Copy, Debug)]
+struct RoomRect {
+    top: Pos,
+    h: i32,
+    w: i32,
+    entry: Pos,
+}
+
+impl RoomRect {
+    fn intersects(&self, o: &RoomRect) -> bool {
+        self.top.r < o.top.r + o.h
+            && o.top.r < self.top.r + self.h
+            && self.top.c < o.top.c + o.w
+            && o.top.c < self.top.c + self.w
+    }
+}
+
+pub fn generate(s: &mut SlotMut<'_>, n: usize, max_size: usize) -> Result<(), PlacementError> {
+    let (h, w) = (s.h as i32, s.w as i32);
+    let max_size = (max_size as i32).min(h).min(w);
+    debug_assert!(max_size >= MIN_SIZE, "MultiRoom needs room for a {MIN_SIZE}-cell room");
+
+    // Outside the rooms the grid is solid wall (MiniGrid leaves it void;
+    // wall is equivalent for an agent that can never reach it).
+    for r in 0..h {
+        for c in 0..w {
+            s.set_cell(Pos::new(r, c), CellType::Wall, Color::Grey);
+        }
+    }
+
+    let mut rooms: Vec<RoomRect> = Vec::new();
+    for _ in 0..CHAIN_ATTEMPTS {
+        let chain = try_chain(s, h, w, n, max_size);
+        if chain.len() > rooms.len() {
+            rooms = chain;
+        }
+        if rooms.len() >= n {
+            break;
+        }
+    }
+
+    for room in &rooms {
+        carve_room_rect(s, room.top, room.h, room.w);
+    }
+
+    // Doors between consecutive rooms; consecutive door colours differ
+    // (MiniGrid's door-colour rule).
+    let mut prev_color: Option<u8> = None;
+    for room in rooms.iter().skip(1) {
+        let mut ci = {
+            let mut rng = s.rng();
+            rng.below(Color::ALL.len() as u32) as u8
+        };
+        if prev_color == Some(ci) {
+            ci = (ci + 1) % Color::ALL.len() as u8;
+        }
+        prev_color = Some(ci);
+        set_door(s, room.entry, Color::from_u8(ci), DoorState::Closed);
+    }
+
+    // Goal in the last room, agent in the first (goal first: its cell stops
+    // being floor, so the agent sample can never land on it).
+    let last = rooms[rooms.len() - 1];
+    let goal = s.sample_free_in(
+        last.top.r + 1,
+        last.top.c + 1,
+        last.top.r + last.h - 1,
+        last.top.c + last.w - 1,
+        false,
+    )?;
+    s.set_cell(goal, CellType::Goal, Color::Green);
+    let first = rooms[0];
+    let agent = s.sample_free_in(
+        first.top.r + 1,
+        first.top.c + 1,
+        first.top.r + first.h - 1,
+        first.top.c + first.w - 1,
+        false,
+    )?;
+    let dir = {
+        let mut rng = s.rng();
+        rng.randint(0, 4)
+    };
+    s.place_player(agent, Direction::from_i32(dir));
+    Ok(())
+}
+
+/// One bounded random-walk attempt at an `n`-room chain. Always returns at
+/// least one room (the seed room always fits).
+fn try_chain(s: &mut SlotMut<'_>, h: i32, w: i32, n: usize, max_size: i32) -> Vec<RoomRect> {
+    let mut rooms: Vec<RoomRect> = Vec::new();
+    {
+        let mut rng = s.rng();
+        let rh = rng.randint(MIN_SIZE, max_size + 1);
+        let rw = rng.randint(MIN_SIZE, max_size + 1);
+        let top = Pos::new(rng.randint(0, h - rh + 1), rng.randint(0, w - rw + 1));
+        rooms.push(RoomRect { top, h: rh, w: rw, entry: Pos::new(-1, -1) });
+    }
+
+    while rooms.len() < n {
+        let mut placed = false;
+        for _ in 0..ROOM_TRIES {
+            let prev = rooms[rooms.len() - 1];
+            let (dir, door, nh, nw, off) = {
+                let mut rng = s.rng();
+                let dir = Direction::from_i32(rng.randint(0, 4));
+                // Door on prev's wall in that direction, never a corner.
+                let door = match dir {
+                    Direction::East => {
+                        Pos::new(prev.top.r + rng.randint(1, prev.h - 1), prev.top.c + prev.w - 1)
+                    }
+                    Direction::West => {
+                        Pos::new(prev.top.r + rng.randint(1, prev.h - 1), prev.top.c)
+                    }
+                    Direction::South => {
+                        Pos::new(prev.top.r + prev.h - 1, prev.top.c + rng.randint(1, prev.w - 1))
+                    }
+                    Direction::North => {
+                        Pos::new(prev.top.r, prev.top.c + rng.randint(1, prev.w - 1))
+                    }
+                };
+                let nh = rng.randint(MIN_SIZE, max_size + 1);
+                let nw = rng.randint(MIN_SIZE, max_size + 1);
+                let along = if matches!(dir, Direction::East | Direction::West) { nh } else { nw };
+                // Where the door falls along the new room's entry wall.
+                let off = rng.randint(1, along - 1);
+                (dir, door, nh, nw, off)
+            };
+            // Position the new room so its entry wall contains `door`: the
+            // new rect starts on (shares) prev's wall line.
+            let top = match dir {
+                Direction::East => Pos::new(door.r - off, door.c),
+                Direction::West => Pos::new(door.r - off, door.c - nw + 1),
+                Direction::South => Pos::new(door.r, door.c - off),
+                Direction::North => Pos::new(door.r - nh + 1, door.c - off),
+            };
+            let cand = RoomRect { top, h: nh, w: nw, entry: door };
+            if top.r < 0 || top.c < 0 || top.r + nh > h || top.c + nw > w {
+                continue;
+            }
+            // Strict separation from every room except the immediate
+            // predecessor (which legitimately shares the entry wall line).
+            if rooms[..rooms.len() - 1].iter().any(|r| cand.intersects(r)) {
+                continue;
+            }
+            rooms.push(cand);
+            placed = true;
+            break;
+        }
+        if !placed {
+            break;
+        }
+    }
+    rooms
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::components::DoorState;
+    use crate::envs::registry::make;
+    use crate::envs::testutil::{goal_pos, reachable, reset_once};
+
+    #[test]
+    fn chains_place_agent_and_goal_in_connected_rooms() {
+        for id in
+            ["Navix-MultiRoom-N2-S4-v0", "Navix-MultiRoom-N4-S5-v0", "Navix-MultiRoom-N6-v0"]
+        {
+            let cfg = make(id).unwrap();
+            for seed in 0..15 {
+                let st = reset_once(&cfg, seed);
+                let goal = goal_pos(&st, 0).expect("MultiRoom always has a goal");
+                assert!(
+                    reachable(&st, 0, goal, true),
+                    "{id} seed {seed}: goal not reachable through doors"
+                );
+                let s = st.slot(0);
+                // every placed door is closed (not locked) per MiniGrid
+                for d in 0..s.door_pos.len() {
+                    if s.door_pos[d] >= 0 {
+                        assert_eq!(
+                            DoorState::from_u8(s.door_state[d]),
+                            DoorState::Closed,
+                            "{id} seed {seed}: MultiRoom doors are never locked"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn full_chains_are_the_common_case() {
+        // The bounded walk must almost always reach the requested room
+        // count; assert every N4 seed in a window yields the full chain
+        // (4 rooms → 3 doors) and layouts vary across seeds.
+        let cfg = make("Navix-MultiRoom-N4-S5-v0").unwrap();
+        let mut full = 0;
+        let mut layouts = std::collections::HashSet::new();
+        for seed in 0..20 {
+            let st = reset_once(&cfg, seed);
+            let s = st.slot(0);
+            let doors = s.door_pos.iter().filter(|&&d| d >= 0).count();
+            assert!(doors >= 1, "seed {seed}: chain collapsed to a single room");
+            if doors == 3 {
+                full += 1;
+            }
+            layouts.insert(st.base.clone());
+        }
+        assert!(full >= 15, "only {full}/20 seeds produced a full 4-room chain");
+        assert!(layouts.len() > 10, "room plans should vary: {}", layouts.len());
+    }
+
+    #[test]
+    fn consecutive_door_colors_differ() {
+        let cfg = make("Navix-MultiRoom-N6-v0").unwrap();
+        for seed in 0..10 {
+            let st = reset_once(&cfg, seed);
+            let s = st.slot(0);
+            let colors: Vec<u8> = (0..s.door_pos.len())
+                .filter(|&d| s.door_pos[d] >= 0)
+                .map(|d| s.door_color[d])
+                .collect();
+            for pair in colors.windows(2) {
+                assert_ne!(pair[0], pair[1], "seed {seed}: consecutive doors share a colour");
+            }
+        }
+    }
+}

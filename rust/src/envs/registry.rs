@@ -152,6 +152,85 @@ fn four_rooms(id: &str) -> EnvConfig {
     )
 }
 
+fn multiroom(id: &str, n: usize, max_size: usize) -> EnvConfig {
+    // MiniGrid: every MultiRoom id uses a 25×25 grid, T = 20·maxNumRooms.
+    base(
+        id,
+        25,
+        25,
+        Caps { doors: n - 1, ..Caps::default() },
+        (20 * n) as u32,
+        RewardSpec::r1(),
+        TermSpec::goal(),
+        Layout::MultiRoom { n, max_size },
+    )
+}
+
+fn unlock(id: &str) -> EnvConfig {
+    let (h, w) = super::unlock::dims();
+    // MiniGrid: T = 8·room_size².
+    base(
+        id,
+        h,
+        w,
+        Caps { doors: 1, keys: 1, ..Caps::default() },
+        (8 * super::unlock::ROOM_SIZE * super::unlock::ROOM_SIZE) as u32,
+        RewardSpec::unlock(),
+        TermSpec::door_unlocked(),
+        Layout::Unlock,
+    )
+}
+
+fn unlock_pickup(id: &str, blocked: bool) -> EnvConfig {
+    let (h, w) = super::unlock::dims();
+    let rs2 = super::unlock::ROOM_SIZE * super::unlock::ROOM_SIZE;
+    // MiniGrid: T = 8·room_size² (16· for the blocked variant).
+    let (max_steps, layout) = if blocked {
+        (16 * rs2, Layout::BlockedUnlockPickup)
+    } else {
+        (8 * rs2, Layout::UnlockPickup)
+    };
+    base(
+        id,
+        h,
+        w,
+        Caps { doors: 1, keys: 1, balls: if blocked { 1 } else { 0 }, boxes: 1 },
+        max_steps as u32,
+        RewardSpec::object_pickup(),
+        TermSpec::object_picked(),
+        layout,
+    )
+}
+
+fn locked_room(id: &str) -> EnvConfig {
+    let n = super::locked_room::SIZE;
+    // MiniGrid: T = 10·size².
+    base(
+        id,
+        n,
+        n,
+        Caps { doors: 6, keys: 1, ..Caps::default() },
+        (10 * n * n) as u32,
+        RewardSpec::r1(),
+        TermSpec::goal(),
+        Layout::LockedRoom,
+    )
+}
+
+fn fetch(id: &str, n: usize, n_objs: usize) -> EnvConfig {
+    // MiniGrid: T = 5·size²; any pickup terminates, only the target pays.
+    base(
+        id,
+        n,
+        n,
+        Caps { keys: n_objs, balls: n_objs, ..Caps::default() },
+        (5 * n * n) as u32,
+        RewardSpec::object_pickup(),
+        TermSpec::fetch(),
+        Layout::Fetch { n_objs },
+    )
+}
+
 /// All canonical environment ids (Table 8), in Table-7 benchmark order
 /// first (x-ticks 0–29 of paper Fig. 3), then the Table-8 extras.
 pub fn list_envs() -> Vec<&'static str> {
@@ -198,6 +277,16 @@ pub fn list_envs() -> Vec<&'static str> {
         "Navix-GoToDoor-5x5-v0",
         "Navix-GoToDoor-6x6-v0",
         "Navix-GoToDoor-8x8-v0",
+        // RoomGrid / procedural-layout families
+        "Navix-MultiRoom-N2-S4-v0",
+        "Navix-MultiRoom-N4-S5-v0",
+        "Navix-MultiRoom-N6-v0",
+        "Navix-Unlock-v0",
+        "Navix-UnlockPickup-v0",
+        "Navix-BlockedUnlockPickup-v0",
+        "Navix-LockedRoom-v0",
+        "Navix-Fetch-5x5-N2-v0",
+        "Navix-Fetch-8x8-N3-v0",
     ]
 }
 
@@ -265,6 +354,15 @@ pub fn make(id: &str) -> Result<EnvConfig> {
         "Navix-GoToDoor-5x5-v0" => go_to_door(c, 5),
         "Navix-GoToDoor-6x6-v0" => go_to_door(c, 6),
         "Navix-GoToDoor-8x8-v0" => go_to_door(c, 8),
+        "Navix-MultiRoom-N2-S4-v0" => multiroom(c, 2, 4),
+        "Navix-MultiRoom-N4-S5-v0" => multiroom(c, 4, 5),
+        "Navix-MultiRoom-N6-v0" => multiroom(c, 6, 10),
+        "Navix-Unlock-v0" => unlock(c),
+        "Navix-UnlockPickup-v0" => unlock_pickup(c, false),
+        "Navix-BlockedUnlockPickup-v0" => unlock_pickup(c, true),
+        "Navix-LockedRoom-v0" => locked_room(c),
+        "Navix-Fetch-5x5-N2-v0" => fetch(c, 5, 2),
+        "Navix-Fetch-8x8-N3-v0" => fetch(c, 8, 3),
         _ => return Err(anyhow!("unknown environment id: {id}")),
     };
     Ok(cfg)
@@ -306,6 +404,12 @@ mod tests {
             ("Navix-DistShift1-v0", 6, 6),
             ("Navix-DistShift2-v0", 8, 8),
             ("Navix-GoToDoor-8x8-v0", 8, 8),
+            ("Navix-MultiRoom-N6-v0", 25, 25),
+            ("Navix-Unlock-v0", 6, 11),
+            ("Navix-UnlockPickup-v0", 6, 11),
+            ("Navix-BlockedUnlockPickup-v0", 6, 11),
+            ("Navix-LockedRoom-v0", 19, 19),
+            ("Navix-Fetch-8x8-N3-v0", 8, 8),
         ];
         for (id, h, w) in checks {
             let cfg = make(id).unwrap();
@@ -342,5 +446,36 @@ mod tests {
             make("Navix-Dynamic-Obstacles-8x8").unwrap().reward,
             RewardSpec::r3()
         );
+    }
+
+    #[test]
+    fn roomgrid_families_wire_mission_rewards_and_timeouts() {
+        use crate::systems::terminations::TermSpec;
+        let cfg = make("Navix-Unlock-v0").unwrap();
+        assert_eq!(cfg.reward, RewardSpec::unlock());
+        assert_eq!(cfg.termination, TermSpec::door_unlocked());
+        assert_eq!(cfg.max_steps, 288);
+        let cfg = make("Navix-UnlockPickup-v0").unwrap();
+        assert_eq!(cfg.reward, RewardSpec::object_pickup());
+        assert_eq!(cfg.termination, TermSpec::object_picked());
+        assert_eq!(cfg.max_steps, 288);
+        let cfg = make("Navix-BlockedUnlockPickup-v0").unwrap();
+        assert_eq!(cfg.max_steps, 576);
+        let cfg = make("Navix-Fetch-8x8-N3-v0").unwrap();
+        assert_eq!(cfg.termination, TermSpec::fetch());
+        assert_eq!(cfg.max_steps, 320);
+        let cfg = make("Navix-MultiRoom-N4-S5-v0").unwrap();
+        assert_eq!(cfg.reward, RewardSpec::r1());
+        assert_eq!(cfg.max_steps, 80);
+        let cfg = make("Navix-LockedRoom-v0").unwrap();
+        assert_eq!(cfg.termination, TermSpec::goal());
+        assert_eq!(cfg.max_steps, 3610);
+    }
+
+    #[test]
+    fn minigrid_aliases_cover_new_families() {
+        assert!(make("MiniGrid-MultiRoom-N6-v0").is_ok());
+        assert!(make("MiniGrid-BlockedUnlockPickup-v0").is_ok());
+        assert!(make("MiniGrid-Fetch-8x8-N3-v0").is_ok());
     }
 }

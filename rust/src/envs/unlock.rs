@@ -1,0 +1,137 @@
+//! The RoomGrid Unlock family: two 6×6 rooms side by side with a locked
+//! door between them and the matching key in the agent's (left) room.
+//!
+//! * `Unlock` — success is opening the door (`on_door_unlocked`).
+//! * `UnlockPickup` — a box sits in the right room; success is picking it
+//!   up (`on_object_picked`).
+//! * `BlockedUnlockPickup` — same, plus a ball dropped directly in front of
+//!   the door that must be moved out of the way first.
+
+use super::roomgrid::RoomGrid;
+use crate::core::components::{Color, Direction, DoorState};
+use crate::core::entities::Tag;
+use crate::core::grid::Pos;
+use crate::core::state::{PlacementError, SlotMut};
+
+/// Which member of the Unlock family to build.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    Unlock,
+    Pickup,
+    BlockedPickup,
+}
+
+/// MiniGrid `room_size` for the family.
+pub const ROOM_SIZE: usize = 6;
+
+/// Grid dims (one row of two `ROOM_SIZE` rooms): 6×11.
+pub fn dims() -> (usize, usize) {
+    RoomGrid::new(ROOM_SIZE, 1, 2).dims()
+}
+
+pub fn generate(s: &mut SlotMut<'_>, kind: Kind) -> Result<(), PlacementError> {
+    let rg = RoomGrid::new(ROOM_SIZE, 1, 2);
+    rg.carve(s);
+
+    let (door_ci, box_ci, ball_ci) = {
+        let mut rng = s.rng();
+        (rng.below(6) as u8, rng.below(6) as u8, rng.below(6) as u8)
+    };
+    let door_color = Color::from_u8(door_ci);
+    let door_p = rg.add_door(s, 0, 0, Direction::East, door_color, DoorState::Locked);
+
+    if kind == Kind::BlockedPickup {
+        // The blocker sits directly in front of the door on the agent side.
+        s.add_ball(Pos::new(door_p.r, door_p.c - 1), Color::from_u8(ball_ci));
+    }
+
+    // Key in the left room (sampled after the blocker so they never collide).
+    let key_p = rg.place_in_room(s, 0, 0, false)?;
+    s.add_key(key_p, door_color);
+
+    match kind {
+        Kind::Unlock => {
+            *s.mission = (Tag::DOOR << 8) | door_color as i32;
+        }
+        Kind::Pickup | Kind::BlockedPickup => {
+            let box_p = rg.place_in_room(s, 0, 1, false)?;
+            s.add_box(box_p, Color::from_u8(box_ci));
+            *s.mission = (Tag::BOX << 8) | box_ci as i32;
+        }
+    }
+
+    rg.place_agent(s, 0, 0)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::actions::Action;
+    use crate::envs::registry::make;
+    use crate::envs::testutil::{goal_pos, reachable, reset_once};
+    use crate::systems::intervention::intervene;
+
+    #[test]
+    fn unlock_layout_key_matches_door_and_no_goal() {
+        let cfg = make("Navix-Unlock-v0").unwrap();
+        for seed in 0..15 {
+            let st = reset_once(&cfg, seed);
+            let s = st.slot(0);
+            assert!(goal_pos(&st, 0).is_none(), "Unlock is goal-less");
+            assert_eq!(DoorState::from_u8(s.door_state[0]), DoorState::Locked);
+            assert_eq!(s.key_color[0], s.door_color[0], "key must open the door");
+            let door = Pos::decode(s.door_pos[0], s.w);
+            let key = Pos::decode(s.key_pos[0], s.w);
+            assert!(key.c < door.c, "seed {seed}: key on the agent side");
+            assert!(s.player().c < door.c, "seed {seed}: agent on the left");
+            assert!(reachable(&st, 0, key, false), "seed {seed}: key unreachable");
+            assert_eq!(s.mission >> 8, Tag::DOOR);
+        }
+    }
+
+    #[test]
+    fn unlock_pickup_box_behind_the_locked_door() {
+        let cfg = make("Navix-UnlockPickup-v0").unwrap();
+        for seed in 0..15 {
+            let st = reset_once(&cfg, seed);
+            let s = st.slot(0);
+            let door = Pos::decode(s.door_pos[0], s.w);
+            let bx = Pos::decode(s.box_pos[0], s.w);
+            assert!(bx.c > door.c, "seed {seed}: box must be in the far room");
+            assert!(!reachable(&st, 0, bx, false), "seed {seed}: box reachable without the key");
+            assert!(reachable(&st, 0, bx, true), "seed {seed}: box unreachable through doors");
+            assert_eq!(s.mission, (Tag::BOX << 8) | s.box_color[0] as i32);
+        }
+    }
+
+    #[test]
+    fn blocked_variant_puts_a_ball_before_the_door() {
+        let cfg = make("Navix-BlockedUnlockPickup-v0").unwrap();
+        for seed in 0..15 {
+            let st = reset_once(&cfg, seed);
+            let s = st.slot(0);
+            let door = Pos::decode(s.door_pos[0], s.w);
+            let ball = Pos::decode(s.ball_pos[0], s.w);
+            assert_eq!(ball, Pos::new(door.r, door.c - 1), "seed {seed}: blocker misplaced");
+        }
+    }
+
+    #[test]
+    fn unlocking_the_door_ends_an_unlock_episode() {
+        // Script: teleport in front of the door with the key and toggle.
+        let cfg = make("Navix-Unlock-v0").unwrap();
+        let mut st = reset_once(&cfg, 3);
+        let mut s = st.slot_mut(0);
+        let door = Pos::decode(s.door_pos[0], s.w);
+        let key_color = Color::from_u8(s.key_color[0]);
+        s.key_pos[0] = -1;
+        *s.pocket = crate::core::components::Pocket::holding(Tag::KEY, key_color).0;
+        s.place_player(Pos::new(door.r, door.c - 1), Direction::East);
+        intervene(&mut s, Action::Toggle);
+        assert!(s.events.door_unlocked);
+        drop(s);
+        assert!(cfg.termination.eval(&st.slot(0)));
+        assert_eq!(cfg.reward.eval(&st.slot(0), Action::Toggle, cfg.max_steps), 1.0);
+    }
+}

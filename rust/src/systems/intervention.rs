@@ -51,18 +51,19 @@ fn forward(s: &mut SlotMut<'_>) {
 }
 
 /// `pickup`: pick the pickable entity ahead into the pocket (if empty).
+/// Latches the pickup-mission events: `ball_picked` (KeyCorridor),
+/// `object_picked` when the item matches a pickable mission target of any
+/// kind, and `wrong_pickup` when it does not (Fetch failure).
 fn pickup(s: &mut SlotMut<'_>) {
     if !s.pocket_value().is_empty() {
         return;
     }
     let front = s.front();
-    if let Some(k) = s.key_at(front) {
+    let picked = if let Some(k) = s.key_at(front) {
         let color = crate::core::components::Color::from_u8(s.key_color[k]);
         s.key_pos[k] = -1; // off the grid, into the pocket
-        *s.pocket = Pocket::holding(Tag::KEY, color).0;
-        return;
-    }
-    if let Some(bl) = s.ball_at(front) {
+        Some((Tag::KEY, color))
+    } else if let Some(bl) = s.ball_at(front) {
         let color = crate::core::components::Color::from_u8(s.ball_color[bl]);
         // KeyCorridor mission: picking the target ball is the success event.
         // mission encodes the target ball colour as (Tag::BALL << 8 | color).
@@ -70,13 +71,26 @@ fn pickup(s: &mut SlotMut<'_>) {
             s.events.ball_picked = true;
         }
         s.ball_pos[bl] = -1;
-        *s.pocket = Pocket::holding(Tag::BALL, color).0;
-        return;
-    }
-    if let Some(bx) = s.box_at(front) {
+        Some((Tag::BALL, color))
+    } else if let Some(bx) = s.box_at(front) {
         let color = crate::core::components::Color::from_u8(s.box_color[bx]);
         s.box_pos[bx] = -1;
-        *s.pocket = Pocket::holding(Tag::BOX, color).0;
+        Some((Tag::BOX, color))
+    } else {
+        None
+    };
+    if let Some((tag, color)) = picked {
+        *s.pocket = Pocket::holding(tag, color).0;
+        // Pickup-mission events fire only when the mission targets a
+        // pickable kind (Fetch/UnlockPickup); door missions are unaffected.
+        let mission_tag = *s.mission >> 8;
+        if *s.mission >= 0 && matches!(mission_tag, Tag::KEY | Tag::BALL | Tag::BOX) {
+            if *s.mission == Pocket::holding(tag, color).0 {
+                s.events.object_picked = true;
+            } else {
+                s.events.wrong_pickup = true;
+            }
+        }
     }
 }
 
@@ -131,6 +145,7 @@ fn toggle(s: &mut SlotMut<'_>) {
                     && pocket.color() as u8 == s.door_color[d];
                 if has_matching_key {
                     s.door_state[d] = DoorState::Open as u8;
+                    s.events.door_unlocked = true;
                 }
             }
             DoorState::Closed => s.door_state[d] = DoorState::Open as u8,
@@ -295,6 +310,54 @@ mod tests {
         intervene(&mut s, Action::Left);
         intervene(&mut s, Action::Done);
         assert!(!s.events.door_done);
+    }
+
+    #[test]
+    fn unlocking_latches_door_unlocked() {
+        let mut st = room();
+        let mut s = st.slot_mut(0);
+        s.add_door(Pos::new(3, 4), Color::Blue, DoorState::Locked);
+        *s.pocket = Pocket::holding(Tag::KEY, Color::Blue).0;
+        intervene(&mut s, Action::Toggle);
+        assert!(s.events.door_unlocked);
+        // re-toggling an open/closed door is not an unlock
+        intervene(&mut s, Action::Toggle); // open -> closed
+        assert!(!s.events.door_unlocked);
+        intervene(&mut s, Action::Toggle); // closed -> open
+        assert!(!s.events.door_unlocked);
+    }
+
+    #[test]
+    fn pickup_mission_object_latches_object_picked() {
+        let mut st = room();
+        let mut s = st.slot_mut(0);
+        s.add_box(Pos::new(3, 4), Color::Green);
+        *s.mission = (Tag::BOX << 8) | Color::Green as i32;
+        intervene(&mut s, Action::Pickup);
+        assert!(s.events.object_picked);
+        assert!(!s.events.wrong_pickup);
+    }
+
+    #[test]
+    fn pickup_non_target_latches_wrong_pickup() {
+        let mut st = room();
+        let mut s = st.slot_mut(0);
+        s.add_ball(Pos::new(3, 4), Color::Red);
+        *s.mission = (Tag::KEY << 8) | Color::Blue as i32; // fetch the blue key
+        intervene(&mut s, Action::Pickup);
+        assert!(s.events.wrong_pickup, "wrong object picked under a pickable mission");
+        assert!(!s.events.object_picked);
+    }
+
+    #[test]
+    fn door_missions_do_not_fire_pickup_events() {
+        let mut st = room();
+        let mut s = st.slot_mut(0);
+        s.add_key(Pos::new(3, 4), Color::Yellow);
+        *s.mission = (Tag::DOOR << 8) | Color::Yellow as i32; // GoToDoor-style mission
+        intervene(&mut s, Action::Pickup);
+        assert!(!s.events.object_picked);
+        assert!(!s.events.wrong_pickup);
     }
 
     #[test]

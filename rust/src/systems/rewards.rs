@@ -28,14 +28,21 @@ pub enum RewardFn {
     OnBallPicked,
     /// −1 when the player collides with a flying obstacle (Dynamic-Obstacles).
     OnBallHit,
+    /// +1 when a locked door is unlocked (Unlock).
+    OnDoorUnlocked,
+    /// +1 when the mission-target object of any pickable kind is picked up
+    /// (Fetch, UnlockPickup).
+    OnObjectPicked,
     /// 0 everywhere.
     Free,
     /// −cost on every action except `done`.
     ActionCost(f32),
     /// −cost on every step.
     TimeCost(f32),
-    /// MiniGrid's original non-Markovian `1 − 0.9·(t+1)/T` on success
-    /// (reference only; breaks the Markov property, see paper §3.2.1).
+    /// MiniGrid's original non-Markovian `1 − 0.9·t/T` on success, where `t`
+    /// is the post-step counter — the same count upstream MiniGrid uses
+    /// (`step_count` is incremented before the reward is computed).
+    /// Reference only; breaks the Markov property, see paper §3.2.1.
     MiniGridLegacy,
 }
 
@@ -80,6 +87,20 @@ impl RewardFn {
                     0.0
                 }
             }
+            RewardFn::OnDoorUnlocked => {
+                if ev.door_unlocked {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            RewardFn::OnObjectPicked => {
+                if ev.object_picked {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
             RewardFn::Free => 0.0,
             RewardFn::ActionCost(c) => {
                 if action == Action::Done {
@@ -90,8 +111,10 @@ impl RewardFn {
             }
             RewardFn::TimeCost(c) => -c,
             RewardFn::MiniGridLegacy => {
+                // `s.t` is evaluated after the transition system advanced it,
+                // so it equals MiniGrid's `step_count` at reward time — no +1.
                 if ev.goal_reached {
-                    1.0 - 0.9 * (s.t as f32 + 1.0) / max_steps.max(1) as f32
+                    1.0 - 0.9 * s.t as f32 / max_steps.max(1) as f32
                 } else {
                     0.0
                 }
@@ -106,6 +129,8 @@ impl RewardFn {
             RewardFn::OnDoorDone => "on_door_done",
             RewardFn::OnBallPicked => "on_ball_picked",
             RewardFn::OnBallHit => "on_ball_hit",
+            RewardFn::OnDoorUnlocked => "on_door_unlocked",
+            RewardFn::OnObjectPicked => "on_object_picked",
             RewardFn::Free => "free",
             RewardFn::ActionCost(_) => "action_cost",
             RewardFn::TimeCost(_) => "time_cost",
@@ -149,6 +174,16 @@ impl RewardSpec {
     /// GoToDoor: `done` in front of the mission door.
     pub fn door_done() -> Self {
         RewardSpec::new(vec![RewardFn::OnDoorDone])
+    }
+
+    /// Unlock: open the locked door.
+    pub fn unlock() -> Self {
+        RewardSpec::new(vec![RewardFn::OnDoorUnlocked])
+    }
+
+    /// Fetch / UnlockPickup: pick up the mission-target object.
+    pub fn object_pickup() -> Self {
+        RewardSpec::new(vec![RewardFn::OnObjectPicked])
     }
 
     pub fn eval(&self, s: &EnvSlot<'_>, action: Action, max_steps: u32) -> f32 {
@@ -228,5 +263,33 @@ mod tests {
     fn free_is_zero() {
         let st = slot_with_events(Events { goal_reached: true, ..Events::NONE });
         assert_eq!(RewardFn::Free.eval(&st.slot(0), Action::Forward, 100), 0.0);
+    }
+
+    #[test]
+    fn legacy_reward_matches_minigrid_step_count() {
+        // Upstream MiniGrid: step_count is incremented before the reward is
+        // computed, and `_reward() = 1 - 0.9 * step_count / max_steps`. Our
+        // `t` is advanced by the transition system before reward evaluation,
+        // so reaching the goal on the 5th step of a T=100 episode must pay
+        // exactly 1 - 0.9 * 5/100.
+        let mut st = slot_with_events(Events { goal_reached: true, ..Events::NONE });
+        {
+            let mut s = st.slot_mut(0);
+            *s.t = 5;
+        }
+        let r = RewardFn::MiniGridLegacy.eval(&st.slot(0), Action::Forward, 100);
+        assert!((r - (1.0 - 0.9 * 5.0 / 100.0)).abs() < 1e-6, "got {r}");
+    }
+
+    #[test]
+    fn unlock_and_object_pickup_primitives() {
+        let st = slot_with_events(Events { door_unlocked: true, ..Events::NONE });
+        assert_eq!(RewardSpec::unlock().eval(&st.slot(0), Action::Toggle, 100), 1.0);
+        assert_eq!(RewardSpec::object_pickup().eval(&st.slot(0), Action::Toggle, 100), 0.0);
+        let st = slot_with_events(Events { object_picked: true, ..Events::NONE });
+        assert_eq!(RewardSpec::object_pickup().eval(&st.slot(0), Action::Pickup, 100), 1.0);
+        // wrong pickup pays nothing (Fetch: terminate with 0 reward)
+        let st = slot_with_events(Events { wrong_pickup: true, ..Events::NONE });
+        assert_eq!(RewardSpec::object_pickup().eval(&st.slot(0), Action::Pickup, 100), 0.0);
     }
 }

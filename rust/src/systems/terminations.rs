@@ -21,6 +21,14 @@ pub enum TermFn {
     OnBallPicked,
     /// Terminate when hit by a flying obstacle (Dynamic-Obstacles).
     OnBallHit,
+    /// Terminate when a locked door is unlocked (Unlock).
+    OnDoorUnlocked,
+    /// Terminate when the mission-target object is picked up
+    /// (Fetch, UnlockPickup).
+    OnObjectPicked,
+    /// Terminate when a non-target object is picked up (Fetch: any pickup
+    /// ends the episode, but only the target pays).
+    OnWrongPickup,
     /// Never terminate.
     Free,
 }
@@ -34,6 +42,9 @@ impl TermFn {
             TermFn::OnDoorDone => ev.door_done,
             TermFn::OnBallPicked => ev.ball_picked,
             TermFn::OnBallHit => ev.ball_hit,
+            TermFn::OnDoorUnlocked => ev.door_unlocked,
+            TermFn::OnObjectPicked => ev.object_picked,
+            TermFn::OnWrongPickup => ev.wrong_pickup,
             TermFn::Free => false,
         }
     }
@@ -45,6 +56,9 @@ impl TermFn {
             TermFn::OnDoorDone => "on_door_done",
             TermFn::OnBallPicked => "on_ball_picked",
             TermFn::OnBallHit => "on_ball_hit",
+            TermFn::OnDoorUnlocked => "on_door_unlocked",
+            TermFn::OnObjectPicked => "on_object_picked",
+            TermFn::OnWrongPickup => "on_wrong_pickup",
             TermFn::Free => "free",
         }
     }
@@ -85,6 +99,21 @@ impl TermSpec {
     /// Door done (GoToDoor).
     pub fn door_done() -> Self {
         TermSpec::new(vec![TermFn::OnDoorDone])
+    }
+
+    /// Locked door opened (Unlock).
+    pub fn door_unlocked() -> Self {
+        TermSpec::new(vec![TermFn::OnDoorUnlocked])
+    }
+
+    /// Mission object picked up (UnlockPickup, BlockedUnlockPickup).
+    pub fn object_picked() -> Self {
+        TermSpec::new(vec![TermFn::OnObjectPicked])
+    }
+
+    /// Any pickup ends the episode; only the target pays (Fetch).
+    pub fn fetch() -> Self {
+        TermSpec::new(vec![TermFn::OnObjectPicked, TermFn::OnWrongPickup])
     }
 
     pub fn eval(&self, s: &EnvSlot<'_>) -> bool {
@@ -133,6 +162,20 @@ mod tests {
     }
 
     #[test]
+    fn unlock_and_pickup_events_terminate() {
+        let st = with_events(Events { door_unlocked: true, ..Events::NONE });
+        assert!(TermSpec::door_unlocked().eval(&st.slot(0)));
+        assert!(!TermSpec::object_picked().eval(&st.slot(0)));
+        let st = with_events(Events { object_picked: true, ..Events::NONE });
+        assert!(TermSpec::object_picked().eval(&st.slot(0)));
+        assert!(TermSpec::fetch().eval(&st.slot(0)));
+        // Fetch ends the episode on the wrong object too
+        let st = with_events(Events { wrong_pickup: true, ..Events::NONE });
+        assert!(TermSpec::fetch().eval(&st.slot(0)));
+        assert!(!TermSpec::object_picked().eval(&st.slot(0)));
+    }
+
+    #[test]
     fn free_never_terminates() {
         let st = with_events(Events {
             goal_reached: true,
@@ -140,6 +183,7 @@ mod tests {
             ball_hit: true,
             ball_picked: true,
             door_done: true,
+            ..Events::NONE
         });
         assert!(!TermSpec::new(vec![TermFn::Free]).eval(&st.slot(0)));
     }

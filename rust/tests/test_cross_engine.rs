@@ -14,7 +14,7 @@ use navix::rng::{Key, Rng};
 /// Deterministic-dynamics envs (the Dynamic-Obstacles family consumes the
 /// per-env RNG stream differently across engines, so it is excluded from
 /// exact trajectory parity and covered by invariant tests instead).
-const PARITY_ENVS: [&str; 9] = [
+const PARITY_ENVS: [&str; 15] = [
     "Navix-Empty-5x5-v0",
     "Navix-Empty-8x8-v0",
     "Navix-Empty-Random-6x6",
@@ -24,6 +24,13 @@ const PARITY_ENVS: [&str; 9] = [
     "Navix-SimpleCrossingS9N2-v0",
     "Navix-DistShift1-v0",
     "Navix-GoToDoor-5x5-v0",
+    // RoomGrid / procedural-layout families
+    "Navix-MultiRoom-N4-S5-v0",
+    "Navix-Unlock-v0",
+    "Navix-UnlockPickup-v0",
+    "Navix-BlockedUnlockPickup-v0",
+    "Navix-LockedRoom-v0",
+    "Navix-Fetch-8x8-N3-v0",
 ];
 
 #[test]

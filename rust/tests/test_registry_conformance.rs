@@ -1,0 +1,142 @@
+//! Registry-wide conformance sweep: every registered environment id must
+//! reset and step a 64-env batch through two full episodes without a single
+//! panic, produce observations inside the spec's bounds, generate
+//! BFS-solvable layouts wherever a goal exists, and step bitwise-identically
+//! under sharded execution (`--shards 3`) — so a new env family cannot land
+//! unregistered, panicking, unsolvable, or shard-variant.
+//!
+//! The sweep runs in CI as a dedicated debug-build job; keep per-id work
+//! bounded (episodes are clamped via the timeout below).
+
+use navix::batch::{BatchedEnv, ObsBatch, ShardedEnv};
+use navix::envs::solvability::{goal_pos, reachable};
+use navix::rng::{Key, Rng};
+
+const BATCH: usize = 64;
+const EPISODES: u32 = 2;
+/// Timeout clamp for the sweep: truncation still ends episodes, so two
+/// episodes complete within `2 * (TIMEOUT_CAP + 1)` steps even for the
+/// multi-thousand-step families (LockedRoom's T is 3610).
+const TIMEOUT_CAP: u32 = 250;
+
+/// Assert every observation value is inside the symbolic spec's bounds:
+/// channel 0 is a MiniGrid object tag (0..=10), channel 1 a colour (0..=5),
+/// channel 2 a door state or agent direction (0..=3).
+fn check_obs_bounds(id: &str, obs: &ObsBatch, b: usize, step: usize) {
+    match obs {
+        ObsBatch::I32(v) => {
+            assert_eq!(v.len() % (b * 3), 0, "{id}: obs not channel-triplets");
+            for (k, &x) in v.iter().enumerate() {
+                let (lo, hi) = match k % 3 {
+                    0 => (0, 10), // tag
+                    1 => (0, 5),  // colour
+                    _ => (0, 3),  // state / direction
+                };
+                assert!(
+                    (lo..=hi).contains(&x),
+                    "{id} step {step}: obs[{k}] = {x} outside channel bounds {lo}..={hi}"
+                );
+            }
+        }
+        ObsBatch::U8(_) => {} // u8 is bounded by construction
+    }
+}
+
+#[test]
+fn every_registered_id_runs_two_episodes_with_bounded_obs() {
+    for id in navix::list_envs() {
+        let mut cfg = navix::make(id).unwrap_or_else(|e| panic!("{id}: {e}"));
+        cfg.max_steps = cfg.max_steps.min(TIMEOUT_CAP);
+        let max_steps = cfg.max_steps as usize;
+        let mut env = BatchedEnv::new(cfg, BATCH, Key::new(2026));
+        check_obs_bounds(id, &env.obs, BATCH, 0);
+
+        let mut episodes = vec![0u32; BATCH];
+        let mut rng = Rng::new(13);
+        let mut actions = vec![0u8; BATCH];
+        let step_budget = (EPISODES as usize + 1) * (max_steps + 2);
+        let mut steps = 0;
+        while episodes.iter().any(|&e| e < EPISODES) && steps < step_budget {
+            for a in actions.iter_mut() {
+                *a = rng.below(7) as u8;
+            }
+            env.step(&actions);
+            steps += 1;
+            // Sampled every 16th step: bounds violations are structural
+            // (encoding bugs), not transient, and the sweep runs in debug.
+            if steps % 16 == 0 {
+                check_obs_bounds(id, &env.obs, BATCH, steps);
+            }
+            for i in 0..BATCH {
+                if env.timestep.step_type[i].is_last() {
+                    episodes[i] += 1;
+                }
+            }
+        }
+        assert!(
+            episodes.iter().all(|&e| e >= EPISODES),
+            "{id}: not every env finished {EPISODES} episodes within {steps} steps"
+        );
+    }
+}
+
+#[test]
+fn every_layout_with_a_goal_is_bfs_solvable() {
+    for id in navix::list_envs() {
+        let cfg = navix::make(id).unwrap();
+        for seed in 0..5u64 {
+            let env = BatchedEnv::new(cfg.clone(), 2, Key::new(1000 + seed));
+            for i in 0..2 {
+                if let Some(goal) = goal_pos(&env.state, i) {
+                    assert!(
+                        reachable(&env.state, i, goal, true),
+                        "{id} seed {seed} env {i}: goal at {goal:?} is not reachable \
+                         even through doors"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn every_id_is_bitwise_shard_invariant() {
+    // 200 steps of shared random actions: BatchedEnv and ShardedEnv{S=3}
+    // must agree on every reward, step type, clock and observation buffer —
+    // the acceptance gate for new layout generators (their RNG draws must
+    // be a pure function of the episode key, never of the shard).
+    const B: usize = 9;
+    const STEPS: usize = 200;
+    for id in navix::list_envs() {
+        let cfg = navix::make(id).unwrap();
+        let mut single = BatchedEnv::new(cfg.clone(), B, Key::new(77));
+        let mut sharded = ShardedEnv::new(cfg, B, 3, 2, Key::new(77));
+        let mut rng = Rng::new(3);
+        for step in 1..=STEPS {
+            let actions: Vec<u8> = (0..B).map(|_| rng.below(7) as u8).collect();
+            single.step(&actions);
+            sharded.step(&actions);
+            assert_eq!(
+                single.timestep.reward, sharded.timestep.reward,
+                "{id} step {step}: rewards diverged under sharding"
+            );
+            assert_eq!(
+                single.timestep.step_type, sharded.timestep.step_type,
+                "{id} step {step}: step types diverged under sharding"
+            );
+            assert_eq!(
+                single.timestep.t, sharded.timestep.t,
+                "{id} step {step}: episode clocks diverged under sharding"
+            );
+            match (&single.obs, &sharded.obs) {
+                (ObsBatch::I32(a), ObsBatch::I32(b)) => {
+                    assert_eq!(a, b, "{id} step {step}: observations diverged under sharding")
+                }
+                (ObsBatch::U8(a), ObsBatch::U8(b)) => {
+                    assert_eq!(a, b, "{id} step {step}: observations diverged under sharding")
+                }
+                _ => panic!("{id} step {step}: observation dtypes diverged"),
+            }
+        }
+    }
+}
