@@ -27,6 +27,7 @@ artifacts:
 bench-smoke:
 	cargo bench --bench fig5_batch -- --smoke
 	cargo bench --bench fig5_sharded -- --smoke
+	cargo bench --bench obs_throughput -- --smoke
 
 fmt:
 	cargo fmt --all

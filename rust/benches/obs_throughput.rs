@@ -1,0 +1,128 @@
+//! Observation-path throughput: the packed cell-code overlay grid (+
+//! dirty-tile rgb) vs. the original naive entity-table scans, measured as
+//! end-to-end batched stepping (steps/s through `BatchedEnv::step`, random
+//! actions, autoresets included) — the two paths execute bit-identical
+//! trajectories (`tests/test_obs_parity.rs`), so the ratio is pure
+//! observation-layer speedup.
+//!
+//! Grid: all six observation kinds × {Empty-16x16, DoorKey-16x16,
+//! LockedRoom, Dynamic-Obstacles-16x16} × B ∈ {256, 2048} (rgb kinds use
+//! smaller batches — a 2048-env 512×512×3 rgb buffer alone is 1.6 GB).
+//! Emits `results/BENCH_obs.json` via the bench_harness JSON writer;
+//! methodology and recorded numbers live in `EXPERIMENTS.md` §Perf.
+//!
+//! `--smoke` (or `NAVIX_BENCH_FAST=1`): tiny batch, few steps — the CI
+//! bench-smoke job runs this, uploads the JSON artifact, and **fails
+//! loudly** if the overlay path's first-person-symbolic steps/s drops
+//! below a recorded floor (`NAVIX_OBS_SMOKE_FLOOR`, default 100000).
+
+use navix::batch::BatchedEnv;
+use navix::bench_harness::Report;
+use navix::rng::Key;
+use navix::systems::observations::{ObsKind, ObsPath};
+use std::time::Instant;
+
+const ENV_IDS: [&str; 4] = [
+    "Navix-Empty-16x16-v0",
+    "Navix-DoorKey-16x16-v0",
+    "Navix-LockedRoom-v0",
+    "Navix-Dynamic-Obstacles-16x16",
+];
+
+const KINDS: [ObsKind; 6] = [
+    ObsKind::Symbolic,
+    ObsKind::SymbolicFirstPerson,
+    ObsKind::Categorical,
+    ObsKind::CategoricalFirstPerson,
+    ObsKind::Rgb,
+    ObsKind::RgbFirstPerson,
+];
+
+/// End-to-end steps/s of one (env, kind, path) cell.
+fn steps_per_s(id: &str, kind: ObsKind, b: usize, steps: usize, path: ObsPath) -> f64 {
+    let cfg = navix::make(id).unwrap().with_observation(kind);
+    let mut env = BatchedEnv::new(cfg, b, Key::new(0));
+    env.set_obs_path(path);
+    let t0 = Instant::now();
+    env.rollout_random(steps, 0x0B5);
+    (b * steps) as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let smoke =
+        std::env::args().any(|a| a == "--smoke") || std::env::var("NAVIX_BENCH_FAST").is_ok();
+    let ids: &[&str] = if smoke { &ENV_IDS[..2] } else { &ENV_IDS };
+    let kinds: &[ObsKind] = if smoke {
+        &[ObsKind::Symbolic, ObsKind::SymbolicFirstPerson, ObsKind::Rgb]
+    } else {
+        &KINDS
+    };
+
+    let mut report = Report::new(
+        "obs",
+        &["env", "obs", "envs", "steps", "naive_sps", "overlay_sps", "speedup"],
+    );
+    let mut smoke_floor_sps = f64::INFINITY;
+    for &id in ids {
+        for &kind in kinds {
+            // Rgb buffers are 3 KB/tile: cap the batch so the full sweep
+            // stays in memory (Empty-16x16 rgb at B=2048 would be 1.6 GB).
+            // Smoke keeps enough work (64×50 env-steps for i32 kinds) that
+            // the floor assertion times real compute, not timer noise.
+            let batches: Vec<usize> = match (smoke, kind.is_rgb()) {
+                (true, false) => vec![64],
+                (true, true) => vec![16],
+                (false, false) => vec![256, 2048],
+                (false, true) => vec![16, 64],
+            };
+            let steps = match (smoke, kind.is_rgb()) {
+                (true, false) => 50,
+                (true, true) => 4,
+                (false, false) => 100,
+                (false, true) => 20,
+            };
+            for &b in &batches {
+                let naive = steps_per_s(id, kind, b, steps, ObsPath::NaiveScan);
+                let overlay = steps_per_s(id, kind, b, steps, ObsPath::Overlay);
+                if kind == ObsKind::SymbolicFirstPerson {
+                    smoke_floor_sps = smoke_floor_sps.min(overlay);
+                }
+                report.row(&[
+                    id.to_string(),
+                    kind.name().to_string(),
+                    b.to_string(),
+                    steps.to_string(),
+                    format!("{naive:.0}"),
+                    format!("{overlay:.0}"),
+                    format!("{:.2}x", overlay / naive),
+                ]);
+            }
+        }
+    }
+    report.save();
+
+    if smoke {
+        // Regression gate: the overlay path must clear the recorded floor.
+        // The default is deliberately far below a healthy release build
+        // (first-person symbolic stepping runs in the millions of steps/s)
+        // so only a genuine hot-path regression — e.g. the overlay
+        // degrading back to per-cell scans — trips it on shared CI runners.
+        let floor: f64 = std::env::var("NAVIX_OBS_SMOKE_FLOOR")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(100_000.0);
+        assert!(
+            smoke_floor_sps >= floor,
+            "overlay first-person-symbolic throughput {smoke_floor_sps:.0} steps/s \
+             is below the recorded floor of {floor:.0} steps/s"
+        );
+        println!(
+            "\nsmoke gate: overlay symbolic_first_person ≥ {floor:.0} steps/s \
+             (measured {smoke_floor_sps:.0}) — OK"
+        );
+    } else {
+        println!("\n(expected shape: overlay ≥2x naive on first-person symbolic at B=2048;");
+        println!(" full-grid kinds gain more — the naive path paid O(caps) per cell — and");
+        println!(" full rgb gains most: dirty tiles re-blit only what changed)");
+    }
+}

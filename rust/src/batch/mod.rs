@@ -12,6 +12,13 @@
 //! one dispatch amortised over `B` contiguous state slots vs. one Python
 //! object graph per environment in the baseline ([`crate::baseline`]).
 //!
+//! The observation/step hot path is **scan-free**: spatial queries and the
+//! per-cell encoding read the state's packed cell-code overlay grid (one
+//! `u32` per cell, kept write-through consistent — see
+//! [`crate::core::state`]), and full-grid rgb uses per-env **dirty-tile
+//! tracking**: the image is rendered once, then only tiles whose code
+//! changed are re-blitted each step.
+//!
 //! ## RNG contract (what makes sharding deterministic)
 //!
 //! Every episode key is a pure function of `(root key, global env index,
@@ -25,12 +32,15 @@ pub mod sharded;
 
 pub use sharded::ShardedEnv;
 
+use std::sync::Arc;
+
 use crate::core::actions::Action;
-use crate::core::state::BatchedState;
+use crate::core::state::{cellcode, BatchedState};
 use crate::core::timestep::{BatchedTimestep, StepType};
 use crate::envs::EnvConfig;
 use crate::rng::Key;
 use crate::systems::intervention::intervene;
+use crate::systems::observations::{rgb_incremental, ObsKind, ObsPath};
 use crate::systems::sprites::SpriteSheet;
 use crate::systems::transition::transition;
 
@@ -80,7 +90,14 @@ pub struct BatchedEnv {
     pub state: BatchedState,
     pub timestep: BatchedTimestep,
     pub obs: ObsBatch,
-    sprites: Option<SpriteSheet>,
+    sprites: Option<Arc<SpriteSheet>>,
+    /// Which observation implementation runs (overlay by default; the scan
+    /// oracle is selectable for parity tests and the obs_throughput bench).
+    obs_path: ObsPath,
+    /// Dirty-tile cache for full-grid rgb: per env, the render code each
+    /// tile of the obs buffer currently shows (`b·h·w`; empty otherwise).
+    /// `cellcode::INVALID` marks a tile as needing a blit.
+    rgb_prev: Vec<u32>,
     key: Key,
     /// Global index of local env 0 (non-zero only inside a [`ShardedEnv`]).
     index_offset: usize,
@@ -108,7 +125,14 @@ impl BatchedEnv {
         } else {
             ObsBatch::I32(vec![0; b * obs_len])
         };
-        let sprites = if cfg.obs.kind.is_rgb() { Some(SpriteSheet::new()) } else { None };
+        // One process-wide sprite sheet: rgb engines (and every shard of a
+        // ShardedEnv) share the rendered tiles instead of rebuilding them.
+        let sprites = if cfg.obs.kind.is_rgb() { Some(SpriteSheet::shared()) } else { None };
+        let rgb_prev = if cfg.obs.kind == ObsKind::Rgb {
+            vec![cellcode::INVALID; b * cfg.h * cfg.w]
+        } else {
+            Vec::new()
+        };
         let mut env = BatchedEnv {
             cfg,
             b,
@@ -116,12 +140,25 @@ impl BatchedEnv {
             timestep: BatchedTimestep::first(b),
             obs,
             sprites,
+            obs_path: ObsPath::Overlay,
+            rgb_prev,
             key,
             index_offset,
             reset_counts: vec![0; b],
         };
         env.reset_all();
         env
+    }
+
+    /// Select the observation implementation (parity tests and the
+    /// `obs_throughput` bench switch to the scan oracle here). Invalidates
+    /// the rgb dirty-tile cache so the next frame is a full render.
+    pub fn set_obs_path(&mut self, path: ObsPath) {
+        self.obs_path = path;
+        self.rgb_prev.fill(cellcode::INVALID);
+        for i in 0..self.b {
+            self.write_obs(i);
+        }
     }
 
     /// Number of discrete actions.
@@ -230,11 +267,22 @@ impl BatchedEnv {
         let stride = self.cfg.obs.len(self.cfg.h, self.cfg.w);
         match &mut self.obs {
             ObsBatch::I32(v) => {
-                self.cfg.obs.write_i32(&slot, &mut v[i * stride..(i + 1) * stride]);
+                let out = &mut v[i * stride..(i + 1) * stride];
+                self.cfg.obs.write_i32_path(self.obs_path, &slot, out);
             }
             ObsBatch::U8(v) => {
                 let sheet = self.sprites.as_ref().expect("sprite sheet for rgb obs");
-                self.cfg.obs.write_u8(&slot, sheet, &mut v[i * stride..(i + 1) * stride]);
+                let out = &mut v[i * stride..(i + 1) * stride];
+                if self.cfg.obs.kind == ObsKind::Rgb && self.obs_path == ObsPath::Overlay {
+                    // Dirty-tile path: the obs buffer persists across steps,
+                    // so only tiles whose render code changed are re-blitted
+                    // (a fresh env starts all-INVALID → one full render).
+                    let hw = self.cfg.h * self.cfg.w;
+                    let prev = &mut self.rgb_prev[i * hw..(i + 1) * hw];
+                    rgb_incremental(&slot, sheet, prev, out);
+                } else {
+                    self.cfg.obs.write_u8_path(self.obs_path, &slot, sheet, out);
+                }
             }
         }
     }
@@ -421,6 +469,28 @@ mod tests {
         match &e.obs {
             ObsBatch::U8(v) => assert_eq!(v.len(), 2 * 160 * 160 * 3),
             _ => panic!("rgb must be u8"),
+        }
+    }
+
+    #[test]
+    fn rgb_dirty_tiles_match_from_scratch_render() {
+        // The incremental rgb buffer must be indistinguishable from a full
+        // render at every step, including across autoresets.
+        let cfg = make("Navix-Empty-5x5-v0").unwrap().with_observation(ObsKind::Rgb);
+        let mut e = BatchedEnv::new(cfg, 2, Key::new(0));
+        let sheet = SpriteSheet::shared();
+        let mut scratch = vec![0u8; e.obs.stride(2)];
+        for i in 0..2 {
+            crate::systems::observations::scan::rgb(&e.state.slot(i), &sheet, &mut scratch);
+            assert_eq!(e.obs.env_u8(2, i), &scratch[..], "reset frame env {i}");
+        }
+        for step in 0..30 {
+            let a = [(step % 7) as u8, ((step + 2) % 7) as u8];
+            e.step(&a);
+            for i in 0..2 {
+                crate::systems::observations::scan::rgb(&e.state.slot(i), &sheet, &mut scratch);
+                assert_eq!(e.obs.env_u8(2, i), &scratch[..], "step {step} env {i}");
+            }
         }
     }
 

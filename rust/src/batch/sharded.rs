@@ -14,7 +14,10 @@
 //! shards in place, and the results are gathered into contiguous
 //! timestep/observation mirrors with one `memcpy` per field per shard.
 //! Per-shard busy time is accumulated for the load statistics the
-//! `fig5_sharded` bench reports.
+//! `fig5_sharded` bench reports. Rgb shards share one process-wide
+//! [`SpriteSheet`](crate::systems::sprites::SpriteSheet) (`Arc` behind a
+//! `OnceLock`), so sharded rgb runs no longer pay per-shard sheet
+//! construction or memory.
 //!
 //! ## Determinism
 //!

@@ -9,12 +9,80 @@
 //!
 //! Dynamic entities (doors, keys, balls, boxes) use fixed capacities with
 //! position −1 meaning "absent" (mirroring NAVIX's padded entity arrays).
+//!
+//! ## The packed cell-code overlay grid
+//!
+//! On top of the entity tables the state maintains a write-through **overlay
+//! grid**: per cell, one `u32` [`cellcode`] packing the `(tag, colour,
+//! state)` triple the observation encoding would produce for that cell
+//! (player excluded — the player is overlaid by the observation writers),
+//! plus one `u8` entity-table index for the queries that still need the
+//! table. Base terrain is pre-merged with the entity overlay, so the spatial
+//! queries (`door_at`, `walkable`, `opaque`, `occupied_by_entity`,
+//! `free_for_placement`) and the per-cell observation encoding are O(1)
+//! array reads instead of O(caps) scans — the per-step observation cost
+//! drops from O(H·W·caps) to O(H·W) (see `EXPERIMENTS.md` §Perf).
+//!
+//! The overlay is kept incrementally consistent by routing **every**
+//! mutation through the [`SlotMut`] write-through setters (`set_cell`,
+//! `add_*`/`try_add_*`, `set_door_state`, `remove_*`, `move_ball`, …):
+//! each setter recomputes the affected cell(s) from the tables with the
+//! original first-match scans (`door_at_scan` & co., kept as the
+//! bitwise-parity oracle), so a mutation costs O(caps) once instead of
+//! every observation paying O(caps) per cell per step.
 
 use super::components::{Color, Direction, DoorState, Pocket};
-use super::entities::CellType;
+use super::entities::{CellType, Tag};
 use super::events::Events;
 use super::grid::{GridDims, Pos};
 use crate::rng::Rng;
+
+/// The packed per-cell overlay code: `tag | colour << 8 | state << 16`,
+/// exactly the `(tag, colour, state)` triple MiniGrid's `encode` produces
+/// for the cell (player excluded). `u32::MAX` is reserved as an "invalid"
+/// sentinel for the rgb dirty-tile caches (no real code reaches it: tags
+/// are ≤ 10).
+pub mod cellcode {
+    use super::super::entities::{CellType, Tag};
+
+    /// "No entity on this cell" marker for the index channel.
+    pub const NONE_IDX: u8 = u8::MAX;
+    /// Dirty-tile sentinel: never produced by [`pack`], forces a re-blit.
+    pub const INVALID: u32 = u32::MAX;
+
+    #[inline]
+    pub const fn pack(tag: i32, color: u8, state: u8) -> u32 {
+        (tag as u32) | ((color as u32) << 8) | ((state as u32) << 16)
+    }
+
+    #[inline]
+    pub const fn tag(code: u32) -> i32 {
+        (code & 0xFF) as i32
+    }
+
+    #[inline]
+    pub const fn color(code: u32) -> i32 {
+        ((code >> 8) & 0xFF) as i32
+    }
+
+    #[inline]
+    pub const fn state(code: u32) -> i32 {
+        ((code >> 16) & 0xFF) as i32
+    }
+
+    /// Code of a bare base-terrain cell — the exact triple the naive
+    /// `encode_cell` match produces (goal colour is pinned to green, floor
+    /// and lava to colour 0, matching MiniGrid's `encode`).
+    #[inline]
+    pub fn base_code(cell: CellType, base_color: u8) -> u32 {
+        match cell {
+            CellType::Floor => pack(Tag::EMPTY, 0, 0),
+            CellType::Wall => pack(Tag::WALL, base_color, 0),
+            CellType::Goal => pack(Tag::GOAL, 1, 0),
+            CellType::Lava => pack(Tag::LAVA, 0, 0),
+        }
+    }
+}
 
 /// Static entity capacities for one environment configuration.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -36,6 +104,13 @@ pub struct BatchedState {
     // Base grid (static per episode): cell types + colours, b*h*w each.
     pub base: Vec<u8>,
     pub base_color: Vec<u8>,
+
+    // Packed cell-code overlay (base terrain pre-merged with the entity
+    // overlay, player excluded) + the entity-table index channel, b*h*w
+    // each. Kept write-through consistent by the `SlotMut` setters; never
+    // poke entity tables or `base` directly.
+    pub overlay: Vec<u32>,
+    pub overlay_idx: Vec<u8>,
 
     // Player (Positionable + Directional + Holder), one per env.
     pub player_pos: Vec<i32>,
@@ -78,6 +153,8 @@ impl BatchedState {
             caps,
             base: vec![CellType::Wall as u8; b * hw],
             base_color: vec![Color::Grey as u8; b * hw],
+            overlay: vec![cellcode::base_code(CellType::Wall, Color::Grey as u8); b * hw],
+            overlay_idx: vec![cellcode::NONE_IDX; b * hw],
             player_pos: vec![-1; b],
             player_dir: vec![0; b],
             pocket: vec![-1; b],
@@ -114,6 +191,8 @@ impl BatchedState {
             caps: c,
             base: &mut self.base[i * hw..(i + 1) * hw],
             base_color: &mut self.base_color[i * hw..(i + 1) * hw],
+            overlay: &mut self.overlay[i * hw..(i + 1) * hw],
+            overlay_idx: &mut self.overlay_idx[i * hw..(i + 1) * hw],
             player_pos: &mut self.player_pos[i],
             player_dir: &mut self.player_dir[i],
             pocket: &mut self.pocket[i],
@@ -145,6 +224,8 @@ impl BatchedState {
             caps: c,
             base: &self.base[i * hw..(i + 1) * hw],
             base_color: &self.base_color[i * hw..(i + 1) * hw],
+            overlay: &self.overlay[i * hw..(i + 1) * hw],
+            overlay_idx: &self.overlay_idx[i * hw..(i + 1) * hw],
             player_pos: self.player_pos[i],
             player_dir: self.player_dir[i],
             pocket: self.pocket[i],
@@ -173,6 +254,8 @@ pub struct EnvSlot<'a> {
     pub caps: Caps,
     pub base: &'a [u8],
     pub base_color: &'a [u8],
+    pub overlay: &'a [u32],
+    pub overlay_idx: &'a [u8],
     pub player_pos: i32,
     pub player_dir: i32,
     pub pocket: i32,
@@ -198,6 +281,8 @@ pub struct SlotMut<'a> {
     pub caps: Caps,
     pub base: &'a mut [u8],
     pub base_color: &'a mut [u8],
+    pub overlay: &'a mut [u32],
+    pub overlay_idx: &'a mut [u8],
     pub player_pos: &'a mut i32,
     pub player_dir: &'a mut i32,
     pub pocket: &'a mut i32,
@@ -243,54 +328,80 @@ macro_rules! shared_slot_api {
                 Color::from_u8(self.base_color[(p.r as usize) * self.w + p.c as usize])
             }
 
-            /// Index of the door at `p`, if any.
+            /// Packed overlay code at `p`'s flat encoding, if it lands in
+            /// the grid's code range. Mirrors the naive scans' index
+            /// semantics *exactly*: `p.encode` is compared against the same
+            /// flat range the entity tables store, so even the aliasing an
+            /// out-of-bounds column produces (`r·W + c` with `c ≥ W` lands
+            /// in the next row) resolves to the identical cell.
+            #[inline]
+            fn code_at_enc(&self, p: Pos) -> Option<(u32, usize)> {
+                let enc = p.encode(self.w);
+                if enc < 0 {
+                    return None;
+                }
+                let i = enc as usize;
+                if i >= self.overlay.len() {
+                    return None;
+                }
+                Some((self.overlay[i], i))
+            }
+
+            /// Index of the door at `p`, if any. O(1) overlay read.
             #[inline]
             pub fn door_at(&self, p: Pos) -> Option<usize> {
-                let enc = p.encode(self.w);
-                if enc < 0 {
-                    return None;
+                match self.code_at_enc(p) {
+                    Some((code, i)) if cellcode::tag(code) == Tag::DOOR => {
+                        Some(self.overlay_idx[i] as usize)
+                    }
+                    _ => None,
                 }
-                self.door_pos.iter().position(|&d| d == enc)
             }
 
-            /// Index of the (still on-ground) key at `p`, if any.
+            /// Index of the (still on-ground) key at `p`, if any. O(1).
             #[inline]
             pub fn key_at(&self, p: Pos) -> Option<usize> {
-                let enc = p.encode(self.w);
-                if enc < 0 {
-                    return None;
+                match self.code_at_enc(p) {
+                    Some((code, i)) if cellcode::tag(code) == Tag::KEY => {
+                        Some(self.overlay_idx[i] as usize)
+                    }
+                    _ => None,
                 }
-                self.key_pos.iter().position(|&k| k == enc && k >= 0)
             }
 
-            /// Index of the ball at `p`, if any.
+            /// Index of the ball at `p`, if any. O(1).
             #[inline]
             pub fn ball_at(&self, p: Pos) -> Option<usize> {
-                let enc = p.encode(self.w);
-                if enc < 0 {
-                    return None;
+                match self.code_at_enc(p) {
+                    Some((code, i)) if cellcode::tag(code) == Tag::BALL => {
+                        Some(self.overlay_idx[i] as usize)
+                    }
+                    _ => None,
                 }
-                self.ball_pos.iter().position(|&x| x == enc && x >= 0)
             }
 
-            /// Index of the box at `p`, if any.
+            /// Index of the box at `p`, if any. O(1).
             #[inline]
             pub fn box_at(&self, p: Pos) -> Option<usize> {
-                let enc = p.encode(self.w);
-                if enc < 0 {
-                    return None;
+                match self.code_at_enc(p) {
+                    Some((code, i)) if cellcode::tag(code) == Tag::BOX => {
+                        Some(self.overlay_idx[i] as usize)
+                    }
+                    _ => None,
                 }
-                self.box_pos.iter().position(|&x| x == enc && x >= 0)
             }
 
             /// Is any dynamic entity occupying `p` (doors count regardless of
-            /// open/closed; keys/balls/boxes only while on the ground)?
+            /// open/closed; keys/balls/boxes only while on the ground)? O(1).
             #[inline]
             pub fn occupied_by_entity(&self, p: Pos) -> bool {
-                self.door_at(p).is_some()
-                    || self.key_at(p).is_some()
-                    || self.ball_at(p).is_some()
-                    || self.box_at(p).is_some()
+                match self.code_at_enc(p) {
+                    Some((code, _)) => matches!(
+                        cellcode::tag(code),
+                        Tag::DOOR | Tag::KEY | Tag::BALL | Tag::BOX
+                    ),
+                    None => false,
+                }
             }
 
             /// Can the agent walk onto `p`? (MiniGrid `can_overlap` rules:
@@ -298,37 +409,136 @@ macro_rules! shared_slot_api {
             /// key/ball/box on the ground block movement. A door *replaces*
             /// its cell, so its state decides regardless of the base cell —
             /// doors set into walls, e.g. GoToDoor's border doors, behave
-            /// like MiniGrid's.)
+            /// like MiniGrid's.) O(1) overlay read.
             #[inline]
             pub fn walkable(&self, p: Pos) -> bool {
                 if !p.in_bounds(self.h, self.w) {
                     return false;
                 }
-                if let Some(d) = self.door_at(p) {
+                let code = self.overlay[(p.r as usize) * self.w + p.c as usize];
+                match cellcode::tag(code) {
+                    Tag::DOOR => cellcode::state(code) == DoorState::Open as i32,
+                    Tag::WALL | Tag::KEY | Tag::BALL | Tag::BOX => false,
+                    _ => true,
+                }
+            }
+
+            /// Does `p` block line of sight? (walls, closed/locked doors;
+            /// a door's state overrides the base cell it replaced) O(1).
+            #[inline]
+            pub fn opaque(&self, p: Pos) -> bool {
+                match self.code_at_enc(p) {
+                    Some((code, _)) => match cellcode::tag(code) {
+                        Tag::DOOR => cellcode::state(code) != DoorState::Open as i32,
+                        Tag::WALL => true,
+                        // An aliased out-of-bounds `p` reads a real cell's
+                        // code, but its *base* cell reads as Wall — exactly
+                        // what the scan path falls back to.
+                        _ => !p.in_bounds(self.h, self.w),
+                    },
+                    None => true,
+                }
+            }
+
+            /// Is `p` free for entity placement (floor, nothing on it)? O(1).
+            #[inline]
+            pub fn free_for_placement(&self, p: Pos, player: Pos) -> bool {
+                if !p.in_bounds(self.h, self.w) || p == player {
+                    return false;
+                }
+                let code = self.overlay[(p.r as usize) * self.w + p.c as usize];
+                cellcode::tag(code) == Tag::EMPTY
+            }
+
+            // ---- Naive first-match scans: the bitwise-parity oracle. ----
+            //
+            // These are the original O(caps) implementations. They stay in
+            // the build because (a) the write-through setters use them to
+            // recompute a mutated cell, and (b) `tests/test_obs_parity.rs`
+            // and `benches/obs_throughput.rs` pin the overlay path against
+            // them, state by state and output by output.
+
+            /// Scan-path oracle for [`Self::door_at`].
+            #[inline]
+            pub fn door_at_scan(&self, p: Pos) -> Option<usize> {
+                let enc = p.encode(self.w);
+                if enc < 0 {
+                    return None;
+                }
+                self.door_pos.iter().position(|&d| d == enc)
+            }
+
+            /// Scan-path oracle for [`Self::key_at`].
+            #[inline]
+            pub fn key_at_scan(&self, p: Pos) -> Option<usize> {
+                let enc = p.encode(self.w);
+                if enc < 0 {
+                    return None;
+                }
+                self.key_pos.iter().position(|&k| k == enc && k >= 0)
+            }
+
+            /// Scan-path oracle for [`Self::ball_at`].
+            #[inline]
+            pub fn ball_at_scan(&self, p: Pos) -> Option<usize> {
+                let enc = p.encode(self.w);
+                if enc < 0 {
+                    return None;
+                }
+                self.ball_pos.iter().position(|&x| x == enc && x >= 0)
+            }
+
+            /// Scan-path oracle for [`Self::box_at`].
+            #[inline]
+            pub fn box_at_scan(&self, p: Pos) -> Option<usize> {
+                let enc = p.encode(self.w);
+                if enc < 0 {
+                    return None;
+                }
+                self.box_pos.iter().position(|&x| x == enc && x >= 0)
+            }
+
+            /// Scan-path oracle for [`Self::occupied_by_entity`].
+            #[inline]
+            pub fn occupied_by_entity_scan(&self, p: Pos) -> bool {
+                self.door_at_scan(p).is_some()
+                    || self.key_at_scan(p).is_some()
+                    || self.ball_at_scan(p).is_some()
+                    || self.box_at_scan(p).is_some()
+            }
+
+            /// Scan-path oracle for [`Self::walkable`].
+            #[inline]
+            pub fn walkable_scan(&self, p: Pos) -> bool {
+                if !p.in_bounds(self.h, self.w) {
+                    return false;
+                }
+                if let Some(d) = self.door_at_scan(p) {
                     return DoorState::from_u8(self.door_state[d]) == DoorState::Open;
                 }
                 if !self.cell(p).walkable() {
                     return false;
                 }
-                !(self.key_at(p).is_some()
-                    || self.ball_at(p).is_some()
-                    || self.box_at(p).is_some())
+                !(self.key_at_scan(p).is_some()
+                    || self.ball_at_scan(p).is_some()
+                    || self.box_at_scan(p).is_some())
             }
 
-            /// Does `p` block line of sight? (walls, closed/locked doors;
-            /// a door's state overrides the base cell it replaced)
+            /// Scan-path oracle for [`Self::opaque`].
             #[inline]
-            pub fn opaque(&self, p: Pos) -> bool {
-                if let Some(d) = self.door_at(p) {
+            pub fn opaque_scan(&self, p: Pos) -> bool {
+                if let Some(d) = self.door_at_scan(p) {
                     return DoorState::from_u8(self.door_state[d]) != DoorState::Open;
                 }
                 !self.cell(p).transparent()
             }
 
-            /// Is `p` free for entity placement (floor, nothing on it)?
+            /// Scan-path oracle for [`Self::free_for_placement`].
             #[inline]
-            pub fn free_for_placement(&self, p: Pos, player: Pos) -> bool {
-                self.cell(p) == CellType::Floor && !self.occupied_by_entity(p) && p != player
+            pub fn free_for_placement_scan(&self, p: Pos, player: Pos) -> bool {
+                self.cell(p) == CellType::Floor
+                    && !self.occupied_by_entity_scan(p)
+                    && p != player
             }
 
             /// Player position decoded.
@@ -396,13 +606,78 @@ impl<'a> SlotMut<'a> {
         SlotRng { slot: self }
     }
 
-    /// Set the base cell type (+ colour) at `p`.
+    /// Recompute the overlay code + index channel of one in-bounds cell
+    /// from the entity tables and base grid, using the same first-match
+    /// precedence (door > key > ball > box > base) the scan oracle applies.
+    /// O(caps) — paid once per mutation instead of per cell per step.
+    pub fn recompute_cell(&mut self, p: Pos) {
+        debug_assert!(p.in_bounds(self.h, self.w));
+        let i = (p.r as usize) * self.w + p.c as usize;
+        let (code, idx) = if let Some(d) = self.door_at_scan(p) {
+            (cellcode::pack(Tag::DOOR, self.door_color[d], self.door_state[d]), d as u8)
+        } else if let Some(k) = self.key_at_scan(p) {
+            (cellcode::pack(Tag::KEY, self.key_color[k], 0), k as u8)
+        } else if let Some(b) = self.ball_at_scan(p) {
+            (cellcode::pack(Tag::BALL, self.ball_color[b], 0), b as u8)
+        } else if let Some(b) = self.box_at_scan(p) {
+            (cellcode::pack(Tag::BOX, self.box_color[b], 0), b as u8)
+        } else {
+            (cellcode::base_code(self.cell(p), self.base_color[i]), cellcode::NONE_IDX)
+        };
+        self.overlay[i] = code;
+        self.overlay_idx[i] = idx;
+    }
+
+    /// Rebuild the whole overlay from the base grid + entity tables
+    /// (O(H·W + caps)): base codes first, then entities splatted in reverse
+    /// precedence (and reverse index order within a kind) so the result is
+    /// identical to per-cell first-match recomputation.
+    pub fn rebuild_overlay(&mut self) {
+        let hw = self.h * self.w;
+        for i in 0..hw {
+            self.overlay[i] =
+                cellcode::base_code(CellType::from_u8(self.base[i]), self.base_color[i]);
+            self.overlay_idx[i] = cellcode::NONE_IDX;
+        }
+        for x in (0..self.box_pos.len()).rev() {
+            let enc = self.box_pos[x];
+            if enc >= 0 && (enc as usize) < hw {
+                self.overlay[enc as usize] = cellcode::pack(Tag::BOX, self.box_color[x], 0);
+                self.overlay_idx[enc as usize] = x as u8;
+            }
+        }
+        for x in (0..self.ball_pos.len()).rev() {
+            let enc = self.ball_pos[x];
+            if enc >= 0 && (enc as usize) < hw {
+                self.overlay[enc as usize] = cellcode::pack(Tag::BALL, self.ball_color[x], 0);
+                self.overlay_idx[enc as usize] = x as u8;
+            }
+        }
+        for x in (0..self.key_pos.len()).rev() {
+            let enc = self.key_pos[x];
+            if enc >= 0 && (enc as usize) < hw {
+                self.overlay[enc as usize] = cellcode::pack(Tag::KEY, self.key_color[x], 0);
+                self.overlay_idx[enc as usize] = x as u8;
+            }
+        }
+        for x in (0..self.door_pos.len()).rev() {
+            let enc = self.door_pos[x];
+            if enc >= 0 && (enc as usize) < hw {
+                self.overlay[enc as usize] =
+                    cellcode::pack(Tag::DOOR, self.door_color[x], self.door_state[x]);
+                self.overlay_idx[enc as usize] = x as u8;
+            }
+        }
+    }
+
+    /// Set the base cell type (+ colour) at `p` (write-through).
     #[inline]
     pub fn set_cell(&mut self, p: Pos, t: CellType, color: Color) {
         debug_assert!(p.in_bounds(self.h, self.w));
         let idx = (p.r as usize) * self.w + p.c as usize;
         self.base[idx] = t as u8;
         self.base_color[idx] = color as u8;
+        self.recompute_cell(p);
     }
 
     /// Fill the whole base grid with floor surrounded by a wall ring.
@@ -416,6 +691,7 @@ impl<'a> SlotMut<'a> {
                 self.base_color[idx] = Color::Grey as u8;
             }
         }
+        self.rebuild_overlay();
     }
 
     /// Clear all dynamic entities and bookkeeping (used before layout).
@@ -429,9 +705,11 @@ impl<'a> SlotMut<'a> {
         *self.events = Events::NONE;
         *self.last_action = -1;
         *self.t = 0;
+        self.rebuild_overlay();
     }
 
-    /// Place the player.
+    /// Place the player. (The player is not part of the overlay — the
+    /// observation writers overlay it — so no recompute is needed.)
     #[inline]
     pub fn place_player(&mut self, p: Pos, dir: Direction) {
         *self.player_pos = p.encode(self.w);
@@ -440,6 +718,15 @@ impl<'a> SlotMut<'a> {
 
     /// Add a door at `p`. Panics if capacity is exhausted (a config bug).
     pub fn add_door(&mut self, p: Pos, color: Color, state: DoorState) -> usize {
+        // The overlay stores one entity per cell (door > key > ball > box):
+        // a second entity under a door would be silently hidden from the
+        // O(1) queries, so enforce the invariant at the write.
+        debug_assert!(
+            self.key_at_scan(p).is_none()
+                && self.ball_at_scan(p).is_none()
+                && self.box_at_scan(p).is_none(),
+            "overlay invariant: a door may not be placed over another entity at {p:?}"
+        );
         let slot = self
             .door_pos
             .iter()
@@ -448,43 +735,122 @@ impl<'a> SlotMut<'a> {
         self.door_pos[slot] = p.encode(self.w);
         self.door_color[slot] = color as u8;
         self.door_state[slot] = state as u8;
+        self.recompute_cell(p);
         slot
     }
 
-    /// Add a key at `p`.
-    pub fn add_key(&mut self, p: Pos, color: Color) -> usize {
-        let slot = self
-            .key_pos
-            .iter()
-            .position(|&k| k < 0)
-            .expect("key capacity exhausted: bump Caps.keys in the env config");
+    /// Add a key at `p` if a table slot is free (the runtime `drop` path).
+    pub fn try_add_key(&mut self, p: Pos, color: Color) -> Option<usize> {
+        debug_assert!(
+            !self.occupied_by_entity_scan(p),
+            "overlay invariant: one entity per cell (key onto occupied {p:?})"
+        );
+        let slot = self.key_pos.iter().position(|&k| k < 0)?;
         self.key_pos[slot] = p.encode(self.w);
         self.key_color[slot] = color as u8;
-        slot
+        self.recompute_cell(p);
+        Some(slot)
     }
 
-    /// Add a ball at `p`.
-    pub fn add_ball(&mut self, p: Pos, color: Color) -> usize {
-        let slot = self
-            .ball_pos
-            .iter()
-            .position(|&x| x < 0)
-            .expect("ball capacity exhausted: bump Caps.balls in the env config");
+    /// Add a key at `p`. Panics if capacity is exhausted (a config bug).
+    pub fn add_key(&mut self, p: Pos, color: Color) -> usize {
+        self.try_add_key(p, color)
+            .expect("key capacity exhausted: bump Caps.keys in the env config")
+    }
+
+    /// Add a ball at `p` if a table slot is free (the runtime `drop` path).
+    pub fn try_add_ball(&mut self, p: Pos, color: Color) -> Option<usize> {
+        debug_assert!(
+            !self.occupied_by_entity_scan(p),
+            "overlay invariant: one entity per cell (ball onto occupied {p:?})"
+        );
+        let slot = self.ball_pos.iter().position(|&x| x < 0)?;
         self.ball_pos[slot] = p.encode(self.w);
         self.ball_color[slot] = color as u8;
-        slot
+        self.recompute_cell(p);
+        Some(slot)
     }
 
-    /// Add a box at `p`.
-    pub fn add_box(&mut self, p: Pos, color: Color) -> usize {
-        let slot = self
-            .box_pos
-            .iter()
-            .position(|&x| x < 0)
-            .expect("box capacity exhausted: bump Caps.boxes in the env config");
+    /// Add a ball at `p`. Panics if capacity is exhausted (a config bug).
+    pub fn add_ball(&mut self, p: Pos, color: Color) -> usize {
+        self.try_add_ball(p, color)
+            .expect("ball capacity exhausted: bump Caps.balls in the env config")
+    }
+
+    /// Add a box at `p` if a table slot is free (the runtime `drop` path).
+    pub fn try_add_box(&mut self, p: Pos, color: Color) -> Option<usize> {
+        debug_assert!(
+            !self.occupied_by_entity_scan(p),
+            "overlay invariant: one entity per cell (box onto occupied {p:?})"
+        );
+        let slot = self.box_pos.iter().position(|&x| x < 0)?;
         self.box_pos[slot] = p.encode(self.w);
         self.box_color[slot] = color as u8;
-        slot
+        self.recompute_cell(p);
+        Some(slot)
+    }
+
+    /// Add a box at `p`. Panics if capacity is exhausted (a config bug).
+    pub fn add_box(&mut self, p: Pos, color: Color) -> usize {
+        self.try_add_box(p, color)
+            .expect("box capacity exhausted: bump Caps.boxes in the env config")
+    }
+
+    /// Set door `d`'s open/closed/locked state (write-through).
+    #[inline]
+    pub fn set_door_state(&mut self, d: usize, state: DoorState) {
+        self.door_state[d] = state as u8;
+        let enc = self.door_pos[d];
+        if enc >= 0 {
+            self.recompute_cell(Pos::decode(enc, self.w));
+        }
+    }
+
+    /// Take key `k` off the grid (pickup: position −1, write-through).
+    #[inline]
+    pub fn remove_key(&mut self, k: usize) {
+        let enc = self.key_pos[k];
+        self.key_pos[k] = -1;
+        if enc >= 0 {
+            self.recompute_cell(Pos::decode(enc, self.w));
+        }
+    }
+
+    /// Take ball `b` off the grid (pickup: position −1, write-through).
+    #[inline]
+    pub fn remove_ball(&mut self, b: usize) {
+        let enc = self.ball_pos[b];
+        self.ball_pos[b] = -1;
+        if enc >= 0 {
+            self.recompute_cell(Pos::decode(enc, self.w));
+        }
+    }
+
+    /// Take box `b` off the grid (pickup: position −1, write-through).
+    #[inline]
+    pub fn remove_box(&mut self, b: usize) {
+        let enc = self.box_pos[b];
+        self.box_pos[b] = -1;
+        if enc >= 0 {
+            self.recompute_cell(Pos::decode(enc, self.w));
+        }
+    }
+
+    /// Move ball `b` to `q` (Dynamic-Obstacles drift, write-through: both
+    /// the vacated and the entered cell are recomputed).
+    #[inline]
+    pub fn move_ball(&mut self, b: usize, q: Pos) {
+        debug_assert!(q.in_bounds(self.h, self.w));
+        debug_assert!(
+            self.ball_pos[b] == q.encode(self.w) || !self.occupied_by_entity_scan(q),
+            "overlay invariant: one entity per cell (ball onto occupied {q:?})"
+        );
+        let old = self.ball_pos[b];
+        self.ball_pos[b] = q.encode(self.w);
+        if old >= 0 {
+            self.recompute_cell(Pos::decode(old, self.w));
+        }
+        self.recompute_cell(q);
     }
 
     /// Sample a uniformly random free interior floor cell (rejection
@@ -649,9 +1015,109 @@ mod tests {
         assert!(!s.walkable(Pos::new(1, 2))); // key blocks
         assert!(s.walkable(Pos::new(3, 3)));
         assert!(s.opaque(Pos::new(2, 3))); // locked door blocks sight
-        s.door_state[d] = DoorState::Open as u8;
+        s.set_door_state(d, DoorState::Open);
         assert!(s.walkable(Pos::new(2, 3)));
         assert!(!s.opaque(Pos::new(2, 3)));
+    }
+
+    /// Exhaustive fast-vs-scan agreement over every cell of a slot.
+    fn assert_overlay_consistent(s: &EnvSlot<'_>) {
+        for r in 0..s.h as i32 {
+            for c in 0..s.w as i32 {
+                let p = Pos::new(r, c);
+                let i = (r as usize) * s.w + c as usize;
+                let code = s.overlay[i];
+                let expect = if let Some(d) = s.door_at_scan(p) {
+                    cellcode::pack(Tag::DOOR, s.door_color[d], s.door_state[d])
+                } else if let Some(k) = s.key_at_scan(p) {
+                    cellcode::pack(Tag::KEY, s.key_color[k], 0)
+                } else if let Some(b) = s.ball_at_scan(p) {
+                    cellcode::pack(Tag::BALL, s.ball_color[b], 0)
+                } else if let Some(b) = s.box_at_scan(p) {
+                    cellcode::pack(Tag::BOX, s.box_color[b], 0)
+                } else {
+                    cellcode::base_code(s.cell(p), s.base_color[i])
+                };
+                assert_eq!(code, expect, "overlay desync at {p:?}");
+                assert_eq!(s.door_at(p), s.door_at_scan(p), "door_at at {p:?}");
+                assert_eq!(s.key_at(p), s.key_at_scan(p), "key_at at {p:?}");
+                assert_eq!(s.ball_at(p), s.ball_at_scan(p), "ball_at at {p:?}");
+                assert_eq!(s.box_at(p), s.box_at_scan(p), "box_at at {p:?}");
+                assert_eq!(s.walkable(p), s.walkable_scan(p), "walkable at {p:?}");
+                assert_eq!(s.opaque(p), s.opaque_scan(p), "opaque at {p:?}");
+                assert_eq!(
+                    s.occupied_by_entity(p),
+                    s.occupied_by_entity_scan(p),
+                    "occupied at {p:?}"
+                );
+                let player = s.player();
+                assert_eq!(
+                    s.free_for_placement(p, player),
+                    s.free_for_placement_scan(p, player),
+                    "free_for_placement at {p:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn overlay_stays_consistent_through_every_setter() {
+        let mut st = small_state();
+        let mut s = st.slot_mut(0);
+        s.fill_room();
+        s.place_player(Pos::new(1, 1), Direction::East);
+        let d = s.add_door(Pos::new(2, 3), Color::Yellow, DoorState::Locked);
+        let k = s.add_key(Pos::new(1, 2), Color::Yellow);
+        let b = s.add_ball(Pos::new(3, 2), Color::Blue);
+        s.add_box(Pos::new(3, 4), Color::Green);
+        s.set_cell(Pos::new(2, 2), CellType::Goal, Color::Green);
+        s.set_cell(Pos::new(1, 4), CellType::Lava, Color::Red);
+        drop(s);
+        assert_overlay_consistent(&st.slot(0));
+
+        let mut s = st.slot_mut(0);
+        s.set_door_state(d, DoorState::Open);
+        s.remove_key(k);
+        s.move_ball(b, Pos::new(2, 4));
+        drop(s);
+        assert_overlay_consistent(&st.slot(0));
+
+        let mut s = st.slot_mut(0);
+        s.remove_ball(b);
+        s.remove_box(0);
+        s.try_add_key(Pos::new(3, 3), Color::Red).unwrap();
+        s.set_door_state(d, DoorState::Closed);
+        drop(s);
+        assert_overlay_consistent(&st.slot(0));
+
+        let mut s = st.slot_mut(0);
+        s.clear_entities();
+        drop(s);
+        assert_overlay_consistent(&st.slot(0));
+    }
+
+    #[test]
+    fn overlay_codes_premerge_base_and_entities() {
+        let mut st = small_state();
+        let mut s = st.slot_mut(0);
+        s.fill_room();
+        s.set_cell(Pos::new(2, 2), CellType::Goal, Color::Green);
+        s.add_key(Pos::new(1, 2), Color::Yellow);
+        let at = |s: &SlotMut<'_>, r: usize, c: usize| s.overlay[r * 6 + c];
+        assert_eq!(cellcode::tag(at(&s, 0, 0)), Tag::WALL);
+        assert_eq!(cellcode::color(at(&s, 0, 0)), Color::Grey as i32);
+        assert_eq!(cellcode::tag(at(&s, 2, 2)), Tag::GOAL);
+        assert_eq!(cellcode::color(at(&s, 2, 2)), 1);
+        assert_eq!(cellcode::tag(at(&s, 1, 2)), Tag::KEY);
+        assert_eq!(cellcode::color(at(&s, 1, 2)), Color::Yellow as i32);
+        assert_eq!(s.overlay_idx[1 * 6 + 2], 0);
+        assert_eq!(cellcode::tag(at(&s, 3, 3)), Tag::EMPTY);
+        assert_eq!(s.overlay_idx[3 * 6 + 3], cellcode::NONE_IDX);
+        // A door replacing a wall keeps door precedence in the merged code.
+        let d = s.add_door(Pos::new(2, 3), Color::Red, DoorState::Locked);
+        assert_eq!(cellcode::tag(at(&s, 2, 3)), Tag::DOOR);
+        assert_eq!(cellcode::state(at(&s, 2, 3)), DoorState::Locked as i32);
+        assert_eq!(s.overlay_idx[2 * 6 + 3], d as u8);
     }
 
     #[test]

@@ -125,7 +125,7 @@ mod tests {
         let mut s = st.slot_mut(0);
         let door = Pos::decode(s.door_pos[0], s.w);
         let key_color = Color::from_u8(s.key_color[0]);
-        s.key_pos[0] = -1;
+        s.remove_key(0);
         *s.pocket = crate::core::components::Pocket::holding(Tag::KEY, key_color).0;
         s.place_player(Pos::new(door.r, door.c - 1), Direction::East);
         intervene(&mut s, Action::Toggle);

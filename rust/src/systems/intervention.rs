@@ -61,7 +61,7 @@ fn pickup(s: &mut SlotMut<'_>) {
     let front = s.front();
     let picked = if let Some(k) = s.key_at(front) {
         let color = crate::core::components::Color::from_u8(s.key_color[k]);
-        s.key_pos[k] = -1; // off the grid, into the pocket
+        s.remove_key(k); // off the grid, into the pocket
         Some((Tag::KEY, color))
     } else if let Some(bl) = s.ball_at(front) {
         let color = crate::core::components::Color::from_u8(s.ball_color[bl]);
@@ -70,11 +70,11 @@ fn pickup(s: &mut SlotMut<'_>) {
         if *s.mission == Pocket::holding(Tag::BALL, color).0 {
             s.events.ball_picked = true;
         }
-        s.ball_pos[bl] = -1;
+        s.remove_ball(bl);
         Some((Tag::BALL, color))
     } else if let Some(bx) = s.box_at(front) {
         let color = crate::core::components::Color::from_u8(s.box_color[bx]);
-        s.box_pos[bx] = -1;
+        s.remove_box(bx);
         Some((Tag::BOX, color))
     } else {
         None
@@ -105,30 +105,14 @@ fn drop_item(s: &mut SlotMut<'_>) {
         return;
     }
     let color = pocket.color();
-    let enc = front.encode(s.w);
-    match pocket.kind_tag() {
-        Tag::KEY => {
-            if let Some(k) = s.key_pos.iter().position(|&x| x < 0) {
-                s.key_pos[k] = enc;
-                s.key_color[k] = color as u8;
-                *s.pocket = Pocket::EMPTY.0;
-            }
-        }
-        Tag::BALL => {
-            if let Some(b) = s.ball_pos.iter().position(|&x| x < 0) {
-                s.ball_pos[b] = enc;
-                s.ball_color[b] = color as u8;
-                *s.pocket = Pocket::EMPTY.0;
-            }
-        }
-        Tag::BOX => {
-            if let Some(b) = s.box_pos.iter().position(|&x| x < 0) {
-                s.box_pos[b] = enc;
-                s.box_color[b] = color as u8;
-                *s.pocket = Pocket::EMPTY.0;
-            }
-        }
-        _ => {}
+    let dropped = match pocket.kind_tag() {
+        Tag::KEY => s.try_add_key(front, color).is_some(),
+        Tag::BALL => s.try_add_ball(front, color).is_some(),
+        Tag::BOX => s.try_add_box(front, color).is_some(),
+        _ => false,
+    };
+    if dropped {
+        *s.pocket = Pocket::EMPTY.0;
     }
 }
 
@@ -144,12 +128,12 @@ fn toggle(s: &mut SlotMut<'_>) {
                     && pocket.kind_tag() == Tag::KEY
                     && pocket.color() as u8 == s.door_color[d];
                 if has_matching_key {
-                    s.door_state[d] = DoorState::Open as u8;
+                    s.set_door_state(d, DoorState::Open);
                     s.events.door_unlocked = true;
                 }
             }
-            DoorState::Closed => s.door_state[d] = DoorState::Open as u8,
-            DoorState::Open => s.door_state[d] = DoorState::Closed as u8,
+            DoorState::Closed => s.set_door_state(d, DoorState::Open),
+            DoorState::Open => s.set_door_state(d, DoorState::Closed),
         }
     }
 }

@@ -14,12 +14,28 @@
 //! centre of an `R×R` window, facing "up") including the iterative
 //! visibility-propagation occlusion mask, so symbolic observations are
 //! byte-compatible with the original `gen_obs`.
+//!
+//! ## Two execution paths, one encoding
+//!
+//! The default path streams the state's packed **cell-code overlay grid**
+//! ([`crate::core::state::cellcode`]): every cell's `(tag, colour, state)`
+//! triple is a single `u32` read, so a full-grid observation is O(H·W)
+//! instead of the naive O(H·W·caps) entity-table scans. The original
+//! scan-based implementations are kept verbatim in [`scan`] as the
+//! bitwise-parity oracle — `tests/test_obs_parity.rs` pins both paths equal
+//! over the whole registry, and `benches/obs_throughput.rs` measures the
+//! gap (recorded in `EXPERIMENTS.md` §Perf and `results/BENCH_obs.json`).
+//!
+//! For full-grid rgb the batched engine goes one step further:
+//! [`rgb_incremental`] re-blits only the tiles whose render code changed
+//! since the previous frame (dirty-tile rendering), turning the per-step
+//! `32H × 32W` blit into a handful of tile blits.
 
 use crate::core::components::Direction;
 use crate::core::entities::{CellType, Tag};
 use crate::core::grid::Pos;
-use crate::core::state::EnvSlot;
-use crate::systems::sprites::{SpriteSheet, TILE};
+use crate::core::state::{cellcode, EnvSlot};
+use crate::systems::sprites::{Sprite, SpriteSheet, TILE};
 
 /// Default egocentric window edge (MiniGrid's `agent_view_size`).
 pub const VIEW: usize = 7;
@@ -52,6 +68,17 @@ impl ObsKind {
     }
 }
 
+/// Which implementation computes the observation: the O(1)-per-cell
+/// overlay-grid path (the default) or the original naive entity-table
+/// scans. The scan path is the parity oracle — it exists so tests and the
+/// `obs_throughput` bench can pin and measure the overlay path against it.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ObsPath {
+    #[default]
+    Overlay,
+    NaiveScan,
+}
+
 /// Observation spec: function kind + egocentric window size.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ObsSpec {
@@ -82,23 +109,58 @@ impl ObsSpec {
         self.shape(h, w).iter().product()
     }
 
-    /// Write the observation for one env into `out` (i32 kinds).
-    /// Panics if called on an rgb kind.
+    /// Write the observation for one env into `out` (i32 kinds, overlay
+    /// path). Panics if called on an rgb kind.
     pub fn write_i32(&self, s: &EnvSlot<'_>, out: &mut [i32]) {
-        match self.kind {
-            ObsKind::Symbolic => symbolic(s, out),
-            ObsKind::SymbolicFirstPerson => symbolic_first_person(s, self.view, out),
-            ObsKind::Categorical => categorical(s, out),
-            ObsKind::CategoricalFirstPerson => categorical_first_person(s, self.view, out),
+        self.write_i32_path(ObsPath::Overlay, s, out)
+    }
+
+    /// Write the observation for one env into `out` (u8 / rgb kinds,
+    /// overlay path, full render).
+    pub fn write_u8(&self, s: &EnvSlot<'_>, sheet: &SpriteSheet, out: &mut [u8]) {
+        self.write_u8_path(ObsPath::Overlay, s, sheet, out)
+    }
+
+    /// Path-explicit i32 writer (tests/benches pick the scan oracle here).
+    pub fn write_i32_path(&self, path: ObsPath, s: &EnvSlot<'_>, out: &mut [i32]) {
+        match (path, self.kind) {
+            (ObsPath::Overlay, ObsKind::Symbolic) => symbolic(s, out),
+            (ObsPath::Overlay, ObsKind::SymbolicFirstPerson) => {
+                symbolic_first_person(s, self.view, out)
+            }
+            (ObsPath::Overlay, ObsKind::Categorical) => categorical(s, out),
+            (ObsPath::Overlay, ObsKind::CategoricalFirstPerson) => {
+                categorical_first_person(s, self.view, out)
+            }
+            (ObsPath::NaiveScan, ObsKind::Symbolic) => scan::symbolic(s, out),
+            (ObsPath::NaiveScan, ObsKind::SymbolicFirstPerson) => {
+                scan::symbolic_first_person(s, self.view, out)
+            }
+            (ObsPath::NaiveScan, ObsKind::Categorical) => scan::categorical(s, out),
+            (ObsPath::NaiveScan, ObsKind::CategoricalFirstPerson) => {
+                scan::categorical_first_person(s, self.view, out)
+            }
             _ => panic!("write_i32 called on rgb observation kind"),
         }
     }
 
-    /// Write the observation for one env into `out` (u8 / rgb kinds).
-    pub fn write_u8(&self, s: &EnvSlot<'_>, sheet: &SpriteSheet, out: &mut [u8]) {
-        match self.kind {
-            ObsKind::Rgb => rgb(s, sheet, out),
-            ObsKind::RgbFirstPerson => rgb_first_person(s, self.view, sheet, out),
+    /// Path-explicit u8 writer (tests/benches pick the scan oracle here).
+    pub fn write_u8_path(
+        &self,
+        path: ObsPath,
+        s: &EnvSlot<'_>,
+        sheet: &SpriteSheet,
+        out: &mut [u8],
+    ) {
+        match (path, self.kind) {
+            (ObsPath::Overlay, ObsKind::Rgb) => rgb(s, sheet, out),
+            (ObsPath::Overlay, ObsKind::RgbFirstPerson) => {
+                rgb_first_person(s, self.view, sheet, out)
+            }
+            (ObsPath::NaiveScan, ObsKind::Rgb) => scan::rgb(s, sheet, out),
+            (ObsPath::NaiveScan, ObsKind::RgbFirstPerson) => {
+                scan::rgb_first_person(s, self.view, sheet, out)
+            }
             _ => panic!("write_u8 called on symbolic observation kind"),
         }
     }
@@ -106,56 +168,61 @@ impl ObsSpec {
 
 /// Symbolic (tag, colour, state) encoding of the cell at `p`, optionally
 /// overlaying the player (MiniGrid `encode` semantics; the agent's state
-/// channel is its direction).
+/// channel is its direction). O(1): a single packed overlay read for any
+/// in-grid cell; out-of-range positions fall back to the scan oracle, which
+/// this function matches bit for bit (see [`scan::encode_cell`]).
 #[inline]
 pub fn encode_cell(s: &EnvSlot<'_>, p: Pos, include_player: bool) -> (i32, i32, i32) {
     if include_player && p == s.player() {
-        return (Tag::AGENT, 0 /* red */, s.player_dir as i32);
+        return (Tag::AGENT, 0 /* red */, s.player_dir);
     }
-    if let Some(d) = s.door_at(p) {
-        return (Tag::DOOR, s.door_color[d] as i32, s.door_state[d] as i32);
+    if p.in_bounds(s.h, s.w) {
+        let code = s.overlay[(p.r as usize) * s.w + p.c as usize];
+        return (cellcode::tag(code), cellcode::color(code), cellcode::state(code));
     }
-    if let Some(k) = s.key_at(p) {
-        return (Tag::KEY, s.key_color[k] as i32, 0);
-    }
-    if let Some(b) = s.ball_at(p) {
-        return (Tag::BALL, s.ball_color[b] as i32, 0);
-    }
-    if let Some(b) = s.box_at(p) {
-        return (Tag::BOX, s.box_color[b] as i32, 0);
-    }
-    match s.cell(p) {
-        CellType::Floor => (Tag::EMPTY, 0, 0),
-        CellType::Wall => (Tag::WALL, s.cell_color(p) as i32, 0),
-        CellType::Goal => (Tag::GOAL, 1 /* green */, 0),
-        CellType::Lava => (Tag::LAVA, 0, 0),
+    scan::encode_cell(s, p, include_player)
+}
+
+/// The render code of flat cell `cell`: the packed overlay code with the
+/// player overlaid (full-grid views include the agent). This is the value
+/// the dirty-tile cache compares frames by.
+#[inline]
+pub fn render_code(s: &EnvSlot<'_>, cell: usize) -> u32 {
+    if s.player_pos == cell as i32 {
+        cellcode::pack(Tag::AGENT, 0, s.player_dir as u8)
+    } else {
+        s.overlay[cell]
     }
 }
 
 /// `symbolic`: the canonical full-grid MiniGrid encoding, i32[H, W, 3].
+/// One streaming pass over the overlay plus a single player overwrite.
 pub fn symbolic(s: &EnvSlot<'_>, out: &mut [i32]) {
     debug_assert_eq!(out.len(), s.h * s.w * 3);
-    let mut i = 0;
-    for r in 0..s.h as i32 {
-        for c in 0..s.w as i32 {
-            let (t, col, st) = encode_cell(s, Pos::new(r, c), true);
-            out[i] = t;
-            out[i + 1] = col;
-            out[i + 2] = st;
-            i += 3;
-        }
+    for (cell, &code) in s.overlay.iter().enumerate() {
+        out[cell * 3] = cellcode::tag(code);
+        out[cell * 3 + 1] = cellcode::color(code);
+        out[cell * 3 + 2] = cellcode::state(code);
+    }
+    let pp = s.player_pos;
+    if pp >= 0 && (pp as usize) < s.overlay.len() {
+        let i = pp as usize * 3;
+        out[i] = Tag::AGENT;
+        out[i + 1] = 0;
+        out[i + 2] = s.player_dir;
     }
 }
 
-/// `categorical`: entity tag per cell, i32[H, W].
+/// `categorical`: entity tag per cell, i32[H, W]. One streaming pass over
+/// the overlay plus a single player overwrite.
 pub fn categorical(s: &EnvSlot<'_>, out: &mut [i32]) {
     debug_assert_eq!(out.len(), s.h * s.w);
-    let mut i = 0;
-    for r in 0..s.h as i32 {
-        for c in 0..s.w as i32 {
-            out[i] = encode_cell(s, Pos::new(r, c), true).0;
-            i += 1;
-        }
+    for (cell, &code) in s.overlay.iter().enumerate() {
+        out[cell] = cellcode::tag(code);
+    }
+    let pp = s.player_pos;
+    if pp >= 0 && (pp as usize) < s.overlay.len() {
+        out[pp as usize] = Tag::AGENT;
     }
 }
 
@@ -174,7 +241,8 @@ pub fn view_to_world(player: Pos, dir: Direction, view: usize, vr: usize, vc: us
 /// visibility mask for every view cell, computed once per observation.
 /// (Perf: the naive formulation re-derived `view_to_world` and re-scanned
 /// entity tables ~150×/env/step; hoisting them here cut the first-person
-/// observation cost by ~2× — see EXPERIMENTS.md §Perf.)
+/// observation cost by ~2× — see EXPERIMENTS.md §Perf. The overlay grid
+/// then made each remaining per-cell probe O(1).)
 pub struct ViewFrame {
     pub wr: [i32; VIEW * VIEW],
     pub wc: [i32; VIEW * VIEW],
@@ -183,8 +251,21 @@ pub struct ViewFrame {
 
 impl ViewFrame {
     /// Build the frame: coordinates, per-cell transparency, then MiniGrid's
-    /// iterative visibility propagation (`process_vis`).
+    /// iterative visibility propagation (`process_vis`). Overlay path.
     pub fn compute(s: &EnvSlot<'_>, view: usize) -> ViewFrame {
+        Self::compute_impl(s, view, EnvSlot::opaque)
+    }
+
+    /// Scan-oracle frame: identical propagation over `opaque_scan`.
+    pub fn compute_scan(s: &EnvSlot<'_>, view: usize) -> ViewFrame {
+        Self::compute_impl(s, view, EnvSlot::opaque_scan)
+    }
+
+    fn compute_impl<'a>(
+        s: &EnvSlot<'a>,
+        view: usize,
+        opaque: fn(&EnvSlot<'a>, Pos) -> bool,
+    ) -> ViewFrame {
         debug_assert!(view <= VIEW);
         let mut f = ViewFrame {
             wr: [0; VIEW * VIEW],
@@ -208,7 +289,7 @@ impl ViewFrame {
                 f.wr[i] = r;
                 f.wc[i] = c;
                 let p = Pos::new(r, c);
-                transparent[i] = p.in_bounds(s.h, s.w) && !s.opaque(p);
+                transparent[i] = p.in_bounds(s.h, s.w) && !opaque(s, p);
             }
         }
 
@@ -253,9 +334,17 @@ pub fn visibility_mask(s: &EnvSlot<'_>, view: usize, mask: &mut [bool]) {
 }
 
 /// Encode one first-person view cell from a precomputed frame (the agent's
-/// own cell shows the carried object, as in MiniGrid's `gen_obs`).
+/// own cell shows the carried object, as in MiniGrid's `gen_obs`),
+/// parametrised by the per-cell encoder so the overlay and scan paths share
+/// the frame logic.
 #[inline]
-fn encode_frame_cell(s: &EnvSlot<'_>, f: &ViewFrame, view: usize, i: usize) -> (i32, i32, i32) {
+fn encode_frame_cell_with(
+    s: &EnvSlot<'_>,
+    f: &ViewFrame,
+    view: usize,
+    i: usize,
+    enc: fn(&EnvSlot<'_>, Pos, bool) -> (i32, i32, i32),
+) -> (i32, i32, i32) {
     if !f.visible[i] {
         return (Tag::UNSEEN, 0, 0);
     }
@@ -264,13 +353,13 @@ fn encode_frame_cell(s: &EnvSlot<'_>, f: &ViewFrame, view: usize, i: usize) -> (
         if !pocket.is_empty() {
             return (pocket.kind_tag(), pocket.color() as i32, 0);
         }
-        return encode_cell(s, s.player(), false);
+        return enc(s, s.player(), false);
     }
     let p = Pos::new(f.wr[i], f.wc[i]);
     if !p.in_bounds(s.h, s.w) {
         return (Tag::UNSEEN, 0, 0);
     }
-    encode_cell(s, p, false)
+    enc(s, p, false)
 }
 
 /// `symbolic_first_person`: egocentric window with occlusion, i32[R, R, 3].
@@ -278,7 +367,7 @@ pub fn symbolic_first_person(s: &EnvSlot<'_>, view: usize, out: &mut [i32]) {
     debug_assert_eq!(out.len(), view * view * 3);
     let f = ViewFrame::compute(s, view);
     for i in 0..view * view {
-        let (t, col, st) = encode_frame_cell(s, &f, view, i);
+        let (t, col, st) = encode_frame_cell_with(s, &f, view, i, encode_cell);
         out[i * 3] = t;
         out[i * 3 + 1] = col;
         out[i * 3 + 2] = st;
@@ -290,7 +379,7 @@ pub fn categorical_first_person(s: &EnvSlot<'_>, view: usize, out: &mut [i32]) {
     debug_assert_eq!(out.len(), view * view);
     let f = ViewFrame::compute(s, view);
     for i in 0..view * view {
-        out[i] = encode_frame_cell(s, &f, view, i).0;
+        out[i] = encode_frame_cell_with(s, &f, view, i, encode_cell).0;
     }
 }
 
@@ -305,13 +394,40 @@ fn blit(out: &mut [u8], cols: usize, tr: usize, tc: usize, sprite: &[u8]) {
     }
 }
 
-/// `rgb`: fully-visible image, u8[32H, 32W, 3].
+/// Sprite for a packed render code.
+#[inline]
+fn sprite_for<'a>(sheet: &'a SpriteSheet, code: u32) -> &'a Sprite {
+    sheet.get(cellcode::tag(code), cellcode::color(code) as u8, cellcode::state(code))
+}
+
+/// `rgb`: fully-visible image, u8[32H, 32W, 3] (from-scratch render).
 pub fn rgb(s: &EnvSlot<'_>, sheet: &SpriteSheet, out: &mut [u8]) {
     debug_assert_eq!(out.len(), s.h * s.w * TILE * TILE * 3);
     for r in 0..s.h {
         for c in 0..s.w {
-            let (t, col, st) = encode_cell(s, Pos::new(r as i32, c as i32), true);
-            blit(out, s.w, r, c, sheet.get(t, col as u8, st));
+            let code = render_code(s, r * s.w + c);
+            blit(out, s.w, r, c, sprite_for(sheet, code));
+        }
+    }
+}
+
+/// Dirty-tile `rgb`: re-blit only the tiles whose render code differs from
+/// `prev` (the per-env cache of the codes the image in `out` currently
+/// shows; seed it with [`cellcode::INVALID`] to force a full render).
+/// Updates `prev` in place. After a full render at reset, a step re-blits
+/// only the handful of cells that actually changed — the agent's old and
+/// new cell, a toggled door, a moved obstacle — instead of all `H·W` tiles.
+pub fn rgb_incremental(s: &EnvSlot<'_>, sheet: &SpriteSheet, prev: &mut [u32], out: &mut [u8]) {
+    debug_assert_eq!(prev.len(), s.h * s.w);
+    debug_assert_eq!(out.len(), s.h * s.w * TILE * TILE * 3);
+    for r in 0..s.h {
+        for c in 0..s.w {
+            let cell = r * s.w + c;
+            let code = render_code(s, cell);
+            if prev[cell] != code {
+                prev[cell] = code;
+                blit(out, s.w, r, c, sprite_for(sheet, code));
+            }
         }
     }
 }
@@ -322,8 +438,114 @@ pub fn rgb_first_person(s: &EnvSlot<'_>, view: usize, sheet: &SpriteSheet, out: 
     let f = ViewFrame::compute(s, view);
     for vr in 0..view {
         for vc in 0..view {
-            let (t, col, st) = encode_frame_cell(s, &f, view, vr * view + vc);
+            let (t, col, st) = encode_frame_cell_with(s, &f, view, vr * view + vc, encode_cell);
             blit(out, view, vr, vc, sheet.get(t, col as u8, st));
+        }
+    }
+}
+
+/// The naive-scan oracle: the original O(caps)-per-cell implementations of
+/// every observation function, kept verbatim so the overlay path has a
+/// bitwise reference. `tests/test_obs_parity.rs` pins overlay == scan over
+/// the full registry; `benches/obs_throughput.rs` measures the speedup.
+pub mod scan {
+    use super::*;
+
+    /// Scan-path [`super::encode_cell`]: first-match entity-table scans.
+    #[inline]
+    pub fn encode_cell(s: &EnvSlot<'_>, p: Pos, include_player: bool) -> (i32, i32, i32) {
+        if include_player && p == s.player() {
+            return (Tag::AGENT, 0 /* red */, s.player_dir);
+        }
+        if let Some(d) = s.door_at_scan(p) {
+            return (Tag::DOOR, s.door_color[d] as i32, s.door_state[d] as i32);
+        }
+        if let Some(k) = s.key_at_scan(p) {
+            return (Tag::KEY, s.key_color[k] as i32, 0);
+        }
+        if let Some(b) = s.ball_at_scan(p) {
+            return (Tag::BALL, s.ball_color[b] as i32, 0);
+        }
+        if let Some(b) = s.box_at_scan(p) {
+            return (Tag::BOX, s.box_color[b] as i32, 0);
+        }
+        match s.cell(p) {
+            CellType::Floor => (Tag::EMPTY, 0, 0),
+            CellType::Wall => (Tag::WALL, s.cell_color(p) as i32, 0),
+            CellType::Goal => (Tag::GOAL, 1 /* green */, 0),
+            CellType::Lava => (Tag::LAVA, 0, 0),
+        }
+    }
+
+    /// Scan-path [`super::symbolic`].
+    pub fn symbolic(s: &EnvSlot<'_>, out: &mut [i32]) {
+        debug_assert_eq!(out.len(), s.h * s.w * 3);
+        let mut i = 0;
+        for r in 0..s.h as i32 {
+            for c in 0..s.w as i32 {
+                let (t, col, st) = encode_cell(s, Pos::new(r, c), true);
+                out[i] = t;
+                out[i + 1] = col;
+                out[i + 2] = st;
+                i += 3;
+            }
+        }
+    }
+
+    /// Scan-path [`super::categorical`].
+    pub fn categorical(s: &EnvSlot<'_>, out: &mut [i32]) {
+        debug_assert_eq!(out.len(), s.h * s.w);
+        let mut i = 0;
+        for r in 0..s.h as i32 {
+            for c in 0..s.w as i32 {
+                out[i] = encode_cell(s, Pos::new(r, c), true).0;
+                i += 1;
+            }
+        }
+    }
+
+    /// Scan-path [`super::symbolic_first_person`].
+    pub fn symbolic_first_person(s: &EnvSlot<'_>, view: usize, out: &mut [i32]) {
+        debug_assert_eq!(out.len(), view * view * 3);
+        let f = ViewFrame::compute_scan(s, view);
+        for i in 0..view * view {
+            let (t, col, st) = encode_frame_cell_with(s, &f, view, i, encode_cell);
+            out[i * 3] = t;
+            out[i * 3 + 1] = col;
+            out[i * 3 + 2] = st;
+        }
+    }
+
+    /// Scan-path [`super::categorical_first_person`].
+    pub fn categorical_first_person(s: &EnvSlot<'_>, view: usize, out: &mut [i32]) {
+        debug_assert_eq!(out.len(), view * view);
+        let f = ViewFrame::compute_scan(s, view);
+        for i in 0..view * view {
+            out[i] = encode_frame_cell_with(s, &f, view, i, encode_cell).0;
+        }
+    }
+
+    /// Scan-path [`super::rgb`] (always a full from-scratch render).
+    pub fn rgb(s: &EnvSlot<'_>, sheet: &SpriteSheet, out: &mut [u8]) {
+        debug_assert_eq!(out.len(), s.h * s.w * TILE * TILE * 3);
+        for r in 0..s.h {
+            for c in 0..s.w {
+                let (t, col, st) = encode_cell(s, Pos::new(r as i32, c as i32), true);
+                blit(out, s.w, r, c, sheet.get(t, col as u8, st));
+            }
+        }
+    }
+
+    /// Scan-path [`super::rgb_first_person`].
+    pub fn rgb_first_person(s: &EnvSlot<'_>, view: usize, sheet: &SpriteSheet, out: &mut [u8]) {
+        debug_assert_eq!(out.len(), view * view * TILE * TILE * 3);
+        let f = ViewFrame::compute_scan(s, view);
+        for vr in 0..view {
+            for vc in 0..view {
+                let (t, col, st) =
+                    encode_frame_cell_with(s, &f, view, vr * view + vc, encode_cell);
+                blit(out, view, vr, vc, sheet.get(t, col as u8, st));
+            }
         }
     }
 }
@@ -371,6 +593,78 @@ mod tests {
         for i in 0..64 {
             assert_eq!(cat[i], sym[i * 3]);
         }
+    }
+
+    #[test]
+    fn overlay_path_matches_scan_oracle() {
+        // A state exercising every entity kind + the pocket.
+        let mut st = env();
+        {
+            let mut s = st.slot_mut(0);
+            s.add_door(Pos::new(4, 4), Color::Red, DoorState::Closed);
+            s.add_key(Pos::new(2, 2), Color::Yellow);
+            s.add_ball(Pos::new(5, 5), Color::Blue);
+            s.add_box(Pos::new(2, 5), Color::Purple);
+            s.set_cell(Pos::new(1, 6), CellType::Lava, Color::Red);
+        }
+        let s = st.slot(0);
+        for p in (0..8).flat_map(|r| (0..8).map(move |c| Pos::new(r, c))) {
+            assert_eq!(encode_cell(&s, p, true), scan::encode_cell(&s, p, true), "{p:?}");
+            assert_eq!(encode_cell(&s, p, false), scan::encode_cell(&s, p, false), "{p:?}");
+        }
+        let mut fast = vec![0i32; 8 * 8 * 3];
+        let mut naive = vec![0i32; 8 * 8 * 3];
+        symbolic(&s, &mut fast);
+        scan::symbolic(&s, &mut naive);
+        assert_eq!(fast, naive);
+        let mut fast_fp = vec![0i32; 7 * 7 * 3];
+        let mut naive_fp = vec![0i32; 7 * 7 * 3];
+        symbolic_first_person(&s, 7, &mut fast_fp);
+        scan::symbolic_first_person(&s, 7, &mut naive_fp);
+        assert_eq!(fast_fp, naive_fp);
+        let sheet = SpriteSheet::new();
+        let mut img_fast = vec![0u8; 8 * 8 * TILE * TILE * 3];
+        let mut img_naive = vec![0u8; 8 * 8 * TILE * TILE * 3];
+        rgb(&s, &sheet, &mut img_fast);
+        scan::rgb(&s, &sheet, &mut img_naive);
+        assert_eq!(img_fast, img_naive);
+    }
+
+    #[test]
+    fn rgb_incremental_matches_full_render_across_mutations() {
+        let mut st = env();
+        let sheet = SpriteSheet::new();
+        let mut prev = vec![cellcode::INVALID; 8 * 8];
+        let mut inc = vec![0u8; 8 * 8 * TILE * TILE * 3];
+        let mut full = vec![0u8; 8 * 8 * TILE * TILE * 3];
+        let d = {
+            let mut s = st.slot_mut(0);
+            s.add_door(Pos::new(4, 4), Color::Red, DoorState::Closed)
+        };
+        // Frame 0: full render via the dirty path (all tiles invalid).
+        rgb_incremental(&st.slot(0), &sheet, &mut prev, &mut inc);
+        rgb(&st.slot(0), &sheet, &mut full);
+        assert_eq!(inc, full);
+        // Door toggle, key pickup, obstacle move, player move: each frame
+        // the incremental image must equal a from-scratch render.
+        {
+            let mut s = st.slot_mut(0);
+            s.set_door_state(d, DoorState::Open);
+        }
+        rgb_incremental(&st.slot(0), &sheet, &mut prev, &mut inc);
+        rgb(&st.slot(0), &sheet, &mut full);
+        assert_eq!(inc, full, "door toggle");
+        {
+            let mut s = st.slot_mut(0);
+            let k = s.add_key(Pos::new(2, 2), Color::Yellow);
+            s.remove_key(k); // picked up
+            let b = s.add_ball(Pos::new(5, 5), Color::Blue);
+            s.move_ball(b, Pos::new(5, 6));
+            s.place_player(Pos::new(4, 3), Direction::North);
+        }
+        rgb_incremental(&st.slot(0), &sheet, &mut prev, &mut inc);
+        rgb(&st.slot(0), &sheet, &mut full);
+        assert_eq!(inc, full, "pickup + obstacle + player moves");
     }
 
     #[test]
@@ -448,7 +742,7 @@ mod tests {
         assert_eq!(out[(4 * 7 + 3) * 3], Tag::UNSEEN, "closed door occludes");
         {
             let mut s = st.slot_mut(0);
-            s.door_state[0] = DoorState::Open as u8;
+            s.set_door_state(0, DoorState::Open);
         }
         symbolic_first_person(&st.slot(0), 7, &mut out);
         assert_ne!(out[(4 * 7 + 3) * 3], Tag::UNSEEN, "open door is see-through");

@@ -9,6 +9,7 @@
 
 use crate::core::components::{Color, Direction, DoorState};
 use crate::core::entities::Tag;
+use std::sync::{Arc, OnceLock};
 
 /// Tile edge length in pixels.
 pub const TILE: usize = 32;
@@ -207,6 +208,15 @@ pub struct SpriteSheet {
 }
 
 impl SpriteSheet {
+    /// The process-wide shared sheet. Tiles are immutable once rendered, so
+    /// every engine — and in particular every shard of a
+    /// [`ShardedEnv`](crate::batch::ShardedEnv) — clones one `Arc` instead
+    /// of re-rendering its own ~140 KB sheet per shard.
+    pub fn shared() -> Arc<SpriteSheet> {
+        static SHEET: OnceLock<Arc<SpriteSheet>> = OnceLock::new();
+        SHEET.get_or_init(|| Arc::new(SpriteSheet::new())).clone()
+    }
+
     pub fn new() -> Self {
         let keys = Color::ALL.iter().map(|&c| key_tile(c)).collect();
         let balls = Color::ALL.iter().map(|&c| ball_tile(c)).collect();
@@ -274,6 +284,13 @@ mod tests {
             sheet.get(Tag::DOOR, 0, DoorState::Open as i32)[..],
             sheet.get(Tag::DOOR, 0, DoorState::Locked as i32)[..]
         );
+    }
+
+    #[test]
+    fn shared_sheet_is_one_allocation() {
+        let a = SpriteSheet::shared();
+        let b = SpriteSheet::shared();
+        assert!(Arc::ptr_eq(&a, &b), "every caller must reuse the same sheet");
     }
 
     #[test]

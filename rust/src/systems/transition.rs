@@ -50,7 +50,7 @@ fn move_obstacles(s: &mut SlotMut<'_>) {
                 break;
             }
             if s.walkable(q) {
-                s.ball_pos[bi] = q.encode(s.w);
+                s.move_ball(bi, q);
                 break;
             }
         }
@@ -157,7 +157,7 @@ mod tests {
                 break;
             }
             // keep the ball near the player for the test's purpose
-            s.ball_pos[0] = Pos::new(1, 2).encode(s.w);
+            s.move_ball(0, Pos::new(1, 2));
         }
         assert!(hit, "adjacent obstacle never collided in 100 steps");
     }

@@ -1,0 +1,218 @@
+//! Overlay-grid vs naive-scan oracle parity, registry-wide.
+//!
+//! The packed cell-code overlay (PR 3) changes the *cost* of the
+//! observation/step hot path, never its semantics. This suite pins that
+//! bitwise over all 49 registry ids:
+//!
+//! 1. **State parity** — at every visited state, every spatial query
+//!    (`door_at`/`key_at`/`ball_at`/`box_at`, `walkable`, `opaque`,
+//!    `occupied_by_entity`, `free_for_placement`) and the per-cell encoding
+//!    agree with their `*_scan` oracles on every cell. Since the stepper
+//!    itself is built from these predicates, this also pins trajectory
+//!    equivalence with the pre-overlay engine.
+//! 2. **Observation parity** — the overlay writers produce bytes identical
+//!    to the scan writers for all applicable i32 kinds over 2 episodes ×
+//!    64 envs per id (and for the rgb kinds on the families that exercise
+//!    doors, pickups and moving obstacles).
+//! 3. **Dirty tiles** — the batched engine's incremental rgb buffer equals
+//!    a from-scratch render at every step of rollouts featuring door
+//!    toggles, pickups/drops and obstacle moves, autoresets included.
+
+use navix::batch::{BatchedEnv, ObsBatch};
+use navix::core::grid::Pos;
+use navix::core::state::EnvSlot;
+use navix::rng::{Key, Rng};
+use navix::systems::observations::{self, scan, ObsKind, ObsPath, ObsSpec};
+use navix::systems::sprites::SpriteSheet;
+
+const BATCH: usize = 64;
+const EPISODES: u32 = 2;
+/// Timeout clamp: keeps 2 random-walk episodes per id bounded (see the
+/// registry conformance sweep for the same pattern).
+const TIMEOUT_CAP: u32 = 80;
+
+const I32_KINDS: [ObsKind; 4] = [
+    ObsKind::Symbolic,
+    ObsKind::SymbolicFirstPerson,
+    ObsKind::Categorical,
+    ObsKind::CategoricalFirstPerson,
+];
+
+/// Families whose dynamics exercise every rgb-relevant mutation: DoorKey
+/// (door toggles + key pickup), Dynamic-Obstacles (obstacle moves), Fetch
+/// (pickup/drop + wrong pickups), LockedRoom (many doors), GoToDoor
+/// (border doors), BlockedUnlockPickup (ball drop + box pickup).
+const RGB_IDS: [&str; 6] = [
+    "Navix-DoorKey-8x8-v0",
+    "Navix-Dynamic-Obstacles-6x6",
+    "Navix-Fetch-5x5-N2-v0",
+    "Navix-LockedRoom-v0",
+    "Navix-GoToDoor-5x5-v0",
+    "Navix-BlockedUnlockPickup-v0",
+];
+
+/// Every query and the cell encoding vs. the scan oracle, every cell.
+fn assert_state_parity(id: &str, step: usize, i: usize, s: &EnvSlot<'_>) {
+    let player = s.player();
+    for r in 0..s.h as i32 {
+        for c in 0..s.w as i32 {
+            let p = Pos::new(r, c);
+            let ctx = |what: &str| format!("{id} step {step} env {i} {what} at {p:?}");
+            assert_eq!(
+                observations::encode_cell(s, p, true),
+                scan::encode_cell(s, p, true),
+                "{}",
+                ctx("encode_cell")
+            );
+            assert_eq!(s.door_at(p), s.door_at_scan(p), "{}", ctx("door_at"));
+            assert_eq!(s.key_at(p), s.key_at_scan(p), "{}", ctx("key_at"));
+            assert_eq!(s.ball_at(p), s.ball_at_scan(p), "{}", ctx("ball_at"));
+            assert_eq!(s.box_at(p), s.box_at_scan(p), "{}", ctx("box_at"));
+            assert_eq!(s.walkable(p), s.walkable_scan(p), "{}", ctx("walkable"));
+            assert_eq!(s.opaque(p), s.opaque_scan(p), "{}", ctx("opaque"));
+            assert_eq!(
+                s.occupied_by_entity(p),
+                s.occupied_by_entity_scan(p),
+                "{}",
+                ctx("occupied_by_entity")
+            );
+            assert_eq!(
+                s.free_for_placement(p, player),
+                s.free_for_placement_scan(p, player),
+                "{}",
+                ctx("free_for_placement")
+            );
+        }
+    }
+}
+
+/// Overlay vs scan output for every applicable i32 kind, one env slot.
+fn assert_i32_obs_parity(id: &str, step: usize, i: usize, s: &EnvSlot<'_>) {
+    for kind in I32_KINDS {
+        let spec = ObsSpec::new(kind);
+        let n = spec.len(s.h, s.w);
+        let mut fast = vec![0i32; n];
+        let mut naive = vec![0i32; n];
+        spec.write_i32_path(ObsPath::Overlay, s, &mut fast);
+        spec.write_i32_path(ObsPath::NaiveScan, s, &mut naive);
+        assert_eq!(
+            fast,
+            naive,
+            "{id} step {step} env {i}: {} diverged from the scan oracle",
+            kind.name()
+        );
+    }
+}
+
+/// Drive `id` through 2 episodes × `b` envs of random actions, calling
+/// `check` on a rotating env slot every step and on every slot every 16th.
+fn rollout_checking(id: &str, b: usize, check: impl Fn(&str, usize, usize, &EnvSlot<'_>)) {
+    let mut cfg = navix::make(id).unwrap_or_else(|e| panic!("{id}: {e}"));
+    cfg.max_steps = cfg.max_steps.min(TIMEOUT_CAP);
+    let max_steps = cfg.max_steps as usize;
+    let mut env = BatchedEnv::new(cfg, b, Key::new(2027));
+    for i in 0..b {
+        check(id, 0, i, &env.state.slot(i));
+    }
+    let mut episodes = vec![0u32; b];
+    let mut rng = Rng::new(17);
+    let mut actions = vec![0u8; b];
+    let step_budget = (EPISODES as usize + 1) * (max_steps + 2);
+    let mut steps = 0;
+    while episodes.iter().any(|&e| e < EPISODES) && steps < step_budget {
+        for a in actions.iter_mut() {
+            *a = rng.below(7) as u8;
+        }
+        env.step(&actions);
+        steps += 1;
+        check(id, steps, steps % b, &env.state.slot(steps % b));
+        if steps % 16 == 0 {
+            for i in 0..b {
+                check(id, steps, i, &env.state.slot(i));
+            }
+        }
+        for i in 0..b {
+            if env.timestep.step_type[i].is_last() {
+                episodes[i] += 1;
+            }
+        }
+    }
+}
+
+#[test]
+fn every_id_state_queries_match_scan_oracle() {
+    for id in navix::list_envs() {
+        rollout_checking(id, 8, assert_state_parity);
+    }
+}
+
+#[test]
+fn every_id_i32_observations_match_scan_oracle() {
+    for id in navix::list_envs() {
+        rollout_checking(id, BATCH, assert_i32_obs_parity);
+    }
+}
+
+/// Overlay vs scan output for both rgb kinds, one env slot.
+fn assert_rgb_obs_parity(id: &str, step: usize, i: usize, s: &EnvSlot<'_>) {
+    let sheet = SpriteSheet::shared();
+    for kind in [ObsKind::Rgb, ObsKind::RgbFirstPerson] {
+        let spec = ObsSpec::new(kind);
+        let n = spec.len(s.h, s.w);
+        let mut fast = vec![0u8; n];
+        let mut naive = vec![0u8; n];
+        spec.write_u8_path(ObsPath::Overlay, s, &sheet, &mut fast);
+        spec.write_u8_path(ObsPath::NaiveScan, s, &sheet, &mut naive);
+        assert_eq!(
+            fast,
+            naive,
+            "{id} step {step} env {i}: {} diverged from the scan oracle",
+            kind.name()
+        );
+    }
+}
+
+#[test]
+fn rgb_observations_match_scan_oracle() {
+    for id in RGB_IDS {
+        rollout_checking(id, 4, assert_rgb_obs_parity);
+    }
+}
+
+#[test]
+fn batched_engine_dirty_tiles_match_from_scratch_renders() {
+    // Random rollouts over the door/pickup/obstacle families with the
+    // engine's Rgb observation: the incrementally-maintained buffer must
+    // equal a from-scratch scan render after every step (door toggles,
+    // pickups, drops, obstacle moves and autoresets included).
+    let sheet = SpriteSheet::shared();
+    for id in RGB_IDS {
+        let b = 4;
+        let mut cfg = navix::make(id).unwrap();
+        cfg.max_steps = cfg.max_steps.min(TIMEOUT_CAP);
+        let stride = ObsSpec::new(ObsKind::Rgb).len(cfg.h, cfg.w);
+        let mut env = BatchedEnv::new(cfg.with_observation(ObsKind::Rgb), b, Key::new(99));
+        let mut scratch = vec![0u8; stride];
+        let mut rng = Rng::new(5);
+        let mut actions = vec![0u8; b];
+        for step in 0..120 {
+            for a in actions.iter_mut() {
+                *a = rng.below(7) as u8;
+            }
+            env.step(&actions);
+            for i in 0..b {
+                scan::rgb(&env.state.slot(i), &sheet, &mut scratch);
+                match &env.obs {
+                    ObsBatch::U8(v) => {
+                        assert_eq!(
+                            &v[i * stride..(i + 1) * stride],
+                            &scratch[..],
+                            "{id} step {step} env {i}: dirty-tile buffer diverged"
+                        );
+                    }
+                    _ => unreachable!(),
+                }
+            }
+        }
+    }
+}
