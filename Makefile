@@ -5,7 +5,7 @@
 # path afterwards. The Rust targets work without artifacts — PJRT-backed
 # paths degrade or skip gracefully (see rust/src/runtime/mod.rs).
 
-.PHONY: build test verify artifacts bench-smoke fmt clippy
+.PHONY: build test verify artifacts bench-smoke train-smoke fmt clippy
 
 build:
 	cargo build --release
@@ -28,6 +28,12 @@ bench-smoke:
 	cargo bench --bench fig5_batch -- --smoke
 	cargo bench --bench fig5_sharded -- --smoke
 	cargo bench --bench obs_throughput -- --smoke
+
+# Exactly what CI's train-smoke job runs: end-to-end PPO training
+# throughput (serial vs sharded vs pipelined), BENCH_train.json, and the
+# NAVIX_TRAIN_SMOKE_FLOOR steps/s gate.
+train-smoke:
+	cargo bench --bench fig6_ppo_agents -- --smoke
 
 fmt:
 	cargo fmt --all

@@ -1,27 +1,151 @@
 //! Paper Fig. 6: computation cost of training N PPO agents in parallel
 //! (each with 16 envs). The paper trains up to 2048 agents × 1M steps on an
-//! A100 in <50s (≈670M steps/s); this single-core testbed sweeps N ∈
-//! {1,2,4,8} at `NAVIX_FIG6_STEPS` steps each (default 8192) and reports
-//! the same accounting, plus the MiniGrid-baseline comparison (a single
-//! PPO agent on the thread-per-env vector baseline).
+//! A100 in <50s (≈670M steps/s); this testbed sweeps N ∈ {1,2,4,8} at
+//! `NAVIX_FIG6_STEPS` steps each (default 8192) and reports the same
+//! accounting, plus the MiniGrid-baseline comparison (a single PPO agent on
+//! the thread-per-env vector baseline).
+//!
+//! Every run also emits the **training-throughput report**
+//! (`results/BENCH_train.json`, same `{name, header, rows}` schema as
+//! `BENCH_obs.json`): end-to-end PPO steps/s per execution mode — serial
+//! batched, sharded, and the double-buffered pipeline — with the batch
+//! size, shard count and commit recorded per row.
+//!
+//! `--smoke`: the CI train-smoke job's mode — small runs only, and the
+//! build **fails** if the best mode's steps/s drops below the recorded
+//! floor (`NAVIX_TRAIN_SMOKE_FLOOR`, conservative default 5000), so a
+//! training hot-path regression (e.g. the batched GEMM degrading to
+//! per-sample inference) cannot ship silently. `NAVIX_BENCH_FAST=1`
+//! keeps the suite-wide convention: trimmed workload, full reports, no
+//! assertion.
 
 use navix::agents::ppo::{Ppo, PpoConfig};
 use navix::agents::preprocess_obs;
 use navix::baseline::AsyncVectorEnv;
 use navix::bench_harness::Report;
-use navix::coordinator::multi_agent::train_parallel_ppo;
+use navix::config::ExecConfig;
+use navix::coordinator::multi_agent::{
+    train_parallel_ppo, train_parallel_ppo_exec, MultiAgentResult,
+};
 use navix::nn::sample_categorical;
 use navix::rng::Key;
 
+/// Commit id for the BENCH_train.json rows: CI's GITHUB_SHA, an explicit
+/// NAVIX_COMMIT, or a best-effort `git rev-parse` (offline-safe fallback:
+/// "unknown").
+fn commit_id() -> String {
+    for var in ["NAVIX_COMMIT", "GITHUB_SHA"] {
+        if let Ok(v) = std::env::var(var) {
+            if !v.is_empty() {
+                return v.chars().take(12).collect();
+            }
+        }
+    }
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .map(|o| String::from_utf8_lossy(&o.stdout).trim().to_string())
+        .unwrap_or_else(|| "unknown".into())
+}
+
+struct TrainReport {
+    report: Report,
+    commit: String,
+    best_sps: f64,
+}
+
+impl TrainReport {
+    fn new() -> Self {
+        TrainReport {
+            report: Report::new(
+                "train",
+                &[
+                    "mode",
+                    "agents",
+                    "envs_per_agent",
+                    "total_envs",
+                    "shards",
+                    "steps",
+                    "wall_s",
+                    "steps_per_s",
+                    "mean_return",
+                    "commit",
+                ],
+            ),
+            commit: commit_id(),
+            best_sps: 0.0,
+        }
+    }
+
+    fn row(&mut self, mode: &str, shards: &str, r: &MultiAgentResult) {
+        self.best_sps = self.best_sps.max(r.steps_per_second);
+        self.report.row(&[
+            mode.to_string(),
+            format!("{}", r.n_agents),
+            format!("{}", r.envs_per_agent),
+            format!("{}", r.n_agents * r.envs_per_agent),
+            shards.to_string(),
+            format!("{}", r.total_env_steps),
+            format!("{:.2}", r.wall_secs),
+            format!("{:.0}", r.steps_per_second),
+            format!("{:.3}", r.mean_final_return),
+            self.commit.clone(),
+        ]);
+    }
+}
+
 fn main() {
-    let fast = std::env::var("NAVIX_BENCH_FAST").is_ok();
+    // --smoke is the CI gate (small runs + hard floor assert); the
+    // suite-wide NAVIX_BENCH_FAST convention only trims the workload and
+    // never asserts.
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let fast = smoke || std::env::var("NAVIX_BENCH_FAST").is_ok();
+    let env_id = "Navix-Empty-8x8-v0";
     let steps: u64 = std::env::var("NAVIX_FIG6_STEPS")
         .ok()
         .and_then(|v| v.parse().ok())
-        .unwrap_or(if fast { 2048 } else { 8192 });
-    let max_agents = if fast { 2 } else { 8 };
-    let env_id = "Navix-Empty-8x8-v0";
+        .unwrap_or(if fast { 4096 } else { 8192 });
 
+    // --- Training-throughput report: serial vs sharded vs pipelined, one
+    // agent × 16 envs (the unit every Fig.-6 point is built from).
+    let mut train = TrainReport::new();
+    let serial = train_parallel_ppo(env_id, 1, 16, steps, 0).unwrap();
+    train.row("serial", "1", &serial);
+    let sharded_exec = ExecConfig { pipeline: false, ..ExecConfig::default() };
+    let sharded =
+        train_parallel_ppo_exec(env_id, 1, 16, steps, 0, Some(sharded_exec)).unwrap();
+    train.row("sharded", "auto", &sharded);
+    let piped_exec = ExecConfig { pipeline: true, ..ExecConfig::default() };
+    let piped = train_parallel_ppo_exec(env_id, 1, 16, steps, 0, Some(piped_exec)).unwrap();
+    train.row("pipelined", "auto", &piped);
+
+    if smoke {
+        train.report.save();
+        // Regression gate: the best execution mode must clear the recorded
+        // floor. The default is deliberately far below a healthy release
+        // build (end-to-end PPO runs in the tens of thousands of steps/s)
+        // so only a genuine training hot-path regression trips it on
+        // shared CI runners.
+        let floor: f64 = std::env::var("NAVIX_TRAIN_SMOKE_FLOOR")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(5_000.0);
+        assert!(
+            train.best_sps >= floor,
+            "end-to-end PPO training throughput {:.0} steps/s is below the \
+             recorded floor of {floor:.0} steps/s",
+            train.best_sps
+        );
+        println!(
+            "\nsmoke gate: PPO training ≥ {floor:.0} steps/s (best mode measured {:.0}) — OK",
+            train.best_sps
+        );
+        return;
+    }
+
+    let max_agents = if fast { 2 } else { 8 };
     let mut report = Report::new(
         "fig6_ppo_agents",
         &["agents", "total_envs", "wall_s", "steps_per_s", "mean_return"],
@@ -109,6 +233,8 @@ fn main() {
         "-".into(),
     ]);
     report.save();
+    train.report.save();
     println!("\n(paper §4.2: NAVIX 2048 agents ≈ 670M steps/s vs MiniGrid 3.1K steps/s;");
-    println!(" compare the aggregate steps/s column here for the same crossover shape)");
+    println!(" compare the aggregate steps/s column here for the same crossover shape,");
+    println!(" and BENCH_train.json for the serial/sharded/pipelined mode comparison)");
 }

@@ -5,11 +5,19 @@
 //! steps then `parallel_steps` updates, each on a fresh minibatch — the
 //! cadence the paper reports as a pure-runtime win with unchanged final
 //! performance.
+//!
+//! Since PR 4 both halves run on the batched NN core: acting performs one
+//! `[B, obs_dim]` Q-forward per env step (the ε draws happen first, in env
+//! order, so the RNG stream — and therefore every trajectory — is
+//! bit-identical to the per-sample path), and the update runs three
+//! batched forwards + one batched backward per minibatch through reusable
+//! workspaces instead of `3·B` single-row passes.
 
-use crate::agents::{preprocess_obs, CurvePoint, ReturnTracker, TrainLog};
+use crate::agents::{ensure, preprocess_obs, CurvePoint, ReturnTracker, TrainLog};
 use crate::agents::replay::Replay;
 use crate::batch::BatchedEnv;
 use crate::nn::adam::{clip_global_norm, Adam};
+use crate::nn::mlp::BatchCache;
 use crate::nn::{argmax, Activation, Mlp};
 use crate::rng::Rng;
 
@@ -47,6 +55,24 @@ impl Default for DqnConfig {
     }
 }
 
+/// Reusable batched-update/acting workspaces (grown on first use).
+#[derive(Default)]
+struct Workspace {
+    /// `[B × obs_dim]` acting features.
+    act_x: Vec<f32>,
+    /// `[B]` explore/exploit decisions of the current step.
+    explore: Vec<bool>,
+    /// `[MB × n_actions]` output gradient (one non-zero per row).
+    dq: Vec<f32>,
+    /// `[MB]` TD targets.
+    y: Vec<f32>,
+    /// `[MB]` argmax of the online net on s' (Double-DQN selection).
+    a_star: Vec<usize>,
+    grads: Vec<f32>,
+    cache: BatchCache,
+    icache: BatchCache,
+}
+
 /// Double-DQN agent with target network.
 pub struct Dqn {
     pub cfg: DqnConfig,
@@ -59,6 +85,7 @@ pub struct Dqn {
     rng: Rng,
     env_steps: u64,
     updates: u64,
+    ws: Workspace,
 }
 
 impl Dqn {
@@ -68,7 +95,19 @@ impl Dqn {
         let q_target = q.clone();
         let opt = Adam::new(q.params.len(), cfg.lr);
         let replay = Replay::new(cfg.buffer_capacity, obs_dim);
-        Dqn { cfg, q, q_target, opt, replay, obs_dim, n_actions, rng, env_steps: 0, updates: 0 }
+        Dqn {
+            cfg,
+            q,
+            q_target,
+            opt,
+            replay,
+            obs_dim,
+            n_actions,
+            rng,
+            env_steps: 0,
+            updates: 0,
+            ws: Workspace::default(),
+        }
     }
 
     /// Linear ε schedule: 1.0 → final_eps over exploration_fraction of the
@@ -79,45 +118,102 @@ impl Dqn {
         (1.0 - frac).max(0.0) * (1.0 - self.cfg.final_eps) + self.cfg.final_eps
     }
 
-    fn act_eps(&mut self, obs: &[i32], eps: f32) -> u8 {
-        if self.rng.uniform_f32() < eps {
-            return self.rng.below(self.n_actions as u32) as u8;
+    /// ε-greedy actions for the whole batch: the ε draws happen first in
+    /// env order (the per-sample path's exact RNG sequence — one uniform,
+    /// plus one `below` only when exploring), then a single batched greedy
+    /// forward serves every exploiting env.
+    fn act_eps_batch(&mut self, prev_obs: &[Vec<i32>], eps: f32, actions: &mut [u8]) {
+        let (b, d, na) = (prev_obs.len(), self.obs_dim, self.n_actions);
+        ensure(&mut self.ws.act_x, b * d);
+        ensure(&mut self.ws.explore, b);
+        let mut any_greedy = false;
+        for i in 0..b {
+            let explore = self.rng.uniform_f32() < eps;
+            self.ws.explore[i] = explore;
+            if explore {
+                actions[i] = self.rng.below(na as u32) as u8;
+            } else {
+                any_greedy = true;
+            }
         }
-        let mut x = vec![0.0f32; self.obs_dim];
-        preprocess_obs(obs, &mut x);
-        argmax(&self.q.infer(&x)) as u8
+        // Early in training ε ≈ 1 and every env explores — skip the
+        // forward entirely, like the per-sample path did.
+        if !any_greedy {
+            return;
+        }
+        {
+            let ws = &mut self.ws;
+            for (i, o) in prev_obs.iter().enumerate() {
+                preprocess_obs(o, &mut ws.act_x[i * d..(i + 1) * d]);
+            }
+        }
+        self.q.forward_batch(&self.ws.act_x[..b * d], b, &mut self.ws.icache);
+        let qs = self.ws.icache.out();
+        for i in 0..b {
+            if !self.ws.explore[i] {
+                actions[i] = argmax(&qs[i * na..(i + 1) * na]) as u8;
+            }
+        }
     }
 
-    /// One gradient update on a sampled minibatch. Returns the TD loss.
+    /// One gradient update on a sampled minibatch — three batched forwards
+    /// (Double-DQN selection, target evaluation, online Q) and one batched
+    /// backward through reusable workspaces. Bit-identical to the original
+    /// per-sample loop. Returns the TD loss.
     pub fn update(&mut self) -> f32 {
         if self.replay.len() < self.cfg.batch_size.max(self.cfg.learning_starts) {
             return 0.0;
         }
         let batch = self.replay.sample(self.cfg.batch_size, &mut self.rng);
-        let d = self.obs_dim;
-        let mut grads = vec![0.0f32; self.q.params.len()];
-        let mut cache = crate::nn::mlp::Cache::default();
-        let mut loss = 0.0f32;
-        let scale = 1.0 / self.cfg.batch_size as f32;
-        for k in 0..self.cfg.batch_size {
-            let x = &batch.obs[k * d..(k + 1) * d];
-            let nx = &batch.next_obs[k * d..(k + 1) * d];
-            // Double-DQN target: online net picks, target net evaluates.
-            let next_online = self.q.infer(nx);
-            let a_star = argmax(&next_online);
-            let next_target = self.q_target.infer(nx);
-            let y = batch.rewards[k]
-                + self.cfg.gamma * batch.nonterminal[k] * next_target[a_star];
-            let qs = self.q.forward(x, &mut cache);
-            let a = batch.actions[k] as usize;
-            let err = qs[a] - y;
-            loss += 0.5 * err * err;
-            let mut dq = vec![0.0f32; self.n_actions];
-            dq[a] = scale * err;
-            self.q.backward(&cache, &dq, &mut grads);
+        let (na, mbs) = (self.n_actions, self.cfg.batch_size);
+        let plen = self.q.params.len();
+        let scale = 1.0 / mbs as f32;
+        {
+            let ws = &mut self.ws;
+            ensure(&mut ws.dq, mbs * na);
+            ensure(&mut ws.y, mbs);
+            ensure(&mut ws.a_star, mbs);
+            ensure(&mut ws.grads, plen);
+            ws.grads[..plen].fill(0.0);
         }
-        clip_global_norm(&mut grads, self.cfg.max_grad_norm);
-        self.opt.step(&mut self.q.params, &grads);
+
+        // Double-DQN target: online net picks…
+        self.q.forward_batch(&batch.next_obs, mbs, &mut self.ws.icache);
+        {
+            let ws = &mut self.ws;
+            let nq = ws.icache.out();
+            for k in 0..mbs {
+                ws.a_star[k] = argmax(&nq[k * na..(k + 1) * na]);
+            }
+        }
+        // …target net evaluates.
+        self.q_target.forward_batch(&batch.next_obs, mbs, &mut self.ws.icache);
+        {
+            let ws = &mut self.ws;
+            let nt = ws.icache.out();
+            for k in 0..mbs {
+                ws.y[k] = batch.rewards[k]
+                    + self.cfg.gamma * batch.nonterminal[k] * nt[k * na + ws.a_star[k]];
+            }
+        }
+
+        // Online Q on s, TD error on the taken action, batched backward.
+        self.q.forward_batch(&batch.obs, mbs, &mut self.ws.cache);
+        let mut loss = 0.0f32;
+        {
+            let ws = &mut self.ws;
+            let qs = ws.cache.out();
+            ws.dq[..mbs * na].fill(0.0);
+            for k in 0..mbs {
+                let a = batch.actions[k] as usize;
+                let err = qs[k * na + a] - ws.y[k];
+                loss += 0.5 * err * err;
+                ws.dq[k * na + a] = scale * err;
+            }
+        }
+        self.q.backward_batch(&mut self.ws.cache, &self.ws.dq[..mbs * na], &mut self.ws.grads);
+        clip_global_norm(&mut self.ws.grads[..plen], self.cfg.max_grad_norm);
+        self.opt.step(&mut self.q.params, &self.ws.grads[..plen]);
         self.updates += 1;
         if self.updates % self.cfg.target_update_freq as u64 == 0 {
             self.q_target = self.q.clone();
@@ -138,9 +234,7 @@ impl Dqn {
             let mut chunk_loss = 0.0;
             for _ in 0..self.cfg.parallel_steps {
                 let eps = self.epsilon(total_steps);
-                for i in 0..b {
-                    actions[i] = self.act_eps(&prev_obs[i], eps);
-                }
+                self.act_eps_batch(&prev_obs, eps, &mut actions);
                 env.step(&actions);
                 for i in 0..b {
                     let next = env.obs.env_i32(b, i);

@@ -22,13 +22,27 @@ pub use sac::{Sac, SacConfig};
 pub const OBS_DIM: usize = 7 * 7 * 3;
 
 /// Normalise a symbolic i32 observation into `[0, 1]`-ish floats
-/// (tag ≤ 10, colour ≤ 5, state ≤ 3 → divide by 10).
+/// (tag ≤ 10, colour ≤ 5, state ≤ 3 → divide by 10). Elementwise, so it
+/// works on a single `[obs_dim]` row or a whole `[B × obs_dim]` block.
 pub fn preprocess_obs(obs: &[i32], out: &mut [f32]) {
     debug_assert_eq!(obs.len(), out.len());
     for (o, &x) in out.iter_mut().zip(obs) {
         *o = x as f32 / 10.0;
     }
 }
+
+/// Featurise an entire observation batch into one contiguous
+/// `[B × obs_dim]` f32 block in a single pass — the shared entry point of
+/// every batched trainer (PPO/DQN/SAC and the XLA path). Panics on rgb
+/// batches, like [`crate::batch::ObsBatch::as_i32`].
+pub fn preprocess_obs_batch(obs: &crate::batch::ObsBatch, out: &mut [f32]) {
+    preprocess_obs(obs.as_i32(), out)
+}
+
+/// Grow-only resize for the trainers' reusable workspace buffers — the
+/// one shared helper, defined next to the [`crate::nn::mlp::BatchCache`]
+/// buffers it manages.
+pub(crate) use crate::nn::mlp::ensure;
 
 /// Tracks completed-episode returns with a sliding window, the metric every
 /// Fig.-7 curve reports.

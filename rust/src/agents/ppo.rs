@@ -8,11 +8,33 @@
 //! [`crate::coordinator::trainer`]; both share this module's rollout and
 //! GAE machinery, and a cross-check test asserts they optimise the same
 //! objective.
+//!
+//! ## Execution paths (PR 4)
+//!
+//! The hot paths are **batch-oriented**: [`Ppo::collect_rollout`]
+//! featurises the whole observation batch into one contiguous
+//! `[B, obs_dim]` buffer and runs a single batched actor/critic forward per
+//! env step, and [`Ppo::update`] drives minibatch GEMMs through
+//! [`Mlp::forward_batch`]/[`Mlp::backward_batch`] with reusable workspaces
+//! (zero per-sample allocation). [`Ppo::collect_rollout_pipelined`] adds
+//! the double-buffered pipeline: actions are submitted to a
+//! [`PipelinedEnv`]'s stepper thread and the critic/log-prob/bookkeeping
+//! half of inference overlaps the environment step.
+//!
+//! All of this is **bit-for-bit identical** to the original per-sample
+//! implementation, which is kept as [`Ppo::collect_rollout_serial`] /
+//! [`Ppo::update_serial`] — the parity oracle that
+//! `tests/test_train_parity.rs` pins the batched + pipelined paths
+//! against (the batch kernels preserve summation order; see
+//! [`crate::nn::mlp`]).
 
-use crate::agents::{gae, preprocess_obs, CurvePoint, ReturnTracker, TrainLog};
-use crate::batch::BatchStepper;
+use crate::agents::{
+    ensure, gae, preprocess_obs, preprocess_obs_batch, CurvePoint, ReturnTracker, TrainLog,
+};
+use crate::batch::{BatchStepper, PipelinedEnv};
 use crate::core::actions::Action;
 use crate::nn::adam::{clip_global_norm, Adam};
+use crate::nn::mlp::BatchCache;
 use crate::nn::{log_softmax, sample_categorical, softmax, Activation, Mlp};
 use crate::rng::Rng;
 
@@ -56,11 +78,37 @@ impl Default for PpoConfig {
 }
 
 /// Update-step diagnostics.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct PpoMetrics {
     pub pg_loss: f32,
     pub v_loss: f32,
     pub entropy: f32,
+}
+
+/// Reusable buffers for the batched hot paths. Grown on first use; a
+/// training loop performs no per-sample heap allocation after the first
+/// iteration (the satellite fix for the `probs`/`logits` scratch vectors
+/// the old per-sample update reallocated every sample).
+#[derive(Default)]
+struct Workspace {
+    /// `[B × obs_dim]` acting features of the current step.
+    x: Vec<f32>,
+    /// `[B]` actions handed to the stepper.
+    actions: Vec<u8>,
+    /// `[n_actions]` log-softmax row scratch.
+    lp: Vec<f32>,
+    /// `[n_actions]` softmax row scratch.
+    probs: Vec<f32>,
+    acache: BatchCache,
+    ccache: BatchCache,
+    /// `[MB × obs_dim]` gathered minibatch features.
+    mb_x: Vec<f32>,
+    /// `[MB × n_actions]` actor output gradient.
+    mb_dlogits: Vec<f32>,
+    /// `[MB × 1]` critic output gradient.
+    mb_dv: Vec<f32>,
+    a_grads: Vec<f32>,
+    c_grads: Vec<f32>,
 }
 
 /// Native PPO agent: separate actor/critic MLPs (2×64 as in the paper).
@@ -73,6 +121,7 @@ pub struct Ppo {
     obs_dim: usize,
     n_actions: usize,
     rng: Rng,
+    ws: Workspace,
 }
 
 /// Rollout storage (time-major `[T × B]`).
@@ -113,13 +162,164 @@ impl Ppo {
         let critic = Mlp::new(&[obs_dim, 64, 64, 1], cfg.activation, &mut rng);
         let actor_opt = Adam::new(actor.params.len(), cfg.lr);
         let critic_opt = Adam::new(critic.params.len(), cfg.lr);
-        Ppo { cfg, actor, critic, actor_opt, critic_opt, obs_dim, n_actions, rng }
+        Ppo {
+            cfg,
+            actor,
+            critic,
+            actor_opt,
+            critic_opt,
+            obs_dim,
+            n_actions,
+            rng,
+            ws: Workspace::default(),
+        }
     }
 
-    /// Collect one on-policy rollout from `env` into `ro`. Generic over the
-    /// execution backend: the single-threaded [`crate::batch::BatchedEnv`]
-    /// or the sharded multi-core [`crate::batch::ShardedEnv`].
+    /// Sample one action per env from the `[b × n_actions]` logits in the
+    /// actor cache, writing `ws.actions` and `ro.actions[base..base+b]`.
+    /// Draws from `rng` in ascending env order — the exact draw sequence of
+    /// the serial path's per-sample [`sample_categorical`].
+    fn sample_actions(&mut self, ro: &mut Rollout, base: usize, b: usize) {
+        let na = self.n_actions;
+        let ws = &mut self.ws;
+        let logits = ws.acache.out();
+        for i in 0..b {
+            let lrow = &logits[i * na..(i + 1) * na];
+            softmax(lrow, &mut ws.probs[..na]);
+            let a = self.rng.categorical(&ws.probs[..na]) as u8;
+            ws.actions[i] = a;
+            ro.actions[base + i] = a;
+        }
+    }
+
+    /// The bookkeeping half of acting for one step: log-probs from the
+    /// actor cache, values from the critic cache, features into the
+    /// rollout. Needs nothing from the environment, so the pipelined path
+    /// runs it inside the overlap window while the workers step.
+    fn record_step(&mut self, ro: &mut Rollout, base: usize, b: usize) {
+        let (d, na) = (self.obs_dim, self.n_actions);
+        let ws = &mut self.ws;
+        ro.obs[base * d..(base + b) * d].copy_from_slice(&ws.x[..b * d]);
+        let logits = ws.acache.out();
+        let values = ws.ccache.out();
+        for i in 0..b {
+            let idx = base + i;
+            log_softmax(&logits[i * na..(i + 1) * na], &mut ws.lp[..na]);
+            ro.logp[idx] = ws.lp[ro.actions[idx] as usize];
+            ro.values[idx] = values[i];
+        }
+    }
+
+    /// Record the post-step timestep metadata for one rollout row.
+    fn record_timestep(
+        ro: &mut Rollout,
+        tracker: &mut ReturnTracker,
+        ts: &crate::core::timestep::BatchedTimestep,
+        base: usize,
+        b: usize,
+    ) {
+        for i in 0..b {
+            let idx = base + i;
+            ro.rewards[idx] = ts.reward[i];
+            ro.discounts[idx] = ts.discount[i];
+            let last = ts.step_type[i].is_last();
+            ro.boundaries[idx] = last;
+            if last {
+                tracker.push(ts.episodic_return[i]);
+            }
+        }
+    }
+
+    fn finish_rollout(&mut self, ro: &mut Rollout, b: usize) {
+        ro.last_values[..b].copy_from_slice(&self.ws.ccache.out()[..b]);
+        gae::gae(
+            &ro.rewards,
+            &ro.values,
+            &ro.last_values,
+            &ro.discounts,
+            &ro.boundaries,
+            self.cfg.gamma,
+            self.cfg.gae_lambda,
+            &mut ro.advantages,
+            &mut ro.targets,
+        );
+        if self.cfg.normalize_advantage {
+            gae::normalize(&mut ro.advantages);
+        }
+    }
+
+    fn ensure_rollout_ws(&mut self, b: usize) {
+        let (d, na) = (self.obs_dim, self.n_actions);
+        let ws = &mut self.ws;
+        ensure(&mut ws.x, b * d);
+        ensure(&mut ws.actions, b);
+        ensure(&mut ws.lp, na);
+        ensure(&mut ws.probs, na);
+    }
+
+    /// Collect one on-policy rollout from `env` into `ro` with batched
+    /// inference: the whole `ObsBatch` is featurised into one contiguous
+    /// `[B, obs_dim]` buffer and a single actor + critic forward serves all
+    /// envs. Generic over the execution backend ([`crate::batch::BatchedEnv`],
+    /// [`crate::batch::ShardedEnv`], or a [`PipelinedEnv`] used
+    /// synchronously). Bit-identical to [`Ppo::collect_rollout_serial`].
     pub fn collect_rollout<E: BatchStepper + ?Sized>(
+        &mut self,
+        env: &mut E,
+        ro: &mut Rollout,
+        tracker: &mut ReturnTracker,
+    ) {
+        let (t_len, b, d) = (self.cfg.rollout_len, env.batch_size(), self.obs_dim);
+        self.ensure_rollout_ws(b);
+        for t in 0..t_len {
+            let base = t * b;
+            preprocess_obs_batch(env.obs(), &mut self.ws.x[..b * d]);
+            self.actor.forward_batch(&self.ws.x[..b * d], b, &mut self.ws.acache);
+            self.critic.forward_batch(&self.ws.x[..b * d], b, &mut self.ws.ccache);
+            self.sample_actions(ro, base, b);
+            self.record_step(ro, base, b);
+            env.step(&self.ws.actions[..b]);
+            Ppo::record_timestep(ro, tracker, env.timestep(), base, b);
+        }
+        preprocess_obs_batch(env.obs(), &mut self.ws.x[..b * d]);
+        self.critic.forward_batch(&self.ws.x[..b * d], b, &mut self.ws.ccache);
+        self.finish_rollout(ro, b);
+    }
+
+    /// [`Ppo::collect_rollout`] with the double-buffered pipeline: step
+    /// *t*'s actions are submitted to the stepper thread as soon as the
+    /// actor has sampled them, and the critic forward + log-prob/rollout
+    /// bookkeeping for step *t* run while the workers advance the
+    /// environments to *t + 1*. Same trajectories, same RNG stream, same
+    /// floats — only the schedule changes.
+    pub fn collect_rollout_pipelined(
+        &mut self,
+        env: &mut PipelinedEnv,
+        ro: &mut Rollout,
+        tracker: &mut ReturnTracker,
+    ) {
+        let (t_len, b, d) = (self.cfg.rollout_len, env.batch_size(), self.obs_dim);
+        self.ensure_rollout_ws(b);
+        for t in 0..t_len {
+            let base = t * b;
+            preprocess_obs_batch(env.obs(), &mut self.ws.x[..b * d]);
+            self.actor.forward_batch(&self.ws.x[..b * d], b, &mut self.ws.acache);
+            self.sample_actions(ro, base, b);
+            env.submit(&self.ws.actions[..b]);
+            // Overlap window: everything below reads only step t's snapshot.
+            self.critic.forward_batch(&self.ws.x[..b * d], b, &mut self.ws.ccache);
+            self.record_step(ro, base, b);
+            env.sync();
+            Ppo::record_timestep(ro, tracker, env.timestep(), base, b);
+        }
+        preprocess_obs_batch(env.obs(), &mut self.ws.x[..b * d]);
+        self.critic.forward_batch(&self.ws.x[..b * d], b, &mut self.ws.ccache);
+        self.finish_rollout(ro, b);
+    }
+
+    /// The original per-sample rollout, kept verbatim as the parity oracle
+    /// for the batched and pipelined paths (`tests/test_train_parity.rs`).
+    pub fn collect_rollout_serial<E: BatchStepper + ?Sized>(
         &mut self,
         env: &mut E,
         ro: &mut Rollout,
@@ -144,17 +344,7 @@ impl Ppo {
                 actions[i] = a as u8;
             }
             env.step(&actions);
-            let ts = env.timestep();
-            for i in 0..b {
-                let idx = t * b + i;
-                ro.rewards[idx] = ts.reward[i];
-                ro.discounts[idx] = ts.discount[i];
-                let last = ts.step_type[i].is_last();
-                ro.boundaries[idx] = last;
-                if last {
-                    tracker.push(ts.episodic_return[i]);
-                }
-            }
+            Ppo::record_timestep(ro, tracker, env.timestep(), t * b, b);
         }
         for i in 0..b {
             preprocess_obs(env.obs().env_i32(b, i), &mut x);
@@ -176,8 +366,125 @@ impl Ppo {
         }
     }
 
-    /// Run the clipped-objective update epochs over the rollout.
+    /// Run the clipped-objective update epochs over the rollout with
+    /// minibatch GEMMs: one batched actor forward/backward and one batched
+    /// critic forward/backward per minibatch, through reusable workspaces.
+    /// Bit-identical to [`Ppo::update_serial`] (same RNG stream, same
+    /// per-parameter summation order — see [`crate::nn::mlp`]).
     pub fn update(&mut self, ro: &Rollout) -> PpoMetrics {
+        let n = ro.actions.len();
+        let (d, na) = (self.obs_dim, self.n_actions);
+        let mb_size = (n / self.cfg.minibatches).max(1);
+        let mut order: Vec<usize> = (0..n).collect();
+        let mut metrics = PpoMetrics::default();
+        let mut count = 0.0f32;
+
+        let (alen, clen) = (self.actor.params.len(), self.critic.params.len());
+        {
+            let ws = &mut self.ws;
+            ensure(&mut ws.a_grads, alen);
+            ensure(&mut ws.c_grads, clen);
+            ensure(&mut ws.mb_x, mb_size * d);
+            ensure(&mut ws.mb_dlogits, mb_size * na);
+            ensure(&mut ws.mb_dv, mb_size);
+            ensure(&mut ws.lp, na);
+            ensure(&mut ws.probs, na);
+        }
+
+        for _ in 0..self.cfg.epochs {
+            self.rng.shuffle(&mut order);
+            for mb in order.chunks(mb_size) {
+                let m = mb.len();
+                let scale = 1.0 / m as f32;
+                {
+                    let ws = &mut self.ws;
+                    ws.a_grads[..alen].fill(0.0);
+                    ws.c_grads[..clen].fill(0.0);
+                    for (k, &idx) in mb.iter().enumerate() {
+                        ws.mb_x[k * d..(k + 1) * d]
+                            .copy_from_slice(&ro.obs[idx * d..(idx + 1) * d]);
+                    }
+                }
+
+                // Actor: batched forward, per-row clipped-objective
+                // gradient, one batched backward.
+                self.actor.forward_batch(&self.ws.mb_x[..m * d], m, &mut self.ws.acache);
+                {
+                    let ws = &mut self.ws;
+                    let logits = ws.acache.out();
+                    for (k, &idx) in mb.iter().enumerate() {
+                        let lrow = &logits[k * na..(k + 1) * na];
+                        let a = ro.actions[idx] as usize;
+                        let adv = ro.advantages[idx];
+                        let old_lp = ro.logp[idx];
+                        log_softmax(lrow, &mut ws.lp[..na]);
+                        softmax(lrow, &mut ws.probs[..na]);
+                        let ratio = (ws.lp[a] - old_lp).exp();
+                        let clipped =
+                            ratio.clamp(1.0 - self.cfg.clip_eps, 1.0 + self.cfg.clip_eps);
+                        let unclipped_obj = ratio * adv;
+                        let clipped_obj = clipped * adv;
+                        // d(-min)/dlogp = -adv*ratio where the unclipped
+                        // branch is active, 0 otherwise.
+                        let pg_coef =
+                            if unclipped_obj <= clipped_obj { -adv * ratio } else { 0.0 };
+                        let entropy: f32 = -ws.probs[..na]
+                            .iter()
+                            .zip(&ws.lp[..na])
+                            .map(|(&p, &l)| p * l)
+                            .sum::<f32>();
+                        for j in 0..na {
+                            let ind = if j == a { 1.0 } else { 0.0 };
+                            let dlogp_a = ind - ws.probs[j];
+                            let dentropy = -ws.probs[j] * (ws.lp[j] + entropy);
+                            ws.mb_dlogits[k * na + j] =
+                                scale * (pg_coef * dlogp_a - self.cfg.ent_coef * dentropy);
+                        }
+                        metrics.pg_loss += -unclipped_obj.min(clipped_obj);
+                        metrics.entropy += entropy;
+                        count += 1.0;
+                    }
+                }
+                self.actor.backward_batch(
+                    &mut self.ws.acache,
+                    &self.ws.mb_dlogits[..m * na],
+                    &mut self.ws.a_grads,
+                );
+
+                // Critic: batched forward, per-row value error, one batched
+                // backward over the `[m × 1]` output gradient.
+                self.critic.forward_batch(&self.ws.mb_x[..m * d], m, &mut self.ws.ccache);
+                {
+                    let ws = &mut self.ws;
+                    let values = ws.ccache.out();
+                    for (k, &idx) in mb.iter().enumerate() {
+                        let verr = values[k] - ro.targets[idx];
+                        ws.mb_dv[k] = scale * self.cfg.vf_coef * verr;
+                        metrics.v_loss += 0.5 * verr * verr;
+                    }
+                }
+                self.critic.backward_batch(
+                    &mut self.ws.ccache,
+                    &self.ws.mb_dv[..m],
+                    &mut self.ws.c_grads,
+                );
+
+                clip_global_norm(&mut self.ws.a_grads[..alen], self.cfg.max_grad_norm);
+                clip_global_norm(&mut self.ws.c_grads[..clen], self.cfg.max_grad_norm);
+                self.actor_opt.step(&mut self.actor.params, &self.ws.a_grads[..alen]);
+                self.critic_opt.step(&mut self.critic.params, &self.ws.c_grads[..clen]);
+            }
+        }
+        metrics.pg_loss /= count;
+        metrics.v_loss /= count;
+        metrics.entropy /= count;
+        metrics
+    }
+
+    /// The original per-sample update, kept as the parity oracle (with the
+    /// scratch vectors hoisted out of the inner loop — the old code
+    /// reallocated `lp`/`probs`/`dlogits` for every sample).
+    pub fn update_serial(&mut self, ro: &Rollout) -> PpoMetrics {
         let n = ro.actions.len();
         let mb_size = (n / self.cfg.minibatches).max(1);
         let mut order: Vec<usize> = (0..n).collect();
@@ -188,6 +495,9 @@ impl Ppo {
         let mut c_grads = vec![0.0f32; self.critic.params.len()];
         let mut cache = crate::nn::mlp::Cache::default();
         let mut vcache = crate::nn::mlp::Cache::default();
+        let mut lp = vec![0.0f32; self.n_actions];
+        let mut probs = vec![0.0f32; self.n_actions];
+        let mut dlogits = vec![0.0f32; self.n_actions];
 
         for _ in 0..self.cfg.epochs {
             self.rng.shuffle(&mut order);
@@ -203,22 +513,17 @@ impl Ppo {
 
                     // actor
                     let logits = self.actor.forward(x, &mut cache);
-                    let mut lp = vec![0.0; self.n_actions];
                     log_softmax(&logits, &mut lp);
-                    let mut probs = vec![0.0; self.n_actions];
                     softmax(&logits, &mut probs);
                     let ratio = (lp[a] - old_lp).exp();
                     let clipped =
                         ratio.clamp(1.0 - self.cfg.clip_eps, 1.0 + self.cfg.clip_eps);
                     let unclipped_obj = ratio * adv;
                     let clipped_obj = clipped * adv;
-                    // d(-min)/dlogp = -adv*ratio where the unclipped branch
-                    // is active, 0 otherwise.
                     let pg_coef =
                         if unclipped_obj <= clipped_obj { -adv * ratio } else { 0.0 };
                     let entropy: f32 =
                         -probs.iter().zip(&lp).map(|(&p, &l)| p * l).sum::<f32>();
-                    let mut dlogits = vec![0.0f32; self.n_actions];
                     for j in 0..self.n_actions {
                         let ind = if j == a { 1.0 } else { 0.0 };
                         let dlogp_a = ind - probs[j];
@@ -274,6 +579,28 @@ impl Ppo {
         log
     }
 
+    /// [`Ppo::train`] over the double-buffered pipeline: environment
+    /// stepping overlaps the critic/bookkeeping half of inference. Same
+    /// training curve as the serial path for a fixed seed.
+    pub fn train_pipelined(&mut self, env: &mut PipelinedEnv, total_steps: u64) -> TrainLog {
+        let mut log = TrainLog::default();
+        let mut tracker = ReturnTracker::new(64);
+        let steps_per_iter = (self.cfg.rollout_len * env.batch_size()) as u64;
+        let iters = total_steps.div_ceil(steps_per_iter);
+        let mut ro = Rollout::new(self.cfg.rollout_len, env.batch_size(), self.obs_dim);
+        for it in 0..iters {
+            self.collect_rollout_pipelined(env, &mut ro, &mut tracker);
+            let m = self.update(&ro);
+            log.curve.push(CurvePoint {
+                env_steps: (it + 1) * steps_per_iter,
+                mean_return: tracker.mean(),
+                loss: m.pg_loss + m.v_loss,
+            });
+        }
+        log.episodes = tracker.episodes;
+        log
+    }
+
     /// Greedy action for evaluation.
     pub fn act_greedy(&self, obs: &[i32]) -> Action {
         let mut x = vec![0.0f32; self.obs_dim];
@@ -317,6 +644,38 @@ mod tests {
         assert_ne!(before, ppo.actor.params);
         // fresh policy over 7 actions: entropy near ln(7) ≈ 1.95
         assert!(m.entropy > 1.0 && m.entropy < 2.0, "entropy {}", m.entropy);
+    }
+
+    #[test]
+    fn batched_rollout_and_update_match_the_serial_oracle() {
+        // The unit-level pin (the integration sweep across env families
+        // lives in tests/test_train_parity.rs): same seed → the batched
+        // path reproduces the per-sample path exactly.
+        let cfg = make("Navix-Empty-Random-6x6").unwrap();
+        let pcfg =
+            PpoConfig { rollout_len: 12, minibatches: 3, epochs: 2, ..Default::default() };
+        let mut env_a = BatchedEnv::new(cfg.clone(), 4, Key::new(5));
+        let mut env_b = BatchedEnv::new(cfg, 4, Key::new(5));
+        let mut ppo_a = Ppo::new(pcfg.clone(), 147, 7, 9);
+        let mut ppo_b = Ppo::new(pcfg, 147, 7, 9);
+        let mut ro_a = Rollout::new(12, 4, 147);
+        let mut ro_b = Rollout::new(12, 4, 147);
+        let mut tr_a = ReturnTracker::new(8);
+        let mut tr_b = ReturnTracker::new(8);
+        for _ in 0..2 {
+            ppo_a.collect_rollout_serial(&mut env_a, &mut ro_a, &mut tr_a);
+            ppo_b.collect_rollout(&mut env_b, &mut ro_b, &mut tr_b);
+            assert_eq!(ro_a.obs, ro_b.obs);
+            assert_eq!(ro_a.actions, ro_b.actions);
+            assert_eq!(ro_a.logp, ro_b.logp);
+            assert_eq!(ro_a.values, ro_b.values);
+            assert_eq!(ro_a.advantages, ro_b.advantages);
+            let m_a = ppo_a.update_serial(&ro_a);
+            let m_b = ppo_b.update(&ro_b);
+            assert_eq!(m_a, m_b);
+            assert_eq!(ppo_a.actor.params, ppo_b.actor.params);
+            assert_eq!(ppo_a.critic.params, ppo_b.critic.params);
+        }
     }
 
     #[test]

@@ -5,12 +5,20 @@
 //! automatic temperature tuning towards a target entropy expressed as a
 //! ratio of the uniform-policy entropy (the Table-9 "target entropy ratio").
 //! Uses the same 128-steps/128-updates cadence as DQN.
+//!
+//! Since PR 4 acting is one `[B, obs_dim]` actor forward per env step
+//! (sampling draws stay in env order, so trajectories are bit-identical to
+//! the per-sample path) and the update runs its six network passes as
+//! batched forwards/backwards over reusable workspaces — the outputs each
+//! later stage needs (`next_logits`, `q1s`, `q2s`) are copied out of the
+//! shared cache between passes.
 
-use crate::agents::{preprocess_obs, CurvePoint, ReturnTracker, TrainLog};
+use crate::agents::{ensure, preprocess_obs, CurvePoint, ReturnTracker, TrainLog};
 use crate::agents::replay::Replay;
 use crate::batch::BatchedEnv;
 use crate::nn::adam::{clip_global_norm, Adam};
-use crate::nn::{log_softmax, sample_categorical, softmax, Activation, Mlp};
+use crate::nn::mlp::BatchCache;
+use crate::nn::{log_softmax, softmax, Activation, Mlp};
 use crate::rng::Rng;
 
 /// SAC hyperparameters (Table 9 "fitted" knobs).
@@ -50,6 +58,32 @@ impl Default for SacConfig {
     }
 }
 
+/// Reusable batched-update/acting workspaces (grown on first use).
+#[derive(Default)]
+struct Workspace {
+    /// `[B × obs_dim]` acting features.
+    act_x: Vec<f32>,
+    /// `[na]` softmax/log-softmax row scratch.
+    p: Vec<f32>,
+    lp: Vec<f32>,
+    /// `[MB × na]` copies of batched outputs needed across passes.
+    next_logits: Vec<f32>,
+    nq1: Vec<f32>,
+    q1s: Vec<f32>,
+    q2s: Vec<f32>,
+    /// `[MB]` TD targets and per-sample critic errors.
+    y: Vec<f32>,
+    e1: Vec<f32>,
+    e2: Vec<f32>,
+    /// `[MB × na]` output gradients.
+    dq: Vec<f32>,
+    dlogits: Vec<f32>,
+    q1_grads: Vec<f32>,
+    q2_grads: Vec<f32>,
+    a_grads: Vec<f32>,
+    cache: BatchCache,
+}
+
 /// Discrete SAC agent.
 pub struct Sac {
     pub cfg: SacConfig,
@@ -69,6 +103,7 @@ pub struct Sac {
     n_actions: usize,
     rng: Rng,
     env_steps: u64,
+    ws: Workspace,
 }
 
 impl Sac {
@@ -105,6 +140,7 @@ impl Sac {
             n_actions,
             rng,
             env_steps: 0,
+            ws: Workspace::default(),
         }
     }
 
@@ -112,95 +148,174 @@ impl Sac {
         self.log_alpha.exp()
     }
 
-    fn act_sample(&mut self, obs: &[i32]) -> u8 {
-        let mut x = vec![0.0f32; self.obs_dim];
-        preprocess_obs(obs, &mut x);
-        let logits = self.actor.infer(&x);
-        sample_categorical(&logits, &mut self.rng) as u8
+    /// Sample actions for the whole batch from one batched actor forward.
+    /// Sampling draws stay in env order — the per-sample path's exact RNG
+    /// sequence.
+    fn act_sample_batch(&mut self, prev_obs: &[Vec<i32>], actions: &mut [u8]) {
+        let (b, d, na) = (prev_obs.len(), self.obs_dim, self.n_actions);
+        ensure(&mut self.ws.act_x, b * d);
+        ensure(&mut self.ws.p, na);
+        {
+            let ws = &mut self.ws;
+            for (i, o) in prev_obs.iter().enumerate() {
+                preprocess_obs(o, &mut ws.act_x[i * d..(i + 1) * d]);
+            }
+        }
+        self.actor.forward_batch(&self.ws.act_x[..b * d], b, &mut self.ws.cache);
+        let ws = &mut self.ws;
+        let logits = ws.cache.out();
+        for i in 0..b {
+            softmax(&logits[i * na..(i + 1) * na], &mut ws.p[..na]);
+            actions[i] = self.rng.categorical(&ws.p[..na]) as u8;
+        }
     }
 
-    /// One SAC update (both critics, actor, temperature). Returns critic
-    /// loss.
+    /// One SAC update (both critics, actor, temperature), as six batched
+    /// network passes over reusable workspaces — bit-identical to the
+    /// original per-sample loop. Returns critic loss.
     pub fn update(&mut self) -> f32 {
         if self.replay.len() < self.cfg.batch_size.max(self.cfg.learning_starts) {
             return 0.0;
         }
         let batch = self.replay.sample(self.cfg.batch_size, &mut self.rng);
-        let d = self.obs_dim;
-        let na = self.n_actions;
+        let (na, mbs) = (self.n_actions, self.cfg.batch_size);
         let alpha = self.alpha();
-        let scale = 1.0 / self.cfg.batch_size as f32;
-
-        let mut q1_grads = vec![0.0f32; self.q1.params.len()];
-        let mut q2_grads = vec![0.0f32; self.q2.params.len()];
-        let mut a_grads = vec![0.0f32; self.actor.params.len()];
-        let mut cache = crate::nn::mlp::Cache::default();
-        let mut critic_loss = 0.0f32;
-        let mut entropy_sum = 0.0f32;
-
-        for k in 0..self.cfg.batch_size {
-            let x = &batch.obs[k * d..(k + 1) * d];
-            let nx = &batch.next_obs[k * d..(k + 1) * d];
-            let a = batch.actions[k] as usize;
-
-            // --- critic target: expected (twin-min) value of s' under π.
-            //
-            // Deliberate deviation from the textbook soft backup: the
-            // −α·logπ entropy term is kept in the ACTOR objective only.
-            // With sparse terminal rewards, a soft value backup pays an
-            // entropy annuity α·H/(1−γ) for *not terminating*, so any
-            // non-vanishing temperature teaches the agent to avoid the
-            // goal (we observed exactly this collapse). Dropping the term
-            // from the backup bounds Q by the true return while the actor
-            // stays entropy-regularised — the variant common in discrete-
-            // SAC implementations on episodic tasks.
-            let next_logits = self.actor.infer(nx);
-            let mut np = vec![0.0; na];
-            softmax(&next_logits, &mut np);
-            let nq1 = self.q1_target.infer(nx);
-            let nq2 = self.q2_target.infer(nx);
-            let v_next: f32 = (0..na).map(|j| np[j] * nq1[j].min(nq2[j])).sum();
-            let y = batch.rewards[k] + self.cfg.gamma * batch.nonterminal[k] * v_next;
-
-            // --- critic updates (MSE on the taken action).
-            let q1s = self.q1.forward(x, &mut cache);
-            let e1 = q1s[a] - y;
-            let mut dq = vec![0.0f32; na];
-            dq[a] = scale * e1;
-            self.q1.backward(&cache, &dq, &mut q1_grads);
-
-            let q2s = self.q2.forward(x, &mut cache);
-            let e2 = q2s[a] - y;
-            dq.fill(0.0);
-            dq[a] = scale * e2;
-            self.q2.backward(&cache, &dq, &mut q2_grads);
-            critic_loss += 0.5 * (e1 * e1 + e2 * e2);
-
-            // --- actor: minimise E_a[α log π − min Q] (Q detached).
-            let logits = self.actor.forward(x, &mut cache);
-            let mut p = vec![0.0; na];
-            let mut lp = vec![0.0; na];
-            softmax(&logits, &mut p);
-            log_softmax(&logits, &mut lp);
-            let minq: Vec<f32> = (0..na).map(|j| q1s[j].min(q2s[j])).collect();
-            let inner: Vec<f32> = (0..na).map(|j| alpha * lp[j] - minq[j]).collect();
-            let expected: f32 = (0..na).map(|j| p[j] * inner[j]).sum();
-            // dL/dlogit_j = p_j [ (inner_j + α) − Σ p (inner + α) ]
-            //             = p_j [ inner_j − expected ]  (+α cancels)
-            let mut dlogits = vec![0.0f32; na];
-            for j in 0..na {
-                dlogits[j] = scale * p[j] * (inner[j] - expected);
+        let scale = 1.0 / mbs as f32;
+        let (q1len, q2len, alen) =
+            (self.q1.params.len(), self.q2.params.len(), self.actor.params.len());
+        {
+            let ws = &mut self.ws;
+            let row_bufs = [
+                &mut ws.next_logits,
+                &mut ws.nq1,
+                &mut ws.q1s,
+                &mut ws.q2s,
+                &mut ws.dq,
+                &mut ws.dlogits,
+            ];
+            for buf in row_bufs {
+                ensure(buf, mbs * na);
             }
-            self.actor.backward(&cache, &dlogits, &mut a_grads);
-            entropy_sum += -(0..na).map(|j| p[j] * lp[j]).sum::<f32>();
+            for buf in [&mut ws.y, &mut ws.e1, &mut ws.e2] {
+                ensure(buf, mbs);
+            }
+            ensure(&mut ws.p, na);
+            ensure(&mut ws.lp, na);
+            ensure(&mut ws.q1_grads, q1len);
+            ensure(&mut ws.q2_grads, q2len);
+            ensure(&mut ws.a_grads, alen);
+            ws.q1_grads[..q1len].fill(0.0);
+            ws.q2_grads[..q2len].fill(0.0);
+            ws.a_grads[..alen].fill(0.0);
         }
 
-        clip_global_norm(&mut q1_grads, 10.0);
-        clip_global_norm(&mut q2_grads, 10.0);
-        clip_global_norm(&mut a_grads, 10.0);
-        self.q1_opt.step(&mut self.q1.params, &q1_grads);
-        self.q2_opt.step(&mut self.q2.params, &q2_grads);
-        self.actor_opt.step(&mut self.actor.params, &a_grads);
+        // --- critic target: expected (twin-min) value of s' under π.
+        //
+        // Deliberate deviation from the textbook soft backup: the
+        // −α·logπ entropy term is kept in the ACTOR objective only.
+        // With sparse terminal rewards, a soft value backup pays an
+        // entropy annuity α·H/(1−γ) for *not terminating*, so any
+        // non-vanishing temperature teaches the agent to avoid the
+        // goal (we observed exactly this collapse). Dropping the term
+        // from the backup bounds Q by the true return while the actor
+        // stays entropy-regularised — the variant common in discrete-
+        // SAC implementations on episodic tasks.
+        self.actor.forward_batch(&batch.next_obs, mbs, &mut self.ws.cache);
+        self.ws.next_logits[..mbs * na].copy_from_slice(&self.ws.cache.out()[..mbs * na]);
+        self.q1_target.forward_batch(&batch.next_obs, mbs, &mut self.ws.cache);
+        self.ws.nq1[..mbs * na].copy_from_slice(&self.ws.cache.out()[..mbs * na]);
+        self.q2_target.forward_batch(&batch.next_obs, mbs, &mut self.ws.cache);
+        {
+            let ws = &mut self.ws;
+            let nq2 = ws.cache.out();
+            for k in 0..mbs {
+                softmax(&ws.next_logits[k * na..(k + 1) * na], &mut ws.p[..na]);
+                let mut v_next = 0.0f32;
+                for j in 0..na {
+                    v_next += ws.p[j] * ws.nq1[k * na + j].min(nq2[k * na + j]);
+                }
+                ws.y[k] = batch.rewards[k] + self.cfg.gamma * batch.nonterminal[k] * v_next;
+            }
+        }
+
+        // --- critic updates (MSE on the taken action).
+        self.q1.forward_batch(&batch.obs, mbs, &mut self.ws.cache);
+        {
+            let ws = &mut self.ws;
+            ws.q1s[..mbs * na].copy_from_slice(&ws.cache.out()[..mbs * na]);
+            ws.dq[..mbs * na].fill(0.0);
+            for k in 0..mbs {
+                let a = batch.actions[k] as usize;
+                let e = ws.q1s[k * na + a] - ws.y[k];
+                ws.e1[k] = e;
+                ws.dq[k * na + a] = scale * e;
+            }
+        }
+        self.q1.backward_batch(
+            &mut self.ws.cache,
+            &self.ws.dq[..mbs * na],
+            &mut self.ws.q1_grads,
+        );
+        self.q2.forward_batch(&batch.obs, mbs, &mut self.ws.cache);
+        {
+            let ws = &mut self.ws;
+            ws.q2s[..mbs * na].copy_from_slice(&ws.cache.out()[..mbs * na]);
+            ws.dq[..mbs * na].fill(0.0);
+            for k in 0..mbs {
+                let a = batch.actions[k] as usize;
+                let e = ws.q2s[k * na + a] - ws.y[k];
+                ws.e2[k] = e;
+                ws.dq[k * na + a] = scale * e;
+            }
+        }
+        self.q2.backward_batch(
+            &mut self.ws.cache,
+            &self.ws.dq[..mbs * na],
+            &mut self.ws.q2_grads,
+        );
+        // Per-sample, e1²+e2² paired like the serial loop (same sum order).
+        let mut critic_loss = 0.0f32;
+        for k in 0..mbs {
+            let (e1, e2) = (self.ws.e1[k], self.ws.e2[k]);
+            critic_loss += 0.5 * (e1 * e1 + e2 * e2);
+        }
+
+        // --- actor: minimise E_a[α log π − min Q] (Q detached).
+        self.actor.forward_batch(&batch.obs, mbs, &mut self.ws.cache);
+        let mut entropy_sum = 0.0f32;
+        {
+            let ws = &mut self.ws;
+            let logits = ws.cache.out();
+            for k in 0..mbs {
+                let lrow = &logits[k * na..(k + 1) * na];
+                softmax(lrow, &mut ws.p[..na]);
+                log_softmax(lrow, &mut ws.lp[..na]);
+                let mut expected = 0.0f32;
+                for j in 0..na {
+                    let inner = alpha * ws.lp[j] - ws.q1s[k * na + j].min(ws.q2s[k * na + j]);
+                    expected += ws.p[j] * inner;
+                }
+                // dL/dlogit_j = p_j [ (inner_j + α) − Σ p (inner + α) ]
+                //             = p_j [ inner_j − expected ]  (+α cancels)
+                for j in 0..na {
+                    let inner = alpha * ws.lp[j] - ws.q1s[k * na + j].min(ws.q2s[k * na + j]);
+                    ws.dlogits[k * na + j] = scale * ws.p[j] * (inner - expected);
+                }
+                entropy_sum += -(0..na).map(|j| ws.p[j] * ws.lp[j]).sum::<f32>();
+            }
+        }
+        self.actor.backward_batch(
+            &mut self.ws.cache,
+            &self.ws.dlogits[..mbs * na],
+            &mut self.ws.a_grads,
+        );
+
+        clip_global_norm(&mut self.ws.q1_grads[..q1len], 10.0);
+        clip_global_norm(&mut self.ws.q2_grads[..q2len], 10.0);
+        clip_global_norm(&mut self.ws.a_grads[..alen], 10.0);
+        self.q1_opt.step(&mut self.q1.params, &self.ws.q1_grads[..q1len]);
+        self.q2_opt.step(&mut self.q2.params, &self.ws.q2_grads[..q2len]);
+        self.actor_opt.step(&mut self.actor.params, &self.ws.a_grads[..alen]);
 
         // --- temperature: push entropy toward the target.
         let mean_entropy = entropy_sum * scale;
@@ -227,9 +342,7 @@ impl Sac {
         while self.env_steps < total_steps {
             let mut chunk_loss = 0.0;
             for _ in 0..self.cfg.parallel_steps {
-                for i in 0..b {
-                    actions[i] = self.act_sample(&prev_obs[i]);
-                }
+                self.act_sample_batch(&prev_obs, &mut actions);
                 env.step(&actions);
                 for i in 0..b {
                     let next = env.obs.env_i32(b, i);

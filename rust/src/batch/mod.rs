@@ -12,6 +12,12 @@
 //! one dispatch amortised over `B` contiguous state slots vs. one Python
 //! object graph per environment in the baseline ([`crate::baseline`]).
 //!
+//! Three execution layers compose on top of the same state: [`BatchedEnv`]
+//! (single-threaded `vmap` analog), [`sharded::ShardedEnv`] (multi-core
+//! `pmap` analog) and [`pipeline::PipelinedEnv`] (double-buffered rollout
+//! pipeline that overlaps stepping with learner compute) — all bitwise
+//! equivalent for a fixed seed.
+//!
 //! The observation/step hot path is **scan-free**: spatial queries and the
 //! per-cell encoding read the state's packed cell-code overlay grid (one
 //! `u32` per cell, kept write-through consistent — see
@@ -28,8 +34,10 @@
 //! contiguous shards ([`sharded::ShardedEnv`], the `pmap` analog) is
 //! bit-identical to the single-threaded engine for any shard count.
 
+pub mod pipeline;
 pub mod sharded;
 
+pub use pipeline::PipelinedEnv;
 pub use sharded::ShardedEnv;
 
 use std::sync::Arc;
@@ -79,6 +87,16 @@ impl ObsBatch {
                 &v[i * s..(i + 1) * s]
             }
             ObsBatch::I32(_) => panic!("symbolic observation accessed as u8"),
+        }
+    }
+
+    /// The whole batch as one contiguous `[B × stride]` i32 slice (panics
+    /// on rgb batches). The batched trainers featurise this in one pass
+    /// instead of `B` per-env slices.
+    pub fn as_i32(&self) -> &[i32] {
+        match self {
+            ObsBatch::I32(v) => v,
+            ObsBatch::U8(_) => panic!("rgb observation accessed as i32"),
         }
     }
 }

@@ -1,0 +1,336 @@
+//! `PipelinedEnv` — the double-buffered rollout pipeline.
+//!
+//! PR 3 made the env/observation hot path O(1) per cell; the remaining
+//! serial cost in training was structural: the learner and the simulator
+//! took strict turns (`act → step → act → …`). This module overlaps them,
+//! following the Large Batch Simulation design (Shacklett et al.): a
+//! dedicated stepper thread owns the execution engine (any
+//! [`BatchStepper`] — the single-threaded [`BatchedEnv`] or the sharded
+//! multi-core [`crate::batch::ShardedEnv`]), and the learner talks to it
+//! through **two swap buffers** of gathered timesteps + observations:
+//!
+//! * [`PipelinedEnv::submit`] hands the step-*t* actions to the stepper
+//!   thread and returns immediately — the workers advance the envs to
+//!   *t + 1* in the **back** buffer;
+//! * meanwhile the learner keeps reading the **front** buffer (step *t*'s
+//!   observations stay valid) to run the critic, log-prob and bookkeeping
+//!   half of inference;
+//! * [`PipelinedEnv::sync`] blocks until the step finishes and swaps the
+//!   buffers (two `Vec` pointer swaps — no copy on the learner side).
+//!
+//! ## Determinism
+//!
+//! The pipeline changes *when* work happens, never *what* is computed: the
+//! actions submitted are exactly the serial loop's actions, the envs step
+//! in the same order inside the owned engine, and the learner's overlapped
+//! work reads a snapshot of step *t* that the stepping cannot mutate. For
+//! a fixed seed the rollout tensors and training metrics are bit-for-bit
+//! identical to the serial path — `tests/test_train_parity.rs` pins this
+//! across env families, and [`crate::coordinator::multi_agent`] pins the
+//! full training curve.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::batch::{BatchStepper, BatchedEnv, ObsBatch};
+use crate::core::actions::Action;
+use crate::core::timestep::BatchedTimestep;
+
+/// What one epoch asks the stepper thread to do.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Cmd {
+    Step,
+    ResetAll,
+}
+
+/// State shared with the stepper thread. The back buffer lives here; the
+/// front buffer lives in [`PipelinedEnv`] and is only touched by the
+/// learner, so reads need no lock.
+struct PipeState {
+    epoch: u64,
+    completed: u64,
+    cmd: Cmd,
+    actions: Vec<u8>,
+    back_ts: BatchedTimestep,
+    back_obs: ObsBatch,
+    shutdown: bool,
+}
+
+struct Control {
+    state: Mutex<PipeState>,
+    start: Condvar,
+    done: Condvar,
+}
+
+/// A batch stepper running on its own thread behind two swap buffers, so
+/// environment stepping overlaps the learner's compute. Mirrors the
+/// [`BatchStepper`] surface (`step` = `submit` + `sync`) for drop-in use;
+/// the pipelined trainers call `submit`/`sync` directly to expose the
+/// overlap window.
+pub struct PipelinedEnv {
+    b: usize,
+    front_ts: BatchedTimestep,
+    front_obs: ObsBatch,
+    control: Arc<Control>,
+    worker: Option<JoinHandle<()>>,
+    /// Epoch of the submit we have not yet synced (0 = none in flight).
+    in_flight: Option<u64>,
+}
+
+impl PipelinedEnv {
+    /// Move `env` onto a fresh stepper thread. The front buffer starts as
+    /// a copy of the env's construction-time reset state, so `obs()` and
+    /// `timestep()` are valid immediately.
+    pub fn new(env: Box<dyn BatchStepper + Send>) -> Self {
+        let b = env.batch_size();
+        let front_ts = env.timestep().clone();
+        let front_obs = env.obs().clone();
+        let control = Arc::new(Control {
+            state: Mutex::new(PipeState {
+                epoch: 0,
+                completed: 0,
+                cmd: Cmd::Step,
+                actions: vec![0u8; b],
+                back_ts: front_ts.clone(),
+                back_obs: front_obs.clone(),
+                shutdown: false,
+            }),
+            start: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let worker = {
+            let control = Arc::clone(&control);
+            std::thread::spawn(move || stepper_loop(env, control))
+        };
+        PipelinedEnv { b, front_ts, front_obs, control, worker: Some(worker), in_flight: None }
+    }
+
+    /// Number of parallel environments.
+    pub fn batch_size(&self) -> usize {
+        self.b
+    }
+
+    /// Number of discrete actions.
+    pub fn num_actions(&self) -> usize {
+        Action::N
+    }
+
+    /// Timestep metadata of the most recent synced step (front buffer).
+    pub fn timestep(&self) -> &BatchedTimestep {
+        &self.front_ts
+    }
+
+    /// Observations of the most recent synced step (front buffer).
+    pub fn obs(&self) -> &ObsBatch {
+        &self.front_obs
+    }
+
+    /// Hand `actions` to the stepper thread and return immediately. The
+    /// front buffer stays valid (and untouched) until [`Self::sync`].
+    /// Panics if a step is already in flight — the pipeline is depth-1 by
+    /// design (one step of lookahead keeps trajectories on-policy).
+    pub fn submit(&mut self, actions: &[u8]) {
+        debug_assert_eq!(actions.len(), self.b);
+        assert!(self.in_flight.is_none(), "PipelinedEnv::submit with a step already in flight");
+        let mut st = self.control.state.lock().unwrap();
+        st.actions.copy_from_slice(actions);
+        st.cmd = Cmd::Step;
+        st.epoch += 1;
+        self.in_flight = Some(st.epoch);
+        self.control.start.notify_one();
+    }
+
+    /// Block until the in-flight step finishes, then swap the buffers so
+    /// the front holds the new timestep + observations. No-op if nothing
+    /// is in flight. Panics (instead of hanging) if the stepper thread
+    /// died — a panic inside `env.step` happens with the mutex released,
+    /// so it cannot poison the lock and must be detected by liveness.
+    pub fn sync(&mut self) {
+        let Some(epoch) = self.in_flight.take() else { return };
+        let mut st = self.control.state.lock().unwrap();
+        while st.completed < epoch {
+            let (next, timeout) = self
+                .control
+                .done
+                .wait_timeout(st, std::time::Duration::from_millis(100))
+                .unwrap();
+            st = next;
+            if timeout.timed_out()
+                && st.completed < epoch
+                && self.worker.as_ref().map_or(true, |w| w.is_finished())
+            {
+                panic!("PipelinedEnv stepper thread died mid-step (env panic?)");
+            }
+        }
+        std::mem::swap(&mut self.front_ts, &mut st.back_ts);
+        std::mem::swap(&mut self.front_obs, &mut st.back_obs);
+    }
+
+    /// Synchronous step: submit + sync (the [`BatchStepper`] contract).
+    pub fn step(&mut self, actions: &[u8]) {
+        self.submit(actions);
+        self.sync();
+    }
+
+    /// Reset every environment (fresh episode keys), synchronously.
+    pub fn reset_all(&mut self) {
+        assert!(self.in_flight.is_none(), "PipelinedEnv::reset_all with a step in flight");
+        let epoch = {
+            let mut st = self.control.state.lock().unwrap();
+            st.cmd = Cmd::ResetAll;
+            st.epoch += 1;
+            self.control.start.notify_one();
+            st.epoch
+        };
+        self.in_flight = Some(epoch);
+        self.sync();
+    }
+
+    /// Convenience constructor over the single-threaded engine.
+    pub fn over_batched(env: BatchedEnv) -> Self {
+        PipelinedEnv::new(Box::new(env))
+    }
+}
+
+impl Drop for PipelinedEnv {
+    fn drop(&mut self) {
+        {
+            let mut st = self.control.state.lock().unwrap();
+            st.shutdown = true;
+            self.control.start.notify_one();
+        }
+        if let Some(handle) = self.worker.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl BatchStepper for PipelinedEnv {
+    fn batch_size(&self) -> usize {
+        self.b
+    }
+
+    fn step(&mut self, actions: &[u8]) {
+        PipelinedEnv::step(self, actions);
+    }
+
+    fn timestep(&self) -> &BatchedTimestep {
+        &self.front_ts
+    }
+
+    fn obs(&self) -> &ObsBatch {
+        &self.front_obs
+    }
+
+    fn reset_all(&mut self) {
+        PipelinedEnv::reset_all(self);
+    }
+}
+
+/// Stepper-thread body: wait for an epoch, copy the actions out, step the
+/// owned engine (lock released — this is the long pole that overlaps the
+/// learner), then publish the results into the back buffer.
+fn stepper_loop(mut env: Box<dyn BatchStepper + Send>, control: Arc<Control>) {
+    let mut seen = 0u64;
+    let mut actions = vec![0u8; env.batch_size()];
+    loop {
+        let cmd = {
+            let mut st = control.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    break;
+                }
+                st = control.start.wait(st).unwrap();
+            }
+            seen = st.epoch;
+            actions.copy_from_slice(&st.actions);
+            st.cmd
+        };
+        match cmd {
+            Cmd::Step => env.step(&actions),
+            Cmd::ResetAll => env.reset_all(),
+        }
+        let mut st = control.state.lock().unwrap();
+        let ts = env.timestep();
+        st.back_ts.t.copy_from_slice(&ts.t);
+        st.back_ts.action.copy_from_slice(&ts.action);
+        st.back_ts.reward.copy_from_slice(&ts.reward);
+        st.back_ts.discount.copy_from_slice(&ts.discount);
+        st.back_ts.step_type.copy_from_slice(&ts.step_type);
+        st.back_ts.episodic_return.copy_from_slice(&ts.episodic_return);
+        match (&mut st.back_obs, env.obs()) {
+            (ObsBatch::I32(dst), ObsBatch::I32(src)) => dst.copy_from_slice(src),
+            (ObsBatch::U8(dst), ObsBatch::U8(src)) => dst.copy_from_slice(src),
+            _ => unreachable!("pipelined obs dtype diverged from the engine"),
+        }
+        st.completed = seen;
+        control.done.notify_one();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::timestep::StepType;
+    use crate::envs::registry::make;
+    use crate::rng::{Key, Rng};
+
+    fn pipelined(id: &str, b: usize) -> PipelinedEnv {
+        PipelinedEnv::over_batched(BatchedEnv::new(make(id).unwrap(), b, Key::new(0)))
+    }
+
+    #[test]
+    fn construction_exposes_reset_state() {
+        let p = pipelined("Navix-Empty-8x8-v0", 4);
+        assert_eq!(p.batch_size(), 4);
+        assert!(p.timestep().step_type.iter().all(|&s| s == StepType::First));
+        assert!(p.obs().env_i32(4, 0).iter().any(|&x| x != 0));
+    }
+
+    #[test]
+    fn matches_batched_env_bitwise_on_random_walk() {
+        let cfg = make("Navix-Empty-Random-6x6").unwrap();
+        let mut single = BatchedEnv::new(cfg.clone(), 6, Key::new(3));
+        let mut piped = PipelinedEnv::over_batched(BatchedEnv::new(cfg, 6, Key::new(3)));
+        let mut rng = Rng::new(11);
+        for _ in 0..150 {
+            let actions: Vec<u8> = (0..6).map(|_| rng.below(7) as u8).collect();
+            single.step(&actions);
+            piped.step(&actions);
+            assert_eq!(single.timestep.reward, piped.timestep().reward);
+            assert_eq!(single.timestep.step_type, piped.timestep().step_type);
+            for i in 0..6 {
+                assert_eq!(single.obs.env_i32(6, i), piped.obs().env_i32(6, i));
+            }
+        }
+    }
+
+    #[test]
+    fn front_buffer_is_stable_while_a_step_is_in_flight() {
+        let mut p = pipelined("Navix-Empty-5x5-v0", 2);
+        let before: Vec<i32> = p.obs().env_i32(2, 0).to_vec();
+        p.submit(&[Action::Forward as u8, Action::Forward as u8]);
+        // The overlap window: the pre-step observations must stay intact.
+        assert_eq!(p.obs().env_i32(2, 0), &before[..]);
+        p.sync();
+        assert_eq!(p.timestep().t, vec![1, 1]);
+    }
+
+    #[test]
+    fn reset_all_round_trips() {
+        let mut p = pipelined("Navix-Empty-5x5-v0", 3);
+        p.step(&[0, 1, 2]);
+        p.reset_all();
+        assert!(p.timestep().step_type.iter().all(|&s| s == StepType::First));
+        assert_eq!(p.timestep().t, vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn drop_joins_the_stepper_thread() {
+        let p = pipelined("Navix-Empty-5x5-v0", 2);
+        drop(p); // must not hang or leak the thread
+    }
+}

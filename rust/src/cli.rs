@@ -16,7 +16,8 @@ pub struct Args {
 }
 
 /// Option names that take no value (everything else with `--` expects one).
-const SWITCHES: &[&str] = &["help", "verbose", "tune", "baseline", "xla", "quiet", "sharded", "smoke"];
+const SWITCHES: &[&str] =
+    &["help", "verbose", "tune", "baseline", "xla", "quiet", "sharded", "smoke", "pipeline"];
 
 impl Args {
     pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
@@ -83,13 +84,16 @@ impl Args {
         self.switches.iter().any(|s| s == name)
     }
 
-    /// The sharded-execution flags shared by the `run` launcher and the
-    /// throughput drivers: `--shards S --threads T` (absent/0 = use the
-    /// host's available parallelism). See [`crate::batch::ShardedEnv`].
+    /// The execution-layer flags shared by the `run`/`train` launchers and
+    /// the throughput drivers: `--shards S --threads T` (absent/0 = use the
+    /// host's available parallelism) and `--pipeline` (double-buffered
+    /// rollout pipeline). See [`crate::batch::ShardedEnv`] and
+    /// [`crate::batch::PipelinedEnv`].
     pub fn exec_config(&self) -> Result<crate::config::ExecConfig> {
         Ok(crate::config::ExecConfig {
             num_shards: self.opt_usize("shards", 0)?,
             num_threads: self.opt_usize("threads", 0)?,
+            pipeline: self.switch("pipeline"),
         })
     }
 }
@@ -135,12 +139,14 @@ mod tests {
 
     #[test]
     fn exec_config_flags() {
-        let a = parse("run --shards 4 --threads 2");
+        let a = parse("run --shards 4 --threads 2 --pipeline");
         let e = a.exec_config().unwrap();
         assert_eq!(e.num_shards, 4);
         assert_eq!(e.num_threads, 2);
+        assert!(e.pipeline);
         let auto = parse("run").exec_config().unwrap();
         assert_eq!(auto.num_shards, 0, "absent flags mean auto");
         assert_eq!(auto.num_threads, 0);
+        assert!(!auto.pipeline, "pipeline is opt-in");
     }
 }

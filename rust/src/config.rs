@@ -101,9 +101,12 @@ impl Config {
 /// ([`crate::batch::ShardedEnv`], the `pmap` analog): how many contiguous
 /// shards a batch is split into and how many persistent worker threads step
 /// them. `0` means "use the host's available parallelism" — the default.
+/// `pipeline` additionally runs the stepper behind the double-buffered
+/// rollout pipeline ([`crate::batch::PipelinedEnv`]), overlapping env
+/// stepping with learner compute (bit-identical trajectories).
 ///
 /// Sources: the `[parallel]` config-file section ([`ExecConfig::from_config`])
-/// or the `--shards` / `--threads` command-line flags
+/// or the `--shards` / `--threads` / `--pipeline` command-line flags
 /// ([`crate::cli::Args::exec_config`]).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct ExecConfig {
@@ -111,14 +114,18 @@ pub struct ExecConfig {
     pub num_shards: usize,
     /// Number of worker threads (0 = auto, clamped to `num_shards`).
     pub num_threads: usize,
+    /// Run the stepper behind the double-buffered rollout pipeline.
+    pub pipeline: bool,
 }
 
 impl ExecConfig {
-    /// Read `[parallel] num_shards / num_threads` from a config file.
+    /// Read `[parallel] num_shards / num_threads / pipeline` from a config
+    /// file.
     pub fn from_config(cfg: &Config) -> Result<ExecConfig> {
         Ok(ExecConfig {
             num_shards: cfg.get_usize("parallel.num_shards", 0)?,
             num_threads: cfg.get_usize("parallel.num_threads", 0)?,
+            pipeline: cfg.get_bool("parallel.pipeline", false)?,
         })
     }
 }
@@ -173,11 +180,14 @@ name = "tuned"
 
     #[test]
     fn exec_config_parses_parallel_section_and_defaults_to_auto() {
-        let c = Config::parse("[parallel]\nnum_shards = 4\nnum_threads = 2\n").unwrap();
+        let c =
+            Config::parse("[parallel]\nnum_shards = 4\nnum_threads = 2\npipeline = true\n")
+                .unwrap();
         let e = ExecConfig::from_config(&c).unwrap();
-        assert_eq!(e, ExecConfig { num_shards: 4, num_threads: 2 });
+        assert_eq!(e, ExecConfig { num_shards: 4, num_threads: 2, pipeline: true });
         let none = ExecConfig::from_config(&Config::parse("").unwrap()).unwrap();
         assert_eq!(none, ExecConfig::default());
         assert_eq!(none.num_shards, 0, "0 = auto");
+        assert!(!none.pipeline, "pipeline is opt-in");
     }
 }

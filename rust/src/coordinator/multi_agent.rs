@@ -11,14 +11,38 @@
 //! shared-nothing agents, one process — while the absolute scaling curve
 //! reflects the host (see EXPERIMENTS.md §Fig6).
 
-use crate::agents::ppo::{Ppo, PpoConfig};
-use crate::agents::TrainLog;
-use crate::batch::{BatchStepper, BatchedEnv, ShardedEnv};
+use crate::agents::ppo::{Ppo, PpoConfig, Rollout};
+use crate::agents::{ReturnTracker, TrainLog};
+use crate::batch::{BatchStepper, BatchedEnv, PipelinedEnv, ShardedEnv};
 use crate::config::ExecConfig;
 use crate::envs::registry::make;
 use crate::rng::Key;
 use anyhow::Result;
 use std::time::Instant;
+
+/// One agent's execution backend. `Pipelined` keeps its concrete type so
+/// the rollout can use the submit/sync overlap API; `Plain` erases the
+/// engine behind [`BatchStepper`].
+enum AgentEnv {
+    Plain(Box<dyn BatchStepper>),
+    Pipelined(PipelinedEnv),
+}
+
+impl AgentEnv {
+    fn batch_size(&self) -> usize {
+        match self {
+            AgentEnv::Plain(e) => e.batch_size(),
+            AgentEnv::Pipelined(p) => p.batch_size(),
+        }
+    }
+
+    fn collect(&mut self, ppo: &mut Ppo, ro: &mut Rollout, tracker: &mut ReturnTracker) {
+        match self {
+            AgentEnv::Plain(e) => ppo.collect_rollout(e.as_mut(), ro, tracker),
+            AgentEnv::Pipelined(p) => ppo.collect_rollout_pipelined(p, ro, tracker),
+        }
+    }
+}
 
 /// Result of a multi-agent run.
 #[derive(Debug)]
@@ -46,9 +70,11 @@ pub fn train_parallel_ppo(
 /// Train `n_agents` PPO agents for `steps_per_agent` env steps each on
 /// `env_id` (paper: Empty-8x8, 1M steps, 16 envs/agent — scale the step
 /// budget to the host). With `exec: Some(cfg)` every agent's batch steps on
-/// the sharded multi-core engine ([`ShardedEnv`], the Fig.-6 device axis);
-/// `None` keeps the single-threaded [`BatchedEnv`]. Trajectories are
-/// bit-identical between the two modes (see `rust/src/batch/sharded.rs`).
+/// the sharded multi-core engine ([`ShardedEnv`], the Fig.-6 device axis),
+/// and `exec.pipeline` additionally runs it behind the double-buffered
+/// rollout pipeline ([`PipelinedEnv`]) so env stepping overlaps learner
+/// compute; `None` keeps the single-threaded [`BatchedEnv`]. Trajectories
+/// are bit-identical across all three modes (see `rust/src/batch/`).
 pub fn train_parallel_ppo_exec(
     env_id: &str,
     n_agents: usize,
@@ -59,18 +85,29 @@ pub fn train_parallel_ppo_exec(
 ) -> Result<MultiAgentResult> {
     let cfg = make(env_id)?;
     // Shared-nothing agent pool: one env batch + one learner per agent.
-    let mut agents: Vec<(Ppo, Box<dyn BatchStepper>)> = (0..n_agents)
+    let mut agents: Vec<(Ppo, AgentEnv)> = (0..n_agents)
         .map(|a| {
             let key = Key::new(seed).fold_in(a as u64);
-            let env: Box<dyn BatchStepper> = match exec {
-                Some(e) => Box::new(ShardedEnv::new(
+            let env = match exec {
+                Some(e) => {
+                    let sharded = ShardedEnv::new(
+                        cfg.clone(),
+                        envs_per_agent,
+                        e.num_shards,
+                        e.num_threads,
+                        key,
+                    );
+                    if e.pipeline {
+                        AgentEnv::Pipelined(PipelinedEnv::new(Box::new(sharded)))
+                    } else {
+                        AgentEnv::Plain(Box::new(sharded))
+                    }
+                }
+                None => AgentEnv::Plain(Box::new(BatchedEnv::new(
                     cfg.clone(),
                     envs_per_agent,
-                    e.num_shards,
-                    e.num_threads,
                     key,
-                )),
-                None => Box::new(BatchedEnv::new(cfg.clone(), envs_per_agent, key)),
+                ))),
             };
             let pcfg = PpoConfig { num_envs: envs_per_agent, ..PpoConfig::default() };
             let ppo = Ppo::new(pcfg, crate::agents::OBS_DIM, 7, seed ^ a as u64);
@@ -99,7 +136,7 @@ pub fn train_parallel_ppo_exec(
     let mut curves: Vec<TrainLog> = (0..n_agents).map(|_| TrainLog::default()).collect();
     for it in 0..iters {
         for (a, (ppo, env)) in agents.iter_mut().enumerate() {
-            ppo.collect_rollout(env.as_mut(), &mut rollouts[a], &mut trackers[a]);
+            env.collect(ppo, &mut rollouts[a], &mut trackers[a]);
             let m = ppo.update(&rollouts[a]);
             curves[a].curve.push(crate::agents::CurvePoint {
                 env_steps: (it + 1) * steps_per_iter,
@@ -150,12 +187,30 @@ mod tests {
         // Same seeds, same RNG contract → the sharded device axis must not
         // change a single loss value (learning is on the same trajectories).
         let single = train_parallel_ppo("Navix-Empty-5x5-v0", 1, 8, 1_024, 3).unwrap();
-        let exec = ExecConfig { num_shards: 2, num_threads: 2 };
+        let exec = ExecConfig { num_shards: 2, num_threads: 2, pipeline: false };
         let sharded =
             train_parallel_ppo_exec("Navix-Empty-5x5-v0", 1, 8, 1_024, 3, Some(exec)).unwrap();
         let l0: Vec<f32> = single.logs[0].curve.iter().map(|p| p.loss).collect();
         let l1: Vec<f32> = sharded.logs[0].curve.iter().map(|p| p.loss).collect();
         assert_eq!(l0, l1, "sharded training diverged from single-threaded");
         assert_eq!(single.logs[0].episodes, sharded.logs[0].episodes);
+    }
+
+    #[test]
+    fn pipelined_mode_reproduces_single_threaded_training_exactly() {
+        // The double-buffered pipeline reorders *when* compute happens,
+        // never *what* is computed: the full training curve must be
+        // bit-identical to the serial single-threaded run.
+        let single = train_parallel_ppo("Navix-Empty-5x5-v0", 1, 8, 1_024, 5).unwrap();
+        let exec = ExecConfig { num_shards: 2, num_threads: 2, pipeline: true };
+        let piped =
+            train_parallel_ppo_exec("Navix-Empty-5x5-v0", 1, 8, 1_024, 5, Some(exec)).unwrap();
+        let l0: Vec<f32> = single.logs[0].curve.iter().map(|p| p.loss).collect();
+        let l1: Vec<f32> = piped.logs[0].curve.iter().map(|p| p.loss).collect();
+        assert_eq!(l0, l1, "pipelined training diverged from single-threaded");
+        assert_eq!(single.logs[0].episodes, piped.logs[0].episodes);
+        let r0: Vec<f32> = single.logs[0].curve.iter().map(|p| p.mean_return).collect();
+        let r1: Vec<f32> = piped.logs[0].curve.iter().map(|p| p.mean_return).collect();
+        assert_eq!(r0, r1);
     }
 }

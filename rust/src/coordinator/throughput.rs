@@ -125,7 +125,7 @@ mod tests {
 
     #[test]
     fn sharded_unroll_respects_explicit_exec_config() {
-        let exec = ExecConfig { num_shards: 2, num_threads: 2 };
+        let exec = ExecConfig { num_shards: 2, num_threads: 2, pipeline: false };
         let dt =
             unroll_walltime_exec(Engine::Sharded, "Navix-Empty-8x8-v0", 16, 50, 0, &exec).unwrap();
         assert!(dt > 0.0);

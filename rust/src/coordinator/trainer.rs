@@ -131,21 +131,19 @@ impl XlaPpo {
         let d = self.obs_dim;
         let mut obs_buf = vec![0i32; b * d];
         let mut actions = vec![0u8; b];
-        let mut x = vec![0.0f32; d];
+        let mut lp = vec![0.0f32; self.n_actions];
         for t in 0..t_len {
-            for i in 0..b {
-                obs_buf[i * d..(i + 1) * d].copy_from_slice(env.obs.env_i32(b, i));
-            }
+            // Whole-batch copies: one raw i32 snapshot for the artifact
+            // inputs, one featurised block straight into the rollout.
+            obs_buf.copy_from_slice(env.obs.as_i32());
+            raw_obs[t * b * d..(t + 1) * b * d].copy_from_slice(&obs_buf);
+            preprocess_obs(&obs_buf, &mut ro.obs[t * b * d..(t + 1) * b * d]);
             let (logits, values) = self.forward(&obs_buf, b)?;
             for i in 0..b {
                 let lslice = &logits[i * self.n_actions..(i + 1) * self.n_actions];
                 let a = sample_categorical(lslice, &mut self.rng);
-                let mut lp = vec![0.0; self.n_actions];
                 log_softmax(lslice, &mut lp);
                 let idx = t * b + i;
-                raw_obs[idx * d..(idx + 1) * d].copy_from_slice(&obs_buf[i * d..(i + 1) * d]);
-                preprocess_obs(&obs_buf[i * d..(i + 1) * d], &mut x);
-                ro.obs[idx * d..(idx + 1) * d].copy_from_slice(&x);
                 ro.actions[idx] = a as u8;
                 ro.logp[idx] = lp[a];
                 ro.values[idx] = values[i];
@@ -163,9 +161,7 @@ impl XlaPpo {
                 }
             }
         }
-        for i in 0..b {
-            obs_buf[i * d..(i + 1) * d].copy_from_slice(env.obs.env_i32(b, i));
-        }
+        obs_buf.copy_from_slice(env.obs.as_i32());
         let (_, values) = self.forward(&obs_buf, b)?;
         ro.last_values.copy_from_slice(&values);
         gae::gae(

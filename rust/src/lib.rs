@@ -8,8 +8,10 @@
 //!   suite as an Entity-Component-System engine with struct-of-arrays batched
 //!   state (the paper's contribution, rebuilt natively).
 //! * [`batch`] — the batched stepper (the `jax.vmap` analog) with autoreset,
-//!   and the sharded multi-core stepper (the `jax.pmap` analog) that splits
-//!   the batch across a fixed worker pool with bit-identical results.
+//!   the sharded multi-core stepper (the `jax.pmap` analog) that splits
+//!   the batch across a fixed worker pool with bit-identical results, and
+//!   the double-buffered rollout pipeline that overlaps env stepping with
+//!   learner compute (again bit-identical).
 //! * [`baseline`] — a faithful scalar, object-oriented MiniGrid engine plus
 //!   gymnasium-style vector wrappers (the system the paper benchmarks
 //!   against).
@@ -43,7 +45,7 @@ pub mod agents;
 pub mod runtime;
 pub mod coordinator;
 
-pub use crate::batch::{BatchStepper, BatchedEnv, ShardedEnv};
+pub use crate::batch::{BatchStepper, BatchedEnv, PipelinedEnv, ShardedEnv};
 pub use crate::core::actions::Action;
 pub use crate::core::timestep::{StepType, Timestep};
 pub use crate::envs::registry::{list_envs, make, make_with};

@@ -13,9 +13,9 @@
 
 use anyhow::{anyhow, Result};
 use navix::agents::{Dqn, DqnConfig, Ppo, PpoConfig, Sac, SacConfig};
-use navix::batch::BatchedEnv;
+use navix::batch::{BatchStepper, BatchedEnv, PipelinedEnv, ShardedEnv};
 use navix::cli::Args;
-use navix::config::Config;
+use navix::config::{Config, ExecConfig};
 use navix::coordinator::scoreboard::{Entry, Scoreboard};
 use navix::coordinator::{unroll_walltime_exec, Engine, XlaPpo};
 use navix::core::entities::EntityKind;
@@ -61,6 +61,8 @@ fn print_help() {
          run   --env ID [--batch B=8] [--steps N=1000] [--seed S]\n\
                [--engine batched|sharded|sync|async] [--shards S=auto] [--threads T=auto]\n\
          train --algo ppo|dqn|sac|ppo-xla --env ID [--steps N=100000] [--seed S] [--config FILE]\n\
+               [--shards S] [--threads T] [--pipeline]   (ppo: sharded rollouts and/or the\n\
+               double-buffered rollout pipeline — same trajectories, overlapped stepping)\n\
          info  [--env ID]\n\
          render --env ID [--seed S]"
     );
@@ -171,13 +173,40 @@ fn cmd_train(args: &Args) -> Result<()> {
     let seed = args.opt_u64("seed", 0)?;
     let cfgfile = args.opt("config").map(Config::load).transpose()?.unwrap_or_default();
     let env_cfg = navix::envs::registry::make(&env_id)?;
+    // Execution layer: for shards/threads the CLI wins and the config
+    // file's [parallel] section fills the gaps (0 = auto). --pipeline is a
+    // presence-only switch, so it can only turn the pipeline ON; a config
+    // file's `pipeline = true` cannot be overridden from the CLI.
+    let file_exec = ExecConfig::from_config(&cfgfile)?;
+    let cli_exec = args.exec_config()?;
+    let exec = ExecConfig {
+        num_shards: if cli_exec.num_shards != 0 {
+            cli_exec.num_shards
+        } else {
+            file_exec.num_shards
+        },
+        num_threads: if cli_exec.num_threads != 0 {
+            cli_exec.num_threads
+        } else {
+            file_exec.num_threads
+        },
+        pipeline: cli_exec.pipeline || file_exec.pipeline,
+    };
+
+    // Only the native-PPO trainer consults the execution layer; don't let
+    // the flags silently no-op for the other algorithms.
+    if algo != "ppo" && exec != ExecConfig::default() {
+        eprintln!(
+            "warning: --shards/--threads/--pipeline (and [parallel]) only apply to \
+             --algo ppo; {algo} runs on the single-threaded batched engine"
+        );
+    }
 
     println!("training {algo} on {env_id} for {steps} steps (seed {seed})");
     let t0 = std::time::Instant::now();
     let (final_return, episodes) = match algo.as_str() {
         "ppo" => {
             let num_envs = cfgfile.get_usize("ppo.num_envs", 16)?;
-            let mut env = BatchedEnv::new(env_cfg, num_envs, Key::new(seed));
             let mut ppo = Ppo::new(
                 PpoConfig {
                     num_envs,
@@ -188,7 +217,36 @@ fn cmd_train(args: &Args) -> Result<()> {
                 7,
                 seed,
             );
-            let log = ppo.train(&mut env, steps);
+            // Same trajectories on every engine (the RNG contract), so the
+            // choice is pure execution policy.
+            let use_sharded = exec.num_shards != 0 || exec.num_threads != 0;
+            let log = if exec.pipeline {
+                let engine: Box<dyn BatchStepper + Send> = if use_sharded {
+                    Box::new(ShardedEnv::new(
+                        env_cfg,
+                        num_envs,
+                        exec.num_shards,
+                        exec.num_threads,
+                        Key::new(seed),
+                    ))
+                } else {
+                    Box::new(BatchedEnv::new(env_cfg, num_envs, Key::new(seed)))
+                };
+                let mut penv = PipelinedEnv::new(engine);
+                ppo.train_pipelined(&mut penv, steps)
+            } else if use_sharded {
+                let mut env = ShardedEnv::new(
+                    env_cfg,
+                    num_envs,
+                    exec.num_shards,
+                    exec.num_threads,
+                    Key::new(seed),
+                );
+                ppo.train(&mut env, steps)
+            } else {
+                let mut env = BatchedEnv::new(env_cfg, num_envs, Key::new(seed));
+                ppo.train(&mut env, steps)
+            };
             print_curve(&log);
             (log.final_return(), log.episodes)
         }

@@ -1,5 +1,24 @@
 //! Multi-layer perceptron with hand-derived backprop over flat parameter
 //! storage. Layout per layer: `W (out×in, row-major) ++ b (out)`.
+//!
+//! Two execution paths share the parameters:
+//!
+//! * the **row path** ([`Mlp::forward`]/[`Mlp::backward`]) — one sample at a
+//!   time, the original implementation, kept as the bitwise oracle;
+//! * the **batch path** ([`Mlp::forward_batch`]/[`Mlp::backward_batch`]) —
+//!   `[B, dim]` row-major buffers through a register-blocked GEMM
+//!   microkernel with preallocated activation workspaces ([`BatchCache`]),
+//!   the hot path of every trainer since PR 4.
+//!
+//! The batch kernels are deliberately **not** reduction-blocked: every
+//! output accumulator runs its dot product over the full input dimension in
+//! ascending order, and parameter-gradient accumulation loops samples in
+//! ascending order, so the batch path is *bit-for-bit identical* to running
+//! the row path sample by sample (pinned by tests here and by
+//! `tests/test_train_parity.rs`). Blocking is over the independent axes
+//! only: output tiles of 4 (register blocking — the input row is fetched
+//! once per 4 dot products) and the natural sample-major sweep that keeps
+//! each weight row hot across the batch.
 
 use crate::rng::Rng;
 
@@ -48,6 +67,109 @@ pub struct Mlp {
 pub struct Cache {
     /// Activations per layer, `acts[0]` = input, `acts[L]` = output.
     pub acts: Vec<Vec<f32>>,
+}
+
+/// Reusable workspace for the batch path: per-layer `[B, dim]` activation
+/// buffers for backprop, the transposed-weight buffers the backward pass
+/// streams, and the two delta planes. All buffers are grown on first use
+/// and reused across calls, so a training loop performs **zero** NN-side
+/// heap allocation after the first minibatch.
+#[derive(Clone, Debug, Default)]
+pub struct BatchCache {
+    /// Activations per layer, `acts[l]` is `[bsz × dims[l]]` row-major.
+    pub acts: Vec<Vec<f32>>,
+    /// Batch size of the most recent [`Mlp::forward_batch`].
+    pub bsz: usize,
+    /// Per-layer transposed weights (`[in × out]`), rebuilt by
+    /// [`Mlp::backward_batch`] each call (Adam mutates the weights between
+    /// minibatches, so there is nothing stale to reuse — the win is the
+    /// reused allocation and the contiguous `[in][out]` rows that turn the
+    /// delta back-propagation into straight dot products).
+    wt: Vec<Vec<f32>>,
+    /// Delta planes (`[bsz × max_dim]`), double-buffered across layers.
+    d_cur: Vec<f32>,
+    d_nxt: Vec<f32>,
+}
+
+impl BatchCache {
+    /// Output activations of the most recent forward: `[bsz × out_dim]`.
+    pub fn out(&self) -> &[f32] {
+        self.acts.last().map(|v| v.as_slice()).unwrap_or(&[])
+    }
+}
+
+/// Grow-only resize for reusable workspace buffers (never shrinks, so
+/// repeated calls at the usual fixed sizes are free). Shared by this
+/// module's caches and the trainers' workspaces (re-exported through
+/// [`crate::agents`]).
+pub(crate) fn ensure<T: Clone + Default>(v: &mut Vec<T>, n: usize) {
+    if v.len() < n {
+        v.resize(n, T::default());
+    }
+}
+
+/// The forward microkernel: `out[s][o] = act(bias[o] + Σ_i w[o][i]·x[s][i])`
+/// for a `[bsz × nin]` input block. Register-blocked over the output
+/// dimension (4 independent accumulators share one pass over the input
+/// row); the reduction runs the full `nin` in ascending order per output,
+/// which is exactly the summation order of the row path — see module docs.
+fn dense_forward(
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    out: &mut [f32],
+    bsz: usize,
+    nin: usize,
+    nout: usize,
+    act: Option<Activation>,
+) {
+    for s in 0..bsz {
+        let xr = &x[s * nin..(s + 1) * nin];
+        let or = &mut out[s * nout..(s + 1) * nout];
+        let mut o = 0;
+        while o + 4 <= nout {
+            let w0 = &w[o * nin..(o + 1) * nin];
+            let w1 = &w[(o + 1) * nin..(o + 2) * nin];
+            let w2 = &w[(o + 2) * nin..(o + 3) * nin];
+            let w3 = &w[(o + 3) * nin..(o + 4) * nin];
+            let (mut a0, mut a1, mut a2, mut a3) =
+                (bias[o], bias[o + 1], bias[o + 2], bias[o + 3]);
+            for i in 0..nin {
+                let xi = xr[i];
+                a0 += w0[i] * xi;
+                a1 += w1[i] * xi;
+                a2 += w2[i] * xi;
+                a3 += w3[i] * xi;
+            }
+            match act {
+                Some(a) => {
+                    or[o] = a.f(a0);
+                    or[o + 1] = a.f(a1);
+                    or[o + 2] = a.f(a2);
+                    or[o + 3] = a.f(a3);
+                }
+                None => {
+                    or[o] = a0;
+                    or[o + 1] = a1;
+                    or[o + 2] = a2;
+                    or[o + 3] = a3;
+                }
+            }
+            o += 4;
+        }
+        while o < nout {
+            let row = &w[o * nin..(o + 1) * nin];
+            let mut acc = bias[o];
+            for i in 0..nin {
+                acc += row[i] * xr[i];
+            }
+            or[o] = match act {
+                Some(a) => a.f(acc),
+                None => acc,
+            };
+            o += 1;
+        }
+    }
 }
 
 impl Mlp {
@@ -109,6 +231,127 @@ impl Mlp {
     pub fn infer(&self, x: &[f32]) -> Vec<f32> {
         let mut cache = Cache::default();
         self.forward(x, &mut cache)
+    }
+
+    /// Batched forward over a `[bsz × dims[0]]` row-major block. Fills
+    /// `cache` for [`Mlp::backward_batch`]; read the `[bsz × dims[L]]`
+    /// output via [`BatchCache::out`]. Bit-for-bit identical to calling
+    /// [`Mlp::forward`] on each row.
+    pub fn forward_batch(&self, x: &[f32], bsz: usize, cache: &mut BatchCache) {
+        debug_assert_eq!(x.len(), bsz * self.dims[0]);
+        let n_layers = self.n_layers();
+        cache.bsz = bsz;
+        cache.acts.resize(self.dims.len(), Vec::new());
+        for (l, &dim) in self.dims.iter().enumerate() {
+            ensure(&mut cache.acts[l], bsz * dim);
+        }
+        cache.acts[0][..bsz * self.dims[0]].copy_from_slice(x);
+        let mut off = 0;
+        for li in 0..n_layers {
+            let (nin, nout) = (self.dims[li], self.dims[li + 1]);
+            let w = &self.params[off..off + nin * nout];
+            let b = &self.params[off + nin * nout..off + nin * nout + nout];
+            let act = if li + 1 < n_layers { Some(self.act) } else { None };
+            // Split-borrow the two activation planes around `li`.
+            let (lo, hi) = cache.acts.split_at_mut(li + 1);
+            dense_forward(
+                &lo[li][..bsz * nin],
+                w,
+                b,
+                &mut hi[0][..bsz * nout],
+                bsz,
+                nin,
+                nout,
+                act,
+            );
+            off += nin * nout + nout;
+        }
+    }
+
+    /// Batched backward: `grad_out` is `[bsz × dims[L]]` ∂L/∂output for the
+    /// forward recorded in `cache`; parameter gradients accumulate into
+    /// `grads` (same flat layout as `params`). Per parameter, sample
+    /// contributions are added in ascending sample order, so accumulating a
+    /// whole minibatch here equals running [`Mlp::backward`] sample by
+    /// sample, bit for bit. The input gradient (which no trainer consumes)
+    /// is not computed — propagation stops after layer 0's parameters.
+    pub fn backward_batch(&self, cache: &mut BatchCache, grad_out: &[f32], grads: &mut [f32]) {
+        debug_assert_eq!(grads.len(), self.params.len());
+        let n_layers = self.n_layers();
+        let bsz = cache.bsz;
+        debug_assert_eq!(grad_out.len(), bsz * self.dims[n_layers]);
+        let mut offsets = Vec::with_capacity(n_layers);
+        let mut off = 0;
+        for w in self.dims.windows(2) {
+            offsets.push(off);
+            off += w[0] * w[1] + w[1];
+        }
+        let max_dim = *self.dims.iter().max().unwrap();
+        ensure(&mut cache.d_cur, bsz * max_dim);
+        ensure(&mut cache.d_nxt, bsz * max_dim);
+        cache.wt.resize(n_layers, Vec::new());
+        cache.d_cur[..grad_out.len()].copy_from_slice(grad_out);
+
+        for li in (0..n_layers).rev() {
+            let (nin, nout) = (self.dims[li], self.dims[li + 1]);
+            let input = &cache.acts[li];
+            let output = &cache.acts[li + 1];
+            // Activation derivative (hidden layers only), expressed in the
+            // activated output like the row path.
+            if li + 1 < n_layers {
+                for (d, &y) in cache.d_cur[..bsz * nout].iter_mut().zip(&output[..bsz * nout]) {
+                    *d *= self.act.df_from_y(y);
+                }
+            }
+            let off = offsets[li];
+            let (gw, gb) = {
+                let (a, b) = grads[off..off + nin * nout + nout].split_at_mut(nin * nout);
+                (a, b)
+            };
+            // Parameter gradients, sample-major: each parameter receives
+            // its per-sample contributions in ascending sample order —
+            // the same order a per-sample loop over Mlp::backward uses.
+            for s in 0..bsz {
+                let dr = &cache.d_cur[s * nout..(s + 1) * nout];
+                let xr = &input[s * nin..(s + 1) * nin];
+                for o in 0..nout {
+                    let d = dr[o];
+                    gb[o] += d;
+                    let row = &mut gw[o * nin..(o + 1) * nin];
+                    for i in 0..nin {
+                        row[i] += d * xr[i];
+                    }
+                }
+            }
+            if li > 0 {
+                // Propagate: δ_prev[s][i] = Σ_o δ[s][o]·w[o][i], computed as
+                // dot products against the transposed weights so each
+                // accumulator streams a contiguous `[out]` row. The o-sum
+                // runs in ascending order — identical to the row path's
+                // `prev[i] += d·w[o][i]` accumulation.
+                let w = &self.params[off..off + nin * nout];
+                let wt = &mut cache.wt[li];
+                ensure(wt, nin * nout);
+                for o in 0..nout {
+                    for i in 0..nin {
+                        wt[i * nout + o] = w[o * nin + i];
+                    }
+                }
+                for s in 0..bsz {
+                    let dr = &cache.d_cur[s * nout..(s + 1) * nout];
+                    let pr = &mut cache.d_nxt[s * nin..(s + 1) * nin];
+                    for i in 0..nin {
+                        let wr = &wt[i * nout..(i + 1) * nout];
+                        let mut acc = 0.0f32;
+                        for o in 0..nout {
+                            acc += dr[o] * wr[o];
+                        }
+                        pr[i] = acc;
+                    }
+                }
+                std::mem::swap(&mut cache.d_cur, &mut cache.d_nxt);
+            }
+        }
     }
 
     /// Backward pass: `grad_out` is ∂L/∂output; accumulates parameter
@@ -257,6 +500,64 @@ mod tests {
         let b = mlp.infer(&[1.0, -1.0, 0.5, 2.0]);
         assert_eq!(a.len(), 2);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn forward_batch_is_bitwise_identical_to_rowwise_forward() {
+        for act in [Activation::Relu, Activation::Tanh] {
+            let mut rng = Rng::new(7);
+            let mlp = Mlp::new(&[9, 13, 6, 5], act, &mut rng);
+            let bsz = 11; // not a multiple of the 4-wide output tile
+            let x: Vec<f32> = (0..bsz * 9).map(|_| rng.normal() as f32).collect();
+            let mut bc = BatchCache::default();
+            mlp.forward_batch(&x, bsz, &mut bc);
+            for s in 0..bsz {
+                let row = mlp.infer(&x[s * 9..(s + 1) * 9]);
+                assert_eq!(&bc.out()[s * 5..(s + 1) * 5], &row[..], "sample {s} ({act:?})");
+            }
+        }
+    }
+
+    #[test]
+    fn backward_batch_is_bitwise_identical_to_sample_loop() {
+        for act in [Activation::Relu, Activation::Tanh] {
+            let mut rng = Rng::new(23);
+            let dims = [7, 10, 10, 3];
+            let mlp = Mlp::new(&dims, act, &mut rng);
+            let bsz = 6;
+            let x: Vec<f32> = (0..bsz * 7).map(|_| rng.normal() as f32).collect();
+            // Loss gradient: the outputs themselves (L = Σ out²/2).
+            let mut bc = BatchCache::default();
+            mlp.forward_batch(&x, bsz, &mut bc);
+            let gout: Vec<f32> = bc.out()[..bsz * 3].to_vec();
+            let mut batch_grads = vec![0.0f32; mlp.params.len()];
+            mlp.backward_batch(&mut bc, &gout, &mut batch_grads);
+
+            let mut row_grads = vec![0.0f32; mlp.params.len()];
+            let mut cache = Cache::default();
+            for s in 0..bsz {
+                let out = mlp.forward(&x[s * 7..(s + 1) * 7], &mut cache);
+                mlp.backward(&cache, &out, &mut row_grads);
+            }
+            assert_eq!(batch_grads, row_grads, "{act:?}");
+        }
+    }
+
+    #[test]
+    fn batch_cache_reuse_across_sizes_stays_exact() {
+        // A big batch followed by a smaller one must not read stale tail
+        // activations (buffers grow but never shrink).
+        let mut rng = Rng::new(5);
+        let mlp = Mlp::new(&[4, 8, 2], Activation::Tanh, &mut rng);
+        let mut bc = BatchCache::default();
+        let big: Vec<f32> = (0..12 * 4).map(|_| rng.normal() as f32).collect();
+        mlp.forward_batch(&big, 12, &mut bc);
+        let small = &big[..3 * 4];
+        mlp.forward_batch(small, 3, &mut bc);
+        for s in 0..3 {
+            let row = mlp.infer(&small[s * 4..(s + 1) * 4]);
+            assert_eq!(&bc.out()[s * 2..(s + 1) * 2], &row[..]);
+        }
     }
 
     #[test]

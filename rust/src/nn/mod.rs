@@ -6,6 +6,13 @@
 //! All paper baselines use two hidden layers of 64 units, which this module
 //! mirrors by default.
 //!
+//! Since PR 4 the trainers run on the **batch path** —
+//! [`Mlp::forward_batch`]/[`Mlp::backward_batch`] over `[B, dim]` row-major
+//! buffers through a register-blocked GEMM microkernel with reusable
+//! [`BatchCache`] workspaces — which is bit-for-bit identical to the
+//! per-sample path (see `mlp.rs` module docs) but amortises weight traffic
+//! over the whole batch and performs no per-sample allocation.
+//!
 //! The *flagship* PPO path does not use this module for its update — that
 //! runs through the AOT-compiled JAX/Pallas artifact via
 //! [`crate::runtime`] — but the native implementation powers DQN/SAC, the
@@ -15,7 +22,7 @@ pub mod adam;
 pub mod mlp;
 
 pub use adam::Adam;
-pub use mlp::{Activation, Mlp};
+pub use mlp::{Activation, BatchCache, Mlp};
 
 /// Numerically-stable softmax into `out`.
 pub fn softmax(logits: &[f32], out: &mut [f32]) {

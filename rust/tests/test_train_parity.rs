@@ -1,0 +1,132 @@
+//! Training parity: the batched-GEMM + double-buffered-pipeline trainer
+//! must reproduce the serial per-sample trainer **exactly** for a fixed
+//! seed — bitwise for integer fields (actions, boundaries), exact f32
+//! equality for every float tensor (the batch kernels preserve summation
+//! order; see `rust/src/nn/mlp.rs`).
+//!
+//! Layers pinned here:
+//! * `Mlp::forward_batch` vs row-by-row `Mlp::forward` (unit pin);
+//! * `Ppo::collect_rollout` (batched) and `Ppo::collect_rollout_pipelined`
+//!   (batched + overlapped stepping on a sharded engine) vs
+//!   `Ppo::collect_rollout_serial` — all rollout tensors;
+//! * `Ppo::update` (minibatch GEMMs) vs `Ppo::update_serial` — `PpoMetrics`
+//!   and the post-update parameters, across multiple iterations so drift
+//!   anywhere compounds into a failure.
+
+use navix::agents::ppo::{Ppo, PpoConfig, Rollout};
+use navix::agents::{ReturnTracker, OBS_DIM};
+use navix::batch::{BatchedEnv, PipelinedEnv, ShardedEnv};
+use navix::envs::registry::make;
+use navix::nn::{Activation, BatchCache, Mlp};
+use navix::rng::{Key, Rng};
+
+/// The 2×64 policy net shape at a batch size that exercises both the
+/// 4-wide output tiles and the remainder path.
+#[test]
+fn forward_batch_matches_rowwise_forward_on_policy_shapes() {
+    let mut rng = Rng::new(3);
+    let mlp = Mlp::new(&[OBS_DIM, 64, 64, 7], Activation::Tanh, &mut rng);
+    let bsz = 13;
+    let x: Vec<f32> = (0..bsz * OBS_DIM).map(|_| rng.normal() as f32).collect();
+    let mut cache = BatchCache::default();
+    mlp.forward_batch(&x, bsz, &mut cache);
+    for s in 0..bsz {
+        let row = mlp.infer(&x[s * OBS_DIM..(s + 1) * OBS_DIM]);
+        assert_eq!(&cache.out()[s * 7..(s + 1) * 7], &row[..], "sample {s}");
+    }
+}
+
+fn ppo_cfg(b: usize) -> PpoConfig {
+    PpoConfig {
+        num_envs: b,
+        rollout_len: 16,
+        minibatches: 4,
+        epochs: 2,
+        ..PpoConfig::default()
+    }
+}
+
+fn assert_rollouts_equal(a: &Rollout, b: &Rollout, ctx: &str) {
+    assert_eq!(a.actions, b.actions, "{ctx}: actions");
+    assert_eq!(a.boundaries, b.boundaries, "{ctx}: boundaries");
+    assert_eq!(a.obs, b.obs, "{ctx}: obs");
+    assert_eq!(a.logp, b.logp, "{ctx}: logp");
+    assert_eq!(a.values, b.values, "{ctx}: values");
+    assert_eq!(a.rewards, b.rewards, "{ctx}: rewards");
+    assert_eq!(a.discounts, b.discounts, "{ctx}: discounts");
+    assert_eq!(a.last_values, b.last_values, "{ctx}: last_values");
+    assert_eq!(a.advantages, b.advantages, "{ctx}: advantages");
+    assert_eq!(a.targets, b.targets, "{ctx}: targets");
+}
+
+/// Serial per-sample trainer (BatchedEnv) vs the pipelined batched-GEMM
+/// trainer (PipelinedEnv over a 2-shard ShardedEnv): three full
+/// rollout+update iterations must agree on every tensor, metric and
+/// parameter.
+fn pipelined_matches_serial(env_id: &str, seed: u64) {
+    let cfg = make(env_id).unwrap();
+    let b = 8;
+    let mut env_s = BatchedEnv::new(cfg.clone(), b, Key::new(seed));
+    let mut env_p =
+        PipelinedEnv::new(Box::new(ShardedEnv::new(cfg, b, 2, 2, Key::new(seed))));
+    let mut ppo_s = Ppo::new(ppo_cfg(b), OBS_DIM, 7, seed ^ 0x5EED);
+    let mut ppo_p = Ppo::new(ppo_cfg(b), OBS_DIM, 7, seed ^ 0x5EED);
+    let mut ro_s = Rollout::new(16, b, OBS_DIM);
+    let mut ro_p = Rollout::new(16, b, OBS_DIM);
+    let mut tr_s = ReturnTracker::new(64);
+    let mut tr_p = ReturnTracker::new(64);
+
+    for iter in 0..3 {
+        let ctx = format!("{env_id} iter {iter}");
+        ppo_s.collect_rollout_serial(&mut env_s, &mut ro_s, &mut tr_s);
+        ppo_p.collect_rollout_pipelined(&mut env_p, &mut ro_p, &mut tr_p);
+        assert_rollouts_equal(&ro_s, &ro_p, &ctx);
+        assert_eq!(tr_s.episodes, tr_p.episodes, "{ctx}: episode counts");
+        assert_eq!(tr_s.mean(), tr_p.mean(), "{ctx}: mean returns");
+
+        let m_s = ppo_s.update_serial(&ro_s);
+        let m_p = ppo_p.update(&ro_p);
+        assert_eq!(m_s, m_p, "{ctx}: PpoMetrics");
+        assert_eq!(ppo_s.actor.params, ppo_p.actor.params, "{ctx}: actor params");
+        assert_eq!(ppo_s.critic.params, ppo_p.critic.params, "{ctx}: critic params");
+    }
+}
+
+#[test]
+fn pipelined_trainer_matches_serial_on_empty_random() {
+    // Random layouts + frequent autoresets: the pipeline must hand every
+    // reset observation through the swap buffers at the right step.
+    pipelined_matches_serial("Navix-Empty-Random-6x6", 17);
+}
+
+#[test]
+fn pipelined_trainer_matches_serial_on_doorkey() {
+    // A second family with doors/keys and longer episodes.
+    pipelined_matches_serial("Navix-DoorKey-6x6-v0", 23);
+}
+
+/// The batched (non-pipelined) path on a plain BatchedEnv is the same code
+/// the default `train` loop runs — pin it against the oracle too.
+#[test]
+fn batched_trainer_matches_serial_on_batched_env() {
+    let cfg = make("Navix-Empty-Random-6x6").unwrap();
+    let b = 6;
+    let mut env_s = BatchedEnv::new(cfg.clone(), b, Key::new(2));
+    let mut env_b = BatchedEnv::new(cfg, b, Key::new(2));
+    let mut ppo_s = Ppo::new(ppo_cfg(b), OBS_DIM, 7, 4);
+    let mut ppo_b = Ppo::new(ppo_cfg(b), OBS_DIM, 7, 4);
+    let mut ro_s = Rollout::new(16, b, OBS_DIM);
+    let mut ro_b = Rollout::new(16, b, OBS_DIM);
+    let mut tr_s = ReturnTracker::new(64);
+    let mut tr_b = ReturnTracker::new(64);
+    for iter in 0..2 {
+        let ctx = format!("batched iter {iter}");
+        ppo_s.collect_rollout_serial(&mut env_s, &mut ro_s, &mut tr_s);
+        ppo_b.collect_rollout(&mut env_b, &mut ro_b, &mut tr_b);
+        assert_rollouts_equal(&ro_s, &ro_b, &ctx);
+        let m_s = ppo_s.update_serial(&ro_s);
+        let m_b = ppo_b.update(&ro_b);
+        assert_eq!(m_s, m_b, "{ctx}: PpoMetrics");
+        assert_eq!(ppo_s.actor.params, ppo_b.actor.params, "{ctx}: actor params");
+    }
+}
