@@ -185,7 +185,11 @@ fn main() {
         for t in 0..t_len {
             let mut actions = vec![0u8; 16];
             for (i, o) in obs.iter().enumerate() {
-                preprocess_obs(o, &mut x);
+                // The OO vector baseline returns grid-only observations
+                // (the pre-mission API the paper benchmarks): featurise the
+                // grid prefix; the OBS_DIM-wide buffer's mission tail was
+                // allocated zero and is never written, so it stays zero.
+                preprocess_obs(o, &mut x[..o.len()]);
                 let logits = ppo.actor.infer(&x);
                 let a = sample_categorical(&logits, &mut rng);
                 navix::nn::log_softmax(&logits, &mut lp);
@@ -207,7 +211,7 @@ fn main() {
             done_steps += 16;
         }
         for (i, o) in obs.iter().enumerate() {
-            preprocess_obs(o, &mut x);
+            preprocess_obs(o, &mut x[..o.len()]);
             ro.last_values[i] = ppo.critic.infer(&x)[0];
         }
         navix::agents::gae::gae(

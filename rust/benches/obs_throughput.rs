@@ -6,7 +6,8 @@
 //! observation-layer speedup.
 //!
 //! Grid: all six observation kinds × {Empty-16x16, DoorKey-16x16,
-//! LockedRoom, Dynamic-Obstacles-16x16} × B ∈ {256, 2048} (rgb kinds use
+//! LockedRoom, Dynamic-Obstacles-16x16, GoToObj-8x8-N3 (mission
+//! featurisation overhead)} × B ∈ {256, 2048} (rgb kinds use
 //! smaller batches — a 2048-env 512×512×3 rgb buffer alone is 1.6 GB).
 //! Emits `results/BENCH_obs.json` via the bench_harness JSON writer;
 //! methodology and recorded numbers live in `EXPERIMENTS.md` §Perf.
@@ -22,11 +23,14 @@ use navix::rng::Key;
 use navix::systems::observations::{ObsKind, ObsPath};
 use std::time::Instant;
 
-const ENV_IDS: [&str; 4] = [
+const ENV_IDS: [&str; 5] = [
     "Navix-Empty-16x16-v0",
     "Navix-DoorKey-16x16-v0",
     "Navix-LockedRoom-v0",
     "Navix-Dynamic-Obstacles-16x16",
+    // Goal-conditioned family: tracks the mission-featurisation overhead
+    // (the per-step MISSION_DIM write) in BENCH_obs.json.
+    "Navix-GoToObj-8x8-N3-v0",
 ];
 
 const KINDS: [ObsKind; 6] = [
@@ -51,7 +55,13 @@ fn steps_per_s(id: &str, kind: ObsKind, b: usize, steps: usize, path: ObsPath) -
 fn main() {
     let smoke =
         std::env::args().any(|a| a == "--smoke") || std::env::var("NAVIX_BENCH_FAST").is_ok();
-    let ids: &[&str] = if smoke { &ENV_IDS[..2] } else { &ENV_IDS };
+    // Smoke keeps Empty + DoorKey and one mission family, so the CI floor
+    // gate also times the goal-conditioning write.
+    let ids: &[&str] = if smoke {
+        &["Navix-Empty-16x16-v0", "Navix-DoorKey-16x16-v0", "Navix-GoToObj-8x8-N3-v0"]
+    } else {
+        &ENV_IDS
+    };
     let kinds: &[ObsKind] = if smoke {
         &[ObsKind::Symbolic, ObsKind::SymbolicFirstPerson, ObsKind::Rgb]
     } else {

@@ -228,8 +228,18 @@ impl Dqn {
         let mut tracker = ReturnTracker::new(64);
         let b = env.b;
         let mut actions = vec![0u8; b];
-        let mut prev_obs: Vec<Vec<i32>> =
-            (0..b).map(|i| env.obs.env_i32(b, i).to_vec()).collect();
+        // Policy rows are grid + mission: the replay buffer stores the full
+        // goal-conditioned input, so off-policy updates see the goal too.
+        let d = env.obs.stride(b) + crate::agents::MISSION_DIM;
+        debug_assert_eq!(d, self.obs_dim, "agent obs_dim must be grid + mission");
+        let mut next_row = vec![0i32; d];
+        let mut prev_obs: Vec<Vec<i32>> = (0..b)
+            .map(|i| {
+                let mut row = vec![0i32; d];
+                env.obs.copy_policy_row(b, i, &mut row);
+                row
+            })
+            .collect();
         while self.env_steps < total_steps {
             let mut chunk_loss = 0.0;
             for _ in 0..self.cfg.parallel_steps {
@@ -237,25 +247,25 @@ impl Dqn {
                 self.act_eps_batch(&prev_obs, eps, &mut actions);
                 env.step(&actions);
                 for i in 0..b {
-                    let next = env.obs.env_i32(b, i);
+                    env.obs.copy_policy_row(b, i, &mut next_row);
                     let terminated = env.timestep.discount[i] == 0.0;
                     if env.timestep.step_type[i] == crate::core::timestep::StepType::First {
                         // autoreset boundary: the transition that caused it
                         // was already recorded last step.
-                        prev_obs[i].copy_from_slice(next);
+                        prev_obs[i].copy_from_slice(&next_row);
                         continue;
                     }
                     self.replay.push(
                         &prev_obs[i],
                         actions[i],
                         env.timestep.reward[i],
-                        next,
+                        &next_row,
                         terminated,
                     );
                     if env.timestep.step_type[i].is_last() {
                         tracker.push(env.timestep.episodic_return[i]);
                     }
-                    prev_obs[i].copy_from_slice(next);
+                    prev_obs[i].copy_from_slice(&next_row);
                 }
                 self.env_steps += b as u64;
             }
@@ -281,7 +291,7 @@ mod tests {
 
     #[test]
     fn epsilon_schedule_decays_to_final() {
-        let mut dqn = Dqn::new(DqnConfig::default(), 147, 7, 0);
+        let mut dqn = Dqn::new(DqnConfig::default(), crate::agents::OBS_DIM, 7, 0);
         assert!((dqn.epsilon(1000) - 1.0).abs() < 1e-6);
         dqn.env_steps = 500; // = exploration_fraction * total
         assert!((dqn.epsilon(1000) - dqn.cfg.final_eps).abs() < 1e-6);
@@ -306,7 +316,7 @@ mod tests {
             parallel_steps: 64,
             ..Default::default()
         };
-        let mut dqn = Dqn::new(cfg, 147, 7, 2);
+        let mut dqn = Dqn::new(cfg, crate::agents::OBS_DIM, 7, 2);
         let log = dqn.train(&mut env, 60_000);
         let final_ret = log.final_return();
         assert!(

@@ -5,7 +5,10 @@
 //! algorithms.
 //!
 //! All agents consume the batched engine's symbolic first-person
-//! observations; [`preprocess_obs`] is the shared featuriser.
+//! observations *concatenated with the mission feature block*, so
+//! goal-conditioned families (GoToDoor, Fetch, GoToObj, PutNext, …) are
+//! learnable: [`preprocess_obs_batch`] / [`preprocess_env_obs`] are the
+//! shared featurisers.
 
 pub mod dqn;
 pub mod gae;
@@ -18,12 +21,23 @@ pub use dqn::{Dqn, DqnConfig};
 pub use ppo::{Ppo, PpoConfig};
 pub use sac::{Sac, SacConfig};
 
-/// Flattened, normalised observation size for a symbolic first-person view.
-pub const OBS_DIM: usize = 7 * 7 * 3;
+/// Flattened grid-observation size for a symbolic first-person view.
+pub const GRID_OBS_DIM: usize = 7 * 7 * 3;
+
+/// Width of the goal-conditioning feature block every observation batch
+/// carries (see [`crate::core::mission`]).
+pub const MISSION_DIM: usize = crate::core::mission::MISSION_DIM;
+
+/// Policy input size: the flattened, normalised first-person grid features
+/// concatenated with the mission one-hot block. Every agent conditions on
+/// the goal — mission-free families simply see an all-zero block.
+pub const OBS_DIM: usize = GRID_OBS_DIM + MISSION_DIM;
 
 /// Normalise a symbolic i32 observation into `[0, 1]`-ish floats
 /// (tag ≤ 10, colour ≤ 5, state ≤ 3 → divide by 10). Elementwise, so it
-/// works on a single `[obs_dim]` row or a whole `[B × obs_dim]` block.
+/// works on a single `[obs_dim]` row or a whole `[B × obs_dim]` block —
+/// including rows that end in the 0/1 mission block (which lands on the
+/// same 0.1 scale as the grid one-hots).
 pub fn preprocess_obs(obs: &[i32], out: &mut [f32]) {
     debug_assert_eq!(obs.len(), out.len());
     for (o, &x) in out.iter_mut().zip(obs) {
@@ -32,11 +46,31 @@ pub fn preprocess_obs(obs: &[i32], out: &mut [f32]) {
 }
 
 /// Featurise an entire observation batch into one contiguous
-/// `[B × obs_dim]` f32 block in a single pass — the shared entry point of
-/// every batched trainer (PPO/DQN/SAC and the XLA path). Panics on rgb
-/// batches, like [`crate::batch::ObsBatch::as_i32`].
+/// `[B × (grid + MISSION_DIM)]` f32 block — per env, the normalised grid
+/// features followed by the mission features — the shared entry point of
+/// every batched trainer (PPO/DQN/SAC). Bitwise identical to running
+/// [`preprocess_env_obs`] row by row (the serial oracles pin this).
+/// Panics on rgb batches, like [`crate::batch::ObsBatch::as_i32`].
 pub fn preprocess_obs_batch(obs: &crate::batch::ObsBatch, out: &mut [f32]) {
-    preprocess_obs(obs.as_i32(), out)
+    let b = obs.mission.len() / MISSION_DIM;
+    let grid = obs.as_i32();
+    let g = grid.len() / b;
+    let d = g + MISSION_DIM;
+    debug_assert_eq!(out.len(), b * d);
+    for i in 0..b {
+        let row = &mut out[i * d..(i + 1) * d];
+        preprocess_obs(&grid[i * g..(i + 1) * g], &mut row[..g]);
+        preprocess_obs(obs.mission_row(b, i), &mut row[g..]);
+    }
+}
+
+/// Featurise one env's observation — grid then mission — into `out`
+/// (`grid + MISSION_DIM` floats). The per-sample twin of
+/// [`preprocess_obs_batch`], used by the serial parity oracles.
+pub fn preprocess_env_obs(obs: &crate::batch::ObsBatch, b: usize, i: usize, out: &mut [f32]) {
+    let grid = obs.env_i32(b, i);
+    preprocess_obs(grid, &mut out[..grid.len()]);
+    preprocess_obs(obs.mission_row(b, i), &mut out[grid.len()..]);
 }
 
 /// Grow-only resize for the trainers' reusable workspace buffers — the
@@ -106,6 +140,29 @@ mod tests {
         let mut out = [0.0; 4];
         preprocess_obs(&obs, &mut out);
         assert_eq!(out, [1.0, 0.5, 0.0, 0.2]);
+    }
+
+    #[test]
+    fn batch_featurise_concats_mission_and_matches_per_env_path() {
+        use crate::batch::BatchedEnv;
+        use crate::rng::Key;
+        let cfg = crate::envs::registry::make("Navix-GoToDoor-5x5-v0").unwrap();
+        let b = 3;
+        let env = BatchedEnv::new(cfg, b, Key::new(4));
+        let g = env.obs.stride(b);
+        let d = g + MISSION_DIM;
+        assert_eq!(d, OBS_DIM, "first-person grid + mission = the policy input dim");
+        let mut batch = vec![0.0f32; b * d];
+        preprocess_obs_batch(&env.obs, &mut batch);
+        let mut row = vec![0.0f32; d];
+        for i in 0..b {
+            preprocess_env_obs(&env.obs, b, i, &mut row);
+            assert_eq!(&batch[i * d..(i + 1) * d], &row[..], "env {i}");
+            assert!(
+                row[g..].iter().any(|&x| x != 0.0),
+                "env {i}: mission features must reach the policy"
+            );
+        }
     }
 
     #[test]

@@ -29,7 +29,7 @@
 //! [`crate::nn::mlp`]).
 
 use crate::agents::{
-    ensure, gae, preprocess_obs, preprocess_obs_batch, CurvePoint, ReturnTracker, TrainLog,
+    ensure, gae, preprocess_env_obs, preprocess_obs_batch, CurvePoint, ReturnTracker, TrainLog,
 };
 use crate::batch::{BatchStepper, PipelinedEnv};
 use crate::core::actions::Action;
@@ -330,7 +330,7 @@ impl Ppo {
         let mut actions = vec![0u8; b];
         for t in 0..t_len {
             for i in 0..b {
-                preprocess_obs(env.obs().env_i32(b, i), &mut x);
+                preprocess_env_obs(env.obs(), b, i, &mut x);
                 let logits = self.actor.infer(&x);
                 let value = self.critic.infer(&x)[0];
                 let a = sample_categorical(&logits, &mut self.rng);
@@ -347,7 +347,7 @@ impl Ppo {
             Ppo::record_timestep(ro, tracker, env.timestep(), t * b, b);
         }
         for i in 0..b {
-            preprocess_obs(env.obs().env_i32(b, i), &mut x);
+            preprocess_env_obs(env.obs(), b, i, &mut x);
             ro.last_values[i] = self.critic.infer(&x)[0];
         }
         gae::gae(
@@ -601,10 +601,10 @@ impl Ppo {
         log
     }
 
-    /// Greedy action for evaluation.
-    pub fn act_greedy(&self, obs: &[i32]) -> Action {
+    /// Greedy action for env `i` of an observation batch (evaluation).
+    pub fn act_greedy(&self, obs: &crate::batch::ObsBatch, b: usize, i: usize) -> Action {
         let mut x = vec![0.0f32; self.obs_dim];
-        preprocess_obs(obs, &mut x);
+        preprocess_env_obs(obs, b, i, &mut x);
         Action::from_u8(crate::nn::argmax(&self.actor.infer(&x)) as u8)
     }
 }
@@ -619,8 +619,9 @@ mod tests {
     #[test]
     fn rollout_fills_all_fields() {
         let mut env = BatchedEnv::new(make("Navix-Empty-5x5-v0").unwrap(), 4, Key::new(0));
-        let mut ppo = Ppo::new(PpoConfig { rollout_len: 8, ..Default::default() }, 147, 7, 0);
-        let mut ro = Rollout::new(8, 4, 147);
+        let d = crate::agents::OBS_DIM;
+        let mut ppo = Ppo::new(PpoConfig { rollout_len: 8, ..Default::default() }, d, 7, 0);
+        let mut ro = Rollout::new(8, 4, d);
         let mut tracker = ReturnTracker::new(8);
         ppo.collect_rollout(&mut env, &mut ro, &mut tracker);
         assert!(ro.logp.iter().all(|&l| l <= 0.0), "log-probs must be ≤ 0");
@@ -632,11 +633,11 @@ mod tests {
         let mut env = BatchedEnv::new(make("Navix-Empty-5x5-v0").unwrap(), 4, Key::new(0));
         let mut ppo = Ppo::new(
             PpoConfig { rollout_len: 16, minibatches: 2, epochs: 2, ..Default::default() },
-            147,
+            crate::agents::OBS_DIM,
             7,
             0,
         );
-        let mut ro = Rollout::new(16, 4, 147);
+        let mut ro = Rollout::new(16, 4, crate::agents::OBS_DIM);
         let mut tracker = ReturnTracker::new(8);
         ppo.collect_rollout(&mut env, &mut ro, &mut tracker);
         let before = ppo.actor.params.clone();
@@ -656,10 +657,11 @@ mod tests {
             PpoConfig { rollout_len: 12, minibatches: 3, epochs: 2, ..Default::default() };
         let mut env_a = BatchedEnv::new(cfg.clone(), 4, Key::new(5));
         let mut env_b = BatchedEnv::new(cfg, 4, Key::new(5));
-        let mut ppo_a = Ppo::new(pcfg.clone(), 147, 7, 9);
-        let mut ppo_b = Ppo::new(pcfg, 147, 7, 9);
-        let mut ro_a = Rollout::new(12, 4, 147);
-        let mut ro_b = Rollout::new(12, 4, 147);
+        let d = crate::agents::OBS_DIM;
+        let mut ppo_a = Ppo::new(pcfg.clone(), d, 7, 9);
+        let mut ppo_b = Ppo::new(pcfg, d, 7, 9);
+        let mut ro_a = Rollout::new(12, 4, d);
+        let mut ro_b = Rollout::new(12, 4, d);
         let mut tr_a = ReturnTracker::new(8);
         let mut tr_b = ReturnTracker::new(8);
         for _ in 0..2 {
@@ -685,7 +687,7 @@ mod tests {
         let mut env = BatchedEnv::new(make("Navix-Empty-5x5-v0").unwrap(), 8, Key::new(1));
         let mut ppo = Ppo::new(
             PpoConfig { num_envs: 8, rollout_len: 64, lr: 1e-3, ..Default::default() },
-            147,
+            crate::agents::OBS_DIM,
             7,
             1,
         );

@@ -337,17 +337,27 @@ impl Sac {
         let mut tracker = ReturnTracker::new(64);
         let b = env.b;
         let mut actions = vec![0u8; b];
-        let mut prev_obs: Vec<Vec<i32>> =
-            (0..b).map(|i| env.obs.env_i32(b, i).to_vec()).collect();
+        // Policy rows are grid + mission: the replay buffer stores the full
+        // goal-conditioned input, so off-policy updates see the goal too.
+        let d = env.obs.stride(b) + crate::agents::MISSION_DIM;
+        debug_assert_eq!(d, self.obs_dim, "agent obs_dim must be grid + mission");
+        let mut next_row = vec![0i32; d];
+        let mut prev_obs: Vec<Vec<i32>> = (0..b)
+            .map(|i| {
+                let mut row = vec![0i32; d];
+                env.obs.copy_policy_row(b, i, &mut row);
+                row
+            })
+            .collect();
         while self.env_steps < total_steps {
             let mut chunk_loss = 0.0;
             for _ in 0..self.cfg.parallel_steps {
                 self.act_sample_batch(&prev_obs, &mut actions);
                 env.step(&actions);
                 for i in 0..b {
-                    let next = env.obs.env_i32(b, i);
+                    env.obs.copy_policy_row(b, i, &mut next_row);
                     if env.timestep.step_type[i] == crate::core::timestep::StepType::First {
-                        prev_obs[i].copy_from_slice(next);
+                        prev_obs[i].copy_from_slice(&next_row);
                         continue;
                     }
                     let terminated = env.timestep.discount[i] == 0.0;
@@ -355,13 +365,13 @@ impl Sac {
                         &prev_obs[i],
                         actions[i],
                         env.timestep.reward[i],
-                        next,
+                        &next_row,
                         terminated,
                     );
                     if env.timestep.step_type[i].is_last() {
                         tracker.push(env.timestep.episodic_return[i]);
                     }
-                    prev_obs[i].copy_from_slice(next);
+                    prev_obs[i].copy_from_slice(&next_row);
                 }
                 self.env_steps += b as u64;
             }
@@ -408,7 +418,7 @@ mod tests {
             target_entropy_ratio: 0.1,
             ..Default::default()
         };
-        let mut sac = Sac::new(cfg, 147, 7, 3);
+        let mut sac = Sac::new(cfg, crate::agents::OBS_DIM, 7, 3);
         let log = sac.train(&mut env, 60_000);
         let final_ret = log.final_return();
         assert!(

@@ -15,6 +15,7 @@ use crate::core::components::{Color, Direction, DoorState};
 use crate::core::entities::{CellType, Tag};
 use crate::core::events::Events;
 use crate::core::grid::Pos;
+use crate::core::mission::{Mission, MissionVerb};
 use crate::core::state::BatchedState;
 use crate::envs::{EnvConfig, LayoutError};
 use crate::rng::{Key, Rng};
@@ -231,17 +232,11 @@ impl MiniGridEnv {
     /// retried with successor episode keys, mirroring the batched engine's
     /// deterministic skip-the-same-keys behaviour.
     pub fn reset(&mut self) -> Vec<i32> {
-        const MAX_TRIES: usize = 8;
-        let mut last_err = None;
-        for _ in 0..MAX_TRIES {
+        let (root, id) = (self.key, self.cfg.id.clone());
+        crate::envs::retry_episode_keys(&id, root, |_| {
             self.episode += 1;
-            let ep_key = self.key.fold_in(self.episode);
-            match self.try_reset_with_key(ep_key) {
-                Ok(obs) => return obs,
-                Err(e) => last_err = Some(e),
-            }
-        }
-        panic!("{} ({MAX_TRIES} episode keys exhausted)", last_err.unwrap());
+            self.try_reset_with_key(root.fold_in(self.episode))
+        })
     }
 
     /// Reset the episode from an explicit episode key (panics on an
@@ -362,18 +357,15 @@ impl MiniGridEnv {
                     if can {
                         let obj = self.take(fwd);
                         if let Some(o) = &obj {
-                            if o.tag() == Tag::BALL
-                                && self.mission == ((Tag::BALL << 8) | o.color() as i32)
-                            {
+                            let mission = Mission::from_raw(self.mission);
+                            if o.tag() == Tag::BALL && mission.is_pick_up(Tag::BALL, o.color()) {
                                 events.ball_picked = true;
                             }
                             // Pickup-mission events (Fetch/UnlockPickup),
-                            // mirroring the batched intervention system.
-                            let mission_tag = self.mission >> 8;
-                            if self.mission >= 0
-                                && matches!(mission_tag, Tag::KEY | Tag::BALL | Tag::BOX)
-                            {
-                                if self.mission == ((o.tag() << 8) | o.color() as i32) {
+                            // mirroring the batched intervention system:
+                            // only the pick-up verb fires them.
+                            if mission.verb() == Some(MissionVerb::PickUp) {
+                                if mission.matches(o.tag(), o.color()) {
                                     events.object_picked = true;
                                 } else {
                                     events.wrong_pickup = true;
@@ -387,6 +379,26 @@ impl MiniGridEnv {
             Action::Drop => {
                 if self.carrying.is_some() && self.in_bounds(fwd) && self.get(fwd).is_none() {
                     let obj = self.carrying.take();
+                    let mission = Mission::from_raw(self.mission);
+                    if let Some(o) = &obj {
+                        // PutNext success: the mission's moved object lands
+                        // 4-adjacent to its second object (same check as the
+                        // batched intervention system).
+                        if mission.verb() == Some(MissionVerb::PutNext)
+                            && mission.matches(o.tag(), o.color())
+                        {
+                            let (nt, nc) = (mission.near_kind_tag(), mission.near_color());
+                            let adjacent =
+                                [(-1, 0), (1, 0), (0, -1), (0, 1)].iter().any(|&(dr, dc)| {
+                                    self.get(Pos::new(fwd.r + dr, fwd.c + dc))
+                                        .map(|n| n.tag() == nt && n.color() == nc)
+                                        .unwrap_or(false)
+                                });
+                            if adjacent {
+                                events.object_placed = true;
+                            }
+                        }
+                    }
                     self.set(fwd, obj);
                 }
             }
@@ -407,9 +419,13 @@ impl MiniGridEnv {
             }
             Action::Done => {
                 if let Some(o) = self.get(fwd) {
-                    if o.tag() == Tag::DOOR && self.mission == ((Tag::DOOR << 8) | o.color() as i32)
-                    {
-                        events.door_done = true;
+                    let mission = Mission::from_raw(self.mission);
+                    if mission.is_go_to(o.tag(), o.color()) {
+                        if o.tag() == Tag::DOOR {
+                            events.door_done = true;
+                        } else {
+                            events.object_reached = true;
+                        }
                     }
                 }
             }
@@ -574,6 +590,8 @@ fn eval_reward(cfg: &EnvConfig, events: &Events, action: Action, t: u32) -> f32 
             RewardFn::OnBallHit => -(events.ball_hit as i32 as f32),
             RewardFn::OnDoorUnlocked => events.door_unlocked as i32 as f32,
             RewardFn::OnObjectPicked => events.object_picked as i32 as f32,
+            RewardFn::OnObjectReached => events.object_reached as i32 as f32,
+            RewardFn::OnObjectPlaced => events.object_placed as i32 as f32,
             RewardFn::Free => 0.0,
             RewardFn::ActionCost(c) => {
                 if action == Action::Done {
@@ -607,6 +625,8 @@ fn eval_termination(cfg: &EnvConfig, events: &Events) -> bool {
         TermFn::OnDoorUnlocked => events.door_unlocked,
         TermFn::OnObjectPicked => events.object_picked,
         TermFn::OnWrongPickup => events.wrong_pickup,
+        TermFn::OnObjectReached => events.object_reached,
+        TermFn::OnObjectPlaced => events.object_placed,
         TermFn::Free => false,
     })
 }

@@ -43,6 +43,7 @@ pub use sharded::ShardedEnv;
 use std::sync::Arc;
 
 use crate::core::actions::Action;
+use crate::core::mission::MISSION_DIM;
 use crate::core::state::{cellcode, BatchedState};
 use crate::core::timestep::{BatchedTimestep, StepType};
 use crate::envs::EnvConfig;
@@ -52,52 +53,103 @@ use crate::systems::observations::{rgb_incremental, ObsKind, ObsPath};
 use crate::systems::sprites::SpriteSheet;
 use crate::systems::transition::transition;
 
-/// Observation storage for a batch (dtype depends on the obs function).
+/// Grid-observation storage for a batch (dtype depends on the obs function).
 #[derive(Clone, Debug)]
-pub enum ObsBatch {
+pub enum ObsData {
     I32(Vec<i32>),
     U8(Vec<u8>),
 }
 
+/// Observation batch: the grid encoding (`data`, `[B × stride]`) plus the
+/// fixed-width goal-conditioning channel (`mission`,
+/// `[B ×`[`MISSION_DIM`]`]` i32 one-hots — all-zero for mission-free
+/// families). Every engine ([`BatchedEnv`], [`ShardedEnv`],
+/// [`PipelinedEnv`]) fills both on every reset/step, so the mission is part
+/// of the observation contract, not a state peek.
+#[derive(Clone, Debug)]
+pub struct ObsBatch {
+    pub data: ObsData,
+    pub mission: Vec<i32>,
+}
+
 impl ObsBatch {
-    /// Per-env flat length.
+    /// Allocate a zeroed batch: `stride` grid elements per env (u8 for rgb
+    /// kinds, i32 otherwise) plus the mission channel.
+    pub fn alloc(rgb: bool, b: usize, stride: usize) -> ObsBatch {
+        ObsBatch {
+            data: if rgb {
+                ObsData::U8(vec![0; b * stride])
+            } else {
+                ObsData::I32(vec![0; b * stride])
+            },
+            mission: vec![0; b * MISSION_DIM],
+        }
+    }
+
+    /// Per-env flat grid length (the mission channel is separate).
     pub fn stride(&self, b: usize) -> usize {
-        match self {
-            ObsBatch::I32(v) => v.len() / b,
-            ObsBatch::U8(v) => v.len() / b,
+        match &self.data {
+            ObsData::I32(v) => v.len() / b,
+            ObsData::U8(v) => v.len() / b,
         }
     }
 
-    /// i32 view of env `i` (panics on rgb batches).
+    /// i32 grid view of env `i` (panics on rgb batches).
     pub fn env_i32(&self, b: usize, i: usize) -> &[i32] {
-        match self {
-            ObsBatch::I32(v) => {
+        match &self.data {
+            ObsData::I32(v) => {
                 let s = v.len() / b;
                 &v[i * s..(i + 1) * s]
             }
-            ObsBatch::U8(_) => panic!("rgb observation accessed as i32"),
+            ObsData::U8(_) => panic!("rgb observation accessed as i32"),
         }
     }
 
-    /// u8 view of env `i` (panics on symbolic batches).
+    /// u8 grid view of env `i` (panics on symbolic batches).
     pub fn env_u8(&self, b: usize, i: usize) -> &[u8] {
-        match self {
-            ObsBatch::U8(v) => {
+        match &self.data {
+            ObsData::U8(v) => {
                 let s = v.len() / b;
                 &v[i * s..(i + 1) * s]
             }
-            ObsBatch::I32(_) => panic!("symbolic observation accessed as u8"),
+            ObsData::I32(_) => panic!("symbolic observation accessed as u8"),
         }
     }
 
-    /// The whole batch as one contiguous `[B × stride]` i32 slice (panics
-    /// on rgb batches). The batched trainers featurise this in one pass
-    /// instead of `B` per-env slices.
+    /// The whole grid batch as one contiguous `[B × stride]` i32 slice
+    /// (panics on rgb batches). The batched trainers featurise this in one
+    /// pass instead of `B` per-env slices.
     pub fn as_i32(&self) -> &[i32] {
-        match self {
-            ObsBatch::I32(v) => v,
-            ObsBatch::U8(_) => panic!("rgb observation accessed as i32"),
+        match &self.data {
+            ObsData::I32(v) => v,
+            ObsData::U8(_) => panic!("rgb observation accessed as i32"),
         }
+    }
+
+    /// Mission feature row of env `i`.
+    pub fn mission_row(&self, b: usize, i: usize) -> &[i32] {
+        let m = self.mission.len() / b;
+        &self.mission[i * m..(i + 1) * m]
+    }
+
+    /// Copy env `i`'s full policy input — grid i32s followed by the mission
+    /// features — into `out` (`stride + MISSION_DIM` long). The replay-based
+    /// agents store exactly this row.
+    pub fn copy_policy_row(&self, b: usize, i: usize, out: &mut [i32]) {
+        let grid = self.env_i32(b, i);
+        out[..grid.len()].copy_from_slice(grid);
+        out[grid.len()..].copy_from_slice(self.mission_row(b, i));
+    }
+
+    /// Copy another batch's contents into this one (same shape/dtype); the
+    /// pipelined engine publishes the back buffer with this.
+    pub fn copy_from(&mut self, src: &ObsBatch) {
+        match (&mut self.data, &src.data) {
+            (ObsData::I32(dst), ObsData::I32(src)) => dst.copy_from_slice(src),
+            (ObsData::U8(dst), ObsData::U8(src)) => dst.copy_from_slice(src),
+            _ => unreachable!("observation dtype diverged between engines"),
+        }
+        self.mission.copy_from_slice(&src.mission);
     }
 }
 
@@ -138,11 +190,7 @@ impl BatchedEnv {
     pub fn with_offset(cfg: EnvConfig, b: usize, key: Key, index_offset: usize) -> Self {
         let state = BatchedState::new(b, cfg.h, cfg.w, cfg.caps);
         let obs_len = cfg.obs.len(cfg.h, cfg.w);
-        let obs = if cfg.obs.kind.is_rgb() {
-            ObsBatch::U8(vec![0; b * obs_len])
-        } else {
-            ObsBatch::I32(vec![0; b * obs_len])
-        };
+        let obs = ObsBatch::alloc(cfg.obs.kind.is_rgb(), b, obs_len);
         // One process-wide sprite sheet: rgb engines (and every shard of a
         // ShardedEnv) share the rendered tiles instead of rebuilding them.
         let sprites = if cfg.obs.kind.is_rgb() { Some(SpriteSheet::shared()) } else { None };
@@ -184,33 +232,21 @@ impl BatchedEnv {
         Action::N
     }
 
-    /// Episode key for local env `i` (see the module-level RNG contract).
-    #[inline]
-    fn episode_key(&self, i: usize) -> Key {
-        self.key.fold_in((self.index_offset + i) as u64).fold_in(self.reset_counts[i])
-    }
-
     /// Reset env `i`'s state slot with a fresh episode key. A layout
     /// generator that cannot place an entity is retried with successor
     /// episode keys — deterministic (and therefore shard-invariant),
     /// because failure is a pure function of the key, so every engine
-    /// covering this env skips exactly the same keys.
+    /// covering this env skips exactly the same keys. The retry loop (and
+    /// its env-id + root-key panic on exhaustion) is shared with the
+    /// baseline engine: [`crate::envs::retry_episode_keys`].
     fn reset_slot_fresh(&mut self, i: usize) {
-        const MAX_TRIES: usize = 8;
-        for attempt in 1..=MAX_TRIES {
-            self.reset_counts[i] += 1;
-            let key = self.episode_key(i);
-            let mut slot = self.state.slot_mut(i);
-            match self.cfg.reset_slot(&mut slot, key) {
-                Ok(()) => return,
-                Err(e) if attempt == MAX_TRIES => {
-                    // Only an unsatisfiable configuration (capacity/geometry
-                    // bug) fails MAX_TRIES independent keys in a row.
-                    panic!("{e} ({MAX_TRIES} episode keys exhausted)")
-                }
-                Err(_) => {}
-            }
-        }
+        let BatchedEnv { cfg, state, reset_counts, key, index_offset, .. } = self;
+        let (key, offset) = (*key, *index_offset);
+        crate::envs::retry_episode_keys(&cfg.id, key, |_| {
+            reset_counts[i] += 1;
+            let ep_key = key.fold_in((offset + i) as u64).fold_in(reset_counts[i]);
+            cfg.reset_slot(&mut state.slot_mut(i), ep_key)
+        });
     }
 
     /// Reset every environment (fresh episode keys) and write observations.
@@ -283,12 +319,12 @@ impl BatchedEnv {
     fn write_obs(&mut self, i: usize) {
         let slot = self.state.slot(i);
         let stride = self.cfg.obs.len(self.cfg.h, self.cfg.w);
-        match &mut self.obs {
-            ObsBatch::I32(v) => {
+        match &mut self.obs.data {
+            ObsData::I32(v) => {
                 let out = &mut v[i * stride..(i + 1) * stride];
                 self.cfg.obs.write_i32_path(self.obs_path, &slot, out);
             }
-            ObsBatch::U8(v) => {
+            ObsData::U8(v) => {
                 let sheet = self.sprites.as_ref().expect("sprite sheet for rgb obs");
                 let out = &mut v[i * stride..(i + 1) * stride];
                 if self.cfg.obs.kind == ObsKind::Rgb && self.obs_path == ObsPath::Overlay {
@@ -303,6 +339,9 @@ impl BatchedEnv {
                 }
             }
         }
+        // The goal-conditioning side channel rides along with every kind.
+        let mrow = &mut self.obs.mission[i * MISSION_DIM..(i + 1) * MISSION_DIM];
+        self.cfg.obs.write_mission_path(self.obs_path, &slot, mrow);
     }
 
     /// Convenience: run `steps` lockstep iterations with uniformly random
@@ -484,10 +523,34 @@ mod tests {
     fn rgb_batch_allocates_u8() {
         let cfg = make("Navix-Empty-5x5-v0").unwrap().with_observation(ObsKind::Rgb);
         let e = BatchedEnv::new(cfg, 2, Key::new(0));
-        match &e.obs {
-            ObsBatch::U8(v) => assert_eq!(v.len(), 2 * 160 * 160 * 3),
+        match &e.obs.data {
+            ObsData::U8(v) => assert_eq!(v.len(), 2 * 160 * 160 * 3),
             _ => panic!("rgb must be u8"),
         }
+        assert_eq!(e.obs.mission.len(), 2 * MISSION_DIM, "mission channel rides along");
+    }
+
+    #[test]
+    fn mission_channel_tracks_state_and_clears_for_goal_envs() {
+        use crate::core::mission::Mission;
+        // Mission env: features present and equal to the state's mission.
+        let e = env("Navix-GoToDoor-5x5-v0", 3);
+        for i in 0..3 {
+            let mut expect = [0i32; MISSION_DIM];
+            Mission::from_raw(e.state.mission[i]).write_features(&mut expect);
+            assert_eq!(e.obs.mission_row(3, i), &expect[..], "env {i}");
+            assert_eq!(e.obs.mission_row(3, i)[0], 1, "env {i}: mission must be present");
+        }
+        // Goal env: the channel exists but stays all-zero.
+        let e = env("Navix-Empty-5x5-v0", 2);
+        assert!(e.obs.mission.iter().all(|&x| x == 0));
+        // copy_policy_row concatenates grid + mission.
+        let e = env("Navix-Fetch-5x5-N2-v0", 2);
+        let stride = e.obs.stride(2);
+        let mut row = vec![0i32; stride + MISSION_DIM];
+        e.obs.copy_policy_row(2, 1, &mut row);
+        assert_eq!(&row[..stride], e.obs.env_i32(2, 1));
+        assert_eq!(&row[stride..], e.obs.mission_row(2, 1));
     }
 
     #[test]

@@ -142,9 +142,12 @@ impl PipelinedEnv {
 
     /// Block until the in-flight step finishes, then swap the buffers so
     /// the front holds the new timestep + observations. No-op if nothing
-    /// is in flight. Panics (instead of hanging) if the stepper thread
-    /// died — a panic inside `env.step` happens with the mutex released,
-    /// so it cannot poison the lock and must be detected by liveness.
+    /// is in flight. If the stepper thread died instead of completing the
+    /// epoch — a panic inside `env.step` happens with the mutex released,
+    /// so it cannot poison the lock and must be detected by liveness — the
+    /// worker's own panic payload is reclaimed from its `JoinHandle` and
+    /// re-raised here, so the caller sees the root cause (env id, failing
+    /// key, …) rather than a generic "thread died" message.
     pub fn sync(&mut self) {
         let Some(epoch) = self.in_flight.take() else { return };
         let mut st = self.control.state.lock().unwrap();
@@ -159,7 +162,14 @@ impl PipelinedEnv {
                 && st.completed < epoch
                 && self.worker.as_ref().map_or(true, |w| w.is_finished())
             {
-                panic!("PipelinedEnv stepper thread died mid-step (env panic?)");
+                drop(st); // release before joining; nothing else holds it
+                match self.worker.take().map(JoinHandle::join) {
+                    Some(Err(payload)) => std::panic::resume_unwind(payload),
+                    _ => panic!(
+                        "PipelinedEnv stepper thread exited without completing \
+                         epoch {epoch} (and without panicking)"
+                    ),
+                }
             }
         }
         std::mem::swap(&mut self.front_ts, &mut st.back_ts);
@@ -261,11 +271,7 @@ fn stepper_loop(mut env: Box<dyn BatchStepper + Send>, control: Arc<Control>) {
         st.back_ts.discount.copy_from_slice(&ts.discount);
         st.back_ts.step_type.copy_from_slice(&ts.step_type);
         st.back_ts.episodic_return.copy_from_slice(&ts.episodic_return);
-        match (&mut st.back_obs, env.obs()) {
-            (ObsBatch::I32(dst), ObsBatch::I32(src)) => dst.copy_from_slice(src),
-            (ObsBatch::U8(dst), ObsBatch::U8(src)) => dst.copy_from_slice(src),
-            _ => unreachable!("pipelined obs dtype diverged from the engine"),
-        }
+        st.back_obs.copy_from(env.obs());
         st.completed = seen;
         control.done.notify_one();
     }
@@ -332,5 +338,47 @@ mod tests {
     fn drop_joins_the_stepper_thread() {
         let p = pipelined("Navix-Empty-5x5-v0", 2);
         drop(p); // must not hang or leak the thread
+    }
+
+    /// A stepper that dies mid-step with a distinctive payload.
+    struct Exploding {
+        ts: BatchedTimestep,
+        obs: ObsBatch,
+    }
+
+    impl BatchStepper for Exploding {
+        fn batch_size(&self) -> usize {
+            1
+        }
+        fn step(&mut self, _actions: &[u8]) {
+            panic!("layout generation failed for Navix-Exploding-v0 (root key 0xDEAD)");
+        }
+        fn timestep(&self) -> &BatchedTimestep {
+            &self.ts
+        }
+        fn obs(&self) -> &ObsBatch {
+            &self.obs
+        }
+        fn reset_all(&mut self) {}
+    }
+
+    #[test]
+    fn stepper_panic_payload_reaches_the_caller() {
+        // The satellite fix for the generic "stepper thread died mid-step"
+        // panic: the worker's own payload (env id, root key, …) must be
+        // re-raised on the caller thread, not replaced.
+        let env = Exploding { ts: BatchedTimestep::first(1), obs: ObsBatch::alloc(false, 1, 4) };
+        let mut p = PipelinedEnv::new(Box::new(env));
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| p.step(&[0])))
+            .expect_err("the worker panic must propagate");
+        let msg = err
+            .downcast_ref::<&str>()
+            .map(|s| s.to_string())
+            .or_else(|| err.downcast_ref::<String>().cloned())
+            .unwrap_or_default();
+        assert!(
+            msg.contains("Navix-Exploding-v0") && msg.contains("0xDEAD"),
+            "caller must see the worker's own payload, got: {msg:?}"
+        );
     }
 }

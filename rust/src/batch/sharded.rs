@@ -32,8 +32,9 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use crate::batch::{BatchStepper, BatchedEnv, ObsBatch};
+use crate::batch::{BatchStepper, BatchedEnv, ObsBatch, ObsData};
 use crate::core::actions::Action;
+use crate::core::mission::MISSION_DIM;
 use crate::core::timestep::BatchedTimestep;
 use crate::envs::EnvConfig;
 use crate::rng::Key;
@@ -118,11 +119,7 @@ impl ShardedEnv {
             })));
         }
 
-        let obs = if cfg.obs.kind.is_rgb() {
-            ObsBatch::U8(vec![0; b * obs_stride])
-        } else {
-            ObsBatch::I32(vec![0; b * obs_stride])
-        };
+        let obs = ObsBatch::alloc(cfg.obs.kind.is_rgb(), b, obs_stride);
 
         let control = Arc::new(Control {
             state: Mutex::new(PoolState {
@@ -251,15 +248,17 @@ impl ShardedEnv {
             self.timestep.step_type[lo..hi].copy_from_slice(&ts.step_type);
             self.timestep.episodic_return[lo..hi].copy_from_slice(&ts.episodic_return);
             let s = self.obs_stride;
-            match (&mut self.obs, &sh.env.obs) {
-                (ObsBatch::I32(dst), ObsBatch::I32(src)) => {
+            match (&mut self.obs.data, &sh.env.obs.data) {
+                (ObsData::I32(dst), ObsData::I32(src)) => {
                     dst[lo * s..hi * s].copy_from_slice(src);
                 }
-                (ObsBatch::U8(dst), ObsBatch::U8(src)) => {
+                (ObsData::U8(dst), ObsData::U8(src)) => {
                     dst[lo * s..hi * s].copy_from_slice(src);
                 }
                 _ => unreachable!("shard obs dtype diverged from the mirror"),
             }
+            self.obs.mission[lo * MISSION_DIM..hi * MISSION_DIM]
+                .copy_from_slice(&sh.env.obs.mission);
         }
     }
 }

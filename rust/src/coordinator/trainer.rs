@@ -70,6 +70,10 @@ impl XlaPpo {
             fwd,
             update,
             mb_size,
+            // The AOT artifacts are compiled against the grid-only input
+            // shape (147), so the XLA path stays mission-blind until the
+            // Python layer regenerates them with OBS_DIM + MISSION_DIM
+            // inputs — see EXPERIMENTS.md §Goal-conditioning.
             obs_dim: packing::OBS_DIM,
             n_actions: packing::N_ACTIONS,
             rng: Rng::new(seed ^ 0x9E37),

@@ -30,6 +30,12 @@ pub struct Events {
     /// Player picked up a pickable that is *not* the mission target while a
     /// pickable mission is active (the Fetch failure event).
     pub wrong_pickup: bool,
+    /// Player performed `done` facing the mission-target object of a
+    /// pickable kind under a go-to mission (GoToObj success).
+    pub object_reached: bool,
+    /// Player dropped the mission-target object onto a cell 4-adjacent to
+    /// the mission's second object (PutNext success).
+    pub object_placed: bool,
 }
 
 impl Events {
@@ -42,6 +48,8 @@ impl Events {
         door_unlocked: false,
         object_picked: false,
         wrong_pickup: false,
+        object_reached: false,
+        object_placed: false,
     };
 
     /// Any terminal-success/failure event fired this step?
@@ -55,6 +63,8 @@ impl Events {
             || self.door_unlocked
             || self.object_picked
             || self.wrong_pickup
+            || self.object_reached
+            || self.object_placed
     }
 }
 
@@ -70,7 +80,7 @@ mod tests {
 
     #[test]
     fn any_detects_each_latch() {
-        for i in 0..8 {
+        for i in 0..10 {
             let mut e = Events::NONE;
             match i {
                 0 => e.goal_reached = true,
@@ -80,7 +90,9 @@ mod tests {
                 4 => e.door_done = true,
                 5 => e.door_unlocked = true,
                 6 => e.object_picked = true,
-                _ => e.wrong_pickup = true,
+                7 => e.wrong_pickup = true,
+                8 => e.object_reached = true,
+                _ => e.object_placed = true,
             }
             assert!(e.any());
         }

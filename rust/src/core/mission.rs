@@ -1,0 +1,368 @@
+//! The typed `Mission` component — goal conditioning as first-class state.
+//!
+//! NAVIX positions MiniGrid as a substrate for *language-conditioned* RL:
+//! several families (GoToDoor, KeyCorridor, Fetch, Unlock/UnlockPickup, and
+//! the BabyAI-style GoToObj/PutNext families) parameterise each episode with
+//! a goal — "go to the red door", "pick up the blue key", "put the ball next
+//! to the box". Before this module the goal lived in the batched state as a
+//! bare `i32` poked by layout generators as `(tag << 8) | colour` and decoded
+//! by hand in the intervention system; nothing ever *showed* it to the
+//! policy, so every mission-conditioned env was unlearnable.
+//!
+//! [`Mission`] makes the encoding a single, typed authority:
+//!
+//! * **task verb** — what to do ([`MissionVerb`]: go to / pick up /
+//!   put next to);
+//! * **object kind × colour** — what to do it to;
+//! * for `PutNext`, a **second object kind × colour** — what to put it
+//!   next to.
+//!
+//! ## Bit layout (preserved from the legacy `(tag << 8) | colour` pokes)
+//!
+//! ```text
+//! bit 0..8    target colour                 (Color as u8)
+//! bit 8..16   target object kind            (MiniGrid Tag)
+//! bit 16..18  verb code: 0 = kind default   (GoTo for Door, PickUp for
+//!             pickables — the legacy implicit verb), 1 = explicit GoTo,
+//!             2 = PutNext
+//! bit 18..21  second object kind            (PutNext only; Tag fits 3 bits)
+//! bit 21..24  second object colour          (PutNext only)
+//! ```
+//!
+//! `-1` (all bits set, sign negative) means "no mission". Crucially, verb
+//! code 0 resolves to the verb the legacy encoding implied, so every mission
+//! value produced before this module ([`Mission::pick_up`],
+//! [`Mission::go_to`] on a door) is **bit-identical** to the old ad-hoc
+//! pokes — the shard-invariance and cross-engine parity pins carry over
+//! untouched.
+//!
+//! ## The feature vector
+//!
+//! [`Mission::write_features`] renders the mission as a fixed-width
+//! ([`MISSION_DIM`]) one-hot block — present flag, verb, object kind,
+//! colour, and the PutNext second object — which the observation system
+//! writes into every [`crate::batch::ObsBatch`] and the agents concatenate
+//! onto the grid features, putting the goal on the policy's input the same
+//! way NAVIX's JAX pipeline vmaps goal embeddings alongside observations.
+
+use super::components::Color;
+use super::entities::Tag;
+
+/// Number of i32 features [`Mission::write_features`] writes:
+/// 1 present flag + 3 verbs + 4 object kinds + 6 colours
+/// + 4 second-object kinds + 6 second-object colours.
+pub const MISSION_DIM: usize = 1 + 3 + 4 + 6 + 4 + 6;
+
+/// Feature-block offsets (shared with the scan-path oracle in
+/// [`crate::systems::observations::scan`]).
+pub mod feat {
+    /// `[PRESENT]` = 1 iff a mission is set.
+    pub const PRESENT: usize = 0;
+    /// One-hot verb block starts here (3 slots, [`super::MissionVerb`] order).
+    pub const VERB: usize = 1;
+    /// One-hot object-kind block (4 slots: door, key, ball, box).
+    pub const KIND: usize = 4;
+    /// One-hot colour block (6 slots, MiniGrid colour order).
+    pub const COLOR: usize = 8;
+    /// One-hot second-object kind block (PutNext target, 4 slots).
+    pub const KIND2: usize = 14;
+    /// One-hot second-object colour block (6 slots).
+    pub const COLOR2: usize = 18;
+}
+
+/// The task verb of a mission.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum MissionVerb {
+    /// Reach the target object and perform `done` facing it
+    /// (GoToDoor, GoToObj).
+    GoTo = 0,
+    /// Pick the target object up (KeyCorridor, Fetch, UnlockPickup).
+    PickUp = 1,
+    /// Drop the target object on a cell 4-adjacent to the second object
+    /// (PutNext).
+    PutNext = 2,
+}
+
+/// Verb codes in bits 16..18. Code 0 is the *kind default* — the verb the
+/// legacy `(tag << 8) | colour` encoding implied — so pre-existing mission
+/// values decode unchanged.
+const VERB_DEFAULT: i32 = 0;
+const VERB_GOTO: i32 = 1;
+const VERB_PUT_NEXT: i32 = 2;
+
+/// One environment's mission, stored as the `i32` of
+/// [`crate::core::state::BatchedState::mission`] (−1 = none).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Mission(pub i32);
+
+/// Dense slot of an object-kind tag inside the mission feature block.
+#[inline]
+fn kind_slot(tag: i32) -> usize {
+    match tag {
+        Tag::DOOR => 0,
+        Tag::KEY => 1,
+        Tag::BALL => 2,
+        _ => {
+            debug_assert_eq!(tag, Tag::BOX, "mission object kind must be door/key/ball/box");
+            3
+        }
+    }
+}
+
+impl Mission {
+    /// No mission set.
+    pub const NONE: Mission = Mission(-1);
+
+    /// Reinterpret a raw state value.
+    #[inline]
+    pub fn from_raw(raw: i32) -> Mission {
+        Mission(raw)
+    }
+
+    /// The raw state value (what gets stored in `BatchedState::mission`).
+    #[inline]
+    pub fn raw(self) -> i32 {
+        self.0
+    }
+
+    /// "Go to the `<colour>` `<kind>`": GoToDoor / GoToObj missions. A door
+    /// target encodes with verb code 0, reproducing the legacy GoToDoor
+    /// layout bit for bit.
+    #[inline]
+    pub fn go_to(kind_tag: i32, color: Color) -> Mission {
+        let verb = if kind_tag == Tag::DOOR { VERB_DEFAULT } else { VERB_GOTO };
+        Mission((verb << 16) | (kind_tag << 8) | color as i32)
+    }
+
+    /// "Pick up the `<colour>` `<kind>`": KeyCorridor / Fetch /
+    /// UnlockPickup missions. Bit-identical to the legacy
+    /// `(tag << 8) | colour` poke.
+    #[inline]
+    pub fn pick_up(kind_tag: i32, color: Color) -> Mission {
+        debug_assert!(
+            matches!(kind_tag, Tag::KEY | Tag::BALL | Tag::BOX),
+            "only pickable kinds can be pick-up targets"
+        );
+        Mission((VERB_DEFAULT << 16) | (kind_tag << 8) | color as i32)
+    }
+
+    /// "Put the `<c1>` `<k1>` next to the `<c2>` `<k2>`" (PutNext).
+    #[inline]
+    pub fn put_next(kind_tag: i32, color: Color, near_tag: i32, near_color: Color) -> Mission {
+        debug_assert!(
+            matches!(kind_tag, Tag::KEY | Tag::BALL | Tag::BOX),
+            "the moved object must be pickable"
+        );
+        Mission(
+            ((near_color as i32) << 21)
+                | (near_tag << 18)
+                | (VERB_PUT_NEXT << 16)
+                | (kind_tag << 8)
+                | color as i32,
+        )
+    }
+
+    #[inline]
+    pub fn is_none(self) -> bool {
+        self.0 < 0
+    }
+
+    /// The task verb (`None` when no mission is set).
+    #[inline]
+    pub fn verb(self) -> Option<MissionVerb> {
+        if self.is_none() {
+            return None;
+        }
+        Some(match (self.0 >> 16) & 0x3 {
+            VERB_GOTO => MissionVerb::GoTo,
+            VERB_PUT_NEXT => MissionVerb::PutNext,
+            // Kind default: doors are go-to targets, pickables pick-up
+            // targets — the verb the legacy encoding implied.
+            _ => {
+                if self.kind_tag() == Tag::DOOR {
+                    MissionVerb::GoTo
+                } else {
+                    MissionVerb::PickUp
+                }
+            }
+        })
+    }
+
+    /// Target object kind (a MiniGrid [`Tag`]; undefined when none).
+    #[inline]
+    pub fn kind_tag(self) -> i32 {
+        (self.0 >> 8) & 0xFF
+    }
+
+    /// Target colour (undefined when none).
+    #[inline]
+    pub fn color(self) -> Color {
+        Color::from_u8((self.0 & 0xFF) as u8)
+    }
+
+    /// Second object kind (PutNext target; undefined otherwise).
+    #[inline]
+    pub fn near_kind_tag(self) -> i32 {
+        (self.0 >> 18) & 0x7
+    }
+
+    /// Second object colour (PutNext target; undefined otherwise).
+    #[inline]
+    pub fn near_color(self) -> Color {
+        Color::from_u8(((self.0 >> 21) & 0x7) as u8)
+    }
+
+    /// Does `(tag, color)` match the mission's target object?
+    #[inline]
+    pub fn matches(self, tag: i32, color: Color) -> bool {
+        !self.is_none() && self.kind_tag() == tag && self.color() == color
+    }
+
+    /// Is this a go-to mission targeting exactly `(tag, color)`?
+    #[inline]
+    pub fn is_go_to(self, tag: i32, color: Color) -> bool {
+        self.verb() == Some(MissionVerb::GoTo) && self.matches(tag, color)
+    }
+
+    /// Is this a pick-up mission targeting exactly `(tag, color)`?
+    #[inline]
+    pub fn is_pick_up(self, tag: i32, color: Color) -> bool {
+        self.verb() == Some(MissionVerb::PickUp) && self.matches(tag, color)
+    }
+
+    /// Human-readable mission string (the BabyAI-style instruction).
+    pub fn describe(self) -> String {
+        let kind = |t: i32| match t {
+            Tag::DOOR => "door",
+            Tag::KEY => "key",
+            Tag::BALL => "ball",
+            _ => "box",
+        };
+        match self.verb() {
+            None => "none".to_string(),
+            Some(MissionVerb::GoTo) => {
+                format!("go to the {} {}", self.color().name(), kind(self.kind_tag()))
+            }
+            Some(MissionVerb::PickUp) => {
+                format!("pick up the {} {}", self.color().name(), kind(self.kind_tag()))
+            }
+            Some(MissionVerb::PutNext) => format!(
+                "put the {} {} next to the {} {}",
+                self.color().name(),
+                kind(self.kind_tag()),
+                self.near_color().name(),
+                kind(self.near_kind_tag()),
+            ),
+        }
+    }
+
+    /// Render the mission as the fixed-width one-hot feature block every
+    /// observation batch carries (`out.len() == MISSION_DIM`). All-zero when
+    /// no mission is set, so mission-free families are unaffected by the
+    /// concatenation.
+    pub fn write_features(self, out: &mut [i32]) {
+        debug_assert_eq!(out.len(), MISSION_DIM);
+        out.fill(0);
+        let Some(verb) = self.verb() else { return };
+        out[feat::PRESENT] = 1;
+        out[feat::VERB + verb as usize] = 1;
+        out[feat::KIND + kind_slot(self.kind_tag())] = 1;
+        out[feat::COLOR + self.color() as usize] = 1;
+        if verb == MissionVerb::PutNext {
+            out[feat::KIND2 + kind_slot(self.near_kind_tag())] = 1;
+            out[feat::COLOR2 + self.near_color() as usize] = 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn legacy_layout_is_preserved() {
+        // The invariance every pre-existing shard/parity pin depends on:
+        // typed constructors reproduce the ad-hoc pokes bit for bit.
+        assert_eq!(
+            Mission::go_to(Tag::DOOR, Color::Yellow).raw(),
+            (Tag::DOOR << 8) | Color::Yellow as i32
+        );
+        for tag in [Tag::KEY, Tag::BALL, Tag::BOX] {
+            for color in Color::ALL {
+                assert_eq!(Mission::pick_up(tag, color).raw(), (tag << 8) | color as i32);
+            }
+        }
+        assert_eq!(Mission::NONE.raw(), -1);
+    }
+
+    #[test]
+    fn verbs_round_trip() {
+        let m = Mission::go_to(Tag::DOOR, Color::Red);
+        assert_eq!(m.verb(), Some(MissionVerb::GoTo));
+        assert_eq!((m.kind_tag(), m.color()), (Tag::DOOR, Color::Red));
+
+        let m = Mission::go_to(Tag::BALL, Color::Blue);
+        assert_eq!(m.verb(), Some(MissionVerb::GoTo));
+        assert_eq!((m.kind_tag(), m.color()), (Tag::BALL, Color::Blue));
+        assert!(m.is_go_to(Tag::BALL, Color::Blue));
+        assert!(!m.is_pick_up(Tag::BALL, Color::Blue), "GoTo(ball) is not a pickup mission");
+
+        let m = Mission::pick_up(Tag::KEY, Color::Grey);
+        assert_eq!(m.verb(), Some(MissionVerb::PickUp));
+        assert!(m.is_pick_up(Tag::KEY, Color::Grey));
+        assert!(!m.is_go_to(Tag::KEY, Color::Grey));
+
+        let m = Mission::put_next(Tag::BALL, Color::Purple, Tag::BOX, Color::Green);
+        assert_eq!(m.verb(), Some(MissionVerb::PutNext));
+        assert_eq!((m.kind_tag(), m.color()), (Tag::BALL, Color::Purple));
+        assert_eq!((m.near_kind_tag(), m.near_color()), (Tag::BOX, Color::Green));
+
+        assert_eq!(Mission::NONE.verb(), None);
+        assert!(!Mission::NONE.matches(Tag::KEY, Color::Red));
+    }
+
+    #[test]
+    fn features_are_one_hot_blocks() {
+        let mut f = [0i32; MISSION_DIM];
+        Mission::NONE.write_features(&mut f);
+        assert!(f.iter().all(|&x| x == 0), "no mission → all-zero features");
+
+        Mission::go_to(Tag::DOOR, Color::Yellow).write_features(&mut f);
+        assert_eq!(f[feat::PRESENT], 1);
+        assert_eq!(f[feat::VERB + MissionVerb::GoTo as usize], 1);
+        assert_eq!(f[feat::KIND], 1, "door slot");
+        assert_eq!(f[feat::COLOR + Color::Yellow as usize], 1);
+        assert_eq!(f.iter().sum::<i32>(), 4, "exactly one bit per block");
+
+        Mission::put_next(Tag::KEY, Color::Red, Tag::BALL, Color::Grey).write_features(&mut f);
+        assert_eq!(f[feat::PRESENT], 1);
+        assert_eq!(f[feat::VERB + MissionVerb::PutNext as usize], 1);
+        assert_eq!(f[feat::KIND + 1], 1, "key slot");
+        assert_eq!(f[feat::COLOR + Color::Red as usize], 1);
+        assert_eq!(f[feat::KIND2 + 2], 1, "ball slot");
+        assert_eq!(f[feat::COLOR2 + Color::Grey as usize], 1);
+        assert_eq!(f.iter().sum::<i32>(), 6);
+
+        // every feature is 0/1 (the conformance sweep pins this per env)
+        for m in [
+            Mission::pick_up(Tag::BOX, Color::Green),
+            Mission::go_to(Tag::KEY, Color::Blue),
+            Mission::put_next(Tag::BALL, Color::Red, Tag::BOX, Color::Purple),
+        ] {
+            m.write_features(&mut f);
+            assert!(f.iter().all(|&x| x == 0 || x == 1));
+        }
+    }
+
+    #[test]
+    fn describe_reads_like_babyai() {
+        assert_eq!(Mission::go_to(Tag::DOOR, Color::Red).describe(), "go to the red door");
+        assert_eq!(Mission::pick_up(Tag::KEY, Color::Blue).describe(), "pick up the blue key");
+        assert_eq!(
+            Mission::put_next(Tag::BALL, Color::Green, Tag::BOX, Color::Yellow).describe(),
+            "put the green ball next to the yellow box"
+        );
+        assert_eq!(Mission::NONE.describe(), "none");
+    }
+}

@@ -16,11 +16,13 @@ pub mod components;
 pub mod entities;
 pub mod events;
 pub mod grid;
+pub mod mission;
 pub mod state;
 pub mod timestep;
 
 pub use actions::Action;
 pub use components::{Color, DoorState, Direction};
 pub use entities::{CellType, EntityKind};
+pub use mission::{Mission, MissionVerb, MISSION_DIM};
 pub use state::{BatchedState, EnvSlot, SlotMut};
 pub use timestep::{StepType, Timestep};

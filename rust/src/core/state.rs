@@ -35,6 +35,7 @@ use super::components::{Color, Direction, DoorState, Pocket};
 use super::entities::{CellType, Tag};
 use super::events::Events;
 use super::grid::{GridDims, Pos};
+use super::mission::Mission;
 use crate::rng::Rng;
 
 /// The packed per-cell overlay code: `tag | colour << 8 | state << 16`,
@@ -564,6 +565,14 @@ macro_rules! shared_slot_api {
             pub fn pocket_value(&self) -> Pocket {
                 Pocket(self.pocket_raw())
             }
+
+            /// Mission decoded (the typed goal-conditioning component; the
+            /// single authority over the packed `mission` i32 — never
+            /// decode the raw field by hand).
+            #[inline]
+            pub fn mission_value(&self) -> Mission {
+                Mission::from_raw(self.mission_raw())
+            }
         }
     };
 }
@@ -584,6 +593,10 @@ impl<'a> EnvSlot<'a> {
     fn pocket_raw(&self) -> i32 {
         self.pocket
     }
+    #[inline]
+    fn mission_raw(&self) -> i32 {
+        self.mission
+    }
 }
 
 impl<'a> SlotMut<'a> {
@@ -598,6 +611,10 @@ impl<'a> SlotMut<'a> {
     #[inline]
     fn pocket_raw(&self) -> i32 {
         *self.pocket
+    }
+    #[inline]
+    fn mission_raw(&self) -> i32 {
+        *self.mission
     }
 
     /// Sequential RNG stream over this env's per-env key state.
@@ -701,7 +718,7 @@ impl<'a> SlotMut<'a> {
         self.ball_pos.fill(-1);
         self.box_pos.fill(-1);
         *self.pocket = -1;
-        *self.mission = -1;
+        *self.mission = Mission::NONE.raw();
         *self.events = Events::NONE;
         *self.last_action = -1;
         *self.t = 0;

@@ -5,6 +5,7 @@
 use crate::core::components::{Color, Direction, DoorState};
 use crate::core::entities::Tag;
 use crate::core::grid::Pos;
+use crate::core::mission::Mission;
 use crate::core::state::{PlacementError, SlotMut};
 
 pub fn generate(s: &mut SlotMut<'_>) -> Result<(), PlacementError> {
@@ -39,7 +40,7 @@ pub fn generate(s: &mut SlotMut<'_>) -> Result<(), PlacementError> {
         (rng.randint(0, 4), rng.below(4) as usize)
     };
     s.place_player(p, Direction::from_i32(dir));
-    *s.mission = (Tag::DOOR << 8) | colors[target] as i32;
+    *s.mission = Mission::go_to(Tag::DOOR, colors[target]).raw();
     Ok(())
 }
 
@@ -82,8 +83,9 @@ mod tests {
         for seed in 0..10 {
             let st = reset_once(&cfg, seed);
             let s = st.slot(0);
-            let mission_color = (s.mission & 0xFF) as u8;
-            assert_eq!(s.mission >> 8, Tag::DOOR);
+            let m = s.mission_value();
+            let mission_color = m.color() as u8;
+            assert_eq!(m.kind_tag(), Tag::DOOR);
             assert!(
                 (0..4).any(|d| s.door_color[d] == mission_color),
                 "seed {seed}: mission colour has no door"
@@ -98,7 +100,7 @@ mod tests {
         // Teleport the agent in front of the mission door for the check.
         let (door_p, _mission) = {
             let s = st.slot(0);
-            let mc = (s.mission & 0xFF) as u8;
+            let mc = s.mission_value().color() as u8;
             let d = (0..4).find(|&d| s.door_color[d] == mc).unwrap();
             (Pos::decode(s.door_pos[d], s.w), s.mission)
         };
@@ -120,7 +122,7 @@ mod tests {
         // wrong door: no event
         let other = (0..4)
             .find(|&d| {
-                s.door_color[d] != (*s.mission & 0xFF) as u8 && s.door_pos[d] >= 0
+                s.door_color[d] != s.mission_value().color() as u8 && s.door_pos[d] >= 0
             })
             .unwrap();
         let p = Pos::decode(s.door_pos[other], s.w);

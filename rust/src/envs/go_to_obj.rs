@@ -1,0 +1,176 @@
+//! GoToObj-{N}x{N}-N{k}: an empty room scattered with `k` objects of
+//! *distinct* kind×colour (keys, balls, boxes); the mission is to reach the
+//! target object and declare `done` facing it (BabyAI's GoToObj / MiniGrid's
+//! GoToObject, expressed through the typed [`Mission`] go-to verb and the
+//! `object_reached` event).
+
+use crate::core::components::{Color, Direction};
+use crate::core::entities::Tag;
+use crate::core::mission::Mission;
+use crate::core::state::{PlacementError, SlotMut};
+
+const KINDS: [i32; 3] = [Tag::KEY, Tag::BALL, Tag::BOX];
+const COMBOS: u32 = (KINDS.len() * 6) as u32;
+
+/// Draw a `(kind tag, colour)` pair not yet in `placed`, from the env's own
+/// RNG stream (pure function of the episode key → shard-invariant).
+/// Rejection sampling first; a deterministic wrap-around sweep over the 18
+/// combos (RNG-derived start, like `sample_free_in`'s crowded fallback)
+/// guarantees termination without biasing toward (key, red).
+pub(crate) fn sample_distinct_object(s: &mut SlotMut<'_>, placed: &[(i32, u8)]) -> (i32, u8) {
+    debug_assert!(placed.len() < COMBOS as usize);
+    for _ in 0..32 {
+        let (k, ci) = {
+            let mut rng = s.rng();
+            (rng.below(KINDS.len() as u32) as usize, rng.below(6) as u8)
+        };
+        if !placed.contains(&(KINDS[k], ci)) {
+            return (KINDS[k], ci);
+        }
+    }
+    let start = {
+        let mut rng = s.rng();
+        rng.below(COMBOS)
+    };
+    for j in 0..COMBOS {
+        let idx = ((start + j) % COMBOS) as usize;
+        let cand = (KINDS[idx / 6], (idx % 6) as u8);
+        if !placed.contains(&cand) {
+            return cand;
+        }
+    }
+    unreachable!("fewer than {COMBOS} objects placed")
+}
+
+/// Place `n_objs` distinct objects on free cells and return their
+/// `(kind tag, colour)` list (shared with the PutNext generator).
+pub(crate) fn place_distinct_objects(
+    s: &mut SlotMut<'_>,
+    n_objs: usize,
+) -> Result<Vec<(i32, u8)>, PlacementError> {
+    let mut placed: Vec<(i32, u8)> = Vec::with_capacity(n_objs);
+    for _ in 0..n_objs {
+        let (tag, ci) = sample_distinct_object(s, &placed);
+        let p = s.sample_free_cell(false)?;
+        match tag {
+            Tag::KEY => {
+                s.add_key(p, Color::from_u8(ci));
+            }
+            Tag::BALL => {
+                s.add_ball(p, Color::from_u8(ci));
+            }
+            _ => {
+                s.add_box(p, Color::from_u8(ci));
+            }
+        }
+        placed.push((tag, ci));
+    }
+    Ok(placed)
+}
+
+pub fn generate(s: &mut SlotMut<'_>, n_objs: usize) -> Result<(), PlacementError> {
+    s.fill_room();
+    let placed = place_distinct_objects(s, n_objs)?;
+
+    // Mission: go to one of the placed objects, chosen uniformly.
+    // Distinctness makes the instruction unambiguous.
+    let target = {
+        let mut rng = s.rng();
+        rng.below(n_objs as u32) as usize
+    };
+    let (tag, ci) = placed[target];
+    *s.mission = Mission::go_to(tag, Color::from_u8(ci)).raw();
+
+    let agent = s.sample_free_cell(false)?;
+    let dir = {
+        let mut rng = s.rng();
+        rng.randint(0, 4)
+    };
+    s.place_player(agent, Direction::from_i32(dir));
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::mission::MissionVerb;
+    use crate::envs::registry::make;
+    use crate::envs::testutil::{goal_pos, object_exists, reset_once};
+
+    #[test]
+    fn mission_is_a_go_to_of_a_placed_object() {
+        for id in ["Navix-GoToObj-6x6-N2-v0", "Navix-GoToObj-8x8-N2-v0", "Navix-GoToObj-8x8-N3-v0"]
+        {
+            let cfg = make(id).unwrap();
+            for seed in 0..15 {
+                let st = reset_once(&cfg, seed);
+                let s = st.slot(0);
+                assert!(goal_pos(&st, 0).is_none(), "{id}: GoToObj is goal-less");
+                let m = s.mission_value();
+                assert_eq!(m.verb(), Some(MissionVerb::GoTo), "{id} seed {seed}");
+                assert!(
+                    object_exists(&s, m.kind_tag(), m.color() as u8),
+                    "{id} seed {seed}: mission targets a missing object"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn objects_are_distinct_kind_colour_pairs() {
+        let cfg = make("Navix-GoToObj-8x8-N3-v0").unwrap();
+        for seed in 0..10 {
+            let st = reset_once(&cfg, seed);
+            let s = st.slot(0);
+            let mut objs: Vec<(i32, u8)> = Vec::new();
+            for k in 0..s.key_pos.len() {
+                if s.key_pos[k] >= 0 {
+                    objs.push((Tag::KEY, s.key_color[k]));
+                }
+            }
+            for b in 0..s.ball_pos.len() {
+                if s.ball_pos[b] >= 0 {
+                    objs.push((Tag::BALL, s.ball_color[b]));
+                }
+            }
+            for b in 0..s.box_pos.len() {
+                if s.box_pos[b] >= 0 {
+                    objs.push((Tag::BOX, s.box_color[b]));
+                }
+            }
+            assert_eq!(objs.len(), 3, "seed {seed}");
+            objs.sort_unstable();
+            objs.dedup();
+            assert_eq!(objs.len(), 3, "seed {seed}: kind×colour pairs must be distinct");
+        }
+    }
+
+    #[test]
+    fn done_facing_the_target_terminates_with_reward() {
+        use crate::core::actions::Action;
+        use crate::core::grid::Pos;
+        use crate::systems::intervention::intervene;
+        // Deterministic construction (no seed hunting): one ball, one key,
+        // mission = go to the ball.
+        let cfg = make("Navix-GoToObj-6x6-N2-v0").unwrap();
+        let mut st = crate::core::state::BatchedState::new(1, cfg.h, cfg.w, cfg.caps);
+        let mut s = st.slot_mut(0);
+        s.fill_room();
+        s.add_ball(Pos::new(2, 3), Color::Blue);
+        s.add_key(Pos::new(4, 4), Color::Red);
+        *s.mission = Mission::go_to(Tag::BALL, Color::Blue).raw();
+        s.place_player(Pos::new(2, 2), Direction::East); // facing the ball
+        intervene(&mut s, Action::Done);
+        assert!(s.events.object_reached);
+        drop(s);
+        assert!(cfg.termination.eval(&st.slot(0)));
+        assert_eq!(cfg.reward.eval(&st.slot(0), Action::Done, cfg.max_steps), 1.0);
+        // facing the non-target key instead: nothing fires
+        let mut s = st.slot_mut(0);
+        s.place_player(Pos::new(4, 3), Direction::East);
+        intervene(&mut s, Action::Done);
+        assert!(!s.events.object_reached);
+        drop(s);
+        assert!(!cfg.termination.eval(&st.slot(0)));
+    }
+}

@@ -10,6 +10,7 @@
 use crate::core::components::{Color, Direction, DoorState};
 use crate::core::entities::{CellType, Tag};
 use crate::core::grid::Pos;
+use crate::core::mission::Mission;
 use crate::core::state::{PlacementError, SlotMut};
 
 /// Grid height/width for a given (size, rows).
@@ -73,7 +74,7 @@ pub fn generate(s: &mut SlotMut<'_>, size: usize, rows: usize) -> Result<(), Pla
     // Target ball in the centre of the locked right room.
     let ball_p = Pos::new(locked_row * sw + sw / 2 + (sw % 2), 2 * sw + sw / 2 + (sw % 2));
     s.add_ball(ball_p, ball_color);
-    *s.mission = (Tag::BALL << 8) | ball_color as i32;
+    *s.mission = Mission::pick_up(Tag::BALL, ball_color).raw();
 
     // Key in the centre of the chosen left room.
     let key_p = Pos::new(key_row * sw + sw / 2 + (sw % 2), (sw / 2).max(1));
@@ -161,8 +162,8 @@ mod tests {
             assert!(reachable(&st, 0, ball, true), "seed {seed}: ball not behind doors only");
             assert!(reachable(&st, 0, key, true), "seed {seed}: key unreachable");
             // mission targets the ball colour
-            assert_eq!(s.mission >> 8, Tag::BALL);
-            assert_eq!((s.mission & 0xFF) as u8, s.ball_color[0]);
+            assert_eq!(s.mission_value().kind_tag(), Tag::BALL);
+            assert_eq!(s.mission_value().color() as u8, s.ball_color[0]);
         }
     }
 

@@ -16,10 +16,12 @@ pub mod empty;
 pub mod fetch;
 pub mod four_rooms;
 pub mod go_to_door;
+pub mod go_to_obj;
 pub mod key_corridor;
 pub mod lava_gap;
 pub mod locked_room;
 pub mod multiroom;
+pub mod put_next;
 pub mod registry;
 pub mod roomgrid;
 pub mod solvability;
@@ -70,6 +72,12 @@ pub enum Layout {
     LockedRoom,
     /// `n` random key/ball objects; pick up the mission target (Fetch).
     Fetch { n_objs: usize },
+    /// `n` distinct random objects; `done` facing the mission target
+    /// (BabyAI-style GoToObj).
+    GoToObj { n_objs: usize },
+    /// `n` distinct random objects; put the mission object next to the
+    /// mission's second object (BabyAI-style PutNext).
+    PutNext { n_objs: usize },
 }
 
 /// A fully-specified NAVIX environment (one Table-8 row).
@@ -152,6 +160,8 @@ impl EnvConfig {
             Layout::BlockedUnlockPickup => unlock::generate(s, unlock::Kind::BlockedPickup),
             Layout::LockedRoom => locked_room::generate(s),
             Layout::Fetch { n_objs } => fetch::generate(s, n_objs),
+            Layout::GoToObj { n_objs } => go_to_obj::generate(s, n_objs),
+            Layout::PutNext { n_objs } => put_next::generate(s, n_objs),
         }
     }
 
@@ -174,12 +184,108 @@ impl EnvConfig {
     }
 }
 
+/// How many successor episode keys a reset may burn before the
+/// configuration is declared unsatisfiable.
+pub const MAX_RESET_TRIES: usize = 8;
+
+/// The shared episode-key retry loop: run `attempt` with successive try
+/// indices until one succeeds, and panic with the *full* context — the
+/// layout error, the env id and the root key — after [`MAX_RESET_TRIES`]
+/// failures. Both the batched engine's autoreset path and the baseline
+/// engine's `reset` drive their (previously duplicated) loops through this,
+/// so the exhaustion message can never drift between engines again.
+/// Retrying is deterministic: failure is a pure function of the episode
+/// key, so every engine covering an env skips exactly the same keys.
+pub fn retry_episode_keys<T>(
+    env_id: &str,
+    root: Key,
+    mut attempt: impl FnMut(usize) -> Result<T, LayoutError>,
+) -> T {
+    let mut last: Option<LayoutError> = None;
+    for try_idx in 0..MAX_RESET_TRIES {
+        match attempt(try_idx) {
+            Ok(v) => return v,
+            Err(e) => last = Some(e),
+        }
+    }
+    // Only an unsatisfiable configuration (capacity/geometry bug) fails
+    // MAX_RESET_TRIES independent keys in a row.
+    let e = last.expect("MAX_RESET_TRIES is nonzero");
+    panic!(
+        "{e} — env `{env_id}` exhausted {MAX_RESET_TRIES} episode keys (root key {:#018x})",
+        root.0
+    );
+}
+
+#[cfg(test)]
+mod retry_tests {
+    use super::*;
+    use crate::core::state::PlacementError;
+
+    fn layout_err() -> LayoutError {
+        LayoutError {
+            env_id: "Navix-Test-v0".into(),
+            h: 5,
+            w: 5,
+            source: PlacementError { h: 5, w: 5, r0: 1, c0: 1, r1: 4, c1: 4 },
+        }
+    }
+
+    #[test]
+    fn retry_returns_on_first_success_and_counts_tries() {
+        let mut calls = 0;
+        let got = retry_episode_keys("Navix-Test-v0", Key::new(1), |t| {
+            calls += 1;
+            if t < 2 {
+                Err(layout_err())
+            } else {
+                Ok(t)
+            }
+        });
+        assert_eq!(got, 2);
+        assert_eq!(calls, 3);
+    }
+
+    #[test]
+    fn exhaustion_panics_with_env_id_and_root_key() {
+        let root = Key::new(9);
+        let err = std::panic::catch_unwind(|| {
+            retry_episode_keys::<()>("Navix-Test-v0", root, |_| Err(layout_err()))
+        })
+        .expect_err("exhaustion must panic");
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("Navix-Test-v0"), "env id missing: {msg}");
+        assert!(msg.contains(&format!("{:#018x}", root.0)), "root key missing: {msg}");
+        assert!(msg.contains("episode keys"), "retry count missing: {msg}");
+    }
+}
+
 #[cfg(test)]
 pub(crate) mod testutil {
     use super::*;
-    use crate::core::state::BatchedState;
+    use crate::core::entities::Tag;
+    use crate::core::state::{BatchedState, EnvSlot};
 
     pub use super::solvability::{goal_pos, reachable};
+
+    /// Is an on-grid entity of exactly `(tag, colour)` present in slot `s`?
+    /// Shared by the goal-conditioned families' layout tests (Fetch,
+    /// GoToObj, PutNext) so the entity-table liveness convention
+    /// (`pos >= 0`) lives in one place.
+    pub fn object_exists(s: &EnvSlot<'_>, tag: i32, color: u8) -> bool {
+        match tag {
+            Tag::KEY => {
+                (0..s.key_pos.len()).any(|k| s.key_pos[k] >= 0 && s.key_color[k] == color)
+            }
+            Tag::BALL => {
+                (0..s.ball_pos.len()).any(|b| s.ball_pos[b] >= 0 && s.ball_color[b] == color)
+            }
+            Tag::BOX => {
+                (0..s.box_pos.len()).any(|b| s.box_pos[b] >= 0 && s.box_color[b] == color)
+            }
+            _ => false,
+        }
+    }
 
     /// Reset `cfg` into a fresh single-env state for layout tests.
     pub fn reset_once(cfg: &EnvConfig, seed: u64) -> BatchedState {

@@ -1,0 +1,124 @@
+//! PutNext-{N}x{N}-N{k}: an empty room scattered with `k` objects of
+//! distinct kind×colour; the mission is to pick the target object up and
+//! drop it on a cell 4-adjacent to the mission's *second* object (BabyAI's
+//! PutNext / MiniGrid's PutNear, expressed through the typed [`Mission`]
+//! put-next verb and the `object_placed` event).
+
+use crate::core::components::{Color, Direction};
+use crate::core::mission::Mission;
+use crate::core::state::{PlacementError, SlotMut};
+
+use super::go_to_obj::place_distinct_objects;
+
+pub fn generate(s: &mut SlotMut<'_>, n_objs: usize) -> Result<(), PlacementError> {
+    debug_assert!(n_objs >= 2, "PutNext needs a moved object and a target");
+    s.fill_room();
+    let placed = place_distinct_objects(s, n_objs)?;
+
+    // Mission: move object `mv` next to object `nr` (uniform over ordered
+    // distinct pairs).
+    let (mv, nr) = {
+        let mut rng = s.rng();
+        let mv = rng.below(n_objs as u32) as usize;
+        let mut nr = rng.below(n_objs as u32 - 1) as usize;
+        if nr >= mv {
+            nr += 1;
+        }
+        (mv, nr)
+    };
+    *s.mission = Mission::put_next(
+        placed[mv].0,
+        Color::from_u8(placed[mv].1),
+        placed[nr].0,
+        Color::from_u8(placed[nr].1),
+    )
+    .raw();
+
+    let agent = s.sample_free_cell(false)?;
+    let dir = {
+        let mut rng = s.rng();
+        rng.randint(0, 4)
+    };
+    s.place_player(agent, Direction::from_i32(dir));
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::actions::Action;
+    use crate::core::entities::Tag;
+    use crate::core::grid::Pos;
+    use crate::core::mission::MissionVerb;
+    use crate::envs::registry::make;
+    use crate::envs::testutil::{goal_pos, object_exists, reset_once};
+    use crate::systems::intervention::intervene;
+
+    #[test]
+    fn mission_names_two_distinct_placed_objects() {
+        for id in ["Navix-PutNext-6x6-N2-v0", "Navix-PutNext-8x8-N3-v0"] {
+            let cfg = make(id).unwrap();
+            for seed in 0..15 {
+                let st = reset_once(&cfg, seed);
+                let s = st.slot(0);
+                assert!(goal_pos(&st, 0).is_none(), "{id}: PutNext is goal-less");
+                let m = s.mission_value();
+                assert_eq!(m.verb(), Some(MissionVerb::PutNext), "{id} seed {seed}");
+                assert_ne!(
+                    (m.kind_tag(), m.color()),
+                    (m.near_kind_tag(), m.near_color()),
+                    "{id} seed {seed}: moved and target object must differ"
+                );
+                assert!(
+                    object_exists(&s, m.kind_tag(), m.color() as u8),
+                    "{id} seed {seed}: moved object"
+                );
+                assert!(
+                    object_exists(&s, m.near_kind_tag(), m.near_color() as u8),
+                    "{id} seed {seed}: near target"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn carrying_the_object_to_the_target_terminates_with_reward() {
+        // Deterministic construction: ball to move, box as the target.
+        let cfg = make("Navix-PutNext-6x6-N2-v0").unwrap();
+        let mut st = crate::core::state::BatchedState::new(1, cfg.h, cfg.w, cfg.caps);
+        let mut s = st.slot_mut(0);
+        s.fill_room();
+        s.add_ball(Pos::new(1, 1), Color::Purple);
+        s.add_box(Pos::new(2, 4), Color::Green);
+        *s.mission = Mission::put_next(Tag::BALL, Color::Purple, Tag::BOX, Color::Green).raw();
+        s.place_player(Pos::new(1, 2), Direction::West); // facing the ball
+        intervene(&mut s, Action::Pickup);
+        assert!(!s.events.object_picked, "put-next pickups fire no pickup-mission events");
+        assert!(!s.events.wrong_pickup);
+        // walk to (3,3), face east, drop at (3,4) — adjacent to the box.
+        s.place_player(Pos::new(3, 3), Direction::East);
+        intervene(&mut s, Action::Drop);
+        assert!(s.events.object_placed);
+        drop(s);
+        assert!(cfg.termination.eval(&st.slot(0)));
+        assert_eq!(cfg.reward.eval(&st.slot(0), Action::Drop, cfg.max_steps), 1.0);
+    }
+
+    #[test]
+    fn dropping_far_from_the_target_does_not_terminate() {
+        let cfg = make("Navix-PutNext-6x6-N2-v0").unwrap();
+        let mut st = crate::core::state::BatchedState::new(1, cfg.h, cfg.w, cfg.caps);
+        let mut s = st.slot_mut(0);
+        s.fill_room();
+        s.add_ball(Pos::new(1, 1), Color::Purple);
+        s.add_box(Pos::new(4, 4), Color::Green);
+        *s.mission = Mission::put_next(Tag::BALL, Color::Purple, Tag::BOX, Color::Green).raw();
+        s.place_player(Pos::new(1, 2), Direction::West);
+        intervene(&mut s, Action::Pickup);
+        s.place_player(Pos::new(1, 2), Direction::West); // drop back at (1,1)
+        intervene(&mut s, Action::Drop);
+        assert!(!s.events.object_placed);
+        drop(s);
+        assert!(!cfg.termination.eval(&st.slot(0)));
+    }
+}

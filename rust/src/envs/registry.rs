@@ -217,6 +217,36 @@ fn locked_room(id: &str) -> EnvConfig {
     )
 }
 
+fn go_to_obj(id: &str, n: usize, n_objs: usize) -> EnvConfig {
+    // BabyAI GoToObj / MiniGrid GoToObject: `done` facing the mission
+    // object; distinct kind x colour pairs keep the instruction unambiguous.
+    base(
+        id,
+        n,
+        n,
+        Caps { keys: n_objs, balls: n_objs, boxes: n_objs, ..Caps::default() },
+        (5 * n * n) as u32,
+        RewardSpec::object_reached(),
+        TermSpec::object_reached(),
+        Layout::GoToObj { n_objs },
+    )
+}
+
+fn put_next(id: &str, n: usize, n_objs: usize) -> EnvConfig {
+    // BabyAI PutNext / MiniGrid PutNear: drop the mission object 4-adjacent
+    // to the mission's second object.
+    base(
+        id,
+        n,
+        n,
+        Caps { keys: n_objs, balls: n_objs, boxes: n_objs, ..Caps::default() },
+        (5 * n * n) as u32,
+        RewardSpec::object_placed(),
+        TermSpec::object_placed(),
+        Layout::PutNext { n_objs },
+    )
+}
+
 fn fetch(id: &str, n: usize, n_objs: usize) -> EnvConfig {
     // MiniGrid: T = 5·size²; any pickup terminates, only the target pays.
     base(
@@ -287,6 +317,12 @@ pub fn list_envs() -> Vec<&'static str> {
         "Navix-LockedRoom-v0",
         "Navix-Fetch-5x5-N2-v0",
         "Navix-Fetch-8x8-N3-v0",
+        // BabyAI-style goal-conditioned families (typed Mission subsystem)
+        "Navix-GoToObj-6x6-N2-v0",
+        "Navix-GoToObj-8x8-N2-v0",
+        "Navix-GoToObj-8x8-N3-v0",
+        "Navix-PutNext-6x6-N2-v0",
+        "Navix-PutNext-8x8-N3-v0",
     ]
 }
 
@@ -363,6 +399,11 @@ pub fn make(id: &str) -> Result<EnvConfig> {
         "Navix-LockedRoom-v0" => locked_room(c),
         "Navix-Fetch-5x5-N2-v0" => fetch(c, 5, 2),
         "Navix-Fetch-8x8-N3-v0" => fetch(c, 8, 3),
+        "Navix-GoToObj-6x6-N2-v0" => go_to_obj(c, 6, 2),
+        "Navix-GoToObj-8x8-N2-v0" => go_to_obj(c, 8, 2),
+        "Navix-GoToObj-8x8-N3-v0" => go_to_obj(c, 8, 3),
+        "Navix-PutNext-6x6-N2-v0" => put_next(c, 6, 2),
+        "Navix-PutNext-8x8-N3-v0" => put_next(c, 8, 3),
         _ => return Err(anyhow!("unknown environment id: {id}")),
     };
     Ok(cfg)
@@ -410,6 +451,8 @@ mod tests {
             ("Navix-BlockedUnlockPickup-v0", 6, 11),
             ("Navix-LockedRoom-v0", 19, 19),
             ("Navix-Fetch-8x8-N3-v0", 8, 8),
+            ("Navix-GoToObj-8x8-N3-v0", 8, 8),
+            ("Navix-PutNext-6x6-N2-v0", 6, 6),
         ];
         for (id, h, w) in checks {
             let cfg = make(id).unwrap();
@@ -477,5 +520,56 @@ mod tests {
         assert!(make("MiniGrid-MultiRoom-N6-v0").is_ok());
         assert!(make("MiniGrid-BlockedUnlockPickup-v0").is_ok());
         assert!(make("MiniGrid-Fetch-8x8-N3-v0").is_ok());
+        assert!(make("MiniGrid-GoToObj-8x8-N2-v0").is_ok());
+        assert!(make("MiniGrid-PutNext-6x6-N2-v0").is_ok());
+    }
+
+    #[test]
+    fn registry_counts_54_ids() {
+        assert_eq!(list_envs().len(), 54);
+    }
+
+    #[test]
+    fn goal_conditioned_families_wire_mission_specs_and_timeouts() {
+        let cfg = make("Navix-GoToObj-8x8-N3-v0").unwrap();
+        assert_eq!(cfg.reward, RewardSpec::object_reached());
+        assert_eq!(cfg.termination, TermSpec::object_reached());
+        assert_eq!(cfg.max_steps, 320);
+        assert_eq!(cfg.caps.keys, 3);
+        let cfg = make("Navix-PutNext-8x8-N3-v0").unwrap();
+        assert_eq!(cfg.reward, RewardSpec::object_placed());
+        assert_eq!(cfg.termination, TermSpec::object_placed());
+        assert_eq!(cfg.max_steps, 320);
+    }
+
+    #[test]
+    fn every_mission_family_sets_a_mission_and_goal_families_do_not() {
+        // The state-level half of the mission-visibility pin (the
+        // observation/engine half lives in tests/test_mission.rs).
+        let mission_ids = [
+            "Navix-GoToDoor-5x5-v0",
+            "Navix-KeyCorridorS3R1-v0",
+            "Navix-Fetch-5x5-N2-v0",
+            "Navix-Unlock-v0",
+            "Navix-UnlockPickup-v0",
+            "Navix-BlockedUnlockPickup-v0",
+            "Navix-GoToObj-6x6-N2-v0",
+            "Navix-PutNext-6x6-N2-v0",
+        ];
+        for id in mission_ids {
+            let cfg = make(id).unwrap();
+            for seed in 0..5 {
+                let st = reset_once(&cfg, seed);
+                assert!(
+                    !st.slot(0).mission_value().is_none(),
+                    "{id} seed {seed}: mission env must set a mission"
+                );
+            }
+        }
+        for id in ["Navix-Empty-8x8-v0", "Navix-FourRooms-v0", "Navix-LavaGapS5-v0"] {
+            let cfg = make(id).unwrap();
+            let st = reset_once(&cfg, 0);
+            assert!(st.slot(0).mission_value().is_none(), "{id}: goal env has no mission");
+        }
     }
 }

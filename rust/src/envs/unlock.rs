@@ -11,6 +11,7 @@ use super::roomgrid::RoomGrid;
 use crate::core::components::{Color, Direction, DoorState};
 use crate::core::entities::Tag;
 use crate::core::grid::Pos;
+use crate::core::mission::Mission;
 use crate::core::state::{PlacementError, SlotMut};
 
 /// Which member of the Unlock family to build.
@@ -51,12 +52,12 @@ pub fn generate(s: &mut SlotMut<'_>, kind: Kind) -> Result<(), PlacementError> {
 
     match kind {
         Kind::Unlock => {
-            *s.mission = (Tag::DOOR << 8) | door_color as i32;
+            *s.mission = Mission::go_to(Tag::DOOR, door_color).raw();
         }
         Kind::Pickup | Kind::BlockedPickup => {
             let box_p = rg.place_in_room(s, 0, 1, false)?;
             s.add_box(box_p, Color::from_u8(box_ci));
-            *s.mission = (Tag::BOX << 8) | box_ci as i32;
+            *s.mission = Mission::pick_up(Tag::BOX, Color::from_u8(box_ci)).raw();
         }
     }
 
@@ -86,7 +87,7 @@ mod tests {
             assert!(key.c < door.c, "seed {seed}: key on the agent side");
             assert!(s.player().c < door.c, "seed {seed}: agent on the left");
             assert!(reachable(&st, 0, key, false), "seed {seed}: key unreachable");
-            assert_eq!(s.mission >> 8, Tag::DOOR);
+            assert_eq!(s.mission_value().kind_tag(), Tag::DOOR);
         }
     }
 
@@ -101,7 +102,10 @@ mod tests {
             assert!(bx.c > door.c, "seed {seed}: box must be in the far room");
             assert!(!reachable(&st, 0, bx, false), "seed {seed}: box reachable without the key");
             assert!(reachable(&st, 0, bx, true), "seed {seed}: box unreachable through doors");
-            assert_eq!(s.mission, (Tag::BOX << 8) | s.box_color[0] as i32);
+            assert_eq!(
+                s.mission_value(),
+                Mission::pick_up(Tag::BOX, Color::from_u8(s.box_color[0]))
+            );
         }
     }
 

@@ -3,9 +3,11 @@
 //! latches the events that the reward/termination systems consume.
 
 use crate::core::actions::Action;
-use crate::core::components::{DoorState, Pocket};
+use crate::core::components::{Color, DoorState, Pocket};
 use crate::core::entities::{CellType, Tag};
 use crate::core::events::Events;
+use crate::core::grid::Pos;
+use crate::core::mission::MissionVerb;
 use crate::core::state::SlotMut;
 
 /// Apply `action` to one environment slot. Returns nothing; all effects are
@@ -52,28 +54,28 @@ fn forward(s: &mut SlotMut<'_>) {
 
 /// `pickup`: pick the pickable entity ahead into the pocket (if empty).
 /// Latches the pickup-mission events: `ball_picked` (KeyCorridor),
-/// `object_picked` when the item matches a pickable mission target of any
+/// `object_picked` when the item matches a pick-up mission's target of any
 /// kind, and `wrong_pickup` when it does not (Fetch failure).
 fn pickup(s: &mut SlotMut<'_>) {
     if !s.pocket_value().is_empty() {
         return;
     }
     let front = s.front();
+    let mission = s.mission_value();
     let picked = if let Some(k) = s.key_at(front) {
-        let color = crate::core::components::Color::from_u8(s.key_color[k]);
+        let color = Color::from_u8(s.key_color[k]);
         s.remove_key(k); // off the grid, into the pocket
         Some((Tag::KEY, color))
     } else if let Some(bl) = s.ball_at(front) {
-        let color = crate::core::components::Color::from_u8(s.ball_color[bl]);
+        let color = Color::from_u8(s.ball_color[bl]);
         // KeyCorridor mission: picking the target ball is the success event.
-        // mission encodes the target ball colour as (Tag::BALL << 8 | color).
-        if *s.mission == Pocket::holding(Tag::BALL, color).0 {
+        if mission.is_pick_up(Tag::BALL, color) {
             s.events.ball_picked = true;
         }
         s.remove_ball(bl);
         Some((Tag::BALL, color))
     } else if let Some(bx) = s.box_at(front) {
-        let color = crate::core::components::Color::from_u8(s.box_color[bx]);
+        let color = Color::from_u8(s.box_color[bx]);
         s.remove_box(bx);
         Some((Tag::BOX, color))
     } else {
@@ -81,11 +83,10 @@ fn pickup(s: &mut SlotMut<'_>) {
     };
     if let Some((tag, color)) = picked {
         *s.pocket = Pocket::holding(tag, color).0;
-        // Pickup-mission events fire only when the mission targets a
-        // pickable kind (Fetch/UnlockPickup); door missions are unaffected.
-        let mission_tag = *s.mission >> 8;
-        if *s.mission >= 0 && matches!(mission_tag, Tag::KEY | Tag::BALL | Tag::BOX) {
-            if *s.mission == Pocket::holding(tag, color).0 {
+        // Pickup-mission events fire only under a pick-up verb
+        // (Fetch/UnlockPickup); go-to and put-next missions are unaffected.
+        if mission.verb() == Some(MissionVerb::PickUp) {
+            if mission.matches(tag, color) {
                 s.events.object_picked = true;
             } else {
                 s.events.wrong_pickup = true;
@@ -94,7 +95,22 @@ fn pickup(s: &mut SlotMut<'_>) {
     }
 }
 
-/// `drop`: place the held entity into the empty floor cell ahead.
+/// Is an entity of exactly `(tag, color)` sitting at `p`? (O(1) overlay
+/// probes; doors match regardless of open/closed state.)
+fn entity_matches(s: &SlotMut<'_>, p: Pos, tag: i32, color: Color) -> bool {
+    match tag {
+        Tag::DOOR => s.door_at(p).map(|d| s.door_color[d] == color as u8),
+        Tag::KEY => s.key_at(p).map(|k| s.key_color[k] == color as u8),
+        Tag::BALL => s.ball_at(p).map(|b| s.ball_color[b] == color as u8),
+        Tag::BOX => s.box_at(p).map(|b| s.box_color[b] == color as u8),
+        _ => None,
+    }
+    .unwrap_or(false)
+}
+
+/// `drop`: place the held entity into the empty floor cell ahead. Under a
+/// put-next mission, dropping the target object onto a cell 4-adjacent to
+/// the mission's second object latches `object_placed` (PutNext success).
 fn drop_item(s: &mut SlotMut<'_>) {
     let pocket = s.pocket_value();
     if pocket.is_empty() {
@@ -113,6 +129,18 @@ fn drop_item(s: &mut SlotMut<'_>) {
     };
     if dropped {
         *s.pocket = Pocket::EMPTY.0;
+        let mission = s.mission_value();
+        if mission.verb() == Some(MissionVerb::PutNext)
+            && mission.matches(pocket.kind_tag(), color)
+        {
+            let (near_tag, near_color) = (mission.near_kind_tag(), mission.near_color());
+            let adjacent = [(-1, 0), (1, 0), (0, -1), (0, 1)].iter().any(|&(dr, dc)| {
+                entity_matches(s, Pos::new(front.r + dr, front.c + dc), near_tag, near_color)
+            });
+            if adjacent {
+                s.events.object_placed = true;
+            }
+        }
     }
 }
 
@@ -138,14 +166,27 @@ fn toggle(s: &mut SlotMut<'_>) {
     }
 }
 
-/// `done`: latches the GoToDoor success event when facing a door of the
-/// mission colour. mission encodes the target as (Tag::DOOR << 8 | color).
+/// `done`: under a go-to mission, declaring completion while facing the
+/// target latches the success event — `door_done` for door targets
+/// (GoToDoor) and `object_reached` for pickable targets (GoToObj).
 fn done(s: &mut SlotMut<'_>) {
     let front = s.front();
+    let mission = s.mission_value();
     if let Some(d) = s.door_at(front) {
-        let target = (Tag::DOOR << 8) | s.door_color[d] as i32;
-        if *s.mission == target {
+        if mission.is_go_to(Tag::DOOR, Color::from_u8(s.door_color[d])) {
             s.events.door_done = true;
+        }
+    } else if let Some(k) = s.key_at(front) {
+        if mission.is_go_to(Tag::KEY, Color::from_u8(s.key_color[k])) {
+            s.events.object_reached = true;
+        }
+    } else if let Some(b) = s.ball_at(front) {
+        if mission.is_go_to(Tag::BALL, Color::from_u8(s.ball_color[b])) {
+            s.events.object_reached = true;
+        }
+    } else if let Some(b) = s.box_at(front) {
+        if mission.is_go_to(Tag::BOX, Color::from_u8(s.box_color[b])) {
+            s.events.object_reached = true;
         }
     }
 }
@@ -153,8 +194,8 @@ fn done(s: &mut SlotMut<'_>) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::core::components::{Color, Direction};
-    use crate::core::grid::Pos;
+    use crate::core::components::Direction;
+    use crate::core::mission::Mission;
     use crate::core::state::{BatchedState, Caps};
 
     fn room() -> BatchedState {
@@ -276,7 +317,7 @@ mod tests {
         let mut st = room();
         let mut s = st.slot_mut(0);
         s.add_ball(Pos::new(3, 4), Color::Purple);
-        *s.mission = Pocket::holding(Tag::BALL, Color::Purple).0;
+        *s.mission = Mission::pick_up(Tag::BALL, Color::Purple).raw();
         intervene(&mut s, Action::Pickup);
         assert!(s.events.ball_picked);
         assert_eq!(s.pocket_value().kind_tag(), Tag::BALL);
@@ -287,7 +328,7 @@ mod tests {
         let mut st = room();
         let mut s = st.slot_mut(0);
         s.add_door(Pos::new(3, 4), Color::Green, DoorState::Closed);
-        *s.mission = (Tag::DOOR << 8) | Color::Green as i32;
+        *s.mission = Mission::go_to(Tag::DOOR, Color::Green).raw();
         intervene(&mut s, Action::Done);
         assert!(s.events.door_done);
         // facing elsewhere: no event
@@ -316,7 +357,7 @@ mod tests {
         let mut st = room();
         let mut s = st.slot_mut(0);
         s.add_box(Pos::new(3, 4), Color::Green);
-        *s.mission = (Tag::BOX << 8) | Color::Green as i32;
+        *s.mission = Mission::pick_up(Tag::BOX, Color::Green).raw();
         intervene(&mut s, Action::Pickup);
         assert!(s.events.object_picked);
         assert!(!s.events.wrong_pickup);
@@ -327,7 +368,7 @@ mod tests {
         let mut st = room();
         let mut s = st.slot_mut(0);
         s.add_ball(Pos::new(3, 4), Color::Red);
-        *s.mission = (Tag::KEY << 8) | Color::Blue as i32; // fetch the blue key
+        *s.mission = Mission::pick_up(Tag::KEY, Color::Blue).raw(); // fetch the blue key
         intervene(&mut s, Action::Pickup);
         assert!(s.events.wrong_pickup, "wrong object picked under a pickable mission");
         assert!(!s.events.object_picked);
@@ -338,10 +379,61 @@ mod tests {
         let mut st = room();
         let mut s = st.slot_mut(0);
         s.add_key(Pos::new(3, 4), Color::Yellow);
-        *s.mission = (Tag::DOOR << 8) | Color::Yellow as i32; // GoToDoor-style mission
+        *s.mission = Mission::go_to(Tag::DOOR, Color::Yellow).raw(); // GoToDoor-style mission
         intervene(&mut s, Action::Pickup);
         assert!(!s.events.object_picked);
         assert!(!s.events.wrong_pickup);
+    }
+
+    #[test]
+    fn done_facing_go_to_object_latches_object_reached() {
+        let mut st = room();
+        let mut s = st.slot_mut(0);
+        s.add_ball(Pos::new(3, 4), Color::Blue);
+        *s.mission = Mission::go_to(Tag::BALL, Color::Blue).raw();
+        intervene(&mut s, Action::Done);
+        assert!(s.events.object_reached);
+        assert!(!s.events.door_done);
+        // picking the go-to target up is NOT the success event (and not a
+        // wrong pickup either — those are pick-up-verb semantics)
+        intervene(&mut s, Action::Pickup);
+        assert!(!s.events.object_picked);
+        assert!(!s.events.wrong_pickup);
+        // wrong colour: no event
+        let mut s = st.slot_mut(0);
+        s.add_ball(Pos::new(3, 4), Color::Red);
+        intervene(&mut s, Action::Done);
+        assert!(!s.events.object_reached, "wrong colour must not satisfy go-to");
+    }
+
+    #[test]
+    fn put_next_drop_adjacent_to_target_latches_object_placed() {
+        let mut st = room();
+        let mut s = st.slot_mut(0);
+        s.add_box(Pos::new(2, 4), Color::Green); // the "near" target
+        *s.pocket = Pocket::holding(Tag::BALL, Color::Purple).0;
+        *s.mission = Mission::put_next(Tag::BALL, Color::Purple, Tag::BOX, Color::Green).raw();
+        // drop at (3,4): 4-adjacent to the box at (2,4)
+        intervene(&mut s, Action::Drop);
+        assert!(s.events.object_placed);
+        assert!(s.pocket_value().is_empty());
+    }
+
+    #[test]
+    fn put_next_far_drop_or_wrong_object_does_not_fire() {
+        let mut st = room();
+        let mut s = st.slot_mut(0);
+        s.add_box(Pos::new(1, 1), Color::Green); // far away
+        *s.pocket = Pocket::holding(Tag::BALL, Color::Purple).0;
+        *s.mission = Mission::put_next(Tag::BALL, Color::Purple, Tag::BOX, Color::Green).raw();
+        intervene(&mut s, Action::Drop); // lands at (3,4), not adjacent
+        assert!(!s.events.object_placed, "distant drop must not satisfy put-next");
+        // dropping the WRONG object next to the target fires nothing
+        let mut s = st.slot_mut(0);
+        *s.pocket = Pocket::holding(Tag::KEY, Color::Yellow).0;
+        s.place_player(Pos::new(2, 2), Direction::West); // drop at (2,1), adjacent to box
+        intervene(&mut s, Action::Drop);
+        assert!(!s.events.object_placed, "only the mission's moved object counts");
     }
 
     #[test]

@@ -34,6 +34,7 @@
 use crate::core::components::Direction;
 use crate::core::entities::{CellType, Tag};
 use crate::core::grid::Pos;
+use crate::core::mission::{feat, Mission, MISSION_DIM};
 use crate::core::state::{cellcode, EnvSlot};
 use crate::systems::sprites::{Sprite, SpriteSheet, TILE};
 
@@ -144,6 +145,18 @@ impl ObsSpec {
         }
     }
 
+    /// Write the fixed-width mission feature vector for one env into `out`
+    /// (`MISSION_DIM` i32s). Every observation kind carries this side
+    /// channel — it conditions the policy on the goal, it is not part of
+    /// the grid encoding. Dispatches like the grid writers so the parity
+    /// suite can pin the typed encoder against the bit-level scan oracle.
+    pub fn write_mission_path(&self, path: ObsPath, s: &EnvSlot<'_>, out: &mut [i32]) {
+        match path {
+            ObsPath::Overlay => mission_features(s, out),
+            ObsPath::NaiveScan => scan::mission_features(s, out),
+        }
+    }
+
     /// Path-explicit u8 writer (tests/benches pick the scan oracle here).
     pub fn write_u8_path(
         &self,
@@ -181,6 +194,14 @@ pub fn encode_cell(s: &EnvSlot<'_>, p: Pos, include_player: bool) -> (i32, i32, 
         return (cellcode::tag(code), cellcode::color(code), cellcode::state(code));
     }
     scan::encode_cell(s, p, include_player)
+}
+
+/// Mission feature vector of one env: the typed [`Mission`] component
+/// rendered as its one-hot block (see [`crate::core::mission`]). O(1),
+/// state-derived — the overlay path's writer.
+#[inline]
+pub fn mission_features(s: &EnvSlot<'_>, out: &mut [i32]) {
+    Mission::from_raw(s.mission).write_features(out);
 }
 
 /// The render code of flat cell `cell`: the packed overlay code with the
@@ -450,6 +471,43 @@ pub fn rgb_first_person(s: &EnvSlot<'_>, view: usize, sheet: &SpriteSheet, out: 
 /// the full registry; `benches/obs_throughput.rs` measures the speedup.
 pub mod scan {
     use super::*;
+
+    /// Scan-path oracle for [`super::mission_features`]: an independent,
+    /// bit-level decode of the packed mission i32 (no [`Mission`] accessor
+    /// involved), so drift between the typed encoder and the wire layout
+    /// is caught by the parity suite.
+    pub fn mission_features(s: &EnvSlot<'_>, out: &mut [i32]) {
+        debug_assert_eq!(out.len(), MISSION_DIM);
+        out.fill(0);
+        let m = s.mission;
+        if m < 0 {
+            return;
+        }
+        let color = m & 0xFF;
+        let tag = (m >> 8) & 0xFF;
+        let verb_code = (m >> 16) & 0x3;
+        // verb slots: 0 = go-to, 1 = pick-up, 2 = put-next; code 0 is the
+        // kind default (doors go-to, pickables pick-up).
+        let verb_slot = match verb_code {
+            1 => 0,
+            2 => 2,
+            _ => usize::from(tag != Tag::DOOR),
+        };
+        let kind_slot = |t: i32| match t {
+            Tag::DOOR => 0,
+            Tag::KEY => 1,
+            Tag::BALL => 2,
+            _ => 3,
+        };
+        out[feat::PRESENT] = 1;
+        out[feat::VERB + verb_slot] = 1;
+        out[feat::KIND + kind_slot(tag)] = 1;
+        out[feat::COLOR + color as usize] = 1;
+        if verb_code == 2 {
+            out[feat::KIND2 + kind_slot((m >> 18) & 0x7)] = 1;
+            out[feat::COLOR2 + ((m >> 21) & 0x7) as usize] = 1;
+        }
+    }
 
     /// Scan-path [`super::encode_cell`]: first-match entity-table scans.
     #[inline]
@@ -784,6 +842,39 @@ mod tests {
         spec.write_u8(&st.slot(0), &sheet, &mut out);
         assert_eq!(out.len(), 7 * 7 * 32 * 32 * 3);
         assert!(out.iter().any(|&p| p != 0));
+    }
+
+    #[test]
+    fn mission_features_overlay_matches_scan_oracle() {
+        use crate::core::components::Color;
+        use crate::core::mission::Mission;
+        let mut st = env();
+        let missions = [
+            Mission::NONE,
+            Mission::go_to(Tag::DOOR, Color::Yellow),
+            Mission::go_to(Tag::BALL, Color::Blue),
+            Mission::pick_up(Tag::KEY, Color::Red),
+            Mission::pick_up(Tag::BOX, Color::Grey),
+            Mission::put_next(Tag::BALL, Color::Purple, Tag::BOX, Color::Green),
+        ];
+        for m in missions {
+            {
+                let mut s = st.slot_mut(0);
+                *s.mission = m.raw();
+            }
+            let s = st.slot(0);
+            let mut fast = [0i32; crate::core::mission::MISSION_DIM];
+            let mut naive = [7i32; crate::core::mission::MISSION_DIM];
+            mission_features(&s, &mut fast);
+            scan::mission_features(&s, &mut naive);
+            assert_eq!(fast, naive, "mission {m:?} diverged from the bit-level oracle");
+            let spec = ObsSpec::new(ObsKind::SymbolicFirstPerson);
+            let mut via_spec = [0i32; crate::core::mission::MISSION_DIM];
+            spec.write_mission_path(ObsPath::Overlay, &s, &mut via_spec);
+            assert_eq!(via_spec, fast);
+            spec.write_mission_path(ObsPath::NaiveScan, &s, &mut via_spec);
+            assert_eq!(via_spec, naive);
+        }
     }
 
     #[test]

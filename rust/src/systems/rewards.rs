@@ -33,6 +33,12 @@ pub enum RewardFn {
     /// +1 when the mission-target object of any pickable kind is picked up
     /// (Fetch, UnlockPickup).
     OnObjectPicked,
+    /// +1 when `done` is performed facing the go-to mission's target object
+    /// (GoToObj).
+    OnObjectReached,
+    /// +1 when the put-next mission's object is dropped adjacent to its
+    /// second object (PutNext).
+    OnObjectPlaced,
     /// 0 everywhere.
     Free,
     /// −cost on every action except `done`.
@@ -101,6 +107,20 @@ impl RewardFn {
                     0.0
                 }
             }
+            RewardFn::OnObjectReached => {
+                if ev.object_reached {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            RewardFn::OnObjectPlaced => {
+                if ev.object_placed {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
             RewardFn::Free => 0.0,
             RewardFn::ActionCost(c) => {
                 if action == Action::Done {
@@ -131,6 +151,8 @@ impl RewardFn {
             RewardFn::OnBallHit => "on_ball_hit",
             RewardFn::OnDoorUnlocked => "on_door_unlocked",
             RewardFn::OnObjectPicked => "on_object_picked",
+            RewardFn::OnObjectReached => "on_object_reached",
+            RewardFn::OnObjectPlaced => "on_object_placed",
             RewardFn::Free => "free",
             RewardFn::ActionCost(_) => "action_cost",
             RewardFn::TimeCost(_) => "time_cost",
@@ -184,6 +206,16 @@ impl RewardSpec {
     /// Fetch / UnlockPickup: pick up the mission-target object.
     pub fn object_pickup() -> Self {
         RewardSpec::new(vec![RewardFn::OnObjectPicked])
+    }
+
+    /// GoToObj: `done` facing the mission object.
+    pub fn object_reached() -> Self {
+        RewardSpec::new(vec![RewardFn::OnObjectReached])
+    }
+
+    /// PutNext: drop the mission object adjacent to its second object.
+    pub fn object_placed() -> Self {
+        RewardSpec::new(vec![RewardFn::OnObjectPlaced])
     }
 
     pub fn eval(&self, s: &EnvSlot<'_>, action: Action, max_steps: u32) -> f32 {
@@ -279,6 +311,16 @@ mod tests {
         }
         let r = RewardFn::MiniGridLegacy.eval(&st.slot(0), Action::Forward, 100);
         assert!((r - (1.0 - 0.9 * 5.0 / 100.0)).abs() < 1e-6, "got {r}");
+    }
+
+    #[test]
+    fn go_to_obj_and_put_next_primitives() {
+        let st = slot_with_events(Events { object_reached: true, ..Events::NONE });
+        assert_eq!(RewardSpec::object_reached().eval(&st.slot(0), Action::Done, 100), 1.0);
+        assert_eq!(RewardSpec::object_placed().eval(&st.slot(0), Action::Done, 100), 0.0);
+        let st = slot_with_events(Events { object_placed: true, ..Events::NONE });
+        assert_eq!(RewardSpec::object_placed().eval(&st.slot(0), Action::Drop, 100), 1.0);
+        assert_eq!(RewardSpec::object_reached().eval(&st.slot(0), Action::Drop, 100), 0.0);
     }
 
     #[test]

@@ -29,6 +29,12 @@ pub enum TermFn {
     /// Terminate when a non-target object is picked up (Fetch: any pickup
     /// ends the episode, but only the target pays).
     OnWrongPickup,
+    /// Terminate when `done` is performed facing the go-to mission's target
+    /// object (GoToObj).
+    OnObjectReached,
+    /// Terminate when the put-next mission's object lands adjacent to its
+    /// second object (PutNext).
+    OnObjectPlaced,
     /// Never terminate.
     Free,
 }
@@ -45,6 +51,8 @@ impl TermFn {
             TermFn::OnDoorUnlocked => ev.door_unlocked,
             TermFn::OnObjectPicked => ev.object_picked,
             TermFn::OnWrongPickup => ev.wrong_pickup,
+            TermFn::OnObjectReached => ev.object_reached,
+            TermFn::OnObjectPlaced => ev.object_placed,
             TermFn::Free => false,
         }
     }
@@ -59,6 +67,8 @@ impl TermFn {
             TermFn::OnDoorUnlocked => "on_door_unlocked",
             TermFn::OnObjectPicked => "on_object_picked",
             TermFn::OnWrongPickup => "on_wrong_pickup",
+            TermFn::OnObjectReached => "on_object_reached",
+            TermFn::OnObjectPlaced => "on_object_placed",
             TermFn::Free => "free",
         }
     }
@@ -114,6 +124,16 @@ impl TermSpec {
     /// Any pickup ends the episode; only the target pays (Fetch).
     pub fn fetch() -> Self {
         TermSpec::new(vec![TermFn::OnObjectPicked, TermFn::OnWrongPickup])
+    }
+
+    /// `done` facing the mission object (GoToObj).
+    pub fn object_reached() -> Self {
+        TermSpec::new(vec![TermFn::OnObjectReached])
+    }
+
+    /// Mission object dropped next to its second object (PutNext).
+    pub fn object_placed() -> Self {
+        TermSpec::new(vec![TermFn::OnObjectPlaced])
     }
 
     pub fn eval(&self, s: &EnvSlot<'_>) -> bool {
@@ -173,6 +193,16 @@ mod tests {
         let st = with_events(Events { wrong_pickup: true, ..Events::NONE });
         assert!(TermSpec::fetch().eval(&st.slot(0)));
         assert!(!TermSpec::object_picked().eval(&st.slot(0)));
+    }
+
+    #[test]
+    fn go_to_obj_and_put_next_events_terminate() {
+        let st = with_events(Events { object_reached: true, ..Events::NONE });
+        assert!(TermSpec::object_reached().eval(&st.slot(0)));
+        assert!(!TermSpec::object_placed().eval(&st.slot(0)));
+        let st = with_events(Events { object_placed: true, ..Events::NONE });
+        assert!(TermSpec::object_placed().eval(&st.slot(0)));
+        assert!(!TermSpec::object_reached().eval(&st.slot(0)));
     }
 
     #[test]

@@ -14,7 +14,10 @@ use navix::rng::{Key, Rng};
 /// Deterministic-dynamics envs (the Dynamic-Obstacles family consumes the
 /// per-env RNG stream differently across engines, so it is excluded from
 /// exact trajectory parity and covered by invariant tests instead).
-const PARITY_ENVS: [&str; 15] = [
+const PARITY_ENVS: [&str; 17] = [
+    // BabyAI-style goal-conditioned families (typed Mission subsystem)
+    "Navix-GoToObj-8x8-N3-v0",
+    "Navix-PutNext-6x6-N2-v0",
     "Navix-Empty-5x5-v0",
     "Navix-Empty-8x8-v0",
     "Navix-Empty-Random-6x6",

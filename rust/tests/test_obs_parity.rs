@@ -2,7 +2,7 @@
 //!
 //! The packed cell-code overlay (PR 3) changes the *cost* of the
 //! observation/step hot path, never its semantics. This suite pins that
-//! bitwise over all 49 registry ids:
+//! bitwise over all 54 registry ids:
 //!
 //! 1. **State parity** — at every visited state, every spatial query
 //!    (`door_at`/`key_at`/`ball_at`/`box_at`, `walkable`, `opaque`,
@@ -18,8 +18,9 @@
 //!    a from-scratch render at every step of rollouts featuring door
 //!    toggles, pickups/drops and obstacle moves, autoresets included.
 
-use navix::batch::{BatchedEnv, ObsBatch};
+use navix::batch::{BatchedEnv, ObsData};
 use navix::core::grid::Pos;
+use navix::core::mission::MISSION_DIM;
 use navix::core::state::EnvSlot;
 use navix::rng::{Key, Rng};
 use navix::systems::observations::{self, scan, ObsKind, ObsPath, ObsSpec};
@@ -86,8 +87,23 @@ fn assert_state_parity(id: &str, step: usize, i: usize, s: &EnvSlot<'_>) {
     }
 }
 
-/// Overlay vs scan output for every applicable i32 kind, one env slot.
+/// Overlay vs scan output for every applicable i32 kind, one env slot —
+/// including the mission feature channel (typed encoder vs bit-level
+/// oracle).
 fn assert_i32_obs_parity(id: &str, step: usize, i: usize, s: &EnvSlot<'_>) {
+    let spec = ObsSpec::new(ObsKind::SymbolicFirstPerson);
+    let mut mission_fast = [0i32; MISSION_DIM];
+    let mut mission_naive = [7i32; MISSION_DIM];
+    spec.write_mission_path(ObsPath::Overlay, s, &mut mission_fast);
+    spec.write_mission_path(ObsPath::NaiveScan, s, &mut mission_naive);
+    assert_eq!(
+        mission_fast, mission_naive,
+        "{id} step {step} env {i}: mission features diverged from the bit-level oracle"
+    );
+    assert!(
+        mission_fast.iter().all(|&x| x == 0 || x == 1),
+        "{id} step {step} env {i}: mission features must be 0/1"
+    );
     for kind in I32_KINDS {
         let spec = ObsSpec::new(kind);
         let n = spec.len(s.h, s.w);
@@ -202,8 +218,8 @@ fn batched_engine_dirty_tiles_match_from_scratch_renders() {
             env.step(&actions);
             for i in 0..b {
                 scan::rgb(&env.state.slot(i), &sheet, &mut scratch);
-                match &env.obs {
-                    ObsBatch::U8(v) => {
+                match &env.obs.data {
+                    ObsData::U8(v) => {
                         assert_eq!(
                             &v[i * stride..(i + 1) * stride],
                             &scratch[..],

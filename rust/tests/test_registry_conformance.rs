@@ -8,7 +8,7 @@
 //! The sweep runs in CI as a dedicated debug-build job; keep per-id work
 //! bounded (episodes are clamped via the timeout below).
 
-use navix::batch::{BatchedEnv, ObsBatch, ShardedEnv};
+use navix::batch::{BatchedEnv, ObsBatch, ObsData, ShardedEnv};
 use navix::envs::solvability::{goal_pos, reachable};
 use navix::rng::{Key, Rng};
 
@@ -23,8 +23,15 @@ const TIMEOUT_CAP: u32 = 250;
 /// channel 0 is a MiniGrid object tag (0..=10), channel 1 a colour (0..=5),
 /// channel 2 a door state or agent direction (0..=3).
 fn check_obs_bounds(id: &str, obs: &ObsBatch, b: usize, step: usize) {
-    match obs {
-        ObsBatch::I32(v) => {
+    // The mission channel is a block of one-hots for every kind.
+    for (k, &x) in obs.mission.iter().enumerate() {
+        assert!(
+            x == 0 || x == 1,
+            "{id} step {step}: mission[{k}] = {x} is not a one-hot value"
+        );
+    }
+    match &obs.data {
+        ObsData::I32(v) => {
             assert_eq!(v.len() % (b * 3), 0, "{id}: obs not channel-triplets");
             for (k, &x) in v.iter().enumerate() {
                 let (lo, hi) = match k % 3 {
@@ -38,7 +45,7 @@ fn check_obs_bounds(id: &str, obs: &ObsBatch, b: usize, step: usize) {
                 );
             }
         }
-        ObsBatch::U8(_) => {} // u8 is bounded by construction
+        ObsData::U8(_) => {} // u8 is bounded by construction
     }
 }
 
@@ -128,15 +135,19 @@ fn every_id_is_bitwise_shard_invariant() {
                 single.timestep.t, sharded.timestep.t,
                 "{id} step {step}: episode clocks diverged under sharding"
             );
-            match (&single.obs, &sharded.obs) {
-                (ObsBatch::I32(a), ObsBatch::I32(b)) => {
+            match (&single.obs.data, &sharded.obs.data) {
+                (ObsData::I32(a), ObsData::I32(b)) => {
                     assert_eq!(a, b, "{id} step {step}: observations diverged under sharding")
                 }
-                (ObsBatch::U8(a), ObsBatch::U8(b)) => {
+                (ObsData::U8(a), ObsData::U8(b)) => {
                     assert_eq!(a, b, "{id} step {step}: observations diverged under sharding")
                 }
                 _ => panic!("{id} step {step}: observation dtypes diverged"),
             }
+            assert_eq!(
+                single.obs.mission, sharded.obs.mission,
+                "{id} step {step}: mission features diverged under sharding"
+            );
         }
     }
 }

@@ -10,7 +10,7 @@
 //! single-threaded engine after every step. 7 does not divide the batch, so
 //! uneven contiguous shards are covered too.
 
-use navix::batch::{BatchedEnv, ObsBatch, ShardedEnv};
+use navix::batch::{BatchedEnv, ObsBatch, ObsData, ShardedEnv};
 use navix::rng::{Key, Rng};
 
 const STEPS: usize = 200;
@@ -25,11 +25,15 @@ const ENVS: [&str; 3] =
     ["Navix-Empty-8x8-v0", "Navix-DoorKey-Random-8x8", "Navix-Dynamic-Obstacles-6x6"];
 
 fn assert_obs_equal(id: &str, step: usize, single: &ObsBatch, sharded: &ObsBatch) {
-    match (single, sharded) {
-        (ObsBatch::I32(a), ObsBatch::I32(b)) => {
+    assert_eq!(
+        single.mission, sharded.mission,
+        "{id} step {step}: mission features diverged"
+    );
+    match (&single.data, &sharded.data) {
+        (ObsData::I32(a), ObsData::I32(b)) => {
             assert_eq!(a, b, "{id} step {step}: i32 observations diverged");
         }
-        (ObsBatch::U8(a), ObsBatch::U8(b)) => {
+        (ObsData::U8(a), ObsData::U8(b)) => {
             assert_eq!(a, b, "{id} step {step}: u8 observations diverged");
         }
         _ => panic!("{id} step {step}: observation dtypes diverged"),

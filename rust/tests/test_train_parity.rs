@@ -105,6 +105,15 @@ fn pipelined_trainer_matches_serial_on_doorkey() {
     pipelined_matches_serial("Navix-DoorKey-6x6-v0", 23);
 }
 
+#[test]
+fn pipelined_trainer_matches_serial_on_goal_conditioned_family() {
+    // A mission env: the rollout obs tensors now include the mission
+    // feature block, so this pins the goal-conditioning channel bitwise
+    // through BatchedEnv (serial oracle) vs ShardedEnv + pipeline +
+    // batched featurisation.
+    pipelined_matches_serial("Navix-GoToDoor-5x5-v0", 31);
+}
+
 /// The batched (non-pipelined) path on a plain BatchedEnv is the same code
 /// the default `train` loop runs — pin it against the oracle too.
 #[test]
