@@ -5,7 +5,7 @@
 # path afterwards. The Rust targets work without artifacts — PJRT-backed
 # paths degrade or skip gracefully (see rust/src/runtime/mod.rs).
 
-.PHONY: build test verify artifacts bench-smoke train-smoke fmt clippy
+.PHONY: build test verify artifacts bench-smoke train-smoke bench-nightly fmt clippy
 
 build:
 	cargo build --release
@@ -30,10 +30,19 @@ bench-smoke:
 	cargo bench --bench obs_throughput -- --smoke
 
 # Exactly what CI's train-smoke job runs: end-to-end PPO training
-# throughput (serial vs sharded vs pipelined), BENCH_train.json, and the
-# NAVIX_TRAIN_SMOKE_FLOOR steps/s gate.
+# throughput (serial vs sharded vs pipelined, all on the fused scan path),
+# BENCH_train.json, and the bench_floors.toml [train] steps/s gate
+# (NAVIX_TRAIN_SMOKE_FLOOR overrides).
 train-smoke:
 	cargo bench --bench fig6_ppo_agents -- --smoke
+
+# Exactly what the nightly workflow runs: the full non-smoke bench suite
+# (every batch size / obs kind / agent count), writing the BENCH_*.json
+# trajectory files the committed floors are raised against.
+bench-nightly:
+	cargo bench --bench fig5_sharded
+	cargo bench --bench obs_throughput
+	cargo bench --bench fig6_ppo_agents
 
 fmt:
 	cargo fmt --all

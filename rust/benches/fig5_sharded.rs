@@ -8,13 +8,23 @@
 //! execution-layer speedup. Expected shape on an `N`-core host: ≈1x at tiny
 //! batches (synchronisation dominates), approaching `N`x by batch ≥ 1024.
 //!
+//! Scan-mode rows (`navix-batched-scan`, `navix-sharded-scan`): the same
+//! action stream executed through the fused K-step `step_n` path
+//! ([`navix::batch::rollout_random_scan`], window = 32), so the table shows
+//! what rollout fusion buys each engine — for the sharded engine this is
+//! one epoch/condvar round-trip per window instead of per step.
+//!
 //! `--smoke` (or `NAVIX_BENCH_FAST=1`): tiny batch, 1 iteration — the CI
 //! bench-smoke job runs this and uploads `results/BENCH_fig5_sharded.json`.
 
-use navix::batch::{BatchedEnv, ShardedEnv};
+use navix::batch::{rollout_random_scan, BatchedEnv, ShardedEnv};
 use navix::bench_harness::{stats, Report};
 use navix::rng::Key;
 use std::time::Instant;
+
+/// Fused-window size for the `*-scan` rows: long enough to amortise the
+/// per-window sync, short enough that smoke runs still exercise >1 window.
+const SCAN_WINDOW: usize = 32;
 
 fn main() {
     let smoke =
@@ -46,6 +56,22 @@ fn main() {
             "-".into(),
         ]);
 
+        // Scan mode, same engine: fused K-step windows through step_n.
+        let mut single = BatchedEnv::new(cfg.clone(), b, Key::new(0));
+        let t0 = Instant::now();
+        rollout_random_scan(&mut single, steps, 0xAC7, SCAN_WINDOW);
+        let scan_secs = t0.elapsed().as_secs_f64();
+        report.row(&[
+            b.to_string(),
+            "navix-batched-scan".into(),
+            "1".into(),
+            "1".into(),
+            format!("{scan_secs:.4}"),
+            format!("{:.0}", (b * steps) as f64 / scan_secs),
+            format!("{:.2}x", base_secs / scan_secs),
+            "-".into(),
+        ]);
+
         // One shard per thread, then 2 shards per thread (finer shards
         // smooth load imbalance at the cost of more lock traffic).
         for shards in [threads, 2 * threads] {
@@ -57,6 +83,24 @@ fn main() {
             report.row(&[
                 b.to_string(),
                 "navix-sharded".into(),
+                env.num_shards.to_string(),
+                env.num_threads.to_string(),
+                format!("{secs:.4}"),
+                format!("{:.0}", (b * steps) as f64 / secs),
+                format!("{:.2}x", base_secs / secs),
+                format!("{:.2}", stats::imbalance(&busy)),
+            ]);
+
+            // Same shard geometry, fused windows: one epoch/condvar
+            // round-trip per SCAN_WINDOW steps instead of per step.
+            let mut env = ShardedEnv::new(cfg.clone(), b, shards, threads, Key::new(0));
+            let t0 = Instant::now();
+            rollout_random_scan(&mut env, steps, 0xAC7, SCAN_WINDOW);
+            let secs = t0.elapsed().as_secs_f64();
+            let busy = env.shard_busy_secs();
+            report.row(&[
+                b.to_string(),
+                "navix-sharded-scan".into(),
                 env.num_shards.to_string(),
                 env.num_threads.to_string(),
                 format!("{secs:.4}"),

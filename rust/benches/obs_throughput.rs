@@ -15,10 +15,13 @@
 //! `--smoke` (or `NAVIX_BENCH_FAST=1`): tiny batch, few steps — the CI
 //! bench-smoke job runs this, uploads the JSON artifact, and **fails
 //! loudly** if the overlay path's first-person-symbolic steps/s drops
-//! below a recorded floor (`NAVIX_OBS_SMOKE_FLOOR`, default 100000).
+//! below the recorded floor (`[obs]` in `bench_floors.toml`, overridable
+//! via `NAVIX_OBS_SMOKE_FLOOR`). On a miss the bench exits non-zero after
+//! printing one `measured … < floor …` line and recording both values in
+//! the JSON's `meta` — no panic backtrace for CI logs to truncate.
 
 use navix::batch::BatchedEnv;
-use navix::bench_harness::Report;
+use navix::bench_harness::{floors, Report};
 use navix::rng::Key;
 use navix::systems::observations::{ObsKind, ObsPath};
 use std::time::Instant;
@@ -109,28 +112,31 @@ fn main() {
             }
         }
     }
-    report.save();
-
     if smoke {
-        // Regression gate: the overlay path must clear the recorded floor.
-        // The default is deliberately far below a healthy release build
-        // (first-person symbolic stepping runs in the millions of steps/s)
-        // so only a genuine hot-path regression — e.g. the overlay
-        // degrading back to per-cell scans — trips it on shared CI runners.
-        let floor: f64 = std::env::var("NAVIX_OBS_SMOKE_FLOOR")
-            .ok()
-            .and_then(|v| v.parse().ok())
-            .unwrap_or(100_000.0);
-        assert!(
-            smoke_floor_sps >= floor,
-            "overlay first-person-symbolic throughput {smoke_floor_sps:.0} steps/s \
-             is below the recorded floor of {floor:.0} steps/s"
-        );
+        // Regression gate: the overlay path must clear the recorded floor
+        // (committed in bench_floors.toml; see that file for the rationale
+        // behind the margin). Gate + measurement land in the JSON's meta so
+        // the uploaded artifact is self-describing even on a miss.
+        let floor = floors::resolve("obs", "NAVIX_OBS_SMOKE_FLOOR", 100_000.0);
+        report.meta("gate", "overlay symbolic_first_person steps/s");
+        report.meta("measured", &format!("{smoke_floor_sps:.0}"));
+        report.meta("floor", &format!("{:.0}", floor.value));
+        report.meta("floor_source", &floor.source);
+        report.save();
+        if smoke_floor_sps < floor.value {
+            println!(
+                "measured {smoke_floor_sps:.0} steps/s < floor {:.0} (source: {})",
+                floor.value, floor.source
+            );
+            std::process::exit(1);
+        }
         println!(
-            "\nsmoke gate: overlay symbolic_first_person ≥ {floor:.0} steps/s \
-             (measured {smoke_floor_sps:.0}) — OK"
+            "\nsmoke gate: overlay symbolic_first_person ≥ {:.0} steps/s \
+             (measured {smoke_floor_sps:.0}, source: {}) — OK",
+            floor.value, floor.source
         );
     } else {
+        report.save();
         println!("\n(expected shape: overlay ≥2x naive on first-person symbolic at B=2048;");
         println!(" full-grid kinds gain more — the naive path paid O(caps) per cell — and");
         println!(" full rgb gains most: dirty tiles re-blit only what changed)");

@@ -9,17 +9,24 @@
 //! GAE machinery, and a cross-check test asserts they optimise the same
 //! objective.
 //!
-//! ## Execution paths (PR 4)
+//! ## Execution paths (PR 4 batched inference, PR 6 fused rollouts)
 //!
-//! The hot paths are **batch-oriented**: [`Ppo::collect_rollout`]
-//! featurises the whole observation batch into one contiguous
-//! `[B, obs_dim]` buffer and runs a single batched actor/critic forward per
-//! env step, and [`Ppo::update`] drives minibatch GEMMs through
+//! The hot paths are **batch-oriented**: inference featurises the whole
+//! observation batch into one contiguous `[B, obs_dim]` buffer and runs a
+//! single batched actor/critic forward per env step, and [`Ppo::update`]
+//! drives minibatch GEMMs through
 //! [`Mlp::forward_batch`]/[`Mlp::backward_batch`] with reusable workspaces
-//! (zero per-sample allocation). [`Ppo::collect_rollout_pipelined`] adds
-//! the double-buffered pipeline: actions are submitted to a
-//! [`PipelinedEnv`]'s stepper thread and the critic/log-prob/bookkeeping
-//! half of inference overlaps the environment step.
+//! (zero per-sample allocation).
+//!
+//! Rollout collection is **fused** (scan mode): [`Ppo::collect_rollout`]
+//! hands the entire horizon to the engine as one
+//! [`BatchStepper::step_n`] call, supplying actions through an
+//! [`ActionProvider`] whose `overlap` hook carries the critic/log-prob/
+//! bookkeeping half of inference — inside a [`PipelinedEnv`]
+//! ([`Ppo::collect_rollout_pipelined`]) that work overlaps the environment
+//! step, reproducing the double-buffered schedule exactly. The per-step
+//! batched loop is kept as [`Ppo::collect_rollout_stepwise`], the
+//! batch-level parity oracle for the fused path.
 //!
 //! All of this is **bit-for-bit identical** to the original per-sample
 //! implementation, which is kept as [`Ppo::collect_rollout_serial`] /
@@ -31,8 +38,11 @@
 use crate::agents::{
     ensure, gae, preprocess_env_obs, preprocess_obs_batch, CurvePoint, ReturnTracker, TrainLog,
 };
-use crate::batch::{BatchStepper, PipelinedEnv};
+use crate::batch::{
+    ActionPlan, ActionProvider, BatchStepper, ObsBatch, PipelinedEnv, TrajectorySlice,
+};
 use crate::core::actions::Action;
+use crate::core::timestep::BatchedTimestep;
 use crate::nn::adam::{clip_global_norm, Adam};
 use crate::nn::mlp::BatchCache;
 use crate::nn::{log_softmax, sample_categorical, softmax, Activation, Mlp};
@@ -109,6 +119,8 @@ struct Workspace {
     mb_dv: Vec<f32>,
     a_grads: Vec<f32>,
     c_grads: Vec<f32>,
+    /// Reusable fused-rollout trajectory window (scan mode).
+    traj: TrajectorySlice,
 }
 
 /// Native PPO agent: separate actor/critic MLPs (2×64 as in the paper).
@@ -152,6 +164,33 @@ impl Rollout {
             advantages: vec![0.0; t * b],
             targets: vec![0.0; t * b],
         }
+    }
+}
+
+/// Per-step policy evaluation plugged into the fused [`BatchStepper::step_n`]
+/// loop. `actions` runs the featurise → actor forward → sample half (the part
+/// the engine must wait on); `overlap` runs the critic forward + rollout
+/// bookkeeping half, which reads only step *t*'s snapshot and can therefore
+/// proceed while a pipelined engine steps the envs to *t + 1*.
+struct FusedActing<'a> {
+    ppo: &'a mut Ppo,
+    ro: &'a mut Rollout,
+    b: usize,
+}
+
+impl ActionProvider for FusedActing<'_> {
+    fn actions(&mut self, t: usize, obs: &ObsBatch, _ts: &BatchedTimestep, out: &mut [u8]) {
+        let (b, d) = (self.b, self.ppo.obs_dim);
+        preprocess_obs_batch(obs, &mut self.ppo.ws.x[..b * d]);
+        self.ppo.actor.forward_batch(&self.ppo.ws.x[..b * d], b, &mut self.ppo.ws.acache);
+        self.ppo.sample_actions(self.ro, t * b, b);
+        out.copy_from_slice(&self.ppo.ws.actions[..b]);
+    }
+
+    fn overlap(&mut self, t: usize) {
+        let (b, d) = (self.b, self.ppo.obs_dim);
+        self.ppo.critic.forward_batch(&self.ppo.ws.x[..b * d], b, &mut self.ppo.ws.ccache);
+        self.ppo.record_step(self.ro, t * b, b);
     }
 }
 
@@ -257,13 +296,73 @@ impl Ppo {
         ensure(&mut ws.probs, na);
     }
 
-    /// Collect one on-policy rollout from `env` into `ro` with batched
-    /// inference: the whole `ObsBatch` is featurised into one contiguous
-    /// `[B, obs_dim]` buffer and a single actor + critic forward serves all
-    /// envs. Generic over the execution backend ([`crate::batch::BatchedEnv`],
-    /// [`crate::batch::ShardedEnv`], or a [`PipelinedEnv`] used
-    /// synchronously). Bit-identical to [`Ppo::collect_rollout_serial`].
+    /// Collect one on-policy rollout from `env` into `ro` — **fused**: the
+    /// entire horizon is one [`BatchStepper::step_n`] call, with batched
+    /// inference supplied per step through a [`FusedActing`] provider (the
+    /// whole `ObsBatch` featurised into one contiguous `[B, obs_dim]`
+    /// buffer, a single actor + critic forward serving all envs). Rewards,
+    /// discounts and episode boundaries come back as one time-major
+    /// [`TrajectorySlice`] window and are copied into the rollout with one
+    /// `memcpy` per field. Generic over the execution backend
+    /// ([`crate::batch::BatchedEnv`], [`crate::batch::ShardedEnv`], or a
+    /// [`PipelinedEnv`] — whose `step_n` overlaps the provider's critic/
+    /// bookkeeping work with the environment step). Bit-identical to
+    /// [`Ppo::collect_rollout_stepwise`] and
+    /// [`Ppo::collect_rollout_serial`].
     pub fn collect_rollout<E: BatchStepper + ?Sized>(
+        &mut self,
+        env: &mut E,
+        ro: &mut Rollout,
+        tracker: &mut ReturnTracker,
+    ) {
+        let (t_len, b, d) = (self.cfg.rollout_len, env.batch_size(), self.obs_dim);
+        self.ensure_rollout_ws(b);
+        // Take the workspace window out so the provider can borrow `self`
+        // while the engine fills it.
+        let mut traj = std::mem::take(&mut self.ws.traj);
+        {
+            let mut acting = FusedActing { ppo: &mut *self, ro: &mut *ro, b };
+            env.step_n(ActionPlan::Provider(&mut acting), t_len, &mut traj);
+        }
+        // Window → rollout tensors: both are time-major [T × B].
+        ro.rewards.copy_from_slice(&traj.reward);
+        ro.discounts.copy_from_slice(&traj.discount);
+        for idx in 0..t_len * b {
+            let last = traj.step_type[idx].is_last();
+            ro.boundaries[idx] = last;
+            if last {
+                // (t asc, env asc) — the per-step paths' push order.
+                tracker.push(traj.episodic_return[idx]);
+            }
+        }
+        self.ws.traj = traj;
+        preprocess_obs_batch(env.obs(), &mut self.ws.x[..b * d]);
+        self.critic.forward_batch(&self.ws.x[..b * d], b, &mut self.ws.ccache);
+        self.finish_rollout(ro, b);
+    }
+
+    /// [`Ppo::collect_rollout`] on a [`PipelinedEnv`]: the fused horizon
+    /// call dispatches to the pipeline's `step_n`, which submits step
+    /// *t*'s actions as soon as the actor has sampled them and runs the
+    /// provider's overlap hook — the critic forward + log-prob/rollout
+    /// bookkeeping for step *t* — while the workers advance the
+    /// environments to *t + 1*. Same trajectories, same RNG stream, same
+    /// floats — only the schedule changes.
+    pub fn collect_rollout_pipelined(
+        &mut self,
+        env: &mut PipelinedEnv,
+        ro: &mut Rollout,
+        tracker: &mut ReturnTracker,
+    ) {
+        self.collect_rollout(env, ro, tracker);
+    }
+
+    /// The pre-fusion per-step batched rollout loop, kept verbatim as the
+    /// batch-level parity oracle for the fused scan path (and the
+    /// scan-vs-stepwise comparison rows of the `fig6_ppo_agents` bench).
+    /// One `env.step` dispatch per step; same floats, same RNG stream as
+    /// [`Ppo::collect_rollout`].
+    pub fn collect_rollout_stepwise<E: BatchStepper + ?Sized>(
         &mut self,
         env: &mut E,
         ro: &mut Rollout,
@@ -275,41 +374,10 @@ impl Ppo {
             let base = t * b;
             preprocess_obs_batch(env.obs(), &mut self.ws.x[..b * d]);
             self.actor.forward_batch(&self.ws.x[..b * d], b, &mut self.ws.acache);
-            self.critic.forward_batch(&self.ws.x[..b * d], b, &mut self.ws.ccache);
             self.sample_actions(ro, base, b);
+            self.critic.forward_batch(&self.ws.x[..b * d], b, &mut self.ws.ccache);
             self.record_step(ro, base, b);
             env.step(&self.ws.actions[..b]);
-            Ppo::record_timestep(ro, tracker, env.timestep(), base, b);
-        }
-        preprocess_obs_batch(env.obs(), &mut self.ws.x[..b * d]);
-        self.critic.forward_batch(&self.ws.x[..b * d], b, &mut self.ws.ccache);
-        self.finish_rollout(ro, b);
-    }
-
-    /// [`Ppo::collect_rollout`] with the double-buffered pipeline: step
-    /// *t*'s actions are submitted to the stepper thread as soon as the
-    /// actor has sampled them, and the critic forward + log-prob/rollout
-    /// bookkeeping for step *t* run while the workers advance the
-    /// environments to *t + 1*. Same trajectories, same RNG stream, same
-    /// floats — only the schedule changes.
-    pub fn collect_rollout_pipelined(
-        &mut self,
-        env: &mut PipelinedEnv,
-        ro: &mut Rollout,
-        tracker: &mut ReturnTracker,
-    ) {
-        let (t_len, b, d) = (self.cfg.rollout_len, env.batch_size(), self.obs_dim);
-        self.ensure_rollout_ws(b);
-        for t in 0..t_len {
-            let base = t * b;
-            preprocess_obs_batch(env.obs(), &mut self.ws.x[..b * d]);
-            self.actor.forward_batch(&self.ws.x[..b * d], b, &mut self.ws.acache);
-            self.sample_actions(ro, base, b);
-            env.submit(&self.ws.actions[..b]);
-            // Overlap window: everything below reads only step t's snapshot.
-            self.critic.forward_batch(&self.ws.x[..b * d], b, &mut self.ws.ccache);
-            self.record_step(ro, base, b);
-            env.sync();
             Ppo::record_timestep(ro, tracker, env.timestep(), base, b);
         }
         preprocess_obs_batch(env.obs(), &mut self.ws.x[..b * d]);
@@ -673,6 +741,44 @@ mod tests {
             assert_eq!(ro_a.values, ro_b.values);
             assert_eq!(ro_a.advantages, ro_b.advantages);
             let m_a = ppo_a.update_serial(&ro_a);
+            let m_b = ppo_b.update(&ro_b);
+            assert_eq!(m_a, m_b);
+            assert_eq!(ppo_a.actor.params, ppo_b.actor.params);
+            assert_eq!(ppo_a.critic.params, ppo_b.critic.params);
+        }
+    }
+
+    #[test]
+    fn fused_rollout_matches_the_stepwise_oracle() {
+        // Scan-mode pin: one `step_n` call per horizon (the fused
+        // `collect_rollout`) reproduces the per-step batched loop exactly —
+        // every rollout tensor, the tracker stream, and the updated params.
+        let cfg = make("Navix-Empty-Random-6x6").unwrap();
+        let pcfg =
+            PpoConfig { rollout_len: 10, minibatches: 2, epochs: 2, ..Default::default() };
+        let mut env_a = BatchedEnv::new(cfg.clone(), 5, Key::new(7));
+        let mut env_b = BatchedEnv::new(cfg, 5, Key::new(7));
+        let d = crate::agents::OBS_DIM;
+        let mut ppo_a = Ppo::new(pcfg.clone(), d, 7, 3);
+        let mut ppo_b = Ppo::new(pcfg, d, 7, 3);
+        let mut ro_a = Rollout::new(10, 5, d);
+        let mut ro_b = Rollout::new(10, 5, d);
+        let mut tr_a = ReturnTracker::new(8);
+        let mut tr_b = ReturnTracker::new(8);
+        for _ in 0..3 {
+            ppo_a.collect_rollout_stepwise(&mut env_a, &mut ro_a, &mut tr_a);
+            ppo_b.collect_rollout(&mut env_b, &mut ro_b, &mut tr_b);
+            assert_eq!(ro_a.obs, ro_b.obs);
+            assert_eq!(ro_a.actions, ro_b.actions);
+            assert_eq!(ro_a.logp, ro_b.logp);
+            assert_eq!(ro_a.values, ro_b.values);
+            assert_eq!(ro_a.rewards, ro_b.rewards);
+            assert_eq!(ro_a.discounts, ro_b.discounts);
+            assert_eq!(ro_a.boundaries, ro_b.boundaries);
+            assert_eq!(ro_a.advantages, ro_b.advantages);
+            assert_eq!(ro_a.targets, ro_b.targets);
+            assert_eq!(tr_a.mean(), tr_b.mean());
+            let m_a = ppo_a.update(&ro_a);
             let m_b = ppo_b.update(&ro_b);
             assert_eq!(m_a, m_b);
             assert_eq!(ppo_a.actor.params, ppo_b.actor.params);

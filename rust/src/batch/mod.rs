@@ -33,6 +33,22 @@
 //! on the order envs are stepped or reset, so splitting the batch into
 //! contiguous shards ([`sharded::ShardedEnv`], the `pmap` analog) is
 //! bit-identical to the single-threaded engine for any shard count.
+//!
+//! ## Scan mode (fused K-step rollouts)
+//!
+//! [`BatchStepper::step_n`] is the repo's analog of NAVIX wrapping the
+//! rollout loop in `jax.lax.scan`: one call executes `K` lockstep steps
+//! into a time-major [`TrajectorySlice`], amortising trait-object dispatch,
+//! observation-buffer traffic and (on [`ShardedEnv`]) the epoch/condvar
+//! round-trip over the whole window. The same counted-key RNG contract
+//! above is what makes fusion bitwise-trivial: every per-step key is
+//! derived from `(root key, index, count)` up front rather than threaded
+//! sequentially through the loop, so `step_n(K)` is bit-identical to `K`
+//! calls of `step` (pinned by `tests/test_scan_parity.rs`). With a
+//! [`ActionPlan::Fixed`] plan and [`ObsCapture::Final`], intermediate
+//! observations are never materialised — safe even for dirty-tile rgb,
+//! whose per-tile cache only advances on blit, so the final frame renders
+//! exactly the tiles that changed since the last materialised one.
 
 pub mod pipeline;
 pub mod sharded;
@@ -150,6 +166,207 @@ impl ObsBatch {
             _ => unreachable!("observation dtype diverged between engines"),
         }
         self.mission.copy_from_slice(&src.mission);
+    }
+}
+
+/// Which per-step observations a fused [`BatchStepper::step_n`] window
+/// materialises into its [`TrajectorySlice`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ObsCapture {
+    /// Copy every step's post-step observation batch into the slice
+    /// (`[K × B × stride]` — what the parity tests compare).
+    All,
+    /// Skip per-step copies: only the engine's own `obs()` buffers hold the
+    /// final post-window frame. With an [`ActionPlan::Fixed`] plan the
+    /// intermediate observations are never even written — the scan-mode
+    /// win the `fig5_sharded` bench's `*-scan` rows measure.
+    #[default]
+    Final,
+}
+
+/// Supplies actions inside a fused [`BatchStepper::step_n`] window — the
+/// on-policy case, where step `t`'s actions depend on step `t`'s
+/// observations and cannot be precomputed into an [`ActionPlan::Fixed`]
+/// matrix.
+pub trait ActionProvider {
+    /// Fill `out` (`[B]`) with step `t`'s actions given the pre-step
+    /// observation batch and timestep metadata.
+    fn actions(&mut self, t: usize, obs: &ObsBatch, ts: &BatchedTimestep, out: &mut [u8]);
+
+    /// Work to run while step `t` is in flight. [`PipelinedEnv`] calls this
+    /// between submit and sync so it overlaps the environment step; the
+    /// synchronous engines call it immediately before stepping. Must read
+    /// only step `t`'s snapshot (captured in [`ActionProvider::actions`]),
+    /// never the engine's post-step state.
+    fn overlap(&mut self, _t: usize) {}
+}
+
+/// The action source for one fused [`BatchStepper::step_n`] window.
+pub enum ActionPlan<'a> {
+    /// Precomputed time-major `[K × B]` action matrix (row `t` holds step
+    /// `t`'s actions). Enables the fully fused paths: one epoch per window
+    /// on [`ShardedEnv`], one swap-buffer round-trip on [`PipelinedEnv`],
+    /// and skipped intermediate observations under [`ObsCapture::Final`].
+    Fixed(&'a [u8]),
+    /// Actions produced per step by a policy callback (the PPO trainers).
+    /// The engines still fuse the bookkeeping, but each step's
+    /// observations must be materialised for the callback.
+    Provider(&'a mut dyn ActionProvider),
+}
+
+/// Time-major `[K × B]` trajectory buffer filled by one
+/// [`BatchStepper::step_n`] window: the post-step timestep metadata of
+/// every step, plus (under [`ObsCapture::All`]) every step's observation
+/// batch. Field layouts match [`crate::agents::ppo::Rollout`]'s time-major
+/// tensors, so trainers copy whole windows with one `memcpy` per field.
+/// Buffers grow on demand and are reused across windows.
+#[derive(Clone, Debug)]
+pub struct TrajectorySlice {
+    /// Steps recorded by the last window.
+    pub k: usize,
+    /// Batch size of the recording engine.
+    pub b: usize,
+    /// Which observations the engine materialises into `obs`/`mission`.
+    pub capture: ObsCapture,
+    /// `[K × B]` steps-since-reset.
+    pub t: Vec<u32>,
+    /// `[K × B]` actions taken (−1 on autoreset rows).
+    pub action: Vec<i32>,
+    /// `[K × B]` rewards.
+    pub reward: Vec<f32>,
+    /// `[K × B]` discounts (0 on termination).
+    pub discount: Vec<f32>,
+    /// `[K × B]` step classifications (terminations/truncations).
+    pub step_type: Vec<StepType>,
+    /// `[K × B]` accumulated episodic returns.
+    pub episodic_return: Vec<f32>,
+    /// `[K × B × stride]` grid observations ([`ObsCapture::All`] only).
+    pub obs: ObsData,
+    /// `[K × B ×`[`MISSION_DIM`]`]` mission rows ([`ObsCapture::All`] only).
+    pub mission: Vec<i32>,
+    /// Per-env flat grid length of `obs`.
+    pub obs_stride: usize,
+}
+
+impl Default for TrajectorySlice {
+    fn default() -> Self {
+        TrajectorySlice::new(ObsCapture::Final)
+    }
+}
+
+impl TrajectorySlice {
+    /// An empty slice; engines shape it on first use via
+    /// [`TrajectorySlice::ensure_like`].
+    pub fn new(capture: ObsCapture) -> Self {
+        TrajectorySlice {
+            k: 0,
+            b: 0,
+            capture,
+            t: Vec::new(),
+            action: Vec::new(),
+            reward: Vec::new(),
+            discount: Vec::new(),
+            step_type: Vec::new(),
+            episodic_return: Vec::new(),
+            obs: ObsData::I32(Vec::new()),
+            mission: Vec::new(),
+            obs_stride: 0,
+        }
+    }
+
+    /// Resize every buffer for a `K × B` window whose observations have
+    /// `obs`'s dtype and stride. Engines call this at the top of `step_n`;
+    /// reallocation only happens when the window grows or the dtype
+    /// changes.
+    pub fn ensure_like(&mut self, k: usize, b: usize, obs: &ObsBatch) {
+        self.k = k;
+        self.b = b;
+        let n = k * b;
+        self.t.resize(n, 0);
+        self.action.resize(n, -1);
+        self.reward.resize(n, 0.0);
+        self.discount.resize(n, 1.0);
+        self.step_type.resize(n, StepType::First);
+        self.episodic_return.resize(n, 0.0);
+        self.obs_stride = obs.stride(b);
+        if self.capture == ObsCapture::All {
+            let len = n * self.obs_stride;
+            match (&mut self.obs, &obs.data) {
+                (ObsData::I32(dst), ObsData::I32(_)) => dst.resize(len, 0),
+                (ObsData::U8(dst), ObsData::U8(_)) => dst.resize(len, 0),
+                (slot, ObsData::I32(_)) => *slot = ObsData::I32(vec![0; len]),
+                (slot, ObsData::U8(_)) => *slot = ObsData::U8(vec![0; len]),
+            }
+            self.mission.resize(n * MISSION_DIM, 0);
+        }
+    }
+
+    /// Record step `t`'s post-step timestep metadata (row `t` of every
+    /// metadata field, one `memcpy` each).
+    pub fn record_row(&mut self, t: usize, ts: &BatchedTimestep) {
+        let (lo, hi) = (t * self.b, (t + 1) * self.b);
+        self.t[lo..hi].copy_from_slice(&ts.t);
+        self.action[lo..hi].copy_from_slice(&ts.action);
+        self.reward[lo..hi].copy_from_slice(&ts.reward);
+        self.discount[lo..hi].copy_from_slice(&ts.discount);
+        self.step_type[lo..hi].copy_from_slice(&ts.step_type);
+        self.episodic_return[lo..hi].copy_from_slice(&ts.episodic_return);
+    }
+
+    /// Record step `t`'s post-step observation batch ([`ObsCapture::All`]).
+    pub fn capture_obs_row(&mut self, t: usize, obs: &ObsBatch) {
+        debug_assert_eq!(self.capture, ObsCapture::All);
+        let (lo, hi) = (t * self.b * self.obs_stride, (t + 1) * self.b * self.obs_stride);
+        match (&mut self.obs, &obs.data) {
+            (ObsData::I32(dst), ObsData::I32(src)) => dst[lo..hi].copy_from_slice(src),
+            (ObsData::U8(dst), ObsData::U8(src)) => dst[lo..hi].copy_from_slice(src),
+            _ => unreachable!("trajectory obs dtype diverged from the engine"),
+        }
+        self.mission[t * self.b * MISSION_DIM..(t + 1) * self.b * MISSION_DIM]
+            .copy_from_slice(&obs.mission);
+    }
+
+    /// Step `t`'s reward row.
+    pub fn reward_row(&self, t: usize) -> &[f32] {
+        &self.reward[t * self.b..(t + 1) * self.b]
+    }
+
+    /// Step `t`'s discount row.
+    pub fn discount_row(&self, t: usize) -> &[f32] {
+        &self.discount[t * self.b..(t + 1) * self.b]
+    }
+
+    /// Step `t`'s step-type row.
+    pub fn step_type_row(&self, t: usize) -> &[StepType] {
+        &self.step_type[t * self.b..(t + 1) * self.b]
+    }
+
+    /// i32 grid view of env `i` at step `t` (capture mode `All`).
+    pub fn obs_i32(&self, t: usize, i: usize) -> &[i32] {
+        match &self.obs {
+            ObsData::I32(v) => {
+                let base = (t * self.b + i) * self.obs_stride;
+                &v[base..base + self.obs_stride]
+            }
+            ObsData::U8(_) => panic!("rgb trajectory observation accessed as i32"),
+        }
+    }
+
+    /// u8 grid view of env `i` at step `t` (capture mode `All`).
+    pub fn obs_u8(&self, t: usize, i: usize) -> &[u8] {
+        match &self.obs {
+            ObsData::U8(v) => {
+                let base = (t * self.b + i) * self.obs_stride;
+                &v[base..base + self.obs_stride]
+            }
+            ObsData::I32(_) => panic!("symbolic trajectory observation accessed as u8"),
+        }
+    }
+
+    /// Mission feature row of env `i` at step `t` (capture mode `All`).
+    pub fn mission_row(&self, t: usize, i: usize) -> &[i32] {
+        let base = (t * self.b + i) * MISSION_DIM;
+        &self.mission[base..base + MISSION_DIM]
     }
 }
 
@@ -274,15 +491,58 @@ impl BatchedEnv {
     /// Step all environments with `actions` (one per env, values 0..7).
     /// Environments whose previous timestep was terminal autoreset instead.
     pub fn step(&mut self, actions: &[u8]) {
+        self.step_impl(actions, true);
+    }
+
+    /// One lockstep iteration; `write_obs: false` advances the state and
+    /// timestep metadata without materialising observations (the interior
+    /// of a fused [`ObsCapture::Final`] window — output-only buffers, so
+    /// skipping writes nobody reads is exact, including dirty-tile rgb
+    /// whose cache only advances on blit).
+    fn step_impl(&mut self, actions: &[u8], write_obs: bool) {
         debug_assert_eq!(actions.len(), self.b);
         for i in 0..self.b {
             if self.timestep.step_type[i].is_last() {
                 self.reset_one(i);
-                self.write_obs(i);
-                continue;
+            } else {
+                self.step_one(i, Action::from_u8(actions[i]));
             }
-            self.step_one(i, Action::from_u8(actions[i]));
-            self.write_obs(i);
+            if write_obs {
+                self.write_obs(i);
+            }
+        }
+    }
+
+    /// Fused K-step window — the scan-mode core every engine builds on.
+    /// Bit-identical to `k` calls of [`BatchedEnv::step`]; with a
+    /// [`ActionPlan::Fixed`] plan and [`ObsCapture::Final`] the interior
+    /// steps skip observation materialisation entirely.
+    pub fn step_n(&mut self, mut plan: ActionPlan<'_>, k: usize, traj: &mut TrajectorySlice) {
+        traj.ensure_like(k, self.b, &self.obs);
+        let capture_all = traj.capture == ObsCapture::All;
+        let mut buf = vec![0u8; self.b];
+        if let ActionPlan::Fixed(actions) = &plan {
+            assert_eq!(actions.len(), k * self.b, "Fixed plan must be [K × B]");
+        }
+        for t in 0..k {
+            match &mut plan {
+                ActionPlan::Fixed(actions) => {
+                    // Interior observations are dead under Final capture:
+                    // the plan cannot read them and the next window starts
+                    // from the state, not the frame.
+                    let write = capture_all || t + 1 == k;
+                    self.step_impl(&actions[t * self.b..(t + 1) * self.b], write);
+                }
+                ActionPlan::Provider(p) => {
+                    p.actions(t, &self.obs, &self.timestep, &mut buf);
+                    p.overlap(t);
+                    self.step_impl(&buf, true);
+                }
+            }
+            traj.record_row(t, &self.timestep);
+            if capture_all {
+                traj.capture_obs_row(t, &self.obs);
+            }
         }
     }
 
@@ -380,10 +640,71 @@ pub trait BatchStepper {
     /// Reset every environment with fresh episode keys.
     fn reset_all(&mut self);
 
+    /// Fused K-step window (scan mode): execute `k` lockstep steps from
+    /// `plan` in one call, recording every step's timestep metadata (and,
+    /// under [`ObsCapture::All`], observations) into `traj`. Bit-identical
+    /// to `k` calls of [`BatchStepper::step`] — the engines override this
+    /// with fused implementations (skipped interior observations, one
+    /// sync round-trip per window); this default is the per-step fallback
+    /// any implementor gets for free.
+    fn step_n(&mut self, mut plan: ActionPlan<'_>, k: usize, traj: &mut TrajectorySlice) {
+        let b = self.batch_size();
+        traj.ensure_like(k, b, self.obs());
+        let mut buf = vec![0u8; b];
+        if let ActionPlan::Fixed(actions) = &plan {
+            assert_eq!(actions.len(), k * b, "Fixed plan must be [K × B]");
+        }
+        for t in 0..k {
+            match &mut plan {
+                ActionPlan::Fixed(actions) => {
+                    buf.copy_from_slice(&actions[t * b..(t + 1) * b]);
+                }
+                ActionPlan::Provider(p) => {
+                    p.actions(t, self.obs(), self.timestep(), &mut buf);
+                    p.overlap(t);
+                }
+            }
+            self.step(&buf);
+            traj.record_row(t, self.timestep());
+            if traj.capture == ObsCapture::All {
+                traj.capture_obs_row(t, self.obs());
+            }
+        }
+    }
+
     /// Number of discrete actions.
     fn num_actions(&self) -> usize {
         Action::N
     }
+}
+
+/// Fused-window variant of the engines' `rollout_random`: the **same**
+/// uniform action stream (seeded `rng.below(N)` in `(t, env)` order),
+/// executed through [`BatchStepper::step_n`] in windows of `window` steps
+/// with observations materialised only at window tails — the scan-mode
+/// throughput protocol of the `fig5_sharded` bench's `*-scan` rows.
+/// Returns total env-steps executed (`b × steps`).
+pub fn rollout_random_scan<E: BatchStepper + ?Sized>(
+    env: &mut E,
+    steps: usize,
+    seed: u64,
+    window: usize,
+) -> usize {
+    let b = env.batch_size();
+    let window = window.max(1);
+    let mut rng = crate::rng::Rng::new(seed);
+    let mut plan = vec![0u8; window * b];
+    let mut traj = TrajectorySlice::new(ObsCapture::Final);
+    let mut done = 0usize;
+    while done < steps {
+        let k = window.min(steps - done);
+        for a in plan[..k * b].iter_mut() {
+            *a = rng.below(Action::N as u32) as u8;
+        }
+        env.step_n(ActionPlan::Fixed(&plan[..k * b]), k, &mut traj);
+        done += k;
+    }
+    steps * b
 }
 
 impl BatchStepper for BatchedEnv {
@@ -405,6 +726,10 @@ impl BatchStepper for BatchedEnv {
 
     fn reset_all(&mut self) {
         BatchedEnv::reset_all(self);
+    }
+
+    fn step_n(&mut self, plan: ActionPlan<'_>, k: usize, traj: &mut TrajectorySlice) {
+        BatchedEnv::step_n(self, plan, k, traj);
     }
 }
 
@@ -602,6 +927,47 @@ mod tests {
             for i in 0..3 {
                 assert_eq!(full.obs.env_i32(6, 3 + i), part.obs.env_i32(3, i));
             }
+        }
+    }
+
+    #[test]
+    fn step_n_matches_stepwise_and_skips_interior_obs_exactly() {
+        // Unit pin of the scan-mode core (the engine sweep lives in
+        // tests/test_scan_parity.rs): one Fixed window under Final capture
+        // must land on the same state, timestep and final frame as the
+        // per-step loop, despite never writing interior observations.
+        let cfg = make("Navix-Empty-Random-6x6").unwrap();
+        let mut a = BatchedEnv::new(cfg.clone(), 5, Key::new(8));
+        let mut b = BatchedEnv::new(cfg, 5, Key::new(8));
+        let mut rng = crate::rng::Rng::new(2);
+        let mut traj = TrajectorySlice::new(ObsCapture::Final);
+        for _ in 0..4 {
+            let plan: Vec<u8> = (0..9 * 5).map(|_| rng.below(7) as u8).collect();
+            a.step_n(ActionPlan::Fixed(&plan), 9, &mut traj);
+            for t in 0..9 {
+                b.step(&plan[t * 5..(t + 1) * 5]);
+                assert_eq!(traj.reward_row(t), &b.timestep.reward[..]);
+                assert_eq!(traj.step_type_row(t), &b.timestep.step_type[..]);
+            }
+            assert_eq!(a.state.rng, b.state.rng, "in-episode RNG streams diverged");
+            assert_eq!(a.timestep.t, b.timestep.t);
+            for i in 0..5 {
+                assert_eq!(a.obs.env_i32(5, i), b.obs.env_i32(5, i), "final frame env {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn rollout_random_scan_replays_the_rollout_random_stream() {
+        let cfg = make("Navix-Empty-Random-6x6").unwrap();
+        let mut a = BatchedEnv::new(cfg.clone(), 4, Key::new(3));
+        let mut b = BatchedEnv::new(cfg, 4, Key::new(3));
+        let n = rollout_random_scan(&mut a, 50, 42, 16); // uneven tail window
+        assert_eq!(n, b.rollout_random(50, 42));
+        assert_eq!(a.timestep.reward, b.timestep.reward);
+        assert_eq!(a.state.player_pos, b.state.player_pos);
+        for i in 0..4 {
+            assert_eq!(a.obs.env_i32(4, i), b.obs.env_i32(4, i));
         }
     }
 

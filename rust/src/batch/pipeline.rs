@@ -29,10 +29,12 @@
 //! across env families, and [`crate::coordinator::multi_agent`] pins the
 //! full training curve.
 
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 
-use crate::batch::{BatchStepper, BatchedEnv, ObsBatch};
+use crate::batch::{
+    ActionPlan, BatchStepper, BatchedEnv, ObsBatch, ObsCapture, TrajectorySlice,
+};
 use crate::core::actions::Action;
 use crate::core::timestep::BatchedTimestep;
 
@@ -40,6 +42,10 @@ use crate::core::timestep::BatchedTimestep;
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 enum Cmd {
     Step,
+    /// Fused window: run the shipped K-step plan through the owned
+    /// engine's `step_n`; the back buffers carry the whole trajectory
+    /// chunk across in one swap.
+    StepN,
     ResetAll,
 }
 
@@ -51,8 +57,18 @@ struct PipeState {
     completed: u64,
     cmd: Cmd,
     actions: Vec<u8>,
+    /// Time-major `[K × B]` plan of an in-flight [`Cmd::StepN`] window.
+    plan: Vec<u8>,
+    /// Window length of an in-flight [`Cmd::StepN`].
+    chunk_len: usize,
+    /// Capture mode the caller's trajectory wants.
+    capture: ObsCapture,
     back_ts: BatchedTimestep,
     back_obs: ObsBatch,
+    /// Back trajectory chunk: the stepper thread swaps its filled window
+    /// in, the caller's sync swaps it out — whole-window hand-off with no
+    /// copies on the learner side.
+    back_traj: TrajectorySlice,
     shutdown: bool,
 }
 
@@ -91,8 +107,12 @@ impl PipelinedEnv {
                 completed: 0,
                 cmd: Cmd::Step,
                 actions: vec![0u8; b],
+                plan: Vec::new(),
+                chunk_len: 0,
+                capture: ObsCapture::Final,
                 back_ts: front_ts.clone(),
                 back_obs: front_obs.clone(),
+                back_traj: TrajectorySlice::new(ObsCapture::Final),
                 shutdown: false,
             }),
             start: Condvar::new(),
@@ -150,30 +170,61 @@ impl PipelinedEnv {
     /// key, …) rather than a generic "thread died" message.
     pub fn sync(&mut self) {
         let Some(epoch) = self.in_flight.take() else { return };
-        let mut st = self.control.state.lock().unwrap();
-        while st.completed < epoch {
-            let (next, timeout) = self
-                .control
-                .done
-                .wait_timeout(st, std::time::Duration::from_millis(100))
-                .unwrap();
-            st = next;
-            if timeout.timed_out()
-                && st.completed < epoch
-                && self.worker.as_ref().map_or(true, |w| w.is_finished())
-            {
-                drop(st); // release before joining; nothing else holds it
-                match self.worker.take().map(JoinHandle::join) {
-                    Some(Err(payload)) => std::panic::resume_unwind(payload),
-                    _ => panic!(
-                        "PipelinedEnv stepper thread exited without completing \
-                         epoch {epoch} (and without panicking)"
-                    ),
+        let mut st = wait_completed(&self.control, &mut self.worker, epoch);
+        std::mem::swap(&mut self.front_ts, &mut st.back_ts);
+        std::mem::swap(&mut self.front_obs, &mut st.back_obs);
+    }
+
+    /// Fused K-step window. An [`ActionPlan::Fixed`] plan is shipped to
+    /// the stepper thread whole: one submit/notify round-trip covers all K
+    /// steps, the owned engine runs its fused `step_n` (so a sharded
+    /// engine underneath still gets its one-epoch-per-window path), and
+    /// the swap buffers carry the entire trajectory chunk back along with
+    /// the final timestep/observation frame. Provider plans keep the
+    /// per-step submit → overlap → sync schedule — the provider's
+    /// [`crate::batch::ActionProvider::overlap`] work runs while the step
+    /// is in flight, exactly the pipelined trainers' overlap window.
+    pub fn step_n(&mut self, plan: ActionPlan<'_>, k: usize, traj: &mut TrajectorySlice) {
+        match plan {
+            ActionPlan::Fixed(actions) => {
+                assert_eq!(actions.len(), k * self.b, "Fixed plan must be [K × B]");
+                assert!(
+                    self.in_flight.is_none(),
+                    "PipelinedEnv::step_n with a step already in flight"
+                );
+                let epoch = {
+                    let mut st = self.control.state.lock().unwrap();
+                    st.plan.resize(k * self.b, 0);
+                    st.plan.copy_from_slice(actions);
+                    st.chunk_len = k;
+                    st.capture = traj.capture;
+                    st.cmd = Cmd::StepN;
+                    st.epoch += 1;
+                    self.control.start.notify_one();
+                    st.epoch
+                };
+                let mut st = wait_completed(&self.control, &mut self.worker, epoch);
+                std::mem::swap(traj, &mut st.back_traj);
+                std::mem::swap(&mut self.front_ts, &mut st.back_ts);
+                std::mem::swap(&mut self.front_obs, &mut st.back_obs);
+            }
+            ActionPlan::Provider(p) => {
+                traj.ensure_like(k, self.b, &self.front_obs);
+                let mut buf = vec![0u8; self.b];
+                for t in 0..k {
+                    p.actions(t, &self.front_obs, &self.front_ts, &mut buf);
+                    self.submit(&buf);
+                    // Overlap window: the provider's bookkeeping runs on
+                    // step t's snapshot while the workers advance to t+1.
+                    p.overlap(t);
+                    self.sync();
+                    traj.record_row(t, &self.front_ts);
+                    if traj.capture == ObsCapture::All {
+                        traj.capture_obs_row(t, &self.front_obs);
+                    }
                 }
             }
         }
-        std::mem::swap(&mut self.front_ts, &mut st.back_ts);
-        std::mem::swap(&mut self.front_obs, &mut st.back_obs);
     }
 
     /// Synchronous step: submit + sync (the [`BatchStepper`] contract).
@@ -235,16 +286,59 @@ impl BatchStepper for PipelinedEnv {
     fn reset_all(&mut self) {
         PipelinedEnv::reset_all(self);
     }
+
+    fn step_n(&mut self, plan: ActionPlan<'_>, k: usize, traj: &mut TrajectorySlice) {
+        PipelinedEnv::step_n(self, plan, k, traj);
+    }
 }
 
-/// Stepper-thread body: wait for an epoch, copy the actions out, step the
-/// owned engine (lock released — this is the long pole that overlaps the
-/// learner), then publish the results into the back buffer.
+/// Block until the stepper thread completes `epoch`, returning the state
+/// guard for the buffer swaps. If the thread died instead of completing —
+/// a panic inside `env.step`/`env.step_n` happens with the mutex released,
+/// so it cannot poison the lock and must be detected by liveness — the
+/// worker's own panic payload is reclaimed from its `JoinHandle` and
+/// re-raised here, so the caller sees the root cause (env id, failing
+/// key, …) rather than a generic "thread died" message.
+fn wait_completed<'c>(
+    control: &'c Control,
+    worker: &mut Option<JoinHandle<()>>,
+    epoch: u64,
+) -> MutexGuard<'c, PipeState> {
+    let mut st = control.state.lock().unwrap();
+    while st.completed < epoch {
+        let (next, timeout) =
+            control.done.wait_timeout(st, std::time::Duration::from_millis(100)).unwrap();
+        st = next;
+        if timeout.timed_out()
+            && st.completed < epoch
+            && worker.as_ref().map_or(true, |w| w.is_finished())
+        {
+            drop(st); // release before joining; nothing else holds it
+            match worker.take().map(JoinHandle::join) {
+                Some(Err(payload)) => std::panic::resume_unwind(payload),
+                _ => panic!(
+                    "PipelinedEnv stepper thread exited without completing \
+                     epoch {epoch} (and without panicking)"
+                ),
+            }
+        }
+    }
+    st
+}
+
+/// Stepper-thread body: wait for an epoch, copy the actions (or the whole
+/// fused plan) out, step the owned engine (lock released — this is the
+/// long pole that overlaps the learner), then publish the results into
+/// the back buffers.
 fn stepper_loop(mut env: Box<dyn BatchStepper + Send>, control: Arc<Control>) {
     let mut seen = 0u64;
     let mut actions = vec![0u8; env.batch_size()];
+    let mut plan: Vec<u8> = Vec::new();
+    // Local trajectory chunk: filled while the lock is released, then
+    // swapped into the back buffer whole.
+    let mut traj = TrajectorySlice::new(ObsCapture::Final);
     loop {
-        let cmd = {
+        let (cmd, k) = {
             let mut st = control.state.lock().unwrap();
             loop {
                 if st.shutdown {
@@ -256,11 +350,22 @@ fn stepper_loop(mut env: Box<dyn BatchStepper + Send>, control: Arc<Control>) {
                 st = control.start.wait(st).unwrap();
             }
             seen = st.epoch;
-            actions.copy_from_slice(&st.actions);
-            st.cmd
+            match st.cmd {
+                Cmd::StepN => {
+                    plan.resize(st.plan.len(), 0);
+                    plan.copy_from_slice(&st.plan);
+                    traj.capture = st.capture;
+                    (Cmd::StepN, st.chunk_len)
+                }
+                cmd => {
+                    actions.copy_from_slice(&st.actions);
+                    (cmd, 0)
+                }
+            }
         };
         match cmd {
             Cmd::Step => env.step(&actions),
+            Cmd::StepN => env.step_n(ActionPlan::Fixed(&plan), k, &mut traj),
             Cmd::ResetAll => env.reset_all(),
         }
         let mut st = control.state.lock().unwrap();
@@ -272,6 +377,9 @@ fn stepper_loop(mut env: Box<dyn BatchStepper + Send>, control: Arc<Control>) {
         st.back_ts.step_type.copy_from_slice(&ts.step_type);
         st.back_ts.episodic_return.copy_from_slice(&ts.episodic_return);
         st.back_obs.copy_from(env.obs());
+        if cmd == Cmd::StepN {
+            std::mem::swap(&mut st.back_traj, &mut traj);
+        }
         st.completed = seen;
         control.done.notify_one();
     }
@@ -338,6 +446,35 @@ mod tests {
     fn drop_joins_the_stepper_thread() {
         let p = pipelined("Navix-Empty-5x5-v0", 2);
         drop(p); // must not hang or leak the thread
+    }
+
+    #[test]
+    fn fused_window_round_trips_the_trajectory_chunk() {
+        // One StepN round-trip vs K submit/sync pairs: the swapped-in
+        // chunk and the front buffers must match the per-step pipeline
+        // exactly (the engine matrix lives in tests/test_scan_parity.rs).
+        let cfg = make("Navix-Empty-Random-6x6").unwrap();
+        let mut fused = PipelinedEnv::over_batched(BatchedEnv::new(cfg.clone(), 6, Key::new(3)));
+        let mut stepwise =
+            PipelinedEnv::over_batched(BatchedEnv::new(cfg, 6, Key::new(3)));
+        let mut rng = Rng::new(11);
+        let mut traj = TrajectorySlice::new(ObsCapture::All);
+        for _ in 0..3 {
+            let plan: Vec<u8> = (0..10 * 6).map(|_| rng.below(7) as u8).collect();
+            fused.step_n(ActionPlan::Fixed(&plan), 10, &mut traj);
+            for t in 0..10 {
+                stepwise.step(&plan[t * 6..(t + 1) * 6]);
+                assert_eq!(traj.reward_row(t), &stepwise.timestep().reward[..]);
+                assert_eq!(traj.step_type_row(t), &stepwise.timestep().step_type[..]);
+                for i in 0..6 {
+                    assert_eq!(traj.obs_i32(t, i), stepwise.obs().env_i32(6, i));
+                }
+            }
+            assert_eq!(fused.timestep().t, stepwise.timestep().t);
+            for i in 0..6 {
+                assert_eq!(fused.obs().env_i32(6, i), stepwise.obs().env_i32(6, i));
+            }
+        }
     }
 
     /// A stepper that dies mid-step with a distinctive payload.

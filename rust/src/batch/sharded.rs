@@ -32,7 +32,9 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use crate::batch::{BatchStepper, BatchedEnv, ObsBatch, ObsData};
+use crate::batch::{
+    ActionPlan, BatchStepper, BatchedEnv, ObsBatch, ObsCapture, ObsData, TrajectorySlice,
+};
 use crate::core::actions::Action;
 use crate::core::mission::MISSION_DIM;
 use crate::core::timestep::BatchedTimestep;
@@ -44,6 +46,12 @@ struct Shard {
     env: BatchedEnv,
     /// Per-step action slice for this shard (scattered by the caller).
     actions: Vec<u8>,
+    /// Time-major `[K × shard_b]` action plan for a fused window
+    /// (scattered by the caller before a [`Cmd::StepN`] epoch).
+    plan: Vec<u8>,
+    /// This shard's trajectory chunk, filled in the worker during a fused
+    /// window — shard state stays hot in the worker for all K steps.
+    traj: TrajectorySlice,
     /// Cumulative busy wall-time spent stepping/resetting this shard.
     busy_secs: f64,
 }
@@ -52,6 +60,9 @@ struct Shard {
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 enum Cmd {
     Step,
+    /// Fused window: run the scattered K-step plan through the shard
+    /// engine's `step_n` — one epoch/condvar round-trip per K steps.
+    StepN(usize),
     ResetAll,
 }
 
@@ -115,6 +126,8 @@ impl ShardedEnv {
             shards.push(Arc::new(Mutex::new(Shard {
                 env,
                 actions: vec![0u8; hi - lo],
+                plan: Vec::new(),
+                traj: TrajectorySlice::new(ObsCapture::Final),
                 busy_secs: 0.0,
             })));
         }
@@ -182,6 +195,93 @@ impl ShardedEnv {
     pub fn reset_all(&mut self) {
         self.run_epoch(Cmd::ResetAll);
         self.gather();
+    }
+
+    /// Fused K-step window. With an [`ActionPlan::Fixed`] plan this is the
+    /// scan-mode payoff for the device axis: the whole time-major plan is
+    /// scattered up front, **one** epoch/condvar round-trip covers all K
+    /// steps (vs. K for the per-step path), each worker runs its shard's
+    /// fused `step_n` with the shard state hot in cache, and the caller
+    /// gathers the trajectory chunks afterwards. Provider plans need the
+    /// full gathered observation batch before every step, so they fall
+    /// back to one epoch per step (still recording into `traj`).
+    /// Bit-identical to `k` calls of [`ShardedEnv::step`] either way.
+    pub fn step_n(&mut self, plan: ActionPlan<'_>, k: usize, traj: &mut TrajectorySlice) {
+        traj.ensure_like(k, self.b, &self.obs);
+        match plan {
+            ActionPlan::Fixed(actions) => {
+                assert_eq!(actions.len(), k * self.b, "Fixed plan must be [K × B]");
+                // Scatter: per-shard time-major plan chunks, capture mode
+                // forwarded so workers allocate nothing mid-epoch.
+                for (shard, &(lo, hi)) in self.shards.iter().zip(&self.bounds) {
+                    let mut sh = shard.lock().unwrap();
+                    let bs = hi - lo;
+                    sh.plan.resize(k * bs, 0);
+                    for t in 0..k {
+                        sh.plan[t * bs..(t + 1) * bs]
+                            .copy_from_slice(&actions[t * self.b + lo..t * self.b + hi]);
+                    }
+                    sh.traj.capture = traj.capture;
+                }
+                self.run_epoch(Cmd::StepN(k));
+                self.gather_traj(k, traj);
+                self.gather();
+            }
+            ActionPlan::Provider(p) => {
+                let mut buf = vec![0u8; self.b];
+                for t in 0..k {
+                    p.actions(t, &self.obs, &self.timestep, &mut buf);
+                    p.overlap(t);
+                    self.step(&buf);
+                    traj.record_row(t, &self.timestep);
+                    if traj.capture == ObsCapture::All {
+                        traj.capture_obs_row(t, &self.obs);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Copy every shard's fused-window trajectory chunk into the global
+    /// time-major slice (row segment `[t·B + lo, t·B + hi)` per shard per
+    /// step — one `memcpy` per field per row segment).
+    fn gather_traj(&self, k: usize, traj: &mut TrajectorySlice) {
+        for (shard, &(lo, hi)) in self.shards.iter().zip(&self.bounds) {
+            let sh = shard.lock().unwrap();
+            let bs = hi - lo;
+            for t in 0..k {
+                let (g, s) = (t * self.b, t * bs);
+                traj.t[g + lo..g + hi].copy_from_slice(&sh.traj.t[s..s + bs]);
+                traj.action[g + lo..g + hi].copy_from_slice(&sh.traj.action[s..s + bs]);
+                traj.reward[g + lo..g + hi].copy_from_slice(&sh.traj.reward[s..s + bs]);
+                traj.discount[g + lo..g + hi].copy_from_slice(&sh.traj.discount[s..s + bs]);
+                traj.step_type[g + lo..g + hi]
+                    .copy_from_slice(&sh.traj.step_type[s..s + bs]);
+                traj.episodic_return[g + lo..g + hi]
+                    .copy_from_slice(&sh.traj.episodic_return[s..s + bs]);
+            }
+            if traj.capture == ObsCapture::All {
+                let os = self.obs_stride;
+                for t in 0..k {
+                    let (g, s) = (t * self.b, t * bs);
+                    match (&mut traj.obs, &sh.traj.obs) {
+                        (ObsData::I32(dst), ObsData::I32(src)) => {
+                            dst[(g + lo) * os..(g + hi) * os]
+                                .copy_from_slice(&src[s * os..(s + bs) * os]);
+                        }
+                        (ObsData::U8(dst), ObsData::U8(src)) => {
+                            dst[(g + lo) * os..(g + hi) * os]
+                                .copy_from_slice(&src[s * os..(s + bs) * os]);
+                        }
+                        _ => unreachable!("shard trajectory obs dtype diverged"),
+                    }
+                    traj.mission[(g + lo) * MISSION_DIM..(g + hi) * MISSION_DIM]
+                        .copy_from_slice(
+                            &sh.traj.mission[s * MISSION_DIM..(s + bs) * MISSION_DIM],
+                        );
+                }
+            }
+        }
     }
 
     /// Convenience: run `steps` lockstep iterations with uniformly random
@@ -296,6 +396,10 @@ impl BatchStepper for ShardedEnv {
     fn reset_all(&mut self) {
         ShardedEnv::reset_all(self);
     }
+
+    fn step_n(&mut self, plan: ActionPlan<'_>, k: usize, traj: &mut TrajectorySlice) {
+        ShardedEnv::step_n(self, plan, k, traj);
+    }
 }
 
 /// Worker body: wait for a new epoch, execute the command over the owned
@@ -324,6 +428,12 @@ fn worker_loop(mine: Vec<Arc<Mutex<Shard>>>, control: Arc<Control>, total_worker
                 Cmd::Step => {
                     let Shard { env, actions, .. } = &mut *sh;
                     env.step(actions);
+                }
+                Cmd::StepN(k) => {
+                    // The fused window: all K steps run here with the
+                    // shard's state hot, no sync until the window ends.
+                    let Shard { env, plan, traj, .. } = &mut *sh;
+                    env.step_n(ActionPlan::Fixed(plan), k, traj);
                 }
                 Cmd::ResetAll => sh.env.reset_all(),
             }
@@ -422,5 +532,33 @@ mod tests {
     fn drop_joins_the_pool() {
         let e = env("Navix-Empty-5x5-v0", 4, 2, 2);
         drop(e); // must not hang or leak threads
+    }
+
+    #[test]
+    fn fused_window_matches_per_step_epochs() {
+        // One StepN epoch vs K Step epochs: same trajectory, same gathered
+        // mirrors (the engine matrix lives in tests/test_scan_parity.rs).
+        let cfg = make("Navix-Empty-Random-6x6").unwrap();
+        let mut fused = ShardedEnv::new(cfg.clone(), 10, 3, 2, Key::new(3));
+        let mut stepwise = ShardedEnv::new(cfg, 10, 3, 2, Key::new(3));
+        let mut rng = Rng::new(11);
+        let mut traj = TrajectorySlice::new(ObsCapture::All);
+        for _ in 0..3 {
+            let plan: Vec<u8> = (0..12 * 10).map(|_| rng.below(7) as u8).collect();
+            fused.step_n(ActionPlan::Fixed(&plan), 12, &mut traj);
+            for t in 0..12 {
+                stepwise.step(&plan[t * 10..(t + 1) * 10]);
+                assert_eq!(traj.reward_row(t), &stepwise.timestep.reward[..]);
+                assert_eq!(traj.step_type_row(t), &stepwise.timestep.step_type[..]);
+                for i in 0..10 {
+                    assert_eq!(traj.obs_i32(t, i), stepwise.obs.env_i32(10, i));
+                    assert_eq!(traj.mission_row(t, i), stepwise.obs.mission_row(10, i));
+                }
+            }
+            assert_eq!(fused.timestep.t, stepwise.timestep.t);
+            for i in 0..10 {
+                assert_eq!(fused.obs.env_i32(10, i), stepwise.obs.env_i32(10, i));
+            }
+        }
     }
 }

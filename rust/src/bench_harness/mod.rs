@@ -3,8 +3,10 @@
 //! runs, medians and the 5–95 percentile confidence intervals every NAVIX
 //! plot reports).
 
+pub mod floors;
 pub mod stats;
 
+pub use floors::Floor;
 pub use stats::Summary;
 
 use std::time::Instant;
@@ -37,6 +39,7 @@ pub struct Report {
     name: String,
     rows: Vec<Vec<String>>,
     header: Vec<String>,
+    meta: Vec<(String, String)>,
 }
 
 impl Report {
@@ -47,12 +50,21 @@ impl Report {
             name: name.to_string(),
             rows: Vec::new(),
             header: header.iter().map(|s| s.to_string()).collect(),
+            meta: Vec::new(),
         }
     }
 
     pub fn row(&mut self, cells: &[String]) {
         println!("{}", cells.join("\t"));
         self.rows.push(cells.to_vec());
+    }
+
+    /// Attach a key/value pair to the emitted JSON's `meta` object — used by
+    /// the smoke benches to record the gate (`floor`, `floor_source`) next
+    /// to the number it judged (`measured`), so a CI floor miss is
+    /// diagnosable from the `BENCH_*.json` artifact alone.
+    pub fn meta(&mut self, key: &str, value: &str) {
+        self.meta.push((key.to_string(), value.to_string()));
     }
 
     /// Write the table under `results/` (best-effort): as TSV for
@@ -83,11 +95,17 @@ impl Report {
             format!("[{}]", quoted.join(","))
         }
         let rows: Vec<String> = self.rows.iter().map(|r| arr(r)).collect();
+        let meta: Vec<String> = self
+            .meta
+            .iter()
+            .map(|(k, v)| format!("\"{}\":\"{}\"", esc(k), esc(v)))
+            .collect();
         format!(
-            "{{\"name\":\"{}\",\"header\":{},\"rows\":[{}]}}\n",
+            "{{\"name\":\"{}\",\"header\":{},\"rows\":[{}],\"meta\":{{{}}}}}\n",
             esc(&self.name),
             arr(&self.header),
-            rows.join(",")
+            rows.join(","),
+            meta.join(",")
         )
     }
 }
@@ -120,6 +138,16 @@ mod tests {
         assert!(j.starts_with("{\"name\":\"json test\""));
         assert!(j.contains("\"header\":[\"a\",\"b\"]"));
         assert!(j.contains("\"rows\":[[\"1\",\"x \\\"quoted\\\"\"]]"));
+        assert!(j.contains("\"meta\":{}"));
         assert!(j.ends_with("}\n"));
+    }
+
+    #[test]
+    fn report_meta_lands_in_the_json() {
+        let mut r = Report::new("meta test", &["a"]);
+        r.meta("floor", "8000");
+        r.meta("floor_source", "bench_floors.toml");
+        let j = r.to_json();
+        assert!(j.contains("\"meta\":{\"floor\":\"8000\",\"floor_source\":\"bench_floors.toml\"}"));
     }
 }

@@ -10,6 +10,12 @@
 //! trajectories, which preserves the experiment's structure —
 //! shared-nothing agents, one process — while the absolute scaling curve
 //! reflects the host (see EXPERIMENTS.md §Fig6).
+//!
+//! Since PR 6 every agent's rollout is *fused*: `Ppo::collect_rollout`
+//! hands the whole horizon to the engine as one
+//! [`crate::batch::BatchStepper::step_n`] call (EXPERIMENTS.md §"Scan
+//! mode"), so this coordinator pays one dispatch per rollout per agent
+//! rather than one per env step.
 
 use crate::agents::ppo::{Ppo, PpoConfig, Rollout};
 use crate::agents::{ReturnTracker, TrainLog};
@@ -21,8 +27,9 @@ use anyhow::Result;
 use std::time::Instant;
 
 /// One agent's execution backend. `Pipelined` keeps its concrete type so
-/// the rollout can use the submit/sync overlap API; `Plain` erases the
-/// engine behind [`BatchStepper`].
+/// the rollout reaches `PipelinedEnv::step_n` (whose provider path overlaps
+/// learner bookkeeping with env stepping); `Plain` erases the engine behind
+/// [`BatchStepper`].
 enum AgentEnv {
     Plain(Box<dyn BatchStepper>),
     Pipelined(PipelinedEnv),

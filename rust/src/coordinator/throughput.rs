@@ -2,11 +2,11 @@
 //! random-policy interaction across engines and batch sizes.
 
 use crate::baseline::{AsyncVectorEnv, SyncVectorEnv};
-use crate::batch::{BatchedEnv, ShardedEnv};
+use crate::batch::{rollout_random_scan, BatchedEnv, ShardedEnv};
 use crate::config::ExecConfig;
 use crate::envs::registry::make;
 use crate::rng::{Key, Rng};
-use anyhow::Result;
+use anyhow::{bail, Result};
 use std::time::Instant;
 
 /// Which engine executes the unroll.
@@ -104,6 +104,42 @@ pub fn unroll_walltime_exec(
     }
 }
 
+/// Scan-mode variant of [`unroll_walltime_exec`]: the same seeded random
+/// action stream, executed through the engines' fused
+/// [`crate::batch::BatchStepper::step_n`] path in windows of `window` steps
+/// (see [`rollout_random_scan`]). Only meaningful for the NAVIX-analog
+/// engines — the MiniGrid baselines have no fused path, and asking for one
+/// is an error rather than a silently per-step number.
+pub fn unroll_walltime_scan(
+    engine: Engine,
+    env_id: &str,
+    n_envs: usize,
+    steps: usize,
+    window: usize,
+    seed: u64,
+    exec: &ExecConfig,
+) -> Result<f64> {
+    let cfg = make(env_id)?;
+    match engine {
+        Engine::Batched => {
+            let mut env = BatchedEnv::new(cfg, n_envs, Key::new(seed));
+            let start = Instant::now();
+            rollout_random_scan(&mut env, steps, seed ^ 0xAC7, window);
+            Ok(start.elapsed().as_secs_f64())
+        }
+        Engine::Sharded => {
+            let mut env =
+                ShardedEnv::new(cfg, n_envs, exec.num_shards, exec.num_threads, Key::new(seed));
+            let start = Instant::now();
+            rollout_random_scan(&mut env, steps, seed ^ 0xAC7, window);
+            Ok(start.elapsed().as_secs_f64())
+        }
+        Engine::BaselineSync | Engine::BaselineAsync => {
+            bail!("scan mode requires a fused engine; {} steps one call at a time", engine.name())
+        }
+    }
+}
+
 /// Steps/second from an unroll measurement.
 pub fn steps_per_second(n_envs: usize, steps: usize, secs: f64) -> f64 {
     (n_envs * steps) as f64 / secs.max(1e-12)
@@ -147,5 +183,21 @@ mod tests {
     #[test]
     fn steps_per_second_math() {
         assert_eq!(steps_per_second(8, 1000, 2.0), 4000.0);
+    }
+
+    #[test]
+    fn scan_unroll_runs_on_fused_engines_and_rejects_baselines() {
+        let exec = ExecConfig { num_shards: 2, num_threads: 2, pipeline: false };
+        for engine in [Engine::Batched, Engine::Sharded] {
+            let dt =
+                unroll_walltime_scan(engine, "Navix-Empty-5x5-v0", 4, 50, 16, 0, &exec).unwrap();
+            assert!(dt > 0.0, "{engine:?}");
+        }
+        for engine in [Engine::BaselineSync, Engine::BaselineAsync] {
+            assert!(
+                unroll_walltime_scan(engine, "Navix-Empty-5x5-v0", 4, 50, 16, 0, &exec).is_err(),
+                "{engine:?} must refuse scan mode"
+            );
+        }
     }
 }
