@@ -21,6 +21,7 @@ fn main() {
         "fig1_speedup",
         &["env", "navix_median", "minigrid_median", "speedup"],
     );
+    report.meta("agents_per_slot", "1");
     for env_id in FIG1_ENVS {
         let navix = bench(1, runs, || {
             unroll_walltime(Engine::Batched, env_id, n_envs, steps, 0).unwrap();

@@ -14,6 +14,7 @@ fn main() {
         "fig3_speedup_all",
         &["xtick", "env", "navix_median", "minigrid_median", "speedup"],
     );
+    report.meta("agents_per_slot", "1");
     for (xtick, env_id) in fig3_envs().into_iter().enumerate() {
         let navix = bench(if fast { 0 } else { 1 }, runs, || {
             unroll_walltime(Engine::Batched, env_id, n_envs, steps, 0).unwrap();

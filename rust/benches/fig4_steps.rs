@@ -22,6 +22,7 @@ fn main() {
         "fig4_steps",
         &["steps", "navix_median", "minigrid_median", "speedup"],
     );
+    report.meta("agents_per_slot", "1");
     let mut steps = 1_000usize;
     while steps <= max_steps {
         // fewer repeats for the long runs, like the paper's error bars

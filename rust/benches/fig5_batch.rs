@@ -28,6 +28,7 @@ fn main() {
 
     let mut report =
         Report::new("fig5_batch", &["envs", "engine", "wall_s", "steps_per_s"]);
+    report.meta("agents_per_slot", "1");
     let mut b = 1usize;
     while b <= max_batched {
         let (secs, _) = time_once(|| {

@@ -14,6 +14,10 @@
 //! what rollout fusion buys each engine — for the sharded engine this is
 //! one epoch/condvar round-trip per window instead of per step.
 //!
+//! Agent-axis rows (`agents` ∈ {1, 2, 4}): the same slot count with A
+//! agents per slot, reported in agent-rows/s — the multi-agent scaling
+//! surface of the `[B × A]` engine contract.
+//!
 //! `--smoke` (or `NAVIX_BENCH_FAST=1`): tiny batch, 1 iteration — the CI
 //! bench-smoke job runs this and uploads `results/BENCH_fig5_sharded.json`.
 
@@ -36,8 +40,12 @@ fn main() {
 
     let mut report = Report::new(
         "fig5_sharded",
-        &["envs", "engine", "shards", "threads", "wall_s", "steps_per_s", "speedup", "imbalance"],
+        &[
+            "envs", "agents", "engine", "shards", "threads", "wall_s", "agent_steps_per_s",
+            "speedup", "imbalance",
+        ],
     );
+    report.meta("agents_per_slot", "1,2,4");
     for &b in &batches {
         let cfg = navix::make(env_id).unwrap();
 
@@ -47,6 +55,7 @@ fn main() {
         let base_secs = t0.elapsed().as_secs_f64();
         report.row(&[
             b.to_string(),
+            "1".into(),
             "navix-batched".into(),
             "1".into(),
             "1".into(),
@@ -63,6 +72,7 @@ fn main() {
         let scan_secs = t0.elapsed().as_secs_f64();
         report.row(&[
             b.to_string(),
+            "1".into(),
             "navix-batched-scan".into(),
             "1".into(),
             "1".into(),
@@ -82,6 +92,7 @@ fn main() {
             let busy = env.shard_busy_secs();
             report.row(&[
                 b.to_string(),
+                "1".into(),
                 "navix-sharded".into(),
                 env.num_shards.to_string(),
                 env.num_threads.to_string(),
@@ -100,6 +111,7 @@ fn main() {
             let busy = env.shard_busy_secs();
             report.row(&[
                 b.to_string(),
+                "1".into(),
                 "navix-sharded-scan".into(),
                 env.num_shards.to_string(),
                 env.num_threads.to_string(),
@@ -109,6 +121,52 @@ fn main() {
                 format!("{:.2}", stats::imbalance(&busy)),
             ]);
         }
+    }
+
+    // Agent-axis rows: the same slot count with A ∈ {1, 2, 4} agents per
+    // slot. Throughput is agent-rows/s (b·a rows advance per step), so
+    // perfect scaling along the agent axis shows as a near-flat
+    // `agent_steps_per_s` column.
+    let ab = if smoke { 64 } else { 1024 };
+    let mut a1_secs = f64::NAN;
+    for a in [1usize, 2, 4] {
+        let cfg = navix::make(env_id).unwrap().with_agents(a);
+
+        let mut single = BatchedEnv::new(cfg.clone(), ab, Key::new(0));
+        let t0 = Instant::now();
+        single.rollout_random(steps, 0xAC7);
+        let secs = t0.elapsed().as_secs_f64();
+        if a == 1 {
+            a1_secs = secs;
+        }
+        report.row(&[
+            ab.to_string(),
+            a.to_string(),
+            "navix-batched".into(),
+            "1".into(),
+            "1".into(),
+            format!("{secs:.4}"),
+            format!("{:.0}", (ab * a * steps) as f64 / secs),
+            format!("{:.2}x", a1_secs / secs),
+            "-".into(),
+        ]);
+
+        let mut env = ShardedEnv::new(cfg, ab, threads, threads, Key::new(0));
+        let t0 = Instant::now();
+        env.rollout_random(steps, 0xAC7);
+        let secs = t0.elapsed().as_secs_f64();
+        let busy = env.shard_busy_secs();
+        report.row(&[
+            ab.to_string(),
+            a.to_string(),
+            "navix-sharded".into(),
+            env.num_shards.to_string(),
+            env.num_threads.to_string(),
+            format!("{secs:.4}"),
+            format!("{:.0}", (ab * a * steps) as f64 / secs),
+            format!("{:.2}x", a1_secs / secs),
+            format!("{:.2}", stats::imbalance(&busy)),
+        ]);
     }
     report.save();
     println!("\n(pmap-analog shape: sharded ≈ 1x at tiny batches — the epoch barrier");

@@ -178,6 +178,7 @@ fn main() {
         // margin rationale). Gate + measurement land in the JSON's meta so
         // the uploaded artifact is self-describing even on a miss.
         let floor = floors::resolve("train", "NAVIX_TRAIN_SMOKE_FLOOR", 5_000.0);
+        train.report.meta("agents_per_slot", "1");
         train.report.meta("gate", "best end-to-end PPO mode steps/s");
         train.report.meta("measured", &format!("{:.0}", train.best_sps));
         train.report.meta("floor", &format!("{:.0}", floor.value));
@@ -203,6 +204,7 @@ fn main() {
         "fig6_ppo_agents",
         &["agents", "total_envs", "wall_s", "steps_per_s", "mean_return"],
     );
+    report.meta("agents_per_slot", "1");
 
     // NAVIX engine: N agents in one process.
     let mut n = 1usize;

@@ -18,6 +18,7 @@ fn main() {
         "fig8_ablation_nobatch",
         &["xtick", "env", "navix_b1_median", "minigrid_b1_median", "speedup"],
     );
+    report.meta("agents_per_slot", "1");
     for (xtick, env_id) in fig3_envs().into_iter().enumerate() {
         let navix = bench(0, runs, || {
             unroll_walltime(Engine::Batched, env_id, 1, steps, 0).unwrap();

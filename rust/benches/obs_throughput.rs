@@ -118,6 +118,7 @@ fn main() {
         // behind the margin). Gate + measurement land in the JSON's meta so
         // the uploaded artifact is self-describing even on a miss.
         let floor = floors::resolve("obs", "NAVIX_OBS_SMOKE_FLOOR", 100_000.0);
+        report.meta("agents_per_slot", "1");
         report.meta("gate", "overlay symbolic_first_person steps/s");
         report.meta("measured", &format!("{smoke_floor_sps:.0}"));
         report.meta("floor", &format!("{:.0}", floor.value));

@@ -146,7 +146,8 @@ mod tests {
     fn batch_featurise_concats_mission_and_matches_per_env_path() {
         use crate::batch::BatchedEnv;
         use crate::rng::Key;
-        let cfg = crate::envs::registry::make("Navix-GoToDoor-5x5-v0").unwrap();
+        let cfg = crate::envs::registry::make("Navix-GoToDoor-5x5-v0")
+            .expect("registry should know Navix-GoToDoor-5x5-v0");
         let b = 3;
         let env = BatchedEnv::new(cfg, b, Key::new(4));
         let g = env.obs.stride(b);

@@ -136,7 +136,9 @@ pub struct Ppo {
     ws: Workspace,
 }
 
-/// Rollout storage (time-major `[T × B]`).
+/// Rollout storage (time-major `[T × B·A]` — one row per agent-row, so a
+/// multi-agent engine's every agent contributes transitions; `b` below is
+/// [`BatchStepper::policy_rows`]).
 pub struct Rollout {
     pub obs: Vec<f32>,
     pub actions: Vec<u8>,
@@ -315,7 +317,7 @@ impl Ppo {
         ro: &mut Rollout,
         tracker: &mut ReturnTracker,
     ) {
-        let (t_len, b, d) = (self.cfg.rollout_len, env.batch_size(), self.obs_dim);
+        let (t_len, b, d) = (self.cfg.rollout_len, env.policy_rows(), self.obs_dim);
         self.ensure_rollout_ws(b);
         // Take the workspace window out so the provider can borrow `self`
         // while the engine fills it.
@@ -368,7 +370,7 @@ impl Ppo {
         ro: &mut Rollout,
         tracker: &mut ReturnTracker,
     ) {
-        let (t_len, b, d) = (self.cfg.rollout_len, env.batch_size(), self.obs_dim);
+        let (t_len, b, d) = (self.cfg.rollout_len, env.policy_rows(), self.obs_dim);
         self.ensure_rollout_ws(b);
         for t in 0..t_len {
             let base = t * b;
@@ -393,7 +395,7 @@ impl Ppo {
         ro: &mut Rollout,
         tracker: &mut ReturnTracker,
     ) {
-        let (t_len, b) = (self.cfg.rollout_len, env.batch_size());
+        let (t_len, b) = (self.cfg.rollout_len, env.policy_rows());
         let mut x = vec![0.0f32; self.obs_dim];
         let mut actions = vec![0u8; b];
         for t in 0..t_len {
@@ -627,13 +629,15 @@ impl Ppo {
         metrics
     }
 
-    /// Full training loop: `total_steps` environment steps on `env`.
+    /// Full training loop: `total_steps` agent-steps on `env` (every
+    /// agent-row of a multi-agent engine counts — the policy batch is
+    /// `B·A` rows per env step).
     pub fn train<E: BatchStepper + ?Sized>(&mut self, env: &mut E, total_steps: u64) -> TrainLog {
         let mut log = TrainLog::default();
         let mut tracker = ReturnTracker::new(64);
-        let steps_per_iter = (self.cfg.rollout_len * env.batch_size()) as u64;
+        let steps_per_iter = (self.cfg.rollout_len * env.policy_rows()) as u64;
         let iters = total_steps.div_ceil(steps_per_iter);
-        let mut ro = Rollout::new(self.cfg.rollout_len, env.batch_size(), self.obs_dim);
+        let mut ro = Rollout::new(self.cfg.rollout_len, env.policy_rows(), self.obs_dim);
         for it in 0..iters {
             self.collect_rollout(env, &mut ro, &mut tracker);
             let m = self.update(&ro);
@@ -653,9 +657,9 @@ impl Ppo {
     pub fn train_pipelined(&mut self, env: &mut PipelinedEnv, total_steps: u64) -> TrainLog {
         let mut log = TrainLog::default();
         let mut tracker = ReturnTracker::new(64);
-        let steps_per_iter = (self.cfg.rollout_len * env.batch_size()) as u64;
+        let steps_per_iter = (self.cfg.rollout_len * env.policy_rows()) as u64;
         let iters = total_steps.div_ceil(steps_per_iter);
-        let mut ro = Rollout::new(self.cfg.rollout_len, env.batch_size(), self.obs_dim);
+        let mut ro = Rollout::new(self.cfg.rollout_len, env.policy_rows(), self.obs_dim);
         for it in 0..iters {
             self.collect_rollout_pipelined(env, &mut ro, &mut tracker);
             let m = self.update(&ro);

@@ -335,7 +335,9 @@ impl Sac {
     pub fn train(&mut self, env: &mut BatchedEnv, total_steps: u64) -> TrainLog {
         let mut log = TrainLog::default();
         let mut tracker = ReturnTracker::new(64);
-        let b = env.b;
+        // One policy row per agent-row: multi-agent engines expose B·A
+        // rows, and every row is an independent replay transition.
+        let b = env.policy_rows();
         let mut actions = vec![0u8; b];
         // Policy rows are grid + mission: the replay buffer stores the full
         // goal-conditioned input, so off-policy updates see the goal too.

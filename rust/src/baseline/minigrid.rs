@@ -300,7 +300,7 @@ impl MiniGridEnv {
         self.agent_pos = s.player();
         self.agent_dir = s.dir();
         self.carrying = None;
-        self.mission = s.mission;
+        self.mission = s.mission[0];
         self.step_count = 0;
         self.rng = Rng::from_key(ep_key.fold_in(0xBA5E));
         Ok(self.gen_obs())

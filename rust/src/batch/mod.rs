@@ -8,6 +8,21 @@
 //! step resets it instead (returning a `First` timestep), so agent code
 //! stays branch-free.
 //!
+//! ## The agent axis
+//!
+//! Each slot holds `A = cfg.n_agents` agents (1 for every classic family).
+//! The engine contract is **agent-row major**: actions come in as a flat
+//! `[B × A]` matrix (slot `i`'s agents at `i·A ‥ (i+1)·A`), and every
+//! per-row output — timestep metadata, observations, mission features,
+//! trajectory slices — has one row per agent at the same index, so the
+//! policy batch is simply `B·A` rows ([`BatchStepper::policy_rows`]).
+//! Within a slot, agents act in ascending index order; walking into
+//! another agent latches the contact event pair instead of moving, which
+//! makes contested-cell resolution deterministic. One agent's terminal
+//! event ends the episode for the whole slot (the grid resets as a unit).
+//! With `A = 1` every shape and stream collapses to the classic layout
+//! bit for bit.
+//!
 //! The batching win this engine reproduces is architectural, not SIMD magic:
 //! one dispatch amortised over `B` contiguous state slots vs. one Python
 //! object graph per environment in the baseline ([`crate::baseline`]).
@@ -76,12 +91,14 @@ pub enum ObsData {
     U8(Vec<u8>),
 }
 
-/// Observation batch: the grid encoding (`data`, `[B × stride]`) plus the
-/// fixed-width goal-conditioning channel (`mission`,
-/// `[B ×`[`MISSION_DIM`]`]` i32 one-hots — all-zero for mission-free
-/// families). Every engine ([`BatchedEnv`], [`ShardedEnv`],
-/// [`PipelinedEnv`]) fills both on every reset/step, so the mission is part
-/// of the observation contract, not a state peek.
+/// Observation batch: the grid encoding (`data`, `[rows × stride]`) plus
+/// the fixed-width goal-conditioning channel (`mission`,
+/// `[rows ×`[`MISSION_DIM`]`]` i32 one-hots — all-zero for mission-free
+/// families). `rows` is the engine's `B·A` agent-row count (`B` when
+/// `A = 1`); every accessor's `b` argument is that row count. Every engine
+/// ([`BatchedEnv`], [`ShardedEnv`], [`PipelinedEnv`]) fills both on every
+/// reset/step, so the mission is part of the observation contract, not a
+/// state peek.
 #[derive(Clone, Debug)]
 pub struct ObsBatch {
     pub data: ObsData,
@@ -189,8 +206,8 @@ pub enum ObsCapture {
 /// observations and cannot be precomputed into an [`ActionPlan::Fixed`]
 /// matrix.
 pub trait ActionProvider {
-    /// Fill `out` (`[B]`) with step `t`'s actions given the pre-step
-    /// observation batch and timestep metadata.
+    /// Fill `out` (one action per agent-row, `[B × A]`) with step `t`'s
+    /// actions given the pre-step observation batch and timestep metadata.
     fn actions(&mut self, t: usize, obs: &ObsBatch, ts: &BatchedTimestep, out: &mut [u8]);
 
     /// Work to run while step `t` is in flight. [`PipelinedEnv`] calls this
@@ -203,8 +220,8 @@ pub trait ActionProvider {
 
 /// The action source for one fused [`BatchStepper::step_n`] window.
 pub enum ActionPlan<'a> {
-    /// Precomputed time-major `[K × B]` action matrix (row `t` holds step
-    /// `t`'s actions). Enables the fully fused paths: one epoch per window
+    /// Precomputed time-major `[K × B·A]` action matrix (row `t` holds step
+    /// `t`'s actions, one per agent-row). Enables the fully fused paths: one epoch per window
     /// on [`ShardedEnv`], one swap-buffer round-trip on [`PipelinedEnv`],
     /// and skipped intermediate observations under [`ObsCapture::Final`].
     Fixed(&'a [u8]),
@@ -214,8 +231,9 @@ pub enum ActionPlan<'a> {
     Provider(&'a mut dyn ActionProvider),
 }
 
-/// Time-major `[K × B]` trajectory buffer filled by one
-/// [`BatchStepper::step_n`] window: the post-step timestep metadata of
+/// Time-major `[K × rows]` trajectory buffer filled by one
+/// [`BatchStepper::step_n`] window (`rows` = the engine's `B·A` agent-row
+/// count): the post-step timestep metadata of
 /// every step, plus (under [`ObsCapture::All`]) every step's observation
 /// batch. Field layouts match [`crate::agents::ppo::Rollout`]'s time-major
 /// tensors, so trainers copy whole windows with one `memcpy` per field.
@@ -224,7 +242,7 @@ pub enum ActionPlan<'a> {
 pub struct TrajectorySlice {
     /// Steps recorded by the last window.
     pub k: usize,
-    /// Batch size of the recording engine.
+    /// Agent-row count of the recording engine (`B·A`; `B` when `A = 1`).
     pub b: usize,
     /// Which observations the engine materialises into `obs`/`mission`.
     pub capture: ObsCapture,
@@ -374,6 +392,9 @@ impl TrajectorySlice {
 pub struct BatchedEnv {
     pub cfg: EnvConfig,
     pub b: usize,
+    /// Agents per slot (`cfg.n_agents`); all per-row buffers hold `b·a`
+    /// agent-rows.
+    pub a: usize,
     pub state: BatchedState,
     pub timestep: BatchedTimestep,
     pub obs: ObsBatch,
@@ -381,9 +402,9 @@ pub struct BatchedEnv {
     /// Which observation implementation runs (overlay by default; the scan
     /// oracle is selectable for parity tests and the obs_throughput bench).
     obs_path: ObsPath,
-    /// Dirty-tile cache for full-grid rgb: per env, the render code each
-    /// tile of the obs buffer currently shows (`b·h·w`; empty otherwise).
-    /// `cellcode::INVALID` marks a tile as needing a blit.
+    /// Dirty-tile cache for full-grid rgb: per agent-row, the render code
+    /// each tile of the obs buffer currently shows (`b·a·h·w`; empty
+    /// otherwise). `cellcode::INVALID` marks a tile as needing a blit.
     rgb_prev: Vec<u32>,
     key: Key,
     /// Global index of local env 0 (non-zero only inside a [`ShardedEnv`]).
@@ -405,22 +426,25 @@ impl BatchedEnv {
     /// pure function of `(key, index_offset + i, reset_counts[i])` — never
     /// of the worker or shard that happens to step the env.
     pub fn with_offset(cfg: EnvConfig, b: usize, key: Key, index_offset: usize) -> Self {
-        let state = BatchedState::new(b, cfg.h, cfg.w, cfg.caps);
+        let a = cfg.n_agents.max(1);
+        let rows = b * a;
+        let state = BatchedState::with_agents(b, cfg.h, cfg.w, cfg.caps, a);
         let obs_len = cfg.obs.len(cfg.h, cfg.w);
-        let obs = ObsBatch::alloc(cfg.obs.kind.is_rgb(), b, obs_len);
+        let obs = ObsBatch::alloc(cfg.obs.kind.is_rgb(), rows, obs_len);
         // One process-wide sprite sheet: rgb engines (and every shard of a
         // ShardedEnv) share the rendered tiles instead of rebuilding them.
         let sprites = if cfg.obs.kind.is_rgb() { Some(SpriteSheet::shared()) } else { None };
         let rgb_prev = if cfg.obs.kind == ObsKind::Rgb {
-            vec![cellcode::INVALID; b * cfg.h * cfg.w]
+            vec![cellcode::INVALID; rows * cfg.h * cfg.w]
         } else {
             Vec::new()
         };
         let mut env = BatchedEnv {
             cfg,
             b,
+            a,
             state,
-            timestep: BatchedTimestep::first(b),
+            timestep: BatchedTimestep::first(rows),
             obs,
             sprites,
             obs_path: ObsPath::Overlay,
@@ -449,6 +473,12 @@ impl BatchedEnv {
         Action::N
     }
 
+    /// Agent-row count `b·a`: the width of the action matrix and of every
+    /// per-row output buffer.
+    pub fn policy_rows(&self) -> usize {
+        self.b * self.a
+    }
+
     /// Reset env `i`'s state slot with a fresh episode key. A layout
     /// generator that cannot place an entity is retried with successor
     /// episode keys — deterministic (and therefore shard-invariant),
@@ -471,25 +501,29 @@ impl BatchedEnv {
         for i in 0..self.b {
             self.reset_slot_fresh(i);
         }
-        self.timestep = BatchedTimestep::first(self.b);
+        self.timestep = BatchedTimestep::first(self.b * self.a);
         for i in 0..self.b {
             self.write_obs(i);
         }
     }
 
-    /// Reset just env `i` (autoreset path).
+    /// Reset just env `i` (autoreset path): all of the slot's agent-rows.
     fn reset_one(&mut self, i: usize) {
         self.reset_slot_fresh(i);
-        self.timestep.t[i] = 0;
-        self.timestep.action[i] = -1;
-        self.timestep.reward[i] = 0.0;
-        self.timestep.discount[i] = 1.0;
-        self.timestep.step_type[i] = StepType::First;
-        self.timestep.episodic_return[i] = 0.0;
+        for r in i * self.a..(i + 1) * self.a {
+            self.timestep.t[r] = 0;
+            self.timestep.action[r] = -1;
+            self.timestep.reward[r] = 0.0;
+            self.timestep.discount[r] = 1.0;
+            self.timestep.step_type[r] = StepType::First;
+            self.timestep.episodic_return[r] = 0.0;
+        }
     }
 
-    /// Step all environments with `actions` (one per env, values 0..7).
-    /// Environments whose previous timestep was terminal autoreset instead.
+    /// Step all environments with `actions` (the flat `[B × A]` action
+    /// matrix — one action per agent-row, values 0..7; just `[B]` when
+    /// `A = 1`). Slots whose previous timestep was terminal autoreset
+    /// instead.
     pub fn step(&mut self, actions: &[u8]) {
         self.step_impl(actions, true);
     }
@@ -500,12 +534,15 @@ impl BatchedEnv {
     /// skipping writes nobody reads is exact, including dirty-tile rgb
     /// whose cache only advances on blit).
     fn step_impl(&mut self, actions: &[u8], write_obs: bool) {
-        debug_assert_eq!(actions.len(), self.b);
+        let a = self.a;
+        debug_assert_eq!(actions.len(), self.b * a);
         for i in 0..self.b {
-            if self.timestep.step_type[i].is_last() {
+            // All of a slot's agent-rows share one step_type, so row i·A
+            // speaks for the slot.
+            if self.timestep.step_type[i * a].is_last() {
                 self.reset_one(i);
             } else {
-                self.step_one(i, Action::from_u8(actions[i]));
+                self.step_one(i, &actions[i * a..(i + 1) * a]);
             }
             if write_obs {
                 self.write_obs(i);
@@ -518,11 +555,12 @@ impl BatchedEnv {
     /// [`ActionPlan::Fixed`] plan and [`ObsCapture::Final`] the interior
     /// steps skip observation materialisation entirely.
     pub fn step_n(&mut self, mut plan: ActionPlan<'_>, k: usize, traj: &mut TrajectorySlice) {
-        traj.ensure_like(k, self.b, &self.obs);
+        let rows = self.policy_rows();
+        traj.ensure_like(k, rows, &self.obs);
         let capture_all = traj.capture == ObsCapture::All;
-        let mut buf = vec![0u8; self.b];
+        let mut buf = vec![0u8; rows];
         if let ActionPlan::Fixed(actions) = &plan {
-            assert_eq!(actions.len(), k * self.b, "Fixed plan must be [K × B]");
+            assert_eq!(actions.len(), k * rows, "Fixed plan must be [K × B·A]");
         }
         for t in 0..k {
             match &mut plan {
@@ -531,7 +569,7 @@ impl BatchedEnv {
                     // the plan cannot read them and the next window starts
                     // from the state, not the frame.
                     let write = capture_all || t + 1 == k;
-                    self.step_impl(&actions[t * self.b..(t + 1) * self.b], write);
+                    self.step_impl(&actions[t * rows..(t + 1) * rows], write);
                 }
                 ActionPlan::Provider(p) => {
                     p.actions(t, &self.obs, &self.timestep, &mut buf);
@@ -546,62 +584,82 @@ impl BatchedEnv {
         }
     }
 
-    /// Core per-env step: intervention → transition → reward/termination →
-    /// timeout truncation.
-    fn step_one(&mut self, i: usize, action: Action) {
+    /// Core per-slot step: per-agent interventions (ascending agent order —
+    /// the deterministic contested-cell rule) → one shared transition →
+    /// per-agent reward rows and a slot-level termination → timeout
+    /// truncation. `acts` holds the slot's `A` actions.
+    fn step_one(&mut self, i: usize, acts: &[u8]) {
         let stochastic = self.cfg.stochastic_balls;
         let max_steps = self.cfg.max_steps;
+        let a = self.a;
+        for j in 0..a {
+            let mut slot = self.state.agent_slot_mut(i, j);
+            intervene(&mut slot, Action::from_u8(acts[j]));
+        }
         {
             let mut slot = self.state.slot_mut(i);
-            intervene(&mut slot, action);
             transition(&mut slot, stochastic);
         }
-        let slot = self.state.slot(i);
-        let reward = self.cfg.reward.eval(&slot, action, max_steps);
-        let terminated = self.cfg.termination.eval(&slot);
-        let truncated = !terminated && slot.t >= max_steps;
-
-        let ts = &mut self.timestep;
-        ts.t[i] = slot.t;
-        ts.action[i] = action as i32;
-        ts.reward[i] = reward;
-        ts.episodic_return[i] += reward;
-        ts.discount[i] = if terminated { 0.0 } else { 1.0 };
-        ts.step_type[i] = if terminated {
+        // One slot-level termination: any agent's terminal event ends the
+        // episode for the whole slot (the grid resets as a unit).
+        let mut terminated = false;
+        for j in 0..a {
+            terminated = terminated || self.cfg.termination.eval(&self.state.agent_slot(i, j));
+        }
+        let t_now = self.state.agent_slot(i, 0).t;
+        let truncated = !terminated && t_now >= max_steps;
+        let step_type = if terminated {
             StepType::Terminated
         } else if truncated {
             StepType::Truncated
         } else {
             StepType::Mid
         };
+
+        for j in 0..a {
+            let action = Action::from_u8(acts[j]);
+            let reward = self.cfg.reward.eval(&self.state.agent_slot(i, j), action, max_steps);
+            let r = i * a + j;
+            let ts = &mut self.timestep;
+            ts.t[r] = t_now;
+            ts.action[r] = action as i32;
+            ts.reward[r] = reward;
+            ts.episodic_return[r] += reward;
+            ts.discount[r] = if terminated { 0.0 } else { 1.0 };
+            ts.step_type[r] = step_type;
+        }
     }
 
     fn write_obs(&mut self, i: usize) {
-        let slot = self.state.slot(i);
         let stride = self.cfg.obs.len(self.cfg.h, self.cfg.w);
-        match &mut self.obs.data {
-            ObsData::I32(v) => {
-                let out = &mut v[i * stride..(i + 1) * stride];
-                self.cfg.obs.write_i32_path(self.obs_path, &slot, out);
-            }
-            ObsData::U8(v) => {
-                let sheet = self.sprites.as_ref().expect("sprite sheet for rgb obs");
-                let out = &mut v[i * stride..(i + 1) * stride];
-                if self.cfg.obs.kind == ObsKind::Rgb && self.obs_path == ObsPath::Overlay {
-                    // Dirty-tile path: the obs buffer persists across steps,
-                    // so only tiles whose render code changed are re-blitted
-                    // (a fresh env starts all-INVALID → one full render).
-                    let hw = self.cfg.h * self.cfg.w;
-                    let prev = &mut self.rgb_prev[i * hw..(i + 1) * hw];
-                    rgb_incremental(&slot, sheet, prev, out);
-                } else {
-                    self.cfg.obs.write_u8_path(self.obs_path, &slot, sheet, out);
+        for j in 0..self.a {
+            let slot = self.state.agent_slot(i, j);
+            let r = i * self.a + j;
+            match &mut self.obs.data {
+                ObsData::I32(v) => {
+                    let out = &mut v[r * stride..(r + 1) * stride];
+                    self.cfg.obs.write_i32_path(self.obs_path, &slot, out);
+                }
+                ObsData::U8(v) => {
+                    let sheet = self.sprites.as_ref().expect("sprite sheet for rgb obs");
+                    let out = &mut v[r * stride..(r + 1) * stride];
+                    if self.cfg.obs.kind == ObsKind::Rgb && self.obs_path == ObsPath::Overlay {
+                        // Dirty-tile path: the obs buffer persists across
+                        // steps, so only tiles whose render code changed are
+                        // re-blitted (a fresh env starts all-INVALID → one
+                        // full render).
+                        let hw = self.cfg.h * self.cfg.w;
+                        let prev = &mut self.rgb_prev[r * hw..(r + 1) * hw];
+                        rgb_incremental(&slot, sheet, prev, out);
+                    } else {
+                        self.cfg.obs.write_u8_path(self.obs_path, &slot, sheet, out);
+                    }
                 }
             }
+            // The goal-conditioning side channel rides along per agent-row.
+            let mrow = &mut self.obs.mission[r * MISSION_DIM..(r + 1) * MISSION_DIM];
+            self.cfg.obs.write_mission_path(self.obs_path, &slot, mrow);
         }
-        // The goal-conditioning side channel rides along with every kind.
-        let mrow = &mut self.obs.mission[i * MISSION_DIM..(i + 1) * MISSION_DIM];
-        self.cfg.obs.write_mission_path(self.obs_path, &slot, mrow);
     }
 
     /// Convenience: run `steps` lockstep iterations with uniformly random
@@ -609,7 +667,7 @@ impl BatchedEnv {
     /// throughput benches (paper Figs. 4/5/8).
     pub fn rollout_random(&mut self, steps: usize, seed: u64) -> usize {
         let mut rng = crate::rng::Rng::new(seed);
-        let mut actions = vec![0u8; self.b];
+        let mut actions = vec![0u8; self.b * self.a];
         for _ in 0..steps {
             for a in actions.iter_mut() {
                 *a = rng.below(Action::N as u32) as u8;
@@ -625,10 +683,22 @@ impl BatchedEnv {
 /// benchmark code is agnostic to the execution backend. Object safe: the
 /// multi-agent coordinator holds `Box<dyn BatchStepper>` per agent.
 pub trait BatchStepper {
-    /// Number of parallel environments.
+    /// Number of parallel environments (slots).
     fn batch_size(&self) -> usize;
 
-    /// Step every environment in lockstep; terminal slots autoreset.
+    /// Agents per slot (`A`; 1 unless the family is multi-agent).
+    fn num_agents(&self) -> usize {
+        1
+    }
+
+    /// Agent-row count `B·A`: the width of the action matrix, of every
+    /// per-row output buffer, and of the policy batch the trainers see.
+    fn policy_rows(&self) -> usize {
+        self.batch_size() * self.num_agents()
+    }
+
+    /// Step every environment in lockstep with the flat `[B × A]` action
+    /// matrix; terminal slots autoreset.
     fn step(&mut self, actions: &[u8]);
 
     /// Timestep metadata written by the most recent step/reset.
@@ -648,16 +718,16 @@ pub trait BatchStepper {
     /// sync round-trip per window); this default is the per-step fallback
     /// any implementor gets for free.
     fn step_n(&mut self, mut plan: ActionPlan<'_>, k: usize, traj: &mut TrajectorySlice) {
-        let b = self.batch_size();
-        traj.ensure_like(k, b, self.obs());
-        let mut buf = vec![0u8; b];
+        let rows = self.policy_rows();
+        traj.ensure_like(k, rows, self.obs());
+        let mut buf = vec![0u8; rows];
         if let ActionPlan::Fixed(actions) = &plan {
-            assert_eq!(actions.len(), k * b, "Fixed plan must be [K × B]");
+            assert_eq!(actions.len(), k * rows, "Fixed plan must be [K × B·A]");
         }
         for t in 0..k {
             match &mut plan {
                 ActionPlan::Fixed(actions) => {
-                    buf.copy_from_slice(&actions[t * b..(t + 1) * b]);
+                    buf.copy_from_slice(&actions[t * rows..(t + 1) * rows]);
                 }
                 ActionPlan::Provider(p) => {
                     p.actions(t, self.obs(), self.timestep(), &mut buf);
@@ -690,26 +760,30 @@ pub fn rollout_random_scan<E: BatchStepper + ?Sized>(
     seed: u64,
     window: usize,
 ) -> usize {
-    let b = env.batch_size();
+    let rows = env.policy_rows();
     let window = window.max(1);
     let mut rng = crate::rng::Rng::new(seed);
-    let mut plan = vec![0u8; window * b];
+    let mut plan = vec![0u8; window * rows];
     let mut traj = TrajectorySlice::new(ObsCapture::Final);
     let mut done = 0usize;
     while done < steps {
         let k = window.min(steps - done);
-        for a in plan[..k * b].iter_mut() {
+        for a in plan[..k * rows].iter_mut() {
             *a = rng.below(Action::N as u32) as u8;
         }
-        env.step_n(ActionPlan::Fixed(&plan[..k * b]), k, &mut traj);
+        env.step_n(ActionPlan::Fixed(&plan[..k * rows]), k, &mut traj);
         done += k;
     }
-    steps * b
+    steps * env.batch_size()
 }
 
 impl BatchStepper for BatchedEnv {
     fn batch_size(&self) -> usize {
         self.b
+    }
+
+    fn num_agents(&self) -> usize {
+        self.a
     }
 
     fn step(&mut self, actions: &[u8]) {
@@ -829,10 +903,11 @@ mod tests {
         let mut acts = vec![Action::Forward as u8; 8];
         acts[3] = Action::Left as u8;
         e.step(&acts);
+        use crate::core::state::AgentView;
         let mut distinct = std::collections::HashSet::new();
         for i in 0..8 {
             let s = e.state.slot(i);
-            distinct.insert((s.player_pos, s.player_dir));
+            distinct.insert((s.player_pos_value(), s.player_dir_value()));
         }
         assert!(distinct.len() > 2, "batch collapsed to identical states");
     }

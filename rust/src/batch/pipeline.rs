@@ -57,7 +57,7 @@ struct PipeState {
     completed: u64,
     cmd: Cmd,
     actions: Vec<u8>,
-    /// Time-major `[K × B]` plan of an in-flight [`Cmd::StepN`] window.
+    /// Time-major `[K × B·A]` plan of an in-flight [`Cmd::StepN`] window.
     plan: Vec<u8>,
     /// Window length of an in-flight [`Cmd::StepN`].
     chunk_len: usize,
@@ -85,6 +85,9 @@ struct Control {
 /// overlap window.
 pub struct PipelinedEnv {
     b: usize,
+    /// Agents per slot of the owned engine; action slices and buffer rows
+    /// span `b·a` agent-rows.
+    a: usize,
     front_ts: BatchedTimestep,
     front_obs: ObsBatch,
     control: Arc<Control>,
@@ -99,6 +102,7 @@ impl PipelinedEnv {
     /// `timestep()` are valid immediately.
     pub fn new(env: Box<dyn BatchStepper + Send>) -> Self {
         let b = env.batch_size();
+        let a = env.num_agents();
         let front_ts = env.timestep().clone();
         let front_obs = env.obs().clone();
         let control = Arc::new(Control {
@@ -106,7 +110,7 @@ impl PipelinedEnv {
                 epoch: 0,
                 completed: 0,
                 cmd: Cmd::Step,
-                actions: vec![0u8; b],
+                actions: vec![0u8; b * a],
                 plan: Vec::new(),
                 chunk_len: 0,
                 capture: ObsCapture::Final,
@@ -122,7 +126,7 @@ impl PipelinedEnv {
             let control = Arc::clone(&control);
             std::thread::spawn(move || stepper_loop(env, control))
         };
-        PipelinedEnv { b, front_ts, front_obs, control, worker: Some(worker), in_flight: None }
+        PipelinedEnv { b, a, front_ts, front_obs, control, worker: Some(worker), in_flight: None }
     }
 
     /// Number of parallel environments.
@@ -150,7 +154,7 @@ impl PipelinedEnv {
     /// Panics if a step is already in flight — the pipeline is depth-1 by
     /// design (one step of lookahead keeps trajectories on-policy).
     pub fn submit(&mut self, actions: &[u8]) {
-        debug_assert_eq!(actions.len(), self.b);
+        debug_assert_eq!(actions.len(), self.b * self.a);
         assert!(self.in_flight.is_none(), "PipelinedEnv::submit with a step already in flight");
         let mut st = self.control.state.lock().unwrap();
         st.actions.copy_from_slice(actions);
@@ -185,16 +189,17 @@ impl PipelinedEnv {
     /// [`crate::batch::ActionProvider::overlap`] work runs while the step
     /// is in flight, exactly the pipelined trainers' overlap window.
     pub fn step_n(&mut self, plan: ActionPlan<'_>, k: usize, traj: &mut TrajectorySlice) {
+        let rows = self.b * self.a;
         match plan {
             ActionPlan::Fixed(actions) => {
-                assert_eq!(actions.len(), k * self.b, "Fixed plan must be [K × B]");
+                assert_eq!(actions.len(), k * rows, "Fixed plan must be [K × B·A]");
                 assert!(
                     self.in_flight.is_none(),
                     "PipelinedEnv::step_n with a step already in flight"
                 );
                 let epoch = {
                     let mut st = self.control.state.lock().unwrap();
-                    st.plan.resize(k * self.b, 0);
+                    st.plan.resize(k * rows, 0);
                     st.plan.copy_from_slice(actions);
                     st.chunk_len = k;
                     st.capture = traj.capture;
@@ -209,8 +214,8 @@ impl PipelinedEnv {
                 std::mem::swap(&mut self.front_obs, &mut st.back_obs);
             }
             ActionPlan::Provider(p) => {
-                traj.ensure_like(k, self.b, &self.front_obs);
-                let mut buf = vec![0u8; self.b];
+                traj.ensure_like(k, rows, &self.front_obs);
+                let mut buf = vec![0u8; rows];
                 for t in 0..k {
                     p.actions(t, &self.front_obs, &self.front_ts, &mut buf);
                     self.submit(&buf);
@@ -269,6 +274,10 @@ impl Drop for PipelinedEnv {
 impl BatchStepper for PipelinedEnv {
     fn batch_size(&self) -> usize {
         self.b
+    }
+
+    fn num_agents(&self) -> usize {
+        self.a
     }
 
     fn step(&mut self, actions: &[u8]) {
@@ -332,7 +341,7 @@ fn wait_completed<'c>(
 /// the back buffers.
 fn stepper_loop(mut env: Box<dyn BatchStepper + Send>, control: Arc<Control>) {
     let mut seen = 0u64;
-    let mut actions = vec![0u8; env.batch_size()];
+    let mut actions = vec![0u8; env.policy_rows()];
     let mut plan: Vec<u8> = Vec::new();
     // Local trajectory chunk: filled while the lock is released, then
     // swapped into the back buffer whole.

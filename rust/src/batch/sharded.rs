@@ -86,6 +86,9 @@ struct Control {
 pub struct ShardedEnv {
     pub cfg: EnvConfig,
     pub b: usize,
+    /// Agents per slot (`cfg.n_agents`); every per-row buffer and action
+    /// slice spans `b·a` agent-rows, sharded as `[lo·a, hi·a)` segments.
+    pub a: usize,
     pub num_shards: usize,
     pub num_threads: usize,
     /// Gathered timestep mirror (same layout as [`BatchedEnv::timestep`]).
@@ -115,6 +118,7 @@ impl ShardedEnv {
         let num_shards = if num_shards == 0 { auto } else { num_shards }.clamp(1, b.max(1));
         let num_threads = if num_threads == 0 { auto } else { num_threads }.clamp(1, num_shards);
 
+        let a = cfg.n_agents.max(1);
         let obs_stride = cfg.obs.len(cfg.h, cfg.w);
         let mut bounds = Vec::with_capacity(num_shards);
         let mut shards = Vec::with_capacity(num_shards);
@@ -125,14 +129,14 @@ impl ShardedEnv {
             let env = BatchedEnv::with_offset(cfg.clone(), hi - lo, key, lo);
             shards.push(Arc::new(Mutex::new(Shard {
                 env,
-                actions: vec![0u8; hi - lo],
+                actions: vec![0u8; (hi - lo) * a],
                 plan: Vec::new(),
                 traj: TrajectorySlice::new(ObsCapture::Final),
                 busy_secs: 0.0,
             })));
         }
 
-        let obs = ObsBatch::alloc(cfg.obs.kind.is_rgb(), b, obs_stride);
+        let obs = ObsBatch::alloc(cfg.obs.kind.is_rgb(), b * a, obs_stride);
 
         let control = Arc::new(Control {
             state: Mutex::new(PoolState {
@@ -160,9 +164,10 @@ impl ShardedEnv {
         let mut env = ShardedEnv {
             cfg,
             b,
+            a,
             num_shards,
             num_threads,
-            timestep: BatchedTimestep::first(b),
+            timestep: BatchedTimestep::first(b * a),
             obs,
             bounds,
             shards,
@@ -179,13 +184,15 @@ impl ShardedEnv {
         Action::N
     }
 
-    /// Step all environments with `actions` (one per env, values 0..7).
-    /// Environments whose previous timestep was terminal autoreset instead.
+    /// Step all environments with `actions` (the flat `[B × A]` action
+    /// matrix — one per agent-row, values 0..7). Slots whose previous
+    /// timestep was terminal autoreset instead.
     /// Bit-identical to [`BatchedEnv::step`] on the same action sequence.
     pub fn step(&mut self, actions: &[u8]) {
-        debug_assert_eq!(actions.len(), self.b);
+        let a = self.a;
+        debug_assert_eq!(actions.len(), self.b * a);
         for (shard, &(lo, hi)) in self.shards.iter().zip(&self.bounds) {
-            shard.lock().unwrap().actions.copy_from_slice(&actions[lo..hi]);
+            shard.lock().unwrap().actions.copy_from_slice(&actions[lo * a..hi * a]);
         }
         self.run_epoch(Cmd::Step);
         self.gather();
@@ -207,19 +214,21 @@ impl ShardedEnv {
     /// back to one epoch per step (still recording into `traj`).
     /// Bit-identical to `k` calls of [`ShardedEnv::step`] either way.
     pub fn step_n(&mut self, plan: ActionPlan<'_>, k: usize, traj: &mut TrajectorySlice) {
-        traj.ensure_like(k, self.b, &self.obs);
+        let a = self.a;
+        let rows = self.b * a;
+        traj.ensure_like(k, rows, &self.obs);
         match plan {
             ActionPlan::Fixed(actions) => {
-                assert_eq!(actions.len(), k * self.b, "Fixed plan must be [K × B]");
+                assert_eq!(actions.len(), k * rows, "Fixed plan must be [K × B·A]");
                 // Scatter: per-shard time-major plan chunks, capture mode
                 // forwarded so workers allocate nothing mid-epoch.
                 for (shard, &(lo, hi)) in self.shards.iter().zip(&self.bounds) {
                     let mut sh = shard.lock().unwrap();
-                    let bs = hi - lo;
+                    let bs = (hi - lo) * a;
                     sh.plan.resize(k * bs, 0);
                     for t in 0..k {
                         sh.plan[t * bs..(t + 1) * bs]
-                            .copy_from_slice(&actions[t * self.b + lo..t * self.b + hi]);
+                            .copy_from_slice(&actions[t * rows + lo * a..t * rows + hi * a]);
                     }
                     sh.traj.capture = traj.capture;
                 }
@@ -228,7 +237,7 @@ impl ShardedEnv {
                 self.gather();
             }
             ActionPlan::Provider(p) => {
-                let mut buf = vec![0u8; self.b];
+                let mut buf = vec![0u8; rows];
                 for t in 0..k {
                     p.actions(t, &self.obs, &self.timestep, &mut buf);
                     p.overlap(t);
@@ -246,11 +255,14 @@ impl ShardedEnv {
     /// time-major slice (row segment `[t·B + lo, t·B + hi)` per shard per
     /// step — one `memcpy` per field per row segment).
     fn gather_traj(&self, k: usize, traj: &mut TrajectorySlice) {
+        let a = self.a;
+        let rows = self.b * a;
         for (shard, &(lo, hi)) in self.shards.iter().zip(&self.bounds) {
             let sh = shard.lock().unwrap();
+            let (lo, hi) = (lo * a, hi * a);
             let bs = hi - lo;
             for t in 0..k {
-                let (g, s) = (t * self.b, t * bs);
+                let (g, s) = (t * rows, t * bs);
                 traj.t[g + lo..g + hi].copy_from_slice(&sh.traj.t[s..s + bs]);
                 traj.action[g + lo..g + hi].copy_from_slice(&sh.traj.action[s..s + bs]);
                 traj.reward[g + lo..g + hi].copy_from_slice(&sh.traj.reward[s..s + bs]);
@@ -263,7 +275,7 @@ impl ShardedEnv {
             if traj.capture == ObsCapture::All {
                 let os = self.obs_stride;
                 for t in 0..k {
-                    let (g, s) = (t * self.b, t * bs);
+                    let (g, s) = (t * rows, t * bs);
                     match (&mut traj.obs, &sh.traj.obs) {
                         (ObsData::I32(dst), ObsData::I32(src)) => {
                             dst[(g + lo) * os..(g + hi) * os]
@@ -290,7 +302,7 @@ impl ShardedEnv {
     /// total env-steps (`b × steps`).
     pub fn rollout_random(&mut self, steps: usize, seed: u64) -> usize {
         let mut rng = crate::rng::Rng::new(seed);
-        let mut actions = vec![0u8; self.b];
+        let mut actions = vec![0u8; self.b * self.a];
         for _ in 0..steps {
             for a in actions.iter_mut() {
                 *a = rng.below(Action::N as u32) as u8;
@@ -338,8 +350,10 @@ impl ShardedEnv {
     /// contiguous mirrors — one `memcpy` per field per shard, no
     /// allocation.
     fn gather(&mut self) {
+        let a = self.a;
         for (shard, &(lo, hi)) in self.shards.iter().zip(&self.bounds) {
             let sh = shard.lock().unwrap();
+            let (lo, hi) = (lo * a, hi * a);
             let ts = &sh.env.timestep;
             self.timestep.t[lo..hi].copy_from_slice(&ts.t);
             self.timestep.action[lo..hi].copy_from_slice(&ts.action);
@@ -379,6 +393,10 @@ impl Drop for ShardedEnv {
 impl BatchStepper for ShardedEnv {
     fn batch_size(&self) -> usize {
         self.b
+    }
+
+    fn num_agents(&self) -> usize {
+        self.a
     }
 
     fn step(&mut self, actions: &[u8]) {

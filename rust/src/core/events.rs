@@ -36,6 +36,12 @@ pub struct Events {
     /// Player dropped the mission-target object onto a cell 4-adjacent to
     /// the mission's second object (PutNext success).
     pub object_placed: bool,
+    /// This agent walked into another agent's cell (the mover's side of a
+    /// contested-cell conflict; the pursuit "tag" success event).
+    pub agent_contact: bool,
+    /// Another agent walked into this agent's cell (the target's side of
+    /// a contested-cell conflict; the evader's failure event).
+    pub contacted: bool,
 }
 
 impl Events {
@@ -50,6 +56,8 @@ impl Events {
         wrong_pickup: false,
         object_reached: false,
         object_placed: false,
+        agent_contact: false,
+        contacted: false,
     };
 
     /// Any terminal-success/failure event fired this step?
@@ -65,6 +73,8 @@ impl Events {
             || self.wrong_pickup
             || self.object_reached
             || self.object_placed
+            || self.agent_contact
+            || self.contacted
     }
 }
 
@@ -80,7 +90,7 @@ mod tests {
 
     #[test]
     fn any_detects_each_latch() {
-        for i in 0..10 {
+        for i in 0..12 {
             let mut e = Events::NONE;
             match i {
                 0 => e.goal_reached = true,
@@ -92,7 +102,9 @@ mod tests {
                 6 => e.object_picked = true,
                 7 => e.wrong_pickup = true,
                 8 => e.object_reached = true,
-                _ => e.object_placed = true,
+                9 => e.object_placed = true,
+                10 => e.agent_contact = true,
+                _ => e.contacted = true,
             }
             assert!(e.any());
         }

@@ -94,10 +94,16 @@ pub struct Caps {
     pub boxes: usize,
 }
 
-/// Struct-of-arrays state for `b` parallel environments of size `h × w`.
+/// Struct-of-arrays state for `b` parallel environments of size `h × w`,
+/// each hosting `a` agents (the agent axis; `a = 1` is the classic
+/// single-agent suite and collapses every `[B × A]` column to the old
+/// `[B]` shape exactly).
 #[derive(Clone, Debug)]
 pub struct BatchedState {
     pub b: usize,
+    /// Agents per environment slot. Agent `j` of env `i` lives at flat
+    /// row `i·a + j` in every per-agent column (agent-major rows).
+    pub a: usize,
     pub h: usize,
     pub w: usize,
     pub caps: Caps,
@@ -113,7 +119,8 @@ pub struct BatchedState {
     pub overlay: Vec<u32>,
     pub overlay_idx: Vec<u8>,
 
-    // Player (Positionable + Directional + Holder), one per env.
+    // Agents (Positionable + Directional + Holder), b*a each; position −1
+    // means "unplaced" (extra agents of an A=1 state never exist).
     pub player_pos: Vec<i32>,
     pub player_dir: Vec<i32>,
     pub pocket: Vec<i32>,
@@ -135,7 +142,9 @@ pub struct BatchedState {
     pub box_pos: Vec<i32>,
     pub box_color: Vec<u8>,
 
-    // Episode bookkeeping, one per env.
+    // Episode bookkeeping: t/rng are per env (one episode clock and one
+    // RNG stream per slot); mission/events/last_action are per agent
+    // (b*a) so rewards and terminations can be evaluated agent by agent.
     pub t: Vec<u32>,
     pub mission: Vec<i32>,
     pub rng: Vec<u64>,
@@ -144,11 +153,18 @@ pub struct BatchedState {
 }
 
 impl BatchedState {
-    /// Allocate a zeroed batched state.
+    /// Allocate a zeroed single-agent batched state.
     pub fn new(b: usize, h: usize, w: usize, caps: Caps) -> Self {
+        Self::with_agents(b, h, w, caps, 1)
+    }
+
+    /// Allocate a zeroed batched state with `a` agents per slot.
+    pub fn with_agents(b: usize, h: usize, w: usize, caps: Caps, a: usize) -> Self {
+        assert!(a >= 1, "a slot hosts at least one agent");
         let hw = h * w;
         BatchedState {
             b,
+            a,
             h,
             w,
             caps,
@@ -156,9 +172,9 @@ impl BatchedState {
             base_color: vec![Color::Grey as u8; b * hw],
             overlay: vec![cellcode::base_code(CellType::Wall, Color::Grey as u8); b * hw],
             overlay_idx: vec![cellcode::NONE_IDX; b * hw],
-            player_pos: vec![-1; b],
-            player_dir: vec![0; b],
-            pocket: vec![-1; b],
+            player_pos: vec![-1; b * a],
+            player_dir: vec![0; b * a],
+            pocket: vec![-1; b * a],
             door_pos: vec![-1; b * caps.doors],
             door_color: vec![0; b * caps.doors],
             door_state: vec![DoorState::Closed as u8; b * caps.doors],
@@ -169,10 +185,10 @@ impl BatchedState {
             box_pos: vec![-1; b * caps.boxes],
             box_color: vec![0; b * caps.boxes],
             t: vec![0; b],
-            mission: vec![-1; b],
+            mission: vec![-1; b * a],
             rng: vec![0; b],
-            events: vec![Events::NONE; b],
-            last_action: vec![-1; b],
+            events: vec![Events::NONE; b * a],
+            last_action: vec![-1; b * a],
         }
     }
 
@@ -181,22 +197,34 @@ impl BatchedState {
         GridDims::new(self.h, self.w)
     }
 
-    /// Mutable per-env view (disjoint field borrows; one env at a time).
+    /// Mutable per-env view acting as agent 0 (the classic single-agent
+    /// entry point; disjoint field borrows, one env at a time).
     #[inline]
     pub fn slot_mut(&mut self, i: usize) -> SlotMut<'_> {
+        self.agent_slot_mut(i, 0)
+    }
+
+    /// Mutable per-env view acting as agent `j` of env `i`. The view
+    /// carries the whole `[A]` agent column of its slot (so conflict
+    /// checks see every agent) plus the active agent index.
+    #[inline]
+    pub fn agent_slot_mut(&mut self, i: usize, j: usize) -> SlotMut<'_> {
+        debug_assert!(j < self.a);
         let hw = self.h * self.w;
         let c = self.caps;
+        let a = self.a;
         SlotMut {
             h: self.h,
             w: self.w,
             caps: c,
+            agent: j,
             base: &mut self.base[i * hw..(i + 1) * hw],
             base_color: &mut self.base_color[i * hw..(i + 1) * hw],
             overlay: &mut self.overlay[i * hw..(i + 1) * hw],
             overlay_idx: &mut self.overlay_idx[i * hw..(i + 1) * hw],
-            player_pos: &mut self.player_pos[i],
-            player_dir: &mut self.player_dir[i],
-            pocket: &mut self.pocket[i],
+            player_pos: &mut self.player_pos[i * a..(i + 1) * a],
+            player_dir: &mut self.player_dir[i * a..(i + 1) * a],
+            pocket: &mut self.pocket[i * a..(i + 1) * a],
             door_pos: &mut self.door_pos[i * c.doors..(i + 1) * c.doors],
             door_color: &mut self.door_color[i * c.doors..(i + 1) * c.doors],
             door_state: &mut self.door_state[i * c.doors..(i + 1) * c.doors],
@@ -207,29 +235,38 @@ impl BatchedState {
             box_pos: &mut self.box_pos[i * c.boxes..(i + 1) * c.boxes],
             box_color: &mut self.box_color[i * c.boxes..(i + 1) * c.boxes],
             t: &mut self.t[i],
-            mission: &mut self.mission[i],
+            mission: &mut self.mission[i * a..(i + 1) * a],
             rng: &mut self.rng[i],
-            events: &mut self.events[i],
-            last_action: &mut self.last_action[i],
+            events: &mut self.events[i * a..(i + 1) * a],
+            last_action: &mut self.last_action[i * a..(i + 1) * a],
         }
     }
 
-    /// Immutable per-env view.
+    /// Immutable per-env view acting as agent 0.
     #[inline]
     pub fn slot(&self, i: usize) -> EnvSlot<'_> {
+        self.agent_slot(i, 0)
+    }
+
+    /// Immutable per-env view acting as agent `j` of env `i`.
+    #[inline]
+    pub fn agent_slot(&self, i: usize, j: usize) -> EnvSlot<'_> {
+        debug_assert!(j < self.a);
         let hw = self.h * self.w;
         let c = self.caps;
+        let a = self.a;
         EnvSlot {
             h: self.h,
             w: self.w,
             caps: c,
+            agent: j,
             base: &self.base[i * hw..(i + 1) * hw],
             base_color: &self.base_color[i * hw..(i + 1) * hw],
             overlay: &self.overlay[i * hw..(i + 1) * hw],
             overlay_idx: &self.overlay_idx[i * hw..(i + 1) * hw],
-            player_pos: self.player_pos[i],
-            player_dir: self.player_dir[i],
-            pocket: self.pocket[i],
+            player_pos: &self.player_pos[i * a..(i + 1) * a],
+            player_dir: &self.player_dir[i * a..(i + 1) * a],
+            pocket: &self.pocket[i * a..(i + 1) * a],
             door_pos: &self.door_pos[i * c.doors..(i + 1) * c.doors],
             door_color: &self.door_color[i * c.doors..(i + 1) * c.doors],
             door_state: &self.door_state[i * c.doors..(i + 1) * c.doors],
@@ -240,26 +277,30 @@ impl BatchedState {
             box_pos: &self.box_pos[i * c.boxes..(i + 1) * c.boxes],
             box_color: &self.box_color[i * c.boxes..(i + 1) * c.boxes],
             t: self.t[i],
-            mission: self.mission[i],
-            events: self.events[i],
-            last_action: self.last_action[i],
+            mission: &self.mission[i * a..(i + 1) * a],
+            events: &self.events[i * a..(i + 1) * a],
+            last_action: &self.last_action[i * a..(i + 1) * a],
         }
     }
 }
 
-/// Immutable view over one environment's state.
+/// Immutable view over one environment's state, acting as one agent.
+/// The per-agent fields are the slot's whole `[A]` columns; `agent`
+/// selects the active row (`player()`, `dir()`, … decode that row).
 #[derive(Clone, Copy)]
 pub struct EnvSlot<'a> {
     pub h: usize,
     pub w: usize,
     pub caps: Caps,
+    /// Which agent of the slot this view acts as.
+    pub agent: usize,
     pub base: &'a [u8],
     pub base_color: &'a [u8],
     pub overlay: &'a [u32],
     pub overlay_idx: &'a [u8],
-    pub player_pos: i32,
-    pub player_dir: i32,
-    pub pocket: i32,
+    pub player_pos: &'a [i32],
+    pub player_dir: &'a [i32],
+    pub pocket: &'a [i32],
     pub door_pos: &'a [i32],
     pub door_color: &'a [u8],
     pub door_state: &'a [u8],
@@ -270,23 +311,25 @@ pub struct EnvSlot<'a> {
     pub box_pos: &'a [i32],
     pub box_color: &'a [u8],
     pub t: u32,
-    pub mission: i32,
-    pub events: Events,
-    pub last_action: i32,
+    pub mission: &'a [i32],
+    pub events: &'a [Events],
+    pub last_action: &'a [i32],
 }
 
-/// Mutable view over one environment's state.
+/// Mutable view over one environment's state, acting as one agent.
 pub struct SlotMut<'a> {
     pub h: usize,
     pub w: usize,
     pub caps: Caps,
+    /// Which agent of the slot this view acts as.
+    pub agent: usize,
     pub base: &'a mut [u8],
     pub base_color: &'a mut [u8],
     pub overlay: &'a mut [u32],
     pub overlay_idx: &'a mut [u8],
-    pub player_pos: &'a mut i32,
-    pub player_dir: &'a mut i32,
-    pub pocket: &'a mut i32,
+    pub player_pos: &'a mut [i32],
+    pub player_dir: &'a mut [i32],
+    pub pocket: &'a mut [i32],
     pub door_pos: &'a mut [i32],
     pub door_color: &'a mut [u8],
     pub door_state: &'a mut [u8],
@@ -297,10 +340,165 @@ pub struct SlotMut<'a> {
     pub box_pos: &'a mut [i32],
     pub box_color: &'a mut [u8],
     pub t: &'a mut u32,
-    pub mission: &'a mut i32,
+    pub mission: &'a mut [i32],
     pub rng: &'a mut u64,
-    pub events: &'a mut Events,
-    pub last_action: &'a mut i32,
+    pub events: &'a mut [Events],
+    pub last_action: &'a mut [i32],
+}
+
+/// Shared agent-axis accessors over the two per-env views: the required
+/// methods expose each view's `[A]` columns once, and every derived
+/// accessor (the active agent's decoded position/direction/pocket/
+/// mission, occupancy probes for conflict resolution) is written once
+/// here instead of per view — this trait replaces the accessor
+/// boilerplate [`EnvSlot`] and [`SlotMut`] used to duplicate.
+pub trait AgentView {
+    /// Per-agent encoded positions `[A]` (−1 = unplaced).
+    fn pos_col(&self) -> &[i32];
+    /// Per-agent facing directions `[A]`.
+    fn dir_col(&self) -> &[i32];
+    /// Per-agent packed pockets `[A]`.
+    fn pocket_col(&self) -> &[i32];
+    /// Per-agent packed missions `[A]`.
+    fn mission_col(&self) -> &[i32];
+    /// Per-agent event latches `[A]`.
+    fn events_col(&self) -> &[Events];
+    /// The agent this view acts as.
+    fn active_agent(&self) -> usize;
+    /// Grid height (occupancy probes bounds-check before flat-encoding).
+    fn grid_h(&self) -> usize;
+    /// Grid width (positions are flat-encoded against it).
+    fn grid_w(&self) -> usize;
+
+    /// Number of agents in this slot.
+    #[inline]
+    fn agent_count(&self) -> usize {
+        self.pos_col().len()
+    }
+
+    /// The active agent's encoded position.
+    #[inline]
+    fn player_pos_value(&self) -> i32 {
+        self.pos_col()[self.active_agent()]
+    }
+
+    /// The active agent's encoded direction.
+    #[inline]
+    fn player_dir_value(&self) -> i32 {
+        self.dir_col()[self.active_agent()]
+    }
+
+    /// The active agent's packed pocket.
+    #[inline]
+    fn pocket_raw(&self) -> i32 {
+        self.pocket_col()[self.active_agent()]
+    }
+
+    /// The active agent's packed mission.
+    #[inline]
+    fn mission_raw(&self) -> i32 {
+        self.mission_col()[self.active_agent()]
+    }
+
+    /// The active agent's event latches.
+    #[inline]
+    fn events_value(&self) -> Events {
+        self.events_col()[self.active_agent()]
+    }
+
+    /// Agent `j`'s decoded position.
+    #[inline]
+    fn agent_pos(&self, j: usize) -> Pos {
+        Pos::decode(self.pos_col()[j], self.grid_w())
+    }
+
+    /// Index of the (placed) agent standing on `p`, if any. Bounds-checks
+    /// first: an out-of-bounds `p` must not flat-encode onto a real row
+    /// (`r·W + c` with `c ≥ W` aliases into the next row).
+    #[inline]
+    fn agent_at(&self, p: Pos) -> Option<usize> {
+        if !p.in_bounds(self.grid_h(), self.grid_w()) {
+            return None;
+        }
+        let enc = p.encode(self.grid_w());
+        self.pos_col().iter().position(|&x| x >= 0 && x == enc)
+    }
+
+    /// Index of an agent *other than the active one* standing on `p`.
+    #[inline]
+    fn other_agent_at(&self, p: Pos) -> Option<usize> {
+        self.agent_at(p).filter(|&j| j != self.active_agent())
+    }
+}
+
+impl<'a> AgentView for EnvSlot<'a> {
+    #[inline]
+    fn pos_col(&self) -> &[i32] {
+        self.player_pos
+    }
+    #[inline]
+    fn dir_col(&self) -> &[i32] {
+        self.player_dir
+    }
+    #[inline]
+    fn pocket_col(&self) -> &[i32] {
+        self.pocket
+    }
+    #[inline]
+    fn mission_col(&self) -> &[i32] {
+        self.mission
+    }
+    #[inline]
+    fn events_col(&self) -> &[Events] {
+        self.events
+    }
+    #[inline]
+    fn active_agent(&self) -> usize {
+        self.agent
+    }
+    #[inline]
+    fn grid_h(&self) -> usize {
+        self.h
+    }
+    #[inline]
+    fn grid_w(&self) -> usize {
+        self.w
+    }
+}
+
+impl<'a> AgentView for SlotMut<'a> {
+    #[inline]
+    fn pos_col(&self) -> &[i32] {
+        &*self.player_pos
+    }
+    #[inline]
+    fn dir_col(&self) -> &[i32] {
+        &*self.player_dir
+    }
+    #[inline]
+    fn pocket_col(&self) -> &[i32] {
+        &*self.pocket
+    }
+    #[inline]
+    fn mission_col(&self) -> &[i32] {
+        &*self.mission
+    }
+    #[inline]
+    fn events_col(&self) -> &[Events] {
+        &*self.events
+    }
+    #[inline]
+    fn active_agent(&self) -> usize {
+        self.agent
+    }
+    #[inline]
+    fn grid_h(&self) -> usize {
+        self.h
+    }
+    #[inline]
+    fn grid_w(&self) -> usize {
+        self.w
+    }
 }
 
 macro_rules! shared_slot_api {
@@ -580,43 +778,7 @@ macro_rules! shared_slot_api {
 shared_slot_api!(EnvSlot);
 shared_slot_api!(SlotMut);
 
-impl<'a> EnvSlot<'a> {
-    #[inline]
-    fn player_pos_value(&self) -> i32 {
-        self.player_pos
-    }
-    #[inline]
-    fn player_dir_value(&self) -> i32 {
-        self.player_dir
-    }
-    #[inline]
-    fn pocket_raw(&self) -> i32 {
-        self.pocket
-    }
-    #[inline]
-    fn mission_raw(&self) -> i32 {
-        self.mission
-    }
-}
-
 impl<'a> SlotMut<'a> {
-    #[inline]
-    fn player_pos_value(&self) -> i32 {
-        *self.player_pos
-    }
-    #[inline]
-    fn player_dir_value(&self) -> i32 {
-        *self.player_dir
-    }
-    #[inline]
-    fn pocket_raw(&self) -> i32 {
-        *self.pocket
-    }
-    #[inline]
-    fn mission_raw(&self) -> i32 {
-        *self.mission
-    }
-
     /// Sequential RNG stream over this env's per-env key state.
     #[inline]
     pub fn rng(&mut self) -> SlotRng<'_, 'a> {
@@ -712,25 +874,48 @@ impl<'a> SlotMut<'a> {
     }
 
     /// Clear all dynamic entities and bookkeeping (used before layout).
+    /// Extra agents (rows ≥ 1) are unplaced here and re-placed by the
+    /// reset path after the generator ran; agent 0's stale position is
+    /// left alone exactly like the single-agent path always did (the
+    /// generator's `place_player` overwrites it).
     pub fn clear_entities(&mut self) {
         self.door_pos.fill(-1);
         self.key_pos.fill(-1);
         self.ball_pos.fill(-1);
         self.box_pos.fill(-1);
-        *self.pocket = -1;
-        *self.mission = Mission::NONE.raw();
-        *self.events = Events::NONE;
-        *self.last_action = -1;
+        self.pocket.fill(-1);
+        self.mission.fill(Mission::NONE.raw());
+        self.events.fill(Events::NONE);
+        self.last_action.fill(-1);
+        for j in 1..self.player_pos.len() {
+            self.player_pos[j] = -1;
+            self.player_dir[j] = 0;
+        }
         *self.t = 0;
         self.rebuild_overlay();
     }
 
-    /// Place the player. (The player is not part of the overlay — the
-    /// observation writers overlay it — so no recompute is needed.)
+    /// Place the active agent. (Agents are not part of the overlay — the
+    /// observation writers overlay them — so no recompute is needed.)
     #[inline]
     pub fn place_player(&mut self, p: Pos, dir: Direction) {
-        *self.player_pos = p.encode(self.w);
-        *self.player_dir = dir as i32;
+        let j = self.agent;
+        self.player_pos[j] = p.encode(self.w);
+        self.player_dir[j] = dir as i32;
+    }
+
+    /// Place agent `j` of this slot (the multi-agent reset path).
+    #[inline]
+    pub fn place_agent(&mut self, j: usize, p: Pos, dir: Direction) {
+        self.player_pos[j] = p.encode(self.w);
+        self.player_dir[j] = dir as i32;
+    }
+
+    /// Set the slot's mission for every agent (missions are shared by the
+    /// whole team; per-agent rows exist so evaluation stays row-local).
+    #[inline]
+    pub fn set_mission(&mut self, m: Mission) {
+        self.mission.fill(m.raw());
     }
 
     /// Add a door at `p`. Panics if capacity is exhausted (a config bug).
@@ -892,17 +1077,20 @@ impl<'a> SlotMut<'a> {
         c1: i32,
         avoid_player: bool,
     ) -> Result<Pos, PlacementError> {
-        let player = self.player();
         let err = PlacementError { h: self.h, w: self.w, r0, c0, r1, c1 };
         let rows = r1 - r0;
         let cols = c1 - c0;
         if rows <= 0 || cols <= 0 {
             return Err(err);
         }
+        // `agent_at` probes every agent of the slot, so multi-agent resets
+        // never stack agents; with one agent this is exactly the old
+        // `p != player` check (and an unplaced agent, position −1, never
+        // matches — same as the old decode of −1).
         let free = |s: &Self, p: Pos| {
             s.cell(p) == CellType::Floor
                 && !s.occupied_by_entity(p)
-                && (!avoid_player || p != player)
+                && (!avoid_player || s.agent_at(p).is_none())
         };
         for _ in 0..256 {
             let (r, c) = {
@@ -1153,7 +1341,7 @@ mod tests {
         s.fill_room();
         s.place_player(Pos::new(2, 2), Direction::North);
         assert_eq!(s.front(), Pos::new(1, 2));
-        *s.player_dir = Direction::South as i32;
+        s.player_dir[0] = Direction::South as i32;
         assert_eq!(s.front(), Pos::new(3, 2));
     }
 
@@ -1232,5 +1420,57 @@ mod tests {
         s.clear_entities();
         assert!(s.door_pos.iter().all(|&d| d < 0));
         assert_eq!(*s.t, 0);
+    }
+
+    #[test]
+    fn agent_axis_columns_and_views() {
+        let mut st = BatchedState::with_agents(2, 5, 6, Caps::default(), 3);
+        assert_eq!(st.player_pos.len(), 6);
+        assert_eq!(st.events.len(), 6);
+        assert_eq!(st.t.len(), 2, "episode clock stays per slot");
+        {
+            let mut s = st.agent_slot_mut(1, 2);
+            s.fill_room();
+            s.place_player(Pos::new(2, 2), Direction::North);
+        }
+        let s = st.agent_slot(1, 2);
+        assert_eq!(s.agent_count(), 3);
+        assert_eq!(s.player(), Pos::new(2, 2));
+        assert_eq!(s.agent_at(Pos::new(2, 2)), Some(2));
+        assert_eq!(s.other_agent_at(Pos::new(2, 2)), None, "self is not an obstacle");
+        let s0 = st.agent_slot(1, 0);
+        assert_eq!(s0.other_agent_at(Pos::new(2, 2)), Some(2));
+        // Out-of-bounds columns must not alias onto a placed agent's row.
+        assert_eq!(s0.agent_at(Pos::new(1, 8)), None);
+        // Slot 0 is untouched.
+        assert_eq!(st.slot(0).player_pos_value(), -1);
+    }
+
+    #[test]
+    fn sampling_avoids_every_agent() {
+        let mut st = BatchedState::with_agents(1, 5, 6, Caps::default(), 2);
+        let mut s = st.agent_slot_mut(0, 0);
+        s.fill_room();
+        *s.rng = 77;
+        s.place_player(Pos::new(1, 1), Direction::East);
+        s.place_agent(1, Pos::new(2, 2), Direction::West);
+        for _ in 0..50 {
+            let p = s.sample_free_cell(true).expect("room has free cells");
+            assert_ne!(p, Pos::new(1, 1));
+            assert_ne!(p, Pos::new(2, 2));
+        }
+    }
+
+    #[test]
+    fn clear_entities_unplaces_extra_agents_only() {
+        let mut st = BatchedState::with_agents(1, 5, 6, Caps::default(), 2);
+        let mut s = st.agent_slot_mut(0, 0);
+        s.fill_room();
+        s.place_player(Pos::new(1, 1), Direction::East);
+        s.place_agent(1, Pos::new(2, 2), Direction::South);
+        s.clear_entities();
+        assert_eq!(s.player_pos[0], Pos::new(1, 1).encode(6), "agent 0 keeps its stale pos");
+        assert_eq!(s.player_pos[1], -1, "extra agents are unplaced");
+        assert_eq!(s.player_dir[1], 0);
     }
 }

@@ -123,6 +123,6 @@ mod tests {
         intervene(&mut s, Action::Forward); // (2,3)
         intervene(&mut s, Action::Right); // face south
         intervene(&mut s, Action::Forward); // (3,3) = goal
-        assert!(s.events.goal_reached, "goal event after unlocking the door");
+        assert!(s.events[0].goal_reached, "goal event after unlocking the door");
     }
 }

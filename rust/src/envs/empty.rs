@@ -55,7 +55,7 @@ mod tests {
             let p = s.player();
             assert_ne!(Some(p), goal_pos(&st, 0));
             assert_eq!(s.cell(p), CellType::Floor);
-            poses.insert((p.r, p.c, s.player_dir));
+            poses.insert((p.r, p.c, s.player_dir[0]));
         }
         assert!(poses.len() > 5, "random starts should vary: got {}", poses.len());
     }

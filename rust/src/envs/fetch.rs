@@ -34,7 +34,7 @@ pub fn generate(s: &mut SlotMut<'_>, n_objs: usize) -> Result<(), PlacementError
         rng.below(n_objs as u32) as usize
     };
     let (tag, ci) = placed[target];
-    *s.mission = Mission::pick_up(tag, Color::from_u8(ci)).raw();
+    s.set_mission(Mission::pick_up(tag, Color::from_u8(ci)));
 
     let agent = s.sample_free_cell(false)?;
     let dir = {
@@ -96,12 +96,12 @@ mod tests {
             s.fill_room();
             s.add_ball(Pos::new(2, 2), Color::Red); // the mission target
             s.add_key(Pos::new(4, 4), Color::Blue); // a non-target object
-            *s.mission = Mission::pick_up(Tag::BALL, Color::Red).raw();
+            s.set_mission(Mission::pick_up(Tag::BALL, Color::Red));
             // Wrong object first: terminate, unpaid.
             s.place_player(Pos::new(4, 3), Direction::East);
             intervene(&mut s, Action::Pickup);
-            assert!(s.events.wrong_pickup);
-            assert!(!s.events.object_picked);
+            assert!(s.events[0].wrong_pickup);
+            assert!(!s.events[0].object_picked);
         }
         assert!(cfg.termination.eval(&st.slot(0)), "wrong pickup must end the episode");
         assert_eq!(cfg.reward.eval(&st.slot(0), Action::Pickup, cfg.max_steps), 0.0);
@@ -113,12 +113,12 @@ mod tests {
             s.fill_room();
             s.add_ball(Pos::new(2, 2), Color::Red);
             s.add_key(Pos::new(4, 4), Color::Blue);
-            *s.mission = Mission::pick_up(Tag::BALL, Color::Red).raw();
+            s.set_mission(Mission::pick_up(Tag::BALL, Color::Red));
             s.place_player(Pos::new(2, 1), Direction::East);
             intervene(&mut s, Action::Pickup);
-            assert!(s.events.object_picked);
-            assert!(s.events.ball_picked, "target ball pickup also latches ball_picked");
-            assert!(!s.events.wrong_pickup);
+            assert!(s.events[0].object_picked);
+            assert!(s.events[0].ball_picked, "target ball pickup also latches ball_picked");
+            assert!(!s.events[0].wrong_pickup);
         }
         assert!(cfg.termination.eval(&st.slot(0)));
         assert_eq!(cfg.reward.eval(&st.slot(0), Action::Pickup, cfg.max_steps), 1.0);

@@ -40,7 +40,7 @@ pub fn generate(s: &mut SlotMut<'_>) -> Result<(), PlacementError> {
         (rng.randint(0, 4), rng.below(4) as usize)
     };
     s.place_player(p, Direction::from_i32(dir));
-    *s.mission = Mission::go_to(Tag::DOOR, colors[target]).raw();
+    s.set_mission(Mission::go_to(Tag::DOOR, colors[target]));
     Ok(())
 }
 
@@ -54,7 +54,8 @@ mod tests {
 
     #[test]
     fn four_distinct_door_colors_on_four_walls() {
-        let cfg = make("Navix-GoToDoor-8x8-v0").unwrap();
+        let cfg = make("Navix-GoToDoor-8x8-v0")
+            .expect("registry should know Navix-GoToDoor-8x8-v0");
         for seed in 0..10 {
             let st = reset_once(&cfg, seed);
             let s = st.slot(0);
@@ -79,7 +80,8 @@ mod tests {
 
     #[test]
     fn mission_matches_an_existing_door() {
-        let cfg = make("Navix-GoToDoor-5x5-v0").unwrap();
+        let cfg = make("Navix-GoToDoor-5x5-v0")
+            .expect("registry should know Navix-GoToDoor-5x5-v0");
         for seed in 0..10 {
             let st = reset_once(&cfg, seed);
             let s = st.slot(0);
@@ -95,7 +97,8 @@ mod tests {
 
     #[test]
     fn done_before_mission_door_succeeds() {
-        let cfg = make("Navix-GoToDoor-6x6-v0").unwrap();
+        let cfg = make("Navix-GoToDoor-6x6-v0")
+            .expect("registry should know Navix-GoToDoor-6x6-v0");
         let mut st = reset_once(&cfg, 3);
         // Teleport the agent in front of the mission door for the check.
         let (door_p, _mission) = {
@@ -118,7 +121,7 @@ mod tests {
         };
         s.place_player(stand, dir);
         intervene(&mut s, Action::Done);
-        assert!(s.events.door_done);
+        assert!(s.events[0].door_done);
         // wrong door: no event
         let other = (0..4)
             .find(|&d| {
@@ -137,6 +140,6 @@ mod tests {
         };
         s.place_player(stand, dir);
         intervene(&mut s, Action::Done);
-        assert!(!s.events.door_done);
+        assert!(!s.events[0].door_done);
     }
 }

@@ -79,7 +79,7 @@ pub fn generate(s: &mut SlotMut<'_>, n_objs: usize) -> Result<(), PlacementError
         rng.below(n_objs as u32) as usize
     };
     let (tag, ci) = placed[target];
-    *s.mission = Mission::go_to(tag, Color::from_u8(ci)).raw();
+    s.set_mission(Mission::go_to(tag, Color::from_u8(ci)));
 
     let agent = s.sample_free_cell(false)?;
     let dir = {
@@ -158,10 +158,10 @@ mod tests {
         s.fill_room();
         s.add_ball(Pos::new(2, 3), Color::Blue);
         s.add_key(Pos::new(4, 4), Color::Red);
-        *s.mission = Mission::go_to(Tag::BALL, Color::Blue).raw();
+        s.set_mission(Mission::go_to(Tag::BALL, Color::Blue));
         s.place_player(Pos::new(2, 2), Direction::East); // facing the ball
         intervene(&mut s, Action::Done);
-        assert!(s.events.object_reached);
+        assert!(s.events[0].object_reached);
         drop(s);
         assert!(cfg.termination.eval(&st.slot(0)));
         assert_eq!(cfg.reward.eval(&st.slot(0), Action::Done, cfg.max_steps), 1.0);
@@ -169,7 +169,7 @@ mod tests {
         let mut s = st.slot_mut(0);
         s.place_player(Pos::new(4, 3), Direction::East);
         intervene(&mut s, Action::Done);
-        assert!(!s.events.object_reached);
+        assert!(!s.events[0].object_reached);
         drop(s);
         assert!(!cfg.termination.eval(&st.slot(0)));
     }

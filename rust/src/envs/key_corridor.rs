@@ -74,7 +74,7 @@ pub fn generate(s: &mut SlotMut<'_>, size: usize, rows: usize) -> Result<(), Pla
     // Target ball in the centre of the locked right room.
     let ball_p = Pos::new(locked_row * sw + sw / 2 + (sw % 2), 2 * sw + sw / 2 + (sw % 2));
     s.add_ball(ball_p, ball_color);
-    *s.mission = Mission::pick_up(Tag::BALL, ball_color).raw();
+    s.set_mission(Mission::pick_up(Tag::BALL, ball_color));
 
     // Key in the centre of the chosen left room.
     let key_p = Pos::new(key_row * sw + sw / 2 + (sw % 2), (sw / 2).max(1));

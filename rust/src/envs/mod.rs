@@ -94,6 +94,10 @@ pub struct EnvConfig {
     pub termination: TermSpec,
     /// Balls are stochastic dynamic obstacles (Dynamic-Obstacles family).
     pub stochastic_balls: bool,
+    /// Agents per environment slot (A). 1 for the classic single-agent
+    /// families; multi-agent families widen every engine's action/obs/
+    /// reward surface to `B·A` agent-rows.
+    pub n_agents: usize,
     pub layout: Layout,
 }
 
@@ -132,14 +136,25 @@ impl EnvConfig {
     pub fn reset_slot(&self, s: &mut SlotMut<'_>, key: Key) -> Result<(), LayoutError> {
         *s.rng = key.0;
         s.clear_entities();
-        self.generate(s).map_err(|source| LayoutError {
-            env_id: self.id.clone(),
-            h: self.h,
-            w: self.w,
-            source,
-        })?;
+        self.generate(s).map_err(|source| self.layout_err(source))?;
+        // Extra agents (multi-agent families): a uniformly random free pose
+        // per agent after the family generator has placed entities and
+        // agent 0. A = 1 runs this loop zero times and consumes no RNG, so
+        // single-agent episode streams are bit-identical to before.
+        for j in 1..s.player_pos.len() {
+            let p = s.sample_free_cell(true).map_err(|source| self.layout_err(source))?;
+            let dir = {
+                let mut rng = s.rng();
+                rng.randint(0, 4)
+            };
+            s.place_agent(j, p, crate::core::components::Direction::from_i32(dir));
+        }
         debug_assert!(s.player().in_bounds(self.h, self.w), "layout must place the player");
         Ok(())
+    }
+
+    fn layout_err(&self, source: PlacementError) -> LayoutError {
+        LayoutError { env_id: self.id.clone(), h: self.h, w: self.w, source }
     }
 
     /// Dispatch to the family generator.
@@ -180,6 +195,13 @@ impl EnvConfig {
     /// Builder-style override of the termination function (paper Appendix C).
     pub fn with_termination(mut self, termination: TermSpec) -> Self {
         self.termination = termination;
+        self
+    }
+
+    /// Builder-style override of the agents-per-slot count (multi-agent
+    /// families).
+    pub fn with_agents(mut self, n_agents: usize) -> Self {
+        self.n_agents = n_agents.max(1);
         self
     }
 }
@@ -289,7 +311,8 @@ pub(crate) mod testutil {
 
     /// Reset `cfg` into a fresh single-env state for layout tests.
     pub fn reset_once(cfg: &EnvConfig, seed: u64) -> BatchedState {
-        let mut st = BatchedState::new(1, cfg.h, cfg.w, cfg.caps);
+        let mut st =
+            BatchedState::with_agents(1, cfg.h, cfg.w, cfg.caps, cfg.n_agents.max(1));
         let mut s = st.slot_mut(0);
         cfg.reset_slot(&mut s, Key::new(seed)).expect("layout generation");
         drop(s);

@@ -26,13 +26,12 @@ pub fn generate(s: &mut SlotMut<'_>, n_objs: usize) -> Result<(), PlacementError
         }
         (mv, nr)
     };
-    *s.mission = Mission::put_next(
+    s.set_mission(Mission::put_next(
         placed[mv].0,
         Color::from_u8(placed[mv].1),
         placed[nr].0,
         Color::from_u8(placed[nr].1),
-    )
-    .raw();
+    ));
 
     let agent = s.sample_free_cell(false)?;
     let dir = {
@@ -90,15 +89,15 @@ mod tests {
         s.fill_room();
         s.add_ball(Pos::new(1, 1), Color::Purple);
         s.add_box(Pos::new(2, 4), Color::Green);
-        *s.mission = Mission::put_next(Tag::BALL, Color::Purple, Tag::BOX, Color::Green).raw();
+        s.set_mission(Mission::put_next(Tag::BALL, Color::Purple, Tag::BOX, Color::Green));
         s.place_player(Pos::new(1, 2), Direction::West); // facing the ball
         intervene(&mut s, Action::Pickup);
-        assert!(!s.events.object_picked, "put-next pickups fire no pickup-mission events");
-        assert!(!s.events.wrong_pickup);
+        assert!(!s.events[0].object_picked, "put-next pickups fire no pickup-mission events");
+        assert!(!s.events[0].wrong_pickup);
         // walk to (3,3), face east, drop at (3,4) — adjacent to the box.
         s.place_player(Pos::new(3, 3), Direction::East);
         intervene(&mut s, Action::Drop);
-        assert!(s.events.object_placed);
+        assert!(s.events[0].object_placed);
         drop(s);
         assert!(cfg.termination.eval(&st.slot(0)));
         assert_eq!(cfg.reward.eval(&st.slot(0), Action::Drop, cfg.max_steps), 1.0);
@@ -112,12 +111,12 @@ mod tests {
         s.fill_room();
         s.add_ball(Pos::new(1, 1), Color::Purple);
         s.add_box(Pos::new(4, 4), Color::Green);
-        *s.mission = Mission::put_next(Tag::BALL, Color::Purple, Tag::BOX, Color::Green).raw();
+        s.set_mission(Mission::put_next(Tag::BALL, Color::Purple, Tag::BOX, Color::Green));
         s.place_player(Pos::new(1, 2), Direction::West);
         intervene(&mut s, Action::Pickup);
         s.place_player(Pos::new(1, 2), Direction::West); // drop back at (1,1)
         intervene(&mut s, Action::Drop);
-        assert!(!s.events.object_placed);
+        assert!(!s.events[0].object_placed);
         drop(s);
         assert!(!cfg.termination.eval(&st.slot(0)));
     }

@@ -29,8 +29,31 @@ fn base(
         reward,
         termination,
         stochastic_balls: matches!(layout, Layout::DynamicObstacles { .. }),
+        n_agents: 1,
         layout,
     }
+}
+
+/// Multi-agent FourRooms race: two agents, first to the goal ends the slot
+/// (the engine ORs terminations across a slot's agents) and only the
+/// reaching agent's row pays.
+fn ma_four_rooms_race(id: &str) -> EnvConfig {
+    four_rooms(id).with_agents(2)
+}
+
+/// Cooperative PutNext: either agent completing the placement pays every
+/// agent-row of the slot (team reward).
+fn ma_put_next_coop(id: &str, n: usize, n_objs: usize) -> EnvConfig {
+    put_next(id, n, n_objs).with_agents(2).with_reward(RewardSpec::team_object_placed())
+}
+
+/// Pursuit–evasion tag on the Dynamic-Obstacles grid: +1 for tagging,
+/// −1 for being tagged (or hit by an obstacle); any contact ends the slot.
+fn ma_tag(id: &str, n: usize) -> EnvConfig {
+    dynamic_obstacles(id, n)
+        .with_agents(2)
+        .with_reward(RewardSpec::pursuit())
+        .with_termination(TermSpec::pursuit())
 }
 
 fn empty(id: &str, n: usize, random: bool) -> EnvConfig {
@@ -323,6 +346,11 @@ pub fn list_envs() -> Vec<&'static str> {
         "Navix-GoToObj-8x8-N3-v0",
         "Navix-PutNext-6x6-N2-v0",
         "Navix-PutNext-8x8-N3-v0",
+        // Multi-agent families (N agents per slot, appended so the Fig.-3
+        // first-30 x-tick order above stays stable)
+        "Navix-MA-FourRooms-Race-v0",
+        "Navix-MA-PutNext-Coop-6x6-N2-v0",
+        "Navix-MA-Tag-8x8-v0",
     ]
 }
 
@@ -404,6 +432,9 @@ pub fn make(id: &str) -> Result<EnvConfig> {
         "Navix-GoToObj-8x8-N3-v0" => go_to_obj(c, 8, 3),
         "Navix-PutNext-6x6-N2-v0" => put_next(c, 6, 2),
         "Navix-PutNext-8x8-N3-v0" => put_next(c, 8, 3),
+        "Navix-MA-FourRooms-Race-v0" => ma_four_rooms_race(c),
+        "Navix-MA-PutNext-Coop-6x6-N2-v0" => ma_put_next_coop(c, 6, 2),
+        "Navix-MA-Tag-8x8-v0" => ma_tag(c, 8),
         _ => return Err(anyhow!("unknown environment id: {id}")),
     };
     Ok(cfg)
@@ -525,8 +556,46 @@ mod tests {
     }
 
     #[test]
-    fn registry_counts_54_ids() {
-        assert_eq!(list_envs().len(), 54);
+    fn registry_counts_57_ids() {
+        assert_eq!(list_envs().len(), 57);
+    }
+
+    #[test]
+    fn multi_agent_families_wire_agents_rewards_and_terminations() {
+        let cfg = make("Navix-MA-FourRooms-Race-v0").unwrap();
+        assert_eq!(cfg.n_agents, 2);
+        assert_eq!(cfg.reward, RewardSpec::r1());
+        assert_eq!(cfg.termination, TermSpec::goal());
+        let cfg = make("Navix-MA-PutNext-Coop-6x6-N2-v0").unwrap();
+        assert_eq!(cfg.n_agents, 2);
+        assert_eq!(cfg.reward, RewardSpec::team_object_placed());
+        assert_eq!(cfg.termination, TermSpec::object_placed());
+        let cfg = make("Navix-MA-Tag-8x8-v0").unwrap();
+        assert_eq!(cfg.n_agents, 2);
+        assert_eq!(cfg.reward, RewardSpec::pursuit());
+        assert_eq!(cfg.termination, TermSpec::pursuit());
+        assert!(cfg.stochastic_balls, "tag keeps the drifting obstacles");
+        // Single-agent families stay at A = 1.
+        assert_eq!(make("Navix-Empty-8x8-v0").unwrap().n_agents, 1);
+    }
+
+    #[test]
+    fn multi_agent_resets_place_every_agent_on_distinct_cells() {
+        for id in ["Navix-MA-FourRooms-Race-v0", "Navix-MA-PutNext-Coop-6x6-N2-v0", "Navix-MA-Tag-8x8-v0"] {
+            let cfg = make(id).unwrap();
+            for seed in 0..5 {
+                let st = reset_once(&cfg, seed);
+                let s = st.slot(0);
+                assert_eq!(s.player_pos.len(), 2, "{id}: two agent rows");
+                for j in 0..2 {
+                    assert!(s.player_pos[j] >= 0, "{id} seed {seed}: agent {j} unplaced");
+                }
+                assert_ne!(
+                    s.player_pos[0], s.player_pos[1],
+                    "{id} seed {seed}: agents must not share a cell"
+                );
+            }
+        }
     }
 
     #[test]

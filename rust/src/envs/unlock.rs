@@ -52,12 +52,12 @@ pub fn generate(s: &mut SlotMut<'_>, kind: Kind) -> Result<(), PlacementError> {
 
     match kind {
         Kind::Unlock => {
-            *s.mission = Mission::go_to(Tag::DOOR, door_color).raw();
+            s.set_mission(Mission::go_to(Tag::DOOR, door_color));
         }
         Kind::Pickup | Kind::BlockedPickup => {
             let box_p = rg.place_in_room(s, 0, 1, false)?;
             s.add_box(box_p, Color::from_u8(box_ci));
-            *s.mission = Mission::pick_up(Tag::BOX, Color::from_u8(box_ci)).raw();
+            s.set_mission(Mission::pick_up(Tag::BOX, Color::from_u8(box_ci)));
         }
     }
 
@@ -130,10 +130,10 @@ mod tests {
         let door = Pos::decode(s.door_pos[0], s.w);
         let key_color = Color::from_u8(s.key_color[0]);
         s.remove_key(0);
-        *s.pocket = crate::core::components::Pocket::holding(Tag::KEY, key_color).0;
+        s.pocket[0] = crate::core::components::Pocket::holding(Tag::KEY, key_color).0;
         s.place_player(Pos::new(door.r, door.c - 1), Direction::East);
         intervene(&mut s, Action::Toggle);
-        assert!(s.events.door_unlocked);
+        assert!(s.events[0].door_unlocked);
         drop(s);
         assert!(cfg.termination.eval(&st.slot(0)));
         assert_eq!(cfg.reward.eval(&st.slot(0), Action::Toggle, cfg.max_steps), 1.0);

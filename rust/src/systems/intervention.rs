@@ -8,20 +8,29 @@ use crate::core::entities::{CellType, Tag};
 use crate::core::events::Events;
 use crate::core::grid::Pos;
 use crate::core::mission::MissionVerb;
-use crate::core::state::SlotMut;
+use crate::core::state::{AgentView, SlotMut};
 
-/// Apply `action` to one environment slot. Returns nothing; all effects are
-/// written into the slot (new player pose, entity states, event latches).
+/// Apply `action` to one environment slot, acting as the slot view's
+/// active agent. Returns nothing; all effects are written into the slot
+/// (new agent pose, entity states, event latches).
+///
+/// In a multi-agent slot the engine calls this once per agent in
+/// ascending agent order; the step's event latches are cleared when agent
+/// 0 acts and accumulate across the later agents, so a latch one agent
+/// sets on another (`contacted`, `ball_hit`) survives to the end of the
+/// slot's step.
 pub fn intervene(s: &mut SlotMut<'_>, action: Action) {
-    *s.events = Events::NONE;
-    *s.last_action = action as i32;
+    if s.agent == 0 {
+        s.events.fill(Events::NONE);
+    }
+    s.last_action[s.agent] = action as i32;
 
     match action {
         Action::Left => {
-            *s.player_dir = s.dir().left() as i32;
+            s.player_dir[s.agent] = s.dir().left() as i32;
         }
         Action::Right => {
-            *s.player_dir = s.dir().right() as i32;
+            s.player_dir[s.agent] = s.dir().right() as i32;
         }
         Action::Forward => forward(s),
         Action::Pickup => pickup(s),
@@ -33,22 +42,31 @@ pub fn intervene(s: &mut SlotMut<'_>, action: Action) {
     // Position-coincidence events (checked after any movement).
     let p = s.player();
     match s.cell(p) {
-        CellType::Goal => s.events.goal_reached = true,
-        CellType::Lava => s.events.lava_fall = true,
+        CellType::Goal => s.events[s.agent].goal_reached = true,
+        CellType::Lava => s.events[s.agent].lava_fall = true,
         _ => {}
     }
 }
 
-/// `forward`: move one cell ahead if walkable. Walking into a ball latches
+/// `forward`: move one cell ahead if walkable. Walking into another agent
+/// latches the contact pair (`agent_contact` on the mover, `contacted` on
+/// the target) without moving — this *is* the deterministic contested-cell
+/// rule: agents act in ascending index order, so the lower index claims a
+/// cell first and later movers bounce off it. Walking into a ball latches
 /// the ball-collision event (Dynamic-Obstacles failure) without moving.
 fn forward(s: &mut SlotMut<'_>) {
     let front = s.front();
+    if let Some(j) = s.other_agent_at(front) {
+        s.events[s.agent].agent_contact = true;
+        s.events[j].contacted = true;
+        return;
+    }
     if s.ball_at(front).is_some() {
-        s.events.ball_hit = true;
+        s.events[s.agent].ball_hit = true;
         return;
     }
     if s.walkable(front) {
-        *s.player_pos = front.encode(s.w);
+        s.player_pos[s.agent] = front.encode(s.w);
     }
 }
 
@@ -70,7 +88,7 @@ fn pickup(s: &mut SlotMut<'_>) {
         let color = Color::from_u8(s.ball_color[bl]);
         // KeyCorridor mission: picking the target ball is the success event.
         if mission.is_pick_up(Tag::BALL, color) {
-            s.events.ball_picked = true;
+            s.events[s.agent].ball_picked = true;
         }
         s.remove_ball(bl);
         Some((Tag::BALL, color))
@@ -82,14 +100,14 @@ fn pickup(s: &mut SlotMut<'_>) {
         None
     };
     if let Some((tag, color)) = picked {
-        *s.pocket = Pocket::holding(tag, color).0;
+        s.pocket[s.agent] = Pocket::holding(tag, color).0;
         // Pickup-mission events fire only under a pick-up verb
         // (Fetch/UnlockPickup); go-to and put-next missions are unaffected.
         if mission.verb() == Some(MissionVerb::PickUp) {
             if mission.matches(tag, color) {
-                s.events.object_picked = true;
+                s.events[s.agent].object_picked = true;
             } else {
-                s.events.wrong_pickup = true;
+                s.events[s.agent].wrong_pickup = true;
             }
         }
     }
@@ -128,7 +146,7 @@ fn drop_item(s: &mut SlotMut<'_>) {
         _ => false,
     };
     if dropped {
-        *s.pocket = Pocket::EMPTY.0;
+        s.pocket[s.agent] = Pocket::EMPTY.0;
         let mission = s.mission_value();
         if mission.verb() == Some(MissionVerb::PutNext)
             && mission.matches(pocket.kind_tag(), color)
@@ -138,7 +156,7 @@ fn drop_item(s: &mut SlotMut<'_>) {
                 entity_matches(s, Pos::new(front.r + dr, front.c + dc), near_tag, near_color)
             });
             if adjacent {
-                s.events.object_placed = true;
+                s.events[s.agent].object_placed = true;
             }
         }
     }
@@ -157,7 +175,7 @@ fn toggle(s: &mut SlotMut<'_>) {
                     && pocket.color() as u8 == s.door_color[d];
                 if has_matching_key {
                     s.set_door_state(d, DoorState::Open);
-                    s.events.door_unlocked = true;
+                    s.events[s.agent].door_unlocked = true;
                 }
             }
             DoorState::Closed => s.set_door_state(d, DoorState::Open),
@@ -174,19 +192,19 @@ fn done(s: &mut SlotMut<'_>) {
     let mission = s.mission_value();
     if let Some(d) = s.door_at(front) {
         if mission.is_go_to(Tag::DOOR, Color::from_u8(s.door_color[d])) {
-            s.events.door_done = true;
+            s.events[s.agent].door_done = true;
         }
     } else if let Some(k) = s.key_at(front) {
         if mission.is_go_to(Tag::KEY, Color::from_u8(s.key_color[k])) {
-            s.events.object_reached = true;
+            s.events[s.agent].object_reached = true;
         }
     } else if let Some(b) = s.ball_at(front) {
         if mission.is_go_to(Tag::BALL, Color::from_u8(s.ball_color[b])) {
-            s.events.object_reached = true;
+            s.events[s.agent].object_reached = true;
         }
     } else if let Some(b) = s.box_at(front) {
         if mission.is_go_to(Tag::BOX, Color::from_u8(s.box_color[b])) {
-            s.events.object_reached = true;
+            s.events[s.agent].object_reached = true;
         }
     }
 }
@@ -237,8 +255,8 @@ mod tests {
         let mut s = st.slot_mut(0);
         s.set_cell(Pos::new(3, 4), CellType::Goal, Color::Green);
         intervene(&mut s, Action::Forward);
-        assert!(s.events.goal_reached);
-        assert!(!s.events.lava_fall);
+        assert!(s.events[0].goal_reached);
+        assert!(!s.events[0].lava_fall);
     }
 
     #[test]
@@ -247,7 +265,7 @@ mod tests {
         let mut s = st.slot_mut(0);
         s.set_cell(Pos::new(3, 4), CellType::Lava, Color::Red);
         intervene(&mut s, Action::Forward);
-        assert!(s.events.lava_fall);
+        assert!(s.events[0].lava_fall);
     }
 
     #[test]
@@ -279,10 +297,10 @@ mod tests {
         let d = s.add_door(Pos::new(3, 4), Color::Blue, DoorState::Locked);
         intervene(&mut s, Action::Toggle);
         assert_eq!(DoorState::from_u8(s.door_state[d]), DoorState::Locked);
-        *s.pocket = Pocket::holding(Tag::KEY, Color::Red).0;
+        s.pocket[0] = Pocket::holding(Tag::KEY, Color::Red).0;
         intervene(&mut s, Action::Toggle);
         assert_eq!(DoorState::from_u8(s.door_state[d]), DoorState::Locked, "wrong colour");
-        *s.pocket = Pocket::holding(Tag::KEY, Color::Blue).0;
+        s.pocket[0] = Pocket::holding(Tag::KEY, Color::Blue).0;
         intervene(&mut s, Action::Toggle);
         assert_eq!(DoorState::from_u8(s.door_state[d]), DoorState::Open);
         // forward through the now-open door
@@ -308,7 +326,7 @@ mod tests {
         let mut s = st.slot_mut(0);
         s.add_ball(Pos::new(3, 4), Color::Blue);
         intervene(&mut s, Action::Forward);
-        assert!(s.events.ball_hit);
+        assert!(s.events[0].ball_hit);
         assert_eq!(s.player(), Pos::new(3, 3));
     }
 
@@ -317,9 +335,9 @@ mod tests {
         let mut st = room();
         let mut s = st.slot_mut(0);
         s.add_ball(Pos::new(3, 4), Color::Purple);
-        *s.mission = Mission::pick_up(Tag::BALL, Color::Purple).raw();
+        s.mission.fill(Mission::pick_up(Tag::BALL, Color::Purple).raw());
         intervene(&mut s, Action::Pickup);
-        assert!(s.events.ball_picked);
+        assert!(s.events[0].ball_picked);
         assert_eq!(s.pocket_value().kind_tag(), Tag::BALL);
     }
 
@@ -328,13 +346,13 @@ mod tests {
         let mut st = room();
         let mut s = st.slot_mut(0);
         s.add_door(Pos::new(3, 4), Color::Green, DoorState::Closed);
-        *s.mission = Mission::go_to(Tag::DOOR, Color::Green).raw();
+        s.mission.fill(Mission::go_to(Tag::DOOR, Color::Green).raw());
         intervene(&mut s, Action::Done);
-        assert!(s.events.door_done);
+        assert!(s.events[0].door_done);
         // facing elsewhere: no event
         intervene(&mut s, Action::Left);
         intervene(&mut s, Action::Done);
-        assert!(!s.events.door_done);
+        assert!(!s.events[0].door_done);
     }
 
     #[test]
@@ -342,14 +360,14 @@ mod tests {
         let mut st = room();
         let mut s = st.slot_mut(0);
         s.add_door(Pos::new(3, 4), Color::Blue, DoorState::Locked);
-        *s.pocket = Pocket::holding(Tag::KEY, Color::Blue).0;
+        s.pocket[0] = Pocket::holding(Tag::KEY, Color::Blue).0;
         intervene(&mut s, Action::Toggle);
-        assert!(s.events.door_unlocked);
+        assert!(s.events[0].door_unlocked);
         // re-toggling an open/closed door is not an unlock
         intervene(&mut s, Action::Toggle); // open -> closed
-        assert!(!s.events.door_unlocked);
+        assert!(!s.events[0].door_unlocked);
         intervene(&mut s, Action::Toggle); // closed -> open
-        assert!(!s.events.door_unlocked);
+        assert!(!s.events[0].door_unlocked);
     }
 
     #[test]
@@ -357,10 +375,10 @@ mod tests {
         let mut st = room();
         let mut s = st.slot_mut(0);
         s.add_box(Pos::new(3, 4), Color::Green);
-        *s.mission = Mission::pick_up(Tag::BOX, Color::Green).raw();
+        s.mission.fill(Mission::pick_up(Tag::BOX, Color::Green).raw());
         intervene(&mut s, Action::Pickup);
-        assert!(s.events.object_picked);
-        assert!(!s.events.wrong_pickup);
+        assert!(s.events[0].object_picked);
+        assert!(!s.events[0].wrong_pickup);
     }
 
     #[test]
@@ -368,10 +386,10 @@ mod tests {
         let mut st = room();
         let mut s = st.slot_mut(0);
         s.add_ball(Pos::new(3, 4), Color::Red);
-        *s.mission = Mission::pick_up(Tag::KEY, Color::Blue).raw(); // fetch the blue key
+        s.mission.fill(Mission::pick_up(Tag::KEY, Color::Blue).raw()); // fetch the blue key
         intervene(&mut s, Action::Pickup);
-        assert!(s.events.wrong_pickup, "wrong object picked under a pickable mission");
-        assert!(!s.events.object_picked);
+        assert!(s.events[0].wrong_pickup, "wrong object picked under a pickable mission");
+        assert!(!s.events[0].object_picked);
     }
 
     #[test]
@@ -379,10 +397,10 @@ mod tests {
         let mut st = room();
         let mut s = st.slot_mut(0);
         s.add_key(Pos::new(3, 4), Color::Yellow);
-        *s.mission = Mission::go_to(Tag::DOOR, Color::Yellow).raw(); // GoToDoor-style mission
+        s.mission.fill(Mission::go_to(Tag::DOOR, Color::Yellow).raw()); // GoToDoor-style mission
         intervene(&mut s, Action::Pickup);
-        assert!(!s.events.object_picked);
-        assert!(!s.events.wrong_pickup);
+        assert!(!s.events[0].object_picked);
+        assert!(!s.events[0].wrong_pickup);
     }
 
     #[test]
@@ -390,20 +408,20 @@ mod tests {
         let mut st = room();
         let mut s = st.slot_mut(0);
         s.add_ball(Pos::new(3, 4), Color::Blue);
-        *s.mission = Mission::go_to(Tag::BALL, Color::Blue).raw();
+        s.mission.fill(Mission::go_to(Tag::BALL, Color::Blue).raw());
         intervene(&mut s, Action::Done);
-        assert!(s.events.object_reached);
-        assert!(!s.events.door_done);
+        assert!(s.events[0].object_reached);
+        assert!(!s.events[0].door_done);
         // picking the go-to target up is NOT the success event (and not a
         // wrong pickup either — those are pick-up-verb semantics)
         intervene(&mut s, Action::Pickup);
-        assert!(!s.events.object_picked);
-        assert!(!s.events.wrong_pickup);
+        assert!(!s.events[0].object_picked);
+        assert!(!s.events[0].wrong_pickup);
         // wrong colour: no event
         let mut s = st.slot_mut(0);
         s.add_ball(Pos::new(3, 4), Color::Red);
         intervene(&mut s, Action::Done);
-        assert!(!s.events.object_reached, "wrong colour must not satisfy go-to");
+        assert!(!s.events[0].object_reached, "wrong colour must not satisfy go-to");
     }
 
     #[test]
@@ -411,11 +429,11 @@ mod tests {
         let mut st = room();
         let mut s = st.slot_mut(0);
         s.add_box(Pos::new(2, 4), Color::Green); // the "near" target
-        *s.pocket = Pocket::holding(Tag::BALL, Color::Purple).0;
-        *s.mission = Mission::put_next(Tag::BALL, Color::Purple, Tag::BOX, Color::Green).raw();
+        s.pocket[0] = Pocket::holding(Tag::BALL, Color::Purple).0;
+        s.mission.fill(Mission::put_next(Tag::BALL, Color::Purple, Tag::BOX, Color::Green).raw());
         // drop at (3,4): 4-adjacent to the box at (2,4)
         intervene(&mut s, Action::Drop);
-        assert!(s.events.object_placed);
+        assert!(s.events[0].object_placed);
         assert!(s.pocket_value().is_empty());
     }
 
@@ -424,16 +442,16 @@ mod tests {
         let mut st = room();
         let mut s = st.slot_mut(0);
         s.add_box(Pos::new(1, 1), Color::Green); // far away
-        *s.pocket = Pocket::holding(Tag::BALL, Color::Purple).0;
-        *s.mission = Mission::put_next(Tag::BALL, Color::Purple, Tag::BOX, Color::Green).raw();
+        s.pocket[0] = Pocket::holding(Tag::BALL, Color::Purple).0;
+        s.mission.fill(Mission::put_next(Tag::BALL, Color::Purple, Tag::BOX, Color::Green).raw());
         intervene(&mut s, Action::Drop); // lands at (3,4), not adjacent
-        assert!(!s.events.object_placed, "distant drop must not satisfy put-next");
+        assert!(!s.events[0].object_placed, "distant drop must not satisfy put-next");
         // dropping the WRONG object next to the target fires nothing
         let mut s = st.slot_mut(0);
-        *s.pocket = Pocket::holding(Tag::KEY, Color::Yellow).0;
+        s.pocket[0] = Pocket::holding(Tag::KEY, Color::Yellow).0;
         s.place_player(Pos::new(2, 2), Direction::West); // drop at (2,1), adjacent to box
         intervene(&mut s, Action::Drop);
-        assert!(!s.events.object_placed, "only the mission's moved object counts");
+        assert!(!s.events[0].object_placed, "only the mission's moved object counts");
     }
 
     #[test]
@@ -442,11 +460,61 @@ mod tests {
         let mut s = st.slot_mut(0);
         s.set_cell(Pos::new(3, 4), CellType::Goal, Color::Green);
         intervene(&mut s, Action::Forward);
-        assert!(s.events.goal_reached);
+        assert!(s.events[0].goal_reached);
         intervene(&mut s, Action::Left);
         // still standing on the goal: coincidence events re-latch; but motion
         // events like ball_hit must clear.
-        assert!(s.events.goal_reached);
-        assert!(!s.events.ball_hit);
+        assert!(s.events[0].goal_reached);
+        assert!(!s.events[0].ball_hit);
+    }
+
+    #[test]
+    fn agents_block_and_latch_contact() {
+        let mut st = BatchedState::with_agents(
+            1,
+            7,
+            7,
+            Caps { doors: 2, keys: 2, balls: 2, boxes: 1 },
+            2,
+        );
+        {
+            let mut s = st.slot_mut(0);
+            s.fill_room();
+            s.place_player(Pos::new(3, 3), Direction::East);
+            s.place_agent(1, Pos::new(3, 4), Direction::West);
+        }
+        // Agent 0 walks into agent 1: mover latches agent_contact, target
+        // latches contacted, and nobody moves.
+        {
+            let mut s = st.agent_slot_mut(0, 0);
+            intervene(&mut s, Action::Forward);
+            assert_eq!(s.player(), Pos::new(3, 3), "blocked by the other agent");
+            assert!(s.events[0].agent_contact);
+            assert!(s.events[1].contacted);
+        }
+        // Agent 1 then acts in the same step: the latches agent 0 set must
+        // survive (only agent 0's sub-step clears the slot's events).
+        {
+            let mut s = st.agent_slot_mut(0, 1);
+            intervene(&mut s, Action::Left);
+            assert!(s.events[0].agent_contact);
+            assert!(s.events[1].contacted);
+        }
+        // Next step: agent 0 turns away — all latches clear on its sub-step.
+        {
+            let mut s = st.agent_slot_mut(0, 0);
+            intervene(&mut s, Action::Left);
+            assert!(!s.events[0].agent_contact);
+            assert!(!s.events[1].contacted);
+        }
+        // Agent 1 can now walk into agent 0's cell-adjacent space freely:
+        // front of agent 1 (facing West) is (3,3), still occupied by agent 0.
+        {
+            let mut s = st.agent_slot_mut(0, 1);
+            intervene(&mut s, Action::Forward);
+            assert_eq!(s.player(), Pos::new(3, 4), "blocked by agent 0");
+            assert!(s.events[1].agent_contact);
+            assert!(s.events[0].contacted);
+        }
     }
 }

@@ -35,7 +35,7 @@ use crate::core::components::Direction;
 use crate::core::entities::{CellType, Tag};
 use crate::core::grid::Pos;
 use crate::core::mission::{feat, Mission, MISSION_DIM};
-use crate::core::state::{cellcode, EnvSlot};
+use crate::core::state::{cellcode, AgentView, EnvSlot};
 use crate::systems::sprites::{Sprite, SpriteSheet, TILE};
 
 /// Default egocentric window edge (MiniGrid's `agent_view_size`).
@@ -181,13 +181,19 @@ impl ObsSpec {
 
 /// Symbolic (tag, colour, state) encoding of the cell at `p`, optionally
 /// overlaying the player (MiniGrid `encode` semantics; the agent's state
-/// channel is its direction). O(1): a single packed overlay read for any
-/// in-grid cell; out-of-range positions fall back to the scan oracle, which
-/// this function matches bit for bit (see [`scan::encode_cell`]).
+/// channel is its direction, its colour channel its agent index). Other
+/// agents in the slot are always encoded — a first-person view hides the
+/// viewer itself (`include_player = false`) but still sees its peers.
+/// O(1): a single packed overlay read for any in-grid cell; out-of-range
+/// positions fall back to the scan oracle, which this function matches bit
+/// for bit (see [`scan::encode_cell`]).
 #[inline]
 pub fn encode_cell(s: &EnvSlot<'_>, p: Pos, include_player: bool) -> (i32, i32, i32) {
     if include_player && p == s.player() {
-        return (Tag::AGENT, 0 /* red */, s.player_dir);
+        return (Tag::AGENT, s.agent as i32, s.player_dir_value());
+    }
+    if let Some(j) = s.other_agent_at(p) {
+        return (Tag::AGENT, j as i32, s.player_dir[j]);
     }
     if p.in_bounds(s.h, s.w) {
         let code = s.overlay[(p.r as usize) * s.w + p.c as usize];
@@ -201,7 +207,7 @@ pub fn encode_cell(s: &EnvSlot<'_>, p: Pos, include_player: bool) -> (i32, i32, 
 /// state-derived — the overlay path's writer.
 #[inline]
 pub fn mission_features(s: &EnvSlot<'_>, out: &mut [i32]) {
-    Mission::from_raw(s.mission).write_features(out);
+    Mission::from_raw(s.mission_raw()).write_features(out);
 }
 
 /// The render code of flat cell `cell`: the packed overlay code with the
@@ -209,8 +215,8 @@ pub fn mission_features(s: &EnvSlot<'_>, out: &mut [i32]) {
 /// the dirty-tile cache compares frames by.
 #[inline]
 pub fn render_code(s: &EnvSlot<'_>, cell: usize) -> u32 {
-    if s.player_pos == cell as i32 {
-        cellcode::pack(Tag::AGENT, 0, s.player_dir as u8)
+    if let Some(j) = s.player_pos.iter().position(|&pp| pp == cell as i32) {
+        cellcode::pack(Tag::AGENT, j as u8, s.player_dir[j] as u8)
     } else {
         s.overlay[cell]
     }
@@ -225,12 +231,13 @@ pub fn symbolic(s: &EnvSlot<'_>, out: &mut [i32]) {
         out[cell * 3 + 1] = cellcode::color(code);
         out[cell * 3 + 2] = cellcode::state(code);
     }
-    let pp = s.player_pos;
-    if pp >= 0 && (pp as usize) < s.overlay.len() {
-        let i = pp as usize * 3;
-        out[i] = Tag::AGENT;
-        out[i + 1] = 0;
-        out[i + 2] = s.player_dir;
+    for (j, &pp) in s.player_pos.iter().enumerate() {
+        if pp >= 0 && (pp as usize) < s.overlay.len() {
+            let i = pp as usize * 3;
+            out[i] = Tag::AGENT;
+            out[i + 1] = j as i32;
+            out[i + 2] = s.player_dir[j];
+        }
     }
 }
 
@@ -241,9 +248,10 @@ pub fn categorical(s: &EnvSlot<'_>, out: &mut [i32]) {
     for (cell, &code) in s.overlay.iter().enumerate() {
         out[cell] = cellcode::tag(code);
     }
-    let pp = s.player_pos;
-    if pp >= 0 && (pp as usize) < s.overlay.len() {
-        out[pp as usize] = Tag::AGENT;
+    for &pp in s.player_pos.iter() {
+        if pp >= 0 && (pp as usize) < s.overlay.len() {
+            out[pp as usize] = Tag::AGENT;
+        }
     }
 }
 
@@ -479,7 +487,7 @@ pub mod scan {
     pub fn mission_features(s: &EnvSlot<'_>, out: &mut [i32]) {
         debug_assert_eq!(out.len(), MISSION_DIM);
         out.fill(0);
-        let m = s.mission;
+        let m = s.mission[s.agent];
         if m < 0 {
             return;
         }
@@ -509,11 +517,20 @@ pub mod scan {
         }
     }
 
-    /// Scan-path [`super::encode_cell`]: first-match entity-table scans.
+    /// Scan-path [`super::encode_cell`]: first-match entity-table scans
+    /// (agents included — an independent walk of the position column).
     #[inline]
     pub fn encode_cell(s: &EnvSlot<'_>, p: Pos, include_player: bool) -> (i32, i32, i32) {
         if include_player && p == s.player() {
-            return (Tag::AGENT, 0 /* red */, s.player_dir);
+            return (Tag::AGENT, s.agent as i32, s.player_dir_value());
+        }
+        if p.in_bounds(s.h, s.w) {
+            let enc = p.encode(s.w);
+            for j in 0..s.player_pos.len() {
+                if j != s.agent && s.player_pos[j] == enc {
+                    return (Tag::AGENT, j as i32, s.player_dir[j]);
+                }
+            }
         }
         if let Some(d) = s.door_at_scan(p) {
             return (Tag::DOOR, s.door_color[d] as i32, s.door_state[d] as i32);
@@ -743,7 +760,7 @@ mod tests {
         let mut st = env();
         {
             let mut s = st.slot_mut(0);
-            *s.pocket = crate::core::components::Pocket::holding(Tag::KEY, Color::Yellow).0;
+            s.pocket[0] = crate::core::components::Pocket::holding(Tag::KEY, Color::Yellow).0;
         }
         let s = st.slot(0);
         let mut out = vec![0i32; 7 * 7 * 3];
@@ -860,7 +877,7 @@ mod tests {
         for m in missions {
             {
                 let mut s = st.slot_mut(0);
-                *s.mission = m.raw();
+                s.mission.fill(m.raw());
             }
             let s = st.slot(0);
             let mut fast = [0i32; crate::core::mission::MISSION_DIM];
@@ -875,6 +892,53 @@ mod tests {
             spec.write_mission_path(ObsPath::NaiveScan, &s, &mut via_spec);
             assert_eq!(via_spec, naive);
         }
+    }
+
+    #[test]
+    fn other_agents_are_encoded_with_their_index() {
+        let mut st = BatchedState::with_agents(1, 8, 8, Caps::default(), 2);
+        {
+            let mut s = st.slot_mut(0);
+            s.fill_room();
+            s.place_player(Pos::new(4, 2), Direction::East);
+            s.place_agent(1, Pos::new(4, 4), Direction::North);
+        }
+        // Full grid: both agents visible, colour channel = agent index.
+        let s = st.slot(0);
+        let mut out = vec![0i32; 8 * 8 * 3];
+        symbolic(&s, &mut out);
+        let at = |r: usize, c: usize| -> (i32, i32, i32) {
+            let i = (r * 8 + c) * 3;
+            (out[i], out[i + 1], out[i + 2])
+        };
+        assert_eq!(at(4, 2), (Tag::AGENT, 0, Direction::East as i32));
+        assert_eq!(at(4, 4), (Tag::AGENT, 1, Direction::North as i32));
+        // Agent 0's first-person frame: agent 1 sits two cells ahead
+        // (view row 4, col 3) and is encoded even though the frame hides
+        // the viewer itself.
+        let mut fp = vec![0i32; 7 * 7 * 3];
+        symbolic_first_person(&s, 7, &mut fp);
+        let i = (4 * 7 + 3) * 3;
+        assert_eq!(fp[i], Tag::AGENT);
+        assert_eq!(fp[i + 1], 1);
+        // Overlay and scan paths agree on multi-agent cells.
+        for p in (0..8).flat_map(|r| (0..8).map(move |c| Pos::new(r, c))) {
+            assert_eq!(encode_cell(&s, p, true), scan::encode_cell(&s, p, true), "{p:?}");
+            assert_eq!(encode_cell(&s, p, false), scan::encode_cell(&s, p, false), "{p:?}");
+        }
+        // Agent 1's own egocentric frame (from its pose) sees agent 0.
+        let s1 = st.agent_slot(0, 1);
+        let mut fp1 = vec![0i32; 7 * 7 * 3];
+        symbolic_first_person(&s1, 7, &mut fp1);
+        let saw_peer = (0..49).any(|i| fp1[i * 3] == Tag::AGENT && fp1[i * 3 + 1] == 0);
+        assert!(saw_peer, "agent 1 must see agent 0 in its egocentric frame");
+        // The full-grid render codes carry the agent index too.
+        let c0 = render_code(&s, 4 * 8 + 2);
+        let c1 = render_code(&s, 4 * 8 + 4);
+        assert_eq!(cellcode::tag(c0), Tag::AGENT);
+        assert_eq!(cellcode::color(c0), 0);
+        assert_eq!(cellcode::tag(c1), Tag::AGENT);
+        assert_eq!(cellcode::color(c1), 1);
     }
 
     #[test]

@@ -12,7 +12,7 @@
 //! environment, matching the paper.
 
 use crate::core::actions::Action;
-use crate::core::state::EnvSlot;
+use crate::core::state::{AgentView, EnvSlot};
 
 /// Primitive reward functions (paper Table 5, plus the KeyCorridor pickup
 /// event and the legacy MiniGrid shaping for reference).
@@ -39,6 +39,13 @@ pub enum RewardFn {
     /// +1 when the put-next mission's object is dropped adjacent to its
     /// second object (PutNext).
     OnObjectPlaced,
+    /// +1 when *any* agent in the slot placed the mission object — the
+    /// cooperative PutNext team reward (every agent-row pays out).
+    OnObjectPlacedTeam,
+    /// +1 when this agent walked into another agent (pursuit "tag" success).
+    OnAgentContact,
+    /// −1 when another agent walked into this one (the evader was caught).
+    OnContacted,
     /// 0 everywhere.
     Free,
     /// −cost on every action except `done`.
@@ -56,7 +63,7 @@ impl RewardFn {
     /// Evaluate on the post-intervention slot. `max_steps` is the timeout T
     /// (used only by the legacy shaping).
     pub fn eval(self, s: &EnvSlot<'_>, action: Action, max_steps: u32) -> f32 {
-        let ev = s.events;
+        let ev = s.events_value();
         match self {
             RewardFn::OnGoalReached => {
                 if ev.goal_reached {
@@ -121,6 +128,27 @@ impl RewardFn {
                     0.0
                 }
             }
+            RewardFn::OnObjectPlacedTeam => {
+                if s.events.iter().any(|e| e.object_placed) {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            RewardFn::OnAgentContact => {
+                if ev.agent_contact {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            RewardFn::OnContacted => {
+                if ev.contacted {
+                    -1.0
+                } else {
+                    0.0
+                }
+            }
             RewardFn::Free => 0.0,
             RewardFn::ActionCost(c) => {
                 if action == Action::Done {
@@ -153,6 +181,9 @@ impl RewardFn {
             RewardFn::OnObjectPicked => "on_object_picked",
             RewardFn::OnObjectReached => "on_object_reached",
             RewardFn::OnObjectPlaced => "on_object_placed",
+            RewardFn::OnObjectPlacedTeam => "on_object_placed_team",
+            RewardFn::OnAgentContact => "on_agent_contact",
+            RewardFn::OnContacted => "on_contacted",
             RewardFn::Free => "free",
             RewardFn::ActionCost(_) => "action_cost",
             RewardFn::TimeCost(_) => "time_cost",
@@ -218,6 +249,22 @@ impl RewardSpec {
         RewardSpec::new(vec![RewardFn::OnObjectPlaced])
     }
 
+    /// Cooperative PutNext: every agent in the slot is paid when any one of
+    /// them places the mission object.
+    pub fn team_object_placed() -> Self {
+        RewardSpec::new(vec![RewardFn::OnObjectPlacedTeam])
+    }
+
+    /// Pursuit–evasion: +1 for tagging another agent, −1 for being tagged,
+    /// −1 for colliding with a flying obstacle.
+    pub fn pursuit() -> Self {
+        RewardSpec::new(vec![
+            RewardFn::OnAgentContact,
+            RewardFn::OnContacted,
+            RewardFn::OnBallHit,
+        ])
+    }
+
     pub fn eval(&self, s: &EnvSlot<'_>, action: Action, max_steps: u32) -> f32 {
         self.terms.iter().map(|t| t.eval(s, action, max_steps)).sum()
     }
@@ -236,7 +283,7 @@ mod tests {
         let mut s = st.slot_mut(0);
         s.fill_room();
         s.place_player(Pos::new(1, 1), Direction::East);
-        *s.events = ev;
+        s.events[0] = ev;
         drop(s);
         st
     }
@@ -333,5 +380,29 @@ mod tests {
         // wrong pickup pays nothing (Fetch: terminate with 0 reward)
         let st = slot_with_events(Events { wrong_pickup: true, ..Events::NONE });
         assert_eq!(RewardSpec::object_pickup().eval(&st.slot(0), Action::Pickup, 100), 0.0);
+    }
+
+    #[test]
+    fn pursuit_and_team_primitives() {
+        let st = slot_with_events(Events { agent_contact: true, ..Events::NONE });
+        assert_eq!(RewardSpec::pursuit().eval(&st.slot(0), Action::Forward, 100), 1.0);
+        let st = slot_with_events(Events { contacted: true, ..Events::NONE });
+        assert_eq!(RewardSpec::pursuit().eval(&st.slot(0), Action::Forward, 100), -1.0);
+        // Team reward: agent 1 placed the object, agent 0 is paid too.
+        let mut st = BatchedState::with_agents(1, 5, 5, Caps::default(), 2);
+        {
+            let mut s = st.slot_mut(0);
+            s.fill_room();
+            s.place_player(Pos::new(1, 1), Direction::East);
+            s.place_agent(1, Pos::new(2, 2), Direction::East);
+            s.events[1] = Events { object_placed: true, ..Events::NONE };
+        }
+        let team = RewardSpec::team_object_placed();
+        assert_eq!(team.eval(&st.agent_slot(0, 0), Action::Drop, 100), 1.0);
+        assert_eq!(team.eval(&st.agent_slot(0, 1), Action::Drop, 100), 1.0);
+        // The per-agent primitive pays only the agent that placed it.
+        let solo = RewardSpec::object_placed();
+        assert_eq!(solo.eval(&st.agent_slot(0, 0), Action::Drop, 100), 0.0);
+        assert_eq!(solo.eval(&st.agent_slot(0, 1), Action::Drop, 100), 1.0);
     }
 }

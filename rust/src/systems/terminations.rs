@@ -6,7 +6,7 @@
 //! T, not of the MDP), with the dm_env-style distinction: termination sets
 //! γ_{t+1} = 0, truncation keeps γ_{t+1} = γ.
 
-use crate::core::state::EnvSlot;
+use crate::core::state::{AgentView, EnvSlot};
 
 /// Primitive termination predicates (paper Table 6 + mission events).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -35,13 +35,17 @@ pub enum TermFn {
     /// Terminate when the put-next mission's object lands adjacent to its
     /// second object (PutNext).
     OnObjectPlaced,
+    /// Terminate when this agent tagged another agent (pursuit–evasion).
+    OnAgentContact,
+    /// Terminate when this agent was tagged by another agent.
+    OnContacted,
     /// Never terminate.
     Free,
 }
 
 impl TermFn {
     pub fn eval(self, s: &EnvSlot<'_>) -> bool {
-        let ev = s.events;
+        let ev = s.events_value();
         match self {
             TermFn::OnGoalReached => ev.goal_reached,
             TermFn::OnLavaFall => ev.lava_fall,
@@ -53,6 +57,8 @@ impl TermFn {
             TermFn::OnWrongPickup => ev.wrong_pickup,
             TermFn::OnObjectReached => ev.object_reached,
             TermFn::OnObjectPlaced => ev.object_placed,
+            TermFn::OnAgentContact => ev.agent_contact,
+            TermFn::OnContacted => ev.contacted,
             TermFn::Free => false,
         }
     }
@@ -69,6 +75,8 @@ impl TermFn {
             TermFn::OnWrongPickup => "on_wrong_pickup",
             TermFn::OnObjectReached => "on_object_reached",
             TermFn::OnObjectPlaced => "on_object_placed",
+            TermFn::OnAgentContact => "on_agent_contact",
+            TermFn::OnContacted => "on_contacted",
             TermFn::Free => "free",
         }
     }
@@ -136,6 +144,17 @@ impl TermSpec {
         TermSpec::new(vec![TermFn::OnObjectPlaced])
     }
 
+    /// Pursuit–evasion: a tag in either direction or an obstacle collision
+    /// ends the episode. (The engine ORs the spec across a slot's agents,
+    /// so one agent's terminal event ends the slot for everyone.)
+    pub fn pursuit() -> Self {
+        TermSpec::new(vec![
+            TermFn::OnAgentContact,
+            TermFn::OnContacted,
+            TermFn::OnBallHit,
+        ])
+    }
+
     pub fn eval(&self, s: &EnvSlot<'_>) -> bool {
         self.terms.iter().any(|t| t.eval(s))
     }
@@ -154,7 +173,7 @@ mod tests {
         let mut s = st.slot_mut(0);
         s.fill_room();
         s.place_player(Pos::new(1, 1), Direction::East);
-        *s.events = ev;
+        s.events[0] = ev;
         drop(s);
         st
     }
@@ -203,6 +222,17 @@ mod tests {
         let st = with_events(Events { object_placed: true, ..Events::NONE });
         assert!(TermSpec::object_placed().eval(&st.slot(0)));
         assert!(!TermSpec::object_reached().eval(&st.slot(0)));
+    }
+
+    #[test]
+    fn agent_contact_terminates_pursuit() {
+        let st = with_events(Events { agent_contact: true, ..Events::NONE });
+        assert!(TermSpec::pursuit().eval(&st.slot(0)));
+        assert!(!TermSpec::goal().eval(&st.slot(0)));
+        let st = with_events(Events { contacted: true, ..Events::NONE });
+        assert!(TermSpec::pursuit().eval(&st.slot(0)));
+        let st = with_events(Events { ball_hit: true, ..Events::NONE });
+        assert!(TermSpec::pursuit().eval(&st.slot(0)));
     }
 
     #[test]

@@ -8,7 +8,7 @@
 //! for timeout truncation.
 
 use crate::core::grid::Pos;
-use crate::core::state::SlotMut;
+use crate::core::state::{AgentView, SlotMut};
 
 /// Advance the MDP dynamics for one environment slot.
 ///
@@ -27,7 +27,6 @@ pub fn transition(s: &mut SlotMut<'_>, stochastic_balls: bool) {
 /// within a ±1 neighbourhood (8-neighbourhood + stay), retrying a bounded
 /// number of times; the move is skipped if no sampled cell is free.
 fn move_obstacles(s: &mut SlotMut<'_>) {
-    let player = s.player();
     for bi in 0..s.ball_pos.len() {
         let enc = s.ball_pos[bi];
         if enc < 0 {
@@ -44,9 +43,10 @@ fn move_obstacles(s: &mut SlotMut<'_>) {
             if q == p {
                 break; // sampled "stay put"
             }
-            if q == player {
-                // Ball ran into the agent: collision event, ball stays.
-                s.events.ball_hit = true;
+            if let Some(j) = s.agent_at(q) {
+                // Ball ran into an agent: collision event on that agent,
+                // ball stays.
+                s.events[j].ball_hit = true;
                 break;
             }
             if s.walkable(q) {
@@ -150,9 +150,9 @@ mod tests {
         s.add_ball(Pos::new(1, 2), Color::Blue);
         let mut hit = false;
         for _ in 0..100 {
-            *s.events = crate::core::events::Events::NONE;
+            s.events[0] = crate::core::events::Events::NONE;
             transition(&mut s, true);
-            if s.events.ball_hit {
+            if s.events[0].ball_hit {
                 hit = true;
                 break;
             }

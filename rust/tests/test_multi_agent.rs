@@ -1,0 +1,257 @@
+//! Multi-agent engine pins: the `[B × A]` agent axis end to end.
+//!
+//! 1. **Contested cells** — two agents stepping onto the same free cell
+//!    resolve in ascending agent-index order (the engine's documented
+//!    tie-break): the lower index wins the cell, the loser stays put and
+//!    latches the contact event pair.
+//! 2. **Cross-engine parity** — for A ∈ {1, 2, 4} a shared random walk is
+//!    bitwise identical across `BatchedEnv`, `ShardedEnv{S=3}` and
+//!    `PipelinedEnv` (timesteps, observations, mission features). A = 1
+//!    doubles as a regression pin: the agent axis must collapse exactly to
+//!    the single-agent engines.
+//! 3. **Fused windows** — `step_n` with a Fixed `[K × B·A]` plan equals K
+//!    per-step calls on the MA families, batched and sharded.
+//! 4. **MARL training** — PPO treats the B·A agent-rows as its policy
+//!    batch and produces the identical learning curve through all three
+//!    engines on a cooperative MA family.
+
+use navix::agents::ppo::{Ppo, PpoConfig};
+use navix::agents::OBS_DIM;
+use navix::batch::{
+    ActionPlan, BatchStepper, BatchedEnv, ObsCapture, ObsData, PipelinedEnv, ShardedEnv,
+    TrajectorySlice,
+};
+use navix::core::actions::Action;
+use navix::core::components::Direction;
+use navix::core::grid::Pos;
+use navix::rng::{Key, Rng};
+
+#[test]
+fn contested_cell_goes_to_the_lowest_agent_index() {
+    let cfg = navix::make("Navix-Empty-8x8-v0").unwrap().with_agents(2);
+    let mut env = BatchedEnv::new(cfg, 1, Key::new(1));
+    {
+        // Face both agents at the same free cell (3,3) from opposite sides.
+        let mut s = env.state.slot_mut(0);
+        s.place_agent(0, Pos::new(3, 2), Direction::East);
+        s.place_agent(1, Pos::new(3, 4), Direction::West);
+    }
+    env.step(&[Action::Forward as u8, Action::Forward as u8]);
+    let s = env.state.slot(0);
+    assert_eq!(
+        Pos::decode(s.player_pos[0], s.w),
+        Pos::new(3, 3),
+        "agent 0 steps first and wins the contested cell"
+    );
+    assert_eq!(
+        Pos::decode(s.player_pos[1], s.w),
+        Pos::new(3, 4),
+        "agent 1 must be blocked by agent 0's new position"
+    );
+    // The blocked move latches the contact pair: mover → agent_contact,
+    // blocker → contacted.
+    assert!(s.events[1].agent_contact, "blocked mover latches agent_contact");
+    assert!(s.events[0].contacted, "the agent standing on the cell latches contacted");
+}
+
+#[test]
+fn agents_never_stack_after_engine_steps() {
+    // Random walk on every MA family: no two agents of a slot may ever
+    // occupy the same cell (the transition system's hard invariant).
+    for id in ["Navix-MA-FourRooms-Race-v0", "Navix-MA-PutNext-Coop-6x6-N2-v0", "Navix-MA-Tag-8x8-v0"]
+    {
+        let cfg = navix::make(id).unwrap();
+        let mut env = BatchedEnv::new(cfg, 4, Key::new(8));
+        let a = env.a;
+        let mut rng = Rng::new(19);
+        let mut actions = vec![0u8; env.policy_rows()];
+        for step in 0..200 {
+            for x in actions.iter_mut() {
+                *x = rng.below(7) as u8;
+            }
+            env.step(&actions);
+            for i in 0..env.b {
+                let col = &env.state.player_pos[i * a..(i + 1) * a];
+                for j in 1..a {
+                    assert!(
+                        !col[..j].contains(&col[j]),
+                        "{id} step {step} slot {i}: agents share a cell ({col:?})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Bitwise parity of a shared random walk across the three engines, for a
+/// given agent count. `base` must be an A-agnostic layout id.
+fn assert_three_engine_parity(base: &str, n_agents: usize) {
+    const B: usize = 6;
+    const STEPS: usize = 120;
+    let cfg = navix::make(base).unwrap().with_agents(n_agents);
+    let mut single = BatchedEnv::new(cfg.clone(), B, Key::new(9));
+    let mut sharded = ShardedEnv::new(cfg.clone(), B, 3, 2, Key::new(9));
+    let mut piped = PipelinedEnv::over_batched(BatchedEnv::new(cfg, B, Key::new(9)));
+    let rows = single.policy_rows();
+    assert_eq!(rows, B * n_agents, "{base}: policy rows must be B·A");
+    assert_eq!(BatchStepper::policy_rows(&sharded), rows, "{base}: sharded rows");
+    assert_eq!(BatchStepper::policy_rows(&piped), rows, "{base}: pipelined rows");
+    let mut rng = Rng::new(4);
+    for step in 0..STEPS {
+        let actions: Vec<u8> = (0..rows).map(|_| rng.below(7) as u8).collect();
+        single.step(&actions);
+        sharded.step(&actions);
+        BatchStepper::step(&mut piped, &actions);
+        let ctx = format!("{base} A={n_agents} step {step}");
+        for (name, ts) in [("sharded", &sharded.timestep), ("pipelined", piped.timestep())] {
+            assert_eq!(single.timestep.reward, ts.reward, "{ctx}: rewards ({name})");
+            assert_eq!(single.timestep.step_type, ts.step_type, "{ctx}: step types ({name})");
+            assert_eq!(single.timestep.t, ts.t, "{ctx}: episode clocks ({name})");
+            assert_eq!(single.timestep.discount, ts.discount, "{ctx}: discounts ({name})");
+        }
+        for (name, obs) in [("sharded", &sharded.obs), ("pipelined", piped.obs())] {
+            match (&single.obs.data, &obs.data) {
+                (ObsData::I32(x), ObsData::I32(y)) => {
+                    assert_eq!(x, y, "{ctx}: observations ({name})")
+                }
+                (ObsData::U8(x), ObsData::U8(y)) => {
+                    assert_eq!(x, y, "{ctx}: observations ({name})")
+                }
+                _ => panic!("{ctx}: obs dtypes diverged ({name})"),
+            }
+            assert_eq!(single.obs.mission, obs.mission, "{ctx}: mission features ({name})");
+        }
+    }
+}
+
+#[test]
+fn engines_agree_bitwise_for_one_two_and_four_agents() {
+    for base in ["Navix-Empty-8x8-v0", "Navix-FourRooms-v0"] {
+        for n_agents in [1, 2, 4] {
+            assert_three_engine_parity(base, n_agents);
+        }
+    }
+}
+
+#[test]
+fn ma_families_are_bitwise_identical_across_engines() {
+    // The registered MA ids carry their own A, rewards and terminations
+    // (team placement, pursuit contact) — walk them through the same
+    // three-engine pin without an agent-count override.
+    const B: usize = 5;
+    const STEPS: usize = 150;
+    for id in ["Navix-MA-FourRooms-Race-v0", "Navix-MA-PutNext-Coop-6x6-N2-v0", "Navix-MA-Tag-8x8-v0"]
+    {
+        let cfg = navix::make(id).unwrap();
+        let mut single = BatchedEnv::new(cfg.clone(), B, Key::new(27));
+        let mut sharded = ShardedEnv::new(cfg.clone(), B, 3, 2, Key::new(27));
+        let mut piped = PipelinedEnv::over_batched(BatchedEnv::new(cfg, B, Key::new(27)));
+        let rows = single.policy_rows();
+        let mut rng = Rng::new(14);
+        let mut saw_terminal = false;
+        for step in 0..STEPS {
+            let actions: Vec<u8> = (0..rows).map(|_| rng.below(7) as u8).collect();
+            single.step(&actions);
+            sharded.step(&actions);
+            BatchStepper::step(&mut piped, &actions);
+            assert_eq!(
+                single.timestep.reward, sharded.timestep.reward,
+                "{id} step {step}: rewards (sharded)"
+            );
+            assert_eq!(
+                single.timestep.step_type, sharded.timestep.step_type,
+                "{id} step {step}: step types (sharded)"
+            );
+            assert_eq!(
+                single.timestep.reward,
+                piped.timestep().reward,
+                "{id} step {step}: rewards (pipelined)"
+            );
+            assert_eq!(
+                single.timestep.step_type,
+                piped.timestep().step_type,
+                "{id} step {step}: step types (pipelined)"
+            );
+            saw_terminal |= single.timestep.step_type.iter().any(|s| s.is_last());
+        }
+        // Truncation guarantees episode ends whenever the walk outlives the
+        // timeout; the longer-T families may legitimately stay mid-episode.
+        if single.cfg.max_steps as usize <= STEPS {
+            assert!(saw_terminal, "{id}: the walk never ended an episode — dynamics look inert");
+        }
+    }
+}
+
+/// K per-step calls of the oracle, recording each step's rows.
+fn reference_window(env: &mut BatchedEnv, plan: &[u8], k: usize) -> TrajectorySlice {
+    let rows = env.policy_rows();
+    let mut traj = TrajectorySlice::new(ObsCapture::All);
+    traj.ensure_like(k, rows, &env.obs);
+    for t in 0..k {
+        env.step(&plan[t * rows..(t + 1) * rows]);
+        traj.record_row(t, &env.timestep);
+        traj.capture_obs_row(t, &env.obs);
+    }
+    traj
+}
+
+#[test]
+fn fused_windows_match_stepwise_on_multi_agent_families() {
+    const B: usize = 4;
+    const K: usize = 16;
+    for id in ["Navix-MA-FourRooms-Race-v0", "Navix-MA-Tag-8x8-v0"] {
+        let cfg = navix::make(id).unwrap();
+        let mut fused = BatchedEnv::new(cfg.clone(), B, Key::new(21));
+        let mut sharded = ShardedEnv::new(cfg.clone(), B, 3, 2, Key::new(21));
+        let mut reference = BatchedEnv::new(cfg, B, Key::new(21));
+        let rows = reference.policy_rows();
+        let mut rng = Rng::new(6);
+        let mut traj = TrajectorySlice::new(ObsCapture::All);
+        let mut straj = TrajectorySlice::new(ObsCapture::All);
+        for window in 0..5 {
+            let plan: Vec<u8> = (0..K * rows).map(|_| rng.below(7) as u8).collect();
+            fused.step_n(ActionPlan::Fixed(&plan), K, &mut traj);
+            sharded.step_n(ActionPlan::Fixed(&plan), K, &mut straj);
+            let oracle = reference_window(&mut reference, &plan, K);
+            let ctx = format!("{id} window {window}");
+            assert_eq!(traj.t, oracle.t, "{ctx}: batched fused t");
+            assert_eq!(traj.reward, oracle.reward, "{ctx}: batched fused rewards");
+            assert_eq!(traj.step_type, oracle.step_type, "{ctx}: batched fused step types");
+            assert_eq!(traj.action, oracle.action, "{ctx}: batched fused actions");
+            assert_eq!(straj.t, oracle.t, "{ctx}: sharded fused t");
+            assert_eq!(straj.reward, oracle.reward, "{ctx}: sharded fused rewards");
+            assert_eq!(straj.step_type, oracle.step_type, "{ctx}: sharded fused step types");
+        }
+    }
+}
+
+#[test]
+fn ppo_learning_curve_is_identical_through_every_engine_on_an_ma_family() {
+    // The acceptance pin for MARL training: PPO sees B·A = 16 agent-rows
+    // per step and the three engines feed it bitwise-identical rollouts,
+    // so for one seed the whole learning curve must coincide.
+    const B: usize = 8;
+    const TOTAL: u64 = 4_096;
+    let pcfg = || PpoConfig { num_envs: B, rollout_len: 16, ..PpoConfig::default() };
+    let cfg = navix::make("Navix-MA-PutNext-Coop-6x6-N2-v0").unwrap();
+
+    let mut env_b = BatchedEnv::new(cfg.clone(), B, Key::new(3));
+    let log_b = Ppo::new(pcfg(), OBS_DIM, 7, 12).train(&mut env_b, TOTAL);
+
+    let mut env_s = ShardedEnv::new(cfg.clone(), B, 3, 2, Key::new(3));
+    let log_s = Ppo::new(pcfg(), OBS_DIM, 7, 12).train(&mut env_s, TOTAL);
+
+    let mut env_p = PipelinedEnv::over_batched(BatchedEnv::new(cfg, B, Key::new(3)));
+    let log_p = Ppo::new(pcfg(), OBS_DIM, 7, 12).train_pipelined(&mut env_p, TOTAL);
+
+    let curve = |log: &navix::agents::TrainLog| -> Vec<f32> {
+        log.curve.iter().map(|p| p.mean_return).collect()
+    };
+    assert!(
+        curve(&log_b).iter().all(|r| r.is_finite()),
+        "MA PPO produced a non-finite return"
+    );
+    assert!(!log_b.curve.is_empty(), "MA PPO must record at least one curve point");
+    assert_eq!(curve(&log_b), curve(&log_s), "batched vs sharded MARL curves diverged");
+    assert_eq!(curve(&log_b), curve(&log_p), "batched vs pipelined MARL curves diverged");
+}

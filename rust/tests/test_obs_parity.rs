@@ -2,7 +2,7 @@
 //!
 //! The packed cell-code overlay (PR 3) changes the *cost* of the
 //! observation/step hot path, never its semantics. This suite pins that
-//! bitwise over all 54 registry ids:
+//! bitwise over all 57 registry ids:
 //!
 //! 1. **State parity** — at every visited state, every spatial query
 //!    (`door_at`/`key_at`/`ball_at`/`box_at`, `walkable`, `opaque`,
@@ -132,7 +132,9 @@ fn rollout_checking(id: &str, b: usize, check: impl Fn(&str, usize, usize, &EnvS
     }
     let mut episodes = vec![0u32; b];
     let mut rng = Rng::new(17);
-    let mut actions = vec![0u8; b];
+    // [B × A] action matrix: one row per agent (A=1 for classic ids).
+    let n_agents = env.a;
+    let mut actions = vec![0u8; env.policy_rows()];
     let step_budget = (EPISODES as usize + 1) * (max_steps + 2);
     let mut steps = 0;
     while episodes.iter().any(|&e| e < EPISODES) && steps < step_budget {
@@ -148,7 +150,8 @@ fn rollout_checking(id: &str, b: usize, check: impl Fn(&str, usize, usize, &EnvS
             }
         }
         for i in 0..b {
-            if env.timestep.step_type[i].is_last() {
+            // Episodes end per slot; agent 0's row carries the step type.
+            if env.timestep.step_type[i * n_agents].is_last() {
                 episodes[i] += 1;
             }
         }

@@ -7,72 +7,86 @@
 use navix::batch::BatchedEnv;
 use navix::core::entities::CellType;
 use navix::core::grid::Pos;
+use navix::core::state::AgentView;
 use navix::core::timestep::StepType;
 use navix::rng::{Key, Rng};
 
 const WALK_STEPS: usize = 300;
 
 fn check_invariants(env: &BatchedEnv, step: usize) {
-    let b = env.b;
+    let (b, a) = (env.b, env.a);
     for i in 0..b {
-        let s = env.state.slot(i);
         let id = &env.cfg.id;
-        // player in bounds, never inside a wall
-        let p = s.player();
-        assert!(p.in_bounds(s.h, s.w), "{id}@{step}: player out of bounds {p:?}");
-        // A door replaces the cell it sits in (MiniGrid semantics), so the
-        // player may legitimately stand on a wall-base cell through an open
-        // door (e.g. GoToDoor's border doors).
-        if s.door_at(p).is_none() {
-            assert_ne!(s.cell(p), CellType::Wall, "{id}@{step}: player inside a wall");
-        }
-        // player never co-located with a blocking entity
-        assert!(s.key_at(p).is_none(), "{id}@{step}: player on a key");
-        assert!(s.box_at(p).is_none(), "{id}@{step}: player on a box");
-        if let Some(d) = s.door_at(p) {
-            assert_eq!(
-                s.door_state[d], 0,
-                "{id}@{step}: player standing in a non-open door"
+        for j in 0..a {
+            let s = env.state.agent_slot(i, j);
+            let row = i * a + j;
+            // agent in bounds, never inside a wall
+            let p = s.player();
+            assert!(p.in_bounds(s.h, s.w), "{id}@{step}: agent {j} out of bounds {p:?}");
+            // A door replaces the cell it sits in (MiniGrid semantics), so
+            // an agent may legitimately stand on a wall-base cell through an
+            // open door (e.g. GoToDoor's border doors).
+            if s.door_at(p).is_none() {
+                assert_ne!(s.cell(p), CellType::Wall, "{id}@{step}: agent {j} inside a wall");
+            }
+            // agent never co-located with a blocking entity or another agent
+            assert!(s.key_at(p).is_none(), "{id}@{step}: agent {j} on a key");
+            assert!(s.box_at(p).is_none(), "{id}@{step}: agent {j} on a box");
+            assert!(
+                s.other_agent_at(p).is_none(),
+                "{id}@{step}: agents share cell {p:?}"
             );
-        }
-        // entity positions in bounds; no two entities share a cell
-        let mut occupied = std::collections::HashSet::new();
-        for (name, arr) in
-            [("door", s.door_pos), ("key", s.key_pos), ("ball", s.ball_pos), ("box", s.box_pos)]
-        {
-            for &enc in arr.iter().filter(|&&x| x >= 0) {
-                let q = Pos::decode(enc, s.w);
-                assert!(q.in_bounds(s.h, s.w), "{id}@{step}: {name} out of bounds");
-                assert!(
-                    occupied.insert(enc),
-                    "{id}@{step}: two entities share cell {q:?}"
+            if let Some(d) = s.door_at(p) {
+                assert_eq!(
+                    s.door_state[d], 0,
+                    "{id}@{step}: agent {j} standing in a non-open door"
                 );
             }
-        }
-        // time consistent with timeout: t can exceed max_steps by at most 0
-        assert!(
-            env.timestep.t[i] <= env.cfg.max_steps,
-            "{id}@{step}: t={} beyond timeout {}",
-            env.timestep.t[i],
-            env.cfg.max_steps
-        );
-        // discount/step_type coherence
-        match env.timestep.step_type[i] {
-            StepType::Terminated => assert_eq!(env.timestep.discount[i], 0.0),
-            StepType::Truncated => assert_eq!(env.timestep.discount[i], 1.0),
-            StepType::First => {
-                assert_eq!(env.timestep.reward[i], 0.0);
-                assert_eq!(env.timestep.action[i], -1);
+            // entity positions in bounds; no two entities share a cell
+            // (slot-level property: checking it once per slot is enough)
+            if j == 0 {
+                let mut occupied = std::collections::HashSet::new();
+                for (name, arr) in [
+                    ("door", s.door_pos),
+                    ("key", s.key_pos),
+                    ("ball", s.ball_pos),
+                    ("box", s.box_pos),
+                ] {
+                    for &enc in arr.iter().filter(|&&x| x >= 0) {
+                        let q = Pos::decode(enc, s.w);
+                        assert!(q.in_bounds(s.h, s.w), "{id}@{step}: {name} out of bounds");
+                        assert!(
+                            occupied.insert(enc),
+                            "{id}@{step}: two entities share cell {q:?}"
+                        );
+                    }
+                }
             }
-            StepType::Mid => {}
+            // time consistent with timeout: t can exceed max_steps by at most 0
+            assert!(
+                env.timestep.t[row] <= env.cfg.max_steps,
+                "{id}@{step}: t={} beyond timeout {}",
+                env.timestep.t[row],
+                env.cfg.max_steps
+            );
+            // discount/step_type coherence
+            match env.timestep.step_type[row] {
+                StepType::Terminated => assert_eq!(env.timestep.discount[row], 0.0),
+                StepType::Truncated => assert_eq!(env.timestep.discount[row], 1.0),
+                StepType::First => {
+                    assert_eq!(env.timestep.reward[row], 0.0);
+                    assert_eq!(env.timestep.action[row], -1);
+                }
+                StepType::Mid => {}
+            }
+            // rewards bounded by the spec (all primitive rewards are in
+            // [-1, 1] and every registered env uses at most 2 primitives)
+            assert!(
+                env.timestep.reward[row].abs() <= 2.0,
+                "{id}@{step}: reward {} out of range",
+                env.timestep.reward[row]
+            );
         }
-        // rewards bounded by the spec (all primitive rewards are in [-1, 1]
-        // and every registered env uses at most 2 primitives)
-        assert!(
-            env.timestep.reward[i].abs() <= 2.0,
-            "{id}@{step}: reward {} out of range",
-            env.timestep.reward[i]
-        );
     }
 }
 
@@ -82,7 +96,8 @@ fn random_walk_invariants_all_envs() {
         let cfg = navix::make(id).unwrap();
         let mut env = BatchedEnv::new(cfg, 4, Key::new(7));
         let mut rng = Rng::new(13);
-        let mut actions = vec![0u8; 4];
+        // [B × A] action matrix — one row per agent (A=1 for classic envs).
+        let mut actions = vec![0u8; env.policy_rows()];
         check_invariants(&env, 0);
         for step in 1..=WALK_STEPS {
             for a in actions.iter_mut() {

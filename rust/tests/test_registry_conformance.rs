@@ -60,7 +60,10 @@ fn every_registered_id_runs_two_episodes_with_bounded_obs() {
 
         let mut episodes = vec![0u32; BATCH];
         let mut rng = Rng::new(13);
-        let mut actions = vec![0u8; BATCH];
+        // [B × A] action matrix: one row per agent (A=1 for classic ids,
+        // A=2 for the Navix-MA-* families).
+        let n_agents = env.a;
+        let mut actions = vec![0u8; env.policy_rows()];
         let step_budget = (EPISODES as usize + 1) * (max_steps + 2);
         let mut steps = 0;
         while episodes.iter().any(|&e| e < EPISODES) && steps < step_budget {
@@ -75,7 +78,8 @@ fn every_registered_id_runs_two_episodes_with_bounded_obs() {
                 check_obs_bounds(id, &env.obs, BATCH, steps);
             }
             for i in 0..BATCH {
-                if env.timestep.step_type[i].is_last() {
+                // Episodes end per slot; agent 0's row carries the step type.
+                if env.timestep.step_type[i * n_agents].is_last() {
                     episodes[i] += 1;
                 }
             }
@@ -118,9 +122,10 @@ fn every_id_is_bitwise_shard_invariant() {
         let cfg = navix::make(id).unwrap();
         let mut single = BatchedEnv::new(cfg.clone(), B, Key::new(77));
         let mut sharded = ShardedEnv::new(cfg, B, 3, 2, Key::new(77));
+        let rows = single.policy_rows(); // B·A agent-rows per step
         let mut rng = Rng::new(3);
         for step in 1..=STEPS {
-            let actions: Vec<u8> = (0..B).map(|_| rng.below(7) as u8).collect();
+            let actions: Vec<u8> = (0..rows).map(|_| rng.below(7) as u8).collect();
             single.step(&actions);
             sharded.step(&actions);
             assert_eq!(

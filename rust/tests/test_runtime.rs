@@ -135,7 +135,7 @@ fn obs_kernel_matches_rust_observations() {
         let p = s.player();
         pos[i * 2] = p.r;
         pos[i * 2 + 1] = p.c;
-        dir[i] = s.player_dir;
+        dir[i] = s.player_dir[0];
     }
     let out = exe
         .run(&[
@@ -203,7 +203,7 @@ fn xla_env_step_matches_rust_engine_trajectory() {
                 (p.r, p.c),
                 "step {step} env {i}: position diverged"
             );
-            assert_eq!(dirv[i], s.player_dir, "step {step} env {i}: direction diverged");
+            assert_eq!(dirv[i], s.player_dir[0], "step {step} env {i}: direction diverged");
             assert_eq!(reward[i], env.timestep.reward[i], "step {step} env {i}: reward");
             assert_eq!(
                 discount[i], env.timestep.discount[i],
