@@ -21,8 +21,8 @@
 //! `--smoke` (or `NAVIX_BENCH_FAST=1`): tiny batch, 1 iteration — the CI
 //! bench-smoke job runs this and uploads `results/BENCH_fig5_sharded.json`.
 
-use navix::batch::{rollout_random_scan, BatchedEnv, ShardedEnv};
-use navix::bench_harness::{stats, Report};
+use navix::batch::{rollout_random_scan, BatchedEnv, FaultPolicy, FaultStats, ShardedEnv};
+use navix::bench_harness::{stats, ChaosInjector, Report};
 use navix::rng::Key;
 use std::time::Instant;
 
@@ -46,13 +46,24 @@ fn main() {
         ],
     );
     report.meta("agents_per_slot", "1,2,4");
+    // Chaos-aware: with NAVIX_CHAOS exported every engine self-arms, so
+    // quarantine the injected faults instead of dying and surface the
+    // injected/recovered counters into the JSON meta block either way
+    // (0/0 on a clean run) — the nightly trend can track recovery
+    // overhead next to the throughput it costs.
+    let chaos_armed = ChaosInjector::from_env().is_some();
+    let mut faults = FaultStats::default();
     for &b in &batches {
         let cfg = navix::make(env_id).unwrap();
 
         let mut single = BatchedEnv::new(cfg.clone(), b, Key::new(0));
+        if chaos_armed {
+            single.supervise(FaultPolicy::QuarantineSlot);
+        }
         let t0 = Instant::now();
         single.rollout_random(steps, 0xAC7);
         let base_secs = t0.elapsed().as_secs_f64();
+        faults.merge(single.fault_stats());
         report.row(&[
             b.to_string(),
             "1".into(),
@@ -67,9 +78,13 @@ fn main() {
 
         // Scan mode, same engine: fused K-step windows through step_n.
         let mut single = BatchedEnv::new(cfg.clone(), b, Key::new(0));
+        if chaos_armed {
+            single.supervise(FaultPolicy::QuarantineSlot);
+        }
         let t0 = Instant::now();
         rollout_random_scan(&mut single, steps, 0xAC7, SCAN_WINDOW);
         let scan_secs = t0.elapsed().as_secs_f64();
+        faults.merge(single.fault_stats());
         report.row(&[
             b.to_string(),
             "1".into(),
@@ -86,9 +101,13 @@ fn main() {
         // smooth load imbalance at the cost of more lock traffic).
         for shards in [threads, 2 * threads] {
             let mut env = ShardedEnv::new(cfg.clone(), b, shards, threads, Key::new(0));
+            if chaos_armed {
+                env.supervise(FaultPolicy::QuarantineSlot);
+            }
             let t0 = Instant::now();
             env.rollout_random(steps, 0xAC7);
             let secs = t0.elapsed().as_secs_f64();
+            faults.merge(env.fault_stats());
             let busy = env.shard_busy_secs();
             report.row(&[
                 b.to_string(),
@@ -105,9 +124,13 @@ fn main() {
             // Same shard geometry, fused windows: one epoch/condvar
             // round-trip per SCAN_WINDOW steps instead of per step.
             let mut env = ShardedEnv::new(cfg.clone(), b, shards, threads, Key::new(0));
+            if chaos_armed {
+                env.supervise(FaultPolicy::QuarantineSlot);
+            }
             let t0 = Instant::now();
             rollout_random_scan(&mut env, steps, 0xAC7, SCAN_WINDOW);
             let secs = t0.elapsed().as_secs_f64();
+            faults.merge(env.fault_stats());
             let busy = env.shard_busy_secs();
             report.row(&[
                 b.to_string(),
@@ -133,9 +156,13 @@ fn main() {
         let cfg = navix::make(env_id).unwrap().with_agents(a);
 
         let mut single = BatchedEnv::new(cfg.clone(), ab, Key::new(0));
+        if chaos_armed {
+            single.supervise(FaultPolicy::QuarantineSlot);
+        }
         let t0 = Instant::now();
         single.rollout_random(steps, 0xAC7);
         let secs = t0.elapsed().as_secs_f64();
+        faults.merge(single.fault_stats());
         if a == 1 {
             a1_secs = secs;
         }
@@ -152,9 +179,13 @@ fn main() {
         ]);
 
         let mut env = ShardedEnv::new(cfg, ab, threads, threads, Key::new(0));
+        if chaos_armed {
+            env.supervise(FaultPolicy::QuarantineSlot);
+        }
         let t0 = Instant::now();
         env.rollout_random(steps, 0xAC7);
         let secs = t0.elapsed().as_secs_f64();
+        faults.merge(env.fault_stats());
         let busy = env.shard_busy_secs();
         report.row(&[
             ab.to_string(),
@@ -168,6 +199,8 @@ fn main() {
             format!("{:.2}", stats::imbalance(&busy)),
         ]);
     }
+    report.meta("faults_injected", &faults.injected.to_string());
+    report.meta("faults_recovered", &faults.recovered.to_string());
     report.save();
     println!("\n(pmap-analog shape: sharded ≈ 1x at tiny batches — the epoch barrier");
     println!(" dominates — and approaches the core count once per-step work amortises");

@@ -28,8 +28,8 @@
 use navix::agents::ppo::{Ppo, PpoConfig, Rollout};
 use navix::agents::{preprocess_obs, ReturnTracker};
 use navix::baseline::AsyncVectorEnv;
-use navix::batch::BatchedEnv;
-use navix::bench_harness::{floors, Report};
+use navix::batch::{BatchedEnv, FaultPolicy, FaultStats};
+use navix::bench_harness::{floors, ChaosInjector, Report};
 use navix::config::ExecConfig;
 use navix::coordinator::multi_agent::{
     train_parallel_ppo, train_parallel_ppo_exec, MultiAgentResult,
@@ -108,9 +108,15 @@ impl TrainReport {
 /// per-horizon path or the per-step oracle loop. Both produce bit-identical
 /// trajectories (`fused_rollout_matches_the_stepwise_oracle`), so the delta
 /// between the two BENCH_train.json rows is pure dispatch overhead.
-fn rollout_sps(env_id: &str, fused: bool, steps: u64) -> f64 {
+fn rollout_sps(env_id: &str, fused: bool, steps: u64, faults: &mut FaultStats) -> f64 {
     let d = navix::agents::OBS_DIM;
     let mut env = BatchedEnv::new(navix::make(env_id).unwrap(), 16, Key::new(0));
+    // With NAVIX_CHAOS exported the engine self-arms its injector:
+    // quarantine the faults so the bench survives and the counters land
+    // in the JSON meta (0/0 on a clean run).
+    if ChaosInjector::from_env().is_some() {
+        env.supervise(FaultPolicy::QuarantineSlot);
+    }
     let mut ppo = Ppo::new(PpoConfig { num_envs: 16, ..PpoConfig::default() }, d, 7, 0);
     let mut ro = Rollout::new(ppo.cfg.rollout_len, 16, d);
     let mut tracker = ReturnTracker::new(64);
@@ -124,7 +130,9 @@ fn rollout_sps(env_id: &str, fused: bool, steps: u64) -> f64 {
             ppo.collect_rollout_stepwise(&mut env, &mut ro, &mut tracker);
         }
     }
-    (iters * per_iter) as f64 / t0.elapsed().as_secs_f64()
+    let sps = (iters * per_iter) as f64 / t0.elapsed().as_secs_f64();
+    faults.merge(env.fault_stats());
+    sps
 }
 
 fn main() {
@@ -155,8 +163,9 @@ fn main() {
     // Scan-vs-stepwise microcomparison rows (collection only, no update).
     // Deliberately NOT routed through train.row: the floor gate judges
     // end-to-end training modes, not this microbenchmark.
+    let mut faults = FaultStats::default();
     for (mode, fused) in [("rollout-scan", true), ("rollout-stepwise", false)] {
-        let sps = rollout_sps(env_id, fused, steps);
+        let sps = rollout_sps(env_id, fused, steps, &mut faults);
         let commit = train.commit.clone();
         train.report.row(&[
             mode.to_string(),
@@ -183,6 +192,8 @@ fn main() {
         train.report.meta("measured", &format!("{:.0}", train.best_sps));
         train.report.meta("floor", &format!("{:.0}", floor.value));
         train.report.meta("floor_source", &floor.source);
+        train.report.meta("faults_injected", &faults.injected.to_string());
+        train.report.meta("faults_recovered", &faults.recovered.to_string());
         train.report.save();
         if train.best_sps < floor.value {
             println!(
@@ -291,7 +302,11 @@ fn main() {
         format!("{:.0}", done_steps as f64 / wall),
         "-".into(),
     ]);
+    report.meta("faults_injected", &faults.injected.to_string());
+    report.meta("faults_recovered", &faults.recovered.to_string());
     report.save();
+    train.report.meta("faults_injected", &faults.injected.to_string());
+    train.report.meta("faults_recovered", &faults.recovered.to_string());
     train.report.save();
     println!("\n(paper §4.2: NAVIX 2048 agents ≈ 670M steps/s vs MiniGrid 3.1K steps/s;");
     println!(" compare the aggregate steps/s column here for the same crossover shape,");

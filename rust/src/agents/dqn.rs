@@ -74,6 +74,19 @@ struct Workspace {
 }
 
 /// Double-DQN agent with target network.
+/// Everything [`Dqn`] needs to resume training bit-identically (the ε
+/// schedule and target-sync cadence live in the counters).
+#[derive(Clone)]
+pub struct DqnCheckpoint {
+    pub q: Mlp,
+    pub q_target: Mlp,
+    pub opt: Adam,
+    pub replay: Replay,
+    pub rng: Rng,
+    pub env_steps: u64,
+    pub updates: u64,
+}
+
 pub struct Dqn {
     pub cfg: DqnConfig,
     pub q: Mlp,
@@ -108,6 +121,34 @@ impl Dqn {
             updates: 0,
             ws: Workspace::default(),
         }
+    }
+
+    /// Capture the agent's full training state: online + target networks,
+    /// Adam moments, the replay buffer contents, the RNG stream and the
+    /// schedule counters. Pair with an engine
+    /// [`crate::core::snapshot::EngineCheckpoint`] to checkpoint a run.
+    pub fn save_state(&self) -> DqnCheckpoint {
+        DqnCheckpoint {
+            q: self.q.clone(),
+            q_target: self.q_target.clone(),
+            opt: self.opt.clone(),
+            replay: self.replay.clone(),
+            rng: self.rng.clone(),
+            env_steps: self.env_steps,
+            updates: self.updates,
+        }
+    }
+
+    /// Restore a state captured by [`Dqn::save_state`]; subsequent
+    /// training replays bit-identically.
+    pub fn restore_state(&mut self, ck: &DqnCheckpoint) {
+        self.q = ck.q.clone();
+        self.q_target = ck.q_target.clone();
+        self.opt = ck.opt.clone();
+        self.replay = ck.replay.clone();
+        self.rng = ck.rng.clone();
+        self.env_steps = ck.env_steps;
+        self.updates = ck.updates;
     }
 
     /// Linear ε schedule: 1.0 → final_eps over exploration_fraction of the

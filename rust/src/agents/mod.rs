@@ -17,9 +17,9 @@ pub mod replay;
 pub mod sac;
 pub mod tuning;
 
-pub use dqn::{Dqn, DqnConfig};
-pub use ppo::{Ppo, PpoConfig};
-pub use sac::{Sac, SacConfig};
+pub use dqn::{Dqn, DqnCheckpoint, DqnConfig};
+pub use ppo::{Ppo, PpoCheckpoint, PpoConfig};
+pub use sac::{Sac, SacCheckpoint, SacConfig};
 
 /// Flattened grid-observation size for a symbolic first-person view.
 pub const GRID_OBS_DIM: usize = 7 * 7 * 3;

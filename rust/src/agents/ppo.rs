@@ -136,6 +136,20 @@ pub struct Ppo {
     ws: Workspace,
 }
 
+/// Everything [`Ppo`] needs to resume training bit-identically: network
+/// weights, both Adam moment vectors, and the agent RNG stream. Pair it
+/// with the engine's [`crate::core::snapshot::EngineCheckpoint`] (and the
+/// caller's [`ReturnTracker`], which is `Clone`) to checkpoint a training
+/// run mid-rollout.
+#[derive(Clone, Debug)]
+pub struct PpoCheckpoint {
+    pub actor: Mlp,
+    pub critic: Mlp,
+    pub actor_opt: Adam,
+    pub critic_opt: Adam,
+    pub rng: Rng,
+}
+
 /// Rollout storage (time-major `[T × B·A]` — one row per agent-row, so a
 /// multi-agent engine's every agent contributes transitions; `b` below is
 /// [`BatchStepper::policy_rows`]).
@@ -671,6 +685,29 @@ impl Ppo {
         }
         log.episodes = tracker.episodes;
         log
+    }
+
+    /// Capture the agent's full training state (weights, optimizer
+    /// moments, RNG stream). Workspaces are scratch and excluded — they
+    /// are rewritten before they are read.
+    pub fn save_state(&self) -> PpoCheckpoint {
+        PpoCheckpoint {
+            actor: self.actor.clone(),
+            critic: self.critic.clone(),
+            actor_opt: self.actor_opt.clone(),
+            critic_opt: self.critic_opt.clone(),
+            rng: self.rng.clone(),
+        }
+    }
+
+    /// Restore a state captured by [`Ppo::save_state`]; subsequent
+    /// rollouts and updates replay bit-identically.
+    pub fn restore_state(&mut self, ck: &PpoCheckpoint) {
+        self.actor = ck.actor.clone();
+        self.critic = ck.critic.clone();
+        self.actor_opt = ck.actor_opt.clone();
+        self.critic_opt = ck.critic_opt.clone();
+        self.rng = ck.rng.clone();
     }
 
     /// Greedy action for env `i` of an observation batch (evaluation).

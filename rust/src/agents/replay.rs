@@ -18,6 +18,7 @@ pub struct Batch {
 }
 
 /// Fixed-capacity ring buffer of transitions.
+#[derive(Clone)]
 pub struct Replay {
     capacity: usize,
     obs_dim: usize,

@@ -85,6 +85,25 @@ struct Workspace {
 }
 
 /// Discrete SAC agent.
+/// Everything [`Sac`] needs to resume training bit-identically: all five
+/// networks, three optimizers, the learned temperature, the replay buffer
+/// and the RNG/step counters.
+#[derive(Clone)]
+pub struct SacCheckpoint {
+    pub actor: Mlp,
+    pub q1: Mlp,
+    pub q2: Mlp,
+    pub q1_target: Mlp,
+    pub q2_target: Mlp,
+    pub actor_opt: Adam,
+    pub q1_opt: Adam,
+    pub q2_opt: Adam,
+    pub log_alpha: f32,
+    pub replay: Replay,
+    pub rng: Rng,
+    pub env_steps: u64,
+}
+
 pub struct Sac {
     pub cfg: SacConfig,
     pub actor: Mlp,
@@ -146,6 +165,42 @@ impl Sac {
 
     pub fn alpha(&self) -> f32 {
         self.log_alpha.exp()
+    }
+
+    /// Capture the agent's full training state. Pair with an engine
+    /// [`crate::core::snapshot::EngineCheckpoint`] to checkpoint a run.
+    pub fn save_state(&self) -> SacCheckpoint {
+        SacCheckpoint {
+            actor: self.actor.clone(),
+            q1: self.q1.clone(),
+            q2: self.q2.clone(),
+            q1_target: self.q1_target.clone(),
+            q2_target: self.q2_target.clone(),
+            actor_opt: self.actor_opt.clone(),
+            q1_opt: self.q1_opt.clone(),
+            q2_opt: self.q2_opt.clone(),
+            log_alpha: self.log_alpha,
+            replay: self.replay.clone(),
+            rng: self.rng.clone(),
+            env_steps: self.env_steps,
+        }
+    }
+
+    /// Restore a state captured by [`Sac::save_state`]; subsequent
+    /// training replays bit-identically.
+    pub fn restore_state(&mut self, ck: &SacCheckpoint) {
+        self.actor = ck.actor.clone();
+        self.q1 = ck.q1.clone();
+        self.q2 = ck.q2.clone();
+        self.q1_target = ck.q1_target.clone();
+        self.q2_target = ck.q2_target.clone();
+        self.actor_opt = ck.actor_opt.clone();
+        self.q1_opt = ck.q1_opt.clone();
+        self.q2_opt = ck.q2_opt.clone();
+        self.log_alpha = ck.log_alpha;
+        self.replay = ck.replay.clone();
+        self.rng = ck.rng.clone();
+        self.env_steps = ck.env_steps;
     }
 
     /// Sample actions for the whole batch from one batched actor forward.

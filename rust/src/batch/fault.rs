@@ -1,0 +1,222 @@
+//! Fault supervision: structured panics, recovery policies, and the
+//! poison-tolerant lock helper the multi-threaded engines share.
+//!
+//! A panic inside a step body (a layout-generator bug, a corrupted action,
+//! an injected chaos fault) is caught at the slot boundary, converted into
+//! an [`EngineFault`] carrying the shard/slot/env/step coordinates plus the
+//! original panic payload, and handled per the configured [`FaultPolicy`]:
+//!
+//! - [`FaultPolicy::Propagate`] — record the fault, then re-raise the
+//!   original payload. The caller still sees the real panic, but the fault
+//!   log pinpoints where it happened (no more anonymous deadlocks).
+//! - [`FaultPolicy::QuarantineSlot`] — roll the faulting slot back to its
+//!   pre-step [`SlotCheckpoint`] (or, for repeated/terminal faults, replace
+//!   the episode via the successor-episode-key reset path, bounded by
+//!   [`Supervisor::max_retries`]), latch `slot_quarantined` on the slot's
+//!   agent rows and zero their rewards. Every other slot steps
+//!   bitwise-unchanged.
+//! - [`FaultPolicy::RestartWorker`] — let the panic kill the worker thread;
+//!   the engine's epoch watchdog reaps the corpse, repairs the torn slot
+//!   from its pre-step snapshot, finishes the dead worker's remaining work
+//!   inline and respawns a replacement.
+
+use std::any::Any;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+use crate::core::snapshot::SlotCheckpoint;
+
+/// What to do when a step body panics. See the module docs for semantics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultPolicy {
+    /// Record the fault, then re-raise the original panic payload.
+    Propagate,
+    /// Restore the faulting slot (snapshot first, then successor-key
+    /// resets) and keep going; all other slots are untouched.
+    QuarantineSlot,
+    /// Let the panic kill the owning worker thread; the engine reaps,
+    /// repairs and respawns. Only meaningful on `ShardedEnv` — the
+    /// single-threaded engine treats it like snapshot-armed `Propagate`.
+    RestartWorker,
+}
+
+/// A structured record of one caught panic.
+#[derive(Clone, Debug)]
+pub struct EngineFault {
+    /// Shard that hosted the fault (`None` outside `ShardedEnv`).
+    pub shard: Option<usize>,
+    /// Global slot index (`None` when the panic tore down a whole worker
+    /// before the slot could be identified).
+    pub slot: Option<usize>,
+    /// Environment id of the faulting engine.
+    pub env_id: String,
+    /// Engine step counter at the time of the fault.
+    pub step: u64,
+    /// The original panic payload, rendered to a string.
+    pub payload: String,
+}
+
+impl EngineFault {
+    /// Was this fault injected by the chaos harness (payload convention:
+    /// every injected panic message starts with `"chaos:"`)?
+    pub fn is_chaos(&self) -> bool {
+        self.payload.starts_with("chaos:")
+    }
+}
+
+impl std::fmt::Display for EngineFault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "engine fault in {}", self.env_id)?;
+        if let Some(s) = self.shard {
+            write!(f, " shard {s}")?;
+        }
+        if let Some(i) = self.slot {
+            write!(f, " slot {i}")?;
+        }
+        write!(f, " at step {}: {}", self.step, self.payload)
+    }
+}
+
+/// Injected/recovered counters surfaced into the `BENCH_*.json` meta block
+/// so the nightly trend workflow can track recovery overhead.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Faults fired by the chaos harness ([`EngineFault::is_chaos`]).
+    pub injected: u64,
+    /// Faults recovered without surfacing to the caller (quarantines,
+    /// worker restarts).
+    pub recovered: u64,
+}
+
+impl FaultStats {
+    pub fn merge(&mut self, other: FaultStats) {
+        self.injected += other.injected;
+        self.recovered += other.recovered;
+    }
+}
+
+/// Render a caught panic payload (`Box<dyn Any>`) to a string: `&str` and
+/// `String` payloads verbatim, anything else a placeholder.
+pub fn payload_to_string(payload: &(dyn Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".to_string()
+    }
+}
+
+/// Lock a mutex, recovering the guard if a previous holder panicked.
+///
+/// A panic inside a lock scope poisons the `Mutex`; the stock
+/// `lock().unwrap()` then converts every *subsequent* access into a
+/// secondary `PoisonError` panic that hides the original fault. The
+/// supervision layer catches the original panic at the slot boundary and
+/// keeps slot state transactional via snapshots, so the data under a
+/// poisoned lock is either untouched or about to be restored — recovering
+/// the guard is safe and keeps the first fault the only story.
+pub fn lock_recover<T: ?Sized>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Run `f`, catching an unwind and rendering its payload. The
+/// `AssertUnwindSafe` is justified the same way `lock_recover` is: the
+/// supervision layer restores any slot a caught panic may have torn.
+pub fn catch_fault<R>(f: impl FnOnce() -> R) -> Result<R, Box<dyn Any + Send>> {
+    catch_unwind(AssertUnwindSafe(f))
+}
+
+/// Per-engine supervision state: the policy, the fault log, and the
+/// per-slot pre-step snapshots + bookkeeping the recovery paths use.
+#[derive(Debug)]
+pub struct Supervisor {
+    pub policy: FaultPolicy,
+    /// Bound on consecutive successor-key reset attempts while
+    /// quarantining one slot (the escalation ladder: snapshot restore
+    /// first, then up to `max_retries` fresh episodes, then re-raise).
+    pub max_retries: u32,
+    /// Every fault seen, in order.
+    pub faults: Vec<EngineFault>,
+    /// Faults recovered in-place (quarantine restores/resets, torn-slot
+    /// repairs).
+    pub recovered: u64,
+    /// Pre-step checkpoint per slot, stamped with the `step_count` it was
+    /// taken at (a repair must not restore a snapshot from an older step).
+    pub pre_step: Vec<Option<(u64, SlotCheckpoint)>>,
+    /// Last step each slot *completed* (`stamp[i] == step_count` ⇔ slot
+    /// `i` finished the current step) — the torn-slot repair ledger.
+    pub stamp: Vec<u64>,
+    /// Consecutive faults per slot (reset to 0 by a clean step).
+    pub consecutive: Vec<u32>,
+}
+
+impl Supervisor {
+    pub fn new(policy: FaultPolicy, b: usize) -> Supervisor {
+        Supervisor {
+            policy,
+            max_retries: 3,
+            faults: Vec::new(),
+            recovered: 0,
+            pre_step: vec![None; b],
+            stamp: vec![0; b],
+            consecutive: vec![0; b],
+        }
+    }
+
+    /// Does this policy keep pre-step snapshots? (`Propagate` re-raises,
+    /// so paying the snapshot copy would buy nothing.)
+    pub fn snapshotting(&self) -> bool {
+        self.policy != FaultPolicy::Propagate
+    }
+
+    /// Does this policy catch panics at the slot boundary?
+    /// (`RestartWorker` deliberately lets them unwind into the worker.)
+    pub fn catching(&self) -> bool {
+        self.policy != FaultPolicy::RestartWorker
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lock_recover_survives_a_poisoned_mutex() {
+        let m = std::sync::Arc::new(Mutex::new(7u32));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.lock().is_err(), "mutex must actually be poisoned");
+        assert_eq!(*lock_recover(&m), 7, "guard recovered, data intact");
+    }
+
+    #[test]
+    fn payloads_render_and_chaos_faults_are_tagged() {
+        let err = catch_fault(|| panic!("chaos: injected panic in slot 3")).unwrap_err();
+        let fault = EngineFault {
+            shard: Some(1),
+            slot: Some(3),
+            env_id: "Navix-Empty-5x5-v0".into(),
+            step: 17,
+            payload: payload_to_string(&*err),
+        };
+        assert!(fault.is_chaos());
+        let msg = format!("{fault}");
+        assert!(msg.contains("shard 1") && msg.contains("slot 3") && msg.contains("step 17"));
+        let owned = catch_fault(|| panic!("{}", String::from("boom"))).unwrap_err();
+        assert_eq!(payload_to_string(&*owned), "boom");
+    }
+
+    #[test]
+    fn supervisor_policy_switches() {
+        assert!(Supervisor::new(FaultPolicy::QuarantineSlot, 2).snapshotting());
+        assert!(Supervisor::new(FaultPolicy::QuarantineSlot, 2).catching());
+        assert!(!Supervisor::new(FaultPolicy::Propagate, 2).snapshotting());
+        assert!(!Supervisor::new(FaultPolicy::RestartWorker, 2).catching());
+        assert!(Supervisor::new(FaultPolicy::RestartWorker, 2).snapshotting());
+    }
+}

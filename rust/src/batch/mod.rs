@@ -65,20 +65,25 @@
 //! whose per-tile cache only advances on blit, so the final frame renders
 //! exactly the tiles that changed since the last materialised one.
 
+pub mod fault;
 pub mod pipeline;
 pub mod sharded;
 
+pub use fault::{EngineFault, FaultPolicy, FaultStats};
 pub use pipeline::PipelinedEnv;
 pub use sharded::ShardedEnv;
 
 use std::sync::Arc;
 
+use crate::bench_harness::chaos::{ChaosInjector, ChaosKind};
 use crate::core::actions::Action;
 use crate::core::mission::MISSION_DIM;
+use crate::core::snapshot::{EngineCheckpoint, SlotCheckpoint, SlotSnapshot};
 use crate::core::state::{cellcode, BatchedState};
 use crate::core::timestep::{BatchedTimestep, StepType};
 use crate::envs::EnvConfig;
 use crate::rng::Key;
+use fault::{catch_fault, payload_to_string, Supervisor};
 use crate::systems::intervention::intervene;
 use crate::systems::observations::{rgb_incremental, ObsKind, ObsPath};
 use crate::systems::sprites::SpriteSheet;
@@ -411,6 +416,15 @@ pub struct BatchedEnv {
     index_offset: usize,
     /// Per-env episode counter: episode key = key ⊕ global index ⊕ count.
     reset_counts: Vec<u64>,
+    /// Engine steps taken since construction/restore (the chaos injector's
+    /// clock, and the stamp the torn-slot repair ledger compares against).
+    step_count: u64,
+    /// Fault supervision, armed by [`BatchedEnv::supervise`]. `None` keeps
+    /// the historic unguarded fast path.
+    supervisor: Option<Supervisor>,
+    /// Deterministic fault injector, armed by [`BatchedEnv::arm_chaos`] or
+    /// the `NAVIX_CHAOS` environment variable.
+    chaos: Option<ChaosInjector>,
 }
 
 impl BatchedEnv {
@@ -452,6 +466,12 @@ impl BatchedEnv {
             key,
             index_offset,
             reset_counts: vec![0; b],
+            step_count: 0,
+            supervisor: None,
+            // Every constructor checks NAVIX_CHAOS, so shard/pipeline inner
+            // engines inherit injection with zero plumbing (slots are
+            // addressed globally via index_offset).
+            chaos: ChaosInjector::from_env(),
         };
         env.reset_all();
         env
@@ -534,20 +554,211 @@ impl BatchedEnv {
     /// skipping writes nobody reads is exact, including dirty-tile rgb
     /// whose cache only advances on blit).
     fn step_impl(&mut self, actions: &[u8], write_obs: bool) {
-        let a = self.a;
-        debug_assert_eq!(actions.len(), self.b * a);
-        for i in 0..self.b {
-            // All of a slot's agent-rows share one step_type, so row i·A
-            // speaks for the slot.
-            if self.timestep.step_type[i * a].is_last() {
-                self.reset_one(i);
-            } else {
-                self.step_one(i, &actions[i * a..(i + 1) * a]);
+        debug_assert_eq!(actions.len(), self.b * self.a);
+        self.step_count += 1;
+        if self.supervisor.is_some() || self.chaos.is_some() {
+            for i in 0..self.b {
+                self.step_slot_guarded(i, actions, write_obs);
             }
-            if write_obs {
-                self.write_obs(i);
+        } else {
+            for i in 0..self.b {
+                self.step_slot_body(i, actions, write_obs);
             }
         }
+    }
+
+    /// The plain per-slot step: autoreset a terminal slot, step a live one,
+    /// optionally materialise its observations.
+    #[inline]
+    fn step_slot_body(&mut self, i: usize, actions: &[u8], write_obs: bool) {
+        let a = self.a;
+        // All of a slot's agent-rows share one step_type, so row i·A
+        // speaks for the slot.
+        if self.timestep.step_type[i * a].is_last() {
+            self.reset_one(i);
+        } else {
+            self.step_one(i, &actions[i * a..(i + 1) * a]);
+        }
+        if write_obs {
+            self.write_obs(i);
+        }
+    }
+
+    /// The guarded step body: fire any chaos fault due at this (slot, step)
+    /// coordinate, validate action bytes, then run the plain slot body.
+    /// Out-of-range action bytes are tolerated (wrapped mod
+    /// [`Action::N`]) on the fast path; under supervision/chaos they
+    /// become a structured panic instead of being silently remapped.
+    fn step_slot_checked(&mut self, i: usize, actions: &[u8], write_obs: bool) {
+        let a = self.a;
+        let global = self.index_offset + i;
+        let step = self.step_count;
+        let slot_acts = &actions[i * a..(i + 1) * a];
+        let mut corrupted: Option<Vec<u8>> = None;
+        if let Some(kind) = self.chaos.as_mut().and_then(|c| c.check(global, step)) {
+            match kind {
+                ChaosKind::Panic => {
+                    panic!("chaos: injected panic in slot {global} at step {step}")
+                }
+                ChaosKind::PoisonRng => {
+                    // Scramble real state before panicking, so recovery has
+                    // to repair the slot, not merely resume it.
+                    self.state.rng[i] ^= 0x9E37_79B9_7F4A_7C15;
+                    panic!("chaos: poisoned rng draw in slot {global} at step {step}")
+                }
+                ChaosKind::BadAction => {
+                    let mut row = slot_acts.to_vec();
+                    row[0] = 255;
+                    corrupted = Some(row);
+                }
+            }
+        }
+        let acts: &[u8] = corrupted.as_deref().unwrap_or(slot_acts);
+        for (j, &act) in acts.iter().enumerate() {
+            if act as usize >= Action::N {
+                let tag = if corrupted.is_some() { "chaos: " } else { "" };
+                panic!(
+                    "{tag}out-of-range action {act} for agent {j} in slot {global} \
+                     at step {step} (valid: 0..{})",
+                    Action::N
+                );
+            }
+        }
+        if self.timestep.step_type[i * a].is_last() {
+            self.reset_one(i);
+        } else {
+            self.step_one(i, acts);
+        }
+        if write_obs {
+            self.write_obs(i);
+        }
+    }
+
+    /// Supervised per-slot step: take the pre-step snapshot (for policies
+    /// that can roll back), run the checked body behind `catch_unwind`
+    /// (unless the policy wants panics to unwind into the worker), and
+    /// dispatch any caught fault to the policy handler.
+    fn step_slot_guarded(&mut self, i: usize, actions: &[u8], write_obs: bool) {
+        if self.supervisor.as_ref().is_some_and(Supervisor::snapshotting) {
+            let ck = self.snapshot_slot(i);
+            let sc = self.step_count;
+            if let Some(sup) = self.supervisor.as_mut() {
+                sup.pre_step[i] = Some((sc, ck));
+            }
+        }
+        let catching = self.supervisor.as_ref().is_some_and(Supervisor::catching);
+        if !catching {
+            // Chaos without supervision, or RestartWorker: the panic
+            // unwinds out of `step` (killing a ShardedEnv worker); the
+            // snapshot + stamp ledger above is what
+            // `recover_interrupted_step` repairs from.
+            self.step_slot_checked(i, actions, write_obs);
+            if let Some(sup) = self.supervisor.as_mut() {
+                sup.stamp[i] = self.step_count;
+                sup.consecutive[i] = 0;
+            }
+            return;
+        }
+        let res = {
+            let this = &mut *self;
+            catch_fault(move || this.step_slot_checked(i, actions, write_obs))
+        };
+        match res {
+            Ok(()) => {
+                if let Some(sup) = self.supervisor.as_mut() {
+                    sup.stamp[i] = self.step_count;
+                    sup.consecutive[i] = 0;
+                }
+            }
+            Err(payload) => self.handle_slot_fault(i, payload, write_obs),
+        }
+    }
+
+    /// Record a caught slot panic as an [`EngineFault`], then apply the
+    /// policy: re-raise ([`FaultPolicy::Propagate`]) or quarantine.
+    fn handle_slot_fault(
+        &mut self,
+        i: usize,
+        payload: Box<dyn std::any::Any + Send>,
+        write_obs: bool,
+    ) {
+        let fault = EngineFault {
+            shard: None,
+            slot: Some(self.index_offset + i),
+            env_id: self.cfg.id.clone(),
+            step: self.step_count,
+            payload: payload_to_string(&*payload),
+        };
+        let sup = self.supervisor.as_mut().expect("slot faults are only caught under supervision");
+        sup.faults.push(fault);
+        if sup.policy == FaultPolicy::Propagate {
+            std::panic::resume_unwind(payload);
+        }
+        self.quarantine_slot(i, payload, write_obs);
+    }
+
+    /// The quarantine ladder: on the first consecutive fault, roll the slot
+    /// back to its pre-step snapshot (a no-op transition: same state, zero
+    /// reward, `slot_quarantined` latched); on repeated faults — or when
+    /// the interrupted episode was already terminal — replace the episode
+    /// via up to `max_retries` successor-episode-key resets (the same
+    /// retry path layout generation uses); re-raise when exhausted.
+    fn quarantine_slot(
+        &mut self,
+        i: usize,
+        mut payload: Box<dyn std::any::Any + Send>,
+        write_obs: bool,
+    ) {
+        let a = self.a;
+        let sc = self.step_count;
+        let sup = self.supervisor.as_mut().expect("quarantine requires a supervisor");
+        sup.consecutive[i] += 1;
+        let max_retries = sup.max_retries;
+        if sup.consecutive[i] == 1 {
+            if let Some((stamp, ck)) = sup.pre_step[i].take() {
+                // Only a snapshot from *this* step's pre-state is a valid
+                // rollback target, and only while its episode is live — a
+                // terminal pre-step must autoreset, so fall through to the
+                // reset arm instead of resurrecting a finished episode.
+                if stamp == sc && !ck.ts_step_type[0].is_last() {
+                    self.restore_slot_impl(i, &ck, write_obs);
+                    for r in i * a..(i + 1) * a {
+                        // A quarantined step is a no-op transition: no
+                        // action took effect and no reward accrues
+                        // (episodic_return stays at the snapshot's value).
+                        self.timestep.action[r] = -1;
+                        self.timestep.reward[r] = 0.0;
+                        self.state.events[r].slot_quarantined = true;
+                    }
+                    let sup = self.supervisor.as_mut().unwrap();
+                    sup.recovered += 1;
+                    sup.stamp[i] = sc;
+                    return;
+                }
+            }
+        }
+        for _ in 0..max_retries {
+            let res = {
+                let this = &mut *self;
+                catch_fault(move || this.reset_one(i))
+            };
+            match res {
+                Ok(()) => {
+                    for r in i * a..(i + 1) * a {
+                        self.state.events[r].slot_quarantined = true;
+                    }
+                    if write_obs {
+                        self.write_obs(i);
+                    }
+                    let sup = self.supervisor.as_mut().unwrap();
+                    sup.recovered += 1;
+                    sup.stamp[i] = sc;
+                    return;
+                }
+                Err(p) => payload = p,
+            }
+        }
+        std::panic::resume_unwind(payload)
     }
 
     /// Fused K-step window — the scan-mode core every engine builds on.
@@ -662,6 +873,152 @@ impl BatchedEnv {
         }
     }
 
+    /// Arm fault supervision with `policy`. Safe to call again to switch
+    /// policies; the fault log carries over.
+    pub fn supervise(&mut self, policy: FaultPolicy) {
+        match self.supervisor.as_mut() {
+            Some(sup) => sup.policy = policy,
+            None => self.supervisor = Some(Supervisor::new(policy, self.b)),
+        }
+    }
+
+    /// Arm (or replace) the deterministic chaos injector.
+    pub fn arm_chaos(&mut self, injector: ChaosInjector) {
+        self.chaos = Some(injector);
+    }
+
+    /// Every fault caught so far, in order.
+    pub fn fault_log(&self) -> Vec<EngineFault> {
+        self.supervisor.as_ref().map(|s| s.faults.clone()).unwrap_or_default()
+    }
+
+    /// Injected/recovered counters for the bench meta block.
+    pub fn fault_stats(&self) -> FaultStats {
+        FaultStats {
+            injected: self.chaos.as_ref().map(|c| c.fired_count()).unwrap_or(0),
+            recovered: self.supervisor.as_ref().map(|s| s.recovered).unwrap_or(0),
+        }
+    }
+
+    /// Engine steps taken since construction (or the last checkpoint
+    /// restore).
+    pub fn step_count(&self) -> u64 {
+        self.step_count
+    }
+
+    /// Capture slot `i`: full SoA state + reset counter + the slot's `[A]`
+    /// timestep rows — everything a mid-rollout resume needs.
+    pub fn snapshot_slot(&self, i: usize) -> SlotCheckpoint {
+        let a = self.a;
+        let rows = i * a..(i + 1) * a;
+        SlotCheckpoint {
+            state: SlotSnapshot::capture(&self.state, i),
+            reset_count: self.reset_counts[i],
+            ts_t: self.timestep.t[rows.clone()].to_vec(),
+            ts_action: self.timestep.action[rows.clone()].to_vec(),
+            ts_reward: self.timestep.reward[rows.clone()].to_vec(),
+            ts_discount: self.timestep.discount[rows.clone()].to_vec(),
+            ts_step_type: self.timestep.step_type[rows.clone()].to_vec(),
+            ts_episodic_return: self.timestep.episodic_return[rows].to_vec(),
+        }
+    }
+
+    /// Restore slot `i` from a checkpoint taken on the same configuration
+    /// and rewrite its observations. Every other slot is untouched.
+    pub fn restore_slot(&mut self, i: usize, ck: &SlotCheckpoint) {
+        self.restore_slot_impl(i, ck, true);
+    }
+
+    fn restore_slot_impl(&mut self, i: usize, ck: &SlotCheckpoint, write_obs: bool) {
+        let a = self.a;
+        ck.state.restore(&mut self.state, i);
+        self.reset_counts[i] = ck.reset_count;
+        let rows = i * a..(i + 1) * a;
+        self.timestep.t[rows.clone()].copy_from_slice(&ck.ts_t);
+        self.timestep.action[rows.clone()].copy_from_slice(&ck.ts_action);
+        self.timestep.reward[rows.clone()].copy_from_slice(&ck.ts_reward);
+        self.timestep.discount[rows.clone()].copy_from_slice(&ck.ts_discount);
+        self.timestep.step_type[rows.clone()].copy_from_slice(&ck.ts_step_type);
+        self.timestep.episodic_return[rows].copy_from_slice(&ck.ts_episodic_return);
+        // The rgb dirty-tile cache describes what the obs *buffer* shows,
+        // which a state restore does not change — the next blit diffs the
+        // restored state against it and repaints exactly the stale tiles.
+        if write_obs {
+            self.write_obs(i);
+        }
+    }
+
+    /// Checkpoint the whole engine: all `B` slots, the RNG identity and
+    /// the step counter.
+    pub fn save_checkpoint(&self) -> EngineCheckpoint {
+        EngineCheckpoint {
+            b: self.b,
+            a: self.a,
+            root_key: self.key.0,
+            step_count: self.step_count,
+            slots: (0..self.b).map(|i| self.snapshot_slot(i)).collect(),
+        }
+    }
+
+    /// Restore a checkpoint taken by [`BatchedEnv::save_checkpoint`] on an
+    /// engine with the same shape and root key (asserted — episode keys
+    /// fold the root key in, so resuming under a different key could not
+    /// be bit-identical).
+    pub fn restore_checkpoint(&mut self, ck: &EngineCheckpoint) {
+        assert_eq!((ck.b, ck.a), (self.b, self.a), "checkpoint shape mismatch");
+        assert_eq!(
+            ck.root_key, self.key.0,
+            "checkpoint was taken under a different root key"
+        );
+        self.step_count = ck.step_count;
+        for (i, slot) in ck.slots.iter().enumerate() {
+            self.restore_slot(i, slot);
+        }
+    }
+
+    /// Repair after a [`FaultPolicy::RestartWorker`] panic unwound out of
+    /// [`BatchedEnv::step`] mid-iteration, then finish the step. Slots
+    /// stamped with the current step already completed and stay untouched;
+    /// the torn slot rolls back to the pre-step snapshot its interrupted
+    /// step took and re-steps (chaos specs are one-shot, so a transient
+    /// fault replays cleanly — bitwise identical to the fault-free step);
+    /// a slot that faults *again* is quarantined. `actions` must be the
+    /// same `[B × A]` matrix the interrupted step was given.
+    pub fn recover_interrupted_step(&mut self, actions: &[u8], write_obs: bool) {
+        let sc = self.step_count;
+        assert!(
+            self.supervisor.as_ref().is_some_and(Supervisor::snapshotting),
+            "recover_interrupted_step requires a snapshotting fault policy"
+        );
+        for i in 0..self.b {
+            let sup = self.supervisor.as_ref().unwrap();
+            if sup.stamp[i] == sc {
+                continue;
+            }
+            let torn = matches!(&sup.pre_step[i], Some((stamp, _)) if *stamp == sc);
+            if torn {
+                let (_, ck) = self.supervisor.as_mut().unwrap().pre_step[i].take().unwrap();
+                self.restore_slot_impl(i, &ck, false);
+                self.supervisor.as_mut().unwrap().pre_step[i] = Some((sc, ck));
+            }
+            let res = {
+                let this = &mut *self;
+                catch_fault(move || this.step_slot_checked(i, actions, write_obs))
+            };
+            match res {
+                Ok(()) => {
+                    let sup = self.supervisor.as_mut().unwrap();
+                    sup.stamp[i] = sc;
+                    sup.consecutive[i] = 0;
+                    if torn {
+                        sup.recovered += 1;
+                    }
+                }
+                Err(payload) => self.handle_slot_fault(i, payload, write_obs),
+            }
+        }
+    }
+
     /// Convenience: run `steps` lockstep iterations with uniformly random
     /// actions. Returns total env-steps executed (`b × steps`). Used by the
     /// throughput benches (paper Figs. 4/5/8).
@@ -746,6 +1103,37 @@ pub trait BatchStepper {
     fn num_actions(&self) -> usize {
         Action::N
     }
+
+    /// Checkpoint the engine: all `B` slots + RNG identity + step
+    /// counters, sufficient to resume bit-identically on a fresh engine of
+    /// the same configuration. `&mut self` because the pipelined engine
+    /// round-trips the request through its stepper thread. Engines without
+    /// snapshot support keep this default.
+    fn save_checkpoint(&mut self) -> EngineCheckpoint {
+        unimplemented!("this BatchStepper does not support checkpoint/restore")
+    }
+
+    /// Restore a checkpoint taken by [`BatchStepper::save_checkpoint`] on
+    /// an engine of the same configuration (asserts on mismatch).
+    fn restore_checkpoint(&mut self, _ck: &EngineCheckpoint) {
+        unimplemented!("this BatchStepper does not support checkpoint/restore")
+    }
+
+    /// Arm fault supervision with `policy` (see [`FaultPolicy`]).
+    fn supervise(&mut self, _policy: FaultPolicy) {
+        unimplemented!("this BatchStepper does not support fault supervision")
+    }
+
+    /// Every fault the engine has caught so far. `&mut self` for the same
+    /// round-trip reason as [`BatchStepper::save_checkpoint`].
+    fn fault_log(&mut self) -> Vec<EngineFault> {
+        Vec::new()
+    }
+
+    /// Injected/recovered fault counters (the `BENCH_*.json` meta block).
+    fn fault_stats(&mut self) -> FaultStats {
+        FaultStats::default()
+    }
 }
 
 /// Fused-window variant of the engines' `rollout_random`: the **same**
@@ -804,6 +1192,26 @@ impl BatchStepper for BatchedEnv {
 
     fn step_n(&mut self, plan: ActionPlan<'_>, k: usize, traj: &mut TrajectorySlice) {
         BatchedEnv::step_n(self, plan, k, traj);
+    }
+
+    fn save_checkpoint(&mut self) -> EngineCheckpoint {
+        BatchedEnv::save_checkpoint(self)
+    }
+
+    fn restore_checkpoint(&mut self, ck: &EngineCheckpoint) {
+        BatchedEnv::restore_checkpoint(self, ck);
+    }
+
+    fn supervise(&mut self, policy: FaultPolicy) {
+        BatchedEnv::supervise(self, policy);
+    }
+
+    fn fault_log(&mut self) -> Vec<EngineFault> {
+        BatchedEnv::fault_log(self)
+    }
+
+    fn fault_stats(&mut self) -> FaultStats {
+        BatchedEnv::fault_stats(self)
     }
 }
 

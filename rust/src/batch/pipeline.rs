@@ -29,14 +29,24 @@
 //! across env families, and [`crate::coordinator::multi_agent`] pins the
 //! full training curve.
 
-use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
+use crate::batch::fault::lock_recover;
 use crate::batch::{
-    ActionPlan, BatchStepper, BatchedEnv, ObsBatch, ObsCapture, TrajectorySlice,
+    ActionPlan, BatchStepper, BatchedEnv, EngineFault, FaultPolicy, FaultStats, ObsBatch,
+    ObsCapture, TrajectorySlice,
 };
 use crate::core::actions::Action;
+use crate::core::snapshot::EngineCheckpoint;
 use crate::core::timestep::BatchedTimestep;
+
+/// Default stall watchdog: how long [`PipelinedEnv::sync`] waits for a
+/// live stepper thread before declaring it stalled. Overridable per
+/// instance ([`PipelinedEnv::set_watchdog_secs`]) or process-wide via the
+/// `NAVIX_PIPE_WATCHDOG_SECS` environment variable.
+const DEFAULT_WATCHDOG: Duration = Duration::from_secs(120);
 
 /// What one epoch asks the stepper thread to do.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -47,6 +57,14 @@ enum Cmd {
     /// chunk across in one swap.
     StepN,
     ResetAll,
+    /// Checkpoint the owned engine into [`PipeState::checkpoint`].
+    Save,
+    /// Restore the owned engine from [`PipeState::checkpoint`].
+    Restore,
+    /// Arm the owned engine with [`PipeState::policy`].
+    Supervise,
+    /// Copy the owned engine's fault log/stats into the shared state.
+    TakeFaults,
 }
 
 /// State shared with the stepper thread. The back buffer lives here; the
@@ -69,6 +87,14 @@ struct PipeState {
     /// in, the caller's sync swaps it out — whole-window hand-off with no
     /// copies on the learner side.
     back_traj: TrajectorySlice,
+    /// Checkpoint hand-off cell for [`Cmd::Save`]/[`Cmd::Restore`].
+    checkpoint: Option<EngineCheckpoint>,
+    /// Policy shipped by a [`Cmd::Supervise`] round-trip.
+    policy: FaultPolicy,
+    /// Fault log copied out by the last [`Cmd::TakeFaults`] round-trip.
+    fault_log: Vec<EngineFault>,
+    /// Fault stats copied out by the last [`Cmd::TakeFaults`] round-trip.
+    fault_stats: FaultStats,
     shutdown: bool,
 }
 
@@ -94,6 +120,9 @@ pub struct PipelinedEnv {
     worker: Option<JoinHandle<()>>,
     /// Epoch of the submit we have not yet synced (0 = none in flight).
     in_flight: Option<u64>,
+    /// Stall watchdog: how long to wait for a live stepper thread before
+    /// panicking with a "stalled at step N" diagnosis.
+    watchdog: Duration,
 }
 
 impl PipelinedEnv {
@@ -117,6 +146,10 @@ impl PipelinedEnv {
                 back_ts: front_ts.clone(),
                 back_obs: front_obs.clone(),
                 back_traj: TrajectorySlice::new(ObsCapture::Final),
+                checkpoint: None,
+                policy: FaultPolicy::Propagate,
+                fault_log: Vec::new(),
+                fault_stats: FaultStats::default(),
                 shutdown: false,
             }),
             start: Condvar::new(),
@@ -126,7 +159,30 @@ impl PipelinedEnv {
             let control = Arc::clone(&control);
             std::thread::spawn(move || stepper_loop(env, control))
         };
-        PipelinedEnv { b, a, front_ts, front_obs, control, worker: Some(worker), in_flight: None }
+        let watchdog = std::env::var("NAVIX_PIPE_WATCHDOG_SECS")
+            .ok()
+            .and_then(|s| s.trim().parse::<f64>().ok())
+            .filter(|&s| s > 0.0)
+            .map(Duration::from_secs_f64)
+            .unwrap_or(DEFAULT_WATCHDOG);
+        PipelinedEnv {
+            b,
+            a,
+            front_ts,
+            front_obs,
+            control,
+            worker: Some(worker),
+            in_flight: None,
+            watchdog,
+        }
+    }
+
+    /// Override the stall watchdog (seconds). A sync that waits longer
+    /// than this on a *live* stepper thread panics with a "stalled at
+    /// step N" diagnosis instead of hanging forever.
+    pub fn set_watchdog_secs(&mut self, secs: f64) {
+        assert!(secs > 0.0, "watchdog must be positive");
+        self.watchdog = Duration::from_secs_f64(secs);
     }
 
     /// Number of parallel environments.
@@ -156,7 +212,7 @@ impl PipelinedEnv {
     pub fn submit(&mut self, actions: &[u8]) {
         debug_assert_eq!(actions.len(), self.b * self.a);
         assert!(self.in_flight.is_none(), "PipelinedEnv::submit with a step already in flight");
-        let mut st = self.control.state.lock().unwrap();
+        let mut st = lock_recover(&self.control.state);
         st.actions.copy_from_slice(actions);
         st.cmd = Cmd::Step;
         st.epoch += 1;
@@ -174,7 +230,7 @@ impl PipelinedEnv {
     /// key, …) rather than a generic "thread died" message.
     pub fn sync(&mut self) {
         let Some(epoch) = self.in_flight.take() else { return };
-        let mut st = wait_completed(&self.control, &mut self.worker, epoch);
+        let mut st = wait_completed(&self.control, &mut self.worker, epoch, self.watchdog);
         std::mem::swap(&mut self.front_ts, &mut st.back_ts);
         std::mem::swap(&mut self.front_obs, &mut st.back_obs);
     }
@@ -198,7 +254,7 @@ impl PipelinedEnv {
                     "PipelinedEnv::step_n with a step already in flight"
                 );
                 let epoch = {
-                    let mut st = self.control.state.lock().unwrap();
+                    let mut st = lock_recover(&self.control.state);
                     st.plan.resize(k * rows, 0);
                     st.plan.copy_from_slice(actions);
                     st.chunk_len = k;
@@ -208,7 +264,7 @@ impl PipelinedEnv {
                     self.control.start.notify_one();
                     st.epoch
                 };
-                let mut st = wait_completed(&self.control, &mut self.worker, epoch);
+                let mut st = wait_completed(&self.control, &mut self.worker, epoch, self.watchdog);
                 std::mem::swap(traj, &mut st.back_traj);
                 std::mem::swap(&mut self.front_ts, &mut st.back_ts);
                 std::mem::swap(&mut self.front_obs, &mut st.back_obs);
@@ -240,16 +296,61 @@ impl PipelinedEnv {
 
     /// Reset every environment (fresh episode keys), synchronously.
     pub fn reset_all(&mut self) {
-        assert!(self.in_flight.is_none(), "PipelinedEnv::reset_all with a step in flight");
-        let epoch = {
-            let mut st = self.control.state.lock().unwrap();
-            st.cmd = Cmd::ResetAll;
-            st.epoch += 1;
-            self.control.start.notify_one();
-            st.epoch
-        };
+        let epoch = self.control_cmd(Cmd::ResetAll);
         self.in_flight = Some(epoch);
         self.sync();
+    }
+
+    /// Publish a control command epoch to the stepper thread.
+    fn control_cmd(&mut self, cmd: Cmd) -> u64 {
+        assert!(
+            self.in_flight.is_none(),
+            "PipelinedEnv control command ({cmd:?}) with a step in flight"
+        );
+        let mut st = lock_recover(&self.control.state);
+        st.cmd = cmd;
+        st.epoch += 1;
+        self.control.start.notify_one();
+        st.epoch
+    }
+
+    /// Checkpoint the owned engine (round-trips through the stepper
+    /// thread, so it can run between any two steps of a rollout).
+    pub fn save_checkpoint(&mut self) -> EngineCheckpoint {
+        let epoch = self.control_cmd(Cmd::Save);
+        let mut st = wait_completed(&self.control, &mut self.worker, epoch, self.watchdog);
+        st.checkpoint.take().expect("stepper thread did not produce a checkpoint")
+    }
+
+    /// Restore the owned engine from `ck` and refresh the front buffers
+    /// with the restored timestep/observations.
+    pub fn restore_checkpoint(&mut self, ck: &EngineCheckpoint) {
+        lock_recover(&self.control.state).checkpoint = Some(ck.clone());
+        let epoch = self.control_cmd(Cmd::Restore);
+        let mut st = wait_completed(&self.control, &mut self.worker, epoch, self.watchdog);
+        std::mem::swap(&mut self.front_ts, &mut st.back_ts);
+        std::mem::swap(&mut self.front_obs, &mut st.back_obs);
+    }
+
+    /// Arm fault supervision on the owned engine.
+    pub fn supervise(&mut self, policy: FaultPolicy) {
+        lock_recover(&self.control.state).policy = policy;
+        let epoch = self.control_cmd(Cmd::Supervise);
+        let _ = wait_completed(&self.control, &mut self.worker, epoch, self.watchdog);
+    }
+
+    /// The owned engine's fault log (round-trip; see [`EngineFault`]).
+    pub fn fault_log(&mut self) -> Vec<EngineFault> {
+        let epoch = self.control_cmd(Cmd::TakeFaults);
+        let mut st = wait_completed(&self.control, &mut self.worker, epoch, self.watchdog);
+        std::mem::take(&mut st.fault_log)
+    }
+
+    /// The owned engine's injected/recovered counters (round-trip).
+    pub fn fault_stats(&mut self) -> FaultStats {
+        let epoch = self.control_cmd(Cmd::TakeFaults);
+        let st = wait_completed(&self.control, &mut self.worker, epoch, self.watchdog);
+        st.fault_stats
     }
 
     /// Convenience constructor over the single-threaded engine.
@@ -261,7 +362,7 @@ impl PipelinedEnv {
 impl Drop for PipelinedEnv {
     fn drop(&mut self) {
         {
-            let mut st = self.control.state.lock().unwrap();
+            let mut st = lock_recover(&self.control.state);
             st.shutdown = true;
             self.control.start.notify_one();
         }
@@ -299,6 +400,26 @@ impl BatchStepper for PipelinedEnv {
     fn step_n(&mut self, plan: ActionPlan<'_>, k: usize, traj: &mut TrajectorySlice) {
         PipelinedEnv::step_n(self, plan, k, traj);
     }
+
+    fn save_checkpoint(&mut self) -> EngineCheckpoint {
+        PipelinedEnv::save_checkpoint(self)
+    }
+
+    fn restore_checkpoint(&mut self, ck: &EngineCheckpoint) {
+        PipelinedEnv::restore_checkpoint(self, ck);
+    }
+
+    fn supervise(&mut self, policy: FaultPolicy) {
+        PipelinedEnv::supervise(self, policy);
+    }
+
+    fn fault_log(&mut self) -> Vec<EngineFault> {
+        PipelinedEnv::fault_log(self)
+    }
+
+    fn fault_stats(&mut self) -> FaultStats {
+        PipelinedEnv::fault_stats(self)
+    }
 }
 
 /// Block until the stepper thread completes `epoch`, returning the state
@@ -307,21 +428,27 @@ impl BatchStepper for PipelinedEnv {
 /// so it cannot poison the lock and must be detected by liveness — the
 /// worker's own panic payload is reclaimed from its `JoinHandle` and
 /// re-raised here, so the caller sees the root cause (env id, failing
-/// key, …) rather than a generic "thread died" message.
+/// key, …) rather than a generic "thread died" message. A thread that is
+/// still *alive* but has not completed within `watchdog` trips a "stalled
+/// at step N" panic instead of hanging the caller forever.
 fn wait_completed<'c>(
     control: &'c Control,
     worker: &mut Option<JoinHandle<()>>,
     epoch: u64,
+    watchdog: Duration,
 ) -> MutexGuard<'c, PipeState> {
-    let mut st = control.state.lock().unwrap();
+    let deadline = Instant::now() + watchdog;
+    let mut st = lock_recover(&control.state);
     while st.completed < epoch {
-        let (next, timeout) =
-            control.done.wait_timeout(st, std::time::Duration::from_millis(100)).unwrap();
+        let (next, timeout) = control
+            .done
+            .wait_timeout(st, Duration::from_millis(100))
+            .unwrap_or_else(PoisonError::into_inner);
         st = next;
-        if timeout.timed_out()
-            && st.completed < epoch
-            && worker.as_ref().map_or(true, |w| w.is_finished())
-        {
+        if !timeout.timed_out() || st.completed >= epoch {
+            continue;
+        }
+        if worker.as_ref().map_or(true, |w| w.is_finished()) {
             drop(st); // release before joining; nothing else holds it
             match worker.take().map(JoinHandle::join) {
                 Some(Err(payload)) => std::panic::resume_unwind(payload),
@@ -330,6 +457,15 @@ fn wait_completed<'c>(
                      epoch {epoch} (and without panicking)"
                 ),
             }
+        }
+        if Instant::now() >= deadline {
+            drop(st);
+            panic!(
+                "PipelinedEnv stepper thread stalled at step {epoch}: no completion \
+                 within {watchdog:?} (thread alive but not progressing; raise the \
+                 limit via set_watchdog_secs or NAVIX_PIPE_WATCHDOG_SECS if steps \
+                 legitimately take this long)"
+            );
         }
     }
     st
@@ -348,7 +484,7 @@ fn stepper_loop(mut env: Box<dyn BatchStepper + Send>, control: Arc<Control>) {
     let mut traj = TrajectorySlice::new(ObsCapture::Final);
     loop {
         let (cmd, k) = {
-            let mut st = control.state.lock().unwrap();
+            let mut st = lock_recover(&control.state);
             loop {
                 if st.shutdown {
                     return;
@@ -356,7 +492,7 @@ fn stepper_loop(mut env: Box<dyn BatchStepper + Send>, control: Arc<Control>) {
                 if st.epoch != seen {
                     break;
                 }
-                st = control.start.wait(st).unwrap();
+                st = control.start.wait(st).unwrap_or_else(PoisonError::into_inner);
             }
             seen = st.epoch;
             match st.cmd {
@@ -366,18 +502,39 @@ fn stepper_loop(mut env: Box<dyn BatchStepper + Send>, control: Arc<Control>) {
                     traj.capture = st.capture;
                     (Cmd::StepN, st.chunk_len)
                 }
-                cmd => {
+                Cmd::Step => {
                     actions.copy_from_slice(&st.actions);
-                    (cmd, 0)
+                    (Cmd::Step, 0)
                 }
+                cmd => (cmd, 0),
             }
         };
         match cmd {
             Cmd::Step => env.step(&actions),
             Cmd::StepN => env.step_n(ActionPlan::Fixed(&plan), k, &mut traj),
             Cmd::ResetAll => env.reset_all(),
+            // Control commands run their engine work under the lock below
+            // — they are rare and cheap, and the hand-off cell lives in
+            // the shared state.
+            Cmd::Save | Cmd::Restore | Cmd::Supervise | Cmd::TakeFaults => {}
         }
-        let mut st = control.state.lock().unwrap();
+        let mut st = lock_recover(&control.state);
+        match cmd {
+            Cmd::Save => st.checkpoint = Some(env.save_checkpoint()),
+            Cmd::Restore => {
+                let ck = st.checkpoint.take().expect("Cmd::Restore without a checkpoint");
+                env.restore_checkpoint(&ck);
+            }
+            Cmd::Supervise => {
+                let policy = st.policy;
+                env.supervise(policy);
+            }
+            Cmd::TakeFaults => {
+                st.fault_log = env.fault_log();
+                st.fault_stats = env.fault_stats();
+            }
+            _ => {}
+        }
         let ts = env.timestep();
         st.back_ts.t.copy_from_slice(&ts.t);
         st.back_ts.action.copy_from_slice(&ts.action);
@@ -506,6 +663,77 @@ mod tests {
             &self.obs
         }
         fn reset_all(&mut self) {}
+    }
+
+    /// A stepper whose first step blocks long enough to trip a short
+    /// watchdog (the thread stays alive — the stall path, not the death
+    /// path).
+    struct Stalling {
+        ts: BatchedTimestep,
+        obs: ObsBatch,
+    }
+
+    impl BatchStepper for Stalling {
+        fn batch_size(&self) -> usize {
+            1
+        }
+        fn step(&mut self, _actions: &[u8]) {
+            std::thread::sleep(Duration::from_millis(800));
+        }
+        fn timestep(&self) -> &BatchedTimestep {
+            &self.ts
+        }
+        fn obs(&self) -> &ObsBatch {
+            &self.obs
+        }
+        fn reset_all(&mut self) {}
+    }
+
+    #[test]
+    fn watchdog_reports_a_stalled_stepper_thread() {
+        let env = Stalling { ts: BatchedTimestep::first(1), obs: ObsBatch::alloc(false, 1, 4) };
+        let mut p = PipelinedEnv::new(Box::new(env));
+        p.set_watchdog_secs(0.05);
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| p.step(&[0])))
+            .expect_err("the watchdog must trip");
+        let msg = err
+            .downcast_ref::<&str>()
+            .map(|s| s.to_string())
+            .or_else(|| err.downcast_ref::<String>().cloned())
+            .unwrap_or_default();
+        assert!(
+            msg.contains("stalled at step 1"),
+            "watchdog must name the stalled step, got: {msg:?}"
+        );
+        // Drop still shuts the (slow, but alive) thread down cleanly.
+    }
+
+    #[test]
+    fn checkpoint_round_trips_through_the_stepper_thread() {
+        let cfg = make("Navix-Empty-Random-6x6").unwrap();
+        let mut p = PipelinedEnv::over_batched(BatchedEnv::new(cfg, 5, Key::new(9)));
+        let mut rng = Rng::new(31);
+        let step_batch = |p: &mut PipelinedEnv, rng: &mut Rng| {
+            let actions: Vec<u8> = (0..5).map(|_| rng.below(7) as u8).collect();
+            p.step(&actions);
+        };
+        for _ in 0..25 {
+            step_batch(&mut p, &mut rng);
+        }
+        let ck = p.save_checkpoint();
+        let mut replay = Rng::new(77);
+        let mut seen: Vec<(Vec<f32>, Vec<i32>)> = Vec::new();
+        for _ in 0..25 {
+            step_batch(&mut p, &mut replay);
+            seen.push((p.timestep().reward.clone(), p.obs().env_i32(5, 0).to_vec()));
+        }
+        p.restore_checkpoint(&ck);
+        let mut replay = Rng::new(77);
+        for expect in &seen {
+            step_batch(&mut p, &mut replay);
+            assert_eq!(&p.timestep().reward, &expect.0);
+            assert_eq!(p.obs().env_i32(5, 0), &expect.1[..]);
+        }
     }
 
     #[test]

@@ -19,6 +19,24 @@
 //! `OnceLock`), so sharded rgb runs no longer pay per-shard sheet
 //! construction or memory.
 //!
+//! ## Fault tolerance
+//!
+//! Every lock acquisition goes through [`lock_recover`], so a panic can
+//! poison a `Mutex` without turning every later access into a secondary
+//! `PoisonError` panic. Workers execute each shard command behind
+//! `catch_unwind` (except under [`FaultPolicy::RestartWorker`], which
+//! *wants* the panic to kill the worker): a caught panic is recorded as a
+//! structured [`EngineFault`] and the epoch still completes, so
+//! [`ShardedEnv::run_epoch`] re-raises a diagnosable fault instead of
+//! deadlocking on a done-count that can never be reached. A worker that
+//! dies anyway is detected by the epoch watchdog (`wait_timeout` +
+//! `JoinHandle::is_finished`), its panic payload joined and re-raised as an
+//! [`EngineFault`] — and under `RestartWorker` the dead worker's shards are
+//! repaired inline (torn slots roll back to their pre-step snapshots via
+//! [`BatchedEnv::recover_interrupted_step`]) and a replacement worker is
+//! spawned. Under [`FaultPolicy::QuarantineSlot`] the inner engines absorb
+//! faults at the slot boundary, so the pool never even sees them.
+//!
 //! ## Determinism
 //!
 //! Stepping is **bit-identical** to the single-threaded [`BatchedEnv`] for
@@ -28,15 +46,19 @@
 //! and the module docs of [`crate::batch`]). The integration test
 //! `rust/tests/test_sharded_determinism.rs` pins this for `S ∈ {1, 2, 7}`.
 
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
+use crate::batch::fault::{catch_fault, lock_recover, payload_to_string};
 use crate::batch::{
-    ActionPlan, BatchStepper, BatchedEnv, ObsBatch, ObsCapture, ObsData, TrajectorySlice,
+    ActionPlan, BatchStepper, BatchedEnv, EngineFault, FaultPolicy, FaultStats, ObsBatch,
+    ObsCapture, ObsData, TrajectorySlice,
 };
+use crate::bench_harness::chaos::ChaosInjector;
 use crate::core::actions::Action;
 use crate::core::mission::MISSION_DIM;
+use crate::core::snapshot::EngineCheckpoint;
 use crate::core::timestep::BatchedTimestep;
 use crate::envs::EnvConfig;
 use crate::rng::Key;
@@ -54,6 +76,10 @@ struct Shard {
     traj: TrajectorySlice,
     /// Cumulative busy wall-time spent stepping/resetting this shard.
     busy_secs: f64,
+    /// Last epoch whose command finished on this shard — the repair path's
+    /// ledger for telling a completed shard from one a dying worker never
+    /// reached (or tore mid-command).
+    done_epoch: u64,
 }
 
 /// What an epoch asks the workers to do.
@@ -71,6 +97,14 @@ struct PoolState {
     cmd: Cmd,
     done_workers: usize,
     shutdown: bool,
+    /// Active fault policy (workers read it per epoch).
+    policy: FaultPolicy,
+    /// Faults caught during the current epoch (drained by `run_epoch`).
+    epoch_faults: Vec<EngineFault>,
+    /// Every pool-level fault ever seen (worker catches + dead workers).
+    fault_history: Vec<EngineFault>,
+    /// Workers reaped and respawned under `RestartWorker`.
+    workers_restarted: u64,
 }
 
 struct Control {
@@ -100,6 +134,11 @@ pub struct ShardedEnv {
     control: Arc<Control>,
     workers: Vec<JoinHandle<()>>,
     obs_stride: usize,
+    /// Cumulative engine steps dispatched (1 per `Step` epoch, K per fused
+    /// window) — what every shard engine's `step_count` should read after
+    /// a completed epoch; the repair path uses it to tell "never started"
+    /// from "torn mid-step".
+    steps_dispatched: u64,
 }
 
 impl ShardedEnv {
@@ -133,6 +172,7 @@ impl ShardedEnv {
                 plan: Vec::new(),
                 traj: TrajectorySlice::new(ObsCapture::Final),
                 busy_secs: 0.0,
+                done_epoch: 0,
             })));
         }
 
@@ -144,6 +184,10 @@ impl ShardedEnv {
                 cmd: Cmd::Step,
                 done_workers: 0,
                 shutdown: false,
+                policy: FaultPolicy::Propagate,
+                epoch_faults: Vec::new(),
+                fault_history: Vec::new(),
+                workers_restarted: 0,
             }),
             start: Condvar::new(),
             done: Condvar::new(),
@@ -154,10 +198,8 @@ impl ShardedEnv {
         // within a shard while load spreads across workers.
         let workers = (0..num_threads)
             .map(|w| {
-                let mine: Vec<Arc<Mutex<Shard>>> =
-                    shards.iter().skip(w).step_by(num_threads).cloned().collect();
-                let control = Arc::clone(&control);
-                std::thread::spawn(move || worker_loop(mine, control, num_threads))
+                let mine = owned_shards(&shards, w, num_threads);
+                spawn_worker(mine, Arc::clone(&control), num_threads, 0)
             })
             .collect();
 
@@ -174,6 +216,7 @@ impl ShardedEnv {
             control,
             workers,
             obs_stride,
+            steps_dispatched: 0,
         };
         env.gather(); // expose the construction-time reset observations
         env
@@ -192,8 +235,9 @@ impl ShardedEnv {
         let a = self.a;
         debug_assert_eq!(actions.len(), self.b * a);
         for (shard, &(lo, hi)) in self.shards.iter().zip(&self.bounds) {
-            shard.lock().unwrap().actions.copy_from_slice(&actions[lo * a..hi * a]);
+            lock_recover(shard).actions.copy_from_slice(&actions[lo * a..hi * a]);
         }
+        self.steps_dispatched += 1;
         self.run_epoch(Cmd::Step);
         self.gather();
     }
@@ -212,6 +256,9 @@ impl ShardedEnv {
     /// gathers the trajectory chunks afterwards. Provider plans need the
     /// full gathered observation batch before every step, so they fall
     /// back to one epoch per step (still recording into `traj`).
+    /// Under [`FaultPolicy::RestartWorker`] Fixed plans also run one epoch
+    /// per step — worker-death repair is step-granular, so the fused
+    /// window's latency win is traded for restartability.
     /// Bit-identical to `k` calls of [`ShardedEnv::step`] either way.
     pub fn step_n(&mut self, plan: ActionPlan<'_>, k: usize, traj: &mut TrajectorySlice) {
         let a = self.a;
@@ -220,10 +267,20 @@ impl ShardedEnv {
         match plan {
             ActionPlan::Fixed(actions) => {
                 assert_eq!(actions.len(), k * rows, "Fixed plan must be [K × B·A]");
+                if lock_recover(&self.control.state).policy == FaultPolicy::RestartWorker {
+                    for t in 0..k {
+                        self.step(&actions[t * rows..(t + 1) * rows]);
+                        traj.record_row(t, &self.timestep);
+                        if traj.capture == ObsCapture::All {
+                            traj.capture_obs_row(t, &self.obs);
+                        }
+                    }
+                    return;
+                }
                 // Scatter: per-shard time-major plan chunks, capture mode
                 // forwarded so workers allocate nothing mid-epoch.
                 for (shard, &(lo, hi)) in self.shards.iter().zip(&self.bounds) {
-                    let mut sh = shard.lock().unwrap();
+                    let mut sh = lock_recover(shard);
                     let bs = (hi - lo) * a;
                     sh.plan.resize(k * bs, 0);
                     for t in 0..k {
@@ -232,6 +289,7 @@ impl ShardedEnv {
                     }
                     sh.traj.capture = traj.capture;
                 }
+                self.steps_dispatched += k as u64;
                 self.run_epoch(Cmd::StepN(k));
                 self.gather_traj(k, traj);
                 self.gather();
@@ -258,7 +316,7 @@ impl ShardedEnv {
         let a = self.a;
         let rows = self.b * a;
         for (shard, &(lo, hi)) in self.shards.iter().zip(&self.bounds) {
-            let sh = shard.lock().unwrap();
+            let sh = lock_recover(shard);
             let (lo, hi) = (lo * a, hi * a);
             let bs = hi - lo;
             for t in 0..k {
@@ -315,7 +373,7 @@ impl ShardedEnv {
     /// Cumulative per-shard busy seconds since construction (the fig5
     /// sharded bench reports max/mean as the load-imbalance ratio).
     pub fn shard_busy_secs(&self) -> Vec<f64> {
-        self.shards.iter().map(|s| s.lock().unwrap().busy_secs).collect()
+        self.shards.iter().map(|s| lock_recover(s).busy_secs).collect()
     }
 
     /// Global `[lo, hi)` env ranges of each shard.
@@ -325,24 +383,210 @@ impl ShardedEnv {
 
     /// Inspect one shard's engine under its lock (debugging/tests).
     pub fn with_shard<R>(&self, s: usize, f: impl FnOnce(&BatchedEnv) -> R) -> R {
-        let shard = self.shards[s].lock().unwrap();
+        let shard = lock_recover(&self.shards[s]);
         f(&shard.env)
+    }
+
+    /// Arm fault supervision: the pool records `policy`, and every shard
+    /// engine is supervised with it (so faults are caught — or, under
+    /// [`FaultPolicy::RestartWorker`], snapshotted for repair — at the
+    /// slot boundary).
+    pub fn supervise(&mut self, policy: FaultPolicy) {
+        lock_recover(&self.control.state).policy = policy;
+        for shard in &self.shards {
+            lock_recover(shard).env.supervise(policy);
+        }
+    }
+
+    /// Arm the same chaos injector on every shard engine. Specs address
+    /// slots globally, so exactly the shard owning a spec's slot fires it.
+    pub fn arm_chaos(&mut self, injector: ChaosInjector) {
+        for shard in &self.shards {
+            lock_recover(shard).env.arm_chaos(injector.clone());
+        }
+    }
+
+    /// Every fault seen so far: pool-level records (worker catches, dead
+    /// workers) followed by each shard engine's own log.
+    pub fn fault_log(&self) -> Vec<EngineFault> {
+        let mut log = lock_recover(&self.control.state).fault_history.clone();
+        for shard in &self.shards {
+            log.extend(lock_recover(shard).env.fault_log());
+        }
+        log
+    }
+
+    /// Injected/recovered counters summed over shards, plus one recovery
+    /// per restarted worker.
+    pub fn fault_stats(&self) -> FaultStats {
+        let mut stats = FaultStats::default();
+        for shard in &self.shards {
+            stats.merge(lock_recover(shard).env.fault_stats());
+        }
+        stats.recovered += lock_recover(&self.control.state).workers_restarted;
+        stats
+    }
+
+    /// Checkpoint all `B` slots (global order), the RNG identity and the
+    /// step counter.
+    pub fn save_checkpoint(&self) -> EngineCheckpoint {
+        let mut slots = Vec::with_capacity(self.b);
+        let mut root_key = 0;
+        let mut step_count = 0;
+        for shard in &self.shards {
+            let sh = lock_recover(shard);
+            let ck = sh.env.save_checkpoint();
+            root_key = ck.root_key;
+            step_count = ck.step_count;
+            slots.extend(ck.slots);
+        }
+        EngineCheckpoint { b: self.b, a: self.a, root_key, step_count, slots }
+    }
+
+    /// Restore a checkpoint taken by any engine of the same configuration
+    /// (shard layout does not matter — slots are global).
+    pub fn restore_checkpoint(&mut self, ck: &EngineCheckpoint) {
+        assert_eq!((ck.b, ck.a), (self.b, self.a), "checkpoint shape mismatch");
+        for (shard, &(lo, hi)) in self.shards.iter().zip(&self.bounds) {
+            let mut sh = lock_recover(shard);
+            let sub = EngineCheckpoint {
+                b: hi - lo,
+                a: ck.a,
+                root_key: ck.root_key,
+                step_count: ck.step_count,
+                slots: ck.slots[lo..hi].to_vec(),
+            };
+            sh.env.restore_checkpoint(&sub);
+        }
+        self.steps_dispatched = ck.step_count;
+        self.gather();
     }
 
     /// Publish one epoch of work and block until every worker finished it.
     /// The epoch counter (not the notification) is the wait condition, so
-    /// wakeups can never be missed.
-    fn run_epoch(&self, cmd: Cmd) {
-        {
-            let mut st = self.control.state.lock().unwrap();
+    /// wakeups can never be missed; a `wait_timeout` watchdog scans for
+    /// dead workers, so a dying worker yields a diagnosable
+    /// [`EngineFault`] (or, under [`FaultPolicy::RestartWorker`], an
+    /// inline repair + respawn) instead of a done-count that never
+    /// arrives.
+    fn run_epoch(&mut self, cmd: Cmd) {
+        let epoch = {
+            let mut st = lock_recover(&self.control.state);
             st.cmd = cmd;
             st.done_workers = 0;
             st.epoch += 1;
+            st.epoch_faults.clear();
             self.control.start.notify_all();
-        }
-        let mut st = self.control.state.lock().unwrap();
+            st.epoch
+        };
+        let mut st = lock_recover(&self.control.state);
         while st.done_workers < self.num_threads {
-            st = self.control.done.wait(st).unwrap();
+            let (guard, timeout) = self
+                .control
+                .done
+                .wait_timeout(st, Duration::from_millis(50))
+                .unwrap_or_else(PoisonError::into_inner);
+            st = guard;
+            if !timeout.timed_out() {
+                continue;
+            }
+            // Workers only exit on shutdown — a finished handle mid-epoch
+            // is a corpse.
+            let dead: Vec<usize> =
+                (0..self.workers.len()).filter(|&w| self.workers[w].is_finished()).collect();
+            if dead.is_empty() {
+                continue;
+            }
+            let policy = st.policy;
+            drop(st);
+            for w in dead {
+                self.reap_worker(w, epoch, cmd, policy);
+            }
+            st = lock_recover(&self.control.state);
+        }
+        // Faults the workers caught this epoch (inner supervision either
+        // re-raised on purpose — Propagate — or could not absorb them):
+        // surface the first one as a panic that names shard/slot/env/step.
+        if !st.epoch_faults.is_empty() {
+            let faults = std::mem::take(&mut st.epoch_faults);
+            let first = faults[0].clone();
+            st.fault_history.extend(faults);
+            drop(st);
+            panic!("{first}");
+        }
+    }
+
+    /// A worker died mid-epoch: join it, record the fault, and — under
+    /// [`FaultPolicy::RestartWorker`] — repair its unfinished shards
+    /// inline, spawn a replacement and count the epoch as done on its
+    /// behalf. Any other policy re-raises the fault (workers catch panics
+    /// under those policies, so death means something went badly wrong).
+    fn reap_worker(&mut self, w: usize, epoch: u64, cmd: Cmd, policy: FaultPolicy) {
+        let replacement = spawn_worker(
+            owned_shards(&self.shards, w, self.num_threads),
+            Arc::clone(&self.control),
+            self.num_threads,
+            // The replacement must not re-execute the current epoch — the
+            // repair below completes it inline.
+            epoch,
+        );
+        let corpse = std::mem::replace(&mut self.workers[w], replacement);
+        let payload_str = match corpse.join() {
+            Err(payload) => payload_to_string(&*payload),
+            Ok(()) => "<worker exited without panicking>".to_string(),
+        };
+        let fault = EngineFault {
+            shard: None,
+            slot: None,
+            env_id: self.cfg.id.clone(),
+            step: self.steps_dispatched,
+            payload: payload_str,
+        };
+        lock_recover(&self.control.state).fault_history.push(fault.clone());
+        if policy != FaultPolicy::RestartWorker {
+            panic!("worker {w} died: {fault}");
+        }
+        for (idx, shard) in owned_shards(&self.shards, w, self.num_threads) {
+            let mut sh = lock_recover(&shard);
+            if sh.done_epoch == epoch {
+                continue;
+            }
+            match cmd {
+                Cmd::Step => {
+                    let Shard { env, actions, .. } = &mut *sh;
+                    if env.step_count() < self.steps_dispatched {
+                        // The worker died before reaching this shard: run
+                        // the step normally — catching, because the fault
+                        // (e.g. a pending chaos spec) may live here.
+                        if catch_fault(|| env.step(actions)).is_err() {
+                            env.recover_interrupted_step(actions, true);
+                        }
+                    } else {
+                        // Torn mid-step: roll the faulting slot back to its
+                        // pre-step snapshot and finish the remaining slots.
+                        env.recover_interrupted_step(actions, true);
+                    }
+                }
+                Cmd::ResetAll => {
+                    // Resets draw no chaos; a mid-reset death is a real
+                    // layout bug, and re-running the whole shard reset
+                    // lands every slot on deterministic successor keys.
+                    sh.env.reset_all();
+                }
+                Cmd::StepN(_) => {
+                    // step_n degrades Fixed plans to per-step epochs under
+                    // RestartWorker, so a fused window can never be the
+                    // command a restartable worker died in.
+                    unreachable!("fused windows are not dispatched under RestartWorker (shard {idx})")
+                }
+            }
+            sh.done_epoch = epoch;
+        }
+        let mut st = lock_recover(&self.control.state);
+        st.workers_restarted += 1;
+        st.done_workers += 1; // the epoch's work is done, just not by the corpse
+        if st.done_workers == self.num_threads {
+            self.control.done.notify_one();
         }
     }
 
@@ -352,7 +596,7 @@ impl ShardedEnv {
     fn gather(&mut self) {
         let a = self.a;
         for (shard, &(lo, hi)) in self.shards.iter().zip(&self.bounds) {
-            let sh = shard.lock().unwrap();
+            let sh = lock_recover(shard);
             let (lo, hi) = (lo * a, hi * a);
             let ts = &sh.env.timestep;
             self.timestep.t[lo..hi].copy_from_slice(&ts.t);
@@ -380,7 +624,7 @@ impl ShardedEnv {
 impl Drop for ShardedEnv {
     fn drop(&mut self) {
         {
-            let mut st = self.control.state.lock().unwrap();
+            let mut st = lock_recover(&self.control.state);
             st.shutdown = true;
             self.control.start.notify_all();
         }
@@ -418,15 +662,70 @@ impl BatchStepper for ShardedEnv {
     fn step_n(&mut self, plan: ActionPlan<'_>, k: usize, traj: &mut TrajectorySlice) {
         ShardedEnv::step_n(self, plan, k, traj);
     }
+
+    fn save_checkpoint(&mut self) -> EngineCheckpoint {
+        ShardedEnv::save_checkpoint(self)
+    }
+
+    fn restore_checkpoint(&mut self, ck: &EngineCheckpoint) {
+        ShardedEnv::restore_checkpoint(self, ck);
+    }
+
+    fn supervise(&mut self, policy: FaultPolicy) {
+        ShardedEnv::supervise(self, policy);
+    }
+
+    fn fault_log(&mut self) -> Vec<EngineFault> {
+        ShardedEnv::fault_log(self)
+    }
+
+    fn fault_stats(&mut self) -> FaultStats {
+        ShardedEnv::fault_stats(self)
+    }
+}
+
+/// The (global index, shard) pairs worker `w` owns under the round-robin
+/// assignment — shared by construction, respawn and inline repair so the
+/// three can never disagree about ownership.
+fn owned_shards(
+    shards: &[Arc<Mutex<Shard>>],
+    w: usize,
+    num_threads: usize,
+) -> Vec<(usize, Arc<Mutex<Shard>>)> {
+    shards
+        .iter()
+        .enumerate()
+        .skip(w)
+        .step_by(num_threads)
+        .map(|(i, s)| (i, Arc::clone(s)))
+        .collect()
+}
+
+fn spawn_worker(
+    mine: Vec<(usize, Arc<Mutex<Shard>>)>,
+    control: Arc<Control>,
+    total_workers: usize,
+    start_epoch: u64,
+) -> JoinHandle<()> {
+    std::thread::spawn(move || worker_loop(mine, control, total_workers, start_epoch))
 }
 
 /// Worker body: wait for a new epoch, execute the command over the owned
-/// shards (timing each), report completion. Exits on shutdown.
-fn worker_loop(mine: Vec<Arc<Mutex<Shard>>>, control: Arc<Control>, total_workers: usize) {
-    let mut seen_epoch = 0u64;
+/// shards (timing each), report completion. Exits on shutdown. Unless the
+/// policy is [`FaultPolicy::RestartWorker`] (which wants the panic to kill
+/// the thread), each shard command runs behind `catch_unwind`: the fault
+/// is recorded and the done-count still advances, so the caller gets a
+/// structured panic instead of a hang.
+fn worker_loop(
+    mine: Vec<(usize, Arc<Mutex<Shard>>)>,
+    control: Arc<Control>,
+    total_workers: usize,
+    start_epoch: u64,
+) {
+    let mut seen_epoch = start_epoch;
     loop {
-        let cmd = {
-            let mut st = control.state.lock().unwrap();
+        let (cmd, policy) = {
+            let mut st = lock_recover(&control.state);
             loop {
                 if st.shutdown {
                     return;
@@ -434,30 +733,55 @@ fn worker_loop(mine: Vec<Arc<Mutex<Shard>>>, control: Arc<Control>, total_worker
                 if st.epoch != seen_epoch {
                     break;
                 }
-                st = control.start.wait(st).unwrap();
+                st = control.start.wait(st).unwrap_or_else(PoisonError::into_inner);
             }
             seen_epoch = st.epoch;
-            st.cmd
+            (st.cmd, st.policy)
         };
-        for shard in &mine {
-            let mut sh = shard.lock().unwrap();
+        let mut caught: Vec<EngineFault> = Vec::new();
+        for (idx, shard) in &mine {
+            let mut sh = lock_recover(shard);
             let t0 = Instant::now();
-            match cmd {
+            let run = |sh: &mut Shard| match cmd {
                 Cmd::Step => {
-                    let Shard { env, actions, .. } = &mut *sh;
+                    let Shard { env, actions, .. } = sh;
                     env.step(actions);
                 }
                 Cmd::StepN(k) => {
                     // The fused window: all K steps run here with the
                     // shard's state hot, no sync until the window ends.
-                    let Shard { env, plan, traj, .. } = &mut *sh;
+                    let Shard { env, plan, traj, .. } = sh;
                     env.step_n(ActionPlan::Fixed(plan), k, traj);
                 }
                 Cmd::ResetAll => sh.env.reset_all(),
+            };
+            if policy == FaultPolicy::RestartWorker {
+                // No catch: a panic unwinds out of the thread (poisoning
+                // the shard lock — recovered by `lock_recover`) and the
+                // epoch watchdog takes over.
+                run(&mut sh);
+            } else if let Err(payload) = catch_fault(|| run(&mut sh)) {
+                // Prefer the shard engine's own record (it knows the
+                // slot); fall back to a synthesized one.
+                let fault = match sh.env.fault_log().last() {
+                    Some(f) if f.step == sh.env.step_count() => {
+                        EngineFault { shard: Some(*idx), ..f.clone() }
+                    }
+                    _ => EngineFault {
+                        shard: Some(*idx),
+                        slot: None,
+                        env_id: sh.env.cfg.id.clone(),
+                        step: sh.env.step_count(),
+                        payload: payload_to_string(&*payload),
+                    },
+                };
+                caught.push(fault);
             }
+            sh.done_epoch = seen_epoch;
             sh.busy_secs += t0.elapsed().as_secs_f64();
         }
-        let mut st = control.state.lock().unwrap();
+        let mut st = lock_recover(&control.state);
+        st.epoch_faults.append(&mut caught);
         st.done_workers += 1;
         if st.done_workers == total_workers {
             control.done.notify_one();
@@ -576,6 +900,37 @@ mod tests {
             assert_eq!(fused.timestep.t, stepwise.timestep.t);
             for i in 0..10 {
                 assert_eq!(fused.obs.env_i32(10, i), stepwise.obs.env_i32(10, i));
+            }
+        }
+    }
+
+    #[test]
+    fn checkpoint_round_trips_across_shard_layouts() {
+        let cfg = make("Navix-Empty-Random-6x6").unwrap();
+        let mut sharded = ShardedEnv::new(cfg.clone(), 9, 3, 2, Key::new(8));
+        let mut rng = Rng::new(21);
+        let mut actions = vec![0u8; 9];
+        for _ in 0..40 {
+            for a in actions.iter_mut() {
+                *a = rng.below(7) as u8;
+            }
+            sharded.step(&actions);
+        }
+        let ck = ShardedEnv::save_checkpoint(&sharded);
+        // Restore into a single-threaded engine: slots are global, shard
+        // layout is irrelevant.
+        let mut single = BatchedEnv::new(cfg, 9, Key::new(8));
+        single.restore_checkpoint(&ck);
+        for _ in 0..40 {
+            for a in actions.iter_mut() {
+                *a = rng.below(7) as u8;
+            }
+            sharded.step(&actions);
+            single.step(&actions);
+            assert_eq!(single.timestep.reward, sharded.timestep.reward);
+            assert_eq!(single.timestep.step_type, sharded.timestep.step_type);
+            for i in 0..9 {
+                assert_eq!(single.obs.env_i32(9, i), sharded.obs.env_i32(9, i));
             }
         }
     }

@@ -1,0 +1,240 @@
+//! Deterministic chaos injection: seeded faults fired at exact
+//! (slot, step) coordinates inside the engines' supervised step path.
+//!
+//! The injector is armed either programmatically
+//! ([`crate::batch::BatchedEnv::arm_chaos`]) or through the `NAVIX_CHAOS`
+//! environment variable, which every `BatchedEnv` constructor checks — so
+//! the sharded and pipelined engines inherit injection in their inner
+//! engines with zero plumbing. Slots are addressed *globally* (shard
+//! offsets included) and every spec fires exactly once, so the same spec
+//! list produces the same fault on every engine topology.
+//!
+//! Grammar of `NAVIX_CHAOS` (also accepted by [`ChaosInjector::parse`]):
+//!
+//! ```text
+//! panic@SLOT:STEP[;KIND@SLOT:STEP…]     explicit spec list
+//! seed=S,n=N,slots=B,maxstep=M          N specs derived from seed S
+//! ```
+//!
+//! Kinds: `panic` (plain injected panic), `badaction` (corrupts one agent's
+//! action byte to 255 — the supervised path validates and panics),
+//! `poisonrng` (scrambles the slot's in-episode RNG stream *before*
+//! panicking, so recovery must actually repair state, not just resume).
+//! Every injected panic message starts with `"chaos:"` — the marker
+//! [`crate::batch::EngineFault::is_chaos`] counts.
+
+use crate::rng::Rng;
+
+/// What kind of fault to inject.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChaosKind {
+    /// Panic mid-step, before the slot body runs.
+    Panic,
+    /// Corrupt agent 0's action byte to 255 (out of range: `Action::N` is
+    /// 7); the supervised validation turns it into a structured panic.
+    BadAction,
+    /// Corrupt the slot's in-episode RNG stream state, then panic.
+    PoisonRng,
+}
+
+impl ChaosKind {
+    fn parse(s: &str) -> Result<ChaosKind, String> {
+        match s {
+            "panic" => Ok(ChaosKind::Panic),
+            "badaction" => Ok(ChaosKind::BadAction),
+            "poisonrng" => Ok(ChaosKind::PoisonRng),
+            other => Err(format!(
+                "NAVIX_CHAOS: unknown kind {other:?} (expected panic|badaction|poisonrng)"
+            )),
+        }
+    }
+}
+
+/// One fault: fire `kind` in global slot `slot` at engine step `step`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChaosSpec {
+    pub kind: ChaosKind,
+    /// Global slot index (shard offsets included).
+    pub slot: usize,
+    /// Engine step counter value at which to fire (first step is 1).
+    pub step: u64,
+}
+
+/// A deterministic, one-shot-per-spec fault injector.
+#[derive(Clone, Debug)]
+pub struct ChaosInjector {
+    specs: Vec<ChaosSpec>,
+    fired: Vec<bool>,
+}
+
+impl ChaosInjector {
+    pub fn new(specs: Vec<ChaosSpec>) -> ChaosInjector {
+        let n = specs.len();
+        ChaosInjector { specs, fired: vec![false; n] }
+    }
+
+    /// Derive `n` specs from a seed: slot in `0..slots`, step in
+    /// `1..=max_step`, kind cycling through all three. Engine-independent,
+    /// so every topology under the same seed sees the same faults.
+    pub fn seeded(seed: u64, n: usize, slots: usize, max_step: u64) -> ChaosInjector {
+        assert!(slots > 0 && max_step > 0, "chaos seeded form needs slots > 0, maxstep > 0");
+        let mut rng = Rng::new(seed);
+        let specs = (0..n)
+            .map(|i| ChaosSpec {
+                kind: match i % 3 {
+                    0 => ChaosKind::Panic,
+                    1 => ChaosKind::BadAction,
+                    _ => ChaosKind::PoisonRng,
+                },
+                slot: rng.below(slots as u32) as usize,
+                step: 1 + rng.below(max_step as u32) as u64,
+            })
+            .collect();
+        ChaosInjector::new(specs)
+    }
+
+    /// Parse the `NAVIX_CHAOS` grammar (module docs).
+    pub fn parse(s: &str) -> Result<ChaosInjector, String> {
+        let s = s.trim();
+        if s.is_empty() {
+            return Err("NAVIX_CHAOS is empty".to_string());
+        }
+        if s.contains("seed=") {
+            let mut seed = None;
+            let mut n = None;
+            let mut slots = None;
+            let mut max_step = None;
+            for part in s.split(',') {
+                let (k, v) = part
+                    .split_once('=')
+                    .ok_or_else(|| format!("NAVIX_CHAOS: bad key=value pair {part:?}"))?;
+                let v: u64 = v
+                    .trim()
+                    .parse()
+                    .map_err(|_| format!("NAVIX_CHAOS: non-numeric value in {part:?}"))?;
+                match k.trim() {
+                    "seed" => seed = Some(v),
+                    "n" => n = Some(v as usize),
+                    "slots" => slots = Some(v as usize),
+                    "maxstep" => max_step = Some(v),
+                    other => return Err(format!("NAVIX_CHAOS: unknown key {other:?}")),
+                }
+            }
+            let (seed, n, slots, max_step) = (
+                seed.ok_or("NAVIX_CHAOS: seeded form needs seed=")?,
+                n.ok_or("NAVIX_CHAOS: seeded form needs n=")?,
+                slots.ok_or("NAVIX_CHAOS: seeded form needs slots=")?,
+                max_step.ok_or("NAVIX_CHAOS: seeded form needs maxstep=")?,
+            );
+            return Ok(ChaosInjector::seeded(seed, n, slots, max_step));
+        }
+        let specs = s
+            .split(';')
+            .filter(|e| !e.trim().is_empty())
+            .map(|entry| {
+                let (kind, at) = entry
+                    .trim()
+                    .split_once('@')
+                    .ok_or_else(|| format!("NAVIX_CHAOS: entry {entry:?} missing '@'"))?;
+                let (slot, step) = at
+                    .split_once(':')
+                    .ok_or_else(|| format!("NAVIX_CHAOS: entry {entry:?} missing ':'"))?;
+                Ok(ChaosSpec {
+                    kind: ChaosKind::parse(kind.trim())?,
+                    slot: slot
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("NAVIX_CHAOS: bad slot in {entry:?}"))?,
+                    step: step
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("NAVIX_CHAOS: bad step in {entry:?}"))?,
+                })
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        Ok(ChaosInjector::new(specs))
+    }
+
+    /// Read `NAVIX_CHAOS`; `None` when unset. A malformed value panics
+    /// with the parse error — a chaos run that silently injects nothing
+    /// would report a vacuous pass.
+    pub fn from_env() -> Option<ChaosInjector> {
+        let raw = std::env::var("NAVIX_CHAOS").ok()?;
+        if raw.trim().is_empty() {
+            return None;
+        }
+        match ChaosInjector::parse(&raw) {
+            Ok(inj) => Some(inj),
+            Err(e) => panic!("{e}"),
+        }
+    }
+
+    /// Should a fault fire for `global_slot` at engine step `step`? Each
+    /// spec fires at most once; with several matching specs the earliest
+    /// unfired one wins.
+    pub fn check(&mut self, global_slot: usize, step: u64) -> Option<ChaosKind> {
+        for (spec, fired) in self.specs.iter().zip(self.fired.iter_mut()) {
+            if !*fired && spec.slot == global_slot && spec.step == step {
+                *fired = true;
+                return Some(spec.kind);
+            }
+        }
+        None
+    }
+
+    /// How many specs have fired so far.
+    pub fn fired_count(&self) -> u64 {
+        self.fired.iter().filter(|&&f| f).count() as u64
+    }
+
+    pub fn specs(&self) -> &[ChaosSpec] {
+        &self.specs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn explicit_grammar_parses() {
+        let inj = ChaosInjector::parse("panic@3:17; badaction@0:5 ;poisonrng@2:9").unwrap();
+        assert_eq!(
+            inj.specs(),
+            &[
+                ChaosSpec { kind: ChaosKind::Panic, slot: 3, step: 17 },
+                ChaosSpec { kind: ChaosKind::BadAction, slot: 0, step: 5 },
+                ChaosSpec { kind: ChaosKind::PoisonRng, slot: 2, step: 9 },
+            ]
+        );
+        assert!(ChaosInjector::parse("explode@1:1").is_err());
+        assert!(ChaosInjector::parse("panic@1").is_err());
+        assert!(ChaosInjector::parse("seed=1,n=2").is_err(), "seeded form needs all keys");
+    }
+
+    #[test]
+    fn seeded_form_is_deterministic_and_in_range() {
+        let a = ChaosInjector::seeded(42, 5, 16, 100);
+        let b = ChaosInjector::parse("seed=42,n=5,slots=16,maxstep=100").unwrap();
+        assert_eq!(a.specs(), b.specs());
+        for s in a.specs() {
+            assert!(s.slot < 16);
+            assert!(s.step >= 1 && s.step <= 100);
+        }
+        assert_ne!(
+            ChaosInjector::seeded(43, 5, 16, 100).specs(),
+            a.specs(),
+            "different seeds must differ"
+        );
+    }
+
+    #[test]
+    fn specs_fire_exactly_once() {
+        let mut inj = ChaosInjector::parse("panic@1:2").unwrap();
+        assert_eq!(inj.check(0, 2), None);
+        assert_eq!(inj.check(1, 1), None);
+        assert_eq!(inj.check(1, 2), Some(ChaosKind::Panic));
+        assert_eq!(inj.check(1, 2), None, "one-shot");
+        assert_eq!(inj.fired_count(), 1);
+    }
+}

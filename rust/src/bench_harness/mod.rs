@@ -3,9 +3,11 @@
 //! runs, medians and the 5–95 percentile confidence intervals every NAVIX
 //! plot reports).
 
+pub mod chaos;
 pub mod floors;
 pub mod stats;
 
+pub use chaos::{ChaosInjector, ChaosKind, ChaosSpec};
 pub use floors::Floor;
 pub use stats::Summary;
 

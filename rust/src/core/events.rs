@@ -42,6 +42,12 @@ pub struct Events {
     /// Another agent walked into this agent's cell (the target's side of
     /// a contested-cell conflict; the evader's failure event).
     pub contacted: bool,
+    /// The fault-supervision layer quarantined this agent's slot this step
+    /// (the step's mutations were rolled back to the pre-step snapshot, or
+    /// the episode was replaced by a successor-key reset). Latched like
+    /// `agent_contact` so trainers can deterministically mask the row's
+    /// reward; *not* a terminal event, so [`Events::any`] ignores it.
+    pub slot_quarantined: bool,
 }
 
 impl Events {
@@ -58,9 +64,13 @@ impl Events {
         object_placed: false,
         agent_contact: false,
         contacted: false,
+        slot_quarantined: false,
     };
 
     /// Any terminal-success/failure event fired this step?
+    /// `slot_quarantined` is deliberately excluded: a quarantine is an
+    /// engine-level recovery marker, not an episode outcome, and must not
+    /// terminate the episode it rescued.
     #[inline]
     pub fn any(self) -> bool {
         self.goal_reached
@@ -75,6 +85,51 @@ impl Events {
             || self.object_placed
             || self.agent_contact
             || self.contacted
+    }
+
+    /// Pack the latches into a bitmask (bit order = field order) for the
+    /// [`crate::core::snapshot`] byte codec. Keep in sync with
+    /// [`Events::from_bits`].
+    pub fn to_bits(self) -> u16 {
+        let fields = [
+            self.goal_reached,
+            self.lava_fall,
+            self.ball_hit,
+            self.ball_picked,
+            self.door_done,
+            self.door_unlocked,
+            self.object_picked,
+            self.wrong_pickup,
+            self.object_reached,
+            self.object_placed,
+            self.agent_contact,
+            self.contacted,
+            self.slot_quarantined,
+        ];
+        fields
+            .iter()
+            .enumerate()
+            .fold(0u16, |acc, (i, &set)| acc | ((set as u16) << i))
+    }
+
+    /// Inverse of [`Events::to_bits`] (unknown high bits are ignored).
+    pub fn from_bits(bits: u16) -> Events {
+        let get = |i: usize| bits & (1 << i) != 0;
+        Events {
+            goal_reached: get(0),
+            lava_fall: get(1),
+            ball_hit: get(2),
+            ball_picked: get(3),
+            door_done: get(4),
+            door_unlocked: get(5),
+            object_picked: get(6),
+            wrong_pickup: get(7),
+            object_reached: get(8),
+            object_placed: get(9),
+            agent_contact: get(10),
+            contacted: get(11),
+            slot_quarantined: get(12),
+        }
     }
 }
 
@@ -108,5 +163,23 @@ mod tests {
             }
             assert!(e.any());
         }
+    }
+
+    #[test]
+    fn quarantine_latch_is_not_terminal() {
+        let e = Events { slot_quarantined: true, ..Events::NONE };
+        assert!(!e.any(), "a quarantine marker must never terminate an episode");
+    }
+
+    #[test]
+    fn bits_round_trip_every_latch() {
+        for i in 0..13u16 {
+            let e = Events::from_bits(1 << i);
+            assert_eq!(e.to_bits(), 1 << i, "latch {i}");
+            assert_eq!(Events::from_bits(e.to_bits()), e);
+        }
+        assert_eq!(Events::NONE.to_bits(), 0);
+        let all = Events::from_bits(0x1FFF);
+        assert_eq!(all.to_bits(), 0x1FFF);
     }
 }

@@ -17,6 +17,7 @@ pub mod entities;
 pub mod events;
 pub mod grid;
 pub mod mission;
+pub mod snapshot;
 pub mod state;
 pub mod timestep;
 
@@ -24,5 +25,6 @@ pub use actions::Action;
 pub use components::{Color, DoorState, Direction};
 pub use entities::{CellType, EntityKind};
 pub use mission::{Mission, MissionVerb, MISSION_DIM};
+pub use snapshot::{EngineCheckpoint, SlotCheckpoint, SlotSnapshot};
 pub use state::{BatchedState, EnvSlot, SlotMut};
 pub use timestep::{StepType, Timestep};

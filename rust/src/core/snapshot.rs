@@ -1,0 +1,404 @@
+//! Slot-granular state serialization: the save/restore primitive behind
+//! checkpointed training, quarantine recovery and time-travel debugging.
+//!
+//! A [`SlotSnapshot`] captures **every** SoA column of one environment slot
+//! — the per-agent `[A]` columns (position/direction/pocket/mission/events/
+//! last-action), the base grid and packed cell-code overlay rows, the
+//! padded entity tables, the episode clock `t` and the in-episode RNG
+//! stream state — so restoring it and stepping is bitwise identical to
+//! never having left (pinned by `tests/test_snapshot.rs` across the whole
+//! registry).
+//!
+//! [`SlotCheckpoint`] adds the engine-side bookkeeping a slot needs to
+//! resume *mid-rollout*: the reset counter that derives successor episode
+//! keys, and the slot's `[A]` timestep rows. [`EngineCheckpoint`] stacks
+//! one of those per slot plus the engine root key and step counter; all
+//! three engines expose it through
+//! [`crate::batch::BatchStepper::save_checkpoint`].
+//!
+//! ## Byte format
+//!
+//! [`SlotSnapshot::to_bytes`] emits a little-endian, versioned, fixed-order
+//! encoding: an 8-byte magic (`NVXSNAP` + version), the shape header
+//! (`a, h, w, caps.{doors,keys,balls,boxes}` as u32), then each column in
+//! declaration order (events as u16 bitmasks via
+//! [`Events::to_bits`][crate::core::events::Events::to_bits]). No
+//! compression, no external dependencies; [`SlotSnapshot::from_bytes`] is
+//! the exact inverse and rejects wrong magic/shape/length with a
+//! descriptive error string.
+
+use super::events::Events;
+use super::state::{BatchedState, Caps};
+use super::timestep::StepType;
+
+/// Magic prefix of the byte encoding: `NVXSNAP` + format version 1.
+const MAGIC: &[u8; 8] = b"NVXSNAP\x01";
+
+/// Bitwise image of one environment slot's full SoA state.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SlotSnapshot {
+    /// Agents per slot (length of every per-agent column).
+    pub a: usize,
+    pub h: usize,
+    pub w: usize,
+    pub caps: Caps,
+    // Grid columns, h*w each.
+    pub base: Vec<u8>,
+    pub base_color: Vec<u8>,
+    pub overlay: Vec<u32>,
+    pub overlay_idx: Vec<u8>,
+    // Per-agent columns, a each.
+    pub player_pos: Vec<i32>,
+    pub player_dir: Vec<i32>,
+    pub pocket: Vec<i32>,
+    pub mission: Vec<i32>,
+    pub events: Vec<Events>,
+    pub last_action: Vec<i32>,
+    // Entity tables, caps.* each.
+    pub door_pos: Vec<i32>,
+    pub door_color: Vec<u8>,
+    pub door_state: Vec<u8>,
+    pub key_pos: Vec<i32>,
+    pub key_color: Vec<u8>,
+    pub ball_pos: Vec<i32>,
+    pub ball_color: Vec<u8>,
+    pub box_pos: Vec<i32>,
+    pub box_color: Vec<u8>,
+    // Episode bookkeeping.
+    pub t: u32,
+    /// The in-episode RNG stream state (`BatchedState::rng[i]`).
+    pub rng: u64,
+}
+
+impl SlotSnapshot {
+    /// Capture slot `i` of `state`.
+    pub fn capture(state: &BatchedState, i: usize) -> SlotSnapshot {
+        assert!(i < state.b, "slot {i} out of range (b = {})", state.b);
+        let hw = state.h * state.w;
+        let a = state.a;
+        let c = state.caps;
+        let grid = |v: &Vec<u8>| v[i * hw..(i + 1) * hw].to_vec();
+        SlotSnapshot {
+            a,
+            h: state.h,
+            w: state.w,
+            caps: c,
+            base: grid(&state.base),
+            base_color: grid(&state.base_color),
+            overlay: state.overlay[i * hw..(i + 1) * hw].to_vec(),
+            overlay_idx: grid(&state.overlay_idx),
+            player_pos: state.player_pos[i * a..(i + 1) * a].to_vec(),
+            player_dir: state.player_dir[i * a..(i + 1) * a].to_vec(),
+            pocket: state.pocket[i * a..(i + 1) * a].to_vec(),
+            mission: state.mission[i * a..(i + 1) * a].to_vec(),
+            events: state.events[i * a..(i + 1) * a].to_vec(),
+            last_action: state.last_action[i * a..(i + 1) * a].to_vec(),
+            door_pos: state.door_pos[i * c.doors..(i + 1) * c.doors].to_vec(),
+            door_color: state.door_color[i * c.doors..(i + 1) * c.doors].to_vec(),
+            door_state: state.door_state[i * c.doors..(i + 1) * c.doors].to_vec(),
+            key_pos: state.key_pos[i * c.keys..(i + 1) * c.keys].to_vec(),
+            key_color: state.key_color[i * c.keys..(i + 1) * c.keys].to_vec(),
+            ball_pos: state.ball_pos[i * c.balls..(i + 1) * c.balls].to_vec(),
+            ball_color: state.ball_color[i * c.balls..(i + 1) * c.balls].to_vec(),
+            box_pos: state.box_pos[i * c.boxes..(i + 1) * c.boxes].to_vec(),
+            box_color: state.box_color[i * c.boxes..(i + 1) * c.boxes].to_vec(),
+            t: state.t[i],
+            rng: state.rng[i],
+        }
+    }
+
+    /// Restore this snapshot into slot `i` of `state`. Panics if the
+    /// state's shape (agents, grid, capacities) differs from the
+    /// snapshot's — a snapshot only fits the configuration it came from.
+    pub fn restore(&self, state: &mut BatchedState, i: usize) {
+        assert!(i < state.b, "slot {i} out of range (b = {})", state.b);
+        assert_eq!(
+            (self.a, self.h, self.w, self.caps),
+            (state.a, state.h, state.w, state.caps),
+            "snapshot shape mismatch: snapshot was taken on a different env configuration"
+        );
+        let hw = state.h * state.w;
+        let a = state.a;
+        let c = state.caps;
+        state.base[i * hw..(i + 1) * hw].copy_from_slice(&self.base);
+        state.base_color[i * hw..(i + 1) * hw].copy_from_slice(&self.base_color);
+        state.overlay[i * hw..(i + 1) * hw].copy_from_slice(&self.overlay);
+        state.overlay_idx[i * hw..(i + 1) * hw].copy_from_slice(&self.overlay_idx);
+        state.player_pos[i * a..(i + 1) * a].copy_from_slice(&self.player_pos);
+        state.player_dir[i * a..(i + 1) * a].copy_from_slice(&self.player_dir);
+        state.pocket[i * a..(i + 1) * a].copy_from_slice(&self.pocket);
+        state.mission[i * a..(i + 1) * a].copy_from_slice(&self.mission);
+        state.events[i * a..(i + 1) * a].copy_from_slice(&self.events);
+        state.last_action[i * a..(i + 1) * a].copy_from_slice(&self.last_action);
+        state.door_pos[i * c.doors..(i + 1) * c.doors].copy_from_slice(&self.door_pos);
+        state.door_color[i * c.doors..(i + 1) * c.doors].copy_from_slice(&self.door_color);
+        state.door_state[i * c.doors..(i + 1) * c.doors].copy_from_slice(&self.door_state);
+        state.key_pos[i * c.keys..(i + 1) * c.keys].copy_from_slice(&self.key_pos);
+        state.key_color[i * c.keys..(i + 1) * c.keys].copy_from_slice(&self.key_color);
+        state.ball_pos[i * c.balls..(i + 1) * c.balls].copy_from_slice(&self.ball_pos);
+        state.ball_color[i * c.balls..(i + 1) * c.balls].copy_from_slice(&self.ball_color);
+        state.box_pos[i * c.boxes..(i + 1) * c.boxes].copy_from_slice(&self.box_pos);
+        state.box_color[i * c.boxes..(i + 1) * c.boxes].copy_from_slice(&self.box_color);
+        state.t[i] = self.t;
+        state.rng[i] = self.rng;
+    }
+
+    /// Serialize to the versioned little-endian byte format (module docs).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(64 + 10 * self.h * self.w);
+        out.extend_from_slice(MAGIC);
+        for dim in [
+            self.a,
+            self.h,
+            self.w,
+            self.caps.doors,
+            self.caps.keys,
+            self.caps.balls,
+            self.caps.boxes,
+        ] {
+            out.extend_from_slice(&(dim as u32).to_le_bytes());
+        }
+        out.extend_from_slice(&self.base);
+        out.extend_from_slice(&self.base_color);
+        for &x in &self.overlay {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        out.extend_from_slice(&self.overlay_idx);
+        for col in [
+            &self.player_pos,
+            &self.player_dir,
+            &self.pocket,
+            &self.mission,
+            &self.last_action,
+        ] {
+            for &x in col.iter() {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        for &e in &self.events {
+            out.extend_from_slice(&e.to_bits().to_le_bytes());
+        }
+        for col in [&self.door_pos, &self.key_pos, &self.ball_pos, &self.box_pos] {
+            for &x in col.iter() {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        out.extend_from_slice(&self.door_color);
+        out.extend_from_slice(&self.door_state);
+        out.extend_from_slice(&self.key_color);
+        out.extend_from_slice(&self.ball_color);
+        out.extend_from_slice(&self.box_color);
+        out.extend_from_slice(&self.t.to_le_bytes());
+        out.extend_from_slice(&self.rng.to_le_bytes());
+        out
+    }
+
+    /// Decode [`SlotSnapshot::to_bytes`] output. Errors (instead of
+    /// panicking) on wrong magic/version or a truncated/oversized buffer.
+    pub fn from_bytes(bytes: &[u8]) -> Result<SlotSnapshot, String> {
+        let mut r = Reader { buf: bytes, at: 0 };
+        let magic = r.take(8)?;
+        if magic != MAGIC {
+            return Err(format!("bad snapshot magic/version: {magic:02x?}"));
+        }
+        let a = r.u32()? as usize;
+        let h = r.u32()? as usize;
+        let w = r.u32()? as usize;
+        let caps = Caps {
+            doors: r.u32()? as usize,
+            keys: r.u32()? as usize,
+            balls: r.u32()? as usize,
+            boxes: r.u32()? as usize,
+        };
+        let hw = h * w;
+        let snap = SlotSnapshot {
+            a,
+            h,
+            w,
+            caps,
+            base: r.take(hw)?.to_vec(),
+            base_color: r.take(hw)?.to_vec(),
+            overlay: r.u32_vec(hw)?,
+            overlay_idx: r.take(hw)?.to_vec(),
+            player_pos: r.i32_vec(a)?,
+            player_dir: r.i32_vec(a)?,
+            pocket: r.i32_vec(a)?,
+            mission: r.i32_vec(a)?,
+            last_action: r.i32_vec(a)?,
+            events: {
+                let mut v = Vec::with_capacity(a);
+                for _ in 0..a {
+                    v.push(Events::from_bits(r.u16()?));
+                }
+                v
+            },
+            door_pos: r.i32_vec(caps.doors)?,
+            key_pos: r.i32_vec(caps.keys)?,
+            ball_pos: r.i32_vec(caps.balls)?,
+            box_pos: r.i32_vec(caps.boxes)?,
+            door_color: r.take(caps.doors)?.to_vec(),
+            door_state: r.take(caps.doors)?.to_vec(),
+            key_color: r.take(caps.keys)?.to_vec(),
+            ball_color: r.take(caps.balls)?.to_vec(),
+            box_color: r.take(caps.boxes)?.to_vec(),
+            t: r.u32()?,
+            rng: r.u64()?,
+        };
+        if r.at != bytes.len() {
+            return Err(format!(
+                "snapshot buffer has {} trailing bytes",
+                bytes.len() - r.at
+            ));
+        }
+        Ok(snap)
+    }
+}
+
+/// Bounds-checked little-endian cursor for [`SlotSnapshot::from_bytes`].
+struct Reader<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.at + n > self.buf.len() {
+            return Err(format!(
+                "snapshot truncated: need {n} bytes at offset {}, have {}",
+                self.at,
+                self.buf.len() - self.at
+            ));
+        }
+        let s = &self.buf[self.at..self.at + n];
+        self.at += n;
+        Ok(s)
+    }
+
+    fn u16(&mut self) -> Result<u16, String> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn u32_vec(&mut self, n: usize) -> Result<Vec<u32>, String> {
+        (0..n).map(|_| self.u32()).collect()
+    }
+
+    fn i32_vec(&mut self, n: usize) -> Result<Vec<i32>, String> {
+        Ok(self.u32_vec(n)?.into_iter().map(|x| x as i32).collect())
+    }
+}
+
+/// A [`SlotSnapshot`] plus the engine-side bookkeeping needed to resume the
+/// slot *mid-rollout*: the reset counter (successor episode keys derive
+/// from it) and the slot's `[A]` timestep rows.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SlotCheckpoint {
+    pub state: SlotSnapshot,
+    /// `BatchedEnv::reset_counts[i]` — restoring it keeps the successor
+    /// episode-key sequence aligned with an uninterrupted run.
+    pub reset_count: u64,
+    // The slot's [A] timestep rows, in BatchedTimestep field order.
+    pub ts_t: Vec<u32>,
+    pub ts_action: Vec<i32>,
+    pub ts_reward: Vec<f32>,
+    pub ts_discount: Vec<f32>,
+    pub ts_step_type: Vec<StepType>,
+    pub ts_episodic_return: Vec<f32>,
+}
+
+/// All `B` slots of an engine plus the engine-level RNG identity and step
+/// counter: everything `restore_checkpoint` needs to make a fresh engine
+/// of the same configuration continue bit-for-bit.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EngineCheckpoint {
+    pub b: usize,
+    pub a: usize,
+    /// The engine root key (episode keys fold slot index + reset count
+    /// into it); restore asserts it matches the target engine's.
+    pub root_key: u64,
+    /// Engine steps taken so far (drives the chaos injector's clock).
+    pub step_count: u64,
+    pub slots: Vec<SlotCheckpoint>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::components::{Color, Direction, DoorState};
+    use crate::core::grid::Pos;
+
+    fn populated_state() -> BatchedState {
+        let mut st = BatchedState::with_agents(
+            2,
+            5,
+            6,
+            Caps { doors: 2, keys: 2, balls: 1, boxes: 1 },
+            2,
+        );
+        let mut s = st.agent_slot_mut(1, 0);
+        s.fill_room();
+        *s.rng = 0xDEAD_BEEF;
+        *s.t = 17;
+        s.place_player(Pos::new(1, 1), Direction::East);
+        s.place_agent(1, Pos::new(3, 3), Direction::North);
+        s.add_door(Pos::new(2, 3), Color::Yellow, DoorState::Locked);
+        s.add_key(Pos::new(1, 2), Color::Yellow);
+        s.add_ball(Pos::new(3, 2), Color::Blue);
+        s.events[1].goal_reached = true;
+        s.last_action[0] = 2;
+        st
+    }
+
+    #[test]
+    fn capture_restore_round_trips_bitwise() {
+        let st = populated_state();
+        let snap = SlotSnapshot::capture(&st, 1);
+        // Restore into a freshly allocated state and compare every column.
+        let mut dst = BatchedState::with_agents(2, 5, 6, st.caps, 2);
+        snap.restore(&mut dst, 1);
+        assert_eq!(SlotSnapshot::capture(&dst, 1), snap);
+        // The neighbouring slot is untouched (still the zeroed allocation).
+        let zero = BatchedState::with_agents(2, 5, 6, st.caps, 2);
+        assert_eq!(SlotSnapshot::capture(&dst, 0), SlotSnapshot::capture(&zero, 0));
+    }
+
+    #[test]
+    fn byte_codec_round_trips_bitwise() {
+        let st = populated_state();
+        for i in 0..st.b {
+            let snap = SlotSnapshot::capture(&st, i);
+            let bytes = snap.to_bytes();
+            let back = SlotSnapshot::from_bytes(&bytes).expect("decode");
+            assert_eq!(back, snap, "slot {i}");
+        }
+    }
+
+    #[test]
+    fn byte_codec_rejects_garbage() {
+        let st = populated_state();
+        let bytes = SlotSnapshot::capture(&st, 0).to_bytes();
+        assert!(SlotSnapshot::from_bytes(&bytes[..bytes.len() - 1]).is_err(), "truncated");
+        let mut extra = bytes.clone();
+        extra.push(0);
+        assert!(SlotSnapshot::from_bytes(&extra).is_err(), "trailing bytes");
+        let mut bad = bytes;
+        bad[7] = 99; // version byte
+        assert!(SlotSnapshot::from_bytes(&bad).is_err(), "bad version");
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn restore_rejects_shape_mismatch() {
+        let st = populated_state();
+        let snap = SlotSnapshot::capture(&st, 0);
+        let mut other = BatchedState::new(2, 7, 7, Caps::default());
+        snap.restore(&mut other, 0);
+    }
+}

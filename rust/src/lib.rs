@@ -45,7 +45,11 @@ pub mod agents;
 pub mod runtime;
 pub mod coordinator;
 
-pub use crate::batch::{BatchStepper, BatchedEnv, PipelinedEnv, ShardedEnv};
+pub use crate::batch::{
+    BatchStepper, BatchedEnv, EngineFault, FaultPolicy, FaultStats, PipelinedEnv, ShardedEnv,
+};
+pub use crate::bench_harness::chaos::{ChaosInjector, ChaosKind, ChaosSpec};
+pub use crate::core::snapshot::{EngineCheckpoint, SlotCheckpoint, SlotSnapshot};
 pub use crate::core::actions::Action;
 pub use crate::core::timestep::{StepType, Timestep};
 pub use crate::envs::registry::{list_envs, make, make_with};

@@ -1,0 +1,191 @@
+//! Checkpoint/restore pins.
+//!
+//! 1. **Registry-wide bitwise round-trip**: for every registry id and
+//!    agent count A ∈ {1, 2}, stepping after `save_checkpoint` →
+//!    `restore_checkpoint` reproduces the original continuation bit for
+//!    bit (timesteps, observations, mission features), and every slot's
+//!    [`SlotSnapshot`] survives the byte codec exactly.
+//! 2. **Cross-engine portability**: a checkpoint taken mid-episode on the
+//!    single-threaded engine resumes bitwise-identically on the sharded
+//!    and pipelined engines (slots are global; topology is irrelevant).
+//! 3. **PPO checkpoint/resume**: saving engine + agent + tracker mid-run
+//!    and resuming on a fresh engine reproduces the exact training curve
+//!    on all three engines.
+
+use navix::agents::{Ppo, PpoConfig, ReturnTracker};
+use navix::batch::{BatchStepper, BatchedEnv, ObsBatch, ObsData, PipelinedEnv, ShardedEnv};
+use navix::core::snapshot::SlotSnapshot;
+use navix::envs::registry::{list_envs, make};
+use navix::rng::{Key, Rng};
+
+fn random_actions(rng: &mut Rng, rows: usize) -> Vec<u8> {
+    (0..rows).map(|_| rng.below(7) as u8).collect()
+}
+
+fn assert_obs_equal(ctx: &str, a: &ObsBatch, b: &ObsBatch) {
+    assert_eq!(a.mission, b.mission, "{ctx}: mission features diverged");
+    match (&a.data, &b.data) {
+        (ObsData::I32(x), ObsData::I32(y)) => assert_eq!(x, y, "{ctx}: i32 obs diverged"),
+        (ObsData::U8(x), ObsData::U8(y)) => assert_eq!(x, y, "{ctx}: u8 obs diverged"),
+        _ => panic!("{ctx}: obs dtypes diverged"),
+    }
+}
+
+#[test]
+fn snapshot_round_trip_is_bitwise_for_every_registry_env() {
+    const B: usize = 4;
+    for id in list_envs() {
+        for agents in [1usize, 2] {
+            let ctx = format!("{id} A={agents}");
+            let cfg = make(id).unwrap().with_agents(agents);
+            let rows = B * agents;
+            let mut env = BatchedEnv::new(cfg, B, Key::new(11));
+            let mut rng = Rng::new(0xC0FFEE ^ agents as u64);
+            for _ in 0..12 {
+                env.step(&random_actions(&mut rng, rows));
+            }
+
+            // Per-slot byte codec: capture → bytes → parse is identity.
+            for i in 0..B {
+                let snap = SlotSnapshot::capture(&env.state, i);
+                let back = SlotSnapshot::from_bytes(&snap.to_bytes())
+                    .unwrap_or_else(|e| panic!("{ctx} slot {i}: codec rejected bytes: {e}"));
+                assert_eq!(snap, back, "{ctx} slot {i}: byte codec not bitwise");
+            }
+
+            let ck = env.save_checkpoint();
+            // Record the true continuation…
+            let plan: Vec<Vec<u8>> =
+                (0..10).map(|_| random_actions(&mut rng, rows)).collect();
+            let mut expect = Vec::new();
+            for actions in &plan {
+                env.step(actions);
+                expect.push((env.timestep.clone(), env.obs.clone()));
+            }
+            // …then rewind and replay it.
+            env.restore_checkpoint(&ck);
+            for (t, actions) in plan.iter().enumerate() {
+                env.step(actions);
+                let (ts, obs) = &expect[t];
+                assert_eq!(&env.timestep.t, &ts.t, "{ctx} step {t}: t diverged");
+                assert_eq!(&env.timestep.reward, &ts.reward, "{ctx} step {t}: reward");
+                assert_eq!(&env.timestep.discount, &ts.discount, "{ctx} step {t}: discount");
+                assert_eq!(
+                    &env.timestep.step_type, &ts.step_type,
+                    "{ctx} step {t}: step_type"
+                );
+                assert_eq!(
+                    &env.timestep.episodic_return, &ts.episodic_return,
+                    "{ctx} step {t}: episodic_return"
+                );
+                assert_obs_equal(&format!("{ctx} step {t}"), &env.obs, obs);
+            }
+        }
+    }
+}
+
+#[test]
+fn checkpoint_is_portable_across_engines() {
+    let cfg = make("Navix-DoorKey-Random-8x8").unwrap();
+    let mut src = BatchedEnv::new(cfg.clone(), 8, Key::new(4));
+    let mut rng = Rng::new(99);
+    // 37 steps: safely mid-episode in several slots.
+    for _ in 0..37 {
+        src.step(&random_actions(&mut rng, 8));
+    }
+    let ck = src.save_checkpoint();
+    let plan: Vec<Vec<u8>> = (0..30).map(|_| random_actions(&mut rng, 8)).collect();
+    let mut expect = Vec::new();
+    for actions in &plan {
+        src.step(actions);
+        expect.push((src.timestep.clone(), src.obs.clone()));
+    }
+
+    let sharded = Box::new(ShardedEnv::new(cfg.clone(), 8, 3, 2, Key::new(4)));
+    let pipelined =
+        Box::new(PipelinedEnv::over_batched(BatchedEnv::new(cfg, 8, Key::new(4))));
+    for (name, mut env) in
+        [("sharded", sharded as Box<dyn BatchStepper>), ("pipelined", pipelined)]
+    {
+        env.restore_checkpoint(&ck);
+        for (t, actions) in plan.iter().enumerate() {
+            env.step(actions);
+            let (ts, obs) = &expect[t];
+            assert_eq!(&env.timestep().reward, &ts.reward, "{name} step {t}: reward");
+            assert_eq!(
+                &env.timestep().step_type, &ts.step_type,
+                "{name} step {t}: step_type"
+            );
+            assert_eq!(&env.timestep().t, &ts.t, "{name} step {t}: t");
+            assert_obs_equal(&format!("{name} step {t}"), env.obs(), obs);
+        }
+    }
+}
+
+/// Train a few PPO iterations, checkpoint (engine + agent + tracker),
+/// train on, then restore into a fresh engine and assert the continuation
+/// reproduces the same curve bit for bit.
+fn ppo_resume_reproduces_curve(make_engine: &dyn Fn() -> Box<dyn BatchStepper>) {
+    let d = navix::agents::OBS_DIM;
+    let pcfg = PpoConfig { rollout_len: 8, minibatches: 2, epochs: 2, ..Default::default() };
+    let mut env = make_engine();
+    let b = env.policy_rows();
+    let mut ppo = Ppo::new(pcfg, d, 7, 13);
+    let mut ro = navix::agents::ppo::Rollout::new(8, b, d);
+    let mut tracker = ReturnTracker::new(16);
+    for _ in 0..2 {
+        ppo.collect_rollout(&mut *env, &mut ro, &mut tracker);
+        ppo.update(&ro);
+    }
+
+    let engine_ck = env.save_checkpoint();
+    let agent_ck = ppo.save_state();
+    let tracker_ck = tracker.clone();
+
+    let mut curve_a = Vec::new();
+    for _ in 0..3 {
+        ppo.collect_rollout(&mut *env, &mut ro, &mut tracker);
+        let m = ppo.update(&ro);
+        curve_a.push((tracker.mean(), m));
+    }
+    let params_a = (ppo.actor.params.clone(), ppo.critic.params.clone());
+
+    let mut env = make_engine();
+    env.restore_checkpoint(&engine_ck);
+    ppo.restore_state(&agent_ck);
+    let mut tracker = tracker_ck;
+    let mut ro = navix::agents::ppo::Rollout::new(8, b, d);
+    let mut curve_b = Vec::new();
+    for _ in 0..3 {
+        ppo.collect_rollout(&mut *env, &mut ro, &mut tracker);
+        let m = ppo.update(&ro);
+        curve_b.push((tracker.mean(), m));
+    }
+    assert_eq!(curve_a, curve_b, "resumed curve must be bit-identical");
+    assert_eq!(params_a.0, ppo.actor.params, "actor params must match after resume");
+    assert_eq!(params_a.1, ppo.critic.params, "critic params must match after resume");
+}
+
+#[test]
+fn ppo_checkpoint_resume_is_exact_on_the_batched_engine() {
+    let cfg = make("Navix-Empty-Random-6x6").unwrap();
+    ppo_resume_reproduces_curve(&move || {
+        Box::new(BatchedEnv::new(cfg.clone(), 6, Key::new(2)))
+    });
+}
+
+#[test]
+fn ppo_checkpoint_resume_is_exact_on_the_sharded_engine() {
+    let cfg = make("Navix-Empty-Random-6x6").unwrap();
+    ppo_resume_reproduces_curve(&move || {
+        Box::new(ShardedEnv::new(cfg.clone(), 6, 3, 2, Key::new(2)))
+    });
+}
+
+#[test]
+fn ppo_checkpoint_resume_is_exact_on_the_pipelined_engine() {
+    let cfg = make("Navix-Empty-Random-6x6").unwrap();
+    ppo_resume_reproduces_curve(&move || {
+        Box::new(PipelinedEnv::over_batched(BatchedEnv::new(cfg.clone(), 6, Key::new(2))))
+    });
+}
