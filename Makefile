@@ -5,7 +5,7 @@
 # path afterwards. The Rust targets work without artifacts — PJRT-backed
 # paths degrade or skip gracefully (see rust/src/runtime/mod.rs).
 
-.PHONY: build test verify artifacts bench-smoke train-smoke bench-nightly fmt clippy
+.PHONY: build test verify artifacts bench-smoke train-smoke bench-nightly simd-check fmt clippy
 
 build:
 	cargo build --release
@@ -43,6 +43,21 @@ bench-nightly:
 	cargo bench --bench fig5_sharded
 	cargo bench --bench obs_throughput
 	cargo bench --bench fig6_ppo_agents
+
+# The CI simd-matrix job, locally: every forced kernel path (scalar, sse2,
+# avx2) must be bitwise identical to the oracles — obs parity (overlay vs
+# scan, registry + odd-shape tails + engine end-to-end), fused-scan parity,
+# the nn::mlp GEMM tests and the simd:: dispatch pins. Paths the CPU lacks
+# are clamped by the dispatcher (the run still passes, but re-tests a
+# narrower kernel — CI's probe skips those legs instead).
+simd-check:
+	for path in scalar sse2 avx2; do \
+		echo "=== NAVIX_SIMD=$$path ==="; \
+		NAVIX_SIMD=$$path cargo test --test test_obs_parity -- --nocapture && \
+		NAVIX_SIMD=$$path cargo test --test test_scan_parity -- --nocapture && \
+		NAVIX_SIMD=$$path cargo test --lib nn::mlp -- --nocapture && \
+		NAVIX_SIMD=$$path cargo test --lib simd:: -- --nocapture || exit 1; \
+	done
 
 fmt:
 	cargo fmt --all

@@ -2,7 +2,7 @@
 //! baseline. Protocol (§4.1): 1K steps × 8 parallel envs, 5 runs, 5–95 pct
 //! CI. `NAVIX_BENCH_FAST=1` trims steps/runs for CI smoke.
 
-use navix::bench_harness::{bench, Report};
+use navix::bench_harness::{bench, simd_meta, Report};
 use navix::coordinator::{unroll_walltime, Engine};
 
 const FIG1_ENVS: [&str; 5] = [
@@ -22,6 +22,7 @@ fn main() {
         &["env", "navix_median", "minigrid_median", "speedup"],
     );
     report.meta("agents_per_slot", "1");
+    simd_meta(&mut report);
     for env_id in FIG1_ENVS {
         let navix = bench(1, runs, || {
             unroll_walltime(Engine::Batched, env_id, n_envs, steps, 0).unwrap();

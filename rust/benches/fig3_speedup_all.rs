@@ -2,7 +2,7 @@
 //! environments (x-ticks 0–29), 1K steps × 8 envs, 5 runs with 5–95 pct CI.
 //! `NAVIX_BENCH_FAST=1` trims the protocol.
 
-use navix::bench_harness::{bench, Report};
+use navix::bench_harness::{bench, simd_meta, Report};
 use navix::coordinator::{unroll_walltime, Engine};
 use navix::envs::registry::fig3_envs;
 
@@ -15,6 +15,7 @@ fn main() {
         &["xtick", "env", "navix_median", "minigrid_median", "speedup"],
     );
     report.meta("agents_per_slot", "1");
+    simd_meta(&mut report);
     for (xtick, env_id) in fig3_envs().into_iter().enumerate() {
         let navix = bench(if fast { 0 } else { 1 }, runs, || {
             unroll_walltime(Engine::Batched, env_id, n_envs, steps, 0).unwrap();

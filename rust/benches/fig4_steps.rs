@@ -5,7 +5,7 @@
 //! well before 1M on this host); set `NAVIX_FIG4_MAX=1000000` for the full
 //! paper protocol, `NAVIX_BENCH_FAST=1` for a smoke run.
 
-use navix::bench_harness::{bench, Report};
+use navix::bench_harness::{bench, simd_meta, Report};
 use navix::coordinator::{unroll_walltime, Engine};
 
 fn main() {
@@ -23,6 +23,7 @@ fn main() {
         &["steps", "navix_median", "minigrid_median", "speedup"],
     );
     report.meta("agents_per_slot", "1");
+    simd_meta(&mut report);
     let mut steps = 1_000usize;
     while steps <= max_steps {
         // fewer repeats for the long runs, like the paper's error bars

@@ -4,7 +4,7 @@
 //! time. Here the batched engine sweeps to `NAVIX_FIG5_MAX` (default 2¹⁶)
 //! and the thread-per-env baseline is capped at 256 workers.
 
-use navix::bench_harness::{time_once, Report};
+use navix::bench_harness::{simd_meta, time_once, Report};
 use navix::coordinator::{unroll_walltime, Engine};
 
 fn main() {
@@ -29,6 +29,7 @@ fn main() {
     let mut report =
         Report::new("fig5_batch", &["envs", "engine", "wall_s", "steps_per_s"]);
     report.meta("agents_per_slot", "1");
+    simd_meta(&mut report);
     let mut b = 1usize;
     while b <= max_batched {
         let (secs, _) = time_once(|| {

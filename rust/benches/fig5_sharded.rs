@@ -22,7 +22,7 @@
 //! bench-smoke job runs this and uploads `results/BENCH_fig5_sharded.json`.
 
 use navix::batch::{rollout_random_scan, BatchedEnv, FaultPolicy, FaultStats, ShardedEnv};
-use navix::bench_harness::{stats, ChaosInjector, Report};
+use navix::bench_harness::{simd_meta, stats, ChaosInjector, Report};
 use navix::rng::Key;
 use std::time::Instant;
 
@@ -46,6 +46,7 @@ fn main() {
         ],
     );
     report.meta("agents_per_slot", "1,2,4");
+    simd_meta(&mut report);
     // Chaos-aware: with NAVIX_CHAOS exported every engine self-arms, so
     // quarantine the injected faults instead of dying and surface the
     // injected/recovered counters into the JSON meta block either way

@@ -29,7 +29,7 @@ use navix::agents::ppo::{Ppo, PpoConfig, Rollout};
 use navix::agents::{preprocess_obs, ReturnTracker};
 use navix::baseline::AsyncVectorEnv;
 use navix::batch::{BatchedEnv, FaultPolicy, FaultStats};
-use navix::bench_harness::{floors, ChaosInjector, Report};
+use navix::bench_harness::{floors, simd_meta, ChaosInjector, Report};
 use navix::config::ExecConfig;
 use navix::coordinator::multi_agent::{
     train_parallel_ppo, train_parallel_ppo_exec, MultiAgentResult,
@@ -194,11 +194,17 @@ fn main() {
         train.report.meta("floor_source", &floor.source);
         train.report.meta("faults_injected", &faults.injected.to_string());
         train.report.meta("faults_recovered", &faults.recovered.to_string());
+        simd_meta(&mut train.report);
         train.report.save();
         if train.best_sps < floor.value {
             println!(
-                "measured {:.0} steps/s < floor {:.0} (source: {})",
-                train.best_sps, floor.value, floor.source
+                "measured {:.0} steps/s < floor {:.0} (source: {}) \
+                 [kernel path: {}, detected: {}]",
+                train.best_sps,
+                floor.value,
+                floor.source,
+                navix::simd::active().name(),
+                navix::simd::detected().name()
             );
             std::process::exit(1);
         }
@@ -304,9 +310,11 @@ fn main() {
     ]);
     report.meta("faults_injected", &faults.injected.to_string());
     report.meta("faults_recovered", &faults.recovered.to_string());
+    simd_meta(&mut report);
     report.save();
     train.report.meta("faults_injected", &faults.injected.to_string());
     train.report.meta("faults_recovered", &faults.recovered.to_string());
+    simd_meta(&mut train.report);
     train.report.save();
     println!("\n(paper §4.2: NAVIX 2048 agents ≈ 670M steps/s vs MiniGrid 3.1K steps/s;");
     println!(" compare the aggregate steps/s column here for the same crossover shape,");

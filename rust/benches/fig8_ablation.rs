@@ -6,7 +6,7 @@
 //! data-layout/dispatch component from the batching component (read
 //! together with fig3's batched numbers).
 
-use navix::bench_harness::{bench, Report};
+use navix::bench_harness::{bench, simd_meta, Report};
 use navix::coordinator::{unroll_walltime, Engine};
 use navix::envs::registry::fig3_envs;
 
@@ -19,6 +19,7 @@ fn main() {
         &["xtick", "env", "navix_b1_median", "minigrid_b1_median", "speedup"],
     );
     report.meta("agents_per_slot", "1");
+    simd_meta(&mut report);
     for (xtick, env_id) in fig3_envs().into_iter().enumerate() {
         let navix = bench(0, runs, || {
             unroll_walltime(Engine::Batched, env_id, 1, steps, 0).unwrap();

@@ -1,29 +1,41 @@
 //! Observation-path throughput: the packed cell-code overlay grid (+
-//! dirty-tile rgb) vs. the original naive entity-table scans, measured as
-//! end-to-end batched stepping (steps/s through `BatchedEnv::step`, random
-//! actions, autoresets included) — the two paths execute bit-identical
-//! trajectories (`tests/test_obs_parity.rs`), so the ratio is pure
-//! observation-layer speedup.
+//! dirty-tile rgb, + SIMD streaming featurisers) vs. the original naive
+//! entity-table scans, measured as end-to-end batched stepping (steps/s
+//! through `BatchedEnv::step`, random actions, autoresets included) — all
+//! paths execute bit-identical trajectories (`tests/test_obs_parity.rs`),
+//! so the ratios are pure observation-layer speedup.
+//!
+//! Three columns per cell: `naive_sps` (scan oracle), `scalar_sps` (the
+//! overlay path forced to `KernelPath::Scalar`) and `simd_sps` (the
+//! overlay path on the auto-detected kernel). `simd_mult` =
+//! simd/scalar — the vector multiple on the full-grid i32 kinds;
+//! first-person and rgb kinds run the same code on every kernel path, so
+//! their multiple sits at ~1× by construction. `total_mult` = simd/naive.
 //!
 //! Grid: all six observation kinds × {Empty-16x16, DoorKey-16x16,
 //! LockedRoom, Dynamic-Obstacles-16x16, GoToObj-8x8-N3 (mission
 //! featurisation overhead)} × B ∈ {256, 2048} (rgb kinds use
 //! smaller batches — a 2048-env 512×512×3 rgb buffer alone is 1.6 GB).
-//! Emits `results/BENCH_obs.json` via the bench_harness JSON writer;
-//! methodology and recorded numbers live in `EXPERIMENTS.md` §Perf.
+//! Emits `results/BENCH_obs.json` via the bench_harness JSON writer; the
+//! `meta` block records the SIMD dispatch decision (`simd_path` etc. —
+//! see `bench_harness::simd_meta`). Methodology and recorded numbers live
+//! in `EXPERIMENTS.md` §Perf and §SIMD.
 //!
 //! `--smoke` (or `NAVIX_BENCH_FAST=1`): tiny batch, few steps — the CI
 //! bench-smoke job runs this, uploads the JSON artifact, and **fails
-//! loudly** if the overlay path's first-person-symbolic steps/s drops
-//! below the recorded floor (`[obs]` in `bench_floors.toml`, overridable
-//! via `NAVIX_OBS_SMOKE_FLOOR`). On a miss the bench exits non-zero after
-//! printing one `measured … < floor …` line and recording both values in
-//! the JSON's `meta` — no panic backtrace for CI logs to truncate.
+//! loudly** if the overlay path's steps/s (the min over the full-grid
+//! symbolic and first-person-symbolic smoke cells, on the active kernel)
+//! drops below the recorded floor (`[obs]` in `bench_floors.toml`,
+//! overridable via `NAVIX_OBS_SMOKE_FLOOR`). On a miss the bench exits
+//! non-zero after printing one `measured … < floor …` line — naming the
+//! active kernel path, so a scalar-fallback regression is diagnosable
+//! from that line alone — and recording everything in the JSON's `meta`.
 
 use navix::batch::BatchedEnv;
-use navix::bench_harness::{floors, Report};
+use navix::bench_harness::{floors, simd_meta, Report};
 use navix::rng::Key;
-use navix::systems::observations::{ObsKind, ObsPath};
+use navix::simd::{self, KernelPath};
+use navix::systems::observations::{ObsKind, ObsRoute};
 use std::time::Instant;
 
 const ENV_IDS: [&str; 5] = [
@@ -45,11 +57,11 @@ const KINDS: [ObsKind; 6] = [
     ObsKind::RgbFirstPerson,
 ];
 
-/// End-to-end steps/s of one (env, kind, path) cell.
-fn steps_per_s(id: &str, kind: ObsKind, b: usize, steps: usize, path: ObsPath) -> f64 {
+/// End-to-end steps/s of one (env, kind, route) cell.
+fn steps_per_s(id: &str, kind: ObsKind, b: usize, steps: usize, route: ObsRoute) -> f64 {
     let cfg = navix::make(id).unwrap().with_observation(kind);
     let mut env = BatchedEnv::new(cfg, b, Key::new(0));
-    env.set_obs_path(path);
+    env.set_obs_route(route);
     let t0 = Instant::now();
     env.rollout_random(steps, 0x0B5);
     (b * steps) as f64 / t0.elapsed().as_secs_f64()
@@ -73,8 +85,19 @@ fn main() {
 
     let mut report = Report::new(
         "obs",
-        &["env", "obs", "envs", "steps", "naive_sps", "overlay_sps", "speedup"],
+        &[
+            "env",
+            "obs",
+            "envs",
+            "steps",
+            "naive_sps",
+            "scalar_sps",
+            "simd_sps",
+            "simd_mult",
+            "total_mult",
+        ],
     );
+    let active = simd::active();
     let mut smoke_floor_sps = f64::INFINITY;
     for &id in ids {
         for &kind in kinds {
@@ -95,10 +118,15 @@ fn main() {
                 (false, true) => 20,
             };
             for &b in &batches {
-                let naive = steps_per_s(id, kind, b, steps, ObsPath::NaiveScan);
-                let overlay = steps_per_s(id, kind, b, steps, ObsPath::Overlay);
-                if kind == ObsKind::SymbolicFirstPerson {
-                    smoke_floor_sps = smoke_floor_sps.min(overlay);
+                let naive = steps_per_s(id, kind, b, steps, ObsRoute::Scan);
+                let scalar =
+                    steps_per_s(id, kind, b, steps, ObsRoute::Overlay(KernelPath::Scalar));
+                let vec_sps = steps_per_s(id, kind, b, steps, ObsRoute::Overlay(active));
+                // Gate on what the SIMD work accelerates (full-grid
+                // symbolic) AND the historical first-person cell, both on
+                // the active kernel — min of the two feeds the floor.
+                if matches!(kind, ObsKind::Symbolic | ObsKind::SymbolicFirstPerson) {
+                    smoke_floor_sps = smoke_floor_sps.min(vec_sps);
                 }
                 report.row(&[
                     id.to_string(),
@@ -106,8 +134,10 @@ fn main() {
                     b.to_string(),
                     steps.to_string(),
                     format!("{naive:.0}"),
-                    format!("{overlay:.0}"),
-                    format!("{:.2}x", overlay / naive),
+                    format!("{scalar:.0}"),
+                    format!("{vec_sps:.0}"),
+                    format!("{:.2}x", vec_sps / scalar),
+                    format!("{:.2}x", vec_sps / naive),
                 ]);
             }
         }
@@ -115,31 +145,41 @@ fn main() {
     if smoke {
         // Regression gate: the overlay path must clear the recorded floor
         // (committed in bench_floors.toml; see that file for the rationale
-        // behind the margin). Gate + measurement land in the JSON's meta so
-        // the uploaded artifact is self-describing even on a miss.
+        // behind the margin). Gate + measurement + kernel path land in the
+        // JSON's meta so the uploaded artifact is self-describing even on
+        // a miss.
         let floor = floors::resolve("obs", "NAVIX_OBS_SMOKE_FLOOR", 100_000.0);
         report.meta("agents_per_slot", "1");
-        report.meta("gate", "overlay symbolic_first_person steps/s");
+        report.meta("gate", "overlay symbolic + symbolic_first_person steps/s (active kernel)");
         report.meta("measured", &format!("{smoke_floor_sps:.0}"));
         report.meta("floor", &format!("{:.0}", floor.value));
         report.meta("floor_source", &floor.source);
+        simd_meta(&mut report);
         report.save();
         if smoke_floor_sps < floor.value {
             println!(
-                "measured {smoke_floor_sps:.0} steps/s < floor {:.0} (source: {})",
-                floor.value, floor.source
+                "measured {smoke_floor_sps:.0} steps/s < floor {:.0} (source: {}) \
+                 [kernel path: {}, detected: {}]",
+                floor.value,
+                floor.source,
+                active.name(),
+                simd::detected().name()
             );
             std::process::exit(1);
         }
         println!(
-            "\nsmoke gate: overlay symbolic_first_person ≥ {:.0} steps/s \
-             (measured {smoke_floor_sps:.0}, source: {}) — OK",
-            floor.value, floor.source
+            "\nsmoke gate: overlay symbolic kinds ≥ {:.0} steps/s \
+             (measured {smoke_floor_sps:.0}, source: {}, kernel path: {}) — OK",
+            floor.value,
+            floor.source,
+            active.name()
         );
     } else {
+        simd_meta(&mut report);
         report.save();
-        println!("\n(expected shape: overlay ≥2x naive on first-person symbolic at B=2048;");
-        println!(" full-grid kinds gain more — the naive path paid O(caps) per cell — and");
+        println!("\n(expected shape: simd ≥1.5x scalar on full-grid symbolic at B=2048 —");
+        println!(" first-person and rgb rows sit at ~1x simd_mult by construction; overlay");
+        println!(" beats naive everywhere — the naive path paid O(caps) per cell — and");
         println!(" full rgb gains most: dirty tiles re-blit only what changed)");
     }
 }

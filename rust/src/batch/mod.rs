@@ -85,7 +85,7 @@ use crate::envs::EnvConfig;
 use crate::rng::Key;
 use fault::{catch_fault, payload_to_string, Supervisor};
 use crate::systems::intervention::intervene;
-use crate::systems::observations::{rgb_incremental, ObsKind, ObsPath};
+use crate::systems::observations::{rgb_incremental, ObsKind, ObsPath, ObsRoute};
 use crate::systems::sprites::SpriteSheet;
 use crate::systems::transition::transition;
 
@@ -404,9 +404,11 @@ pub struct BatchedEnv {
     pub timestep: BatchedTimestep,
     pub obs: ObsBatch,
     sprites: Option<Arc<SpriteSheet>>,
-    /// Which observation implementation runs (overlay by default; the scan
-    /// oracle is selectable for parity tests and the obs_throughput bench).
-    obs_path: ObsPath,
+    /// Which observation route runs: implementation (overlay by default;
+    /// the scan oracle is selectable for parity tests and the
+    /// obs_throughput bench) plus, on the overlay path, the SIMD kernel —
+    /// resolved once here and threaded through every writer.
+    obs_route: ObsRoute,
     /// Dirty-tile cache for full-grid rgb: per agent-row, the render code
     /// each tile of the obs buffer currently shows (`b·a·h·w`; empty
     /// otherwise). `cellcode::INVALID` marks a tile as needing a blit.
@@ -461,7 +463,7 @@ impl BatchedEnv {
             timestep: BatchedTimestep::first(rows),
             obs,
             sprites,
-            obs_path: ObsPath::Overlay,
+            obs_route: ObsPath::Overlay.route(),
             rgb_prev,
             key,
             index_offset,
@@ -478,14 +480,27 @@ impl BatchedEnv {
     }
 
     /// Select the observation implementation (parity tests and the
-    /// `obs_throughput` bench switch to the scan oracle here). Invalidates
-    /// the rgb dirty-tile cache so the next frame is a full render.
+    /// `obs_throughput` bench switch to the scan oracle here); the SIMD
+    /// kernel is resolved once via [`ObsPath::route`]. Invalidates the rgb
+    /// dirty-tile cache so the next frame is a full render.
     pub fn set_obs_path(&mut self, path: ObsPath) {
-        self.obs_path = path;
+        self.set_obs_route(path.route());
+    }
+
+    /// Force a fully-resolved observation route — the SIMD parity suite
+    /// pins forced kernel paths through the whole engine here. Invalidates
+    /// the rgb dirty-tile cache so the next frame is a full render.
+    pub fn set_obs_route(&mut self, route: ObsRoute) {
+        self.obs_route = route;
         self.rgb_prev.fill(cellcode::INVALID);
         for i in 0..self.b {
             self.write_obs(i);
         }
+    }
+
+    /// The resolved observation route this engine writes through.
+    pub fn obs_route(&self) -> ObsRoute {
+        self.obs_route
     }
 
     /// Number of discrete actions.
@@ -849,12 +864,13 @@ impl BatchedEnv {
             match &mut self.obs.data {
                 ObsData::I32(v) => {
                     let out = &mut v[r * stride..(r + 1) * stride];
-                    self.cfg.obs.write_i32_path(self.obs_path, &slot, out);
+                    self.cfg.obs.write_i32_route(self.obs_route, &slot, out);
                 }
                 ObsData::U8(v) => {
                     let sheet = self.sprites.as_ref().expect("sprite sheet for rgb obs");
                     let out = &mut v[r * stride..(r + 1) * stride];
-                    if self.cfg.obs.kind == ObsKind::Rgb && self.obs_path == ObsPath::Overlay {
+                    let overlay = matches!(self.obs_route, ObsRoute::Overlay(_));
+                    if self.cfg.obs.kind == ObsKind::Rgb && overlay {
                         // Dirty-tile path: the obs buffer persists across
                         // steps, so only tiles whose render code changed are
                         // re-blitted (a fresh env starts all-INVALID → one
@@ -863,13 +879,13 @@ impl BatchedEnv {
                         let prev = &mut self.rgb_prev[r * hw..(r + 1) * hw];
                         rgb_incremental(&slot, sheet, prev, out);
                     } else {
-                        self.cfg.obs.write_u8_path(self.obs_path, &slot, sheet, out);
+                        self.cfg.obs.write_u8_route(self.obs_route, &slot, sheet, out);
                     }
                 }
             }
             // The goal-conditioning side channel rides along per agent-row.
             let mrow = &mut self.obs.mission[r * MISSION_DIM..(r + 1) * MISSION_DIM];
-            self.cfg.obs.write_mission_path(self.obs_path, &slot, mrow);
+            self.cfg.obs.write_mission_route(self.obs_route, &slot, mrow);
         }
     }
 

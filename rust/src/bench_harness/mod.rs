@@ -68,7 +68,22 @@ impl Report {
     pub fn meta(&mut self, key: &str, value: &str) {
         self.meta.push((key.to_string(), value.to_string()));
     }
+}
 
+/// Record the SIMD dispatch decision in `report`'s meta block: the path the
+/// kernels actually run (`simd_path`), what the CPU probe found
+/// (`simd_detected`) and what the environment forced (`simd_requested`,
+/// `"auto"` when unforced). Every `BENCH_*.json` carries these, so the
+/// artifact alone names the kernel width behind its numbers — and the
+/// nightly auto-vs-scalar matrix can be compared without re-deriving the
+/// runner's capabilities.
+pub fn simd_meta(report: &mut Report) {
+    report.meta("simd_path", crate::simd::active().name());
+    report.meta("simd_detected", crate::simd::detected().name());
+    report.meta("simd_requested", crate::simd::requested().map_or("auto", |p| p.name()));
+}
+
+impl Report {
     /// Write the table under `results/` (best-effort): as TSV for
     /// EXPERIMENTS.md citations and as `BENCH_<name>.json` — the artifact
     /// the CI bench-smoke job uploads so the perf trajectory is recorded
@@ -151,5 +166,15 @@ mod tests {
         r.meta("floor_source", "bench_floors.toml");
         let j = r.to_json();
         assert!(j.contains("\"meta\":{\"floor\":\"8000\",\"floor_source\":\"bench_floors.toml\"}"));
+    }
+
+    #[test]
+    fn simd_meta_records_the_dispatch_decision() {
+        let mut r = Report::new("simd meta test", &["a"]);
+        simd_meta(&mut r);
+        let j = r.to_json();
+        assert!(j.contains(&format!("\"simd_path\":\"{}\"", crate::simd::active().name())));
+        assert!(j.contains(&format!("\"simd_detected\":\"{}\"", crate::simd::detected().name())));
+        assert!(j.contains("\"simd_requested\":\""));
     }
 }

@@ -32,6 +32,7 @@ pub mod bench_harness;
 pub mod cli;
 pub mod config;
 pub mod rng;
+pub mod simd;
 
 pub mod core;
 pub mod systems;
@@ -53,3 +54,4 @@ pub use crate::core::snapshot::{EngineCheckpoint, SlotCheckpoint, SlotSnapshot};
 pub use crate::core::actions::Action;
 pub use crate::core::timestep::{StepType, Timestep};
 pub use crate::envs::registry::{list_envs, make, make_with};
+pub use crate::simd::KernelPath;

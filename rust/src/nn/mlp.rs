@@ -19,8 +19,19 @@
 //! only: output tiles of 4 (register blocking — the input row is fetched
 //! once per 4 dot products) and the natural sample-major sweep that keeps
 //! each weight row hot across the batch.
+//!
+//! On top of the scalar microkernel, the batch path dispatches on a
+//! [`KernelPath`] ([`BatchCache::kernel`], defaulting to the process-wide
+//! [`simd::active`] probe): AVX2/SSE2 [`kernels`] vectorise the
+//! *independent* axes only — output columns forward, input columns
+//! backward — while every reduction keeps the scalar order, and FMA is
+//! deliberately unused. Each vector lane therefore performs the exact
+//! scalar `mul`→`add` sequence, so the SIMD paths remain bit-for-bit
+//! identical to the row path (pinned per forced path by the tests here
+//! and the CI `simd-matrix` job).
 
 use crate::rng::Rng;
+use crate::simd::{self, KernelPath};
 
 /// Hidden-layer activation.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -74,7 +85,7 @@ pub struct Cache {
 /// streams, and the two delta planes. All buffers are grown on first use
 /// and reused across calls, so a training loop performs **zero** NN-side
 /// heap allocation after the first minibatch.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct BatchCache {
     /// Activations per layer, `acts[l]` is `[bsz × dims[l]]` row-major.
     pub acts: Vec<Vec<f32>>,
@@ -84,11 +95,36 @@ pub struct BatchCache {
     /// [`Mlp::backward_batch`] each call (Adam mutates the weights between
     /// minibatches, so there is nothing stale to reuse — the win is the
     /// reused allocation and the contiguous `[in][out]` rows that turn the
-    /// delta back-propagation into straight dot products).
+    /// delta back-propagation into straight dot products). Scalar path
+    /// only; the vector path streams the original row-major weights.
     wt: Vec<Vec<f32>>,
+    /// Per-layer forward-transposed weights (`[in × out]`) for the vector
+    /// forward kernel — one contiguous load per output-column block per
+    /// input element. Rebuilt by [`Mlp::forward_batch`] each call, for the
+    /// same reason as `wt`. Vector paths only.
+    fwt: Vec<Vec<f32>>,
     /// Delta planes (`[bsz × max_dim]`), double-buffered across layers.
     d_cur: Vec<f32>,
     d_nxt: Vec<f32>,
+    /// Which kernel path the batch GEMMs run, clamped to the CPU at
+    /// dispatch time. Defaults to the process-wide probe
+    /// ([`simd::active`]); the bitwise unit tests force specific paths
+    /// here.
+    pub kernel: KernelPath,
+}
+
+impl Default for BatchCache {
+    fn default() -> Self {
+        BatchCache {
+            acts: Vec::new(),
+            bsz: 0,
+            wt: Vec::new(),
+            fwt: Vec::new(),
+            d_cur: Vec::new(),
+            d_nxt: Vec::new(),
+            kernel: simd::active(),
+        }
+    }
 }
 
 impl BatchCache {
@@ -172,6 +208,454 @@ fn dense_forward(
     }
 }
 
+/// `wt[i][o] = w[o][i]` — exact element copies, so accumulating from
+/// either layout yields bitwise-identical products.
+fn transpose(w: &[f32], wt: &mut [f32], nin: usize, nout: usize) {
+    for o in 0..nout {
+        for i in 0..nin {
+            wt[i * nout + o] = w[o * nin + i];
+        }
+    }
+}
+
+/// The vector GEMM kernels: f32 `std::arch` paths for the three hot loops
+/// (forward accumulate, parameter-gradient accumulate, delta
+/// back-propagation), dispatched by [`KernelPath`].
+///
+/// **Bitwise-identity contract.** Every kernel vectorises only an
+/// *independent* axis — output columns in the forward pass, input columns
+/// in the gradient/delta passes — while each reduction runs sequentially
+/// in exactly the scalar order (ascending input index / ascending output
+/// index / ascending sample index). Each lane therefore performs the same
+/// `mul` → `add` sequence, on the same values, in the same order as the
+/// scalar code; with FMA deliberately unused (separate `_mm*_mul_ps` +
+/// `_mm*_add_ps`, each IEEE-754 correctly rounded exactly like the scalar
+/// `*` and `+`), every intermediate f32 is identical, and the batch path
+/// stays bit-for-bit equal to the per-sample oracle on every path.
+/// Activations are applied scalar-ly after the accumulate (`f32::max` and
+/// `_mm*_max_ps` disagree on ±0.0, and `tanh` has no vector form). Column
+/// counts not divisible by the lane width fall through to scalar tails
+/// with the same reduction order.
+///
+/// `unsafe` is confined to this module (the workspace denies it
+/// elsewhere): the only unsafe operations are `std::arch` intrinsics and
+/// raw-pointer loads/stores whose bounds are established by the
+/// `+ LANES <= n` loop guards, and every `#[target_feature]` entry point
+/// is reachable only after [`simd::effective`] clamps the requested path
+/// to what the CPU probe found.
+#[allow(unsafe_code)]
+mod kernels {
+    use super::Activation;
+    use crate::simd::KernelPath;
+
+    /// Forward microkernel over forward-transposed weights `wt`
+    /// (`[in × out]`): `out[s][o] = act(bias[o] + Σ_i wt[i][o]·x[s][i])`.
+    /// `kp` must already be clamped via [`crate::simd::effective`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn dense_forward_vec(
+        kp: KernelPath,
+        x: &[f32],
+        wt: &[f32],
+        bias: &[f32],
+        out: &mut [f32],
+        bsz: usize,
+        nin: usize,
+        nout: usize,
+        act: Option<Activation>,
+    ) {
+        debug_assert!(x.len() >= bsz * nin && out.len() >= bsz * nout);
+        debug_assert!(wt.len() >= nin * nout && bias.len() >= nout);
+        match kp {
+            #[cfg(target_arch = "x86_64")]
+            KernelPath::Avx2 => unsafe {
+                dense_forward_avx2(x, wt, bias, out, bsz, nin, nout, act)
+            },
+            #[cfg(target_arch = "x86_64")]
+            KernelPath::Sse2 => unsafe {
+                dense_forward_sse2(x, wt, bias, out, bsz, nin, nout, act)
+            },
+            // Defensive fallback (dispatchers route Scalar to the row-major
+            // microkernel before calling here): the same accumulation over
+            // the transposed layout — identical values, identical order.
+            _ => {
+                for s in 0..bsz {
+                    let xr = &x[s * nin..(s + 1) * nin];
+                    let or = &mut out[s * nout..(s + 1) * nout];
+                    for o in 0..nout {
+                        let mut acc = bias[o];
+                        for i in 0..nin {
+                            acc += wt[i * nout + o] * xr[i];
+                        }
+                        or[o] = match act {
+                            Some(a) => a.f(acc),
+                            None => acc,
+                        };
+                    }
+                }
+            }
+        }
+    }
+
+    /// Parameter-gradient microkernel: `gb[o] += δ[s][o]` and
+    /// `gw[o][i] += δ[s][o]·x[s][i]`, samples ascending. Vectorised over
+    /// the input columns of each weight row — an independent axis; the
+    /// per-parameter sample reduction order is unchanged.
+    pub fn grad_params_vec(
+        kp: KernelPath,
+        delta: &[f32],
+        input: &[f32],
+        gw: &mut [f32],
+        gb: &mut [f32],
+        bsz: usize,
+        nin: usize,
+        nout: usize,
+    ) {
+        debug_assert!(delta.len() >= bsz * nout && input.len() >= bsz * nin);
+        debug_assert!(gw.len() >= nin * nout && gb.len() >= nout);
+        match kp {
+            #[cfg(target_arch = "x86_64")]
+            KernelPath::Avx2 => unsafe { grad_params_avx2(delta, input, gw, gb, bsz, nin, nout) },
+            #[cfg(target_arch = "x86_64")]
+            KernelPath::Sse2 => unsafe { grad_params_sse2(delta, input, gw, gb, bsz, nin, nout) },
+            _ => {
+                for s in 0..bsz {
+                    let dr = &delta[s * nout..(s + 1) * nout];
+                    let xr = &input[s * nin..(s + 1) * nin];
+                    for o in 0..nout {
+                        let d = dr[o];
+                        gb[o] += d;
+                        let row = &mut gw[o * nin..(o + 1) * nin];
+                        for i in 0..nin {
+                            row[i] += d * xr[i];
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Delta back-propagation: `prev[s][i] = Σ_o δ[s][o]·w[o][i]` with the
+    /// o-sum ascending, straight from the row-major weights (lane `i+k`
+    /// reads `w[o][i+k]` contiguously). Vectorised over input columns —
+    /// the independent axis.
+    pub fn backprop_delta_vec(
+        kp: KernelPath,
+        delta: &[f32],
+        w: &[f32],
+        prev: &mut [f32],
+        bsz: usize,
+        nin: usize,
+        nout: usize,
+    ) {
+        debug_assert!(delta.len() >= bsz * nout && prev.len() >= bsz * nin);
+        debug_assert!(w.len() >= nin * nout);
+        match kp {
+            #[cfg(target_arch = "x86_64")]
+            KernelPath::Avx2 => unsafe { backprop_delta_avx2(delta, w, prev, bsz, nin, nout) },
+            #[cfg(target_arch = "x86_64")]
+            KernelPath::Sse2 => unsafe { backprop_delta_sse2(delta, w, prev, bsz, nin, nout) },
+            _ => {
+                for s in 0..bsz {
+                    let dr = &delta[s * nout..(s + 1) * nout];
+                    let pr = &mut prev[s * nin..(s + 1) * nin];
+                    for i in 0..nin {
+                        let mut acc = 0.0f32;
+                        for (o, &d) in dr.iter().enumerate() {
+                            acc += d * w[o * nin + i];
+                        }
+                        pr[i] = acc;
+                    }
+                }
+            }
+        }
+    }
+
+    /// # Safety
+    /// The CPU must support avx2; slice bounds as asserted by the caller.
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn dense_forward_avx2(
+        x: &[f32],
+        wt: &[f32],
+        bias: &[f32],
+        out: &mut [f32],
+        bsz: usize,
+        nin: usize,
+        nout: usize,
+        act: Option<Activation>,
+    ) {
+        use std::arch::x86_64::*;
+        for s in 0..bsz {
+            let xr = &x[s * nin..(s + 1) * nin];
+            let or = &mut out[s * nout..(s + 1) * nout];
+            let mut o = 0;
+            // 4 accumulator vectors (32 columns) per pass: the reduction
+            // chain per lane stays sequential in i — blocking only adds
+            // instruction-level parallelism across *independent* columns.
+            while o + 32 <= nout {
+                let bp = bias.as_ptr().add(o);
+                let mut a0 = _mm256_loadu_ps(bp);
+                let mut a1 = _mm256_loadu_ps(bp.add(8));
+                let mut a2 = _mm256_loadu_ps(bp.add(16));
+                let mut a3 = _mm256_loadu_ps(bp.add(24));
+                for (i, &xi) in xr.iter().enumerate() {
+                    let xv = _mm256_set1_ps(xi);
+                    let wp = wt.as_ptr().add(i * nout + o);
+                    a0 = _mm256_add_ps(a0, _mm256_mul_ps(_mm256_loadu_ps(wp), xv));
+                    a1 = _mm256_add_ps(a1, _mm256_mul_ps(_mm256_loadu_ps(wp.add(8)), xv));
+                    a2 = _mm256_add_ps(a2, _mm256_mul_ps(_mm256_loadu_ps(wp.add(16)), xv));
+                    a3 = _mm256_add_ps(a3, _mm256_mul_ps(_mm256_loadu_ps(wp.add(24)), xv));
+                }
+                let op = or.as_mut_ptr().add(o);
+                _mm256_storeu_ps(op, a0);
+                _mm256_storeu_ps(op.add(8), a1);
+                _mm256_storeu_ps(op.add(16), a2);
+                _mm256_storeu_ps(op.add(24), a3);
+                o += 32;
+            }
+            while o + 8 <= nout {
+                let mut acc = _mm256_loadu_ps(bias.as_ptr().add(o));
+                for (i, &xi) in xr.iter().enumerate() {
+                    let wv = _mm256_loadu_ps(wt.as_ptr().add(i * nout + o));
+                    acc = _mm256_add_ps(acc, _mm256_mul_ps(wv, _mm256_set1_ps(xi)));
+                }
+                _mm256_storeu_ps(or.as_mut_ptr().add(o), acc);
+                o += 8;
+            }
+            while o < nout {
+                let mut acc = bias[o];
+                for (i, &xi) in xr.iter().enumerate() {
+                    acc += wt[i * nout + o] * xi;
+                }
+                or[o] = acc;
+                o += 1;
+            }
+            // Activation applied scalar-ly so rounding matches the row
+            // path exactly (see module docs).
+            if let Some(a) = act {
+                for v in or.iter_mut() {
+                    *v = a.f(*v);
+                }
+            }
+        }
+    }
+
+    /// # Safety
+    /// The CPU must support sse2; slice bounds as asserted by the caller.
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "sse2")]
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn dense_forward_sse2(
+        x: &[f32],
+        wt: &[f32],
+        bias: &[f32],
+        out: &mut [f32],
+        bsz: usize,
+        nin: usize,
+        nout: usize,
+        act: Option<Activation>,
+    ) {
+        use std::arch::x86_64::*;
+        for s in 0..bsz {
+            let xr = &x[s * nin..(s + 1) * nin];
+            let or = &mut out[s * nout..(s + 1) * nout];
+            let mut o = 0;
+            while o + 16 <= nout {
+                let bp = bias.as_ptr().add(o);
+                let mut a0 = _mm_loadu_ps(bp);
+                let mut a1 = _mm_loadu_ps(bp.add(4));
+                let mut a2 = _mm_loadu_ps(bp.add(8));
+                let mut a3 = _mm_loadu_ps(bp.add(12));
+                for (i, &xi) in xr.iter().enumerate() {
+                    let xv = _mm_set1_ps(xi);
+                    let wp = wt.as_ptr().add(i * nout + o);
+                    a0 = _mm_add_ps(a0, _mm_mul_ps(_mm_loadu_ps(wp), xv));
+                    a1 = _mm_add_ps(a1, _mm_mul_ps(_mm_loadu_ps(wp.add(4)), xv));
+                    a2 = _mm_add_ps(a2, _mm_mul_ps(_mm_loadu_ps(wp.add(8)), xv));
+                    a3 = _mm_add_ps(a3, _mm_mul_ps(_mm_loadu_ps(wp.add(12)), xv));
+                }
+                let op = or.as_mut_ptr().add(o);
+                _mm_storeu_ps(op, a0);
+                _mm_storeu_ps(op.add(4), a1);
+                _mm_storeu_ps(op.add(8), a2);
+                _mm_storeu_ps(op.add(12), a3);
+                o += 16;
+            }
+            while o + 4 <= nout {
+                let mut acc = _mm_loadu_ps(bias.as_ptr().add(o));
+                for (i, &xi) in xr.iter().enumerate() {
+                    let wv = _mm_loadu_ps(wt.as_ptr().add(i * nout + o));
+                    acc = _mm_add_ps(acc, _mm_mul_ps(wv, _mm_set1_ps(xi)));
+                }
+                _mm_storeu_ps(or.as_mut_ptr().add(o), acc);
+                o += 4;
+            }
+            while o < nout {
+                let mut acc = bias[o];
+                for (i, &xi) in xr.iter().enumerate() {
+                    acc += wt[i * nout + o] * xi;
+                }
+                or[o] = acc;
+                o += 1;
+            }
+            if let Some(a) = act {
+                for v in or.iter_mut() {
+                    *v = a.f(*v);
+                }
+            }
+        }
+    }
+
+    /// # Safety
+    /// The CPU must support avx2; slice bounds as asserted by the caller.
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "avx2")]
+    unsafe fn grad_params_avx2(
+        delta: &[f32],
+        input: &[f32],
+        gw: &mut [f32],
+        gb: &mut [f32],
+        bsz: usize,
+        nin: usize,
+        nout: usize,
+    ) {
+        use std::arch::x86_64::*;
+        for s in 0..bsz {
+            let dr = &delta[s * nout..(s + 1) * nout];
+            let xr = &input[s * nin..(s + 1) * nin];
+            for o in 0..nout {
+                let d = dr[o];
+                gb[o] += d;
+                let row = &mut gw[o * nin..(o + 1) * nin];
+                let dv = _mm256_set1_ps(d);
+                let mut i = 0;
+                while i + 8 <= nin {
+                    let rp = row.as_mut_ptr().add(i);
+                    let xv = _mm256_loadu_ps(xr.as_ptr().add(i));
+                    _mm256_storeu_ps(rp, _mm256_add_ps(_mm256_loadu_ps(rp), _mm256_mul_ps(dv, xv)));
+                    i += 8;
+                }
+                while i < nin {
+                    row[i] += d * xr[i];
+                    i += 1;
+                }
+            }
+        }
+    }
+
+    /// # Safety
+    /// The CPU must support sse2; slice bounds as asserted by the caller.
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "sse2")]
+    unsafe fn grad_params_sse2(
+        delta: &[f32],
+        input: &[f32],
+        gw: &mut [f32],
+        gb: &mut [f32],
+        bsz: usize,
+        nin: usize,
+        nout: usize,
+    ) {
+        use std::arch::x86_64::*;
+        for s in 0..bsz {
+            let dr = &delta[s * nout..(s + 1) * nout];
+            let xr = &input[s * nin..(s + 1) * nin];
+            for o in 0..nout {
+                let d = dr[o];
+                gb[o] += d;
+                let row = &mut gw[o * nin..(o + 1) * nin];
+                let dv = _mm_set1_ps(d);
+                let mut i = 0;
+                while i + 4 <= nin {
+                    let rp = row.as_mut_ptr().add(i);
+                    let xv = _mm_loadu_ps(xr.as_ptr().add(i));
+                    _mm_storeu_ps(rp, _mm_add_ps(_mm_loadu_ps(rp), _mm_mul_ps(dv, xv)));
+                    i += 4;
+                }
+                while i < nin {
+                    row[i] += d * xr[i];
+                    i += 1;
+                }
+            }
+        }
+    }
+
+    /// # Safety
+    /// The CPU must support avx2; slice bounds as asserted by the caller.
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "avx2")]
+    unsafe fn backprop_delta_avx2(
+        delta: &[f32],
+        w: &[f32],
+        prev: &mut [f32],
+        bsz: usize,
+        nin: usize,
+        nout: usize,
+    ) {
+        use std::arch::x86_64::*;
+        for s in 0..bsz {
+            let dr = &delta[s * nout..(s + 1) * nout];
+            let pr = &mut prev[s * nin..(s + 1) * nin];
+            let mut i = 0;
+            while i + 8 <= nin {
+                let mut acc = _mm256_setzero_ps();
+                for (o, &d) in dr.iter().enumerate() {
+                    let wv = _mm256_loadu_ps(w.as_ptr().add(o * nin + i));
+                    acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_set1_ps(d), wv));
+                }
+                _mm256_storeu_ps(pr.as_mut_ptr().add(i), acc);
+                i += 8;
+            }
+            while i < nin {
+                let mut acc = 0.0f32;
+                for (o, &d) in dr.iter().enumerate() {
+                    acc += d * w[o * nin + i];
+                }
+                pr[i] = acc;
+                i += 1;
+            }
+        }
+    }
+
+    /// # Safety
+    /// The CPU must support sse2; slice bounds as asserted by the caller.
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "sse2")]
+    unsafe fn backprop_delta_sse2(
+        delta: &[f32],
+        w: &[f32],
+        prev: &mut [f32],
+        bsz: usize,
+        nin: usize,
+        nout: usize,
+    ) {
+        use std::arch::x86_64::*;
+        for s in 0..bsz {
+            let dr = &delta[s * nout..(s + 1) * nout];
+            let pr = &mut prev[s * nin..(s + 1) * nin];
+            let mut i = 0;
+            while i + 4 <= nin {
+                let mut acc = _mm_setzero_ps();
+                for (o, &d) in dr.iter().enumerate() {
+                    let wv = _mm_loadu_ps(w.as_ptr().add(o * nin + i));
+                    acc = _mm_add_ps(acc, _mm_mul_ps(_mm_set1_ps(d), wv));
+                }
+                _mm_storeu_ps(pr.as_mut_ptr().add(i), acc);
+                i += 4;
+            }
+            while i < nin {
+                let mut acc = 0.0f32;
+                for (o, &d) in dr.iter().enumerate() {
+                    acc += d * w[o * nin + i];
+                }
+                pr[i] = acc;
+                i += 1;
+            }
+        }
+    }
+}
+
 impl Mlp {
     /// Total parameter count for `dims`.
     pub fn param_count(dims: &[usize]) -> usize {
@@ -240,12 +724,14 @@ impl Mlp {
     pub fn forward_batch(&self, x: &[f32], bsz: usize, cache: &mut BatchCache) {
         debug_assert_eq!(x.len(), bsz * self.dims[0]);
         let n_layers = self.n_layers();
+        let kp = simd::effective(cache.kernel);
         cache.bsz = bsz;
         cache.acts.resize(self.dims.len(), Vec::new());
         for (l, &dim) in self.dims.iter().enumerate() {
             ensure(&mut cache.acts[l], bsz * dim);
         }
         cache.acts[0][..bsz * self.dims[0]].copy_from_slice(x);
+        cache.fwt.resize(n_layers, Vec::new());
         let mut off = 0;
         for li in 0..n_layers {
             let (nin, nout) = (self.dims[li], self.dims[li + 1]);
@@ -254,16 +740,20 @@ impl Mlp {
             let act = if li + 1 < n_layers { Some(self.act) } else { None };
             // Split-borrow the two activation planes around `li`.
             let (lo, hi) = cache.acts.split_at_mut(li + 1);
-            dense_forward(
-                &lo[li][..bsz * nin],
-                w,
-                b,
-                &mut hi[0][..bsz * nout],
-                bsz,
-                nin,
-                nout,
-                act,
-            );
+            let xin = &lo[li][..bsz * nin];
+            let out = &mut hi[0][..bsz * nout];
+            if kp == KernelPath::Scalar {
+                dense_forward(xin, w, b, out, bsz, nin, nout, act);
+            } else {
+                // Vector path: stream forward-transposed weights so one
+                // output-column block is one contiguous load per input
+                // element. Same products, same ascending-i order — bitwise
+                // identical (see `kernels`).
+                let wt = &mut cache.fwt[li];
+                ensure(wt, nin * nout);
+                transpose(w, wt, nin, nout);
+                kernels::dense_forward_vec(kp, xin, wt, b, out, bsz, nin, nout, act);
+            }
             off += nin * nout + nout;
         }
     }
@@ -287,6 +777,7 @@ impl Mlp {
             off += w[0] * w[1] + w[1];
         }
         let max_dim = *self.dims.iter().max().unwrap();
+        let kp = simd::effective(cache.kernel);
         ensure(&mut cache.d_cur, bsz * max_dim);
         ensure(&mut cache.d_nxt, bsz * max_dim);
         cache.wt.resize(n_layers, Vec::new());
@@ -311,43 +802,63 @@ impl Mlp {
             // Parameter gradients, sample-major: each parameter receives
             // its per-sample contributions in ascending sample order —
             // the same order a per-sample loop over Mlp::backward uses.
-            for s in 0..bsz {
-                let dr = &cache.d_cur[s * nout..(s + 1) * nout];
-                let xr = &input[s * nin..(s + 1) * nin];
-                for o in 0..nout {
-                    let d = dr[o];
-                    gb[o] += d;
-                    let row = &mut gw[o * nin..(o + 1) * nin];
-                    for i in 0..nin {
-                        row[i] += d * xr[i];
-                    }
-                }
-            }
-            if li > 0 {
-                // Propagate: δ_prev[s][i] = Σ_o δ[s][o]·w[o][i], computed as
-                // dot products against the transposed weights so each
-                // accumulator streams a contiguous `[out]` row. The o-sum
-                // runs in ascending order — identical to the row path's
-                // `prev[i] += d·w[o][i]` accumulation.
-                let w = &self.params[off..off + nin * nout];
-                let wt = &mut cache.wt[li];
-                ensure(wt, nin * nout);
-                for o in 0..nout {
-                    for i in 0..nin {
-                        wt[i * nout + o] = w[o * nin + i];
-                    }
-                }
+            // The vector kernel widens over input columns only, keeping
+            // that reduction order (see `kernels`).
+            if kp == KernelPath::Scalar {
                 for s in 0..bsz {
                     let dr = &cache.d_cur[s * nout..(s + 1) * nout];
-                    let pr = &mut cache.d_nxt[s * nin..(s + 1) * nin];
-                    for i in 0..nin {
-                        let wr = &wt[i * nout..(i + 1) * nout];
-                        let mut acc = 0.0f32;
-                        for o in 0..nout {
-                            acc += dr[o] * wr[o];
+                    let xr = &input[s * nin..(s + 1) * nin];
+                    for o in 0..nout {
+                        let d = dr[o];
+                        gb[o] += d;
+                        let row = &mut gw[o * nin..(o + 1) * nin];
+                        for i in 0..nin {
+                            row[i] += d * xr[i];
                         }
-                        pr[i] = acc;
                     }
+                }
+            } else {
+                kernels::grad_params_vec(kp, &cache.d_cur, input, gw, gb, bsz, nin, nout);
+            }
+            if li > 0 {
+                // Propagate: δ_prev[s][i] = Σ_o δ[s][o]·w[o][i] with the
+                // o-sum in ascending order — identical to the row path's
+                // `prev[i] += d·w[o][i]` accumulation. The scalar path
+                // streams transposed weights (contiguous `[out]` rows per
+                // accumulator); the vector path reads the row-major
+                // weights directly, 8/4 contiguous `i` lanes at a time —
+                // same products, same order, bitwise identical.
+                let w = &self.params[off..off + nin * nout];
+                if kp == KernelPath::Scalar {
+                    let wt = &mut cache.wt[li];
+                    ensure(wt, nin * nout);
+                    for o in 0..nout {
+                        for i in 0..nin {
+                            wt[i * nout + o] = w[o * nin + i];
+                        }
+                    }
+                    for s in 0..bsz {
+                        let dr = &cache.d_cur[s * nout..(s + 1) * nout];
+                        let pr = &mut cache.d_nxt[s * nin..(s + 1) * nin];
+                        for i in 0..nin {
+                            let wr = &wt[i * nout..(i + 1) * nout];
+                            let mut acc = 0.0f32;
+                            for o in 0..nout {
+                                acc += dr[o] * wr[o];
+                            }
+                            pr[i] = acc;
+                        }
+                    }
+                } else {
+                    kernels::backprop_delta_vec(
+                        kp,
+                        &cache.d_cur,
+                        w,
+                        &mut cache.d_nxt,
+                        bsz,
+                        nin,
+                        nout,
+                    );
                 }
                 std::mem::swap(&mut cache.d_cur, &mut cache.d_nxt);
             }
@@ -557,6 +1068,83 @@ mod tests {
         for s in 0..3 {
             let row = mlp.infer(&small[s * 4..(s + 1) * 4]);
             assert_eq!(&bc.out()[s * 2..(s + 1) * 2], &row[..]);
+        }
+    }
+
+    #[test]
+    fn forced_kernel_paths_match_the_scalar_oracle_bitwise() {
+        // Sweep every supported KernelPath (the CI simd-matrix contract):
+        // forward activations and accumulated gradients must be bitwise
+        // equal to the forced-scalar batch path AND the per-sample row
+        // path. Dims chosen to hit every vector block and tail: on avx2,
+        // nout = 37 = one 32-block + 5 scalar tail, 19 = two 8-blocks + 3
+        // tail, 5 = pure tail; on sse2, 37 = two 16-blocks + one 4-block +
+        // 1 tail. bsz 11 is not a multiple of anything.
+        for kp in KernelPath::ALL {
+            if !kp.supported() {
+                println!("skipping {}: unsupported on this CPU", kp.name());
+                continue;
+            }
+            for act in [Activation::Relu, Activation::Tanh] {
+                let mut rng = Rng::new(99);
+                let dims = [13, 37, 19, 5];
+                let (nin, nout) = (dims[0], dims[3]);
+                let mlp = Mlp::new(&dims, act, &mut rng);
+                let bsz = 11;
+                let x: Vec<f32> = (0..bsz * nin).map(|_| rng.normal() as f32).collect();
+
+                let mut bc_s = BatchCache { kernel: KernelPath::Scalar, ..Default::default() };
+                mlp.forward_batch(&x, bsz, &mut bc_s);
+                let mut bc_v = BatchCache { kernel: kp, ..Default::default() };
+                mlp.forward_batch(&x, bsz, &mut bc_v);
+                let out_len = bsz * nout;
+                assert_eq!(
+                    &bc_s.out()[..out_len],
+                    &bc_v.out()[..out_len],
+                    "forward {} vs scalar ({act:?})",
+                    kp.name()
+                );
+                for s in 0..bsz {
+                    let row = mlp.infer(&x[s * nin..(s + 1) * nin]);
+                    assert_eq!(
+                        &bc_v.out()[s * nout..(s + 1) * nout],
+                        &row[..],
+                        "forward {} vs row path, sample {s} ({act:?})",
+                        kp.name()
+                    );
+                }
+
+                let gout: Vec<f32> = bc_v.out()[..out_len].to_vec();
+                let mut g_s = vec![0.0f32; mlp.params.len()];
+                mlp.backward_batch(&mut bc_s, &gout, &mut g_s);
+                let mut g_v = vec![0.0f32; mlp.params.len()];
+                mlp.backward_batch(&mut bc_v, &gout, &mut g_v);
+                assert_eq!(g_s, g_v, "backward {} vs scalar ({act:?})", kp.name());
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_paths_survive_cache_reuse_across_shapes() {
+        // One cache re-used across two different nets and batch sizes: the
+        // grown fwt/delta workspaces must not leak stale state into later
+        // calls on any supported path.
+        for kp in KernelPath::ALL {
+            if !kp.supported() {
+                continue;
+            }
+            let mut rng = Rng::new(3);
+            let big = Mlp::new(&[12, 40, 9], Activation::Tanh, &mut rng);
+            let small = Mlp::new(&[6, 17, 4], Activation::Relu, &mut rng);
+            let xb: Vec<f32> = (0..9 * 12).map(|_| rng.normal() as f32).collect();
+            let xs: Vec<f32> = (0..5 * 6).map(|_| rng.normal() as f32).collect();
+            let mut bc = BatchCache { kernel: kp, ..Default::default() };
+            big.forward_batch(&xb, 9, &mut bc);
+            small.forward_batch(&xs, 5, &mut bc);
+            for s in 0..5 {
+                let row = small.infer(&xs[s * 6..(s + 1) * 6]);
+                assert_eq!(&bc.out()[s * 4..(s + 1) * 4], &row[..], "{} sample {s}", kp.name());
+            }
         }
     }
 

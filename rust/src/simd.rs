@@ -1,0 +1,218 @@
+//! Runtime SIMD dispatch: one capability probe, one override knob, one
+//! kernel-path enum threaded through both hot kernels.
+//!
+//! The paper's 200,000× speedup story is batch parallelism × device
+//! parallelism × kernel width. Earlier PRs pulled the first two levers
+//! (`ShardedEnv`, `PipelinedEnv`, fused `step_n` windows); this module is
+//! the third: the streaming overlay featurisers
+//! ([`crate::systems::observations`]) and the batched GEMM microkernel
+//! ([`crate::nn::mlp`]) dispatch on a [`KernelPath`] selected here once
+//! per process.
+//!
+//! Selection rules (each answer cached in a `OnceLock`, so the CPU probe
+//! and the environment are consulted exactly once):
+//!
+//! 1. `NAVIX_FORCE_SCALAR=1` pins [`KernelPath::Scalar`] — the historic
+//!    pure-Rust loops, which are also the bitwise oracles the parity
+//!    suites pin the vector paths against.
+//! 2. `NAVIX_SIMD=avx2|sse2|scalar` forces a specific path. A request the
+//!    CPU cannot satisfy is clamped to the widest supported path with a
+//!    warning on stderr — never a fault (the CI `simd-matrix` job probes
+//!    `/proc/cpuinfo` first and skips-with-notice instead of relying on
+//!    the clamp).
+//! 3. Otherwise the CPU probe picks the widest supported path.
+//!
+//! Every dispatch site honors the process-wide selection ([`active`]) but
+//! also accepts an explicit [`KernelPath`] argument, so the parity tests
+//! sweep scalar vs sse2 vs avx2 *within one process* and pin them bitwise
+//! identical. The vector kernels never reassociate a reduction and never
+//! use FMA — see `EXPERIMENTS.md` §SIMD for why identity holds exactly.
+
+use std::sync::OnceLock;
+
+/// Which kernel implementation the hot loops run. Ordered by capability —
+/// `Scalar < Sse2 < Avx2` — so clamping a request to the hardware is
+/// [`Ord::min`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum KernelPath {
+    /// The original pure-Rust loops — always available on every target,
+    /// and the oracle the vector paths are pinned against.
+    Scalar,
+    /// 128-bit `std::arch` x86 intrinsics (4 × f32 / 4 × u32 lanes).
+    Sse2,
+    /// 256-bit `std::arch` x86 intrinsics (8 × f32 / 8 × u32 lanes).
+    Avx2,
+}
+
+impl KernelPath {
+    /// All paths, narrowest first — the order the CI matrix sweeps.
+    pub const ALL: [KernelPath; 3] = [KernelPath::Scalar, KernelPath::Sse2, KernelPath::Avx2];
+
+    /// The name used by `NAVIX_SIMD`, the bench `meta` blocks and the CI
+    /// matrix.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelPath::Scalar => "scalar",
+            KernelPath::Sse2 => "sse2",
+            KernelPath::Avx2 => "avx2",
+        }
+    }
+
+    /// Parse a `NAVIX_SIMD` value (case-insensitive).
+    pub fn parse(s: &str) -> Option<KernelPath> {
+        match s.to_ascii_lowercase().as_str() {
+            "scalar" => Some(KernelPath::Scalar),
+            "sse2" => Some(KernelPath::Sse2),
+            "avx2" => Some(KernelPath::Avx2),
+            _ => None,
+        }
+    }
+
+    /// f32/u32 lanes per vector register on this path.
+    pub fn lanes(self) -> usize {
+        match self {
+            KernelPath::Scalar => 1,
+            KernelPath::Sse2 => 4,
+            KernelPath::Avx2 => 8,
+        }
+    }
+
+    /// Can this CPU execute this path?
+    pub fn supported(self) -> bool {
+        self <= detected()
+    }
+}
+
+/// The widest path this CPU supports (probed once, then cached).
+pub fn detected() -> KernelPath {
+    static DETECTED: OnceLock<KernelPath> = OnceLock::new();
+    *DETECTED.get_or_init(probe)
+}
+
+#[cfg(target_arch = "x86_64")]
+fn probe() -> KernelPath {
+    if std::arch::is_x86_feature_detected!("avx2") {
+        KernelPath::Avx2
+    } else if std::arch::is_x86_feature_detected!("sse2") {
+        KernelPath::Sse2
+    } else {
+        KernelPath::Scalar
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn probe() -> KernelPath {
+    // Non-x86 targets run the scalar loops. The dispatch sites stay valid
+    // because every forced path is clamped through `effective` first.
+    KernelPath::Scalar
+}
+
+/// The forced path, if any: `NAVIX_FORCE_SCALAR` beats `NAVIX_SIMD`, both
+/// read once. `None` means auto-detect; an unrecognised `NAVIX_SIMD` value
+/// warns on stderr and auto-detects rather than faulting.
+pub fn requested() -> Option<KernelPath> {
+    static REQUESTED: OnceLock<Option<KernelPath>> = OnceLock::new();
+    *REQUESTED.get_or_init(|| {
+        if std::env::var("NAVIX_FORCE_SCALAR").is_ok_and(|v| !v.is_empty() && v != "0") {
+            return Some(KernelPath::Scalar);
+        }
+        match std::env::var("NAVIX_SIMD") {
+            Ok(v) if !v.is_empty() => {
+                let parsed = KernelPath::parse(&v);
+                if parsed.is_none() {
+                    eprintln!("NAVIX_SIMD={v}: unknown path (scalar|sse2|avx2); auto-detecting");
+                }
+                parsed
+            }
+            _ => None,
+        }
+    })
+}
+
+/// The process-wide selection: the override clamped to the hardware, else
+/// the probe. Every dispatch site that is not handed an explicit path
+/// runs this answer.
+pub fn active() -> KernelPath {
+    static ACTIVE: OnceLock<KernelPath> = OnceLock::new();
+    *ACTIVE.get_or_init(|| match requested() {
+        Some(req) => {
+            let eff = effective(req);
+            if eff != req {
+                eprintln!(
+                    "NAVIX_SIMD requests {} but this CPU tops out at {} — running {}",
+                    req.name(),
+                    detected().name(),
+                    eff.name()
+                );
+            }
+            eff
+        }
+        None => detected(),
+    })
+}
+
+/// Clamp `kp` to what this CPU can execute: forcing a wider path than the
+/// hardware has degrades to the widest supported one instead of faulting.
+/// Every kernel dispatch site routes its path argument through here, so an
+/// `unsafe` `#[target_feature]` entry point is unreachable without the
+/// matching CPU capability.
+#[inline]
+pub fn effective(kp: KernelPath) -> KernelPath {
+    kp.min(detected())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capability_order_and_lanes() {
+        assert!(KernelPath::Scalar < KernelPath::Sse2);
+        assert!(KernelPath::Sse2 < KernelPath::Avx2);
+        assert_eq!(KernelPath::Scalar.lanes(), 1);
+        assert_eq!(KernelPath::Sse2.lanes(), 4);
+        assert_eq!(KernelPath::Avx2.lanes(), 8);
+    }
+
+    #[test]
+    fn parse_roundtrips_every_name() {
+        for kp in KernelPath::ALL {
+            assert_eq!(KernelPath::parse(kp.name()), Some(kp));
+            assert_eq!(KernelPath::parse(&kp.name().to_uppercase()), Some(kp));
+        }
+        assert_eq!(KernelPath::parse("altivec"), None);
+        assert_eq!(KernelPath::parse(""), None);
+    }
+
+    #[test]
+    fn active_is_supported_and_stable() {
+        // Whatever the probe/override picked must be runnable here, and the
+        // cached answer must not change between calls.
+        assert!(active().supported());
+        assert_eq!(active(), active());
+        assert!(KernelPath::Scalar.supported());
+        #[cfg(target_arch = "x86_64")]
+        assert!(KernelPath::Sse2.supported(), "sse2 is x86_64 baseline");
+    }
+
+    #[test]
+    fn effective_clamps_to_hardware() {
+        for kp in KernelPath::ALL {
+            assert!(effective(kp).supported());
+            assert!(effective(kp) <= kp);
+        }
+        assert_eq!(effective(KernelPath::Scalar), KernelPath::Scalar);
+    }
+
+    #[test]
+    fn forced_env_is_honored_when_supported() {
+        // The contract the CI simd-matrix job relies on: when NAVIX_SIMD
+        // names a supported path, exactly that path runs; an unsupported
+        // request clamps to the probe instead of faulting.
+        match requested() {
+            Some(req) if req.supported() => assert_eq!(active(), req),
+            Some(_) => assert_eq!(active(), detected()),
+            None => assert_eq!(active(), detected()),
+        }
+    }
+}

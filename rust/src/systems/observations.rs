@@ -30,12 +30,25 @@
 //! [`rgb_incremental`] re-blits only the tiles whose render code changed
 //! since the previous frame (dirty-tile rendering), turning the per-step
 //! `32H × 32W` blit into a handful of tile blits.
+//!
+//! ## SIMD
+//!
+//! The overlay path's full-grid streaming loops ([`symbolic`],
+//! [`categorical`]) additionally dispatch on a [`KernelPath`]: AVX2
+//! unpacks 8 packed cell codes per lane-group (SSE2: 4), with the scalar
+//! loop as both the universal fallback and the tail handler for
+//! `H·W mod lanes ≠ 0`. All ops are integer ops, so the vector paths are
+//! *bitwise* identical to the scalar loop — pinned per forced path by
+//! `tests/test_obs_parity.rs` and the CI `simd-matrix` job. The resolved
+//! ([`ObsPath`], [`KernelPath`]) pair is an [`ObsRoute`], computed once
+//! per engine by [`ObsPath::route`] and threaded through every writer.
 
 use crate::core::components::Direction;
 use crate::core::entities::{CellType, Tag};
 use crate::core::grid::Pos;
 use crate::core::mission::{feat, Mission, MISSION_DIM};
 use crate::core::state::{cellcode, AgentView, EnvSlot};
+use crate::simd::{self, KernelPath};
 use crate::systems::sprites::{Sprite, SpriteSheet, TILE};
 
 /// Default egocentric window edge (MiniGrid's `agent_view_size`).
@@ -78,6 +91,39 @@ pub enum ObsPath {
     #[default]
     Overlay,
     NaiveScan,
+}
+
+impl ObsPath {
+    /// Resolve this path to a concrete [`ObsRoute`] — the single place the
+    /// SIMD kernel selection enters the observation layer. The overlay path
+    /// picks the process-wide [`simd::active`] kernel; the scan oracle has
+    /// no kernel axis.
+    pub fn route(self) -> ObsRoute {
+        match self {
+            ObsPath::Overlay => ObsRoute::Overlay(simd::active()),
+            ObsPath::NaiveScan => ObsRoute::Scan,
+        }
+    }
+}
+
+/// A fully-resolved observation route: which implementation runs *and*, on
+/// the overlay path, which SIMD kernel its streaming loops use. Engines
+/// resolve an [`ObsPath`] once ([`ObsPath::route`]) and thread the route
+/// through every writer; the parity suite constructs forced routes
+/// (`ObsRoute::Overlay(KernelPath::…)`) to sweep every kernel in one
+/// process.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ObsRoute {
+    /// Overlay-grid streaming writers on the given kernel path.
+    Overlay(KernelPath),
+    /// The naive entity-table scan oracle (always scalar).
+    Scan,
+}
+
+impl Default for ObsRoute {
+    fn default() -> Self {
+        ObsPath::default().route()
+    }
 }
 
 /// Observation spec: function kind + egocentric window size.
@@ -123,22 +169,29 @@ impl ObsSpec {
     }
 
     /// Path-explicit i32 writer (tests/benches pick the scan oracle here).
+    /// The kernel path is resolved once via [`ObsPath::route`].
     pub fn write_i32_path(&self, path: ObsPath, s: &EnvSlot<'_>, out: &mut [i32]) {
-        match (path, self.kind) {
-            (ObsPath::Overlay, ObsKind::Symbolic) => symbolic(s, out),
-            (ObsPath::Overlay, ObsKind::SymbolicFirstPerson) => {
+        self.write_i32_route(path.route(), s, out)
+    }
+
+    /// Route-explicit i32 writer — the parity suite forces specific SIMD
+    /// kernels here via `ObsRoute::Overlay(KernelPath::…)`.
+    pub fn write_i32_route(&self, route: ObsRoute, s: &EnvSlot<'_>, out: &mut [i32]) {
+        match (route, self.kind) {
+            (ObsRoute::Overlay(kp), ObsKind::Symbolic) => symbolic_kernel(kp, s, out),
+            (ObsRoute::Overlay(_), ObsKind::SymbolicFirstPerson) => {
                 symbolic_first_person(s, self.view, out)
             }
-            (ObsPath::Overlay, ObsKind::Categorical) => categorical(s, out),
-            (ObsPath::Overlay, ObsKind::CategoricalFirstPerson) => {
+            (ObsRoute::Overlay(kp), ObsKind::Categorical) => categorical_kernel(kp, s, out),
+            (ObsRoute::Overlay(_), ObsKind::CategoricalFirstPerson) => {
                 categorical_first_person(s, self.view, out)
             }
-            (ObsPath::NaiveScan, ObsKind::Symbolic) => scan::symbolic(s, out),
-            (ObsPath::NaiveScan, ObsKind::SymbolicFirstPerson) => {
+            (ObsRoute::Scan, ObsKind::Symbolic) => scan::symbolic(s, out),
+            (ObsRoute::Scan, ObsKind::SymbolicFirstPerson) => {
                 scan::symbolic_first_person(s, self.view, out)
             }
-            (ObsPath::NaiveScan, ObsKind::Categorical) => scan::categorical(s, out),
-            (ObsPath::NaiveScan, ObsKind::CategoricalFirstPerson) => {
+            (ObsRoute::Scan, ObsKind::Categorical) => scan::categorical(s, out),
+            (ObsRoute::Scan, ObsKind::CategoricalFirstPerson) => {
                 scan::categorical_first_person(s, self.view, out)
             }
             _ => panic!("write_i32 called on rgb observation kind"),
@@ -151,9 +204,16 @@ impl ObsSpec {
     /// the grid encoding. Dispatches like the grid writers so the parity
     /// suite can pin the typed encoder against the bit-level scan oracle.
     pub fn write_mission_path(&self, path: ObsPath, s: &EnvSlot<'_>, out: &mut [i32]) {
-        match path {
-            ObsPath::Overlay => mission_features(s, out),
-            ObsPath::NaiveScan => scan::mission_features(s, out),
+        self.write_mission_route(path.route(), s, out)
+    }
+
+    /// Route-explicit mission writer. The block is `MISSION_DIM` i32s —
+    /// too small to vectorise, so every kernel path runs the same scalar
+    /// encoder and only the overlay/scan axis of the route matters.
+    pub fn write_mission_route(&self, route: ObsRoute, s: &EnvSlot<'_>, out: &mut [i32]) {
+        match route {
+            ObsRoute::Overlay(_) => mission_features(s, out),
+            ObsRoute::Scan => scan::mission_features(s, out),
         }
     }
 
@@ -165,13 +225,25 @@ impl ObsSpec {
         sheet: &SpriteSheet,
         out: &mut [u8],
     ) {
-        match (path, self.kind) {
-            (ObsPath::Overlay, ObsKind::Rgb) => rgb(s, sheet, out),
-            (ObsPath::Overlay, ObsKind::RgbFirstPerson) => {
+        self.write_u8_route(path.route(), s, sheet, out)
+    }
+
+    /// Route-explicit u8 writer. Rgb blits are sprite copies, not unpack
+    /// loops — the kernel path has no rgb axis, only overlay/scan.
+    pub fn write_u8_route(
+        &self,
+        route: ObsRoute,
+        s: &EnvSlot<'_>,
+        sheet: &SpriteSheet,
+        out: &mut [u8],
+    ) {
+        match (route, self.kind) {
+            (ObsRoute::Overlay(_), ObsKind::Rgb) => rgb(s, sheet, out),
+            (ObsRoute::Overlay(_), ObsKind::RgbFirstPerson) => {
                 rgb_first_person(s, self.view, sheet, out)
             }
-            (ObsPath::NaiveScan, ObsKind::Rgb) => scan::rgb(s, sheet, out),
-            (ObsPath::NaiveScan, ObsKind::RgbFirstPerson) => {
+            (ObsRoute::Scan, ObsKind::Rgb) => scan::rgb(s, sheet, out),
+            (ObsRoute::Scan, ObsKind::RgbFirstPerson) => {
                 scan::rgb_first_person(s, self.view, sheet, out)
             }
             _ => panic!("write_u8 called on symbolic observation kind"),
@@ -223,14 +295,19 @@ pub fn render_code(s: &EnvSlot<'_>, cell: usize) -> u32 {
 }
 
 /// `symbolic`: the canonical full-grid MiniGrid encoding, i32[H, W, 3].
-/// One streaming pass over the overlay plus a single player overwrite.
+/// One streaming pass over the overlay plus a single player overwrite, on
+/// the process-wide SIMD path.
 pub fn symbolic(s: &EnvSlot<'_>, out: &mut [i32]) {
+    symbolic_kernel(simd::active(), s, out)
+}
+
+/// [`symbolic`] on an explicit kernel path: the streaming unpack runs 8
+/// (avx2) / 4 (sse2) cells per lane-group, bitwise identical on every
+/// path (see [`kernels`]). The per-agent player overwrite stays scalar —
+/// it touches `A` cells, not `H·W`.
+pub fn symbolic_kernel(kp: KernelPath, s: &EnvSlot<'_>, out: &mut [i32]) {
     debug_assert_eq!(out.len(), s.h * s.w * 3);
-    for (cell, &code) in s.overlay.iter().enumerate() {
-        out[cell * 3] = cellcode::tag(code);
-        out[cell * 3 + 1] = cellcode::color(code);
-        out[cell * 3 + 2] = cellcode::state(code);
-    }
+    kernels::unpack3(kp, s.overlay, out);
     for (j, &pp) in s.player_pos.iter().enumerate() {
         if pp >= 0 && (pp as usize) < s.overlay.len() {
             let i = pp as usize * 3;
@@ -242,15 +319,292 @@ pub fn symbolic(s: &EnvSlot<'_>, out: &mut [i32]) {
 }
 
 /// `categorical`: entity tag per cell, i32[H, W]. One streaming pass over
-/// the overlay plus a single player overwrite.
+/// the overlay plus a single player overwrite, on the process-wide SIMD
+/// path.
 pub fn categorical(s: &EnvSlot<'_>, out: &mut [i32]) {
+    categorical_kernel(simd::active(), s, out)
+}
+
+/// [`categorical`] on an explicit kernel path (see [`kernels`]).
+pub fn categorical_kernel(kp: KernelPath, s: &EnvSlot<'_>, out: &mut [i32]) {
     debug_assert_eq!(out.len(), s.h * s.w);
-    for (cell, &code) in s.overlay.iter().enumerate() {
-        out[cell] = cellcode::tag(code);
-    }
+    kernels::unpack_tags(kp, s.overlay, out);
     for &pp in s.player_pos.iter() {
         if pp >= 0 && (pp as usize) < s.overlay.len() {
             out[pp as usize] = Tag::AGENT;
+        }
+    }
+}
+
+/// The streaming overlay-unpack kernels behind [`symbolic`] and
+/// [`categorical`] — the only SIMD code in the observation layer.
+///
+/// Lane layout (avx2; sse2 is the same picture at half width): one
+/// unaligned load pulls 8 packed cell codes, three shift+mask ops split
+/// them into planar tag/colour/state vectors, and — for `symbolic` —
+/// three cross-lane permutes plus two byte-blends per output vector
+/// re-interleave the planes into the `[t, c, s]`-per-cell layout of the
+/// observation buffer (sse2 has no byte-blend, so it re-interleaves with
+/// shuffles and and/or masks). Every operation is an integer operation:
+/// the vector paths are *bitwise* equal to the scalar loop by
+/// construction, with no rounding argument needed (contrast the GEMM
+/// kernels in `nn/mlp.rs`, where identity relies on fixed reduction order
+/// and no FMA). Cell counts not divisible by the lane count fall through
+/// to the scalar loop for the tail.
+///
+/// `unsafe` is confined to this module (the workspace denies it
+/// elsewhere): the only unsafe operations are `std::arch` intrinsics and
+/// raw-pointer loads/stores whose bounds are established by the
+/// `cell + LANES <= n` loop guards, and every `#[target_feature]` entry
+/// point is reachable only after [`simd::effective`] clamps the requested
+/// path to what the CPU probe found.
+#[allow(unsafe_code)]
+pub mod kernels {
+    use crate::core::state::cellcode;
+    use crate::simd::{self, KernelPath};
+
+    /// `out[cell] = tag(code)` for every overlay cell — the `categorical`
+    /// streaming unpack.
+    pub fn unpack_tags(kp: KernelPath, overlay: &[u32], out: &mut [i32]) {
+        debug_assert!(out.len() >= overlay.len());
+        match simd::effective(kp) {
+            #[cfg(target_arch = "x86_64")]
+            KernelPath::Avx2 => unsafe { unpack_tags_avx2(overlay, out) },
+            #[cfg(target_arch = "x86_64")]
+            KernelPath::Sse2 => unsafe { unpack_tags_sse2(overlay, out) },
+            _ => unpack_tags_scalar(overlay, out),
+        }
+    }
+
+    /// `out[cell*3 ..][..3] = (tag, colour, state)` for every overlay
+    /// cell — the `symbolic` streaming unpack.
+    pub fn unpack3(kp: KernelPath, overlay: &[u32], out: &mut [i32]) {
+        debug_assert!(out.len() >= overlay.len() * 3);
+        match simd::effective(kp) {
+            #[cfg(target_arch = "x86_64")]
+            KernelPath::Avx2 => unsafe { unpack3_avx2(overlay, out) },
+            #[cfg(target_arch = "x86_64")]
+            KernelPath::Sse2 => unsafe { unpack3_sse2(overlay, out) },
+            _ => unpack3_scalar(overlay, out),
+        }
+    }
+
+    fn unpack_tags_scalar(overlay: &[u32], out: &mut [i32]) {
+        for (cell, &code) in overlay.iter().enumerate() {
+            out[cell] = cellcode::tag(code);
+        }
+    }
+
+    fn unpack3_scalar(overlay: &[u32], out: &mut [i32]) {
+        for (cell, &code) in overlay.iter().enumerate() {
+            out[cell * 3] = cellcode::tag(code);
+            out[cell * 3 + 1] = cellcode::color(code);
+            out[cell * 3 + 2] = cellcode::state(code);
+        }
+    }
+
+    /// # Safety
+    /// The CPU must support avx2 and `out.len() >= overlay.len()`.
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "avx2")]
+    unsafe fn unpack_tags_avx2(overlay: &[u32], out: &mut [i32]) {
+        use std::arch::x86_64::*;
+        let n = overlay.len();
+        let byte = _mm256_set1_epi32(0xFF);
+        let mut cell = 0usize;
+        while cell + 8 <= n {
+            let v = _mm256_loadu_si256(overlay.as_ptr().add(cell) as *const __m256i);
+            let t = _mm256_and_si256(v, byte);
+            _mm256_storeu_si256(out.as_mut_ptr().add(cell) as *mut __m256i, t);
+            cell += 8;
+        }
+        unpack_tags_scalar(&overlay[cell..], &mut out[cell..]);
+    }
+
+    /// # Safety
+    /// The CPU must support sse2 and `out.len() >= overlay.len()`.
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "sse2")]
+    unsafe fn unpack_tags_sse2(overlay: &[u32], out: &mut [i32]) {
+        use std::arch::x86_64::*;
+        let n = overlay.len();
+        let byte = _mm_set1_epi32(0xFF);
+        let mut cell = 0usize;
+        while cell + 4 <= n {
+            let v = _mm_loadu_si128(overlay.as_ptr().add(cell) as *const __m128i);
+            let t = _mm_and_si128(v, byte);
+            _mm_storeu_si128(out.as_mut_ptr().add(cell) as *mut __m128i, t);
+            cell += 4;
+        }
+        unpack_tags_scalar(&overlay[cell..], &mut out[cell..]);
+    }
+
+    /// # Safety
+    /// The CPU must support avx2 and `out.len() >= overlay.len() * 3`.
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "avx2")]
+    unsafe fn unpack3_avx2(overlay: &[u32], out: &mut [i32]) {
+        use std::arch::x86_64::*;
+        let n = overlay.len();
+        let byte = _mm256_set1_epi32(0xFF);
+        // 8 cells unpack to 24 i32s = 3 output vectors. The cell index
+        // feeding each output lane is the same for all three planes (the
+        // don't-care lanes of each permute are masked off by the blends):
+        //   r0 lanes: t0 c0 s0 t1 c1 s1 t2 c2   ← cells 0 0 0 1 1 1 2 2
+        //   r1 lanes: s2 t3 c3 s3 t4 c4 s4 t5   ← cells 2 3 3 3 4 4 4 5
+        //   r2 lanes: c5 s5 t6 c6 s6 t7 c7 s7   ← cells 5 5 6 6 6 7 7 7
+        let i0 = _mm256_setr_epi32(0, 0, 0, 1, 1, 1, 2, 2);
+        let i1 = _mm256_setr_epi32(2, 3, 3, 3, 4, 4, 4, 5);
+        let i2 = _mm256_setr_epi32(5, 5, 6, 6, 6, 7, 7, 7);
+        // Per-output plane selectors: a lane of -1 (all bytes set) makes
+        // `_mm256_blendv_epi8` take that whole lane from the colour/state
+        // permute; unselected lanes keep the tag permute.
+        let on = -1i32;
+        let c0 = _mm256_setr_epi32(0, on, 0, 0, on, 0, 0, on);
+        let s0 = _mm256_setr_epi32(0, 0, on, 0, 0, on, 0, 0);
+        let c1 = _mm256_setr_epi32(0, 0, on, 0, 0, on, 0, 0);
+        let s1 = _mm256_setr_epi32(on, 0, 0, on, 0, 0, on, 0);
+        let c2 = _mm256_setr_epi32(on, 0, 0, on, 0, 0, on, 0);
+        let s2 = _mm256_setr_epi32(0, on, 0, 0, on, 0, 0, on);
+        let mut cell = 0usize;
+        while cell + 8 <= n {
+            let v = _mm256_loadu_si256(overlay.as_ptr().add(cell) as *const __m256i);
+            let t = _mm256_and_si256(v, byte);
+            let c = _mm256_and_si256(_mm256_srli_epi32(v, 8), byte);
+            let s = _mm256_and_si256(_mm256_srli_epi32(v, 16), byte);
+            let dst = out.as_mut_ptr().add(cell * 3);
+            let r0 = _mm256_blendv_epi8(
+                _mm256_blendv_epi8(
+                    _mm256_permutevar8x32_epi32(t, i0),
+                    _mm256_permutevar8x32_epi32(c, i0),
+                    c0,
+                ),
+                _mm256_permutevar8x32_epi32(s, i0),
+                s0,
+            );
+            let r1 = _mm256_blendv_epi8(
+                _mm256_blendv_epi8(
+                    _mm256_permutevar8x32_epi32(t, i1),
+                    _mm256_permutevar8x32_epi32(c, i1),
+                    c1,
+                ),
+                _mm256_permutevar8x32_epi32(s, i1),
+                s1,
+            );
+            let r2 = _mm256_blendv_epi8(
+                _mm256_blendv_epi8(
+                    _mm256_permutevar8x32_epi32(t, i2),
+                    _mm256_permutevar8x32_epi32(c, i2),
+                    c2,
+                ),
+                _mm256_permutevar8x32_epi32(s, i2),
+                s2,
+            );
+            _mm256_storeu_si256(dst as *mut __m256i, r0);
+            _mm256_storeu_si256(dst.add(8) as *mut __m256i, r1);
+            _mm256_storeu_si256(dst.add(16) as *mut __m256i, r2);
+            cell += 8;
+        }
+        unpack3_scalar(&overlay[cell..], &mut out[cell * 3..]);
+    }
+
+    /// # Safety
+    /// The CPU must support sse2 and `out.len() >= overlay.len() * 3`.
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "sse2")]
+    unsafe fn unpack3_sse2(overlay: &[u32], out: &mut [i32]) {
+        use std::arch::x86_64::*;
+        let n = overlay.len();
+        let byte = _mm_set1_epi32(0xFF);
+        // 4 cells unpack to 12 i32s = 3 output vectors:
+        //   r0: t0 c0 s0 t1    r1: c1 s1 t2 c2    r2: s2 t3 c3 s3
+        // sse2 lacks a byte-blend, so each output combines three shuffled
+        // plane vectors with and/or masks. By symmetry every output uses
+        // the same three masks with rotating plane roles: the plane in
+        // lanes {0, 3}, the plane in lane {1}, the plane in lane {2}.
+        let on = -1i32;
+        let m03 = _mm_setr_epi32(on, 0, 0, on);
+        let m1 = _mm_setr_epi32(0, on, 0, 0);
+        let m2 = _mm_setr_epi32(0, 0, on, 0);
+        let mut cell = 0usize;
+        while cell + 4 <= n {
+            let v = _mm_loadu_si128(overlay.as_ptr().add(cell) as *const __m128i);
+            let t = _mm_and_si128(v, byte);
+            let c = _mm_and_si128(_mm_srli_epi32(v, 8), byte);
+            let s = _mm_and_si128(_mm_srli_epi32(v, 16), byte);
+            let dst = out.as_mut_ptr().add(cell * 3);
+            // r0 = [t0, c0, s0, t1]: t in lanes {0,3}, c in {1}, s in {2}.
+            let r0 = _mm_or_si128(
+                _mm_or_si128(
+                    _mm_and_si128(_mm_shuffle_epi32(t, 0b01_00_00_00), m03),
+                    _mm_and_si128(_mm_shuffle_epi32(c, 0b00_00_00_00), m1),
+                ),
+                _mm_and_si128(_mm_shuffle_epi32(s, 0b00_00_00_00), m2),
+            );
+            // r1 = [c1, s1, t2, c2]: c in lanes {0,3}, s in {1}, t in {2}.
+            let r1 = _mm_or_si128(
+                _mm_or_si128(
+                    _mm_and_si128(_mm_shuffle_epi32(c, 0b10_01_01_01), m03),
+                    _mm_and_si128(_mm_shuffle_epi32(s, 0b01_01_01_01), m1),
+                ),
+                _mm_and_si128(_mm_shuffle_epi32(t, 0b10_10_10_10), m2),
+            );
+            // r2 = [s2, t3, c3, s3]: s in lanes {0,3}, t in {1}, c in {2}.
+            let r2 = _mm_or_si128(
+                _mm_or_si128(
+                    _mm_and_si128(_mm_shuffle_epi32(s, 0b11_10_10_10), m03),
+                    _mm_and_si128(_mm_shuffle_epi32(t, 0b11_11_11_11), m1),
+                ),
+                _mm_and_si128(_mm_shuffle_epi32(c, 0b11_11_11_11), m2),
+            );
+            _mm_storeu_si128(dst as *mut __m128i, r0);
+            _mm_storeu_si128(dst.add(4) as *mut __m128i, r1);
+            _mm_storeu_si128(dst.add(8) as *mut __m128i, r2);
+            cell += 4;
+        }
+        unpack3_scalar(&overlay[cell..], &mut out[cell * 3..]);
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        // Deterministic pseudo-overlay: arbitrary u32 patterns, including
+        // codes with bits above the state byte set.
+        fn overlay(n: usize, seed: u32) -> Vec<u32> {
+            let mut x = seed | 1;
+            (0..n)
+                .map(|_| {
+                    x ^= x << 13;
+                    x ^= x >> 17;
+                    x ^= x << 5;
+                    x
+                })
+                .collect()
+        }
+
+        #[test]
+        fn every_kernel_matches_scalar_on_every_tail_length() {
+            // Lengths straddling the 8/4 lane groups: 0..=17 covers every
+            // tail residue for both widths, plus a longer run.
+            for n in (0..=17).chain([64, 65, 127]) {
+                let ov = overlay(n, 0x9E3779B9 ^ n as u32);
+                let mut want3 = vec![0i32; n * 3];
+                let mut want1 = vec![0i32; n];
+                unpack3_scalar(&ov, &mut want3);
+                unpack_tags_scalar(&ov, &mut want1);
+                for kp in KernelPath::ALL {
+                    if !kp.supported() {
+                        continue;
+                    }
+                    let mut got3 = vec![-1i32; n * 3];
+                    let mut got1 = vec![-1i32; n];
+                    unpack3(kp, &ov, &mut got3);
+                    unpack_tags(kp, &ov, &mut got1);
+                    assert_eq!(got3, want3, "unpack3 {} n={n}", kp.name());
+                    assert_eq!(got1, want1, "unpack_tags {} n={n}", kp.name());
+                }
+            }
         }
     }
 }

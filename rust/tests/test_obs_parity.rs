@@ -17,13 +17,23 @@
 //! 3. **Dirty tiles** — the batched engine's incremental rgb buffer equals
 //!    a from-scratch render at every step of rollouts featuring door
 //!    toggles, pickups/drops and obstacle moves, autoresets included.
+//! 4. **Kernel paths** — the SIMD featurisers are swept under every forced
+//!    [`KernelPath`] (scalar / sse2 / avx2; unsupported paths skip with a
+//!    notice) and pinned bitwise against both the scalar overlay path and
+//!    the scan oracles: registry-wide, on hand-built odd-shaped grids
+//!    whose cell count is not a lane multiple (tail handling), and through
+//!    the batched engine end to end — first-person frames and the mission
+//!    block included.
 
 use navix::batch::{BatchedEnv, ObsData};
+use navix::core::components::{Color, Direction, DoorState};
+use navix::core::entities::{CellType, Tag};
 use navix::core::grid::Pos;
-use navix::core::mission::MISSION_DIM;
-use navix::core::state::EnvSlot;
+use navix::core::mission::{Mission, MISSION_DIM};
+use navix::core::state::{BatchedState, Caps, EnvSlot};
 use navix::rng::{Key, Rng};
-use navix::systems::observations::{self, scan, ObsKind, ObsPath, ObsSpec};
+use navix::simd::KernelPath;
+use navix::systems::observations::{self, scan, ObsKind, ObsPath, ObsRoute, ObsSpec};
 use navix::systems::sprites::SpriteSheet;
 
 const BATCH: usize = 64;
@@ -195,6 +205,161 @@ fn assert_rgb_obs_parity(id: &str, step: usize, i: usize, s: &EnvSlot<'_>) {
 fn rgb_observations_match_scan_oracle() {
     for id in RGB_IDS {
         rollout_checking(id, 4, assert_rgb_obs_parity);
+    }
+}
+
+/// One forced kernel path vs the scalar overlay path vs the scan oracle:
+/// every applicable i32 kind plus the mission block, one env slot. Both
+/// comparisons are bitwise — the vector featurisers never change what is
+/// written, only how many cells move per iteration.
+fn assert_forced_path_parity(kp: KernelPath, id: &str, step: usize, i: usize, s: &EnvSlot<'_>) {
+    let forced = ObsRoute::Overlay(kp);
+    let scalar = ObsRoute::Overlay(KernelPath::Scalar);
+    let spec = ObsSpec::new(ObsKind::SymbolicFirstPerson);
+    let mut m_forced = [0i32; MISSION_DIM];
+    let mut m_scalar = [7i32; MISSION_DIM];
+    spec.write_mission_route(forced, s, &mut m_forced);
+    spec.write_mission_route(scalar, s, &mut m_scalar);
+    assert_eq!(
+        m_forced,
+        m_scalar,
+        "{id} step {step} env {i}: mission features diverged on {}",
+        kp.name()
+    );
+    for kind in I32_KINDS {
+        let spec = ObsSpec::new(kind);
+        let n = spec.len(s.h, s.w);
+        let mut got = vec![0i32; n];
+        let mut want_scalar = vec![0i32; n];
+        let mut want_scan = vec![0i32; n];
+        spec.write_i32_route(forced, s, &mut got);
+        spec.write_i32_route(scalar, s, &mut want_scalar);
+        spec.write_i32_route(ObsRoute::Scan, s, &mut want_scan);
+        assert_eq!(
+            got,
+            want_scalar,
+            "{id} step {step} env {i}: {} diverged from the scalar path on {}",
+            kind.name(),
+            kp.name()
+        );
+        assert_eq!(
+            got,
+            want_scan,
+            "{id} step {step} env {i}: {} diverged from the scan oracle on {}",
+            kind.name(),
+            kp.name()
+        );
+    }
+}
+
+#[test]
+fn forced_kernel_paths_match_the_oracles_across_the_registry() {
+    for kp in KernelPath::ALL {
+        if !kp.supported() {
+            println!("skipping kernel path {}: not supported by this CPU", kp.name());
+            continue;
+        }
+        for id in navix::list_envs() {
+            rollout_checking(id, 4, |id, step, i, s| {
+                assert_forced_path_parity(kp, id, step, i, s)
+            });
+        }
+    }
+}
+
+/// Hand-built grids whose cell count is not a multiple of any vector
+/// width — 9, 25, 42, 63 and 65 cells, plus 64 as the exact-fit control —
+/// so every kernel's scalar tail is exercised on every entity kind.
+#[test]
+fn odd_shape_grids_sweep_every_kernel_tail() {
+    const SHAPES: [(usize, usize); 6] = [(3, 3), (5, 5), (6, 7), (7, 9), (8, 8), (5, 13)];
+    for (h, w) in SHAPES {
+        let caps = Caps { doors: 1, keys: 1, balls: 1, boxes: 1 };
+        let mut st = BatchedState::new(1, h, w, caps);
+        {
+            let mut s = st.slot_mut(0);
+            s.fill_room();
+            s.set_cell(Pos::new(h as i32 - 2, w as i32 - 2), CellType::Goal, Color::Green);
+            s.place_player(Pos::new(1, 1), Direction::East);
+            if h >= 5 && w >= 5 {
+                // Distinct interior cells for every entity kind, so each
+                // cell-code branch crosses the vector/tail boundary at
+                // least once across the shape sweep.
+                s.set_cell(Pos::new(1, w as i32 - 2), CellType::Lava, Color::Red);
+                s.add_door(Pos::new(2, 1), Color::Red, DoorState::Closed);
+                s.add_key(Pos::new(2, 2), Color::Yellow);
+                s.add_ball(Pos::new(3, 1), Color::Blue);
+                s.add_box(Pos::new(2, w as i32 - 2), Color::Purple);
+                s.set_mission(Mission::go_to(Tag::DOOR, Color::Red));
+            }
+        }
+        let s = st.slot(0);
+        let id = format!("hand-built-{h}x{w}");
+        for kp in KernelPath::ALL {
+            if kp.supported() {
+                assert_forced_path_parity(kp, &id, 0, 0, &s);
+            }
+        }
+    }
+}
+
+/// The forced kernel paths through the batched engine end to end: engines
+/// differing only in `set_obs_route` must publish identical obs and
+/// mission buffers at every step of a shared random rollout, autoresets
+/// included.
+#[test]
+fn batched_engine_obs_identical_across_forced_kernel_paths() {
+    let ids = ["Navix-DoorKey-8x8-v0", "Navix-Dynamic-Obstacles-6x6", "Navix-GoToObj-8x8-N3-v0"];
+    for id in ids {
+        for kind in [ObsKind::Symbolic, ObsKind::Categorical] {
+            let b = 8;
+            let mut cfg = navix::make(id).unwrap().with_observation(kind);
+            cfg.max_steps = cfg.max_steps.min(TIMEOUT_CAP);
+            let make = |route: ObsRoute| {
+                let mut env = BatchedEnv::new(cfg.clone(), b, Key::new(31));
+                env.set_obs_route(route);
+                env
+            };
+            let mut oracle = make(ObsRoute::Scan);
+            let mut engines: Vec<(KernelPath, BatchedEnv)> = KernelPath::ALL
+                .into_iter()
+                .filter(|kp| kp.supported())
+                .map(|kp| (kp, make(ObsRoute::Overlay(kp))))
+                .collect();
+            let mut rng = Rng::new(23);
+            let mut actions = vec![0u8; oracle.policy_rows()];
+            for step in 0..60 {
+                for a in actions.iter_mut() {
+                    *a = rng.below(7) as u8;
+                }
+                oracle.step(&actions);
+                let want = match &oracle.obs.data {
+                    ObsData::I32(v) => v.clone(),
+                    _ => unreachable!(),
+                };
+                for (kp, env) in engines.iter_mut() {
+                    env.step(&actions);
+                    let got = match &env.obs.data {
+                        ObsData::I32(v) => v,
+                        _ => unreachable!(),
+                    };
+                    assert_eq!(
+                        got,
+                        &want,
+                        "{id} {} step {step}: engine obs diverged on {}",
+                        kind.name(),
+                        kp.name()
+                    );
+                    assert_eq!(
+                        env.obs.mission,
+                        oracle.obs.mission,
+                        "{id} {} step {step}: engine mission diverged on {}",
+                        kind.name(),
+                        kp.name()
+                    );
+                }
+            }
+        }
     }
 }
 
