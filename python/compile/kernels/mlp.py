@@ -11,7 +11,8 @@ halves of ``jax.grad(ppo_update)`` lower through Layer 1.
 
 TPU adaptation: weights are stored (OUT, IN) row-major — the Rust packing
 convention — and the kernels compute ``x @ W^T`` with MXU-friendly operand
-layouts; for the paper-scale shapes (B <= 2048, IN <= 147, OUT <= 64, f32)
+layouts; for the paper-scale shapes (B <= 2048, IN <= model.OBS_DIM = 163
+— the 7x7x3 view plus the MISSION_TOKENS goal slab — OUT <= 64, f32)
 a single block per operand fits VMEM (<= 1.2 MiB), so no inner grid is
 needed. interpret=True throughout: CPU PJRT cannot execute Mosaic
 custom-calls.

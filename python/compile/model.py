@@ -16,7 +16,10 @@ Three computations, each lowered to a single HLO module by ``aot.py``:
 Parameter packing (shared bit-for-bit with
 ``rust/src/runtime/artifacts.rs::packing``): actor layers then critic
 layers, each ``W (out x in, row-major) ++ b(out)``; dims actor
-[147, 64, 64, 7], critic [147, 64, 64, 1].
+[OBS_DIM, 64, 64, 7], critic [OBS_DIM, 64, 64, 1], where
+OBS_DIM = GRID_OBS_DIM (147) + MISSION_TOKENS (16) — the policy sees the
+grid features concatenated with the tokenised mission block, so the XLA
+path is goal-conditioned like the native trainers.
 """
 
 import functools
@@ -29,7 +32,13 @@ from .kernels import mlp, obs
 # --- fixed sizes (Empty-8x8, symbolic first-person 7x7x3) ---------------
 H = W = 8
 VIEW = 7
-OBS_DIM = VIEW * VIEW * 3  # 147
+GRID_OBS_DIM = VIEW * VIEW * 3  # 147
+# Tokenised mission block width — mirror of
+# rust/src/core/mission.rs::MISSION_TOKENS (2 header + 2 clauses x 7).
+MISSION_TOKENS = 16
+# Policy input width: grid features ++ mission tokens. Every artifact is
+# compiled against this derived constant, never a hard-coded 147.
+OBS_DIM = GRID_OBS_DIM + MISSION_TOKENS
 HIDDEN = 64
 N_ACTIONS = 7
 MAX_STEPS = 4 * H * W  # 256, the MiniGrid timeout for Empty-8x8
@@ -109,8 +118,10 @@ def env_step(pos, direction, t, done_prev, action):
     done_prev: i32[B] (1 if the previous timestep ended the episode);
     action: i32[B] in [0,7).
 
-    Returns (pos', dir', t', done', obs i32[B,147], reward f32[B],
-    discount f32[B], is_first i32[B]).
+    Returns (pos', dir', t', done', obs i32[B, OBS_DIM], reward f32[B],
+    discount f32[B], is_first i32[B]). The obs rows are policy-width:
+    grid features followed by the mission token block (all-zero for the
+    mission-free Empty family), matching ``ObsBatch::copy_policy_row``.
     """
     b = pos.shape[0]
 
@@ -151,11 +162,13 @@ def env_step(pos, direction, t, done_prev, action):
     out_done = jnp.where(resetting, 0, is_last.astype(jnp.int32))
     is_first = resetting.astype(jnp.int32)
 
-    # --- observation via the Layer-1 Pallas kernel.
+    # --- observation via the Layer-1 Pallas kernel, padded to policy
+    # width with the (all-zero) mission token block.
     grid = jnp.broadcast_to(_static_grid()[None], (b, H, W, 3))
     o = obs.obs_first_person_batched(
         grid, jnp.stack([out_r, out_c], axis=1), out_dir, h=H, w=W
-    ).reshape(b, OBS_DIM)
+    ).reshape(b, GRID_OBS_DIM)
+    o = jnp.concatenate([o, jnp.zeros((b, MISSION_TOKENS), dtype=o.dtype)], axis=1)
 
     return (
         jnp.stack([out_r, out_c], axis=1),
@@ -176,7 +189,8 @@ def env_reset(b):
     t = jnp.zeros(b, dtype=jnp.int32)
     done = jnp.zeros(b, dtype=jnp.int32)
     grid = jnp.broadcast_to(_static_grid()[None], (b, H, W, 3))
-    o = obs.obs_first_person_batched(grid, pos, direction, h=H, w=W).reshape(b, OBS_DIM)
+    o = obs.obs_first_person_batched(grid, pos, direction, h=H, w=W).reshape(b, GRID_OBS_DIM)
+    o = jnp.concatenate([o, jnp.zeros((b, MISSION_TOKENS), dtype=o.dtype)], axis=1)
     return pos, direction, t, done, o
 
 
@@ -192,7 +206,7 @@ def _net(layers, x, activation="tanh"):
 
 
 def ppo_fwd(params, obs_i32):
-    """Policy forward. params: f32[N_PARAMS]; obs: i32[B, 147].
+    """Policy forward. params: f32[N_PARAMS]; obs: i32[B, OBS_DIM].
 
     Returns (logits f32[B, 7], values f32[B]).
     """
@@ -224,7 +238,7 @@ def ppo_update(params, m, v, t, obs_i32, actions, old_logp, adv, targets):
     """One fused PPO minibatch update (grad + clip + Adam).
 
     params/m/v: f32[N_PARAMS]; t: i32[] (Adam step, 1-based);
-    obs: i32[MB, 147]; actions: i32[MB]; old_logp/adv/targets: f32[MB].
+    obs: i32[MB, OBS_DIM]; actions: i32[MB]; old_logp/adv/targets: f32[MB].
 
     Returns (params', m', v', pg_loss, v_loss, entropy).
     """

@@ -26,7 +26,9 @@ class TestEnvStep:
         np.testing.assert_array_equal(np.asarray(pos), [[1, 1]] * 3)
         assert np.all(np.asarray(d) == 0)
         assert np.all(np.asarray(t) == 0)
-        assert obs.shape == (3, 147)
+        assert obs.shape == (3, model.OBS_DIM)
+        # mission-free Empty: the token block tail stays all-zero
+        assert np.all(np.asarray(obs)[:, model.GRID_OBS_DIM :] == 0)
 
     def test_forward_moves_east(self):
         state = reset(1)
@@ -84,8 +86,13 @@ class TestEnvStep:
         pos, d, t, done, o = reset(2)
         out = model.env_step(pos, d, t, done, jnp.array([F, R], dtype=jnp.int32))
         grid = jnp.broadcast_to(model._static_grid()[None], (2, 8, 8, 3))
-        expect = obs_kernel.obs_first_person_batched(grid, out[0], out[1]).reshape(2, 147)
-        np.testing.assert_array_equal(np.asarray(out[4]), np.asarray(expect))
+        expect = obs_kernel.obs_first_person_batched(grid, out[0], out[1]).reshape(
+            2, model.GRID_OBS_DIM
+        )
+        np.testing.assert_array_equal(
+            np.asarray(out[4])[:, : model.GRID_OBS_DIM], np.asarray(expect)
+        )
+        assert np.all(np.asarray(out[4])[:, model.GRID_OBS_DIM :] == 0)
 
     @settings(max_examples=30, deadline=None)
     @given(actions=st.lists(st.integers(0, 6), min_size=1, max_size=40), b=st.integers(1, 3))

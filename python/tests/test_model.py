@@ -14,14 +14,17 @@ def init_params(seed=0):
 
 class TestPacking:
     def test_param_count_matches_rust_convention(self):
-        actor = 147 * 64 + 64 + 64 * 64 + 64 + 64 * 7 + 7
-        critic = 147 * 64 + 64 + 64 * 64 + 64 + 64 + 1
+        d = model.OBS_DIM
+        assert d == 147 + 16  # grid features ++ mission tokens
+        actor = d * 64 + 64 + 64 * 64 + 64 + 64 * 7 + 7
+        critic = d * 64 + 64 + 64 * 64 + 64 + 64 + 1
         assert model.N_PARAMS == actor + critic
 
     def test_unpack_shapes(self):
+        d = model.OBS_DIM
         actor, critic = model.unpack(init_params())
-        assert [w.shape for w, _ in actor] == [(64, 147), (64, 64), (7, 64)]
-        assert [w.shape for w, _ in critic] == [(64, 147), (64, 64), (1, 64)]
+        assert [w.shape for w, _ in actor] == [(64, d), (64, 64), (7, 64)]
+        assert [w.shape for w, _ in critic] == [(64, d), (64, 64), (1, 64)]
         assert all(b.shape == (w.shape[0],) for w, b in actor + critic)
 
     def test_unpack_roundtrip_offsets(self):
@@ -29,7 +32,7 @@ class TestPacking:
         p = jnp.arange(model.N_PARAMS, dtype=jnp.float32)
         actor, _ = model.unpack(p)
         w2 = actor[1][0]
-        assert float(w2[0, 0]) == 147 * 64 + 64
+        assert float(w2[0, 0]) == model.OBS_DIM * 64 + 64
 
 
 class TestPpoFwd:

@@ -14,7 +14,8 @@
 //!
 //! Grid: all six observation kinds × {Empty-16x16, DoorKey-16x16,
 //! LockedRoom, Dynamic-Obstacles-16x16, GoToObj-8x8-N3 (mission
-//! featurisation overhead)} × B ∈ {256, 2048} (rgb kinds use
+//! featurisation overhead), Curriculum-RoomGrid (2-clause tokenised
+//! missions + per-episode difficulty draw)} × B ∈ {256, 2048} (rgb kinds use
 //! smaller batches — a 2048-env 512×512×3 rgb buffer alone is 1.6 GB).
 //! Emits `results/BENCH_obs.json` via the bench_harness JSON writer; the
 //! `meta` block records the SIMD dispatch decision (`simd_path` etc. —
@@ -33,19 +34,23 @@
 
 use navix::batch::BatchedEnv;
 use navix::bench_harness::{floors, simd_meta, Report};
+use navix::core::mission::MISSION_TOKENS;
 use navix::rng::Key;
 use navix::simd::{self, KernelPath};
 use navix::systems::observations::{ObsKind, ObsRoute};
 use std::time::Instant;
 
-const ENV_IDS: [&str; 5] = [
+const ENV_IDS: [&str; 6] = [
     "Navix-Empty-16x16-v0",
     "Navix-DoorKey-16x16-v0",
     "Navix-LockedRoom-v0",
     "Navix-Dynamic-Obstacles-16x16",
     // Goal-conditioned family: tracks the mission-featurisation overhead
-    // (the per-step MISSION_DIM write) in BENCH_obs.json.
+    // (the per-step MISSION_TOKENS token-slab write) in BENCH_obs.json.
     "Navix-GoToObj-8x8-N3-v0",
+    // Sequenced/curriculum family: 2-clause tokenised missions plus the
+    // per-episode difficulty draw and satisfiability-gated resets.
+    "Navix-Curriculum-RoomGrid-v0",
 ];
 
 const KINDS: [ObsKind; 6] = [
@@ -56,6 +61,19 @@ const KINDS: [ObsKind; 6] = [
     ObsKind::Rgb,
     ObsKind::RgbFirstPerson,
 ];
+
+/// Width of the tokenised-mission block this env streams per agent-row
+/// per step: `MISSION_TOKENS` for mission families, 0 for goal-only ones
+/// (the observation layer skips the write entirely).
+fn mission_width(id: &str) -> usize {
+    let cfg = navix::make(id).unwrap();
+    let env = BatchedEnv::new(cfg, 1, Key::new(0));
+    if env.obs.mission.iter().any(|&x| x != 0) {
+        MISSION_TOKENS
+    } else {
+        0
+    }
+}
 
 /// End-to-end steps/s of one (env, kind, route) cell.
 fn steps_per_s(id: &str, kind: ObsKind, b: usize, steps: usize, route: ObsRoute) -> f64 {
@@ -70,10 +88,16 @@ fn steps_per_s(id: &str, kind: ObsKind, b: usize, steps: usize, route: ObsRoute)
 fn main() {
     let smoke =
         std::env::args().any(|a| a == "--smoke") || std::env::var("NAVIX_BENCH_FAST").is_ok();
-    // Smoke keeps Empty + DoorKey and one mission family, so the CI floor
-    // gate also times the goal-conditioning write.
+    // Smoke keeps Empty + DoorKey plus one single-clause and one sequenced
+    // mission family, so the CI floor gate also times the goal-conditioning
+    // token-slab write and the curriculum's gated resets.
     let ids: &[&str] = if smoke {
-        &["Navix-Empty-16x16-v0", "Navix-DoorKey-16x16-v0", "Navix-GoToObj-8x8-N3-v0"]
+        &[
+            "Navix-Empty-16x16-v0",
+            "Navix-DoorKey-16x16-v0",
+            "Navix-GoToObj-8x8-N3-v0",
+            "Navix-Curriculum-RoomGrid-v0",
+        ]
     } else {
         &ENV_IDS
     };
@@ -88,6 +112,7 @@ fn main() {
         &[
             "env",
             "obs",
+            "mission_toks",
             "envs",
             "steps",
             "naive_sps",
@@ -100,6 +125,7 @@ fn main() {
     let active = simd::active();
     let mut smoke_floor_sps = f64::INFINITY;
     for &id in ids {
+        let m_toks = mission_width(id);
         for &kind in kinds {
             // Rgb buffers are 3 KB/tile: cap the batch so the full sweep
             // stays in memory (Empty-16x16 rgb at B=2048 would be 1.6 GB).
@@ -131,6 +157,7 @@ fn main() {
                 report.row(&[
                     id.to_string(),
                     kind.name().to_string(),
+                    m_toks.to_string(),
                     b.to_string(),
                     steps.to_string(),
                     format!("{naive:.0}"),
@@ -150,6 +177,7 @@ fn main() {
         // a miss.
         let floor = floors::resolve("obs", "NAVIX_OBS_SMOKE_FLOOR", 100_000.0);
         report.meta("agents_per_slot", "1");
+        report.meta("curriculum", "Navix-Curriculum-RoomGrid-v0");
         report.meta("gate", "overlay symbolic + symbolic_first_person steps/s (active kernel)");
         report.meta("measured", &format!("{smoke_floor_sps:.0}"));
         report.meta("floor", &format!("{:.0}", floor.value));
@@ -175,6 +203,7 @@ fn main() {
             active.name()
         );
     } else {
+        report.meta("curriculum", "Navix-Curriculum-RoomGrid-v0");
         simd_meta(&mut report);
         report.save();
         println!("\n(expected shape: simd ≥1.5x scalar on full-grid symbolic at B=2048 —");

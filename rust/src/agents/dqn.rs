@@ -273,7 +273,7 @@ impl Dqn {
         let mut actions = vec![0u8; b];
         // Policy rows are grid + mission: the replay buffer stores the full
         // goal-conditioned input, so off-policy updates see the goal too.
-        let d = env.obs.stride(b) + crate::agents::MISSION_DIM;
+        let d = env.obs.stride(b) + crate::agents::MISSION_TOKENS;
         debug_assert_eq!(d, self.obs_dim, "agent obs_dim must be grid + mission");
         let mut next_row = vec![0i32; d];
         let mut prev_obs: Vec<Vec<i32>> = (0..b)

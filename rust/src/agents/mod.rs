@@ -24,20 +24,22 @@ pub use sac::{Sac, SacCheckpoint, SacConfig};
 /// Flattened grid-observation size for a symbolic first-person view.
 pub const GRID_OBS_DIM: usize = 7 * 7 * 3;
 
-/// Width of the goal-conditioning feature block every observation batch
+/// Width of the goal-conditioning token block every observation batch
 /// carries (see [`crate::core::mission`]).
-pub const MISSION_DIM: usize = crate::core::mission::MISSION_DIM;
+pub const MISSION_TOKENS: usize = crate::core::mission::MISSION_TOKENS;
 
 /// Policy input size: the flattened, normalised first-person grid features
-/// concatenated with the mission one-hot block. Every agent conditions on
-/// the goal — mission-free families simply see an all-zero block.
-pub const OBS_DIM: usize = GRID_OBS_DIM + MISSION_DIM;
+/// (`GRID_OBS_DIM`) concatenated with the tokenised mission block
+/// (`MISSION_TOKENS`). Every agent conditions on the goal — mission-free
+/// families simply see an all-zero block. Derived, never hard-coded: the
+/// AOT artifact pipeline and every trainer read this constant.
+pub const OBS_DIM: usize = GRID_OBS_DIM + MISSION_TOKENS;
 
 /// Normalise a symbolic i32 observation into `[0, 1]`-ish floats
 /// (tag ≤ 10, colour ≤ 5, state ≤ 3 → divide by 10). Elementwise, so it
 /// works on a single `[obs_dim]` row or a whole `[B × obs_dim]` block —
-/// including rows that end in the 0/1 mission block (which lands on the
-/// same 0.1 scale as the grid one-hots).
+/// including rows that end in the small-integer mission token block
+/// (which lands on the same 0.1 scale as the grid features).
 pub fn preprocess_obs(obs: &[i32], out: &mut [f32]) {
     debug_assert_eq!(obs.len(), out.len());
     for (o, &x) in out.iter_mut().zip(obs) {
@@ -46,16 +48,16 @@ pub fn preprocess_obs(obs: &[i32], out: &mut [f32]) {
 }
 
 /// Featurise an entire observation batch into one contiguous
-/// `[B × (grid + MISSION_DIM)]` f32 block — per env, the normalised grid
+/// `[B × (grid + MISSION_TOKENS)]` f32 block — per env, the normalised grid
 /// features followed by the mission features — the shared entry point of
 /// every batched trainer (PPO/DQN/SAC). Bitwise identical to running
 /// [`preprocess_env_obs`] row by row (the serial oracles pin this).
 /// Panics on rgb batches, like [`crate::batch::ObsBatch::as_i32`].
 pub fn preprocess_obs_batch(obs: &crate::batch::ObsBatch, out: &mut [f32]) {
-    let b = obs.mission.len() / MISSION_DIM;
+    let b = obs.mission.len() / MISSION_TOKENS;
     let grid = obs.as_i32();
     let g = grid.len() / b;
-    let d = g + MISSION_DIM;
+    let d = g + MISSION_TOKENS;
     debug_assert_eq!(out.len(), b * d);
     for i in 0..b {
         let row = &mut out[i * d..(i + 1) * d];
@@ -65,7 +67,7 @@ pub fn preprocess_obs_batch(obs: &crate::batch::ObsBatch, out: &mut [f32]) {
 }
 
 /// Featurise one env's observation — grid then mission — into `out`
-/// (`grid + MISSION_DIM` floats). The per-sample twin of
+/// (`grid + MISSION_TOKENS` floats). The per-sample twin of
 /// [`preprocess_obs_batch`], used by the serial parity oracles.
 pub fn preprocess_env_obs(obs: &crate::batch::ObsBatch, b: usize, i: usize, out: &mut [f32]) {
     let grid = obs.env_i32(b, i);
@@ -151,7 +153,7 @@ mod tests {
         let b = 3;
         let env = BatchedEnv::new(cfg, b, Key::new(4));
         let g = env.obs.stride(b);
-        let d = g + MISSION_DIM;
+        let d = g + MISSION_TOKENS;
         assert_eq!(d, OBS_DIM, "first-person grid + mission = the policy input dim");
         let mut batch = vec![0.0f32; b * d];
         preprocess_obs_batch(&env.obs, &mut batch);

@@ -77,7 +77,7 @@ use std::sync::Arc;
 
 use crate::bench_harness::chaos::{ChaosInjector, ChaosKind};
 use crate::core::actions::Action;
-use crate::core::mission::MISSION_DIM;
+use crate::core::mission::MISSION_TOKENS;
 use crate::core::snapshot::{EngineCheckpoint, SlotCheckpoint, SlotSnapshot};
 use crate::core::state::{cellcode, BatchedState};
 use crate::core::timestep::{BatchedTimestep, StepType};
@@ -98,7 +98,7 @@ pub enum ObsData {
 
 /// Observation batch: the grid encoding (`data`, `[rows × stride]`) plus
 /// the fixed-width goal-conditioning channel (`mission`,
-/// `[rows ×`[`MISSION_DIM`]`]` i32 one-hots — all-zero for mission-free
+/// `[rows ×`[`MISSION_TOKENS`]`]` i32 grammar tokens — all-zero for mission-free
 /// families). `rows` is the engine's `B·A` agent-row count (`B` when
 /// `A = 1`); every accessor's `b` argument is that row count. Every engine
 /// ([`BatchedEnv`], [`ShardedEnv`], [`PipelinedEnv`]) fills both on every
@@ -120,7 +120,7 @@ impl ObsBatch {
             } else {
                 ObsData::I32(vec![0; b * stride])
             },
-            mission: vec![0; b * MISSION_DIM],
+            mission: vec![0; b * MISSION_TOKENS],
         }
     }
 
@@ -171,7 +171,7 @@ impl ObsBatch {
     }
 
     /// Copy env `i`'s full policy input — grid i32s followed by the mission
-    /// features — into `out` (`stride + MISSION_DIM` long). The replay-based
+    /// features — into `out` (`stride + MISSION_TOKENS` long). The replay-based
     /// agents store exactly this row.
     pub fn copy_policy_row(&self, b: usize, i: usize, out: &mut [i32]) {
         let grid = self.env_i32(b, i);
@@ -265,7 +265,7 @@ pub struct TrajectorySlice {
     pub episodic_return: Vec<f32>,
     /// `[K × B × stride]` grid observations ([`ObsCapture::All`] only).
     pub obs: ObsData,
-    /// `[K × B ×`[`MISSION_DIM`]`]` mission rows ([`ObsCapture::All`] only).
+    /// `[K × B ×`[`MISSION_TOKENS`]`]` mission rows ([`ObsCapture::All`] only).
     pub mission: Vec<i32>,
     /// Per-env flat grid length of `obs`.
     pub obs_stride: usize,
@@ -320,7 +320,7 @@ impl TrajectorySlice {
                 (slot, ObsData::I32(_)) => *slot = ObsData::I32(vec![0; len]),
                 (slot, ObsData::U8(_)) => *slot = ObsData::U8(vec![0; len]),
             }
-            self.mission.resize(n * MISSION_DIM, 0);
+            self.mission.resize(n * MISSION_TOKENS, 0);
         }
     }
 
@@ -345,7 +345,7 @@ impl TrajectorySlice {
             (ObsData::U8(dst), ObsData::U8(src)) => dst[lo..hi].copy_from_slice(src),
             _ => unreachable!("trajectory obs dtype diverged from the engine"),
         }
-        self.mission[t * self.b * MISSION_DIM..(t + 1) * self.b * MISSION_DIM]
+        self.mission[t * self.b * MISSION_TOKENS..(t + 1) * self.b * MISSION_TOKENS]
             .copy_from_slice(&obs.mission);
     }
 
@@ -388,8 +388,8 @@ impl TrajectorySlice {
 
     /// Mission feature row of env `i` at step `t` (capture mode `All`).
     pub fn mission_row(&self, t: usize, i: usize) -> &[i32] {
-        let base = (t * self.b + i) * MISSION_DIM;
-        &self.mission[base..base + MISSION_DIM]
+        let base = (t * self.b + i) * MISSION_TOKENS;
+        &self.mission[base..base + MISSION_TOKENS]
     }
 }
 
@@ -884,7 +884,7 @@ impl BatchedEnv {
                 }
             }
             // The goal-conditioning side channel rides along per agent-row.
-            let mrow = &mut self.obs.mission[r * MISSION_DIM..(r + 1) * MISSION_DIM];
+            let mrow = &mut self.obs.mission[r * MISSION_TOKENS..(r + 1) * MISSION_TOKENS];
             self.cfg.obs.write_mission_route(self.obs_route, &slot, mrow);
         }
     }
@@ -1351,7 +1351,7 @@ mod tests {
             ObsData::U8(v) => assert_eq!(v.len(), 2 * 160 * 160 * 3),
             _ => panic!("rgb must be u8"),
         }
-        assert_eq!(e.obs.mission.len(), 2 * MISSION_DIM, "mission channel rides along");
+        assert_eq!(e.obs.mission.len(), 2 * MISSION_TOKENS, "mission channel rides along");
     }
 
     #[test]
@@ -1360,7 +1360,7 @@ mod tests {
         // Mission env: features present and equal to the state's mission.
         let e = env("Navix-GoToDoor-5x5-v0", 3);
         for i in 0..3 {
-            let mut expect = [0i32; MISSION_DIM];
+            let mut expect = [0i32; MISSION_TOKENS];
             Mission::from_raw(e.state.mission[i]).write_features(&mut expect);
             assert_eq!(e.obs.mission_row(3, i), &expect[..], "env {i}");
             assert_eq!(e.obs.mission_row(3, i)[0], 1, "env {i}: mission must be present");
@@ -1371,7 +1371,7 @@ mod tests {
         // copy_policy_row concatenates grid + mission.
         let e = env("Navix-Fetch-5x5-N2-v0", 2);
         let stride = e.obs.stride(2);
-        let mut row = vec![0i32; stride + MISSION_DIM];
+        let mut row = vec![0i32; stride + MISSION_TOKENS];
         e.obs.copy_policy_row(2, 1, &mut row);
         assert_eq!(&row[..stride], e.obs.env_i32(2, 1));
         assert_eq!(&row[stride..], e.obs.mission_row(2, 1));

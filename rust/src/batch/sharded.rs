@@ -57,7 +57,7 @@ use crate::batch::{
 };
 use crate::bench_harness::chaos::ChaosInjector;
 use crate::core::actions::Action;
-use crate::core::mission::MISSION_DIM;
+use crate::core::mission::MISSION_TOKENS;
 use crate::core::snapshot::EngineCheckpoint;
 use crate::core::timestep::BatchedTimestep;
 use crate::envs::EnvConfig;
@@ -345,9 +345,9 @@ impl ShardedEnv {
                         }
                         _ => unreachable!("shard trajectory obs dtype diverged"),
                     }
-                    traj.mission[(g + lo) * MISSION_DIM..(g + hi) * MISSION_DIM]
+                    traj.mission[(g + lo) * MISSION_TOKENS..(g + hi) * MISSION_TOKENS]
                         .copy_from_slice(
-                            &sh.traj.mission[s * MISSION_DIM..(s + bs) * MISSION_DIM],
+                            &sh.traj.mission[s * MISSION_TOKENS..(s + bs) * MISSION_TOKENS],
                         );
                 }
             }
@@ -615,7 +615,7 @@ impl ShardedEnv {
                 }
                 _ => unreachable!("shard obs dtype diverged from the mirror"),
             }
-            self.obs.mission[lo * MISSION_DIM..hi * MISSION_DIM]
+            self.obs.mission[lo * MISSION_TOKENS..hi * MISSION_TOKENS]
                 .copy_from_slice(&sh.env.obs.mission);
         }
     }

@@ -112,10 +112,16 @@ impl Report {
             format!("[{}]", quoted.join(","))
         }
         let rows: Vec<String> = self.rows.iter().map(|r| arr(r)).collect();
-        let meta: Vec<String> = self
-            .meta
-            .iter()
-            .map(|(k, v)| format!("\"{}\":\"{}\"", esc(k), esc(v)))
+        // Every BENCH_*.json self-describes the mission encoding behind its
+        // numbers: the tokenised-mission block width is part of the policy
+        // input (and of the observation-path work each steps/s row timed),
+        // so trend comparisons across PRs must not conflate widths.
+        let baked = format!(
+            "\"mission_tokens\":\"{}\"",
+            crate::core::mission::MISSION_TOKENS
+        );
+        let meta: Vec<String> = std::iter::once(baked)
+            .chain(self.meta.iter().map(|(k, v)| format!("\"{}\":\"{}\"", esc(k), esc(v))))
             .collect();
         format!(
             "{{\"name\":\"{}\",\"header\":{},\"rows\":[{}],\"meta\":{{{}}}}}\n",
@@ -155,7 +161,11 @@ mod tests {
         assert!(j.starts_with("{\"name\":\"json test\""));
         assert!(j.contains("\"header\":[\"a\",\"b\"]"));
         assert!(j.contains("\"rows\":[[\"1\",\"x \\\"quoted\\\"\"]]"));
-        assert!(j.contains("\"meta\":{}"));
+        // The mission-token width is auto-stamped into every meta block.
+        assert!(j.contains(&format!(
+            "\"meta\":{{\"mission_tokens\":\"{}\"}}",
+            crate::core::mission::MISSION_TOKENS
+        )));
         assert!(j.ends_with("}\n"));
     }
 
@@ -165,7 +175,7 @@ mod tests {
         r.meta("floor", "8000");
         r.meta("floor_source", "bench_floors.toml");
         let j = r.to_json();
-        assert!(j.contains("\"meta\":{\"floor\":\"8000\",\"floor_source\":\"bench_floors.toml\"}"));
+        assert!(j.contains("\"floor\":\"8000\",\"floor_source\":\"bench_floors.toml\"}"));
     }
 
     #[test]

@@ -70,10 +70,11 @@ impl XlaPpo {
             fwd,
             update,
             mb_size,
-            // The AOT artifacts are compiled against the grid-only input
-            // shape (147), so the XLA path stays mission-blind until the
-            // Python layer regenerates them with OBS_DIM + MISSION_DIM
-            // inputs — see EXPERIMENTS.md §Goal-conditioning.
+            // The artifacts are compiled against the full policy-width
+            // input — grid features ++ mission token block — derived from
+            // `agents::OBS_DIM` on both sides, so the XLA path is
+            // goal-conditioned like the native trainers (see
+            // EXPERIMENTS.md §Goal-conditioning).
             obs_dim: packing::OBS_DIM,
             n_actions: packing::N_ACTIONS,
             rng: Rng::new(seed ^ 0x9E37),
@@ -137,9 +138,12 @@ impl XlaPpo {
         let mut actions = vec![0u8; b];
         let mut lp = vec![0.0f32; self.n_actions];
         for t in 0..t_len {
-            // Whole-batch copies: one raw i32 snapshot for the artifact
-            // inputs, one featurised block straight into the rollout.
-            obs_buf.copy_from_slice(env.obs.as_i32());
+            // Policy-width rows (grid ++ mission tokens): one raw i32
+            // snapshot for the artifact inputs, one featurised block
+            // straight into the rollout.
+            for i in 0..b {
+                env.obs.copy_policy_row(b, i, &mut obs_buf[i * d..(i + 1) * d]);
+            }
             raw_obs[t * b * d..(t + 1) * b * d].copy_from_slice(&obs_buf);
             preprocess_obs(&obs_buf, &mut ro.obs[t * b * d..(t + 1) * b * d]);
             let (logits, values) = self.forward(&obs_buf, b)?;
@@ -165,7 +169,9 @@ impl XlaPpo {
                 }
             }
         }
-        obs_buf.copy_from_slice(env.obs.as_i32());
+        for i in 0..b {
+            env.obs.copy_policy_row(b, i, &mut obs_buf[i * d..(i + 1) * d]);
+        }
         let (_, values) = self.forward(&obs_buf, b)?;
         ro.last_values.copy_from_slice(&values);
         gae::gae(

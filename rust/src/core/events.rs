@@ -48,6 +48,14 @@ pub struct Events {
     /// `agent_contact` so trainers can deterministically mask the row's
     /// reward; *not* a terminal event, so [`Events::any`] ignores it.
     pub slot_quarantined: bool,
+    /// Player toggled open a door matching the mission's active `Open`
+    /// clause (SeqUnlockPickup / OpenDoorsOrder progress). A progress
+    /// marker like `slot_quarantined` — mid-sequence clause completions
+    /// must not terminate the episode, so [`Events::any`] ignores it.
+    pub door_opened: bool,
+    /// The mission's *final* clause completed this step — the success
+    /// event sequenced families reward and terminate on.
+    pub mission_complete: bool,
 }
 
 impl Events {
@@ -65,12 +73,14 @@ impl Events {
         agent_contact: false,
         contacted: false,
         slot_quarantined: false,
+        door_opened: false,
+        mission_complete: false,
     };
 
     /// Any terminal-success/failure event fired this step?
-    /// `slot_quarantined` is deliberately excluded: a quarantine is an
-    /// engine-level recovery marker, not an episode outcome, and must not
-    /// terminate the episode it rescued.
+    /// `slot_quarantined` and `door_opened` are deliberately excluded:
+    /// the former is an engine-level recovery marker, and the latter a
+    /// mid-sequence progress marker — neither is an episode outcome.
     #[inline]
     pub fn any(self) -> bool {
         self.goal_reached
@@ -85,6 +95,7 @@ impl Events {
             || self.object_placed
             || self.agent_contact
             || self.contacted
+            || self.mission_complete
     }
 
     /// Pack the latches into a bitmask (bit order = field order) for the
@@ -105,6 +116,8 @@ impl Events {
             self.agent_contact,
             self.contacted,
             self.slot_quarantined,
+            self.door_opened,
+            self.mission_complete,
         ];
         fields
             .iter()
@@ -129,6 +142,8 @@ impl Events {
             agent_contact: get(10),
             contacted: get(11),
             slot_quarantined: get(12),
+            door_opened: get(13),
+            mission_complete: get(14),
         }
     }
 }
@@ -145,7 +160,7 @@ mod tests {
 
     #[test]
     fn any_detects_each_latch() {
-        for i in 0..12 {
+        for i in 0..13 {
             let mut e = Events::NONE;
             match i {
                 0 => e.goal_reached = true,
@@ -159,27 +174,34 @@ mod tests {
                 8 => e.object_reached = true,
                 9 => e.object_placed = true,
                 10 => e.agent_contact = true,
-                _ => e.contacted = true,
+                11 => e.contacted = true,
+                _ => e.mission_complete = true,
             }
             assert!(e.any());
         }
     }
 
     #[test]
-    fn quarantine_latch_is_not_terminal() {
+    fn progress_latches_are_not_terminal() {
         let e = Events { slot_quarantined: true, ..Events::NONE };
         assert!(!e.any(), "a quarantine marker must never terminate an episode");
+        let e = Events { door_opened: true, ..Events::NONE };
+        assert!(!e.any(), "a mid-sequence clause completion must never terminate an episode");
     }
 
     #[test]
     fn bits_round_trip_every_latch() {
-        for i in 0..13u16 {
+        for i in 0..15u16 {
             let e = Events::from_bits(1 << i);
             assert_eq!(e.to_bits(), 1 << i, "latch {i}");
             assert_eq!(Events::from_bits(e.to_bits()), e);
         }
         assert_eq!(Events::NONE.to_bits(), 0);
-        let all = Events::from_bits(0x1FFF);
-        assert_eq!(all.to_bits(), 0x1FFF);
+        let all = Events::from_bits(0x7FFF);
+        assert_eq!(all.to_bits(), 0x7FFF);
+        // v1 snapshot bitmasks (13 latches) decode with the new latches
+        // cleared — byte-level back-compat for the codec.
+        let v1 = Events::from_bits(0x1FFF);
+        assert!(!v1.door_opened && !v1.mission_complete);
     }
 }

@@ -1,76 +1,89 @@
-//! The typed `Mission` component — goal conditioning as first-class state.
+//! The compositional mission grammar — goal conditioning as first-class state.
 //!
 //! NAVIX positions MiniGrid as a substrate for *language-conditioned* RL:
 //! several families (GoToDoor, KeyCorridor, Fetch, Unlock/UnlockPickup, and
 //! the BabyAI-style GoToObj/PutNext families) parameterise each episode with
 //! a goal — "go to the red door", "pick up the blue key", "put the ball next
-//! to the box". Before this module the goal lived in the batched state as a
-//! bare `i32` poked by layout generators as `(tag << 8) | colour` and decoded
-//! by hand in the intervention system; nothing ever *showed* it to the
-//! policy, so every mission-conditioned env was unlearnable.
+//! to the box". PR 5 promoted that goal from an ad-hoc `i32` poke to the
+//! typed [`Mission`] component; this module grows it into a *grammar*:
 //!
-//! [`Mission`] makes the encoding a single, typed authority:
+//! * **[`MissionClause`]** — one atomic instruction: a verb
+//!   ([`MissionVerb`]: go to / pick up / open / put next to) applied to an
+//!   object kind × colour (plus a second object for `PutNext`);
+//! * **[`MissionSpec`]** — a small AST over clauses: a single clause, or a
+//!   2-step `then` sequence ("open the red door, then pick up the box")
+//!   with per-clause completion latches and an active-clause cursor;
+//! * **the token slab** — every spec serialises losslessly into a
+//!   fixed-capacity `[i32; MAX_MISSION_TOKENS]` buffer
+//!   ([`MissionSpec::write_tokens`] / [`MissionSpec::from_tokens`]) which is
+//!   what [`crate::core::state::BatchedState`] stores per agent-row and what
+//!   the observation system streams to the policy (replacing the PR 5
+//!   one-hot block).
 //!
-//! * **task verb** — what to do ([`MissionVerb`]: go to / pick up /
-//!   put next to);
-//! * **object kind × colour** — what to do it to;
-//! * for `PutNext`, a **second object kind × colour** — what to put it
-//!   next to.
+//! ## Packed clause layout (preserved from the legacy `(tag << 8) | colour`)
 //!
-//! ## Bit layout (preserved from the legacy `(tag << 8) | colour` pokes)
+//! Each clause still round-trips through the PR 5 packed `i32` — the state's
+//! `mission` column always holds the *active* clause in this layout, so the
+//! intervention system, the shard-invariance pins, and every pre-grammar
+//! mission value stay bit-identical:
 //!
 //! ```text
 //! bit 0..8    target colour                 (Color as u8)
 //! bit 8..16   target object kind            (MiniGrid Tag)
 //! bit 16..18  verb code: 0 = kind default   (GoTo for Door, PickUp for
 //!             pickables — the legacy implicit verb), 1 = explicit GoTo,
-//!             2 = PutNext
+//!             2 = PutNext, 3 = Open
 //! bit 18..21  second object kind            (PutNext only; Tag fits 3 bits)
 //! bit 21..24  second object colour          (PutNext only)
 //! ```
 //!
-//! `-1` (all bits set, sign negative) means "no mission". Crucially, verb
-//! code 0 resolves to the verb the legacy encoding implied, so every mission
-//! value produced before this module ([`Mission::pick_up`],
-//! [`Mission::go_to`] on a door) is **bit-identical** to the old ad-hoc
-//! pokes — the shard-invariance and cross-engine parity pins carry over
-//! untouched.
+//! `-1` (all bits set, sign negative) means "no mission".
 //!
-//! ## The feature vector
+//! ## Token layout
 //!
-//! [`Mission::write_features`] renders the mission as a fixed-width
-//! ([`MISSION_DIM`]) one-hot block — present flag, verb, object kind,
-//! colour, and the PutNext second object — which the observation system
-//! writes into every [`crate::batch::ObsBatch`] and the agents concatenate
-//! onto the grid features, putting the goal on the policy's input the same
-//! way NAVIX's JAX pipeline vmaps goal embeddings alongside observations.
+//! [`MISSION_TOKENS`] = 16 small non-negative integers; 0 is always "absent"
+//! so mission-free families keep an all-zero block:
+//!
+//! ```text
+//! tok[0]          clause count (0, 1 or 2; 0 = no mission)
+//! tok[1]          active clause index (0-based)
+//! tok[2 + 7c + 0] clause c verb   = MissionVerb as i32 + 1
+//! tok[2 + 7c + 1] clause c kind   = kind slot (door/key/ball/box) + 1
+//! tok[2 + 7c + 2] clause c colour = Color as i32 + 1
+//! tok[2 + 7c + 3] clause c second-object kind slot + 1 (PutNext; else 0)
+//! tok[2 + 7c + 4] clause c second-object colour + 1    (PutNext; else 0)
+//! tok[2 + 7c + 5] clause c completion latch (0/1)
+//! tok[2 + 7c + 6] reserved (0)
+//! ```
+//!
+//! A 1-clause spec is the **lossless embedding** of a legacy [`Mission`]:
+//! [`MissionSpec::from_mission`] followed by [`MissionSpec::active_mission`]
+//! reproduces the packed `i32` bit for bit, which is what keeps every
+//! pre-grammar parity pin alive.
 
 use super::components::Color;
 use super::entities::Tag;
 
-/// Number of i32 features [`Mission::write_features`] writes:
-/// 1 present flag + 3 verbs + 4 object kinds + 6 colours
-/// + 4 second-object kinds + 6 second-object colours.
-pub const MISSION_DIM: usize = 1 + 3 + 4 + 6 + 4 + 6;
+/// Width of the tokenised mission block every observation carries:
+/// 2 header tokens + [`MAX_CLAUSES`] × 7 clause tokens.
+pub const MISSION_TOKENS: usize = 2 + MAX_CLAUSES * CLAUSE_STRIDE;
 
-/// Feature-block offsets (shared with the scan-path oracle in
-/// [`crate::systems::observations::scan`]).
-pub mod feat {
-    /// `[PRESENT]` = 1 iff a mission is set.
-    pub const PRESENT: usize = 0;
-    /// One-hot verb block starts here (3 slots, [`super::MissionVerb`] order).
-    pub const VERB: usize = 1;
-    /// One-hot object-kind block (4 slots: door, key, ball, box).
-    pub const KIND: usize = 4;
-    /// One-hot colour block (6 slots, MiniGrid colour order).
-    pub const COLOR: usize = 8;
-    /// One-hot second-object kind block (PutNext target, 4 slots).
-    pub const KIND2: usize = 14;
-    /// One-hot second-object colour block (6 slots).
-    pub const COLOR2: usize = 18;
-}
+/// Capacity of the per-agent-row token slab in
+/// [`crate::core::state::BatchedState`] (same as [`MISSION_TOKENS`]: the
+/// slab is streamed verbatim into the feature block).
+pub const MAX_MISSION_TOKENS: usize = MISSION_TOKENS;
 
-/// The task verb of a mission.
+/// Maximum clauses a [`MissionSpec`] holds (the `then` sequencer is 2-step).
+pub const MAX_CLAUSES: usize = 2;
+
+/// Tokens per clause in the slab (verb, kind, colour, near-kind,
+/// near-colour, done latch, reserved).
+pub const CLAUSE_STRIDE: usize = 7;
+
+/// First clause token (after the count/active header).
+pub const CLAUSE_BASE: usize = 2;
+
+/// The task verb of a mission clause.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 #[repr(u8)]
 pub enum MissionVerb {
@@ -82,6 +95,14 @@ pub enum MissionVerb {
     /// Drop the target object on a cell 4-adjacent to the second object
     /// (PutNext).
     PutNext = 2,
+    /// Toggle the target door open (SeqUnlockPickup, OpenDoorsOrder).
+    Open = 3,
+}
+
+impl MissionVerb {
+    /// All verbs, discriminant order (token code = index + 1).
+    pub const ALL: [MissionVerb; 4] =
+        [MissionVerb::GoTo, MissionVerb::PickUp, MissionVerb::PutNext, MissionVerb::Open];
 }
 
 /// Verb codes in bits 16..18. Code 0 is the *kind default* — the verb the
@@ -90,13 +111,15 @@ pub enum MissionVerb {
 const VERB_DEFAULT: i32 = 0;
 const VERB_GOTO: i32 = 1;
 const VERB_PUT_NEXT: i32 = 2;
+const VERB_OPEN: i32 = 3;
 
-/// One environment's mission, stored as the `i32` of
-/// [`crate::core::state::BatchedState::mission`] (−1 = none).
+/// One clause's packed `i32` — what
+/// [`crate::core::state::BatchedState::mission`] holds for the *active*
+/// clause (−1 = none).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Mission(pub i32);
 
-/// Dense slot of an object-kind tag inside the mission feature block.
+/// Dense slot of an object-kind tag inside the mission token block.
 #[inline]
 fn kind_slot(tag: i32) -> usize {
     match tag {
@@ -107,6 +130,17 @@ fn kind_slot(tag: i32) -> usize {
             debug_assert_eq!(tag, Tag::BOX, "mission object kind must be door/key/ball/box");
             3
         }
+    }
+}
+
+/// Inverse of [`kind_slot`].
+#[inline]
+fn slot_kind(slot: i32) -> i32 {
+    match slot {
+        0 => Tag::DOOR,
+        1 => Tag::KEY,
+        2 => Tag::BALL,
+        _ => Tag::BOX,
     }
 }
 
@@ -147,6 +181,13 @@ impl Mission {
         Mission((VERB_DEFAULT << 16) | (kind_tag << 8) | color as i32)
     }
 
+    /// "Open the `<colour>` door" (SeqUnlockPickup, OpenDoorsOrder). An
+    /// explicit verb code distinguishes it from GoToDoor's kind-default.
+    #[inline]
+    pub fn open(color: Color) -> Mission {
+        Mission((VERB_OPEN << 16) | (Tag::DOOR << 8) | color as i32)
+    }
+
     /// "Put the `<c1>` `<k1>` next to the `<c2>` `<k2>`" (PutNext).
     #[inline]
     pub fn put_next(kind_tag: i32, color: Color, near_tag: i32, near_color: Color) -> Mission {
@@ -177,6 +218,7 @@ impl Mission {
         Some(match (self.0 >> 16) & 0x3 {
             VERB_GOTO => MissionVerb::GoTo,
             VERB_PUT_NEXT => MissionVerb::PutNext,
+            VERB_OPEN => MissionVerb::Open,
             // Kind default: doors are go-to targets, pickables pick-up
             // targets — the verb the legacy encoding implied.
             _ => {
@@ -231,48 +273,311 @@ impl Mission {
         self.verb() == Some(MissionVerb::PickUp) && self.matches(tag, color)
     }
 
+    /// Is this an open mission targeting the `(color)` door?
+    #[inline]
+    pub fn is_open(self, color: Color) -> bool {
+        self.verb() == Some(MissionVerb::Open) && self.matches(Tag::DOOR, color)
+    }
+
     /// Human-readable mission string (the BabyAI-style instruction).
     pub fn describe(self) -> String {
-        let kind = |t: i32| match t {
+        match MissionClause::from_mission(self) {
+            None => "none".to_string(),
+            Some(c) => c.describe(),
+        }
+    }
+
+    /// Render this (single-clause) mission as the fixed-width token block
+    /// (`out.len() == MISSION_TOKENS`) via the lossless 1-clause embedding.
+    /// All-zero when no mission is set, so mission-free families are
+    /// unaffected by the concatenation.
+    pub fn write_features(self, out: &mut [i32]) {
+        MissionSpec::from_mission(self).write_tokens(out);
+    }
+}
+
+/// One atomic instruction of the mission grammar.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MissionClause {
+    /// Reach the `(kind, color)` object and perform `done` facing it.
+    GoTo { kind: i32, color: Color },
+    /// Pick the `(kind, color)` object up.
+    PickUp { kind: i32, color: Color },
+    /// Toggle the `color` door open.
+    Open { color: Color },
+    /// Drop the `(kind, color)` object 4-adjacent to `(near_kind,
+    /// near_color)`.
+    PutNext { kind: i32, color: Color, near_kind: i32, near_color: Color },
+}
+
+impl MissionClause {
+    /// The clause's verb.
+    #[inline]
+    pub fn verb(self) -> MissionVerb {
+        match self {
+            MissionClause::GoTo { .. } => MissionVerb::GoTo,
+            MissionClause::PickUp { .. } => MissionVerb::PickUp,
+            MissionClause::Open { .. } => MissionVerb::Open,
+            MissionClause::PutNext { .. } => MissionVerb::PutNext,
+        }
+    }
+
+    /// Pack into the legacy clause `i32` — **lossless**: 1-clause specs
+    /// round-trip bit-for-bit through this, which is what every pre-grammar
+    /// parity pin rides on.
+    pub fn to_mission(self) -> Mission {
+        match self {
+            MissionClause::GoTo { kind, color } => Mission::go_to(kind, color),
+            MissionClause::PickUp { kind, color } => Mission::pick_up(kind, color),
+            MissionClause::Open { color } => Mission::open(color),
+            MissionClause::PutNext { kind, color, near_kind, near_color } => {
+                Mission::put_next(kind, color, near_kind, near_color)
+            }
+        }
+    }
+
+    /// Decode a packed clause `i32` (`None` when no mission is set).
+    pub fn from_mission(m: Mission) -> Option<MissionClause> {
+        let verb = m.verb()?;
+        Some(match verb {
+            MissionVerb::GoTo => MissionClause::GoTo { kind: m.kind_tag(), color: m.color() },
+            MissionVerb::PickUp => MissionClause::PickUp { kind: m.kind_tag(), color: m.color() },
+            MissionVerb::Open => MissionClause::Open { color: m.color() },
+            MissionVerb::PutNext => MissionClause::PutNext {
+                kind: m.kind_tag(),
+                color: m.color(),
+                near_kind: m.near_kind_tag(),
+                near_color: m.near_color(),
+            },
+        })
+    }
+
+    /// Human-readable clause string (the BabyAI-style instruction).
+    pub fn describe(self) -> String {
+        let kind_name = |t: i32| match t {
             Tag::DOOR => "door",
             Tag::KEY => "key",
             Tag::BALL => "ball",
             _ => "box",
         };
-        match self.verb() {
-            None => "none".to_string(),
-            Some(MissionVerb::GoTo) => {
-                format!("go to the {} {}", self.color().name(), kind(self.kind_tag()))
+        match self {
+            MissionClause::GoTo { kind, color } => {
+                format!("go to the {} {}", color.name(), kind_name(kind))
             }
-            Some(MissionVerb::PickUp) => {
-                format!("pick up the {} {}", self.color().name(), kind(self.kind_tag()))
+            MissionClause::PickUp { kind, color } => {
+                format!("pick up the {} {}", color.name(), kind_name(kind))
             }
-            Some(MissionVerb::PutNext) => format!(
+            MissionClause::Open { color } => format!("open the {} door", color.name()),
+            MissionClause::PutNext { kind, color, near_kind, near_color } => format!(
                 "put the {} {} next to the {} {}",
-                self.color().name(),
-                kind(self.kind_tag()),
-                self.near_color().name(),
-                kind(self.near_kind_tag()),
+                color.name(),
+                kind_name(kind),
+                near_color.name(),
+                kind_name(near_kind),
             ),
         }
     }
+}
 
-    /// Render the mission as the fixed-width one-hot feature block every
-    /// observation batch carries (`out.len() == MISSION_DIM`). All-zero when
-    /// no mission is set, so mission-free families are unaffected by the
-    /// concatenation.
-    pub fn write_features(self, out: &mut [i32]) {
-        debug_assert_eq!(out.len(), MISSION_DIM);
-        out.fill(0);
-        let Some(verb) = self.verb() else { return };
-        out[feat::PRESENT] = 1;
-        out[feat::VERB + verb as usize] = 1;
-        out[feat::KIND + kind_slot(self.kind_tag())] = 1;
-        out[feat::COLOR + self.color() as usize] = 1;
-        if verb == MissionVerb::PutNext {
-            out[feat::KIND2 + kind_slot(self.near_kind_tag())] = 1;
-            out[feat::COLOR2 + self.near_color() as usize] = 1;
+/// A compositional mission: up to [`MAX_CLAUSES`] clauses executed in
+/// sequence, with per-clause completion latches and an active-clause cursor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MissionSpec {
+    clauses: [Option<MissionClause>; MAX_CLAUSES],
+    len: usize,
+    active: usize,
+    done: [bool; MAX_CLAUSES],
+}
+
+impl MissionSpec {
+    /// No mission.
+    pub const EMPTY: MissionSpec =
+        MissionSpec { clauses: [None; MAX_CLAUSES], len: 0, active: 0, done: [false; MAX_CLAUSES] };
+
+    /// A single-clause mission.
+    pub fn single(clause: MissionClause) -> MissionSpec {
+        let mut s = MissionSpec::EMPTY;
+        s.clauses[0] = Some(clause);
+        s.len = 1;
+        s
+    }
+
+    /// "`first`, then `second`" — the 2-step sequencer.
+    pub fn then(first: MissionClause, second: MissionClause) -> MissionSpec {
+        let mut s = MissionSpec::single(first);
+        s.clauses[1] = Some(second);
+        s.len = 2;
+        s
+    }
+
+    /// The lossless 1-clause embedding of a legacy packed mission
+    /// ([`Mission::NONE`] → [`MissionSpec::EMPTY`]).
+    pub fn from_mission(m: Mission) -> MissionSpec {
+        match MissionClause::from_mission(m) {
+            None => MissionSpec::EMPTY,
+            Some(c) => MissionSpec::single(c),
         }
+    }
+
+    /// Number of clauses (0 = no mission).
+    #[inline]
+    pub fn len(self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(self) -> bool {
+        self.len == 0
+    }
+
+    /// Index of the clause currently being pursued.
+    #[inline]
+    pub fn active_index(self) -> usize {
+        self.active
+    }
+
+    /// Clause `i` (`None` past the end).
+    #[inline]
+    pub fn clause(self, i: usize) -> Option<MissionClause> {
+        if i < self.len {
+            self.clauses[i]
+        } else {
+            None
+        }
+    }
+
+    /// Has clause `i` completed?
+    #[inline]
+    pub fn is_done(self, i: usize) -> bool {
+        i < self.len && self.done[i]
+    }
+
+    /// Have all clauses completed?
+    #[inline]
+    pub fn is_complete(self) -> bool {
+        self.len > 0 && (0..self.len).all(|i| self.done[i])
+    }
+
+    /// The clause currently being pursued (`None` when empty or complete).
+    #[inline]
+    pub fn active_clause(self) -> Option<MissionClause> {
+        if self.is_complete() {
+            return None;
+        }
+        self.clause(self.active)
+    }
+
+    /// The active clause as a packed legacy mission — what the state's
+    /// `mission` column holds. For 1-clause specs this is the original
+    /// mission value bit-for-bit.
+    #[inline]
+    pub fn active_mission(self) -> Mission {
+        match self.active_clause() {
+            None => Mission::NONE,
+            Some(c) => c.to_mission(),
+        }
+    }
+
+    /// Latch the active clause complete and advance the cursor. Returns
+    /// `true` when this completed the *whole* mission (the last clause).
+    pub fn mark_active_done(&mut self) -> bool {
+        if self.len == 0 || self.done[self.active] {
+            return false;
+        }
+        self.done[self.active] = true;
+        if self.active + 1 < self.len {
+            self.active += 1;
+            false
+        } else {
+            true
+        }
+    }
+
+    /// Human-readable mission string ("open the red door, then pick up the
+    /// green box").
+    pub fn describe(self) -> String {
+        if self.len == 0 {
+            return "none".to_string();
+        }
+        let mut s = self.clauses[0].expect("clause 0 present").describe();
+        for i in 1..self.len {
+            s.push_str(", then ");
+            s.push_str(&self.clauses[i].expect("clause present").describe());
+        }
+        s
+    }
+
+    /// Serialise into the fixed-width token slab
+    /// (`out.len() == MISSION_TOKENS`; all-zero when empty).
+    pub fn write_tokens(self, out: &mut [i32]) {
+        debug_assert_eq!(out.len(), MISSION_TOKENS);
+        out.fill(0);
+        if self.len == 0 {
+            return;
+        }
+        out[0] = self.len as i32;
+        out[1] = self.active as i32;
+        for c in 0..self.len {
+            let base = CLAUSE_BASE + c * CLAUSE_STRIDE;
+            let clause = self.clauses[c].expect("clause within len is present");
+            out[base] = clause.verb() as i32 + 1;
+            let (kind, color, near) = match clause {
+                MissionClause::GoTo { kind, color } | MissionClause::PickUp { kind, color } => {
+                    (kind, color, None)
+                }
+                MissionClause::Open { color } => (Tag::DOOR, color, None),
+                MissionClause::PutNext { kind, color, near_kind, near_color } => {
+                    (kind, color, Some((near_kind, near_color)))
+                }
+            };
+            out[base + 1] = kind_slot(kind) as i32 + 1;
+            out[base + 2] = color as i32 + 1;
+            if let Some((nk, nc)) = near {
+                out[base + 3] = kind_slot(nk) as i32 + 1;
+                out[base + 4] = nc as i32 + 1;
+            }
+            out[base + 5] = self.done[c] as i32;
+        }
+    }
+
+    /// Deserialise a token slab written by [`MissionSpec::write_tokens`].
+    /// Malformed slabs decode defensively (clamped counts, absent clauses
+    /// skipped) rather than panicking — the slab crosses the snapshot codec.
+    pub fn from_tokens(toks: &[i32]) -> MissionSpec {
+        debug_assert_eq!(toks.len(), MISSION_TOKENS);
+        let mut s = MissionSpec::EMPTY;
+        let n = toks[0].clamp(0, MAX_CLAUSES as i32) as usize;
+        if n == 0 {
+            return s;
+        }
+        for c in 0..n {
+            let base = CLAUSE_BASE + c * CLAUSE_STRIDE;
+            let verb_tok = toks[base];
+            if verb_tok <= 0 {
+                break;
+            }
+            let kind = slot_kind(toks[base + 1] - 1);
+            let color = Color::from_u8((toks[base + 2] - 1).max(0) as u8);
+            let clause = match verb_tok - 1 {
+                x if x == MissionVerb::GoTo as i32 => MissionClause::GoTo { kind, color },
+                x if x == MissionVerb::PickUp as i32 => MissionClause::PickUp { kind, color },
+                x if x == MissionVerb::Open as i32 => MissionClause::Open { color },
+                _ => MissionClause::PutNext {
+                    kind,
+                    color,
+                    near_kind: slot_kind(toks[base + 3] - 1),
+                    near_color: Color::from_u8((toks[base + 4] - 1).max(0) as u8),
+                },
+            };
+            s.clauses[s.len] = Some(clause);
+            s.done[s.len] = toks[base + 5] != 0;
+            s.len += 1;
+        }
+        if s.len == 0 {
+            return MissionSpec::EMPTY;
+        }
+        s.active = (toks[1].clamp(0, s.len as i32 - 1)) as usize;
+        s
     }
 }
 
@@ -313,6 +618,16 @@ mod tests {
         assert!(m.is_pick_up(Tag::KEY, Color::Grey));
         assert!(!m.is_go_to(Tag::KEY, Color::Grey));
 
+        let m = Mission::open(Color::Yellow);
+        assert_eq!(m.verb(), Some(MissionVerb::Open));
+        assert!(m.is_open(Color::Yellow));
+        assert!(!m.is_go_to(Tag::DOOR, Color::Yellow), "Open(door) is not a go-to mission");
+        assert_ne!(
+            m.raw(),
+            Mission::go_to(Tag::DOOR, Color::Yellow).raw(),
+            "the explicit Open verb code distinguishes it from GoToDoor"
+        );
+
         let m = Mission::put_next(Tag::BALL, Color::Purple, Tag::BOX, Color::Green);
         assert_eq!(m.verb(), Some(MissionVerb::PutNext));
         assert_eq!((m.kind_tag(), m.color()), (Tag::BALL, Color::Purple));
@@ -323,46 +638,144 @@ mod tests {
     }
 
     #[test]
-    fn features_are_one_hot_blocks() {
-        let mut f = [0i32; MISSION_DIM];
+    fn token_block_layout() {
+        let mut f = [0i32; MISSION_TOKENS];
         Mission::NONE.write_features(&mut f);
-        assert!(f.iter().all(|&x| x == 0), "no mission → all-zero features");
+        assert!(f.iter().all(|&x| x == 0), "no mission → all-zero tokens");
 
         Mission::go_to(Tag::DOOR, Color::Yellow).write_features(&mut f);
-        assert_eq!(f[feat::PRESENT], 1);
-        assert_eq!(f[feat::VERB + MissionVerb::GoTo as usize], 1);
-        assert_eq!(f[feat::KIND], 1, "door slot");
-        assert_eq!(f[feat::COLOR + Color::Yellow as usize], 1);
-        assert_eq!(f.iter().sum::<i32>(), 4, "exactly one bit per block");
+        assert_eq!(f[0], 1, "one clause");
+        assert_eq!(f[1], 0, "clause 0 active");
+        assert_eq!(f[CLAUSE_BASE], MissionVerb::GoTo as i32 + 1);
+        assert_eq!(f[CLAUSE_BASE + 1], 1, "door slot + 1");
+        assert_eq!(f[CLAUSE_BASE + 2], Color::Yellow as i32 + 1);
+        assert_eq!(&f[CLAUSE_BASE + 3..], &[0; MISSION_TOKENS - CLAUSE_BASE - 3]);
 
         Mission::put_next(Tag::KEY, Color::Red, Tag::BALL, Color::Grey).write_features(&mut f);
-        assert_eq!(f[feat::PRESENT], 1);
-        assert_eq!(f[feat::VERB + MissionVerb::PutNext as usize], 1);
-        assert_eq!(f[feat::KIND + 1], 1, "key slot");
-        assert_eq!(f[feat::COLOR + Color::Red as usize], 1);
-        assert_eq!(f[feat::KIND2 + 2], 1, "ball slot");
-        assert_eq!(f[feat::COLOR2 + Color::Grey as usize], 1);
-        assert_eq!(f.iter().sum::<i32>(), 6);
+        assert_eq!(f[CLAUSE_BASE], MissionVerb::PutNext as i32 + 1);
+        assert_eq!(f[CLAUSE_BASE + 1], 2, "key slot + 1");
+        assert_eq!(f[CLAUSE_BASE + 2], Color::Red as i32 + 1);
+        assert_eq!(f[CLAUSE_BASE + 3], 3, "ball slot + 1");
+        assert_eq!(f[CLAUSE_BASE + 4], Color::Grey as i32 + 1);
 
-        // every feature is 0/1 (the conformance sweep pins this per env)
+        // every token is a small non-negative integer (the conformance
+        // sweep pins this per env)
         for m in [
             Mission::pick_up(Tag::BOX, Color::Green),
             Mission::go_to(Tag::KEY, Color::Blue),
+            Mission::open(Color::Red),
             Mission::put_next(Tag::BALL, Color::Red, Tag::BOX, Color::Purple),
         ] {
             m.write_features(&mut f);
-            assert!(f.iter().all(|&x| x == 0 || x == 1));
+            assert!(f.iter().all(|&x| (0..=7).contains(&x)));
         }
+    }
+
+    #[test]
+    fn spec_tokens_round_trip() {
+        // AST → tokens → AST round-trip pin, across clause shapes and
+        // progress states.
+        let clauses = [
+            MissionClause::GoTo { kind: Tag::DOOR, color: Color::Red },
+            MissionClause::PickUp { kind: Tag::BOX, color: Color::Green },
+            MissionClause::Open { color: Color::Blue },
+            MissionClause::PutNext {
+                kind: Tag::BALL,
+                color: Color::Purple,
+                near_kind: Tag::BOX,
+                near_color: Color::Yellow,
+            },
+        ];
+        let mut buf = [0i32; MISSION_TOKENS];
+        for &a in &clauses {
+            let s = MissionSpec::single(a);
+            s.write_tokens(&mut buf);
+            assert_eq!(MissionSpec::from_tokens(&buf), s, "{:?}", a);
+            for &b in &clauses {
+                let mut s = MissionSpec::then(a, b);
+                s.write_tokens(&mut buf);
+                assert_eq!(MissionSpec::from_tokens(&buf), s);
+                // advance mid-sequence and re-pin
+                assert!(!s.mark_active_done(), "first clause is not the last");
+                assert_eq!(s.active_index(), 1);
+                s.write_tokens(&mut buf);
+                assert_eq!(MissionSpec::from_tokens(&buf), s);
+                assert!(s.mark_active_done(), "second clause completes the mission");
+                assert!(s.is_complete());
+                s.write_tokens(&mut buf);
+                assert_eq!(MissionSpec::from_tokens(&buf), s);
+            }
+        }
+        MissionSpec::EMPTY.write_tokens(&mut buf);
+        assert_eq!(buf, [0; MISSION_TOKENS]);
+        assert_eq!(MissionSpec::from_tokens(&buf), MissionSpec::EMPTY);
+    }
+
+    #[test]
+    fn legacy_embedding_is_lossless() {
+        // 1-clause specs embed legacy missions bit-for-bit: packed →
+        // spec → packed is the identity, including verb-code subtleties
+        // (kind-default vs explicit GoTo).
+        let missions = [
+            Mission::go_to(Tag::DOOR, Color::Yellow),
+            Mission::go_to(Tag::BALL, Color::Blue),
+            Mission::pick_up(Tag::KEY, Color::Grey),
+            Mission::pick_up(Tag::BOX, Color::Red),
+            Mission::open(Color::Green),
+            Mission::put_next(Tag::BALL, Color::Purple, Tag::BOX, Color::Green),
+        ];
+        for m in missions {
+            let spec = MissionSpec::from_mission(m);
+            assert_eq!(spec.len(), 1);
+            assert_eq!(spec.active_mission().raw(), m.raw(), "{}", m.describe());
+            // and through the token slab too
+            let mut buf = [0i32; MISSION_TOKENS];
+            spec.write_tokens(&mut buf);
+            assert_eq!(MissionSpec::from_tokens(&buf).active_mission().raw(), m.raw());
+        }
+        assert_eq!(MissionSpec::from_mission(Mission::NONE), MissionSpec::EMPTY);
+        assert_eq!(MissionSpec::EMPTY.active_mission().raw(), -1);
+    }
+
+    #[test]
+    fn clause_advance_latches() {
+        let mut s = MissionSpec::then(
+            MissionClause::Open { color: Color::Red },
+            MissionClause::PickUp { kind: Tag::BOX, color: Color::Green },
+        );
+        assert_eq!(s.active_index(), 0);
+        assert_eq!(s.active_mission().raw(), Mission::open(Color::Red).raw());
+        assert!(!s.is_complete());
+
+        assert!(!s.mark_active_done(), "clause 1/2 done must not complete the mission");
+        assert!(s.is_done(0));
+        assert!(!s.is_done(1));
+        assert_eq!(s.active_index(), 1);
+        assert_eq!(s.active_mission().raw(), Mission::pick_up(Tag::BOX, Color::Green).raw());
+
+        assert!(s.mark_active_done(), "clause 2/2 done completes the mission");
+        assert!(s.is_complete());
+        assert_eq!(s.active_mission().raw(), -1, "complete mission has no active clause");
+        assert!(!s.mark_active_done(), "idempotent once complete");
     }
 
     #[test]
     fn describe_reads_like_babyai() {
         assert_eq!(Mission::go_to(Tag::DOOR, Color::Red).describe(), "go to the red door");
         assert_eq!(Mission::pick_up(Tag::KEY, Color::Blue).describe(), "pick up the blue key");
+        assert_eq!(Mission::open(Color::Grey).describe(), "open the grey door");
         assert_eq!(
             Mission::put_next(Tag::BALL, Color::Green, Tag::BOX, Color::Yellow).describe(),
             "put the green ball next to the yellow box"
         );
         assert_eq!(Mission::NONE.describe(), "none");
+        assert_eq!(
+            MissionSpec::then(
+                MissionClause::Open { color: Color::Red },
+                MissionClause::PickUp { kind: Tag::BOX, color: Color::Green },
+            )
+            .describe(),
+            "open the red door, then pick up the green box"
+        );
     }
 }

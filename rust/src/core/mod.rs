@@ -24,7 +24,7 @@ pub mod timestep;
 pub use actions::Action;
 pub use components::{Color, DoorState, Direction};
 pub use entities::{CellType, EntityKind};
-pub use mission::{Mission, MissionVerb, MISSION_DIM};
+pub use mission::{Mission, MissionVerb, MISSION_TOKENS};
 pub use snapshot::{EngineCheckpoint, SlotCheckpoint, SlotSnapshot};
 pub use state::{BatchedState, EnvSlot, SlotMut};
 pub use timestep::{StepType, Timestep};

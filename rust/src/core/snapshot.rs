@@ -28,11 +28,17 @@
 //! descriptive error string.
 
 use super::events::Events;
+use super::mission::{Mission, MissionSpec, MISSION_TOKENS};
 use super::state::{BatchedState, Caps};
 use super::timestep::StepType;
 
-/// Magic prefix of the byte encoding: `NVXSNAP` + format version 1.
-const MAGIC: &[u8; 8] = b"NVXSNAP\x01";
+/// Magic prefix of the byte encoding: `NVXSNAP` + format version 2
+/// (version 2 added the per-agent mission token slab; version 1 bytes
+/// still decode, with the slab derived from the packed mission column).
+const MAGIC: &[u8; 8] = b"NVXSNAP\x02";
+
+/// The pre-grammar format: identical except no mission-token column.
+const MAGIC_V1: &[u8; 8] = b"NVXSNAP\x01";
 
 /// Bitwise image of one environment slot's full SoA state.
 #[derive(Clone, Debug, PartialEq)]
@@ -52,6 +58,8 @@ pub struct SlotSnapshot {
     pub player_dir: Vec<i32>,
     pub pocket: Vec<i32>,
     pub mission: Vec<i32>,
+    /// Tokenised mission slab, `a * MISSION_TOKENS`.
+    pub mission_tokens: Vec<i32>,
     pub events: Vec<Events>,
     pub last_action: Vec<i32>,
     // Entity tables, caps.* each.
@@ -91,6 +99,9 @@ impl SlotSnapshot {
             player_dir: state.player_dir[i * a..(i + 1) * a].to_vec(),
             pocket: state.pocket[i * a..(i + 1) * a].to_vec(),
             mission: state.mission[i * a..(i + 1) * a].to_vec(),
+            mission_tokens: state.mission_tokens
+                [i * a * MISSION_TOKENS..(i + 1) * a * MISSION_TOKENS]
+                .to_vec(),
             events: state.events[i * a..(i + 1) * a].to_vec(),
             last_action: state.last_action[i * a..(i + 1) * a].to_vec(),
             door_pos: state.door_pos[i * c.doors..(i + 1) * c.doors].to_vec(),
@@ -128,6 +139,8 @@ impl SlotSnapshot {
         state.player_dir[i * a..(i + 1) * a].copy_from_slice(&self.player_dir);
         state.pocket[i * a..(i + 1) * a].copy_from_slice(&self.pocket);
         state.mission[i * a..(i + 1) * a].copy_from_slice(&self.mission);
+        state.mission_tokens[i * a * MISSION_TOKENS..(i + 1) * a * MISSION_TOKENS]
+            .copy_from_slice(&self.mission_tokens);
         state.events[i * a..(i + 1) * a].copy_from_slice(&self.events);
         state.last_action[i * a..(i + 1) * a].copy_from_slice(&self.last_action);
         state.door_pos[i * c.doors..(i + 1) * c.doors].copy_from_slice(&self.door_pos);
@@ -169,6 +182,7 @@ impl SlotSnapshot {
             &self.player_dir,
             &self.pocket,
             &self.mission,
+            &self.mission_tokens,
             &self.last_action,
         ] {
             for &x in col.iter() {
@@ -195,10 +209,14 @@ impl SlotSnapshot {
 
     /// Decode [`SlotSnapshot::to_bytes`] output. Errors (instead of
     /// panicking) on wrong magic/version or a truncated/oversized buffer.
+    /// Version 1 (pre-grammar) bytes still decode: their token slab is
+    /// derived from the packed mission column via the lossless 1-clause
+    /// embedding.
     pub fn from_bytes(bytes: &[u8]) -> Result<SlotSnapshot, String> {
         let mut r = Reader { buf: bytes, at: 0 };
         let magic = r.take(8)?;
-        if magic != MAGIC {
+        let v1 = magic == MAGIC_V1;
+        if !v1 && magic != MAGIC {
             return Err(format!("bad snapshot magic/version: {magic:02x?}"));
         }
         let a = r.u32()? as usize;
@@ -211,19 +229,38 @@ impl SlotSnapshot {
             boxes: r.u32()? as usize,
         };
         let hw = h * w;
+        let base = r.take(hw)?.to_vec();
+        let base_color = r.take(hw)?.to_vec();
+        let overlay = r.u32_vec(hw)?;
+        let overlay_idx = r.take(hw)?.to_vec();
+        let player_pos = r.i32_vec(a)?;
+        let player_dir = r.i32_vec(a)?;
+        let pocket = r.i32_vec(a)?;
+        let mission = r.i32_vec(a)?;
+        let mission_tokens = if v1 {
+            let mut slab = vec![0i32; a * MISSION_TOKENS];
+            for (j, &m) in mission.iter().enumerate() {
+                MissionSpec::from_mission(Mission::from_raw(m))
+                    .write_tokens(&mut slab[j * MISSION_TOKENS..(j + 1) * MISSION_TOKENS]);
+            }
+            slab
+        } else {
+            r.i32_vec(a * MISSION_TOKENS)?
+        };
         let snap = SlotSnapshot {
             a,
             h,
             w,
             caps,
-            base: r.take(hw)?.to_vec(),
-            base_color: r.take(hw)?.to_vec(),
-            overlay: r.u32_vec(hw)?,
-            overlay_idx: r.take(hw)?.to_vec(),
-            player_pos: r.i32_vec(a)?,
-            player_dir: r.i32_vec(a)?,
-            pocket: r.i32_vec(a)?,
-            mission: r.i32_vec(a)?,
+            base,
+            base_color,
+            overlay,
+            overlay_idx,
+            player_pos,
+            player_dir,
+            pocket,
+            mission,
+            mission_tokens,
             last_action: r.i32_vec(a)?,
             events: {
                 let mut v = Vec::with_capacity(a);
@@ -351,6 +388,7 @@ mod tests {
         s.add_door(Pos::new(2, 3), Color::Yellow, DoorState::Locked);
         s.add_key(Pos::new(1, 2), Color::Yellow);
         s.add_ball(Pos::new(3, 2), Color::Blue);
+        s.set_mission(Mission::go_to(crate::core::entities::Tag::DOOR, Color::Yellow));
         s.events[1].goal_reached = true;
         s.last_action[0] = 2;
         st
@@ -391,6 +429,31 @@ mod tests {
         let mut bad = bytes;
         bad[7] = 99; // version byte
         assert!(SlotSnapshot::from_bytes(&bad).is_err(), "bad version");
+    }
+
+    #[test]
+    fn v1_bytes_still_restore() {
+        // A version-1 buffer is the v2 layout minus the mission-token
+        // column (which sat between `mission` and `last_action`). Splice
+        // the slab out of a v2 buffer and patch the version byte: decoding
+        // must succeed and re-derive the slab from the packed missions.
+        let st = populated_state();
+        for i in 0..st.b {
+            let snap = SlotSnapshot::capture(&st, i);
+            let bytes = snap.to_bytes();
+            let hw = snap.h * snap.w;
+            let a = snap.a;
+            // offset of the token column: magic + 7 dims + base + base_color
+            // + overlay(u32) + overlay_idx + 4 i32 cols (pos/dir/pocket/mission)
+            let tok_at = 8 + 7 * 4 + hw + hw + 4 * hw + hw + 4 * a * 4;
+            let tok_len = a * MISSION_TOKENS * 4;
+            let mut v1 = Vec::with_capacity(bytes.len() - tok_len);
+            v1.extend_from_slice(&bytes[..tok_at]);
+            v1.extend_from_slice(&bytes[tok_at + tok_len..]);
+            v1[7] = 1;
+            let back = SlotSnapshot::from_bytes(&v1).expect("v1 decode");
+            assert_eq!(back, snap, "slot {i}: v1 bytes restore bit-for-bit");
+        }
     }
 
     #[test]

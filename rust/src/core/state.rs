@@ -35,7 +35,7 @@ use super::components::{Color, Direction, DoorState, Pocket};
 use super::entities::{CellType, Tag};
 use super::events::Events;
 use super::grid::{GridDims, Pos};
-use super::mission::Mission;
+use super::mission::{Mission, MissionSpec, MISSION_TOKENS};
 use crate::rng::Rng;
 
 /// The packed per-cell overlay code: `tag | colour << 8 | state << 16`,
@@ -147,6 +147,11 @@ pub struct BatchedState {
     // (b*a) so rewards and terminations can be evaluated agent by agent.
     pub t: Vec<u32>,
     pub mission: Vec<i32>,
+    /// Tokenised mission slab, `b*a*MISSION_TOKENS` (row = one agent's
+    /// serialised [`MissionSpec`]). `mission` always holds the *active*
+    /// clause's packed `i32` — the slab is the full grammar (clause list,
+    /// cursor, completion latches) and the block observations stream.
+    pub mission_tokens: Vec<i32>,
     pub rng: Vec<u64>,
     pub events: Vec<Events>,
     pub last_action: Vec<i32>,
@@ -186,6 +191,7 @@ impl BatchedState {
             box_color: vec![0; b * caps.boxes],
             t: vec![0; b],
             mission: vec![-1; b * a],
+            mission_tokens: vec![0; b * a * MISSION_TOKENS],
             rng: vec![0; b],
             events: vec![Events::NONE; b * a],
             last_action: vec![-1; b * a],
@@ -236,6 +242,8 @@ impl BatchedState {
             box_color: &mut self.box_color[i * c.boxes..(i + 1) * c.boxes],
             t: &mut self.t[i],
             mission: &mut self.mission[i * a..(i + 1) * a],
+            mission_tokens: &mut self.mission_tokens
+                [i * a * MISSION_TOKENS..(i + 1) * a * MISSION_TOKENS],
             rng: &mut self.rng[i],
             events: &mut self.events[i * a..(i + 1) * a],
             last_action: &mut self.last_action[i * a..(i + 1) * a],
@@ -278,6 +286,8 @@ impl BatchedState {
             box_color: &self.box_color[i * c.boxes..(i + 1) * c.boxes],
             t: self.t[i],
             mission: &self.mission[i * a..(i + 1) * a],
+            mission_tokens: &self.mission_tokens
+                [i * a * MISSION_TOKENS..(i + 1) * a * MISSION_TOKENS],
             events: &self.events[i * a..(i + 1) * a],
             last_action: &self.last_action[i * a..(i + 1) * a],
         }
@@ -312,6 +322,7 @@ pub struct EnvSlot<'a> {
     pub box_color: &'a [u8],
     pub t: u32,
     pub mission: &'a [i32],
+    pub mission_tokens: &'a [i32],
     pub events: &'a [Events],
     pub last_action: &'a [i32],
 }
@@ -341,6 +352,7 @@ pub struct SlotMut<'a> {
     pub box_color: &'a mut [u8],
     pub t: &'a mut u32,
     pub mission: &'a mut [i32],
+    pub mission_tokens: &'a mut [i32],
     pub rng: &'a mut u64,
     pub events: &'a mut [Events],
     pub last_action: &'a mut [i32],
@@ -359,8 +371,11 @@ pub trait AgentView {
     fn dir_col(&self) -> &[i32];
     /// Per-agent packed pockets `[A]`.
     fn pocket_col(&self) -> &[i32];
-    /// Per-agent packed missions `[A]`.
+    /// Per-agent packed missions `[A]` (the *active* clause of each
+    /// agent's [`MissionSpec`]).
     fn mission_col(&self) -> &[i32];
+    /// Per-agent tokenised mission slab `[A × MISSION_TOKENS]`.
+    fn mission_tokens_col(&self) -> &[i32];
     /// Per-agent event latches `[A]`.
     fn events_col(&self) -> &[Events];
     /// The agent this view acts as.
@@ -394,10 +409,24 @@ pub trait AgentView {
         self.pocket_col()[self.active_agent()]
     }
 
-    /// The active agent's packed mission.
+    /// The active agent's packed mission (the active clause).
     #[inline]
     fn mission_raw(&self) -> i32 {
         self.mission_col()[self.active_agent()]
+    }
+
+    /// The active agent's mission token row (`MISSION_TOKENS` wide) —
+    /// exactly the block the observation system streams to the policy.
+    #[inline]
+    fn mission_tokens_row(&self) -> &[i32] {
+        let j = self.active_agent();
+        &self.mission_tokens_col()[j * MISSION_TOKENS..(j + 1) * MISSION_TOKENS]
+    }
+
+    /// The active agent's full mission grammar, decoded from the slab.
+    #[inline]
+    fn mission_spec(&self) -> MissionSpec {
+        MissionSpec::from_tokens(self.mission_tokens_row())
     }
 
     /// The active agent's event latches.
@@ -449,6 +478,10 @@ impl<'a> AgentView for EnvSlot<'a> {
         self.mission
     }
     #[inline]
+    fn mission_tokens_col(&self) -> &[i32] {
+        self.mission_tokens
+    }
+    #[inline]
     fn events_col(&self) -> &[Events] {
         self.events
     }
@@ -482,6 +515,10 @@ impl<'a> AgentView for SlotMut<'a> {
     #[inline]
     fn mission_col(&self) -> &[i32] {
         &*self.mission
+    }
+    #[inline]
+    fn mission_tokens_col(&self) -> &[i32] {
+        &*self.mission_tokens
     }
     #[inline]
     fn events_col(&self) -> &[Events] {
@@ -885,6 +922,7 @@ impl<'a> SlotMut<'a> {
         self.box_pos.fill(-1);
         self.pocket.fill(-1);
         self.mission.fill(Mission::NONE.raw());
+        self.mission_tokens.fill(0);
         self.events.fill(Events::NONE);
         self.last_action.fill(-1);
         for j in 1..self.player_pos.len() {
@@ -913,9 +951,45 @@ impl<'a> SlotMut<'a> {
 
     /// Set the slot's mission for every agent (missions are shared by the
     /// whole team; per-agent rows exist so evaluation stays row-local).
+    /// Writes both the packed clause column and the token slab via the
+    /// lossless 1-clause embedding, so legacy generators produce
+    /// grammar-correct state unchanged.
     #[inline]
     pub fn set_mission(&mut self, m: Mission) {
-        self.mission.fill(m.raw());
+        self.set_mission_spec(MissionSpec::from_mission(m));
+    }
+
+    /// Set the slot's compositional mission for every agent: the token
+    /// slab gets the serialised spec, the packed `mission` column the
+    /// active clause.
+    pub fn set_mission_spec(&mut self, spec: MissionSpec) {
+        self.mission.fill(spec.active_mission().raw());
+        let a = self.mission.len();
+        for j in 0..a {
+            spec.write_tokens(&mut self.mission_tokens[j * MISSION_TOKENS..(j + 1) * MISSION_TOKENS]);
+        }
+    }
+
+    /// Latch the active agent's current clause complete, advancing the
+    /// cursor: rewrites that agent's token row and packed mission column.
+    /// Returns `true` when this completed the whole mission.
+    pub fn advance_mission_clause(&mut self) -> bool {
+        let j = self.agent;
+        let row = &mut self.mission_tokens[j * MISSION_TOKENS..(j + 1) * MISSION_TOKENS];
+        let mut spec = MissionSpec::from_tokens(row);
+        if spec.is_empty() {
+            // A mission poked straight into the packed column (legacy
+            // tests/tools) has no slab row: treat it as its 1-clause
+            // embedding so completion semantics still hold.
+            spec = MissionSpec::from_mission(Mission::from_raw(self.mission[j]));
+            if spec.is_empty() {
+                return false;
+            }
+        }
+        let completed = spec.mark_active_done();
+        spec.write_tokens(row);
+        self.mission[j] = spec.active_mission().raw();
+        completed
     }
 
     /// Add a door at `p`. Panics if capacity is exhausted (a config bug).

@@ -1,0 +1,371 @@
+//! Difficulty-parameterised curriculum over a RoomGrid chain
+//! (`Navix-Curriculum-RoomGrid-v0`).
+//!
+//! One fixed 1×3 RoomGrid geometry hosts [`LEVELS`] difficulty levels, each
+//! a [`Difficulty`] knob setting: effective room count (the unused chain
+//! wall is removed outright), distractor-ball count, lock depth (how many
+//! chain doors are locked, counted from the far end, each with a matching
+//! key in the start room) and mission clause depth (a plain "pick up the
+//! box" vs "open the far door, then pick up the box" sequence). The level
+//! is drawn from the slot's own RNG stream at the top of generation —
+//! a pure function of the episode key, so the per-slot schedule is
+//! deterministic and bitwise shard-invariant — or pinned via
+//! [`Layout::CurriculumRoomGrid`](super::Layout)'s `level` for the
+//! fixed-difficulty registry aliases (`...-L0-v0` … `...-L3-v0`).
+//!
+//! Generation *rejects* unsatisfiable draws instead of shipping them: after
+//! placement, a slot-level BFS checks that every key and the target box are
+//! physically reachable (doors passable, other entities blocking — a
+//! distractor ball can plug a 1-wide doorway). A failed check surfaces as a
+//! [`PlacementError`], and the engines' shared
+//! [`retry_episode_keys`](super::retry_episode_keys) loop deterministically
+//! burns the episode key and tries the successor — rejection is a pure
+//! function of the key, never a panic and never shard-dependent.
+
+use super::roomgrid::RoomGrid;
+use crate::core::components::{Color, Direction, DoorState};
+use crate::core::entities::Tag;
+use crate::core::grid::Pos;
+use crate::core::mission::{Mission, MissionClause, MissionSpec};
+use crate::core::state::{AgentView, PlacementError, SlotMut};
+use std::collections::VecDeque;
+
+/// MiniGrid `room_size` of every room in the chain.
+pub const ROOM_SIZE: usize = 5;
+
+/// Rooms in the chain (left → right; the agent starts in room 0, the target
+/// box sits in the last room).
+pub const ROOMS: usize = 3;
+
+/// Number of difficulty levels in the curriculum.
+pub const LEVELS: u8 = 4;
+
+/// Grid dims of the (level-independent) geometry: 5×13.
+pub fn dims() -> (usize, usize) {
+    RoomGrid::new(ROOM_SIZE, 1, ROOMS).dims()
+}
+
+/// The four curriculum knobs one level fixes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Difficulty {
+    /// Effective rooms (2 merges rooms 0–1 into one start room).
+    pub rooms: usize,
+    /// Distractor balls scattered across random rooms.
+    pub distractors: usize,
+    /// Chain doors locked, counted from the far end (each key in room 0).
+    pub lock_depth: usize,
+    /// Mission clauses: 1 = pick up the box, 2 = open-then-pick-up.
+    pub clause_depth: usize,
+}
+
+impl Difficulty {
+    /// The monotone level → knobs schedule.
+    pub fn from_level(level: u8) -> Difficulty {
+        match level {
+            0 => Difficulty { rooms: 2, distractors: 0, lock_depth: 0, clause_depth: 1 },
+            1 => Difficulty { rooms: 2, distractors: 1, lock_depth: 1, clause_depth: 1 },
+            2 => Difficulty { rooms: 3, distractors: 1, lock_depth: 1, clause_depth: 2 },
+            _ => Difficulty { rooms: 3, distractors: 2, lock_depth: 2, clause_depth: 2 },
+        }
+    }
+}
+
+/// Slot-level BFS from the agent: doors count as passable (the curriculum
+/// guarantees their keys), other entities block, and the target cell itself
+/// is exempt. This is deliberately stricter than topological reachability —
+/// a distractor ball sitting directly behind a doorway *does* fail the
+/// check, which is exactly the draw the generator rejects.
+fn entity_reachable(s: &SlotMut<'_>, target: Pos) -> bool {
+    let start = s.player();
+    let mut seen = vec![false; s.h * s.w];
+    let mut queue = VecDeque::new();
+    seen[(start.r as usize) * s.w + start.c as usize] = true;
+    queue.push_back(start);
+    while let Some(p) = queue.pop_front() {
+        if p == target {
+            return true;
+        }
+        for d in Direction::ALL {
+            let q = p.step(d);
+            if !q.in_bounds(s.h, s.w) {
+                continue;
+            }
+            let qi = (q.r as usize) * s.w + q.c as usize;
+            if seen[qi] {
+                continue;
+            }
+            if q == target || s.door_at(q).is_some() || s.walkable(q) {
+                seen[qi] = true;
+                queue.push_back(q);
+            }
+        }
+    }
+    false
+}
+
+/// Build one curriculum episode. `level` pins the difficulty; `None` draws
+/// it from the slot RNG (the per-slot schedule).
+pub fn generate(s: &mut SlotMut<'_>, level: Option<u8>) -> Result<(), PlacementError> {
+    let lvl = match level {
+        Some(l) => l.min(LEVELS - 1),
+        None => {
+            let mut rng = s.rng();
+            rng.below(LEVELS as u32) as u8
+        }
+    };
+    let d = Difficulty::from_level(lvl);
+    let rg = RoomGrid::new(ROOM_SIZE, 1, ROOMS);
+    rg.carve(s);
+
+    // Distinct colours for the two chain doors, the box and the
+    // distractors, all from one shuffle so the instruction is unambiguous.
+    let mut colors = Color::ALL;
+    {
+        let mut rng = s.rng();
+        for i in (1..colors.len()).rev() {
+            let j = rng.below(i as u32 + 1) as usize;
+            colors.swap(i, j);
+        }
+    }
+    let (far_color, near_color, box_color) = (colors[0], colors[1], colors[2]);
+
+    // The chain: rooms 0 → 1 → 2. The far wall (1|2) always carries a door;
+    // the near wall (0|1) carries one only at 3 effective rooms, and is
+    // removed outright at 2 (one big start room).
+    let far_state = if d.lock_depth >= 1 { DoorState::Locked } else { DoorState::Closed };
+    rg.add_door(s, 0, 1, Direction::East, far_color, far_state);
+    if d.rooms >= 3 {
+        let near_state = if d.lock_depth >= 2 { DoorState::Locked } else { DoorState::Closed };
+        rg.add_door(s, 0, 0, Direction::East, near_color, near_state);
+    } else {
+        rg.remove_wall(s, 0, 0, Direction::East);
+    }
+
+    // Matching keys, far lock first, all in the start room.
+    let mut key_ps = Vec::new();
+    if d.lock_depth >= 1 {
+        let p = rg.place_in_room(s, 0, 0, false)?;
+        s.add_key(p, far_color);
+        key_ps.push(p);
+    }
+    if d.lock_depth >= 2 {
+        let p = rg.place_in_room(s, 0, 0, false)?;
+        s.add_key(p, near_color);
+        key_ps.push(p);
+    }
+
+    // The target box in the last room, then the distractor balls anywhere.
+    let box_p = rg.place_in_room(s, 0, ROOMS - 1, false)?;
+    s.add_box(box_p, box_color);
+    for k in 0..d.distractors {
+        let room = {
+            let mut rng = s.rng();
+            rng.below(ROOMS as u32) as usize
+        };
+        let p = rg.place_in_room(s, 0, room, false)?;
+        s.add_ball(p, colors[3 + k]);
+    }
+
+    rg.place_agent(s, 0, 0)?;
+    if d.clause_depth >= 2 {
+        s.set_mission_spec(MissionSpec::then(
+            MissionClause::Open { color: far_color },
+            MissionClause::PickUp { kind: Tag::BOX, color: box_color },
+        ));
+    } else {
+        s.set_mission(Mission::pick_up(Tag::BOX, box_color));
+    }
+
+    // Satisfiability gate: every key and the box must be reachable.
+    // Reject (→ deterministic episode-key retry) instead of shipping an
+    // unwinnable draw.
+    let (h, w) = (s.h, s.w);
+    for &t in key_ps.iter().chain(std::iter::once(&box_p)) {
+        if !entity_reachable(s, t) {
+            return Err(PlacementError { h, w, r0: 0, c0: 0, r1: h as i32, c1: w as i32 });
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::state::{BatchedState, Caps};
+    use crate::envs::registry::make;
+    use crate::envs::testutil::{reachable, reset_once};
+    use crate::rng::Key;
+
+    fn raw_state() -> BatchedState {
+        let (h, w) = dims();
+        BatchedState::new(1, h, w, Caps { doors: 2, keys: 2, balls: 2, boxes: 1 })
+    }
+
+    #[test]
+    fn difficulty_schedule_is_monotone() {
+        for l in 1..LEVELS {
+            let (lo, hi) = (Difficulty::from_level(l - 1), Difficulty::from_level(l));
+            assert!(hi.rooms >= lo.rooms, "level {l}");
+            assert!(hi.lock_depth >= lo.lock_depth, "level {l}");
+            assert!(hi.clause_depth >= lo.clause_depth, "level {l}");
+            assert!(
+                hi.rooms + hi.distractors + hi.lock_depth + hi.clause_depth
+                    > lo.rooms + lo.distractors + lo.lock_depth + lo.clause_depth,
+                "level {l} must be strictly harder overall"
+            );
+        }
+    }
+
+    #[test]
+    fn per_level_knobs_shape_the_layout() {
+        for lvl in 0..LEVELS {
+            let d = Difficulty::from_level(lvl);
+            for seed in 0..10u64 {
+                let mut st = raw_state();
+                let mut s = st.slot_mut(0);
+                *s.rng = seed;
+                s.clear_entities();
+                if generate(&mut s, Some(lvl)).is_err() {
+                    continue; // rejected draw; the engines retry the key
+                }
+                let n_doors = s.door_pos.iter().filter(|&&p| p >= 0).count();
+                let n_keys = s.key_pos.iter().filter(|&&p| p >= 0).count();
+                let n_balls = s.ball_pos.iter().filter(|&&p| p >= 0).count();
+                assert_eq!(n_doors, d.rooms - 1, "level {lvl} seed {seed}: chain doors");
+                assert_eq!(n_keys, d.lock_depth, "level {lvl} seed {seed}: one key per lock");
+                assert_eq!(n_balls, d.distractors, "level {lvl} seed {seed}: distractors");
+                let locked = (0..s.door_pos.len())
+                    .filter(|&x| {
+                        s.door_pos[x] >= 0
+                            && DoorState::from_u8(s.door_state[x]) == DoorState::Locked
+                    })
+                    .count();
+                assert_eq!(locked, d.lock_depth, "level {lvl} seed {seed}: lock depth");
+                let spec = s.mission_spec();
+                assert_eq!(spec.len(), d.clause_depth, "level {lvl} seed {seed}: clause depth");
+                match spec.clause(spec.len() - 1) {
+                    Some(MissionClause::PickUp { kind: Tag::BOX, .. }) => {}
+                    other => panic!("level {lvl} seed {seed}: final clause must pick the box, got {other:?}"),
+                }
+                if d.clause_depth == 2 {
+                    // Clause 1 names the far (locked) chain door.
+                    let far = match spec.clause(0) {
+                        Some(MissionClause::Open { color }) => color as u8,
+                        other => panic!("level {lvl} seed {seed}: clause 1 must be Open, got {other:?}"),
+                    };
+                    assert!(
+                        (0..s.door_pos.len())
+                            .any(|x| s.door_pos[x] >= 0 && s.door_color[x] == far),
+                        "level {lvl} seed {seed}: clause-1 colour has no door"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn generation_and_rejection_are_pure_functions_of_the_key() {
+        // Rejection must be deterministic: same key → same outcome and same
+        // layout, which is what keeps key-retry shard-invariant.
+        for lvl in [None, Some(0), Some(3)] {
+            for seed in 0..20u64 {
+                let build = |seed: u64| {
+                    let mut st = raw_state();
+                    let mut s = st.slot_mut(0);
+                    *s.rng = seed;
+                    s.clear_entities();
+                    let ok = generate(&mut s, lvl).is_ok();
+                    drop(s);
+                    (ok, st.base.clone(), st.door_pos.clone(), st.key_pos.clone(),
+                     st.ball_pos.clone(), st.box_pos.clone(), st.player_pos.clone(),
+                     st.mission_tokens.clone())
+                };
+                assert_eq!(build(seed), build(seed), "level {lvl:?} seed {seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn registry_reset_always_lands_a_solvable_episode() {
+        // The full reset path (rejection → key retry) must always deliver:
+        // box topologically reachable, and for 2-clause draws the far door
+        // open-able (its key reachable too — pinned by the in-generator
+        // check, re-verified here through the public reset).
+        let cfg = make("Navix-Curriculum-RoomGrid-v0").unwrap();
+        for seed in 0..25u64 {
+            let st = reset_once(&cfg, seed);
+            let s = st.slot(0);
+            let bx = Pos::decode(s.box_pos[0], s.w);
+            assert!(reachable(&st, 0, bx, true), "seed {seed}: box unreachable through doors");
+            for k in 0..s.key_pos.len() {
+                if s.key_pos[k] >= 0 {
+                    let kp = Pos::decode(s.key_pos[k], s.w);
+                    assert!(reachable(&st, 0, kp, true), "seed {seed}: key {k} unreachable");
+                }
+            }
+            assert!(!s.mission_value().is_none(), "seed {seed}: curriculum always sets a mission");
+        }
+    }
+
+    #[test]
+    fn fixed_level_aliases_pin_the_difficulty() {
+        for (id, lvl) in [
+            ("Navix-Curriculum-RoomGrid-L0-v0", 0u8),
+            ("Navix-Curriculum-RoomGrid-L1-v0", 1),
+            ("Navix-Curriculum-RoomGrid-L2-v0", 2),
+            ("Navix-Curriculum-RoomGrid-L3-v0", 3),
+        ] {
+            let cfg = make(id).unwrap();
+            let d = Difficulty::from_level(lvl);
+            for seed in 0..5u64 {
+                let st = reset_once(&cfg, seed);
+                let s = st.slot(0);
+                assert_eq!(
+                    s.key_pos.iter().filter(|&&p| p >= 0).count(),
+                    d.lock_depth,
+                    "{id} seed {seed}"
+                );
+                assert_eq!(s.mission_spec().len(), d.clause_depth, "{id} seed {seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_schedule_draws_every_level() {
+        // The level draw comes first in the RNG stream, so the id without a
+        // pinned level must visit all difficulties across episode keys.
+        let cfg = make("Navix-Curriculum-RoomGrid-v0").unwrap();
+        let mut seen = [false; LEVELS as usize];
+        for seed in 0..40u64 {
+            let st = reset_once(&cfg, seed);
+            let spec = st.slot(0).mission_spec();
+            let keys = st.slot(0).key_pos.iter().filter(|&&p| p >= 0).count();
+            // (clause_depth, lock_depth) identifies the level uniquely
+            // except L0/L1, which the key count separates.
+            let lvl = match (spec.len(), keys) {
+                (1, 0) => 0,
+                (1, 1) => 1,
+                (2, 1) => 2,
+                (2, 2) => 3,
+                other => panic!("seed {seed}: knobs {other:?} match no level"),
+            };
+            seen[lvl] = true;
+        }
+        assert!(seen.iter().all(|&x| x), "per-slot schedule must cover all levels: {seen:?}");
+    }
+
+    #[test]
+    fn reset_slot_keeps_working_on_a_multi_env_batch() {
+        // Mirrors the engine autoreset pattern: a fresh slot borrow per
+        // attempt, successor keys on rejection.
+        let cfg = make("Navix-Curriculum-RoomGrid-v0").unwrap();
+        let mut st = BatchedState::new(3, cfg.h, cfg.w, cfg.caps);
+        for i in 0..3 {
+            let root = Key::new(0xC0FFEE).fold_in(i as u64);
+            crate::envs::retry_episode_keys(&cfg.id, root, |t| {
+                cfg.reset_slot(&mut st.slot_mut(i), root.fold_in(t as u64))
+            });
+            assert!(!st.slot(i).mission_value().is_none(), "slot {i} must carry a mission");
+        }
+    }
+}

@@ -284,6 +284,55 @@ fn fetch(id: &str, n: usize, n_objs: usize) -> EnvConfig {
     )
 }
 
+/// SeqUnlockPickup: Unlock geometry with the explicit 2-clause mission
+/// "open the door, then pick up the box". Pays only on `mission_complete`
+/// (the final clause), like all sequenced families.
+fn seq_unlock_pickup(id: &str) -> EnvConfig {
+    let (h, w) = super::sequenced::seq_unlock_pickup_dims();
+    let rs2 = super::sequenced::ROOM_SIZE * super::sequenced::ROOM_SIZE;
+    // Same T budget as BlockedUnlockPickup: two sub-goals, 16·room_size².
+    base(
+        id,
+        h,
+        w,
+        Caps { doors: 1, keys: 1, boxes: 1, ..Caps::default() },
+        (16 * rs2) as u32,
+        RewardSpec::mission_complete(),
+        TermSpec::mission_complete(),
+        Layout::SeqUnlockPickup,
+    )
+}
+
+/// OpenDoorsOrder: one room, two outer-wall doors, "open <c1> then <c2>".
+fn open_doors_order(id: &str, n: usize) -> EnvConfig {
+    base(
+        id,
+        n,
+        n,
+        Caps { doors: 2, ..Caps::default() },
+        (8 * n * n) as u32,
+        RewardSpec::mission_complete(),
+        TermSpec::mission_complete(),
+        Layout::OpenDoorsOrder,
+    )
+}
+
+/// The curriculum chain (see [`super::curriculum`]): `level = None` is the
+/// per-slot difficulty schedule; the `-L{k}-` aliases pin one level.
+fn curriculum_room_grid(id: &str, level: Option<u8>) -> EnvConfig {
+    let (h, w) = super::curriculum::dims();
+    base(
+        id,
+        h,
+        w,
+        Caps { doors: 2, keys: 2, balls: 2, boxes: 1 },
+        (8 * h * w) as u32,
+        RewardSpec::mission_complete(),
+        TermSpec::mission_complete(),
+        Layout::CurriculumRoomGrid { level },
+    )
+}
+
 /// All canonical environment ids (Table 8), in Table-7 benchmark order
 /// first (x-ticks 0–29 of paper Fig. 3), then the Table-8 extras.
 pub fn list_envs() -> Vec<&'static str> {
@@ -351,6 +400,12 @@ pub fn list_envs() -> Vec<&'static str> {
         "Navix-MA-FourRooms-Race-v0",
         "Navix-MA-PutNext-Coop-6x6-N2-v0",
         "Navix-MA-Tag-8x8-v0",
+        // Sequenced-mission + curriculum families (compositional grammar;
+        // the fixed-level `-L{0..3}-` curriculum ids are make()-only
+        // aliases, not separate registry rows)
+        "Navix-SeqUnlockPickup-v0",
+        "Navix-OpenDoorsOrder-6x6-v0",
+        "Navix-Curriculum-RoomGrid-v0",
     ]
 }
 
@@ -435,6 +490,13 @@ pub fn make(id: &str) -> Result<EnvConfig> {
         "Navix-MA-FourRooms-Race-v0" => ma_four_rooms_race(c),
         "Navix-MA-PutNext-Coop-6x6-N2-v0" => ma_put_next_coop(c, 6, 2),
         "Navix-MA-Tag-8x8-v0" => ma_tag(c, 8),
+        "Navix-SeqUnlockPickup-v0" => seq_unlock_pickup(c),
+        "Navix-OpenDoorsOrder-6x6-v0" => open_doors_order(c, 6),
+        "Navix-Curriculum-RoomGrid-v0" => curriculum_room_grid(c, None),
+        "Navix-Curriculum-RoomGrid-L0-v0" => curriculum_room_grid(c, Some(0)),
+        "Navix-Curriculum-RoomGrid-L1-v0" => curriculum_room_grid(c, Some(1)),
+        "Navix-Curriculum-RoomGrid-L2-v0" => curriculum_room_grid(c, Some(2)),
+        "Navix-Curriculum-RoomGrid-L3-v0" => curriculum_room_grid(c, Some(3)),
         _ => return Err(anyhow!("unknown environment id: {id}")),
     };
     Ok(cfg)
@@ -556,8 +618,36 @@ mod tests {
     }
 
     #[test]
-    fn registry_counts_57_ids() {
-        assert_eq!(list_envs().len(), 57);
+    fn registry_counts_60_ids() {
+        assert_eq!(list_envs().len(), 60);
+    }
+
+    #[test]
+    fn sequenced_and_curriculum_families_wire_mission_complete() {
+        use crate::envs::Layout;
+        let cfg = make("Navix-SeqUnlockPickup-v0").unwrap();
+        assert_eq!(cfg.reward, RewardSpec::mission_complete());
+        assert_eq!(cfg.termination, TermSpec::mission_complete());
+        assert_eq!((cfg.h, cfg.w), (6, 11));
+        assert_eq!(cfg.max_steps, 576);
+        assert_eq!(cfg.layout, Layout::SeqUnlockPickup);
+        let cfg = make("Navix-OpenDoorsOrder-6x6-v0").unwrap();
+        assert_eq!(cfg.reward, RewardSpec::mission_complete());
+        assert_eq!(cfg.termination, TermSpec::mission_complete());
+        assert_eq!(cfg.caps.doors, 2);
+        assert_eq!(cfg.max_steps, 288);
+        let cfg = make("Navix-Curriculum-RoomGrid-v0").unwrap();
+        assert_eq!((cfg.h, cfg.w), (5, 13));
+        assert_eq!(cfg.max_steps, 520);
+        assert_eq!(cfg.layout, Layout::CurriculumRoomGrid { level: None });
+        // The fixed-level ids are aliases: constructible, pinned, and not
+        // extra registry rows.
+        for l in 0..4u8 {
+            let id = format!("Navix-Curriculum-RoomGrid-L{l}-v0");
+            let cfg = make(&id).unwrap();
+            assert_eq!(cfg.layout, Layout::CurriculumRoomGrid { level: Some(l) }, "{id}");
+            assert!(!list_envs().contains(&id.as_str()), "{id} must stay an alias");
+        }
     }
 
     #[test]

@@ -1,0 +1,252 @@
+//! Sequenced-mission families: the first layouts whose missions are
+//! multi-clause [`MissionSpec`](crate::core::mission::MissionSpec)s rather
+//! than a single packed goal. Both reward/terminate on `mission_complete`
+//! — the latch the clause-advance machinery fires when the *final* clause
+//! completes — so mid-sequence progress (`door_opened`) never ends an
+//! episode.
+//!
+//! * `SeqUnlockPickup` — the Unlock geometry (two rooms, locked door, key
+//!   on the agent's side, box in the far room) with the explicit two-step
+//!   instruction "open the <c> door, then pick up the <c'> box". Unlike
+//!   classic UnlockPickup, picking the box before the door clause has
+//!   completed pays nothing.
+//! * `OpenDoorsOrder` — one room, two closed doors of distinct colours in
+//!   the outer wall; "open the <c1> door, then open the <c2> door". Order
+//!   matters: opening the second door while the first clause is active
+//!   advances nothing (the active clause's colour does not match).
+
+use super::roomgrid::RoomGrid;
+use crate::core::components::{Color, Direction, DoorState};
+use crate::core::entities::Tag;
+use crate::core::grid::Pos;
+use crate::core::mission::{MissionClause, MissionSpec};
+use crate::core::state::{PlacementError, SlotMut};
+
+/// MiniGrid `room_size` for SeqUnlockPickup (same footprint as Unlock).
+pub const ROOM_SIZE: usize = 6;
+
+/// SeqUnlockPickup grid dims (one row of two `ROOM_SIZE` rooms): 6×11.
+pub fn seq_unlock_pickup_dims() -> (usize, usize) {
+    RoomGrid::new(ROOM_SIZE, 1, 2).dims()
+}
+
+/// SeqUnlockPickup: Unlock geometry + a 2-clause mission
+/// `Open(door colour) then PickUp(box colour)`.
+pub fn seq_unlock_pickup(s: &mut SlotMut<'_>) -> Result<(), PlacementError> {
+    let rg = RoomGrid::new(ROOM_SIZE, 1, 2);
+    rg.carve(s);
+
+    let (door_ci, box_ci) = {
+        let mut rng = s.rng();
+        (rng.below(6) as u8, rng.below(6) as u8)
+    };
+    let door_color = Color::from_u8(door_ci);
+    let box_color = Color::from_u8(box_ci);
+    rg.add_door(s, 0, 0, Direction::East, door_color, DoorState::Locked);
+
+    // Key in the left (agent) room, box in the far room.
+    let key_p = rg.place_in_room(s, 0, 0, false)?;
+    s.add_key(key_p, door_color);
+    let box_p = rg.place_in_room(s, 0, 1, false)?;
+    s.add_box(box_p, box_color);
+
+    s.set_mission_spec(MissionSpec::then(
+        MissionClause::Open { color: door_color },
+        MissionClause::PickUp { kind: Tag::BOX, color: box_color },
+    ));
+    rg.place_agent(s, 0, 0)?;
+    Ok(())
+}
+
+/// OpenDoorsOrder: `n`×`n` room, two doors, ordered 2-clause open mission.
+pub fn open_doors_order(s: &mut SlotMut<'_>) -> Result<(), PlacementError> {
+    s.fill_room();
+    let (h, w) = (s.h as i32, s.w as i32);
+
+    // Two distinct colours for the two doors.
+    let mut colors = Color::ALL;
+    {
+        let mut rng = s.rng();
+        for i in (1..colors.len()).rev() {
+            let j = rng.below(i as u32 + 1) as usize;
+            colors.swap(i, j);
+        }
+    }
+
+    // One door in the top wall, one in the right wall (non-corner cells),
+    // mirroring the GoToDoor outer-wall convention.
+    let (o_top, o_right) = {
+        let mut rng = s.rng();
+        (rng.randint(1, w - 1), rng.randint(1, h - 1))
+    };
+    s.add_door(Pos::new(0, o_top), colors[0], DoorState::Closed);
+    s.add_door(Pos::new(o_right, w - 1), colors[1], DoorState::Closed);
+
+    // Random agent pose; the mission orders the two doors randomly.
+    s.place_player(Pos::new(1, 1), Direction::East);
+    let p = s.sample_free_cell(false)?;
+    let (dir, first) = {
+        let mut rng = s.rng();
+        (rng.randint(0, 4), rng.below(2) as usize)
+    };
+    s.place_player(p, Direction::from_i32(dir));
+    s.set_mission_spec(MissionSpec::then(
+        MissionClause::Open { color: colors[first] },
+        MissionClause::Open { color: colors[1 - first] },
+    ));
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::actions::Action;
+    use crate::core::components::Pocket;
+    use crate::core::mission::{Mission, MissionVerb};
+    use crate::core::state::AgentView;
+    use crate::envs::registry::make;
+    use crate::envs::testutil::{reachable, reset_once};
+    use crate::systems::intervention::intervene;
+
+    #[test]
+    fn seq_unlock_pickup_layout_and_two_clause_mission() {
+        let cfg = make("Navix-SeqUnlockPickup-v0").unwrap();
+        for seed in 0..15 {
+            let st = reset_once(&cfg, seed);
+            let s = st.slot(0);
+            let spec = s.mission_spec();
+            assert_eq!(spec.len(), 2, "seed {seed}: two clauses");
+            assert!(
+                matches!(spec.clause(0), Some(MissionClause::Open { .. })),
+                "seed {seed}: clause 1 opens the door"
+            );
+            assert!(
+                matches!(spec.clause(1), Some(MissionClause::PickUp { kind: Tag::BOX, .. })),
+                "seed {seed}: clause 2 picks the box"
+            );
+            // The packed column mirrors the *active* (first) clause.
+            assert_eq!(
+                s.mission_value().verb(),
+                Some(MissionVerb::Open),
+                "seed {seed}: packed mission must be the active clause"
+            );
+            assert_eq!(s.key_color[0], s.door_color[0], "seed {seed}: key opens the door");
+            let door = Pos::decode(s.door_pos[0], s.w);
+            let bx = Pos::decode(s.box_pos[0], s.w);
+            assert!(bx.c > door.c, "seed {seed}: box in the far room");
+            assert!(!reachable(&st, 0, bx, false), "seed {seed}: box gated by the door");
+            assert!(reachable(&st, 0, bx, true), "seed {seed}: box reachable through doors");
+        }
+    }
+
+    #[test]
+    fn seq_unlock_pickup_completes_clause_by_clause() {
+        let cfg = make("Navix-SeqUnlockPickup-v0").unwrap();
+        let mut st = reset_once(&cfg, 5);
+        let mut s = st.slot_mut(0);
+        let door = Pos::decode(s.door_pos[0], s.w);
+        let door_color = Color::from_u8(s.door_color[0]);
+        let box_color = Color::from_u8(s.box_color[0]);
+        // Premature box pickup pays nothing: the active clause is Open.
+        let bx = Pos::decode(s.box_pos[0], s.w);
+        s.place_player(Pos::new(bx.r, bx.c - 1), Direction::East);
+        intervene(&mut s, Action::Pickup);
+        assert!(!s.events[0].object_picked, "pickup under an Open clause is not the target");
+        assert!(!s.events[0].mission_complete);
+        // Put the box back and run the intended order.
+        intervene(&mut s, Action::Drop);
+        s.remove_key(0);
+        s.pocket[0] = Pocket::holding(Tag::KEY, door_color).0;
+        s.place_player(Pos::new(door.r, door.c - 1), Direction::East);
+        intervene(&mut s, Action::Toggle);
+        assert!(s.events[0].door_unlocked && s.events[0].door_opened);
+        assert!(!s.events[0].mission_complete, "clause 1 alone must not complete");
+        assert_eq!(
+            s.mission_value(),
+            Mission::pick_up(Tag::BOX, box_color),
+            "packed mission must advance to clause 2"
+        );
+        drop(s);
+        assert!(!cfg.termination.eval(&st.slot(0)), "mid-sequence progress never terminates");
+        let mut s = st.slot_mut(0);
+        s.pocket[0] = Pocket::EMPTY.0;
+        let bx = Pos::decode(s.box_pos[0], s.w);
+        s.place_player(Pos::new(bx.r, bx.c - 1), Direction::East);
+        intervene(&mut s, Action::Pickup);
+        assert!(s.events[0].object_picked && s.events[0].mission_complete);
+        drop(s);
+        assert!(cfg.termination.eval(&st.slot(0)));
+        assert_eq!(cfg.reward.eval(&st.slot(0), Action::Pickup, cfg.max_steps), 1.0);
+    }
+
+    #[test]
+    fn open_doors_order_layout_orders_two_distinct_doors() {
+        let cfg = make("Navix-OpenDoorsOrder-6x6-v0").unwrap();
+        for seed in 0..15 {
+            let st = reset_once(&cfg, seed);
+            let s = st.slot(0);
+            assert_ne!(s.door_color[0], s.door_color[1], "seed {seed}: distinct colours");
+            let spec = s.mission_spec();
+            assert_eq!(spec.len(), 2, "seed {seed}");
+            let clause_colors: Vec<u8> = (0..2)
+                .map(|c| match spec.clause(c) {
+                    Some(MissionClause::Open { color }) => color as u8,
+                    other => panic!("seed {seed}: clause {c} must be Open, got {other:?}"),
+                })
+                .collect();
+            let mut door_colors = vec![s.door_color[0], s.door_color[1]];
+            door_colors.sort_unstable();
+            let mut sorted = clause_colors.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, door_colors, "seed {seed}: clauses name the two doors");
+        }
+    }
+
+    /// Face the slot-`d` door from inside the room.
+    fn face_door(s: &mut SlotMut<'_>, d: usize) {
+        let p = Pos::decode(s.door_pos[d], s.w);
+        let (h, w) = (s.h as i32, s.w as i32);
+        let (stand, dir) = if p.r == 0 {
+            (Pos::new(1, p.c), Direction::North)
+        } else if p.r == h - 1 {
+            (Pos::new(h - 2, p.c), Direction::South)
+        } else if p.c == 0 {
+            (Pos::new(p.r, 1), Direction::West)
+        } else {
+            (Pos::new(p.r, w - 2), Direction::East)
+        };
+        s.place_player(stand, dir);
+    }
+
+    #[test]
+    fn open_doors_order_enforces_the_order() {
+        let cfg = make("Navix-OpenDoorsOrder-6x6-v0").unwrap();
+        let mut st = reset_once(&cfg, 7);
+        let mut s = st.slot_mut(0);
+        let first_color = s.mission_value().color() as u8;
+        let first = (0..2).find(|&d| s.door_color[d] == first_color).unwrap();
+        let second = 1 - first;
+        // Wrong order: the clause-2 door opens but nothing advances.
+        face_door(&mut s, second);
+        intervene(&mut s, Action::Toggle);
+        assert!(!s.events[0].door_opened, "wrong-colour open must not latch");
+        assert_eq!(s.mission_value().color() as u8, first_color, "clause must not advance");
+        // Close it again (toggle an open door) and run the right order.
+        intervene(&mut s, Action::Toggle);
+        face_door(&mut s, first);
+        intervene(&mut s, Action::Toggle);
+        assert!(s.events[0].door_opened);
+        assert!(!s.events[0].mission_complete);
+        assert_eq!(
+            s.mission_value().color() as u8,
+            s.door_color[second],
+            "clause 2 becomes active"
+        );
+        face_door(&mut s, second);
+        intervene(&mut s, Action::Toggle);
+        assert!(s.events[0].mission_complete, "ordered opens complete the mission");
+        drop(s);
+        assert!(cfg.termination.eval(&st.slot(0)));
+        assert_eq!(cfg.reward.eval(&st.slot(0), Action::Toggle, cfg.max_steps), 1.0);
+    }
+}

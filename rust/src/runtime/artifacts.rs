@@ -94,10 +94,18 @@ impl ArtifactSet {
 
 /// PPO parameter-packing convention shared with `python/compile/model.py`:
 /// actor layers then critic layers, each `W (out×in, row-major) ++ b(out)`,
-/// dims actor `[147,64,64,7]`, critic `[147,64,64,1]`.
+/// dims actor `[OBS_DIM,64,64,7]`, critic `[OBS_DIM,64,64,1]`.
 pub mod packing {
-    /// Network dims (symbolic first-person 7×7×3 flattened input).
-    pub const OBS_DIM: usize = 147;
+    /// Flattened symbolic first-person grid width (7×7×3), re-exported so
+    /// artifact consumers can split a policy row back into grid ++ mission.
+    pub const GRID_OBS_DIM: usize = crate::agents::GRID_OBS_DIM;
+    /// Tokenised mission block width (see [`crate::core::mission`]).
+    pub const MISSION_TOKENS: usize = crate::core::mission::MISSION_TOKENS;
+    /// Policy input width the artifacts are compiled against: grid features
+    /// concatenated with the mission token block. Derived from
+    /// [`crate::agents::OBS_DIM`] — one constant, never a hard-coded 147 —
+    /// and mirrored by `python/compile/model.py::OBS_DIM`.
+    pub const OBS_DIM: usize = crate::agents::OBS_DIM;
     pub const HIDDEN: usize = 64;
     pub const N_ACTIONS: usize = 7;
 
@@ -139,9 +147,12 @@ mod tests {
 
     #[test]
     fn packing_counts() {
-        // actor 147·64+64 + 64·64+64 + 64·7+7 = 13_959 ; critic …+64·1+1
-        let actor = 147 * 64 + 64 + 64 * 64 + 64 + 64 * 7 + 7;
-        let critic = 147 * 64 + 64 + 64 * 64 + 64 + 64 + 1;
+        // grid 147 ++ mission 16 = 163-wide policy rows
+        assert_eq!(packing::OBS_DIM, 163);
+        assert_eq!(packing::OBS_DIM, packing::GRID_OBS_DIM + packing::MISSION_TOKENS);
+        let d = packing::OBS_DIM;
+        let actor = d * 64 + 64 + 64 * 64 + 64 + 64 * 7 + 7;
+        let critic = d * 64 + 64 + 64 * 64 + 64 + 64 + 1;
         assert_eq!(packing::total_params(), actor + critic);
         assert_eq!(packing::init_params(0).len(), packing::total_params());
     }

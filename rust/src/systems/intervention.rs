@@ -46,6 +46,25 @@ pub fn intervene(s: &mut SlotMut<'_>, action: Action) {
         CellType::Lava => s.events[s.agent].lava_fall = true,
         _ => {}
     }
+
+    // Clause advance: if this agent's action fired the active clause's
+    // completion event, latch the clause done in the token slab and move
+    // the cursor (the packed mission column follows to the next clause).
+    // Completing the *final* clause latches `mission_complete` — the
+    // success event sequenced families reward and terminate on. Mission
+    // events only latch into the acting agent's own row, so reading the
+    // row here cannot advance on another agent's completion.
+    let ev = s.events[s.agent];
+    let completed = match s.mission_value().verb() {
+        Some(MissionVerb::GoTo) => ev.door_done || ev.object_reached,
+        Some(MissionVerb::PickUp) => ev.object_picked || ev.ball_picked,
+        Some(MissionVerb::Open) => ev.door_opened,
+        Some(MissionVerb::PutNext) => ev.object_placed,
+        None => false,
+    };
+    if completed && s.advance_mission_clause() {
+        s.events[s.agent].mission_complete = true;
+    }
 }
 
 /// `forward`: move one cell ahead if walkable. Walking into another agent
@@ -162,12 +181,17 @@ fn drop_item(s: &mut SlotMut<'_>) {
     }
 }
 
-/// `toggle`: doors open/close; locked doors unlock only with a matching key.
+/// `toggle`: doors open/close; locked doors unlock only with a matching
+/// key. Any transition to Open of a door matching an active open-verb
+/// mission latches `door_opened` (the Open clause's completion event —
+/// a progress marker, not a terminal).
 fn toggle(s: &mut SlotMut<'_>) {
     let front = s.front();
     if let Some(d) = s.door_at(front) {
         let state = DoorState::from_u8(s.door_state[d]);
         let pocket = s.pocket_value();
+        let color = Color::from_u8(s.door_color[d]);
+        let mut opened = false;
         match state {
             DoorState::Locked => {
                 let has_matching_key = !pocket.is_empty()
@@ -176,10 +200,17 @@ fn toggle(s: &mut SlotMut<'_>) {
                 if has_matching_key {
                     s.set_door_state(d, DoorState::Open);
                     s.events[s.agent].door_unlocked = true;
+                    opened = true;
                 }
             }
-            DoorState::Closed => s.set_door_state(d, DoorState::Open),
+            DoorState::Closed => {
+                s.set_door_state(d, DoorState::Open);
+                opened = true;
+            }
             DoorState::Open => s.set_door_state(d, DoorState::Closed),
+        }
+        if opened && s.mission_value().is_open(color) {
+            s.events[s.agent].door_opened = true;
         }
     }
 }
@@ -452,6 +483,95 @@ mod tests {
         s.place_player(Pos::new(2, 2), Direction::West); // drop at (2,1), adjacent to box
         intervene(&mut s, Action::Drop);
         assert!(!s.events[0].object_placed, "only the mission's moved object counts");
+    }
+
+    #[test]
+    fn single_clause_completion_latches_mission_complete() {
+        let mut st = room();
+        let mut s = st.slot_mut(0);
+        s.add_ball(Pos::new(3, 4), Color::Purple);
+        s.set_mission(Mission::pick_up(Tag::BALL, Color::Purple));
+        intervene(&mut s, Action::Pickup);
+        assert!(s.events[0].ball_picked);
+        assert!(s.events[0].mission_complete, "the only clause is the final clause");
+        assert_eq!(s.mission[0], -1, "completed mission clears the active clause");
+    }
+
+    #[test]
+    fn open_mission_latches_door_opened() {
+        use crate::core::mission::MissionVerb;
+        let mut st = room();
+        let mut s = st.slot_mut(0);
+        let d = s.add_door(Pos::new(3, 4), Color::Red, DoorState::Closed);
+        s.set_mission(Mission::open(Color::Red));
+        assert_eq!(s.mission_value().verb(), Some(MissionVerb::Open));
+        intervene(&mut s, Action::Toggle);
+        assert_eq!(DoorState::from_u8(s.door_state[d]), DoorState::Open);
+        assert!(s.events[0].door_opened);
+        assert!(s.events[0].mission_complete);
+        // Re-toggling after completion fires nothing: no active clause.
+        intervene(&mut s, Action::Toggle); // open -> closed
+        intervene(&mut s, Action::Toggle); // closed -> open
+        assert!(!s.events[0].door_opened);
+    }
+
+    #[test]
+    fn open_mission_ignores_wrong_colour_and_close() {
+        let mut st = room();
+        let mut s = st.slot_mut(0);
+        s.add_door(Pos::new(3, 4), Color::Blue, DoorState::Closed);
+        s.set_mission(Mission::open(Color::Red));
+        intervene(&mut s, Action::Toggle); // opens the BLUE door
+        assert!(!s.events[0].door_opened, "wrong colour must not satisfy open");
+        assert!(!s.events[0].mission_complete);
+    }
+
+    #[test]
+    fn unlocking_an_open_mission_door_latches_both() {
+        let mut st = room();
+        let mut s = st.slot_mut(0);
+        s.add_door(Pos::new(3, 4), Color::Blue, DoorState::Locked);
+        s.pocket[0] = Pocket::holding(Tag::KEY, Color::Blue).0;
+        s.set_mission(Mission::open(Color::Blue));
+        intervene(&mut s, Action::Toggle);
+        assert!(s.events[0].door_unlocked);
+        assert!(s.events[0].door_opened, "Locked→Open is an open too");
+        assert!(s.events[0].mission_complete);
+    }
+
+    #[test]
+    fn sequenced_mission_advances_clause_by_clause() {
+        use crate::core::mission::{MissionClause, MissionSpec};
+        let mut st = room();
+        let mut s = st.slot_mut(0);
+        s.add_door(Pos::new(3, 4), Color::Red, DoorState::Closed);
+        s.add_box(Pos::new(2, 3), Color::Green);
+        s.set_mission_spec(MissionSpec::then(
+            MissionClause::Open { color: Color::Red },
+            MissionClause::PickUp { kind: Tag::BOX, color: Color::Green },
+        ));
+        // Picking the clause-2 box while clause 1 is active fires nothing:
+        // the active clause is Open, and PickUp events need a PickUp verb.
+        intervene(&mut s, Action::Left); // face north, box at (2,3)
+        intervene(&mut s, Action::Pickup);
+        assert!(!s.events[0].object_picked, "clause 2 is not active yet");
+        assert!(!s.events[0].mission_complete);
+        // Put it back and run the sequence in order.
+        intervene(&mut s, Action::Drop);
+        intervene(&mut s, Action::Right); // face east again
+        intervene(&mut s, Action::Toggle);
+        assert!(s.events[0].door_opened);
+        assert!(!s.events[0].mission_complete, "clause 1/2 must not complete the mission");
+        assert_eq!(
+            s.mission_value().raw(),
+            Mission::pick_up(Tag::BOX, Color::Green).raw(),
+            "the packed column advanced to clause 2"
+        );
+        intervene(&mut s, Action::Left);
+        intervene(&mut s, Action::Pickup);
+        assert!(s.events[0].object_picked);
+        assert!(s.events[0].mission_complete, "clause 2/2 completes the mission");
+        assert_eq!(s.mission[0], -1);
     }
 
     #[test]

@@ -46,7 +46,7 @@
 use crate::core::components::Direction;
 use crate::core::entities::{CellType, Tag};
 use crate::core::grid::Pos;
-use crate::core::mission::{feat, Mission, MISSION_DIM};
+use crate::core::mission::{CLAUSE_BASE, CLAUSE_STRIDE, MISSION_TOKENS};
 use crate::core::state::{cellcode, AgentView, EnvSlot};
 use crate::simd::{self, KernelPath};
 use crate::systems::sprites::{Sprite, SpriteSheet, TILE};
@@ -198,18 +198,18 @@ impl ObsSpec {
         }
     }
 
-    /// Write the fixed-width mission feature vector for one env into `out`
-    /// (`MISSION_DIM` i32s). Every observation kind carries this side
+    /// Write the tokenised mission block for one env into `out`
+    /// (`MISSION_TOKENS` i32s). Every observation kind carries this side
     /// channel — it conditions the policy on the goal, it is not part of
     /// the grid encoding. Dispatches like the grid writers so the parity
-    /// suite can pin the typed encoder against the bit-level scan oracle.
+    /// suite can pin the streamed slab against the bit-level scan oracle.
     pub fn write_mission_path(&self, path: ObsPath, s: &EnvSlot<'_>, out: &mut [i32]) {
         self.write_mission_route(path.route(), s, out)
     }
 
-    /// Route-explicit mission writer. The block is `MISSION_DIM` i32s —
-    /// too small to vectorise, so every kernel path runs the same scalar
-    /// encoder and only the overlay/scan axis of the route matters.
+    /// Route-explicit mission writer. The block is `MISSION_TOKENS` i32s —
+    /// a scalar-tail copy, too small to vectorise, so every kernel path
+    /// runs the same encoder and only the overlay/scan axis matters.
     pub fn write_mission_route(&self, route: ObsRoute, s: &EnvSlot<'_>, out: &mut [i32]) {
         match route {
             ObsRoute::Overlay(_) => mission_features(s, out),
@@ -274,12 +274,13 @@ pub fn encode_cell(s: &EnvSlot<'_>, p: Pos, include_player: bool) -> (i32, i32, 
     scan::encode_cell(s, p, include_player)
 }
 
-/// Mission feature vector of one env: the typed [`Mission`] component
-/// rendered as its one-hot block (see [`crate::core::mission`]). O(1),
-/// state-derived — the overlay path's writer.
+/// Mission token block of one env: the active agent's serialised
+/// [`crate::core::mission::MissionSpec`] streamed verbatim from the state's
+/// token slab. O(MISSION_TOKENS) memcpy — the overlay path's writer.
 #[inline]
 pub fn mission_features(s: &EnvSlot<'_>, out: &mut [i32]) {
-    Mission::from_raw(s.mission_raw()).write_features(out);
+    debug_assert_eq!(out.len(), MISSION_TOKENS);
+    out.copy_from_slice(s.mission_tokens_row());
 }
 
 /// The render code of flat cell `cell`: the packed overlay code with the
@@ -834,26 +835,48 @@ pub fn rgb_first_person(s: &EnvSlot<'_>, view: usize, sheet: &SpriteSheet, out: 
 pub mod scan {
     use super::*;
 
-    /// Scan-path oracle for [`super::mission_features`]: an independent,
-    /// bit-level decode of the packed mission i32 (no [`Mission`] accessor
-    /// involved), so drift between the typed encoder and the wire layout
-    /// is caught by the parity suite.
+    /// Scan-path oracle for [`super::mission_features`]: starts from the
+    /// token slab but *rebuilds the active clause's tokens from the packed
+    /// mission i32* with a bit-level decode (no `Mission`/`MissionSpec`
+    /// accessor involved). The overlay path is a verbatim slab copy, so
+    /// overlay == scan pins the state invariant that the packed `mission`
+    /// column always equals the slab's active clause — drift between the
+    /// two redundant goal encodings is caught by the parity suite.
     pub fn mission_features(s: &EnvSlot<'_>, out: &mut [i32]) {
-        debug_assert_eq!(out.len(), MISSION_DIM);
-        out.fill(0);
-        let m = s.mission[s.agent];
-        if m < 0 {
+        debug_assert_eq!(out.len(), MISSION_TOKENS);
+        let slab = &s.mission_tokens[s.agent * MISSION_TOKENS..(s.agent + 1) * MISSION_TOKENS];
+        out.copy_from_slice(slab);
+        let n = slab[0];
+        if n <= 0 {
+            // No mission: the block is all-zero by construction.
+            out.fill(0);
             return;
         }
+        let m = s.mission[s.agent];
+        if m < 0 {
+            // Completed mission: no active clause to rebuild — the slab
+            // (with every done latch set) is the whole story.
+            return;
+        }
+        let active = slab[1].clamp(0, n - 1);
+        let base = CLAUSE_BASE + active as usize * CLAUSE_STRIDE;
         let color = m & 0xFF;
         let tag = (m >> 8) & 0xFF;
         let verb_code = (m >> 16) & 0x3;
-        // verb slots: 0 = go-to, 1 = pick-up, 2 = put-next; code 0 is the
-        // kind default (doors go-to, pickables pick-up).
-        let verb_slot = match verb_code {
-            1 => 0,
-            2 => 2,
-            _ => usize::from(tag != Tag::DOOR),
+        // token verb codes: 1 = go-to, 2 = pick-up, 3 = put-next,
+        // 4 = open; packed code 0 is the kind default (doors go-to,
+        // pickables pick-up).
+        let verb_tok = match verb_code {
+            1 => 1,
+            2 => 3,
+            3 => 4,
+            _ => {
+                if tag == Tag::DOOR {
+                    1
+                } else {
+                    2
+                }
+            }
         };
         let kind_slot = |t: i32| match t {
             Tag::DOOR => 0,
@@ -861,14 +884,18 @@ pub mod scan {
             Tag::BALL => 2,
             _ => 3,
         };
-        out[feat::PRESENT] = 1;
-        out[feat::VERB + verb_slot] = 1;
-        out[feat::KIND + kind_slot(tag)] = 1;
-        out[feat::COLOR + color as usize] = 1;
+        out[base] = verb_tok;
+        out[base + 1] = kind_slot(tag) + 1;
+        out[base + 2] = color + 1;
         if verb_code == 2 {
-            out[feat::KIND2 + kind_slot((m >> 18) & 0x7)] = 1;
-            out[feat::COLOR2 + ((m >> 21) & 0x7) as usize] = 1;
+            out[base + 3] = kind_slot((m >> 18) & 0x7) + 1;
+            out[base + 4] = ((m >> 21) & 0x7) + 1;
+        } else {
+            out[base + 3] = 0;
+            out[base + 4] = 0;
         }
+        // An active clause is by definition not yet complete.
+        out[base + 5] = 0;
     }
 
     /// Scan-path [`super::encode_cell`]: first-match entity-table scans
@@ -1218,7 +1245,7 @@ mod tests {
     #[test]
     fn mission_features_overlay_matches_scan_oracle() {
         use crate::core::components::Color;
-        use crate::core::mission::Mission;
+        use crate::core::mission::{Mission, MissionClause, MissionSpec};
         let mut st = env();
         let missions = [
             Mission::NONE,
@@ -1226,26 +1253,39 @@ mod tests {
             Mission::go_to(Tag::BALL, Color::Blue),
             Mission::pick_up(Tag::KEY, Color::Red),
             Mission::pick_up(Tag::BOX, Color::Grey),
+            Mission::open(Color::Green),
             Mission::put_next(Tag::BALL, Color::Purple, Tag::BOX, Color::Green),
         ];
-        for m in missions {
-            {
-                let mut s = st.slot_mut(0);
-                s.mission.fill(m.raw());
-            }
+        let check = |st: &BatchedState, what: &str| {
             let s = st.slot(0);
-            let mut fast = [0i32; crate::core::mission::MISSION_DIM];
-            let mut naive = [7i32; crate::core::mission::MISSION_DIM];
+            let mut fast = [0i32; MISSION_TOKENS];
+            let mut naive = [7i32; MISSION_TOKENS];
             mission_features(&s, &mut fast);
             scan::mission_features(&s, &mut naive);
-            assert_eq!(fast, naive, "mission {m:?} diverged from the bit-level oracle");
+            assert_eq!(fast, naive, "{what} diverged from the bit-level oracle");
             let spec = ObsSpec::new(ObsKind::SymbolicFirstPerson);
-            let mut via_spec = [0i32; crate::core::mission::MISSION_DIM];
+            let mut via_spec = [0i32; MISSION_TOKENS];
             spec.write_mission_path(ObsPath::Overlay, &s, &mut via_spec);
             assert_eq!(via_spec, fast);
             spec.write_mission_path(ObsPath::NaiveScan, &s, &mut via_spec);
             assert_eq!(via_spec, naive);
+        };
+        for m in missions {
+            st.slot_mut(0).set_mission(m);
+            check(&st, &format!("mission {m:?}"));
         }
+        // Sequenced spec through every progress state: clause 1 active,
+        // clause 2 active (after one advance), complete.
+        let seq = MissionSpec::then(
+            MissionClause::Open { color: Color::Red },
+            MissionClause::PickUp { kind: Tag::BOX, color: Color::Green },
+        );
+        st.slot_mut(0).set_mission_spec(seq);
+        check(&st, "sequenced spec, clause 1 active");
+        assert!(!st.slot_mut(0).advance_mission_clause());
+        check(&st, "sequenced spec, clause 2 active");
+        assert!(st.slot_mut(0).advance_mission_clause());
+        check(&st, "sequenced spec, complete");
     }
 
     #[test]

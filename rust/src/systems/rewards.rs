@@ -42,6 +42,9 @@ pub enum RewardFn {
     /// +1 when *any* agent in the slot placed the mission object — the
     /// cooperative PutNext team reward (every agent-row pays out).
     OnObjectPlacedTeam,
+    /// +1 when the mission's final clause completed (sequenced BabyAI-style
+    /// families: SeqUnlockPickup, OpenDoorsOrder, curriculum RoomGrid).
+    OnMissionComplete,
     /// +1 when this agent walked into another agent (pursuit "tag" success).
     OnAgentContact,
     /// −1 when another agent walked into this one (the evader was caught).
@@ -135,6 +138,13 @@ impl RewardFn {
                     0.0
                 }
             }
+            RewardFn::OnMissionComplete => {
+                if ev.mission_complete {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
             RewardFn::OnAgentContact => {
                 if ev.agent_contact {
                     1.0
@@ -182,6 +192,7 @@ impl RewardFn {
             RewardFn::OnObjectReached => "on_object_reached",
             RewardFn::OnObjectPlaced => "on_object_placed",
             RewardFn::OnObjectPlacedTeam => "on_object_placed_team",
+            RewardFn::OnMissionComplete => "on_mission_complete",
             RewardFn::OnAgentContact => "on_agent_contact",
             RewardFn::OnContacted => "on_contacted",
             RewardFn::Free => "free",
@@ -253,6 +264,11 @@ impl RewardSpec {
     /// them places the mission object.
     pub fn team_object_placed() -> Self {
         RewardSpec::new(vec![RewardFn::OnObjectPlacedTeam])
+    }
+
+    /// Sequenced missions: +1 when the final clause completes.
+    pub fn mission_complete() -> Self {
+        RewardSpec::new(vec![RewardFn::OnMissionComplete])
     }
 
     /// Pursuit–evasion: +1 for tagging another agent, −1 for being tagged,
@@ -380,6 +396,15 @@ mod tests {
         // wrong pickup pays nothing (Fetch: terminate with 0 reward)
         let st = slot_with_events(Events { wrong_pickup: true, ..Events::NONE });
         assert_eq!(RewardSpec::object_pickup().eval(&st.slot(0), Action::Pickup, 100), 0.0);
+    }
+
+    #[test]
+    fn mission_complete_primitive() {
+        let st = slot_with_events(Events { mission_complete: true, ..Events::NONE });
+        assert_eq!(RewardSpec::mission_complete().eval(&st.slot(0), Action::Pickup, 100), 1.0);
+        // mid-sequence progress (door_opened without completion) pays nothing
+        let st = slot_with_events(Events { door_opened: true, ..Events::NONE });
+        assert_eq!(RewardSpec::mission_complete().eval(&st.slot(0), Action::Toggle, 100), 0.0);
     }
 
     #[test]

@@ -35,6 +35,10 @@ pub enum TermFn {
     /// Terminate when the put-next mission's object lands adjacent to its
     /// second object (PutNext).
     OnObjectPlaced,
+    /// Terminate when the mission's final clause completed (sequenced
+    /// families — mid-sequence progress like `door_opened` does not
+    /// terminate).
+    OnMissionComplete,
     /// Terminate when this agent tagged another agent (pursuit–evasion).
     OnAgentContact,
     /// Terminate when this agent was tagged by another agent.
@@ -57,6 +61,7 @@ impl TermFn {
             TermFn::OnWrongPickup => ev.wrong_pickup,
             TermFn::OnObjectReached => ev.object_reached,
             TermFn::OnObjectPlaced => ev.object_placed,
+            TermFn::OnMissionComplete => ev.mission_complete,
             TermFn::OnAgentContact => ev.agent_contact,
             TermFn::OnContacted => ev.contacted,
             TermFn::Free => false,
@@ -75,6 +80,7 @@ impl TermFn {
             TermFn::OnWrongPickup => "on_wrong_pickup",
             TermFn::OnObjectReached => "on_object_reached",
             TermFn::OnObjectPlaced => "on_object_placed",
+            TermFn::OnMissionComplete => "on_mission_complete",
             TermFn::OnAgentContact => "on_agent_contact",
             TermFn::OnContacted => "on_contacted",
             TermFn::Free => "free",
@@ -142,6 +148,11 @@ impl TermSpec {
     /// Mission object dropped next to its second object (PutNext).
     pub fn object_placed() -> Self {
         TermSpec::new(vec![TermFn::OnObjectPlaced])
+    }
+
+    /// Whole mission complete (sequenced families).
+    pub fn mission_complete() -> Self {
+        TermSpec::new(vec![TermFn::OnMissionComplete])
     }
 
     /// Pursuit–evasion: a tag in either direction or an obstacle collision
@@ -233,6 +244,15 @@ mod tests {
         assert!(TermSpec::pursuit().eval(&st.slot(0)));
         let st = with_events(Events { ball_hit: true, ..Events::NONE });
         assert!(TermSpec::pursuit().eval(&st.slot(0)));
+    }
+
+    #[test]
+    fn mission_complete_terminates_but_progress_does_not() {
+        let st = with_events(Events { mission_complete: true, ..Events::NONE });
+        assert!(TermSpec::mission_complete().eval(&st.slot(0)));
+        // mid-sequence clause completion is progress, not an outcome
+        let st = with_events(Events { door_opened: true, ..Events::NONE });
+        assert!(!TermSpec::mission_complete().eval(&st.slot(0)));
     }
 
     #[test]

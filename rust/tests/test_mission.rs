@@ -15,13 +15,18 @@
 use navix::agents::ppo::{Ppo, PpoConfig};
 use navix::agents::OBS_DIM;
 use navix::batch::{BatchStepper, BatchedEnv, ObsBatch, PipelinedEnv, ShardedEnv};
-use navix::core::mission::{Mission, MISSION_DIM};
+use navix::core::mission::{Mission, MISSION_TOKENS};
 use navix::core::timestep::BatchedTimestep;
 use navix::rng::{Key, Rng};
 
-/// Every registered id whose layout sets a mission (all 19 of them —
-/// `registry.rs` has a companion state-level pin; keep the two in sync
-/// when adding a mission family).
+/// Every registered id whose layout sets a *single-clause* mission (all 19
+/// of them — `registry.rs` has a companion state-level pin; keep the two in
+/// sync when adding a mission family). The mirror assertion below
+/// reconstructs the expected features via `Mission::from_raw`, the lossless
+/// 1-clause embedding of the packed column — which by construction drops a
+/// second clause, so the sequenced/curriculum families are pinned
+/// separately against the token slab
+/// (`sequenced_families_stream_the_full_token_slab`).
 const MISSION_IDS: [&str; 19] = [
     "Navix-GoToDoor-5x5-v0",
     "Navix-GoToDoor-6x6-v0",
@@ -51,7 +56,7 @@ fn mission_channel_mirrors_state_and_is_present_for_every_mission_env() {
         let mut env = BatchedEnv::new(navix::make(id).unwrap(), B, Key::new(11));
         let mut rng = Rng::new(23);
         let mut actions = vec![0u8; B];
-        let mut expect = [0i32; MISSION_DIM];
+        let mut expect = [0i32; MISSION_TOKENS];
         for step in 0..60 {
             for i in 0..B {
                 Mission::from_raw(env.state.mission[i]).write_features(&mut expect);
@@ -119,6 +124,137 @@ fn mission_features_are_bitwise_identical_across_all_three_engines() {
                 piped.obs().mission,
                 "{id} step {step}: mission diverged under pipelining"
             );
+        }
+    }
+}
+
+#[test]
+fn sequenced_families_stream_the_full_token_slab() {
+    // The 2-clause families' pin: the observation mission channel must be
+    // the state's token slab verbatim (both clauses + latches), not the
+    // 1-clause embedding of the packed column. Checked through autoresets
+    // and mid-episode clause advances alike.
+    use navix::core::state::AgentView;
+    const B: usize = 4;
+    for id in [
+        "Navix-SeqUnlockPickup-v0",
+        "Navix-OpenDoorsOrder-6x6-v0",
+        "Navix-Curriculum-RoomGrid-v0",
+    ] {
+        let mut env = BatchedEnv::new(navix::make(id).unwrap(), B, Key::new(31));
+        let mut rng = Rng::new(17);
+        let mut actions = vec![0u8; B];
+        for step in 0..80 {
+            for i in 0..B {
+                let s = env.state.slot(i);
+                assert_eq!(
+                    env.obs.mission_row(B, i),
+                    s.mission_tokens_row(),
+                    "{id} step {step} env {i}: obs must stream the token slab"
+                );
+                assert_eq!(
+                    env.obs.mission_row(B, i)[0] as usize,
+                    s.mission_spec().len(),
+                    "{id} step {step} env {i}: token 0 is the clause count"
+                );
+            }
+            for a in actions.iter_mut() {
+                *a = rng.below(7) as u8;
+            }
+            env.step(&actions);
+        }
+    }
+}
+
+#[test]
+fn sequenced_families_are_engine_parity_clean_at_one_and_two_agents() {
+    // Cross-engine parity for the new families at S=3 shards, for both the
+    // classic single-agent shape and the widened A=2 agent axis.
+    const B: usize = 6;
+    const STEPS: usize = 60;
+    for id in ["Navix-SeqUnlockPickup-v0", "Navix-OpenDoorsOrder-6x6-v0"] {
+        for a in [1usize, 2] {
+            let cfg = navix::make(id).unwrap().with_agents(a);
+            let mut single = BatchedEnv::new(cfg.clone(), B, Key::new(13));
+            let mut sharded = ShardedEnv::new(cfg.clone(), B, 3, 2, Key::new(13));
+            let mut piped = PipelinedEnv::over_batched(BatchedEnv::new(cfg, B, Key::new(13)));
+            let rows = single.policy_rows();
+            let mut rng = Rng::new(29);
+            for step in 0..STEPS {
+                let actions: Vec<u8> = (0..rows).map(|_| rng.below(7) as u8).collect();
+                single.step(&actions);
+                sharded.step(&actions);
+                BatchStepper::step(&mut piped, &actions);
+                assert_eq!(
+                    single.obs.mission, sharded.obs.mission,
+                    "{id} A={a} step {step}: mission diverged under sharding"
+                );
+                assert_eq!(
+                    single.obs.mission,
+                    piped.obs().mission,
+                    "{id} A={a} step {step}: mission diverged under pipelining"
+                );
+                assert_eq!(
+                    single.timestep.reward, sharded.timestep.reward,
+                    "{id} A={a} step {step}: rewards diverged under sharding"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn curriculum_is_bitwise_shard_invariant_across_difficulties() {
+    // The curriculum acceptance gate: for the mixed schedule and ≥3 pinned
+    // difficulty levels, all three engines agree bitwise on observations,
+    // mission tokens, rewards and step types — i.e. the per-slot difficulty
+    // draw and the rejection-retry loop are pure functions of the episode
+    // key, never of the shard split or pipeline phase.
+    use navix::batch::ObsData;
+    const B: usize = 6;
+    const STEPS: usize = 100;
+    for id in [
+        "Navix-Curriculum-RoomGrid-v0",
+        "Navix-Curriculum-RoomGrid-L0-v0",
+        "Navix-Curriculum-RoomGrid-L2-v0",
+        "Navix-Curriculum-RoomGrid-L3-v0",
+    ] {
+        let cfg = navix::make(id).unwrap();
+        let mut single = BatchedEnv::new(cfg.clone(), B, Key::new(41));
+        let mut sharded = ShardedEnv::new(cfg.clone(), B, 3, 2, Key::new(41));
+        let mut piped = PipelinedEnv::over_batched(BatchedEnv::new(cfg, B, Key::new(41)));
+        let mut rng = Rng::new(43);
+        for step in 0..STEPS {
+            let actions: Vec<u8> = (0..B).map(|_| rng.below(7) as u8).collect();
+            single.step(&actions);
+            sharded.step(&actions);
+            BatchStepper::step(&mut piped, &actions);
+            for (engine, obs, ts) in [
+                ("sharded", &sharded.obs, &sharded.timestep),
+                ("pipelined", piped.obs(), piped.timestep()),
+            ] {
+                match (&single.obs.data, &obs.data) {
+                    (ObsData::I32(x), ObsData::I32(y)) => {
+                        assert_eq!(x, y, "{id} step {step}: obs diverged under {engine}")
+                    }
+                    (ObsData::U8(x), ObsData::U8(y)) => {
+                        assert_eq!(x, y, "{id} step {step}: obs diverged under {engine}")
+                    }
+                    _ => panic!("{id} step {step}: obs dtypes diverged under {engine}"),
+                }
+                assert_eq!(
+                    single.obs.mission, obs.mission,
+                    "{id} step {step}: mission tokens diverged under {engine}"
+                );
+                assert_eq!(
+                    single.timestep.reward, ts.reward,
+                    "{id} step {step}: rewards diverged under {engine}"
+                );
+                assert_eq!(
+                    single.timestep.step_type, ts.step_type,
+                    "{id} step {step}: step types diverged under {engine}"
+                );
+            }
         }
     }
 }
@@ -198,4 +334,38 @@ fn ppo_with_mission_features_beats_the_mission_blind_baseline_on_go_to_door() {
         aware > 0.2,
         "goal-conditioned PPO should clearly exceed random guessing, got {aware:.3}"
     );
+}
+
+#[test]
+fn ppo_reading_the_clause_tokens_beats_blind_on_a_sequenced_family() {
+    // OpenDoorsOrder: two doors, the mission orders them, the reward is a
+    // flat 1.0 on completing the *sequence*. A mission-blind policy can
+    // still finish by hammering toggles at both doors, but it cannot know
+    // which door is first — the token-reading policy can, and must come out
+    // ahead on identical seeds. Deterministic for fixed seeds (same budget
+    // discipline as the GoToDoor pin above; max_steps is clamped so the
+    // flat terminal reward recurs often enough inside 80k steps).
+    let train = |blind: bool| -> f32 {
+        let mut cfg = navix::make("Navix-OpenDoorsOrder-6x6-v0").unwrap();
+        cfg.max_steps = 96;
+        let pcfg = PpoConfig { num_envs: 16, rollout_len: 64, lr: 1e-3, ..Default::default() };
+        let mut ppo = Ppo::new(pcfg, OBS_DIM, 7, 42);
+        let env = BatchedEnv::new(cfg, 16, Key::new(7));
+        let log = if blind {
+            let mut env = MissionBlind::new(env);
+            ppo.train(&mut env, 80_000)
+        } else {
+            let mut env = env;
+            ppo.train(&mut env, 80_000)
+        };
+        log.final_return()
+    };
+    let aware = train(false);
+    let blind = train(true);
+    assert!(
+        aware > blind,
+        "clause-token PPO ({aware:.3}) must beat the mission-blind baseline ({blind:.3}) \
+         on the sequenced family"
+    );
+    assert!(aware > 0.0, "clause-token PPO must complete sequences, got {aware:.3}");
 }

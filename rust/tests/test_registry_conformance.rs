@@ -23,11 +23,13 @@ const TIMEOUT_CAP: u32 = 250;
 /// channel 0 is a MiniGrid object tag (0..=10), channel 1 a colour (0..=5),
 /// channel 2 a door state or agent direction (0..=3).
 fn check_obs_bounds(id: &str, obs: &ObsBatch, b: usize, step: usize) {
-    // The mission channel is a block of one-hots for every kind.
+    // The mission channel is the tokenised grammar block: every token is a
+    // small enum index (verb/kind/colour codes are shifted by one so 0 can
+    // mean "absent"), bounded by the token vocabulary.
     for (k, &x) in obs.mission.iter().enumerate() {
         assert!(
-            x == 0 || x == 1,
-            "{id} step {step}: mission[{k}] = {x} is not a one-hot value"
+            (0..=6).contains(&x),
+            "{id} step {step}: mission[{k}] = {x} outside the token vocabulary 0..=6"
         );
     }
     match &obs.data {
@@ -105,6 +107,75 @@ fn every_layout_with_a_goal_is_bfs_solvable() {
                          even through doors"
                     );
                 }
+            }
+        }
+    }
+}
+
+#[test]
+fn no_family_leaves_then_clause_2_unreachable() {
+    // Registry-wide guard for the 2-clause (`Then`) grammar: the entity the
+    // second clause names must be reachable from the reset state with doors
+    // treated as passable — clause 1's completion can only *open* doors, so
+    // a clause-2 target unreachable even through doors is unwinnable by
+    // construction. Generators avoid this by geometry or by rejecting the
+    // draw (deterministic episode-key retry inside `BatchedEnv::new`),
+    // never by panicking. Outer-wall door targets sit in wall cells BFS
+    // cannot enter, so a target also counts as reachable when any
+    // 4-adjacent cell is (the agent toggles doors from an adjacent cell).
+    use navix::core::components::Direction;
+    use navix::core::grid::Pos;
+    use navix::core::mission::MissionClause;
+    use navix::core::state::AgentView;
+    for id in navix::list_envs() {
+        let cfg = navix::make(id).unwrap();
+        for seed in 0..4u64 {
+            let env = BatchedEnv::new(cfg.clone(), 2, Key::new(500 + seed));
+            for i in 0..2 {
+                let s = env.state.slot(i);
+                let spec = s.mission_spec();
+                if spec.len() < 2 {
+                    continue;
+                }
+                let clause = spec.clause(1).expect("2-clause spec has a second clause");
+                let (h, w) = (s.h, s.w);
+                let targets: Vec<Pos> = match clause {
+                    MissionClause::Open { color } => (0..s.door_pos.len())
+                        .filter(|&d| s.door_pos[d] >= 0 && s.door_color[d] == color as u8)
+                        .map(|d| Pos::decode(s.door_pos[d], w))
+                        .collect(),
+                    MissionClause::GoTo { kind, color }
+                    | MissionClause::PickUp { kind, color }
+                    | MissionClause::PutNext { kind, color, .. } => {
+                        use navix::core::entities::Tag;
+                        let (pos, col): (&[i32], &[u8]) = match kind {
+                            Tag::KEY => (s.key_pos, s.key_color),
+                            Tag::BALL => (s.ball_pos, s.ball_color),
+                            Tag::BOX => (s.box_pos, s.box_color),
+                            _ => panic!("{id} seed {seed}: clause-2 kind {kind} has no entity table"),
+                        };
+                        (0..pos.len())
+                            .filter(|&k| pos[k] >= 0 && col[k] == color as u8)
+                            .map(|k| Pos::decode(pos[k], w))
+                            .collect()
+                    }
+                };
+                assert!(
+                    !targets.is_empty(),
+                    "{id} seed {seed} env {i}: clause 2 ({clause:?}) names no placed entity"
+                );
+                let ok = targets.iter().any(|&p| {
+                    reachable(&env.state, i, p, true)
+                        || Direction::ALL.iter().any(|&d| {
+                            let q = p.step(d);
+                            q.in_bounds(h, w) && reachable(&env.state, i, q, true)
+                        })
+                });
+                assert!(
+                    ok,
+                    "{id} seed {seed} env {i}: clause-2 target {clause:?} unreachable \
+                     even through doors"
+                );
             }
         }
     }

@@ -81,8 +81,8 @@ fn xla_forward_matches_native_mlp() {
     critic.params.copy_from_slice(&params[actor_n..]);
 
     for i in 0..16 {
-        let x: Vec<f32> =
-            obs[i * 147..(i + 1) * 147].iter().map(|&v| v as f32 / 10.0).collect();
+        let d = packing::OBS_DIM;
+        let x: Vec<f32> = obs[i * d..(i + 1) * d].iter().map(|&v| v as f32 / 10.0).collect();
         let native_logits = actor.infer(&x);
         let native_value = critic.infer(&x)[0];
         for a in 0..7 {
@@ -149,7 +149,8 @@ fn obs_kernel_matches_rust_observations() {
     // Rust engine's own first-person obs (with full occlusion machinery).
     for i in 0..16 {
         let rust_obs = env.obs.env_i32(16, i);
-        let k = &kernel_obs[i * 147..(i + 1) * 147];
+        let g = packing::GRID_OBS_DIM;
+        let k = &kernel_obs[i * g..(i + 1) * g];
         assert_eq!(rust_obs, k, "env {i}: L1 kernel disagrees with L3 observation system");
     }
 }
@@ -210,10 +211,18 @@ fn xla_env_step_matches_rust_engine_trajectory() {
                 "step {step} env {i}: discount"
             );
             assert_eq!(tv[i] as u32, env.timestep.t[i], "step {step} env {i}: t");
+            // policy-width rows: grid prefix matches the engine, the
+            // mission token tail stays zero (Empty is mission-free).
+            let d = packing::OBS_DIM;
+            let g = packing::GRID_OBS_DIM;
             assert_eq!(
-                &obs[i * 147..(i + 1) * 147],
+                &obs[i * d..i * d + g],
                 env.obs.env_i32(16, i),
                 "step {step} env {i}: observation diverged"
+            );
+            assert!(
+                obs[i * d + g..(i + 1) * d].iter().all(|&x| x == 0),
+                "step {step} env {i}: mission block must stay zero"
             );
         }
     }
@@ -231,7 +240,7 @@ fn xla_ppo_update_reduces_value_loss() {
     let mut m = vec![0.0f32; n];
     let mut v = vec![0.0f32; n];
     let mut rng = Rng::new(8);
-    let obs: Vec<i32> = (0..256 * 147).map(|_| rng.below(11) as i32).collect();
+    let obs: Vec<i32> = (0..256 * packing::OBS_DIM).map(|_| rng.below(11) as i32).collect();
     let actions: Vec<i32> = (0..256).map(|_| rng.below(7) as i32).collect();
     let adv = vec![0.0f32; 256]; // isolate the value head
     let targets: Vec<f32> = (0..256).map(|_| rng.uniform_f32()).collect();
@@ -240,11 +249,11 @@ fn xla_ppo_update_reduces_value_loss() {
     // math test — use fwd on chunks of 16)
     let mut old_logp = vec![0.0f32; 256];
     for chunk in 0..16 {
-        let o = &obs[chunk * 16 * 147..(chunk + 1) * 16 * 147];
+        let o = &obs[chunk * 16 * packing::OBS_DIM..(chunk + 1) * 16 * packing::OBS_DIM];
         let out = fwd
             .run(&[
                 f32_literal(&params, &[n as i64]).unwrap(),
-                i32_literal(o, &[16, 147]).unwrap(),
+                i32_literal(o, &[16, packing::OBS_DIM as i64]).unwrap(),
             ])
             .unwrap();
         let logits = to_f32_vec(&out[0]).unwrap();
@@ -266,7 +275,7 @@ fn xla_ppo_update_reduces_value_loss() {
                 f32_literal(&m, &[n as i64]).unwrap(),
                 f32_literal(&v, &[n as i64]).unwrap(),
                 i32_scalar(t),
-                i32_literal(&obs, &[256, 147]).unwrap(),
+                i32_literal(&obs, &[256, packing::OBS_DIM as i64]).unwrap(),
                 i32_literal(&actions, &[256]).unwrap(),
                 f32_literal(&old_logp, &[256]).unwrap(),
                 f32_literal(&adv, &[256]).unwrap(),
